@@ -1,0 +1,110 @@
+//! Fig 3 reproduction: the generic bilateral filter's three regimes.
+//!
+//! Panels (matching the paper):
+//!   (a) noisy synthetic "natural image" (replaces the pixnio photograph)
+//!   (b) locally adaptive σ_r            — strongest denoise, edges kept
+//!   (c) constant σ_r ≈ ‖Σ_d‖ scale      — classic bilateral look
+//!   (d) constant σ_r ≫ ‖Σ_d‖            — degenerates to a plain gaussian
+//!
+//! Writes PGM panels + a montage to `target/fig3/` and prints a PSNR/edge
+//! table demonstrating the regime ordering the paper shows visually.
+//!
+//! Run: `cargo run --release --example bilateral_denoise`
+
+use meltframe::coordinator::pipeline::{run_job, ExecOptions};
+use meltframe::coordinator::Job;
+use meltframe::prelude::*;
+use meltframe::tensor::image::{montage, save_pgm};
+
+fn edge_energy(t: &Tensor<f32>) -> f64 {
+    // mean |horizontal gradient| — a cheap edge-preservation proxy
+    let (h, w) = (t.shape()[0], t.shape()[1]);
+    let mut acc = 0.0f64;
+    for y in 0..h {
+        for x in 1..w {
+            acc += (t.at(&[y, x]) - t.at(&[y, x - 1])).abs() as f64;
+        }
+    }
+    acc / (h * (w - 1)) as f64
+}
+
+fn main() -> Result<()> {
+    let dims = [192usize, 192usize];
+    // clean reference and its noisy observation (deterministic seeds)
+    let clean = {
+        // same structure, no noise: regenerate with noise seed suppressed by
+        // averaging many realizations is overkill — build directly instead.
+        let mut img = Tensor::<f32>::synthetic_image(&dims, 7);
+        // approximate the clean image by a tight median-like smooth of many
+        // noisy draws: 8 independent seeds averaged cancels the N(0,12) noise
+        for seed in 8..15 {
+            let other = Tensor::<f32>::synthetic_image(&dims, seed);
+            img = img.add(&other)?;
+        }
+        img.scale(1.0 / 8.0)
+    };
+    let noisy = Tensor::<f32>::synthetic_image(&dims, 1);
+    println!("synthetic image {dims:?}; noisy PSNR vs clean: {:.2} dB", noisy.psnr(&clean, 255.0)?);
+
+    let window = [5usize, 5usize];
+    let sigma_d = 1.5f32;
+    let opts = ExecOptions::native(4);
+
+    // (b) adaptive σ_r
+    let (adaptive, mb) = run_job(&noisy, &Job::bilateral_adaptive(&window, sigma_d, 2.0), &opts)?;
+    // (c) appropriate constant σ_r — on the scale of the local noise
+    let (appropriate, mc) = run_job(&noisy, &Job::bilateral_const(&window, sigma_d, 30.0), &opts)?;
+    // (d) excessive constant σ_r — range term vanishes, gaussian behaviour
+    let (excessive, md) = run_job(&noisy, &Job::bilateral_const(&window, sigma_d, 1e5), &opts)?;
+    // reference gaussian for the (d) comparison
+    let (gaussian, _) = run_job(&noisy, &Job::gaussian(&window, sigma_d), &opts)?;
+
+    println!("timings: adaptive {} | const {} | excessive {}", mb.summary(), mc.summary(), md.summary());
+
+    let table = [
+        ("(a) noisy", &noisy),
+        ("(b) adaptive sigma_r", &adaptive),
+        ("(c) const sigma_r ~ noise", &appropriate),
+        ("(d) const sigma_r >> |Sigma_d|", &excessive),
+    ];
+    println!("\n| panel | PSNR vs clean (dB) | edge energy |");
+    println!("|---|---|---|");
+    for (label, img) in &table {
+        println!(
+            "| {label} | {:.2} | {:.2} |",
+            img.psnr(&clean, 255.0)?,
+            edge_energy(img)
+        );
+    }
+
+    // the paper's regime claims, as assertions:
+    // every filter improves on the noisy input...
+    for (label, img) in &table[1..] {
+        assert!(
+            img.psnr(&clean, 255.0)? > noisy.psnr(&clean, 255.0)?,
+            "{label} should denoise"
+        );
+    }
+    // ...(d) behaves like the plain gaussian...
+    let d_vs_gauss = excessive.mse(&gaussian)?;
+    println!("\nMSE[(d), gaussian] = {d_vs_gauss:.4} (regime d == gaussian degeneration)");
+    assert!(d_vs_gauss < 1.0, "excessive sigma_r must degenerate to gaussian");
+    // ...and the edge-aware variants keep more edges than (d)
+    assert!(edge_energy(&appropriate) > edge_energy(&excessive));
+
+    let outdir = std::path::Path::new("target/fig3");
+    std::fs::create_dir_all(outdir)?;
+    for (name, img) in [
+        ("a_noisy", &noisy),
+        ("b_adaptive", &adaptive),
+        ("c_const_ok", &appropriate),
+        ("d_const_excessive", &excessive),
+    ] {
+        save_pgm(img, outdir.join(format!("{name}.pgm")))?;
+    }
+    let strip = montage(&[&noisy, &adaptive, &appropriate, &excessive], 4)?;
+    save_pgm(&strip, outdir.join("fig3_montage.pgm"))?;
+    println!("\nwrote panels to {}", outdir.display());
+    println!("bilateral_denoise OK");
+    Ok(())
+}

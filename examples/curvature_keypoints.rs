@@ -1,0 +1,152 @@
+//! Figs 4 & 5 reproduction: Gaussian curvature as a dimension-aware
+//! key-point detector.
+//!
+//! Fig 4: a 2-D geometric segmentation mask — curvature magnitude peaks at
+//! polygon corners, stays low along straight edges.
+//!
+//! Fig 5: a 3-D cube volume — the native 3-D operator enhances the cube's
+//! *vertices*; forcing a planar (2-D) operator slice-by-slice instead
+//! enhances z-directed *edges*: the paper's "dimension-induced improper
+//! operation" made measurable.
+//!
+//! Run: `cargo run --release --example curvature_keypoints`
+
+use meltframe::coordinator::pipeline::{run_job, ExecOptions};
+use meltframe::coordinator::Job;
+use meltframe::prelude::*;
+use meltframe::tensor::image::save_pgm;
+
+/// Mean |K| over a small box around a voxel.
+fn local_response(k: &Tensor<f32>, center: &[usize], radius: usize) -> f64 {
+    let dims = k.shape().to_vec();
+    let mut acc = 0.0f64;
+    let mut n = 0usize;
+    let lo: Vec<usize> = center.iter().map(|&c| c.saturating_sub(radius)).collect();
+    let hi: Vec<usize> = center
+        .iter()
+        .zip(&dims)
+        .map(|(&c, &d)| (c + radius + 1).min(d))
+        .collect();
+    let mut idx = lo.clone();
+    loop {
+        acc += k.at(&idx).abs() as f64;
+        n += 1;
+        let mut a = idx.len();
+        loop {
+            if a == 0 {
+                return acc / n as f64;
+            }
+            a -= 1;
+            idx[a] += 1;
+            if idx[a] < hi[a] {
+                break;
+            }
+            idx[a] = lo[a];
+        }
+    }
+}
+
+fn fig4(opts: &ExecOptions) -> Result<()> {
+    println!("== Fig 4: 2-D segmentation -> corner enhancement ==");
+    let dims = [128usize, 128usize];
+    let mask = Tensor::<f32>::segmentation_mask(&dims);
+    // light smoothing first (the paper's masks are anti-aliased renders)
+    let pipeline = [Job::gaussian(&[3, 3], 0.8), Job::curvature(&[3, 3])];
+    let mut cur = mask.clone();
+    for job in &pipeline {
+        let (next, _) = run_job(&cur, job, opts)?;
+        cur = next;
+    }
+    let k = cur;
+
+    // rectangle corners of segmentation_mask: y in {h/5, 3h/5}, x in {w/6, w/2}
+    let corners = [
+        [dims[0] / 5, dims[1] / 6],
+        [dims[0] / 5, dims[1] / 2 - 1],
+        [3 * dims[0] / 5 - 1, dims[1] / 6],
+    ];
+    let edge_mid = [dims[0] / 5, dims[1] / 3]; // straight top edge midpoint
+    let corner_resp: f64 = corners
+        .iter()
+        .map(|c| local_response(&k, c, 2))
+        .fold(0.0, f64::max);
+    let edge_resp = local_response(&k, &edge_mid, 2);
+    println!("corner response {corner_resp:.4} vs straight-edge response {edge_resp:.4}");
+    assert!(
+        corner_resp > 5.0 * edge_resp.max(1e-9),
+        "corners must dominate straight edges"
+    );
+
+    let outdir = std::path::Path::new("target/fig4");
+    std::fs::create_dir_all(outdir)?;
+    save_pgm(&mask, outdir.join("a_mask.pgm"))?;
+    save_pgm(&k.map(|v| v.abs()), outdir.join("b_curvature.pgm"))?;
+    println!("wrote {}\n", outdir.display());
+    Ok(())
+}
+
+fn fig5(opts: &ExecOptions) -> Result<()> {
+    println!("== Fig 5: 3-D cube — native 3-D vs forced planar operator ==");
+    let dims = [48usize, 48, 48];
+    // noise-free cube render (the paper's monocolor render)
+    let mut cube = Tensor::<f32>::zeros(&dims)?;
+    let (lo, hi) = (12usize, 36usize);
+    for z in lo..hi {
+        for y in lo..hi {
+            for x in lo..hi {
+                cube.set(&[z, y, x], 1.0)?;
+            }
+        }
+    }
+    let smooth = [Job::gaussian(&[3, 3, 3], 0.8)];
+    let (cube_s, _) = run_job(&cube, &smooth[0], opts)?;
+
+    // (b) native 3-D curvature
+    let (k3, m3) = run_job(&cube_s, &Job::curvature(&[3, 3, 3]), opts)?;
+    println!("native 3-D: {}", m3.summary());
+
+    // (c) forced 2-D operator stacked along z (the improper operation)
+    let mut k2_stack = Tensor::<f32>::zeros(&dims)?;
+    let opts1 = ExecOptions::native(1);
+    for z in 0..dims[0] {
+        let plane = cube_s.slice_plane(0, z)?;
+        let (kz, _) = run_job(&plane, &Job::curvature(&[3, 3]), &opts1)?;
+        k2_stack.set_plane(0, z, &kz)?;
+    }
+
+    // measure: vertex vs z-edge-midpoint responses
+    let vertex = [lo, lo, lo];
+    let z_edge_mid = [(lo + hi) / 2, lo, lo]; // runs along z at an x/y corner
+    let v3 = local_response(&k3, &vertex, 2);
+    let e3 = local_response(&k3, &z_edge_mid, 2);
+    let v2 = local_response(&k2_stack, &vertex, 2);
+    let e2 = local_response(&k2_stack, &z_edge_mid, 2);
+    println!("| operator | vertex |K| | z-edge |K| | vertex/edge |");
+    println!("|---|---|---|---|");
+    println!("| native 3-D | {v3:.5} | {e3:.5} | {:.2} |", v3 / e3.max(1e-12));
+    println!("| planar 2-D stacked | {v2:.5} | {e2:.5} | {:.2} |", v2 / e2.max(1e-12));
+
+    // the paper's claim: native 3-D is vertex-selective; the planar stack
+    // responds along z-edges as strongly as at vertices (it cannot tell).
+    assert!(v3 / e3.max(1e-12) > 3.0, "3-D operator must prefer vertices");
+    assert!(
+        v2 / e2.max(1e-12) < 2.0,
+        "stacked 2-D operator must conflate vertices with z-edges"
+    );
+
+    let outdir = std::path::Path::new("target/fig5");
+    std::fs::create_dir_all(outdir)?;
+    save_pgm(&cube_s.slice_plane(0, lo)?, outdir.join("a_cube_slice.pgm"))?;
+    save_pgm(&k3.map(|v| v.abs()).slice_plane(0, lo)?, outdir.join("b_native3d_slice.pgm"))?;
+    save_pgm(&k2_stack.map(|v| v.abs()).slice_plane(0, lo)?, outdir.join("c_planar2d_slice.pgm"))?;
+    println!("wrote {}\n", outdir.display());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let opts = ExecOptions::native(4);
+    fig4(&opts)?;
+    fig5(&opts)?;
+    println!("curvature_keypoints OK");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+"""AOT compile path: lower every L2 variant to HLO *text* + a manifest.
+
+HLO text — NOT ``lowered.compile()`` or serialized HloModuleProto — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids that
+the rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py and README.md there.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Python runs ONCE here; the rust binary is self-contained afterwards. The
+manifest (artifacts/manifest.json) is the contract the rust
+``runtime::artifact`` registry parses: per artifact, the variant kind, the
+operator window, the fixed chunk height, and all input/output shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import all_variants, CHUNK_ROWS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"chunk_rows": CHUNK_ROWS, "dtype": "f32", "artifacts": []}
+    for v in all_variants():
+        lowered = jax.jit(v.fn).lower(*v.example_args())
+        text = to_hlo_text(lowered)
+        if "constant({...}" in text:
+            # as_hlo_text elides large literals; a shipped artifact with an
+            # elided constant is silently wrong on the rust side.
+            raise RuntimeError(
+                f"variant {v.name}: lowered HLO contains an elided constant; "
+                "pass large arrays as runtime inputs instead")
+        fname = f"{v.name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({
+            "name": v.name,
+            "kind": v.kind,
+            "file": fname,
+            "window": list(v.window),
+            "rows": CHUNK_ROWS,
+            "inputs": [list(s) for s in v.inputs],
+            "outputs": [[CHUNK_ROWS]],
+        })
+        print(f"  {v.name}: {len(text)} chars -> {fname}")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

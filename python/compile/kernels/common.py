@@ -1,0 +1,60 @@
+"""Shared Pallas plumbing for the melt-matrix kernels.
+
+Every kernel in this package is blocked the same way: the melt matrix
+f32[R, W] is tiled into (ROW_BLOCK, W) VMEM blocks along the row (grid-point)
+axis only. Rows are computationally independent (paper §3.1), so blocks never
+exchange data — this is the Pallas expression of the paper's melt-matrix
+partitionability, and the same property the rust L3 coordinator exploits
+across workers.
+
+All kernels are lowered with ``interpret=True``: the image's PJRT backend is
+CPU-only and real-TPU Pallas lowering emits Mosaic custom-calls it cannot
+execute. VMEM/MXU figures for real hardware are therefore *estimated* from
+the block shapes (see DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+# Row-block height of the HBM->VMEM schedule. 256 rows x 128-lane windows
+# keeps the block under ~256 KiB VMEM for every window size we ship
+# (W <= 125), leaving room for double buffering on a 16 MiB VMEM part.
+ROW_BLOCK = 256
+
+
+def row_grid(rows: int, row_block: int = ROW_BLOCK) -> int:
+    """Number of row blocks; rows must tile exactly (the rust coordinator
+    pads the final chunk to the artifact's fixed row count)."""
+    if rows % row_block != 0:
+        raise ValueError(f"rows={rows} not a multiple of row_block={row_block}")
+    return rows // row_block
+
+
+def melt_spec(window: int, row_block: int = ROW_BLOCK) -> pl.BlockSpec:
+    """BlockSpec for the melt matrix input: tile rows, keep the window whole."""
+    return pl.BlockSpec((row_block, window), lambda i: (i, 0))
+
+
+def vec_spec(window: int) -> pl.BlockSpec:
+    """BlockSpec for a per-window vector input (kernel / spatial component):
+    broadcast to every row block."""
+    return pl.BlockSpec((window,), lambda i: (0,))
+
+
+def scalar_spec() -> pl.BlockSpec:
+    """BlockSpec for a shape-(1,) runtime scalar (sigma_r, floor, ...)."""
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+def out_spec(row_block: int = ROW_BLOCK) -> pl.BlockSpec:
+    """BlockSpec for the per-row output vector."""
+    return pl.BlockSpec((row_block,), lambda i: (i,))
+
+
+def out_struct(rows: int, dtype=None):
+    import jax.numpy as jnp
+    return jax.ShapeDtypeStruct((rows,), dtype or jnp.float32)

@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: N-D Gaussian curvature on a melt matrix.
+
+Paper eq. (6)/(7): K = det(H(I)) / (1 + Σ_a I_a²)² with H the Hessian of
+second-order central differences. The paper's observation (§3.2) is that the
+melt matrix collapses what would be a rank-(m+2) container for H into a
+rank-2 broadcast: all 1st/2nd-order differentials of a grid point are linear
+in its melt row, so D = M @ S for a static stencil matrix S
+(``ref.stencil_matrix``), and det/denominator are closed-form per row.
+
+S is baked into the kernel as a compile-time constant: (ROW_BLOCK, W) @
+(W, ncols) is again an MXU contraction, followed by a short VPU epilogue.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import ROW_BLOCK, melt_spec, out_spec, out_struct, row_grid
+from .ref import stencil_matrix
+
+
+def _det(d, nd):
+    h = d[:, nd:]
+    if nd == 1:
+        return h[:, 0]
+    if nd == 2:
+        return h[:, 0] * h[:, 2] - h[:, 1] * h[:, 1]
+    if nd == 3:
+        hxx, hxy, hxz, hyy, hyz, hzz = (h[:, 0], h[:, 1], h[:, 2],
+                                        h[:, 3], h[:, 4], h[:, 5])
+        return (hxx * (hyy * hzz - hyz * hyz)
+                - hxy * (hxy * hzz - hyz * hxz)
+                + hxz * (hxy * hyz - hyy * hxz))
+    raise NotImplementedError(f"nd={nd}")
+
+
+def _kernel(nd, m_ref, s_ref, o_ref):
+    d = m_ref[...] @ s_ref[...]   # all differentials in one contraction
+    g = d[:, :nd]
+    denom = (1.0 + (g * g).sum(axis=1)) ** 2
+    o_ref[...] = _det(d, nd) / denom
+
+
+def gaussian_curvature(melt: jnp.ndarray, window: tuple[int, ...],
+                       row_block: int = ROW_BLOCK,
+                       S: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Gaussian curvature per melt row. melt: f32[R, prod(window)];
+    window: the operator extents (each odd, >= 3); returns f32[R].
+
+    The stencil matrix S (f32[W, ncols]) is a *runtime input*, not a traced
+    constant: ``as_hlo_text()`` elides large literals (``constant({...})``),
+    which silently corrupts the AOT artifact — so the L3 coordinator supplies
+    S per job (it owns the identical ``stencil_matrix`` implementation in
+    ``rust/src/kernels/stencil.rs``). When ``S`` is None (python-side tests)
+    it is built here."""
+    rows, w = melt.shape
+    assert w == int(np.prod(window))
+    nd = len(window)
+    if S is None:
+        S = jnp.asarray(stencil_matrix(window))
+    ncols = nd + nd * (nd + 1) // 2
+    assert S.shape == (w, ncols)
+    return pl.pallas_call(
+        functools.partial(_kernel, nd),
+        grid=(row_grid(rows, row_block),),
+        in_specs=[melt_spec(w, row_block),
+                  pl.BlockSpec((w, ncols), lambda i: (0, 0))],
+        out_specs=out_spec(row_block),
+        out_shape=out_struct(rows),
+        interpret=True,
+    )(melt, S)

@@ -1,0 +1,38 @@
+"""L1 Pallas kernel: global (static-kernel) filtering on a melt matrix.
+
+The paper's MatBroadcast paradigm for a global filter is a single
+matrix-vector contraction: out = M @ k, with M the melt matrix and k the
+raveled, pre-normalized kernel (gaussian, box, ...). On TPU this is the
+MXU-friendly shape — each (ROW_BLOCK, W) VMEM block contracts against the
+resident k vector; no cross-block traffic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import ROW_BLOCK, melt_spec, vec_spec, out_spec, out_struct, row_grid
+
+
+def _kernel(m_ref, k_ref, o_ref):
+    # (ROW_BLOCK, W) @ (W,) -> (ROW_BLOCK,): one fused contraction per block.
+    o_ref[...] = m_ref[...] @ k_ref[...]
+
+
+def gaussian_apply(melt: jnp.ndarray, kernel: jnp.ndarray,
+                   row_block: int = ROW_BLOCK) -> jnp.ndarray:
+    """Apply a static kernel vector to every melt row. melt: f32[R, W],
+    kernel: f32[W] (pre-normalized), returns f32[R]."""
+    rows, window = melt.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(row_grid(rows, row_block),),
+        in_specs=[melt_spec(window, row_block), vec_spec(window)],
+        out_specs=out_spec(row_block),
+        out_shape=out_struct(rows),
+        interpret=True,
+    )(melt, kernel)

@@ -1,0 +1,208 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal of the L1 layer: each Pallas kernel in
+``gaussian.py`` / ``bilateral.py`` / ``curvature.py`` must match its oracle
+here to float tolerance across shapes and parameter ranges (see
+``python/tests/``).
+
+The melt-matrix contract shared by every kernel:
+
+    melt : f32[R, W]   R rows = output grid points of the quasi-grid,
+                       W cols = the ravel of the neighbourhood operator.
+    out  : f32[R]      one value per grid point.
+
+Rows are computationally independent (paper §3.1) — the oracles are written
+as whole-array broadcasts, which *is* the paper's MatBroadcast paradigm.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# melt (reference unfold, used by tests to build realistic melt matrices)
+# --------------------------------------------------------------------------
+
+def melt_reflect(x: np.ndarray, window: tuple[int, ...]) -> np.ndarray:
+    """Reference melt: same-size grid, reflect boundary, stride 1.
+
+    Returns f32[prod(x.shape), prod(window)] — row i is the raveled
+    neighbourhood of grid point i (row-major order), matching the rust
+    implementation in ``rust/src/melt/melt.rs`` (BoundaryMode::Reflect).
+    """
+    assert x.ndim == len(window) and all(w % 2 == 1 for w in window)
+    pads = [(w // 2, w // 2) for w in window]
+    xp = np.pad(x, pads, mode="reflect")
+    # gather all window offsets
+    out = np.empty((x.size, int(np.prod(window))), dtype=np.float32)
+    grids = np.meshgrid(*[np.arange(s) for s in x.shape], indexing="ij")
+    base = [g.ravel() for g in grids]
+    col = 0
+    for off in np.ndindex(*window):
+        idx = tuple(b + o for b, o in zip(base, off))
+        out[:, col] = xp[idx].astype(np.float32)
+        col += 1
+    return out
+
+
+# --------------------------------------------------------------------------
+# kernel oracles (operate on melt matrices)
+# --------------------------------------------------------------------------
+
+def gaussian_apply(melt: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
+    """Global filter: weighted sum of each row with a static kernel vector.
+
+    ``kernel`` is assumed pre-normalized (sum == 1) by the caller.
+    """
+    return melt @ kernel
+
+
+def bilateral_const(melt: jnp.ndarray, spatial: jnp.ndarray,
+                    center: int, sigma_r: jnp.ndarray) -> jnp.ndarray:
+    """Paper eq. (3) with constant range regulator sigma_r.
+
+    ``spatial`` is the precomputed spatial component
+    exp(-(x-s)^T Sigma_d^{-1} (x-s) / 2) over the window ravel, so the
+    oracle only has to fuse the data-dependent range term. ``sigma_r`` is a
+    shape-(1,) array (kept as an array so the AOT artifact takes it as a
+    runtime input).
+    """
+    c = melt[:, center:center + 1]
+    diff = melt - c
+    sig = sigma_r[0]
+    w = spatial[None, :] * jnp.exp(-(diff * diff) / (2.0 * sig * sig))
+    return (w * melt).sum(axis=1) / w.sum(axis=1)
+
+
+def local_sigma(melt: jnp.ndarray, floor: jnp.ndarray) -> jnp.ndarray:
+    """Adaptive range regulator sigma_r = sigma(x, s): the standard deviation
+    of the neighbourhood values, floored to keep the weight well-defined on
+    constant regions (paper §3.2 'local adaptive regulator')."""
+    mu = melt.mean(axis=1, keepdims=True)
+    var = ((melt - mu) ** 2).mean(axis=1, keepdims=True)
+    return jnp.maximum(jnp.sqrt(var), floor[0])
+
+
+def bilateral_adaptive(melt: jnp.ndarray, spatial: jnp.ndarray,
+                       center: int, floor: jnp.ndarray) -> jnp.ndarray:
+    """Paper eq. (3) with the locally adaptive sigma_r = sigma(x, s)."""
+    c = melt[:, center:center + 1]
+    diff = melt - c
+    sig = local_sigma(melt, floor)   # (R, 1), broadcasts over the window
+    w = spatial[None, :] * jnp.exp(-(diff * diff) / (2.0 * sig * sig))
+    return (w * melt).sum(axis=1) / w.sum(axis=1)
+
+
+# --------------------------------------------------------------------------
+# differential stencils + Gaussian curvature (paper eq. 4-7)
+# --------------------------------------------------------------------------
+
+def stencil_matrix(window: tuple[int, ...]) -> np.ndarray:
+    """Central-difference stencil matrix S: f32[W, nd + nd*(nd+1)/2].
+
+    Column layout: [g_0..g_{nd-1}, H_00, H_01, .., H_0{nd-1}, H_11, ..]
+    (gradients then upper-triangular Hessian, row-major over (a, b>=a)).
+    Applying a melt row m gives m @ S = all 1st/2nd-order central
+    differences of the grid point at unit spacing. Requires every window
+    extent >= 3 and odd.
+    """
+    nd = len(window)
+    assert all(w >= 3 and w % 2 == 1 for w in window)
+    W = int(np.prod(window))
+    ncols = nd + nd * (nd + 1) // 2
+    S = np.zeros((W, ncols), dtype=np.float32)
+    center = tuple(w // 2 for w in window)
+
+    def flat(idx):
+        f = 0
+        for i, w in zip(idx, window):
+            f = f * w + i
+        return f
+
+    def shifted(axis_offsets):
+        idx = list(center)
+        for a, o in axis_offsets:
+            idx[a] += o
+        return flat(tuple(idx))
+
+    # gradients: (m[+e_a] - m[-e_a]) / 2
+    for a in range(nd):
+        S[shifted([(a, +1)]), a] += 0.5
+        S[shifted([(a, -1)]), a] -= 0.5
+    # Hessian
+    col = nd
+    for a in range(nd):
+        for b in range(a, nd):
+            if a == b:
+                S[shifted([(a, +1)]), col] += 1.0
+                S[shifted([]), col] += -2.0
+                S[shifted([(a, -1)]), col] += 1.0
+            else:
+                S[shifted([(a, +1), (b, +1)]), col] += 0.25
+                S[shifted([(a, -1), (b, -1)]), col] += 0.25
+                S[shifted([(a, +1), (b, -1)]), col] -= 0.25
+                S[shifted([(a, -1), (b, +1)]), col] -= 0.25
+            col += 1
+    return S
+
+
+def hessian_det(d: jnp.ndarray, nd: int) -> jnp.ndarray:
+    """det(H) from the packed differential rows d = melt @ S, per row."""
+    g = d[:, :nd]
+    h = d[:, nd:]
+    if nd == 1:
+        return h[:, 0]
+    if nd == 2:
+        hxx, hxy, hyy = h[:, 0], h[:, 1], h[:, 2]
+        return hxx * hyy - hxy * hxy
+    if nd == 3:
+        hxx, hxy, hxz, hyy, hyz, hzz = (h[:, 0], h[:, 1], h[:, 2],
+                                        h[:, 3], h[:, 4], h[:, 5])
+        return (hxx * (hyy * hzz - hyz * hyz)
+                - hxy * (hxy * hzz - hyz * hxz)
+                + hxz * (hxy * hyz - hyy * hxz))
+    raise NotImplementedError(f"hessian_det for nd={nd}")
+
+
+def gaussian_curvature(melt: jnp.ndarray, window: tuple[int, ...]) -> jnp.ndarray:
+    """Paper eq. (6): K = det(H) / (1 + sum_a I_a^2)^2 per melt row."""
+    nd = len(window)
+    S = jnp.asarray(stencil_matrix(window))
+    d = melt @ S
+    g = d[:, :nd]
+    det = hessian_det(d, nd)
+    denom = (1.0 + (g * g).sum(axis=1)) ** 2
+    return det / denom
+
+
+# --------------------------------------------------------------------------
+# spatial gaussian component (shared by aot + tests + rust cross-check)
+# --------------------------------------------------------------------------
+
+def spatial_gaussian(window: tuple[int, ...], sigma_inv: np.ndarray) -> np.ndarray:
+    """exp(-(x-s)^T Sigma_d^{-1} (x-s)/2) over the window ravel.
+
+    ``sigma_inv`` is the nd x nd inverse covariance Sigma_d^{-1} of paper
+    eq. (3) (anisotropy support for voxel-based computation). Unnormalized:
+    normalization happens jointly with the range term at apply time.
+    """
+    nd = len(window)
+    assert sigma_inv.shape == (nd, nd)
+    center = np.array([w // 2 for w in window], dtype=np.float64)
+    W = int(np.prod(window))
+    out = np.empty((W,), dtype=np.float32)
+    for col, off in enumerate(np.ndindex(*window)):
+        r = np.array(off, dtype=np.float64) - center
+        out[col] = np.exp(-0.5 * r @ sigma_inv @ r)
+    return out
+
+
+def gaussian_kernel(window: tuple[int, ...], sigma: float) -> np.ndarray:
+    """Normalized isotropic N-D gaussian kernel over the window ravel."""
+    nd = len(window)
+    inv = np.eye(nd) / (sigma * sigma)
+    k = spatial_gaussian(window, inv).astype(np.float64)
+    k /= k.sum()
+    return k.astype(np.float32)

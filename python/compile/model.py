@@ -1,0 +1,118 @@
+"""L2: the jax compute graphs the rust coordinator executes per melt chunk.
+
+Each *variant* is a jit-able function over fixed-shape inputs whose first
+argument is a melt-matrix chunk f32[CHUNK_ROWS, W]. The rust L3 coordinator
+melts the tensor, pads the final chunk up to CHUNK_ROWS, and feeds chunks to
+the AOT-compiled executable of the right variant; rows are independent so
+padding is sliced off after execution.
+
+All variants funnel through the L1 Pallas kernels — lowering a variant embeds
+the kernel into the same HLO module, so the artifact is a single fused
+program per chunk with no python anywhere near the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import gaussian as kg
+from .kernels import bilateral as kb
+from .kernels import curvature as kc
+
+# Fixed chunk height of every AOT artifact. A multiple of the Pallas
+# ROW_BLOCK (256); 2048 rows x <=125 cols keeps a chunk's host buffer ~1 MiB.
+CHUNK_ROWS = 2048
+
+
+@dataclass(frozen=True)
+class Variant:
+    """One AOT artifact: a named, fixed-shape chunk graph."""
+    name: str
+    fn: object                      # callable over example args
+    window: tuple[int, ...]         # operator extents (for the manifest)
+    inputs: tuple[tuple[int, ...], ...]   # input shapes, all f32
+    kind: str                       # gaussian | bilateral_const | ...
+
+    def example_args(self):
+        return tuple(jax.ShapeDtypeStruct(s, jnp.float32) for s in self.inputs)
+
+
+def _w(window):
+    return int(np.prod(window))
+
+
+def gaussian_variant(window: tuple[int, ...]) -> Variant:
+    W = _w(window)
+
+    def fn(melt, kernel):
+        return (kg.gaussian_apply(melt, kernel),)
+
+    return Variant(
+        name=f"gaussian_w{W}", fn=fn, window=window,
+        inputs=((CHUNK_ROWS, W), (W,)), kind="gaussian")
+
+
+def bilateral_const_variant(window: tuple[int, ...]) -> Variant:
+    W = _w(window)
+    center = W // 2   # odd extents -> ravel midpoint is the grid point
+
+    def fn(melt, spatial, sigma_r):
+        return (kb.bilateral_const(melt, spatial, center, sigma_r),)
+
+    return Variant(
+        name=f"bilateral_const_w{W}", fn=fn, window=window,
+        inputs=((CHUNK_ROWS, W), (W,), (1,)), kind="bilateral_const")
+
+
+def bilateral_adaptive_variant(window: tuple[int, ...]) -> Variant:
+    W = _w(window)
+    center = W // 2
+
+    def fn(melt, spatial, floor):
+        return (kb.bilateral_adaptive(melt, spatial, center, floor),)
+
+    return Variant(
+        name=f"bilateral_adaptive_w{W}", fn=fn, window=window,
+        inputs=((CHUNK_ROWS, W), (W,), (1,)), kind="bilateral_adaptive")
+
+
+def curvature_variant(window: tuple[int, ...]) -> Variant:
+    W = _w(window)
+    nd = len(window)
+    ncols = nd + nd * (nd + 1) // 2
+
+    def fn(melt, stencil):
+        # the stencil matrix is a runtime input: as_hlo_text() elides large
+        # constants, so baking S into the artifact corrupts it (see
+        # kernels/curvature.py); the rust coordinator supplies it per job.
+        return (kc.gaussian_curvature(melt, window, S=stencil),)
+
+    return Variant(
+        name=f"curvature{nd}d_w{W}", fn=fn, window=window,
+        inputs=((CHUNK_ROWS, W), (W, ncols)), kind="curvature")
+
+
+def all_variants() -> list[Variant]:
+    """The artifact set shipped to `make artifacts`.
+
+    Window sizes cover the paper's experiments: 3^2/5^2 for natural images
+    (Figs 3, 4), 3^3 for volumes (Figs 5, 6), plus 5^3 for the chunk-size /
+    VMEM ablations.
+    """
+    return [
+        gaussian_variant((3, 3)),
+        gaussian_variant((5, 5)),
+        gaussian_variant((3, 3, 3)),
+        gaussian_variant((5, 5, 5)),
+        bilateral_const_variant((5, 5)),
+        bilateral_const_variant((3, 3, 3)),
+        bilateral_adaptive_variant((5, 5)),
+        bilateral_adaptive_variant((3, 3, 3)),
+        curvature_variant((3, 3)),
+        curvature_variant((3, 3, 3)),
+    ]

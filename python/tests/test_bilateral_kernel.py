@@ -1,0 +1,126 @@
+"""L1 bilateral Pallas kernels (const + adaptive sigma_r) vs oracle,
+plus the paper's Fig-3 qualitative regimes as numeric assertions."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.bilateral import bilateral_const, bilateral_adaptive
+
+WINDOWS = [(5, 5), (3, 3, 3)]
+
+
+def _case(rng, rows, window, lo=0.0, hi=255.0):
+    w = int(np.prod(window))
+    m = jnp.asarray(rng.uniform(lo, hi, size=(rows, w)).astype(np.float32))
+    inv = np.eye(len(window)) / 2.0
+    spatial = jnp.asarray(ref.spatial_gaussian(window, inv))
+    return m, spatial, w // 2
+
+
+@pytest.mark.parametrize("window", WINDOWS)
+@pytest.mark.parametrize("sigma_r", [5.0, 30.0, 1e4])
+def test_const_matches_ref(window, sigma_r):
+    rng = np.random.default_rng(5)
+    m, spatial, c = _case(rng, 512, window)
+    sig = jnp.asarray([sigma_r], dtype=jnp.float32)
+    got = bilateral_const(m, spatial, c, sig, row_block=256)
+    want = ref.bilateral_const(m, spatial, c, sig)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("window", WINDOWS)
+def test_adaptive_matches_ref(window):
+    rng = np.random.default_rng(6)
+    m, spatial, c = _case(rng, 512, window)
+    floor = jnp.asarray([1.0], dtype=jnp.float32)
+    got = bilateral_adaptive(m, spatial, c, floor, row_block=256)
+    want = ref.bilateral_adaptive(m, spatial, c, floor)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_constant_region_fixed_point():
+    # On a constant region every weight is the spatial weight; the output is
+    # the constant regardless of sigma_r.
+    m = jnp.full((256, 25), 42.0, dtype=jnp.float32)
+    spatial = jnp.asarray(ref.spatial_gaussian((5, 5), np.eye(2)))
+    for sig in (0.5, 50.0):
+        out = bilateral_const(m, spatial, 12, jnp.asarray([sig], jnp.float32))
+        np.testing.assert_allclose(out, np.full(256, 42.0), rtol=1e-5)
+
+
+def test_excessive_sigma_degenerates_to_gaussian():
+    # Paper Fig 3(d): sigma_r >> ||Sigma_d|| makes the range term negligible,
+    # so the bilateral degenerates to the (normalized) spatial gaussian.
+    rng = np.random.default_rng(9)
+    m, spatial, c = _case(rng, 512, (5, 5))
+    out = bilateral_const(m, spatial, c, jnp.asarray([1e6], jnp.float32))
+    k = np.asarray(spatial) / np.asarray(spatial).sum()
+    want = ref.gaussian_apply(m, jnp.asarray(k))
+    np.testing.assert_allclose(out, want, rtol=1e-3, atol=1e-2)
+
+
+def test_small_sigma_preserves_edges():
+    # Paper Fig 3(c): on a two-level step edge, small sigma_r keeps the two
+    # plateaus essentially intact while a plain gaussian would mix them.
+    rows, w = 256, 25
+    m = np.zeros((rows, w), dtype=np.float32)
+    m[:128] = 10.0
+    m[128:] = 200.0
+    # contaminate neighbourhoods with the *other* plateau (an edge row)
+    m[:128, :5] = 200.0
+    m[128:, :5] = 10.0
+    spatial = jnp.asarray(ref.spatial_gaussian((5, 5), np.eye(2)))
+    out = np.asarray(bilateral_const(jnp.asarray(m), spatial, 12,
+                                     jnp.asarray([5.0], jnp.float32)))
+    assert np.all(np.abs(out[:128] - 10.0) < 2.0)
+    assert np.all(np.abs(out[128:] - 200.0) < 4.0)
+    gauss = np.asarray(ref.gaussian_apply(
+        jnp.asarray(m), jnp.asarray(np.asarray(spatial) / np.asarray(spatial).sum())))
+    # the gaussian mixes plateaus far more than the bilateral's < 2.0
+    assert np.abs(gauss[:128] - 10.0).max() > 5.0
+
+
+def test_adaptive_sigma_tracks_local_noise():
+    # local_sigma is the row std floored; verify on hand-built rows.
+    m = np.zeros((256, 9), dtype=np.float32)
+    m[0] = [0, 0, 0, 0, 0, 0, 0, 0, 9]   # std = sqrt(8) = 2.828...
+    sig = np.asarray(ref.local_sigma(jnp.asarray(m), jnp.asarray([0.5], jnp.float32)))
+    np.testing.assert_allclose(sig[0, 0], np.std(m[0]), rtol=1e-5)
+    np.testing.assert_allclose(sig[1, 0], 0.5)  # floored on constant rows
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    blocks=st.integers(1, 4),
+    widx=st.integers(0, len(WINDOWS) - 1),
+    seed=st.integers(0, 2**31 - 1),
+    sigma_r=st.floats(0.5, 1e3),
+)
+def test_const_hypothesis(blocks, widx, seed, sigma_r):
+    window = WINDOWS[widx]
+    rng = np.random.default_rng(seed)
+    m, spatial, c = _case(rng, blocks * 256, window)
+    sig = jnp.asarray([sigma_r], dtype=jnp.float32)
+    got = bilateral_const(m, spatial, c, sig)
+    want = ref.bilateral_const(m, spatial, c, sig)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    blocks=st.integers(1, 4),
+    widx=st.integers(0, len(WINDOWS) - 1),
+    seed=st.integers(0, 2**31 - 1),
+    floor=st.floats(0.1, 10.0),
+)
+def test_adaptive_hypothesis(blocks, widx, seed, floor):
+    window = WINDOWS[widx]
+    rng = np.random.default_rng(seed)
+    m, spatial, c = _case(rng, blocks * 256, window)
+    fl = jnp.asarray([floor], dtype=jnp.float32)
+    got = bilateral_adaptive(m, spatial, c, fl)
+    want = ref.bilateral_adaptive(m, spatial, c, fl)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)

@@ -1,0 +1,104 @@
+"""L1 curvature Pallas kernel vs oracle + analytic sanity on known surfaces."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.curvature import gaussian_curvature
+
+WINDOWS = [(3, 3), (3, 3, 3), (5, 5)]
+
+
+@pytest.mark.parametrize("window", WINDOWS)
+def test_matches_ref(window):
+    rng = np.random.default_rng(13)
+    w = int(np.prod(window))
+    m = jnp.asarray(rng.uniform(-5, 5, size=(512, w)).astype(np.float32))
+    got = gaussian_curvature(m, window, row_block=256)
+    want = ref.gaussian_curvature(m, window)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_flat_field_zero_curvature():
+    # Constant and linear-ramp fields have zero Hessian -> K = 0.
+    m = jnp.full((256, 9), 7.0, dtype=jnp.float32)
+    out = gaussian_curvature(m, (3, 3))
+    np.testing.assert_allclose(out, np.zeros(256), atol=1e-6)
+
+
+def test_linear_ramp_zero_curvature():
+    # melt rows of the plane f(x, y) = 2x + 3y (window (3,3), unit spacing).
+    offs = np.array([[i, j] for i in (-1, 0, 1) for j in (-1, 0, 1)], dtype=np.float32)
+    row = 2.0 * offs[:, 0] + 3.0 * offs[:, 1]
+    m = jnp.asarray(np.tile(row, (256, 1)))
+    out = gaussian_curvature(m, (3, 3))
+    np.testing.assert_allclose(out, np.zeros(256), atol=1e-5)
+
+
+def test_quadratic_bowl_analytic_2d():
+    # f(x,y) = (x^2 + y^2)/2: H = I, grad = (x, y). At the origin the melt
+    # row gives det H = 1, grad = 0 -> K = 1.
+    offs = np.array([[i, j] for i in (-1, 0, 1) for j in (-1, 0, 1)], dtype=np.float32)
+    row = 0.5 * (offs[:, 0] ** 2 + offs[:, 1] ** 2)
+    m = jnp.asarray(np.tile(row, (256, 1)))
+    out = gaussian_curvature(m, (3, 3))
+    np.testing.assert_allclose(out, np.ones(256), rtol=1e-5)
+
+
+def test_saddle_negative_2d():
+    # f(x,y) = x*y: H = [[0,1],[1,0]], det = -1, grad(0) = 0 -> K = -1.
+    offs = np.array([[i, j] for i in (-1, 0, 1) for j in (-1, 0, 1)], dtype=np.float32)
+    row = offs[:, 0] * offs[:, 1]
+    m = jnp.asarray(np.tile(row, (256, 1)))
+    out = gaussian_curvature(m, (3, 3))
+    np.testing.assert_allclose(out, -np.ones(256), rtol=1e-5)
+
+
+def test_quadratic_bowl_analytic_3d():
+    # f = (x^2+y^2+z^2)/2 in 3D: det H = 1 at origin, K = 1.
+    offs = np.array(list(np.ndindex(3, 3, 3)), dtype=np.float32) - 1.0
+    row = 0.5 * (offs ** 2).sum(axis=1)
+    m = jnp.asarray(np.tile(row, (256, 1)))
+    out = gaussian_curvature(m, (3, 3, 3))
+    np.testing.assert_allclose(out, np.ones(256), rtol=1e-5)
+
+
+def test_stencil_matrix_rows_sum():
+    # Every derivative stencil annihilates constants: columns sum to 0.
+    for window in WINDOWS:
+        S = ref.stencil_matrix(window)
+        np.testing.assert_allclose(S.sum(axis=0), 0.0, atol=1e-7)
+
+
+def test_stencil_matrix_exact_on_quadratics():
+    # m @ S recovers the exact gradient/Hessian of any quadratic at center.
+    rng = np.random.default_rng(2)
+    window = (3, 3, 3)
+    nd = 3
+    A = rng.normal(size=(nd, nd)); A = (A + A.T) / 2
+    b = rng.normal(size=nd)
+    offs = np.array(list(np.ndindex(*window)), dtype=np.float64) - 1.0
+    vals = np.array([0.5 * o @ A @ o + b @ o for o in offs], dtype=np.float32)
+    d = vals @ ref.stencil_matrix(window)
+    np.testing.assert_allclose(d[:nd], b, rtol=1e-4, atol=1e-5)
+    iu = np.triu_indices(nd)
+    np.testing.assert_allclose(d[nd:], A[iu], rtol=1e-4, atol=1e-4)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    blocks=st.integers(1, 4),
+    widx=st.integers(0, len(WINDOWS) - 1),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.01, 50.0),
+)
+def test_matches_ref_hypothesis(blocks, widx, seed, scale):
+    window = WINDOWS[widx]
+    w = int(np.prod(window))
+    rng = np.random.default_rng(seed)
+    m = jnp.asarray(rng.uniform(-scale, scale, size=(blocks * 256, w)).astype(np.float32))
+    got = gaussian_curvature(m, window)
+    want = ref.gaussian_curvature(m, window)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3 * max(1.0, scale) ** 3)

@@ -1,0 +1,86 @@
+"""L1 gaussian Pallas kernel vs pure-jnp oracle (ref.py).
+
+Hypothesis sweeps the melt-matrix shapes (rows x window) and data ranges;
+every case asserts allclose against the oracle — the core correctness signal
+for the artifact the rust hot path executes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gaussian import gaussian_apply
+
+WINDOWS = [(3,), (3, 3), (5, 5), (3, 3, 3), (5, 5, 5)]
+
+
+def _melt(rng, rows, w, lo=-10.0, hi=10.0):
+    return jnp.asarray(rng.uniform(lo, hi, size=(rows, w)).astype(np.float32))
+
+
+@pytest.mark.parametrize("window", WINDOWS)
+def test_matches_ref_basic(window):
+    rng = np.random.default_rng(7)
+    w = int(np.prod(window))
+    m = _melt(rng, 512, w)
+    k = jnp.asarray(ref.gaussian_kernel(window, sigma=1.0))
+    got = gaussian_apply(m, k, row_block=256)
+    want = ref.gaussian_apply(m, k)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_constant_input_is_preserved():
+    # A normalized kernel applied to a constant field returns the constant.
+    m = jnp.full((256, 27), 3.25, dtype=jnp.float32)
+    k = jnp.asarray(ref.gaussian_kernel((3, 3, 3), sigma=0.8))
+    out = gaussian_apply(m, k)
+    np.testing.assert_allclose(out, np.full(256, 3.25), rtol=1e-5)
+
+
+def test_delta_kernel_extracts_center():
+    rng = np.random.default_rng(3)
+    w = 25
+    m = _melt(rng, 256, w)
+    k = np.zeros(w, dtype=np.float32)
+    k[w // 2] = 1.0
+    out = gaussian_apply(m, jnp.asarray(k))
+    np.testing.assert_allclose(out, np.asarray(m)[:, w // 2], rtol=1e-6)
+
+
+def test_linearity_in_kernel():
+    rng = np.random.default_rng(11)
+    m = _melt(rng, 256, 9)
+    k1 = jnp.asarray(rng.uniform(0, 1, 9).astype(np.float32))
+    k2 = jnp.asarray(rng.uniform(0, 1, 9).astype(np.float32))
+    lhs = gaussian_apply(m, k1 + 2.0 * k2)
+    rhs = gaussian_apply(m, k1) + 2.0 * gaussian_apply(m, k2)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    blocks=st.integers(1, 6),
+    row_block=st.sampled_from([128, 256]),
+    widx=st.integers(0, len(WINDOWS) - 1),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.1, 100.0),
+)
+def test_matches_ref_hypothesis(blocks, row_block, widx, seed, scale):
+    window = WINDOWS[widx]
+    w = int(np.prod(window))
+    rows = blocks * row_block
+    rng = np.random.default_rng(seed)
+    m = _melt(rng, rows, w, -scale, scale)
+    k = jnp.asarray(ref.gaussian_kernel(window, sigma=1.2))
+    got = gaussian_apply(m, k, row_block=row_block)
+    want = ref.gaussian_apply(m, k)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale)
+
+
+def test_rejects_untiled_rows():
+    m = jnp.zeros((100, 9), dtype=jnp.float32)  # 100 % 256 != 0
+    k = jnp.asarray(ref.gaussian_kernel((3, 3), 1.0))
+    with pytest.raises(ValueError, match="not a multiple"):
+        gaussian_apply(m, k)

@@ -1,0 +1,97 @@
+"""Oracle self-consistency: melt reference, spatial gaussian, kernels.
+
+These pin down the *contract* the rust substrate re-implements natively
+(rust/src/melt, rust/src/kernels); the rust integration tests assert the
+same invariants on the other side of the language boundary."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def test_melt_shape_and_center_column():
+    x = np.arange(24, dtype=np.float32).reshape(4, 6)
+    m = ref.melt_reflect(x, (3, 3))
+    assert m.shape == (24, 9)
+    # the center column of the melt matrix is the ravel of x itself
+    np.testing.assert_allclose(m[:, 4], x.ravel())
+
+
+def test_melt_reflect_boundary_2d():
+    x = np.arange(9, dtype=np.float32).reshape(3, 3)
+    m = ref.melt_reflect(x, (3, 3))
+    # grid point (0,0): reflected neighbourhood of corner
+    # np.pad reflect: [[4,3,4,5,4],[1,0,1,2,1],...] -> window rows (0..2, 0..2)
+    xp = np.pad(x, 1, mode="reflect")
+    want = xp[0:3, 0:3].ravel()
+    np.testing.assert_allclose(m[0], want)
+
+
+def test_melt_3d_center():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(4, 5, 6)).astype(np.float32)
+    m = ref.melt_reflect(x, (3, 3, 3))
+    assert m.shape == (120, 27)
+    np.testing.assert_allclose(m[:, 13], x.ravel())
+
+
+def test_melt_constant_tensor_constant_rows():
+    x = np.full((5, 5, 5), 2.5, dtype=np.float32)
+    m = ref.melt_reflect(x, (3, 3, 3))
+    np.testing.assert_allclose(m, 2.5)
+
+
+def test_spatial_gaussian_isotropic_symmetry():
+    inv = np.eye(2)
+    s = ref.spatial_gaussian((5, 5), inv).reshape(5, 5)
+    np.testing.assert_allclose(s, s.T, rtol=1e-6)          # x<->y symmetry
+    np.testing.assert_allclose(s, s[::-1, :], rtol=1e-6)   # reflection
+    assert s[2, 2] == pytest.approx(1.0)                   # center peak
+
+
+def test_spatial_gaussian_anisotropic():
+    # Stronger decay along axis 0 when Sigma_d^{-1} weights it more.
+    inv = np.diag([4.0, 0.25])
+    s = ref.spatial_gaussian((5, 5), inv).reshape(5, 5)
+    assert s[0, 2] < s[2, 0]  # off-center along axis0 decays faster
+
+
+def test_gaussian_kernel_normalized():
+    for window in [(3, 3), (5, 5), (3, 3, 3), (5, 5, 5)]:
+        k = ref.gaussian_kernel(window, sigma=1.3)
+        assert k.sum() == pytest.approx(1.0, abs=1e-6)
+        assert (k > 0).all()
+
+
+def test_hessian_det_matches_numpy():
+    rng = np.random.default_rng(4)
+    for nd in (1, 2, 3):
+        ncols = nd + nd * (nd + 1) // 2
+        d = rng.normal(size=(64, ncols)).astype(np.float32)
+        got = np.asarray(ref.hessian_det(jnp.asarray(d), nd))
+        for r in range(64):
+            H = np.zeros((nd, nd))
+            iu = np.triu_indices(nd)
+            H[iu] = d[r, nd:]
+            H = H + H.T - np.diag(np.diag(H))
+            np.testing.assert_allclose(got[r], np.linalg.det(H), rtol=2e-3, atol=2e-3)
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 2**31 - 1),
+       shape=st.sampled_from([(8, 8), (5, 7), (4, 5, 6), (3, 3, 3)]))
+def test_melt_rows_are_neighbourhoods(seed, shape):
+    # Property: interior grid point rows equal the exact neighbourhood.
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=shape).astype(np.float32)
+    window = (3,) * len(shape)
+    m = ref.melt_reflect(x, window)
+    # pick the most interior point
+    idx = tuple(s // 2 for s in shape)
+    if all(1 <= i < s - 1 for i, s in zip(idx, shape)):
+        flat = np.ravel_multi_index(idx, shape)
+        sl = tuple(slice(i - 1, i + 2) for i in idx)
+        np.testing.assert_allclose(m[flat], x[sl].ravel())

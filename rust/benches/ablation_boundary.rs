@@ -1,0 +1,44 @@
+//! Ablation (beyond the paper): boundary-mode cost of the melt operation.
+//! The per-axis contribution tables amortize boundary handling, so Reflect,
+//! Nearest and Wrap should be near-identical; Constant pays the sentinel
+//! check on the inner gather loop.
+//!
+//! Run: `cargo bench --bench ablation_boundary`
+
+use meltframe::bench_harness::{black_box, Measurement, Report};
+use meltframe::melt::grid::GridMode;
+use meltframe::melt::melt::{melt, BoundaryMode};
+use meltframe::melt::operator::Operator;
+use meltframe::tensor::dense::Tensor;
+
+fn main() {
+    let vol = Tensor::<f32>::synthetic_volume(&[48, 48, 48], 42);
+    let op = Operator::cubic(3, 3).unwrap();
+
+    let mut report = Report::new("Ablation — melt boundary modes, 48^3 volume, 3^3 window");
+    for (label, mode) in [
+        ("Reflect", BoundaryMode::Reflect),
+        ("Nearest", BoundaryMode::Nearest),
+        ("Wrap", BoundaryMode::Wrap),
+        ("Constant(0)", BoundaryMode::Constant(0.0)),
+    ] {
+        report.push(Measurement::run(label, 2, 10, || {
+            black_box(melt(&vol, &op, GridMode::Same, mode).unwrap())
+        }));
+    }
+    report.print(Some("Reflect"));
+
+    // grid-mode cost comparison on the same tensor
+    let mut grids = Report::new("Ablation — melt grid modes (Reflect boundary)");
+    for (label, gm) in [
+        ("Same", GridMode::Same),
+        ("Valid", GridMode::Valid),
+        ("Strided [2,2,2]", GridMode::Strided(vec![2, 2, 2])),
+    ] {
+        grids.push(Measurement::run(label, 2, 10, || {
+            black_box(melt(&vol, &op, gm.clone(), BoundaryMode::Reflect).unwrap())
+        }));
+    }
+    grids.print(Some("Same"));
+    println!("\nStrided [2,2,2] visits 1/8 of the grid points — expect ~8x over Same.");
+}

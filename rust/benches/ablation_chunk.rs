@@ -1,0 +1,36 @@
+//! Ablation (beyond the paper): chunk-size sweep for the work-stealing
+//! queue. DESIGN.md calls out the chunking policy as the main L3 tuning
+//! knob — too few chunks starves stealing under imbalance, too many pays
+//! queue + result-board overhead per chunk.
+//!
+//! Run: `cargo bench --bench ablation_chunk`
+
+use meltframe::bench_harness::{Measurement, Report};
+use meltframe::coordinator::pipeline::{run_job, ExecOptions};
+use meltframe::coordinator::plan::ChunkPolicy;
+use meltframe::coordinator::Job;
+use meltframe::tensor::dense::Tensor;
+
+fn main() {
+    let vol = Tensor::<f32>::synthetic_volume(&[48, 48, 48], 42);
+    // bilateral adaptive = the most imbalance-prone kernel (data-dependent)
+    let job = Job::bilateral_adaptive(&[3, 3, 3], 1.0, 2.0);
+    let workers = 4usize;
+    let rows = 48usize * 48 * 48;
+
+    let mut report = Report::new("Ablation — chunk rows vs compute time (bilateral adaptive, 4 workers)");
+    for chunk_rows in [rows / 4, rows / 16, rows / 64, rows / 256, 2048, 512] {
+        let opts = ExecOptions {
+            chunk_policy: Some(ChunkPolicy::Fixed { chunk_rows }),
+            ..ExecOptions::native(workers)
+        };
+        let label = format!("{chunk_rows} rows/chunk ({} chunks)", rows.div_ceil(chunk_rows));
+        report.push(Measurement::run(label, 2, 10, || {
+            let (_, m) = run_job(&vol, &job, &opts).unwrap();
+            m.compute
+        }));
+    }
+    report.print(None);
+    println!("\nexpected: a broad optimum at a few chunks per worker; very large chunks");
+    println!("lose stealing granularity, very small ones pay per-chunk overhead.");
+}

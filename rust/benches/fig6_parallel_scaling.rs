@@ -1,0 +1,92 @@
+//! Fig 6 reproduction: "benchmark test of a global Gaussian filter applied
+//! to an identical 3-dimensional tensor", Single / 2 / 3 / 4 parallel units,
+//! 20 repetitions, with initialization + partitioning time deducted.
+//!
+//! Two measurement modes:
+//!
+//! * **simulated units** (primary on this 1-core image — DESIGN.md
+//!   §Substitutions): every chunk is executed serially and timed; the chunk
+//!   stream is replayed through the greedy list scheduler that models the
+//!   work-stealing queue, and the makespan is the N-unit compute time.
+//! * **real threads** (meaningful on multicore hosts): the coordinator's
+//!   worker fleet with workers' self-reported compute window.
+//!
+//! Expectation (paper): a consistent decline in computing time with the
+//! number of units, sub-linear to the unit count.
+//!
+//! Run: `cargo bench --bench fig6_parallel_scaling`
+
+use std::time::Duration;
+
+use meltframe::bench_harness::{Measurement, Report};
+use meltframe::coordinator::pipeline::{run_job, ExecOptions};
+use meltframe::coordinator::plan::ChunkPolicy;
+use meltframe::coordinator::simulate::{list_schedule, run_job_timed_chunks};
+use meltframe::coordinator::Job;
+use meltframe::tensor::dense::Tensor;
+
+const REPS: usize = 20; // the paper's repetition count
+const SERIES: [(&str, usize); 4] = [("Single", 1), ("2Process", 2), ("3Process", 3), ("4Process", 4)];
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let vol = Tensor::<f32>::synthetic_volume(&[48, 48, 48], 42);
+    let job = Job::gaussian(&[3, 3, 3], 1.0);
+    let policy = ChunkPolicy::Fixed { chunk_rows: 4096 };
+
+    // ---- primary: simulated parallel units --------------------------------
+    // per repetition: serial timed chunk run, then makespans for all series
+    let mut samples: Vec<Vec<Duration>> = vec![Vec::with_capacity(REPS); SERIES.len()];
+    for _ in 0..2 {
+        run_job_timed_chunks(&vol, &job, policy).unwrap(); // warmup
+    }
+    for _ in 0..REPS {
+        let (_, durations) = run_job_timed_chunks(&vol, &job, policy).unwrap();
+        for (i, (_, units)) in SERIES.iter().enumerate() {
+            samples[i].push(list_schedule(&durations, *units).unwrap().makespan);
+        }
+    }
+    let mut sim = Report::new(
+        "Fig 6 — 3-D global gaussian 48^3, simulated parallel units (setup deducted)",
+    );
+    for (i, (label, _)) in SERIES.iter().enumerate() {
+        sim.push(Measurement {
+            label: label.to_string(),
+            samples: samples[i].clone(),
+        });
+    }
+    sim.print(Some("Single"));
+
+    let medians: Vec<f64> = sim.rows().iter().map(|m| m.median().as_secs_f64()).collect();
+    assert!(
+        medians.windows(2).all(|w| w[1] < w[0]),
+        "expected consistent decline with units, got {medians:?}"
+    );
+    println!(
+        "\nsimulated speedups vs Single: {}",
+        SERIES
+            .iter()
+            .enumerate()
+            .map(|(i, (l, _))| format!("{l} {:.2}x", medians[0] / medians[i]))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+
+    // ---- secondary: real worker threads ------------------------------------
+    println!("\nhost exposes {cores} core(s) — real-thread numbers below are only");
+    println!("meaningful when cores > 1 (this image: 1; see DESIGN.md §Substitutions).");
+    let mut real = Report::new("Fig 6 (real threads) — compute window across workers");
+    for (label, workers) in SERIES {
+        for _ in 0..2 {
+            run_job(&vol, &job, &ExecOptions::native(workers)).unwrap();
+        }
+        let s: Vec<Duration> = (0..REPS)
+            .map(|_| run_job(&vol, &job, &ExecOptions::native(workers)).unwrap().1.compute)
+            .collect();
+        real.push(Measurement {
+            label: label.to_string(),
+            samples: s,
+        });
+    }
+    real.print(Some("Single"));
+}

@@ -1,0 +1,68 @@
+//! Fig 8 companion bench: the backend-swap axis. The same coordinator jobs
+//! run on (a) the native rust broadcast kernels and (b) the AOT-compiled L1
+//! Pallas kernels through PJRT — same API, swapped compute backend, plus a
+//! chunk-level microbenchmark isolating the PJRT call overhead.
+//!
+//! Requires `make artifacts`; prints a skip notice otherwise.
+//!
+//! Run: `cargo bench --bench pjrt_vs_native`
+
+use meltframe::bench_harness::{black_box, Measurement, Report};
+use meltframe::coordinator::pipeline::{run_job, ExecOptions};
+use meltframe::coordinator::worker::JobResources;
+use meltframe::coordinator::Job;
+use meltframe::kernels::paradigm::apply_kernel_broadcast_into;
+use meltframe::runtime::executor::Engine;
+use meltframe::tensor::dense::Tensor;
+use meltframe::testing::SplitMix64;
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP: artifacts/manifest.json missing — run `make artifacts` first");
+        return;
+    }
+
+    // ---- end-to-end: coordinator jobs on both backends --------------------
+    let vol = Tensor::<f32>::synthetic_volume(&[40, 40, 40], 42);
+    let mut e2e = Report::new("Fig 8 — backend swap, gaussian 3^3 on 40^3 volume (2 workers)");
+    for (label, opts) in [
+        ("native", ExecOptions::native(2)),
+        ("pjrt", ExecOptions::pjrt(2, &dir)),
+    ] {
+        let job = Job::gaussian(&[3, 3, 3], 1.0);
+        // warm outside the timer (PJRT engine build is setup, not compute)
+        run_job(&vol, &job, &opts).unwrap();
+        e2e.push(Measurement::run(label, 1, 10, || {
+            let (_, m) = run_job(&vol, &job, &opts).unwrap();
+            m.compute
+        }));
+    }
+    e2e.print(Some("native"));
+
+    // ---- chunk-level: isolate the per-call overhead ------------------------
+    let engine = Engine::from_dir(&dir).unwrap();
+    let entry = engine.manifest().by_name("gaussian_w27").unwrap().clone();
+    let rows = entry.rows;
+    let mut rng = SplitMix64::new(1);
+    let block = rng.uniform_vec(rows * 27, 0.0, 255.0);
+    let res = JobResources::prepare(&Job::gaussian(&[3, 3, 3], 1.0)).unwrap();
+    let kernel = res.kernel.clone().unwrap();
+    let extra = res.extra_inputs();
+    engine.warmup(&entry.name).unwrap();
+
+    let mut chunk = Report::new(format!("chunk microbench — {rows} x 27 gaussian chunk"));
+    chunk.push(Measurement::run("native broadcast", 3, 20, || {
+        let mut out = vec![0.0f32; rows];
+        apply_kernel_broadcast_into(&block, rows, 27, &kernel, &mut out);
+        black_box(out)
+    }));
+    chunk.push(Measurement::run("pjrt execute_chunk", 3, 20, || {
+        black_box(engine.execute_chunk(&entry, &block, rows, &extra).unwrap())
+    }));
+    chunk.print(Some("native broadcast"));
+
+    println!("\nthe PJRT path carries literal-marshalling + dispatch overhead per chunk;");
+    println!("it buys the property that L1 kernel improvements (Pallas) flow to L3 with");
+    println!("no rust changes — the paper's Fig 8 interface-stability argument.");
+}

@@ -1,0 +1,63 @@
+//! Table 2 companion bench: the Hilbert-space generalization of the
+//! gaussian. Validates numerically that the k=1 multivariate N(x|μ,Σ) and
+//! its gradient degenerate exactly to the univariate closed forms, then
+//! times pdf+grad across dimensions k ∈ {1, 2, 3, 5, 8} — the cost of
+//! generality the paper's §2.2 "buckets effect" paragraph discusses.
+//!
+//! Run: `cargo bench --bench table2_gaussian`
+
+use meltframe::bench_harness::{black_box, Measurement, Report};
+use meltframe::stats::gaussian::{univariate_grad, univariate_pdf, MultivariateGaussian};
+use meltframe::stats::linalg::Mat;
+use meltframe::testing::SplitMix64;
+
+fn main() {
+    // --- correctness: Table 2's degeneration, at bench scale ---------------
+    let mut rng = SplitMix64::new(7);
+    let mut max_pdf_err = 0.0f64;
+    let mut max_grad_err = 0.0f64;
+    for _ in 0..10_000 {
+        let mu = rng.normal() as f64 * 3.0;
+        let sigma = 0.2 + rng.next_f64() * 4.0;
+        let x = rng.normal() as f64 * 5.0;
+        let g = MultivariateGaussian::isotropic(vec![mu], sigma).unwrap();
+        let p_err = (g.pdf(&[x]).unwrap() - univariate_pdf(x, mu, sigma)).abs();
+        let g_err = (g.grad(&[x]).unwrap()[0] - univariate_grad(x, mu, sigma)).abs();
+        max_pdf_err = max_pdf_err.max(p_err);
+        max_grad_err = max_grad_err.max(g_err);
+    }
+    println!("Table 2 degeneration over 10k random (x, mu, sigma):");
+    println!("  max |multivariate(k=1) - univariate| pdf  = {max_pdf_err:.3e}");
+    println!("  max |multivariate(k=1) - univariate| grad = {max_grad_err:.3e}");
+    assert!(max_pdf_err < 1e-12 && max_grad_err < 1e-12);
+
+    // --- cost of generality: pdf+grad across k -----------------------------
+    let mut report = Report::new("Table 2 — multivariate N(mu, Sigma) pdf+grad, 10k evals");
+    for k in [1usize, 2, 3, 5, 8] {
+        let mu: Vec<f64> = (0..k).map(|_| rng.normal() as f64).collect();
+        let mut a = Mat::zeros(k, k);
+        for r in 0..k {
+            for c in 0..k {
+                a.set(r, c, rng.normal() as f64);
+            }
+        }
+        let mut sigma = a.matmul(&a.transpose()).unwrap();
+        for i in 0..k {
+            sigma.set(i, i, sigma.at(i, i) + k as f64);
+        }
+        let g = MultivariateGaussian::new(mu, sigma).unwrap();
+        let xs: Vec<Vec<f64>> = (0..10_000)
+            .map(|_| (0..k).map(|_| rng.normal() as f64).collect())
+            .collect();
+        report.push(Measurement::run(format!("k = {k}"), 1, 10, || {
+            let mut acc = 0.0f64;
+            for x in &xs {
+                acc += g.pdf(x).unwrap() + g.grad(x).unwrap()[0];
+            }
+            black_box(acc)
+        }));
+    }
+    report.print(Some("k = 1"));
+    println!("\nthe univariate is a degenerate case, not a separate code path — one generic");
+    println!("implementation serves every k (paper Table 2 / §2.2).");
+}

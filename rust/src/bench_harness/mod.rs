@@ -1,0 +1,219 @@
+//! Measurement harness used by every `cargo bench` target (criterion is not
+//! in the vendored crate set — DESIGN.md §Substitutions).
+//!
+//! Methodology mirrors the paper's Fig 6 protocol: fixed repetition count
+//! (default 20, like the paper), explicit warmup, robust statistics
+//! (median/IQR alongside mean/sd), and per-repetition samples kept so
+//! benches can print beeswarm-style raw columns. Results render as a
+//! markdown table and machine-readable CSV lines prefixed `CSV,`.
+
+use std::time::{Duration, Instant};
+
+/// Samples of one measured case.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub label: String,
+    pub samples: Vec<Duration>,
+}
+
+impl Measurement {
+    /// Time `f` for `reps` repetitions after `warmup` unrecorded runs.
+    /// `f` returns a value that is black-boxed to keep the optimizer honest.
+    pub fn run<T>(label: impl Into<String>, warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Self {
+        for _ in 0..warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed());
+        }
+        Self {
+            label: label.into(),
+            samples,
+        }
+    }
+
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len().max(1) as u32
+    }
+
+    pub fn std_dev(&self) -> Duration {
+        if self.samples.len() < 2 {
+            return Duration::ZERO;
+        }
+        let mean = self.mean().as_secs_f64();
+        let var = self
+            .samples
+            .iter()
+            .map(|s| {
+                let d = s.as_secs_f64() - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        Duration::from_secs_f64(var.sqrt())
+    }
+
+    fn sorted_secs(&self) -> Vec<f64> {
+        let mut v: Vec<f64> = self.samples.iter().map(|s| s.as_secs_f64()).collect();
+        v.sort_by(f64::total_cmp);
+        v
+    }
+
+    pub fn median(&self) -> Duration {
+        let v = self.sorted_secs();
+        let n = v.len();
+        let m = if n % 2 == 1 {
+            v[n / 2]
+        } else {
+            (v[n / 2 - 1] + v[n / 2]) / 2.0
+        };
+        Duration::from_secs_f64(m)
+    }
+
+    /// (q1, q3) interquartile bounds.
+    pub fn iqr(&self) -> (Duration, Duration) {
+        let v = self.sorted_secs();
+        let q = |p: f64| {
+            let pos = p * (v.len() - 1) as f64;
+            let lo = pos.floor() as usize;
+            let hi = pos.ceil() as usize;
+            let w = pos - lo as f64;
+            Duration::from_secs_f64(v[lo] * (1.0 - w) + v[hi] * w)
+        };
+        (q(0.25), q(0.75))
+    }
+
+    pub fn min(&self) -> Duration {
+        self.samples.iter().min().copied().unwrap_or_default()
+    }
+}
+
+/// Defeat constant folding without the unstable `std::hint::black_box`
+/// semantics question — a volatile read through a pointer.
+pub fn black_box<T>(x: T) -> T {
+    unsafe {
+        let y = std::ptr::read_volatile(&x);
+        std::mem::forget(x);
+        y
+    }
+}
+
+/// A titled group of measurements with table/CSV rendering.
+pub struct Report {
+    title: String,
+    rows: Vec<Measurement>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>) -> Self {
+        Self {
+            title: title.into(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, m: Measurement) {
+        self.rows.push(m);
+    }
+
+    pub fn rows(&self) -> &[Measurement] {
+        &self.rows
+    }
+
+    /// Render the markdown table + CSV lines to stdout. `baseline` (a label)
+    /// adds a relative-speedup column.
+    pub fn print(&self, baseline: Option<&str>) {
+        println!("\n## {}\n", self.title);
+        let base = baseline
+            .and_then(|b| self.rows.iter().find(|m| m.label == b))
+            .map(|m| m.median().as_secs_f64());
+        println!("| case | mean | sd | median | q1 | q3 | min | speedup |");
+        println!("|---|---|---|---|---|---|---|---|");
+        for m in &self.rows {
+            let (q1, q3) = m.iqr();
+            let speedup = base
+                .map(|b| format!("{:.2}x", b / m.median().as_secs_f64()))
+                .unwrap_or_else(|| "-".into());
+            println!(
+                "| {} | {:.3?} | {:.3?} | {:.3?} | {:.3?} | {:.3?} | {:.3?} | {} |",
+                m.label,
+                m.mean(),
+                m.std_dev(),
+                m.median(),
+                q1,
+                q3,
+                m.min(),
+                speedup
+            );
+        }
+        for m in &self.rows {
+            let samples: Vec<String> = m
+                .samples
+                .iter()
+                .map(|s| format!("{:.6}", s.as_secs_f64()))
+                .collect();
+            println!("CSV,{},{},{}", self.title, m.label, samples.join(","));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_collects_samples() {
+        let m = Measurement::run("noop", 2, 5, || 1 + 1);
+        assert_eq!(m.samples.len(), 5);
+        assert!(m.mean() >= m.min());
+        assert!(m.median() >= m.min());
+    }
+
+    #[test]
+    fn stats_on_known_samples() {
+        let m = Measurement {
+            label: "x".into(),
+            samples: vec![
+                Duration::from_millis(10),
+                Duration::from_millis(20),
+                Duration::from_millis(30),
+                Duration::from_millis(40),
+            ],
+        };
+        assert_eq!(m.mean(), Duration::from_millis(25));
+        assert_eq!(m.median(), Duration::from_millis(25));
+        assert_eq!(m.min(), Duration::from_millis(10));
+        let (q1, q3) = m.iqr();
+        assert!(q1 < m.median() && m.median() < q3);
+    }
+
+    #[test]
+    fn std_dev_zero_for_single_sample() {
+        let m = Measurement {
+            label: "x".into(),
+            samples: vec![Duration::from_millis(5)],
+        };
+        assert_eq!(m.std_dev(), Duration::ZERO);
+    }
+
+    #[test]
+    fn ordering_reflects_cost() {
+        // data-dependent workloads so the optimizer cannot fold them
+        let small = black_box(vec![1.0f64; 100]);
+        let large = black_box(vec![1.0f64; 4_000_000]);
+        let fast = Measurement::run("fast", 1, 5, || small.iter().sum::<f64>());
+        let slow = Measurement::run("slow", 1, 5, || large.iter().sum::<f64>());
+        assert!(slow.median() > fast.median());
+    }
+
+    #[test]
+    fn black_box_returns_value() {
+        assert_eq!(black_box(42), 42);
+        let v = black_box(vec![1, 2, 3]);
+        assert_eq!(v.len(), 3);
+    }
+}

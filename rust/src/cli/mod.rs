@@ -1,0 +1,177 @@
+//! Command-line front end (hand-rolled — clap is not vendored).
+//!
+//! Subcommands:
+//!   run <config.toml> [--out out.npy]      run a configured pipeline
+//!   inspect [--artifacts DIR]              list artifacts + PJRT platform
+//!   demo [--workers N] [--backend B]       built-in Fig 6 style demo run
+//!
+//! `parse_args` is pure (testable); `main.rs` wires it to the process.
+
+use std::path::PathBuf;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Command {
+    Run {
+        config: PathBuf,
+        out: Option<PathBuf>,
+    },
+    Inspect {
+        artifacts: PathBuf,
+    },
+    Demo {
+        workers: usize,
+        backend: String,
+        artifacts: PathBuf,
+    },
+    Help,
+}
+
+pub const USAGE: &str = "\
+meltframe — melt-matrix array programming with parallel acceleration
+
+USAGE:
+    meltframe run <config.toml> [--out <file.npy>]
+    meltframe inspect [--artifacts <dir>]
+    meltframe demo [--workers <n>] [--backend native|pjrt] [--artifacts <dir>]
+    meltframe help
+";
+
+/// Parse argv (without the program name).
+pub fn parse_args(args: &[String]) -> Result<Command> {
+    let mut it = args.iter();
+    let cmd = match it.next().map(String::as_str) {
+        None | Some("help") | Some("--help") | Some("-h") => return Ok(Command::Help),
+        Some(c) => c,
+    };
+    match cmd {
+        "run" => {
+            let mut config = None;
+            let mut out = None;
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--out" => {
+                        out = Some(PathBuf::from(expect_value(&mut it, "--out")?));
+                    }
+                    flag if flag.starts_with("--") => {
+                        return Err(Error::Config(format!("unknown flag '{flag}' for run")))
+                    }
+                    positional => {
+                        if config.replace(PathBuf::from(positional)).is_some() {
+                            return Err(Error::Config("run takes one config file".into()));
+                        }
+                    }
+                }
+            }
+            Ok(Command::Run {
+                config: config.ok_or_else(|| Error::Config("run requires a config file".into()))?,
+                out,
+            })
+        }
+        "inspect" => {
+            let mut artifacts = PathBuf::from("artifacts");
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--artifacts" => artifacts = PathBuf::from(expect_value(&mut it, "--artifacts")?),
+                    other => return Err(Error::Config(format!("unknown argument '{other}'"))),
+                }
+            }
+            Ok(Command::Inspect { artifacts })
+        }
+        "demo" => {
+            let mut workers = 4usize;
+            let mut backend = "native".to_string();
+            let mut artifacts = PathBuf::from("artifacts");
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--workers" => {
+                        workers = expect_value(&mut it, "--workers")?
+                            .parse()
+                            .map_err(|_| Error::Config("--workers expects a number".into()))?;
+                    }
+                    "--backend" => backend = expect_value(&mut it, "--backend")?.to_string(),
+                    "--artifacts" => artifacts = PathBuf::from(expect_value(&mut it, "--artifacts")?),
+                    other => return Err(Error::Config(format!("unknown argument '{other}'"))),
+                }
+            }
+            if backend != "native" && backend != "pjrt" {
+                return Err(Error::Config(format!("unknown backend '{backend}'")));
+            }
+            Ok(Command::Demo {
+                workers,
+                backend,
+                artifacts,
+            })
+        }
+        other => Err(Error::Config(format!(
+            "unknown command '{other}'\n{USAGE}"
+        ))),
+    }
+}
+
+fn expect_value<'a>(
+    it: &mut std::slice::Iter<'a, String>,
+    flag: &str,
+) -> Result<&'a String> {
+    it.next()
+        .ok_or_else(|| Error::Config(format!("{flag} expects a value")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_run() {
+        let c = parse_args(&argv("run pipeline.toml --out result.npy")).unwrap();
+        assert_eq!(
+            c,
+            Command::Run {
+                config: PathBuf::from("pipeline.toml"),
+                out: Some(PathBuf::from("result.npy")),
+            }
+        );
+    }
+
+    #[test]
+    fn parses_inspect_and_demo() {
+        assert_eq!(
+            parse_args(&argv("inspect --artifacts build/artifacts")).unwrap(),
+            Command::Inspect {
+                artifacts: PathBuf::from("build/artifacts")
+            }
+        );
+        assert_eq!(
+            parse_args(&argv("demo --workers 2 --backend pjrt")).unwrap(),
+            Command::Demo {
+                workers: 2,
+                backend: "pjrt".into(),
+                artifacts: PathBuf::from("artifacts"),
+            }
+        );
+    }
+
+    #[test]
+    fn help_variants() {
+        for v in ["", "help", "--help", "-h"] {
+            assert_eq!(parse_args(&argv(v)).unwrap(), Command::Help);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_args(&argv("run")).is_err());
+        assert!(parse_args(&argv("run a.toml b.toml")).is_err());
+        assert!(parse_args(&argv("run a.toml --bogus")).is_err());
+        assert!(parse_args(&argv("demo --workers abc")).is_err());
+        assert!(parse_args(&argv("demo --backend cuda")).is_err());
+        assert!(parse_args(&argv("frobnicate")).is_err());
+        assert!(parse_args(&argv("run a.toml --out")).is_err());
+    }
+}

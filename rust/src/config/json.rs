@@ -1,0 +1,344 @@
+//! Minimal recursive-descent JSON parser (objects, arrays, strings, numbers,
+//! bools, null) — enough for `artifacts/manifest.json` and test fixtures.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Number(f64),
+    String(String),
+    Array(Vec<JsonValue>),
+    Object(BTreeMap<String, JsonValue>),
+}
+
+impl JsonValue {
+    /// Parse a complete JSON document.
+    pub fn parse(text: &str) -> Result<JsonValue> {
+        let mut p = Parser {
+            bytes: text.as_bytes(),
+            pos: 0,
+        };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(Error::Format(format!(
+                "trailing garbage at byte {} of JSON document",
+                p.pos
+            )));
+        }
+        Ok(v)
+    }
+
+    pub fn as_object(&self) -> Result<&BTreeMap<String, JsonValue>> {
+        match self {
+            JsonValue::Object(m) => Ok(m),
+            other => Err(Error::Format(format!("expected object, got {other:?}"))),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&[JsonValue]> {
+        match self {
+            JsonValue::Array(a) => Ok(a),
+            other => Err(Error::Format(format!("expected array, got {other:?}"))),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            JsonValue::String(s) => Ok(s),
+            other => Err(Error::Format(format!("expected string, got {other:?}"))),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            JsonValue::Number(n) if *n >= 0.0 && n.fract() == 0.0 => Ok(*n as usize),
+            other => Err(Error::Format(format!("expected unsigned integer, got {other:?}"))),
+        }
+    }
+
+    /// Field lookup on an object.
+    pub fn field(&self, key: &str) -> Result<&JsonValue> {
+        self.as_object()?
+            .get(key)
+            .ok_or_else(|| Error::Format(format!("missing field '{key}'")))
+    }
+
+    /// usize vector from a JSON array of integers.
+    pub fn as_usize_vec(&self) -> Result<Vec<usize>> {
+        self.as_array()?.iter().map(|v| v.as_usize()).collect()
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(Error::Format(format!(
+                "expected '{}' at byte {}, found {:?}",
+                b as char,
+                self.pos,
+                self.peek().map(|c| c as char)
+            )))
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonValue> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(JsonValue::String(self.string()?)),
+            Some(b't') => self.literal("true", JsonValue::Bool(true)),
+            Some(b'f') => self.literal("false", JsonValue::Bool(false)),
+            Some(b'n') => self.literal("null", JsonValue::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => Err(Error::Format(format!(
+                "unexpected {:?} at byte {}",
+                other.map(|c| c as char),
+                self.pos
+            ))),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: JsonValue) -> Result<JsonValue> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(Error::Format(format!("bad literal at byte {}", self.pos)))
+        }
+    }
+
+    fn object(&mut self) -> Result<JsonValue> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(JsonValue::Object(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Object(map));
+                }
+                other => {
+                    return Err(Error::Format(format!(
+                        "expected ',' or '}}' in object, found {:?}",
+                        other.map(|c| c as char)
+                    )))
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<JsonValue> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(JsonValue::Array(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Array(items));
+                }
+                other => {
+                    return Err(Error::Format(format!(
+                        "expected ',' or ']' in array, found {:?}",
+                        other.map(|c| c as char)
+                    )))
+                }
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(Error::Format("unterminated string".into())),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'u') => {
+                            // \uXXXX basic-plane escapes
+                            if self.pos + 4 >= self.bytes.len() {
+                                return Err(Error::Format("truncated \\u escape".into()));
+                            }
+                            let hex = std::str::from_utf8(&self.bytes[self.pos + 1..self.pos + 5])
+                                .map_err(|_| Error::Format("bad \\u escape".into()))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| Error::Format("bad \\u escape".into()))?;
+                            out.push(
+                                char::from_u32(code)
+                                    .ok_or_else(|| Error::Format("invalid codepoint".into()))?,
+                            );
+                            self.pos += 4;
+                        }
+                        other => {
+                            return Err(Error::Format(format!(
+                                "unsupported escape {:?}",
+                                other.map(|c| c as char)
+                            )))
+                        }
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // consume one UTF-8 scalar
+                    let s = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| Error::Format("invalid utf-8 in string".into()))?;
+                    let ch = s.chars().next().unwrap();
+                    out.push(ch);
+                    self.pos += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonValue> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || c == b'.' || c == b'e' || c == b'E' || c == b'+' || c == b'-' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        text.parse::<f64>()
+            .map(JsonValue::Number)
+            .map_err(|_| Error::Format(format!("bad number '{text}'")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_like_document() {
+        let doc = r#"{
+            "chunk_rows": 2048,
+            "dtype": "f32",
+            "artifacts": [
+                {"name": "gaussian_w27", "window": [3, 3, 3], "inputs": [[2048, 27], [27]]}
+            ]
+        }"#;
+        let v = JsonValue::parse(doc).unwrap();
+        assert_eq!(v.field("chunk_rows").unwrap().as_usize().unwrap(), 2048);
+        let arts = v.field("artifacts").unwrap().as_array().unwrap();
+        assert_eq!(arts[0].field("name").unwrap().as_str().unwrap(), "gaussian_w27");
+        assert_eq!(
+            arts[0].field("window").unwrap().as_usize_vec().unwrap(),
+            vec![3, 3, 3]
+        );
+    }
+
+    #[test]
+    fn scalar_values() {
+        assert_eq!(JsonValue::parse("true").unwrap(), JsonValue::Bool(true));
+        assert_eq!(JsonValue::parse("null").unwrap(), JsonValue::Null);
+        assert_eq!(JsonValue::parse("-2.5e2").unwrap(), JsonValue::Number(-250.0));
+        assert_eq!(
+            JsonValue::parse(r#""a\nbA""#).unwrap(),
+            JsonValue::String("a\nbA".into())
+        );
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(JsonValue::parse("[]").unwrap(), JsonValue::Array(vec![]));
+        assert_eq!(
+            JsonValue::parse("{}").unwrap(),
+            JsonValue::Object(Default::default())
+        );
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(JsonValue::parse("{").is_err());
+        assert!(JsonValue::parse("[1, 2,]").is_err());
+        assert!(JsonValue::parse("{'single': 1}").is_err());
+        assert!(JsonValue::parse("1 2").is_err());
+        assert!(JsonValue::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn typed_accessors_reject_mismatches() {
+        let v = JsonValue::parse(r#"{"a": 1.5, "b": [1, "x"]}"#).unwrap();
+        assert!(v.field("a").unwrap().as_usize().is_err()); // fractional
+        assert!(v.field("b").unwrap().as_usize_vec().is_err()); // mixed
+        assert!(v.field("missing").is_err());
+        assert!(v.field("a").unwrap().as_str().is_err());
+    }
+
+    #[test]
+    fn nested_depth() {
+        let v = JsonValue::parse(r#"[[[[1]]]]"#).unwrap();
+        let inner = v.as_array().unwrap()[0].as_array().unwrap()[0].as_array().unwrap()[0]
+            .as_array()
+            .unwrap()[0]
+            .as_usize()
+            .unwrap();
+        assert_eq!(inner, 1);
+    }
+}

@@ -1,0 +1,13 @@
+//! Configuration: a minimal JSON parser for the AOT artifact manifest and a
+//! TOML-subset parser for run configs, plus the typed config structs.
+//!
+//! Hand-rolled because the vendored crate set has no serde (DESIGN.md
+//! §Substitutions); both grammars are restricted to exactly what this
+//! project emits, and both parsers reject anything outside it loudly.
+
+pub mod json;
+pub mod spec;
+pub mod toml;
+
+pub use json::JsonValue;
+pub use spec::RunConfig;

@@ -1,0 +1,296 @@
+//! Typed run configuration: parses a TOML-subset file into the coordinator's
+//! `Job` + `ExecOptions` (the config system behind `meltframe run`).
+//!
+//! ```toml
+//! workers = 4
+//! backend = "native"          # or "pjrt"
+//! artifacts = "artifacts"     # pjrt only
+//!
+//! [input]
+//! kind = "volume"             # volume | image | mask | npy
+//! dims = [48, 48, 48]
+//! seed = 42
+//! # path = "input.npy"        # kind = "npy"
+//!
+//! [[job]] is spelled [job.1], [job.2], ... (subset grammar has no arrays
+//! of tables); stages run in order.
+//! [job.1]
+//! kind = "gaussian"
+//! window = [3, 3, 3]
+//! sigma = 1.0
+//! ```
+
+use std::path::PathBuf;
+
+use crate::config::toml::TomlDoc;
+use crate::coordinator::job::{Backend, Job};
+use crate::coordinator::pipeline::ExecOptions;
+use crate::error::{Error, Result};
+use crate::tensor::dense::Tensor;
+
+/// Fully resolved run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub options: ExecOptions,
+    pub input: InputSpec,
+    pub jobs: Vec<Job>,
+}
+
+/// Where the input tensor comes from.
+#[derive(Clone, Debug, PartialEq)]
+pub enum InputSpec {
+    SyntheticVolume { dims: Vec<usize>, seed: u64 },
+    SyntheticImage { dims: [usize; 2], seed: u64 },
+    SegmentationMask { dims: [usize; 2] },
+    Npy { path: PathBuf },
+}
+
+impl InputSpec {
+    /// Materialize the tensor.
+    pub fn load(&self) -> Result<Tensor<f32>> {
+        match self {
+            InputSpec::SyntheticVolume { dims, seed } => {
+                if dims.len() != 3 {
+                    return Err(Error::Config(format!("volume dims must be 3-D: {dims:?}")));
+                }
+                Ok(Tensor::synthetic_volume(dims, *seed))
+            }
+            InputSpec::SyntheticImage { dims, seed } => Ok(Tensor::synthetic_image(dims, *seed)),
+            InputSpec::SegmentationMask { dims } => Ok(Tensor::segmentation_mask(dims)),
+            InputSpec::Npy { path } => crate::tensor::npy::load(path),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse a config document.
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+
+        let workers = doc
+            .get("", "workers")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(1);
+        let backend = match doc.get("", "backend").map(|v| v.as_str()).transpose()? {
+            None | Some("native") => Backend::Native,
+            Some("pjrt") => Backend::Pjrt,
+            Some(other) => {
+                return Err(Error::Config(format!(
+                    "unknown backend '{other}' (native|pjrt)"
+                )))
+            }
+        };
+        let artifact_dir = doc
+            .get("", "artifacts")
+            .map(|v| v.as_str().map(PathBuf::from))
+            .transpose()?;
+        if backend == Backend::Pjrt && artifact_dir.is_none() {
+            return Err(Error::Config("backend = \"pjrt\" requires artifacts = \"<dir>\"".into()));
+        }
+
+        let input = Self::parse_input(&doc)?;
+        let jobs = Self::parse_jobs(&doc)?;
+        Ok(Self {
+            options: ExecOptions {
+                workers,
+                backend,
+                artifact_dir,
+                chunk_policy: None,
+            },
+            input,
+            jobs,
+        })
+    }
+
+    /// Read + parse a config file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    fn parse_input(doc: &TomlDoc) -> Result<InputSpec> {
+        let kind = doc.require("input", "kind")?.as_str()?.to_string();
+        let seed = doc
+            .get("input", "seed")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(42) as u64;
+        match kind.as_str() {
+            "volume" => Ok(InputSpec::SyntheticVolume {
+                dims: doc.require("input", "dims")?.as_usize_vec()?,
+                seed,
+            }),
+            "image" => {
+                let dims = doc.require("input", "dims")?.as_usize_vec()?;
+                if dims.len() != 2 {
+                    return Err(Error::Config(format!("image dims must be 2-D: {dims:?}")));
+                }
+                Ok(InputSpec::SyntheticImage {
+                    dims: [dims[0], dims[1]],
+                    seed,
+                })
+            }
+            "mask" => {
+                let dims = doc.require("input", "dims")?.as_usize_vec()?;
+                if dims.len() != 2 {
+                    return Err(Error::Config(format!("mask dims must be 2-D: {dims:?}")));
+                }
+                Ok(InputSpec::SegmentationMask {
+                    dims: [dims[0], dims[1]],
+                })
+            }
+            "npy" => Ok(InputSpec::Npy {
+                path: PathBuf::from(doc.require("input", "path")?.as_str()?),
+            }),
+            other => Err(Error::Config(format!(
+                "unknown input kind '{other}' (volume|image|mask|npy)"
+            ))),
+        }
+    }
+
+    fn parse_jobs(doc: &TomlDoc) -> Result<Vec<Job>> {
+        let mut stages: Vec<(usize, String)> = doc
+            .sections()
+            .filter_map(|s| {
+                s.strip_prefix("job.")
+                    .and_then(|n| n.parse::<usize>().ok())
+                    .map(|n| (n, s.clone()))
+            })
+            .collect();
+        if stages.is_empty() && doc.sections().any(|s| s == "job") {
+            stages.push((1, "job".to_string()));
+        }
+        if stages.is_empty() {
+            return Err(Error::Config("no [job] or [job.N] sections".into()));
+        }
+        stages.sort();
+        stages
+            .into_iter()
+            .map(|(_, section)| Self::parse_job(doc, &section))
+            .collect()
+    }
+
+    fn parse_job(doc: &TomlDoc, section: &str) -> Result<Job> {
+        let kind = doc.require(section, "kind")?.as_str()?.to_string();
+        let window = doc.require(section, "window")?.as_usize_vec()?;
+        let getf = |key: &str| -> Result<f32> { doc.require(section, key)?.as_f32() };
+        let job = match kind.as_str() {
+            "gaussian" => Job::gaussian(&window, getf("sigma")?),
+            "bilateral_const" => Job::bilateral_const(&window, getf("sigma_d")?, getf("sigma_r")?),
+            "bilateral_adaptive" => {
+                Job::bilateral_adaptive(&window, getf("sigma_d")?, getf("floor")?)
+            }
+            "curvature" => Job::curvature(&window),
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown job kind '{other}' (gaussian|bilateral_const|bilateral_adaptive|curvature)"
+                )))
+            }
+        };
+        job.operator()?; // validate now, not at run time
+        Ok(job)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::FilterKind;
+
+    const SAMPLE: &str = r#"
+        workers = 3
+        backend = "native"
+        [input]
+        kind = "volume"
+        dims = [16, 16, 16]
+        seed = 7
+        [job.1]
+        kind = "gaussian"
+        window = [3, 3, 3]
+        sigma = 1.0
+        [job.2]
+        kind = "curvature"
+        window = [3, 3, 3]
+    "#;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = RunConfig::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.options.workers, 3);
+        assert_eq!(cfg.options.backend, Backend::Native);
+        assert_eq!(cfg.jobs.len(), 2);
+        assert!(matches!(cfg.jobs[0].kind, FilterKind::Gaussian { .. }));
+        assert!(matches!(cfg.jobs[1].kind, FilterKind::Curvature));
+        let x = cfg.input.load().unwrap();
+        assert_eq!(x.shape(), &[16, 16, 16]);
+    }
+
+    #[test]
+    fn single_job_section() {
+        let cfg = RunConfig::parse(
+            r#"
+            [input]
+            kind = "image"
+            dims = [32, 32]
+            [job]
+            kind = "bilateral_const"
+            window = [5, 5]
+            sigma_d = 1.5
+            sigma_r = 30.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.jobs.len(), 1);
+        assert_eq!(cfg.options.workers, 1); // default
+    }
+
+    #[test]
+    fn stage_ordering_is_numeric() {
+        let cfg = RunConfig::parse(
+            r#"
+            [input]
+            kind = "mask"
+            dims = [8, 8]
+            [job.2]
+            kind = "curvature"
+            window = [3, 3]
+            [job.1]
+            kind = "gaussian"
+            window = [3, 3]
+            sigma = 0.8
+            "#,
+        )
+        .unwrap();
+        assert!(matches!(cfg.jobs[0].kind, FilterKind::Gaussian { .. }));
+        assert!(matches!(cfg.jobs[1].kind, FilterKind::Curvature));
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        // pjrt without artifacts dir
+        assert!(RunConfig::parse(
+            "backend = \"pjrt\"\n[input]\nkind = \"mask\"\ndims = [8, 8]\n[job]\nkind = \"curvature\"\nwindow = [3, 3]"
+        )
+        .is_err());
+        // unknown kind
+        assert!(RunConfig::parse(
+            "[input]\nkind = \"mask\"\ndims = [8, 8]\n[job]\nkind = \"sobel\"\nwindow = [3, 3]"
+        )
+        .is_err());
+        // missing jobs
+        assert!(RunConfig::parse("[input]\nkind = \"mask\"\ndims = [8, 8]").is_err());
+        // even window caught at parse time
+        assert!(RunConfig::parse(
+            "[input]\nkind = \"mask\"\ndims = [8, 8]\n[job]\nkind = \"curvature\"\nwindow = [4, 4]"
+        )
+        .is_err());
+        // 2-D volume dims
+        assert!(RunConfig::parse(
+            "[input]\nkind = \"volume\"\ndims = [8, 8]\n[job]\nkind = \"curvature\"\nwindow = [3, 3]"
+        )
+        .unwrap()
+        .input
+        .load()
+        .is_err());
+    }
+}

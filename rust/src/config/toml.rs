@@ -1,0 +1,272 @@
+//! TOML-subset parser for run configs: `[sections]`, `key = value` with
+//! strings, integers, floats, booleans, and homogeneous arrays. Comments
+//! with `#`. No nested tables, no multi-line strings — run configs don't
+//! need them, and anything outside the subset errors with a line number.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed scalar/array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    String(String),
+    Integer(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::String(s) => Ok(s),
+            other => Err(Error::Config(format!("expected string, got {other:?}"))),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            TomlValue::Integer(i) if *i >= 0 => Ok(*i as usize),
+            other => Err(Error::Config(format!("expected unsigned integer, got {other:?}"))),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<f32> {
+        match self {
+            TomlValue::Float(f) => Ok(*f as f32),
+            TomlValue::Integer(i) => Ok(*i as f32),
+            other => Err(Error::Config(format!("expected number, got {other:?}"))),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => Err(Error::Config(format!("expected bool, got {other:?}"))),
+        }
+    }
+
+    pub fn as_usize_vec(&self) -> Result<Vec<usize>> {
+        match self {
+            TomlValue::Array(items) => items.iter().map(|v| v.as_usize()).collect(),
+            other => Err(Error::Config(format!("expected array, got {other:?}"))),
+        }
+    }
+}
+
+/// Parsed document: section name ("" for top level) -> key -> value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::Config(format!("line {}: unterminated section", lineno + 1)))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(Error::Config(format!("line {}: empty section name", lineno + 1)));
+                }
+                section = name.to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected 'key = value'", lineno + 1))
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(Error::Config(format!("line {}: empty key", lineno + 1)));
+            }
+            let value = parse_value(value.trim())
+                .map_err(|e| Error::Config(format!("line {}: {e}", lineno + 1)))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    /// Look up `section.key`; section "" is the top level.
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    /// Required lookup with a config error naming the path.
+    pub fn require(&self, section: &str, key: &str) -> Result<&TomlValue> {
+        self.get(section, key).ok_or_else(|| {
+            Error::Config(format!(
+                "missing config key '{}{}{}'",
+                section,
+                if section.is_empty() { "" } else { "." },
+                key
+            ))
+        })
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside a string starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<TomlValue> {
+    if text.is_empty() {
+        return Err(Error::Config("empty value".into()));
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| Error::Config(format!("unterminated string {text}")))?;
+        if inner.contains('"') {
+            return Err(Error::Config(format!("embedded quote in {text}")));
+        }
+        return Ok(TomlValue::String(inner.to_string()));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| Error::Config(format!("unterminated array {text}")))?;
+        let items: Vec<TomlValue> = split_top_level(inner)
+            .into_iter()
+            .map(|s| parse_value(s.trim()))
+            .collect::<Result<_>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if text.contains('.') || text.contains('e') || text.contains('E') {
+        if let Ok(f) = text.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    if let Ok(i) = text.parse::<i64>() {
+        return Ok(TomlValue::Integer(i));
+    }
+    Err(Error::Config(format!("cannot parse value '{text}'")))
+}
+
+fn split_top_level(text: &str) -> Vec<&str> {
+    // split on commas not inside nested brackets or strings
+    let mut out = Vec::new();
+    let (mut depth, mut in_str, mut start) = (0i32, false, 0usize);
+    for (i, c) in text.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                out.push(&text[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if !text[start..].trim().is_empty() {
+        out.push(&text[start..]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_run_config() {
+        let doc = TomlDoc::parse(
+            r#"
+            # pipeline run
+            workers = 4
+            [job]
+            kind = "bilateral_const"   # Fig 3 panel c
+            window = [5, 5]
+            sigma_r = 30.0
+            adaptive = false
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.require("", "workers").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(doc.require("job", "kind").unwrap().as_str().unwrap(), "bilateral_const");
+        assert_eq!(doc.require("job", "window").unwrap().as_usize_vec().unwrap(), vec![5, 5]);
+        assert_eq!(doc.require("job", "sigma_r").unwrap().as_f32().unwrap(), 30.0);
+        assert!(!doc.require("job", "adaptive").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn missing_key_names_path() {
+        let doc = TomlDoc::parse("[a]\nx = 1").unwrap();
+        let err = doc.require("a", "y").unwrap_err().to_string();
+        assert!(err.contains("a.y"), "{err}");
+    }
+
+    #[test]
+    fn value_types() {
+        assert_eq!(parse_value("42").unwrap(), TomlValue::Integer(42));
+        assert_eq!(parse_value("-1").unwrap(), TomlValue::Integer(-1));
+        assert_eq!(parse_value("2.5").unwrap(), TomlValue::Float(2.5));
+        assert_eq!(parse_value("1e3").unwrap(), TomlValue::Float(1000.0));
+        assert_eq!(parse_value("true").unwrap(), TomlValue::Bool(true));
+        assert_eq!(
+            parse_value("[1, 2, 3]").unwrap(),
+            TomlValue::Array(vec![
+                TomlValue::Integer(1),
+                TomlValue::Integer(2),
+                TomlValue::Integer(3)
+            ])
+        );
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let v = parse_value("[[1, 2], [3]]").unwrap();
+        if let TomlValue::Array(outer) = v {
+            assert_eq!(outer.len(), 2);
+            assert_eq!(outer[1], TomlValue::Array(vec![TomlValue::Integer(3)]));
+        } else {
+            panic!("not an array");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("no equals sign").is_err());
+        assert!(TomlDoc::parse("x = ").is_err());
+        assert!(TomlDoc::parse("x = \"open").is_err());
+        assert!(TomlDoc::parse("[]").is_err());
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let doc = TomlDoc::parse("x = \"a#b\" # trailing").unwrap();
+        assert_eq!(doc.require("", "x").unwrap().as_str().unwrap(), "a#b");
+    }
+}

@@ -1,0 +1,65 @@
+//! Aggregation: chunk results -> grid tensor, plus partition-exact
+//! statistics over results (the §2.4 aggregation-function path).
+
+use crate::error::Result;
+use crate::melt::fold::fold_partitions;
+use crate::melt::partition::RowPartition;
+use crate::stats::descriptive::{moments, Moments};
+use crate::tensor::dense::Tensor;
+
+/// Reassemble chunk outputs (in partition order) into the grid tensor.
+pub fn assemble(
+    chunks: &[Vec<f32>],
+    partition: &RowPartition,
+    grid_shape: &[usize],
+) -> Result<Tensor<f32>> {
+    fold_partitions(chunks, partition.ranges(), grid_shape)
+}
+
+/// Merge per-chunk moments into the global statistics without touching the
+/// assembled tensor — the MapReduce-style combine the paper contrasts with
+/// sample-determined statistics.
+pub fn merged_moments(chunks: &[Vec<f32>]) -> Moments {
+    chunks
+        .iter()
+        .map(|c| moments(c))
+        .fold(Moments::new(), |acc, m| acc.merge(&m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check_property, SplitMix64};
+
+    #[test]
+    fn assemble_round_trips() {
+        let partition = RowPartition::even(10, 3).unwrap();
+        let data: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let chunks: Vec<Vec<f32>> = partition
+            .ranges()
+            .iter()
+            .map(|r| data[r.clone()].to_vec())
+            .collect();
+        let t = assemble(&chunks, &partition, &[2, 5]).unwrap();
+        assert_eq!(t.data(), &data[..]);
+    }
+
+    #[test]
+    fn merged_moments_equal_global_property() {
+        check_property("chunked moments == global", 25, |rng: &mut SplitMix64| {
+            let n = 10 + rng.below(300);
+            let data = rng.uniform_vec(n, -50.0, 50.0);
+            let partition = RowPartition::even(n, 1 + rng.below(6)).unwrap();
+            let chunks: Vec<Vec<f32>> = partition
+                .ranges()
+                .iter()
+                .map(|r| data[r.clone()].to_vec())
+                .collect();
+            let merged = merged_moments(&chunks);
+            let global = moments(&data);
+            assert_eq!(merged.count, global.count);
+            assert!((merged.mean - global.mean).abs() < 1e-8);
+            assert!((merged.variance() - global.variance()).abs() < 1e-6);
+        });
+    }
+}

@@ -1,0 +1,179 @@
+//! Job specifications: what to compute, on which backend.
+
+use crate::error::{Error, Result};
+use crate::kernels::bilateral::{BilateralParams, RangeSigma};
+use crate::melt::grid::GridMode;
+use crate::melt::melt::BoundaryMode;
+use crate::melt::operator::Operator;
+
+/// Which filter a job applies over the melt rows.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FilterKind {
+    /// Global gaussian filter, isotropic `sigma` (paper Fig 6 workload).
+    Gaussian { sigma: f32 },
+    /// Bilateral with constant σ_r (Fig 3 c/d).
+    BilateralConst { sigma_d: f32, sigma_r: f32 },
+    /// Bilateral with locally adaptive σ_r (Fig 3 b).
+    BilateralAdaptive { sigma_d: f32, floor: f32 },
+    /// N-D Gaussian curvature (Figs 4/5).
+    Curvature,
+}
+
+impl FilterKind {
+    /// The manifest `kind` string this filter resolves to on the PJRT path.
+    pub fn artifact_kind(&self) -> &'static str {
+        match self {
+            FilterKind::Gaussian { .. } => "gaussian",
+            FilterKind::BilateralConst { .. } => "bilateral_const",
+            FilterKind::BilateralAdaptive { .. } => "bilateral_adaptive",
+            FilterKind::Curvature => "curvature",
+        }
+    }
+
+    /// Validate numeric parameters.
+    pub fn validate(&self) -> Result<()> {
+        let ok = match self {
+            FilterKind::Gaussian { sigma } => *sigma > 0.0,
+            FilterKind::BilateralConst { sigma_d, sigma_r } => *sigma_d > 0.0 && *sigma_r > 0.0,
+            FilterKind::BilateralAdaptive { sigma_d, floor } => *sigma_d > 0.0 && *floor > 0.0,
+            FilterKind::Curvature => true,
+        };
+        if ok {
+            Ok(())
+        } else {
+            Err(Error::Coordinator(format!("invalid filter parameters: {self:?}")))
+        }
+    }
+
+    /// Native-path bilateral params, if this is a bilateral filter.
+    pub fn bilateral_params(&self, window: &[usize]) -> Result<Option<BilateralParams>> {
+        Ok(match self {
+            FilterKind::BilateralConst { sigma_d, sigma_r } => Some(BilateralParams::isotropic(
+                window,
+                *sigma_d,
+                RangeSigma::Constant(*sigma_r),
+            )?),
+            FilterKind::BilateralAdaptive { sigma_d, floor } => Some(BilateralParams::isotropic(
+                window,
+                *sigma_d,
+                RangeSigma::Adaptive { floor: *floor },
+            )?),
+            _ => None,
+        })
+    }
+}
+
+/// Execution backend: the Fig 8 "swap the computing backend under a stable
+/// array API" axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Rust broadcast kernels (`kernels::*`).
+    Native,
+    /// AOT-compiled L1 Pallas kernels via PJRT (`runtime::Engine`).
+    Pjrt,
+}
+
+/// A complete filtering job over one tensor.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub kind: FilterKind,
+    pub window: Vec<usize>,
+    pub grid: GridMode,
+    pub boundary: BoundaryMode,
+}
+
+impl Job {
+    /// Gaussian job with `Same` grid and reflect boundary (the defaults the
+    /// paper's benchmarks use).
+    pub fn gaussian(window: &[usize], sigma: f32) -> Self {
+        Self {
+            kind: FilterKind::Gaussian { sigma },
+            window: window.to_vec(),
+            grid: GridMode::Same,
+            boundary: BoundaryMode::Reflect,
+        }
+    }
+
+    pub fn bilateral_const(window: &[usize], sigma_d: f32, sigma_r: f32) -> Self {
+        Self {
+            kind: FilterKind::BilateralConst { sigma_d, sigma_r },
+            window: window.to_vec(),
+            grid: GridMode::Same,
+            boundary: BoundaryMode::Reflect,
+        }
+    }
+
+    pub fn bilateral_adaptive(window: &[usize], sigma_d: f32, floor: f32) -> Self {
+        Self {
+            kind: FilterKind::BilateralAdaptive { sigma_d, floor },
+            window: window.to_vec(),
+            grid: GridMode::Same,
+            boundary: BoundaryMode::Reflect,
+        }
+    }
+
+    pub fn curvature(window: &[usize]) -> Self {
+        Self {
+            kind: FilterKind::Curvature,
+            window: window.to_vec(),
+            grid: GridMode::Same,
+            boundary: BoundaryMode::Reflect,
+        }
+    }
+
+    /// Build the operator and validate the whole spec.
+    pub fn operator(&self) -> Result<Operator> {
+        self.kind.validate()?;
+        Operator::new(&self.window)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_default_same_reflect() {
+        let j = Job::gaussian(&[3, 3, 3], 1.0);
+        assert_eq!(j.grid, GridMode::Same);
+        assert_eq!(j.boundary, BoundaryMode::Reflect);
+        assert_eq!(j.kind.artifact_kind(), "gaussian");
+        j.operator().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_bad_params() {
+        assert!(Job::gaussian(&[3, 3], 0.0).operator().is_err());
+        assert!(Job::bilateral_const(&[3, 3], 1.0, -2.0).operator().is_err());
+        assert!(Job::bilateral_adaptive(&[3, 3], 0.0, 1.0).operator().is_err());
+        assert!(Job::gaussian(&[4, 4], 1.0).operator().is_err()); // even window
+    }
+
+    #[test]
+    fn artifact_kind_mapping() {
+        assert_eq!(
+            Job::bilateral_const(&[5, 5], 1.0, 2.0).kind.artifact_kind(),
+            "bilateral_const"
+        );
+        assert_eq!(
+            Job::bilateral_adaptive(&[5, 5], 1.0, 2.0).kind.artifact_kind(),
+            "bilateral_adaptive"
+        );
+        assert_eq!(Job::curvature(&[3, 3]).kind.artifact_kind(), "curvature");
+    }
+
+    #[test]
+    fn bilateral_params_only_for_bilateral() {
+        assert!(Job::gaussian(&[3, 3], 1.0)
+            .kind
+            .bilateral_params(&[3, 3])
+            .unwrap()
+            .is_none());
+        let p = Job::bilateral_const(&[3, 3], 1.5, 10.0)
+            .kind
+            .bilateral_params(&[3, 3])
+            .unwrap()
+            .unwrap();
+        assert_eq!(p.spatial.len(), 9);
+    }
+}

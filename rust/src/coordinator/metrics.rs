@@ -1,0 +1,115 @@
+//! Run metrics: setup vs compute timing, per-worker chunk counts, and a
+//! latency histogram — enough to regenerate the paper's Fig 6 methodology
+//! ("deducting the time spent in the process initialization and data
+//! partitioning from the total time cost").
+
+use std::time::Duration;
+
+/// Timing and throughput record of one coordinator run.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    /// melt + partition + worker spawn.
+    pub setup: Duration,
+    /// parallel kernel execution (the Fig 6 "practical time consumption").
+    pub compute: Duration,
+    /// chunk reassembly + fold.
+    pub aggregate: Duration,
+    /// chunks completed per worker (work-stealing balance diagnostics).
+    pub chunks_per_worker: Vec<usize>,
+    /// total melt rows processed.
+    pub rows: usize,
+    /// melt columns (window ravel length).
+    pub cols: usize,
+}
+
+impl RunMetrics {
+    /// End-to-end wall time.
+    pub fn total(&self) -> Duration {
+        self.setup + self.compute + self.aggregate
+    }
+
+    /// Rows per second through the compute phase.
+    pub fn rows_per_sec(&self) -> f64 {
+        if self.compute.is_zero() {
+            return f64::INFINITY;
+        }
+        self.rows as f64 / self.compute.as_secs_f64()
+    }
+
+    /// Element-multiplies per second (rows * cols / compute) — the broadcast
+    /// roofline figure used in EXPERIMENTS.md §Perf.
+    pub fn melt_elems_per_sec(&self) -> f64 {
+        if self.compute.is_zero() {
+            return f64::INFINITY;
+        }
+        (self.rows as f64 * self.cols as f64) / self.compute.as_secs_f64()
+    }
+
+    /// Max/min chunk-count imbalance across workers (1.0 = perfectly even).
+    pub fn imbalance(&self) -> f64 {
+        let (mut mn, mut mx) = (usize::MAX, 0usize);
+        for &c in &self.chunks_per_worker {
+            mn = mn.min(c);
+            mx = mx.max(c);
+        }
+        if self.chunks_per_worker.is_empty() || mn == 0 {
+            return f64::NAN;
+        }
+        mx as f64 / mn as f64
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "setup {:.2?} | compute {:.2?} | aggregate {:.2?} | {:.2e} rows/s | workers {:?}",
+            self.setup,
+            self.compute,
+            self.aggregate,
+            self.rows_per_sec(),
+            self.chunks_per_worker
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_rates() {
+        let m = RunMetrics {
+            setup: Duration::from_millis(10),
+            compute: Duration::from_millis(100),
+            aggregate: Duration::from_millis(5),
+            chunks_per_worker: vec![4, 4],
+            rows: 1000,
+            cols: 27,
+        };
+        assert_eq!(m.total(), Duration::from_millis(115));
+        assert!((m.rows_per_sec() - 10_000.0).abs() < 1.0);
+        assert!((m.melt_elems_per_sec() - 270_000.0).abs() < 30.0);
+        assert_eq!(m.imbalance(), 1.0);
+        assert!(m.summary().contains("compute"));
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        let m = RunMetrics::default();
+        assert!(m.rows_per_sec().is_infinite());
+        assert!(m.imbalance().is_nan());
+        let m = RunMetrics {
+            chunks_per_worker: vec![0, 3],
+            ..Default::default()
+        };
+        assert!(m.imbalance().is_nan());
+    }
+
+    #[test]
+    fn imbalance_detects_skew() {
+        let m = RunMetrics {
+            chunks_per_worker: vec![2, 8],
+            ..Default::default()
+        };
+        assert_eq!(m.imbalance(), 4.0);
+    }
+}

@@ -1,0 +1,29 @@
+//! L3 coordinator: the paper's parallel-acceleration system contribution.
+//!
+//! The coordinator owns the whole Fig 2 schematic at runtime:
+//!
+//! ```text
+//!  Job (filter spec) ──► plan (quasi-grid + chunking policy)
+//!       melt x ──► MeltMatrix ──► RowPartition (work queue)
+//!       workers (std::thread::scope, work stealing) pull row blocks:
+//!           Backend::Native  → kernels::* broadcast cores
+//!           Backend::Pjrt    → per-thread runtime::Engine (AOT artifacts)
+//!       aggregator reassembles chunks ──► fold ──► output tensor
+//! ```
+//!
+//! Setup time (melt + partition + thread spawn) is metered separately from
+//! compute time so Fig 6's "deduct the process-initialization cost"
+//! methodology can be reproduced faithfully.
+
+pub mod aggregator;
+pub mod job;
+pub mod metrics;
+pub mod pipeline;
+pub mod plan;
+pub mod scheduler;
+pub mod simulate;
+pub mod worker;
+
+pub use job::{Backend, FilterKind, Job};
+pub use metrics::RunMetrics;
+pub use pipeline::{run_job, run_pipeline, ExecOptions};

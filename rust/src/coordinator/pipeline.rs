@@ -1,0 +1,275 @@
+//! The coordinator entry points: run one job or a multi-stage pipeline over
+//! a tensor with a worker fleet — the executable form of paper Fig 2.
+
+use std::path::PathBuf;
+use std::sync::Barrier;
+use std::time::Instant;
+
+use crate::coordinator::aggregator::assemble;
+use crate::coordinator::job::{Backend, Job};
+use crate::coordinator::metrics::RunMetrics;
+use crate::coordinator::plan::ChunkPolicy;
+use crate::coordinator::scheduler::{ResultBoard, WorkQueue};
+use crate::coordinator::worker::{JobResources, WorkerContext};
+use crate::error::{Error, Result};
+use crate::melt::grid::QuasiGrid;
+use crate::melt::melt::melt_into;
+use crate::melt::matrix::MeltMatrix;
+use crate::tensor::dense::Tensor;
+
+/// Execution options for a coordinator run.
+#[derive(Clone, Debug)]
+pub struct ExecOptions {
+    /// Parallel worker threads (1 = the paper's "Single" series).
+    pub workers: usize,
+    /// Native rust kernels or AOT-compiled Pallas kernels via PJRT.
+    pub backend: Backend,
+    /// Artifact directory (required for [`Backend::Pjrt`]).
+    pub artifact_dir: Option<PathBuf>,
+    /// Chunking override; defaults to the backend-appropriate policy.
+    pub chunk_policy: Option<ChunkPolicy>,
+}
+
+impl ExecOptions {
+    /// Native backend with `workers` threads.
+    pub fn native(workers: usize) -> Self {
+        Self {
+            workers,
+            backend: Backend::Native,
+            artifact_dir: None,
+            chunk_policy: None,
+        }
+    }
+
+    /// PJRT backend over `dir` with `workers` threads.
+    pub fn pjrt(workers: usize, dir: impl Into<PathBuf>) -> Self {
+        Self {
+            workers,
+            backend: Backend::Pjrt,
+            artifact_dir: Some(dir.into()),
+            chunk_policy: None,
+        }
+    }
+
+    fn resolve_policy(&self, pjrt_chunk_rows: usize) -> ChunkPolicy {
+        if let Some(p) = self.chunk_policy {
+            return p;
+        }
+        match self.backend {
+            Backend::Native => ChunkPolicy::native_default(),
+            Backend::Pjrt => ChunkPolicy::Fixed {
+                chunk_rows: pjrt_chunk_rows,
+            },
+        }
+    }
+}
+
+/// Run one job over `x`: melt → partition → parallel execute → aggregate.
+pub fn run_job(x: &Tensor<f32>, job: &Job, opts: &ExecOptions) -> Result<(Tensor<f32>, RunMetrics)> {
+    if opts.workers == 0 {
+        return Err(Error::Coordinator("workers must be >= 1".into()));
+    }
+    let t_setup = Instant::now();
+    let res = JobResources::prepare(job)?;
+    let op = job.operator()?;
+    let grid = QuasiGrid::resolve(x.shape(), &op, &job.grid)?;
+
+    // melt (leader-side; row-decoupled by construction); uninitialized
+    // buffer is sound — melt_into writes every element (§Perf iteration 4)
+    let rows = grid.rows();
+    let cols = op.ravel_len();
+    let mut data = crate::melt::melt::uninit_buffer(rows * cols);
+    melt_into(x, &op, &grid, job.boundary, &mut data)?;
+    let m = MeltMatrix::new(data, rows, cols, grid.out_shape().to_vec(), op.window().to_vec())?;
+
+    // partition per policy; PJRT needs the manifest's fixed chunk height
+    let pjrt_chunk_rows = match opts.backend {
+        Backend::Pjrt => {
+            let dir = opts.artifact_dir.as_ref().ok_or_else(|| {
+                Error::Coordinator("PJRT backend requires an artifact directory".into())
+            })?;
+            crate::runtime::artifact::ArtifactManifest::load(dir)?.chunk_rows
+        }
+        Backend::Native => 0,
+    };
+    let partition = opts.resolve_policy(pjrt_chunk_rows).partition(rows, opts.workers)?;
+    partition.validate()?;
+
+    let queue = WorkQueue::new(&partition);
+    let board = ResultBoard::new(queue.num_chunks());
+    let mut chunk_counts = vec![0usize; opts.workers];
+    // +1: the leader also waits on the barrier to timestamp compute start
+    // only after every worker finished its (PJRT) engine build.
+    let barrier = Barrier::new(opts.workers + 1);
+
+    let mut setup = t_setup.elapsed();
+    let mut compute = std::time::Duration::ZERO;
+
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::with_capacity(opts.workers);
+        for _ in 0..opts.workers {
+            let res = &res;
+            let m = &m;
+            let queue = &queue;
+            let board = &board;
+            let barrier = &barrier;
+            let opts = &opts;
+            handles.push(s.spawn(move || -> Result<(usize, Instant, Instant)> {
+                // engine build + artifact compile = setup, not compute
+                let ctx = WorkerContext::build(res, opts.backend, opts.artifact_dir.as_ref());
+                barrier.wait();
+                let ctx = ctx?;
+                // workers self-report their compute window: the leader may
+                // be descheduled at barrier release, so leader-side clocks
+                // would under-measure the parallel phase.
+                let t0 = Instant::now();
+                let mut done = 0usize;
+                while let Some((id, range)) = queue.pop() {
+                    let block = m.row_block(range.start, range.end)?;
+                    let out = ctx.execute(res, block, range.len())?;
+                    board.put(id, out)?;
+                    done += 1;
+                }
+                Ok((done, t0, Instant::now()))
+            }));
+        }
+        barrier.wait();
+        setup = t_setup.elapsed();
+        let mut first_start: Option<Instant> = None;
+        let mut last_end: Option<Instant> = None;
+        for (w, h) in handles.into_iter().enumerate() {
+            let (done, t0, t1) = h
+                .join()
+                .map_err(|_| Error::Coordinator(format!("worker {w} panicked")))??;
+            chunk_counts[w] = done;
+            first_start = Some(first_start.map_or(t0, |f| f.min(t0)));
+            last_end = Some(last_end.map_or(t1, |l| l.max(t1)));
+        }
+        compute = match (first_start, last_end) {
+            (Some(a), Some(b)) => b.duration_since(a),
+            _ => std::time::Duration::ZERO,
+        };
+        Ok(())
+    })?;
+
+    let t_agg = Instant::now();
+    let chunks = board.into_chunks()?;
+    let out = assemble(&chunks, &partition, m.grid_shape())?;
+    let aggregate = t_agg.elapsed();
+
+    Ok((
+        out,
+        RunMetrics {
+            setup,
+            compute,
+            aggregate,
+            chunks_per_worker: chunk_counts,
+            rows,
+            cols,
+        },
+    ))
+}
+
+/// Run a sequence of jobs, feeding each stage's output to the next
+/// (the "new workflows" composition of the paper's abstract). Returns the
+/// final tensor and per-stage metrics.
+pub fn run_pipeline(
+    x: &Tensor<f32>,
+    jobs: &[Job],
+    opts: &ExecOptions,
+) -> Result<(Tensor<f32>, Vec<RunMetrics>)> {
+    if jobs.is_empty() {
+        return Err(Error::Coordinator("empty pipeline".into()));
+    }
+    let mut cur = x.clone();
+    let mut all = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        let (next, metrics) = run_job(&cur, job, opts)?;
+        all.push(metrics);
+        cur = next;
+    }
+    Ok((cur, all))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::convolve::gaussian_filter;
+    use crate::melt::melt::BoundaryMode;
+    use crate::melt::operator::Operator;
+    use crate::testing::{assert_allclose, check_property, SplitMix64};
+
+    #[test]
+    fn single_worker_matches_serial_convolve() {
+        let x = Tensor::random(&[12, 13], 0.0, 255.0, 3).unwrap();
+        let job = Job::gaussian(&[3, 3], 1.0);
+        let (got, metrics) = run_job(&x, &job, &ExecOptions::native(1)).unwrap();
+        let op = Operator::cubic(3, 2).unwrap();
+        let want = gaussian_filter(&x, &op, 1.0, BoundaryMode::Reflect).unwrap();
+        assert_allclose(got.data(), want.data(), 1e-6, 1e-5);
+        assert_eq!(metrics.rows, 12 * 13);
+        assert_eq!(metrics.cols, 9);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results_property() {
+        // the §2.4 independence claim, end to end
+        check_property("output invariant under worker count", 10, |rng: &mut SplitMix64| {
+            let dims = [6 + rng.below(8), 6 + rng.below(8)];
+            let x = Tensor::random(&dims, 0.0, 255.0, rng.next_u64()).unwrap();
+            let job = match rng.below(3) {
+                0 => Job::gaussian(&[3, 3], 1.0),
+                1 => Job::bilateral_const(&[3, 3], 1.5, 25.0),
+                _ => Job::curvature(&[3, 3]),
+            };
+            let (base, _) = run_job(&x, &job, &ExecOptions::native(1)).unwrap();
+            for workers in [2, 3, 4] {
+                let (out, m) = run_job(&x, &job, &ExecOptions::native(workers)).unwrap();
+                assert_allclose(out.data(), base.data(), 0.0, 0.0);
+                assert_eq!(m.chunks_per_worker.len(), workers);
+            }
+        });
+    }
+
+    #[test]
+    fn pipeline_composes_stages() {
+        let x = Tensor::random(&[10, 10], 0.0, 255.0, 9).unwrap();
+        let jobs = vec![Job::gaussian(&[3, 3], 1.0), Job::curvature(&[3, 3])];
+        let (out, metrics) = run_pipeline(&x, &jobs, &ExecOptions::native(2)).unwrap();
+        assert_eq!(out.shape(), x.shape());
+        assert_eq!(metrics.len(), 2);
+        // manual two-stage
+        let (s1, _) = run_job(&x, &jobs[0], &ExecOptions::native(1)).unwrap();
+        let (s2, _) = run_job(&s1, &jobs[1], &ExecOptions::native(1)).unwrap();
+        assert_allclose(out.data(), s2.data(), 0.0, 0.0);
+    }
+
+    #[test]
+    fn rejects_zero_workers_and_empty_pipeline() {
+        let x = Tensor::zeros(&[4, 4]).unwrap();
+        assert!(run_job(&x, &Job::gaussian(&[3, 3], 1.0), &ExecOptions::native(0)).is_err());
+        assert!(run_pipeline(&x, &[], &ExecOptions::native(1)).is_err());
+    }
+
+    #[test]
+    fn custom_chunk_policy_respected() {
+        let x = Tensor::random(&[16, 16], 0.0, 1.0, 4).unwrap();
+        let mut opts = ExecOptions::native(2);
+        opts.chunk_policy = Some(ChunkPolicy::Fixed { chunk_rows: 50 });
+        let (_, m) = run_job(&x, &Job::gaussian(&[3, 3], 1.0), &opts).unwrap();
+        // 256 rows / 50 = 6 chunks
+        assert_eq!(m.chunks_per_worker.iter().sum::<usize>(), 6);
+    }
+
+    #[test]
+    fn pjrt_requires_artifact_dir() {
+        let x = Tensor::zeros(&[4, 4]).unwrap();
+        let opts = ExecOptions {
+            workers: 1,
+            backend: Backend::Pjrt,
+            artifact_dir: None,
+            chunk_policy: None,
+        };
+        assert!(run_job(&x, &Job::gaussian(&[3, 3], 1.0), &opts).is_err());
+    }
+}

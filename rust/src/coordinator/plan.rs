@@ -1,0 +1,78 @@
+//! Chunking policy: how a melt matrix is partitioned for a worker fleet.
+//!
+//! Native workers prefer a handful of large contiguous blocks (low queue
+//! overhead, good prefetch); the PJRT path must slice at the artifacts'
+//! fixed chunk height. Both policies produce a validated [`RowPartition`],
+//! so the §2.4 conditions hold by construction.
+
+use crate::error::Result;
+use crate::melt::partition::RowPartition;
+
+/// How to split melt rows into work units.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkPolicy {
+    /// `parts_per_worker * workers` near-equal blocks (native path).
+    /// More parts than workers keeps the queue busy under imbalance.
+    EvenPerWorker { parts_per_worker: usize },
+    /// Fixed-height chunks (PJRT path: the artifact's `chunk_rows`).
+    Fixed { chunk_rows: usize },
+}
+
+impl ChunkPolicy {
+    /// Default native policy: 4 blocks per worker.
+    pub fn native_default() -> Self {
+        ChunkPolicy::EvenPerWorker { parts_per_worker: 4 }
+    }
+
+    /// Resolve into a concrete partition of `rows` for `workers`.
+    pub fn partition(&self, rows: usize, workers: usize) -> Result<RowPartition> {
+        match self {
+            ChunkPolicy::EvenPerWorker { parts_per_worker } => {
+                let parts = workers.max(1) * (*parts_per_worker).max(1);
+                RowPartition::even(rows, parts)
+            }
+            ChunkPolicy::Fixed { chunk_rows } => RowPartition::chunked(rows, *chunk_rows),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check_property, SplitMix64};
+
+    #[test]
+    fn native_default_scales_with_workers() {
+        let p = ChunkPolicy::native_default().partition(1000, 4).unwrap();
+        assert_eq!(p.num_parts(), 16);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn fixed_policy_respects_chunk_height() {
+        let p = ChunkPolicy::Fixed { chunk_rows: 2048 }.partition(5000, 3).unwrap();
+        assert_eq!(p.num_parts(), 3);
+        assert_eq!(p.ranges()[0], 0..2048);
+        assert_eq!(p.ranges()[2], 4096..5000);
+    }
+
+    #[test]
+    fn partitions_always_valid_property() {
+        check_property("chunk policies emit valid partitions", 40, |rng: &mut SplitMix64| {
+            let rows = 1 + rng.below(10_000);
+            let workers = 1 + rng.below(8);
+            let policy = if rng.below(2) == 0 {
+                ChunkPolicy::EvenPerWorker {
+                    parts_per_worker: 1 + rng.below(8),
+                }
+            } else {
+                ChunkPolicy::Fixed {
+                    chunk_rows: 1 + rng.below(4096),
+                }
+            };
+            let p = policy.partition(rows, workers).unwrap();
+            p.validate().unwrap();
+            assert_eq!(p.rows(), rows);
+        });
+    }
+}

@@ -1,0 +1,140 @@
+//! Work-stealing chunk queue + result board shared by the worker fleet.
+//!
+//! The queue is a lock-free cursor over the partition's ranges: workers
+//! `pop()` until drained, which self-balances when chunk costs vary (the
+//! bilateral's data-dependent exp() count, PJRT padding overhead on the
+//! tail chunk, OS noise). Results land on a mutex-guarded board indexed by
+//! chunk id — one short critical section per completed chunk.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::melt::partition::RowPartition;
+
+/// Lock-free dispenser of partition chunks.
+pub struct WorkQueue {
+    ranges: Vec<Range<usize>>,
+    next: AtomicUsize,
+}
+
+impl WorkQueue {
+    pub fn new(partition: &RowPartition) -> Self {
+        Self {
+            ranges: partition.ranges().to_vec(),
+            next: AtomicUsize::new(0),
+        }
+    }
+
+    /// Claim the next chunk: `(chunk id, row range)`.
+    pub fn pop(&self) -> Option<(usize, Range<usize>)> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        self.ranges.get(i).map(|r| (i, r.clone()))
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.ranges.len()
+    }
+}
+
+/// Per-chunk result board.
+pub struct ResultBoard {
+    slots: Mutex<Vec<Option<Vec<f32>>>>,
+}
+
+impl ResultBoard {
+    pub fn new(num_chunks: usize) -> Self {
+        Self {
+            slots: Mutex::new(vec![None; num_chunks]),
+        }
+    }
+
+    /// Record chunk `id`'s output rows.
+    pub fn put(&self, id: usize, values: Vec<f32>) -> Result<()> {
+        let mut slots = self.slots.lock().map_err(|_| {
+            Error::Coordinator("result board poisoned by a worker panic".into())
+        })?;
+        if id >= slots.len() {
+            return Err(Error::Coordinator(format!(
+                "chunk id {id} out of range 0..{}",
+                slots.len()
+            )));
+        }
+        if slots[id].is_some() {
+            return Err(Error::Coordinator(format!("chunk {id} completed twice")));
+        }
+        slots[id] = Some(values);
+        Ok(())
+    }
+
+    /// Take all chunks in id order; errors if any is missing.
+    pub fn into_chunks(self) -> Result<Vec<Vec<f32>>> {
+        let slots = self
+            .slots
+            .into_inner()
+            .map_err(|_| Error::Coordinator("result board poisoned".into()))?;
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| s.ok_or_else(|| Error::Coordinator(format!("chunk {i} never completed"))))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_dispenses_each_chunk_once() {
+        let p = RowPartition::even(100, 7).unwrap();
+        let q = WorkQueue::new(&p);
+        let mut seen = Vec::new();
+        while let Some((id, r)) = q.pop() {
+            seen.push((id, r));
+        }
+        assert_eq!(seen.len(), 7);
+        for (i, (id, r)) in seen.iter().enumerate() {
+            assert_eq!(*id, i);
+            assert_eq!(*r, p.ranges()[i]);
+        }
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn queue_is_thread_safe() {
+        let p = RowPartition::even(1000, 64).unwrap();
+        let q = WorkQueue::new(&p);
+        let counter = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    while q.pop().is_some() {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn board_round_trip() {
+        let b = ResultBoard::new(3);
+        b.put(1, vec![1.0]).unwrap();
+        b.put(0, vec![0.0]).unwrap();
+        b.put(2, vec![2.0]).unwrap();
+        let chunks = b.into_chunks().unwrap();
+        assert_eq!(chunks, vec![vec![0.0], vec![1.0], vec![2.0]]);
+    }
+
+    #[test]
+    fn board_rejects_double_and_missing() {
+        let b = ResultBoard::new(2);
+        b.put(0, vec![1.0]).unwrap();
+        assert!(b.put(0, vec![1.0]).is_err());
+        assert!(b.put(5, vec![1.0]).is_err());
+        assert!(b.into_chunks().is_err()); // chunk 1 missing
+    }
+}

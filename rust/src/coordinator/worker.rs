@@ -1,0 +1,210 @@
+//! Worker-side chunk execution: one melt row block in, one result vector
+//! out, on either backend.
+//!
+//! All job-level precomputation (gaussian kernel vector, bilateral spatial
+//! component) happens once on the leader in [`JobResources::prepare`]; the
+//! worker hot loop is pure compute. On the PJRT backend every worker thread
+//! builds its own [`Engine`] (the client is `Rc`-backed and `!Send`) and
+//! compiles the one artifact its job needs — cost that the coordinator
+//! meters as setup, not compute, matching Fig 6's methodology.
+
+use std::path::PathBuf;
+
+use crate::coordinator::job::{Backend, FilterKind, Job};
+use crate::error::{Error, Result};
+use crate::kernels::bilateral::{bilateral_into, BilateralParams};
+use crate::kernels::curvature::curvature_into;
+use crate::kernels::gaussian::gaussian_kernel;
+use crate::kernels::paradigm::apply_kernel_broadcast_into;
+use crate::runtime::executor::{Engine, ExtraInputs, PreparedInputs};
+
+/// Leader-side precomputed job state, shared read-only with all workers.
+#[derive(Clone, Debug)]
+pub struct JobResources {
+    pub job: Job,
+    pub cols: usize,
+    pub center: usize,
+    /// Normalized kernel vector (gaussian jobs).
+    pub kernel: Option<Vec<f32>>,
+    /// Bilateral parameters (bilateral jobs).
+    pub bilateral: Option<BilateralParams>,
+}
+
+impl JobResources {
+    /// Precompute everything a worker needs for `job`.
+    pub fn prepare(job: &Job) -> Result<Self> {
+        let op = job.operator()?;
+        let cols = op.ravel_len();
+        let kernel = match job.kind {
+            FilterKind::Gaussian { sigma } => Some(gaussian_kernel(&job.window, sigma)),
+            _ => None,
+        };
+        let bilateral = job.kind.bilateral_params(&job.window)?;
+        Ok(Self {
+            job: job.clone(),
+            cols,
+            center: cols / 2,
+            kernel,
+            bilateral,
+        })
+    }
+
+    /// Extra PJRT inputs (`inputs[1..]` of the matching artifact).
+    pub fn extra_inputs(&self) -> ExtraInputs {
+        match &self.job.kind {
+            FilterKind::Gaussian { .. } => {
+                ExtraInputs::one(self.kernel.clone().expect("prepared gaussian kernel"))
+            }
+            FilterKind::BilateralConst { sigma_r, .. } => ExtraInputs::two(
+                self.bilateral.as_ref().expect("prepared bilateral").spatial.clone(),
+                vec![*sigma_r],
+            ),
+            FilterKind::BilateralAdaptive { floor, .. } => ExtraInputs::two(
+                self.bilateral.as_ref().expect("prepared bilateral").spatial.clone(),
+                vec![*floor],
+            ),
+            FilterKind::Curvature => {
+                // the stencil matrix is a runtime artifact input: HLO text
+                // elides large constants, so it cannot be baked at AOT time
+                let s = crate::kernels::stencil::stencil_matrix(&self.job.window)
+                    .expect("window validated by prepare");
+                ExtraInputs::one(s)
+            }
+        }
+    }
+}
+
+/// Execute one row block natively into `out` (len = rows).
+pub fn execute_native(
+    res: &JobResources,
+    block: &[f32],
+    rows: usize,
+    out: &mut [f32],
+) -> Result<()> {
+    match &res.job.kind {
+        FilterKind::Gaussian { .. } => {
+            let k = res.kernel.as_ref().expect("prepared gaussian kernel");
+            apply_kernel_broadcast_into(block, rows, res.cols, k, out);
+            Ok(())
+        }
+        FilterKind::BilateralConst { .. } | FilterKind::BilateralAdaptive { .. } => {
+            let p = res.bilateral.as_ref().expect("prepared bilateral");
+            bilateral_into(block, rows, res.cols, res.center, p, out)
+        }
+        FilterKind::Curvature => curvature_into(block, rows, res.cols, &res.job.window, out),
+    }
+}
+
+/// A worker's execution context for one job.
+pub enum WorkerContext {
+    Native,
+    Pjrt {
+        engine: Engine,
+        entry: crate::runtime::artifact::ArtifactEntry,
+        /// Job-constant inputs uploaded once at context build (§Perf it. 5).
+        prepared: PreparedInputs,
+    },
+}
+
+impl WorkerContext {
+    /// Build (and for PJRT: compile + warm up) the context on the calling
+    /// worker thread.
+    pub fn build(res: &JobResources, backend: Backend, artifact_dir: Option<&PathBuf>) -> Result<Self> {
+        match backend {
+            Backend::Native => Ok(WorkerContext::Native),
+            Backend::Pjrt => {
+                let dir = artifact_dir.ok_or_else(|| {
+                    Error::Coordinator("PJRT backend requires an artifact directory".into())
+                })?;
+                let engine = Engine::from_dir(dir)?;
+                let entry = engine
+                    .manifest()
+                    .by_kind_window(res.job.kind.artifact_kind(), &res.job.window)?
+                    .clone();
+                engine.warmup(&entry.name)?;
+                let prepared = engine.prepare_inputs(&entry, &res.extra_inputs())?;
+                Ok(WorkerContext::Pjrt {
+                    engine,
+                    entry,
+                    prepared,
+                })
+            }
+        }
+    }
+
+    /// Execute one row block, returning `rows` results.
+    pub fn execute(&self, res: &JobResources, block: &[f32], rows: usize) -> Result<Vec<f32>> {
+        match self {
+            WorkerContext::Native => {
+                let mut out = vec![0.0f32; rows];
+                execute_native(res, block, rows, &mut out)?;
+                Ok(out)
+            }
+            WorkerContext::Pjrt { engine, entry, prepared } => {
+                engine.execute_prepared(entry, block, rows, prepared)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::melt::grid::GridMode;
+    use crate::melt::melt::{melt, BoundaryMode};
+    use crate::melt::operator::Operator;
+    use crate::tensor::dense::Tensor;
+    use crate::testing::assert_allclose;
+
+    fn sample_melt() -> crate::melt::matrix::MeltMatrix {
+        let x = Tensor::random(&[8, 8], 0.0, 255.0, 11).unwrap();
+        let op = Operator::cubic(3, 2).unwrap();
+        melt(&x, &op, GridMode::Same, BoundaryMode::Reflect).unwrap()
+    }
+
+    #[test]
+    fn prepare_builds_right_resources() {
+        let g = JobResources::prepare(&Job::gaussian(&[3, 3], 1.0)).unwrap();
+        assert!(g.kernel.is_some() && g.bilateral.is_none());
+        assert_eq!(g.cols, 9);
+        let b = JobResources::prepare(&Job::bilateral_const(&[3, 3], 1.0, 5.0)).unwrap();
+        assert!(b.kernel.is_none() && b.bilateral.is_some());
+        let c = JobResources::prepare(&Job::curvature(&[3, 3])).unwrap();
+        assert!(c.kernel.is_none() && c.bilateral.is_none());
+    }
+
+    #[test]
+    fn extra_inputs_arity_matches_artifacts() {
+        // contract with python model.py variant input lists
+        let g = JobResources::prepare(&Job::gaussian(&[3, 3], 1.0)).unwrap();
+        assert_eq!(g.extra_inputs().vectors.len(), 1);
+        let b = JobResources::prepare(&Job::bilateral_adaptive(&[3, 3], 1.0, 0.5)).unwrap();
+        let e = b.extra_inputs();
+        assert_eq!(e.vectors.len(), 2);
+        assert_eq!(e.vectors[0].len(), 9);
+        assert_eq!(e.vectors[1], vec![0.5]);
+        let c = JobResources::prepare(&Job::curvature(&[3, 3])).unwrap();
+        let ce = c.extra_inputs();
+        assert_eq!(ce.vectors.len(), 1); // the stencil matrix (W x ncols)
+        assert_eq!(ce.vectors[0].len(), 9 * 5);
+    }
+
+    #[test]
+    fn native_execution_matches_kernels() {
+        let m = sample_melt();
+        let res = JobResources::prepare(&Job::gaussian(&[3, 3], 1.0)).unwrap();
+        let ctx = WorkerContext::build(&res, Backend::Native, None).unwrap();
+        let got = ctx.execute(&res, m.data(), m.rows()).unwrap();
+        let want = crate::kernels::paradigm::apply_kernel_broadcast(
+            &m,
+            res.kernel.as_ref().unwrap(),
+        );
+        assert_allclose(&got, &want, 0.0, 0.0);
+    }
+
+    #[test]
+    fn pjrt_context_requires_dir() {
+        let res = JobResources::prepare(&Job::gaussian(&[3, 3], 1.0)).unwrap();
+        assert!(WorkerContext::build(&res, Backend::Pjrt, None).is_err());
+    }
+}

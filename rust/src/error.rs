@@ -1,0 +1,81 @@
+//! Unified error type for the whole framework.
+
+use thiserror::Error;
+
+/// Framework-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All failure modes of the meltframe library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Tensor shape/stride violations (rank mismatch, zero extent, ...).
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Invalid neighbourhood operator (even extent, rank mismatch, ...).
+    #[error("operator error: {0}")]
+    Operator(String),
+
+    /// Invalid melt-matrix partition (violates the §2.4 conditions).
+    #[error("partition error: {0}")]
+    Partition(String),
+
+    /// Linear-algebra failures (singular matrix, non-SPD cholesky, ...).
+    #[error("linear algebra error: {0}")]
+    Linalg(String),
+
+    /// AOT artifact registry problems (missing manifest, bad entry, ...).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT runtime failures, wrapping the `xla` crate's error.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator scheduling/aggregation failures.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Config / CLI parse failures.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// File format failures (.npy, PGM/PPM, manifest JSON).
+    #[error("format error: {0}")]
+    Format(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+impl Error {
+    /// Shorthand constructor used across modules.
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::Shape("rank 3 vs 2".into());
+        assert!(e.to_string().contains("rank 3 vs 2"));
+        assert!(e.to_string().contains("shape error"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

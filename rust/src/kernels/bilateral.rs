@@ -1,0 +1,271 @@
+//! Generic N-D bilateral filter on melt matrices — paper eq. (3).
+//!
+//! W(x, s) ∝ exp(-(x-s)ᵀ Σ_d⁻¹ (x-s)/2 − |I(x)−I(s)|²/2σ_r²), normalized
+//! jointly over the window, applied as a weighted mean of the melt row.
+//! Matches the L1 Pallas kernels in `python/compile/kernels/bilateral.py`
+//! bit-for-contract (same spatial precompute, same adaptive σ_r = row std
+//! floored).
+
+use crate::error::{Error, Result};
+use crate::melt::matrix::MeltMatrix;
+use crate::stats::linalg::Mat;
+
+/// Range-regulator policy for eq. (3)'s second exponential item.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RangeSigma {
+    /// Pre-defined constant σ_r (paper Fig 3 c/d).
+    Constant(f32),
+    /// Locally adaptive σ_r = σ(x, s): the std of the neighbourhood values,
+    /// floored (paper Fig 3 b).
+    Adaptive { floor: f32 },
+}
+
+/// Full parameter set of the generic bilateral filter.
+#[derive(Clone, Debug)]
+pub struct BilateralParams {
+    /// Precomputed unnormalized spatial component over the window ravel
+    /// (from [`crate::kernels::gaussian::spatial_gaussian`]).
+    pub spatial: Vec<f32>,
+    /// Range regulator policy.
+    pub range: RangeSigma,
+}
+
+impl BilateralParams {
+    /// Isotropic helper: Σ_d = σ_d² I over `window`.
+    pub fn isotropic(window: &[usize], sigma_d: f32, range: RangeSigma) -> Result<Self> {
+        if sigma_d <= 0.0 {
+            return Err(Error::Operator(format!("sigma_d must be positive: {sigma_d}")));
+        }
+        let nd = window.len();
+        let inv = Mat::diag(&vec![1.0 / (sigma_d as f64 * sigma_d as f64); nd]);
+        Ok(Self {
+            spatial: crate::kernels::gaussian::spatial_gaussian(window, &inv)?,
+            range,
+        })
+    }
+}
+
+/// Apply the bilateral filter to every melt row; returns one value per row.
+pub fn bilateral(m: &MeltMatrix, params: &BilateralParams) -> Result<Vec<f32>> {
+    if params.spatial.len() != m.cols() {
+        return Err(Error::shape(format!(
+            "spatial component length {} vs melt cols {}",
+            params.spatial.len(),
+            m.cols()
+        )));
+    }
+    let mut out = vec![0.0f32; m.rows()];
+    bilateral_into(m.data(), m.rows(), m.cols(), m.center(), params, &mut out)?;
+    Ok(out)
+}
+
+/// Constant-σ_r convenience wrapper.
+pub fn bilateral_const(m: &MeltMatrix, spatial: &[f32], sigma_r: f32) -> Result<Vec<f32>> {
+    bilateral(
+        m,
+        &BilateralParams {
+            spatial: spatial.to_vec(),
+            range: RangeSigma::Constant(sigma_r),
+        },
+    )
+}
+
+/// Adaptive-σ_r convenience wrapper.
+pub fn bilateral_adaptive(m: &MeltMatrix, spatial: &[f32], floor: f32) -> Result<Vec<f32>> {
+    bilateral(
+        m,
+        &BilateralParams {
+            spatial: spatial.to_vec(),
+            range: RangeSigma::Adaptive { floor },
+        },
+    )
+}
+
+/// Allocation-free core over a raw row-major block (coordinator hot path).
+pub fn bilateral_into(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    center: usize,
+    params: &BilateralParams,
+    out: &mut [f32],
+) -> Result<()> {
+    if data.len() != rows * cols || out.len() != rows || center >= cols {
+        return Err(Error::shape(format!(
+            "bilateral_into: data {} rows {rows} cols {cols} center {center} out {}",
+            data.len(),
+            out.len()
+        )));
+    }
+    let spatial = &params.spatial;
+    match params.range {
+        RangeSigma::Constant(sigma_r) => {
+            if sigma_r <= 0.0 {
+                return Err(Error::Operator(format!("sigma_r must be positive: {sigma_r}")));
+            }
+            let inv2 = 1.0 / (2.0 * sigma_r * sigma_r);
+            for r in 0..rows {
+                let row = &data[r * cols..(r + 1) * cols];
+                let c = row[center];
+                let (mut num, mut den) = (0.0f32, 0.0f32);
+                for (v, s) in row.iter().zip(spatial.iter()) {
+                    let d = v - c;
+                    let w = s * (-d * d * inv2).exp();
+                    num += w * v;
+                    den += w;
+                }
+                out[r] = num / den;
+            }
+        }
+        RangeSigma::Adaptive { floor } => {
+            if floor <= 0.0 {
+                return Err(Error::Operator(format!("floor must be positive: {floor}")));
+            }
+            let inv_n = 1.0 / cols as f32;
+            for r in 0..rows {
+                let row = &data[r * cols..(r + 1) * cols];
+                let c = row[center];
+                // σ_r(x) = population std of the row, floored
+                let mut mean = 0.0f32;
+                for v in row {
+                    mean += v;
+                }
+                mean *= inv_n;
+                let mut var = 0.0f32;
+                for v in row {
+                    let d = v - mean;
+                    var += d * d;
+                }
+                var *= inv_n;
+                let sig = var.sqrt().max(floor);
+                let inv2 = 1.0 / (2.0 * sig * sig);
+                let (mut num, mut den) = (0.0f32, 0.0f32);
+                for (v, s) in row.iter().zip(spatial.iter()) {
+                    let d = v - c;
+                    let w = s * (-d * d * inv2).exp();
+                    num += w * v;
+                    den += w;
+                }
+                out[r] = num / den;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gaussian::gaussian_kernel;
+    use crate::kernels::paradigm::apply_kernel_broadcast;
+    use crate::melt::grid::GridMode;
+    use crate::melt::melt::{melt, BoundaryMode};
+    use crate::melt::operator::Operator;
+    use crate::tensor::dense::Tensor;
+    use crate::testing::{assert_allclose, check_property, SplitMix64};
+
+    fn params(window: &[usize], range: RangeSigma) -> BilateralParams {
+        BilateralParams::isotropic(window, 1.5, range).unwrap()
+    }
+
+    #[test]
+    fn constant_region_is_fixed_point() {
+        let x = Tensor::full(&[8, 8], 42.0).unwrap();
+        let op = Operator::cubic(5, 2).unwrap();
+        let m = melt(&x, &op, GridMode::Same, BoundaryMode::Reflect).unwrap();
+        for range in [RangeSigma::Constant(3.0), RangeSigma::Adaptive { floor: 1.0 }] {
+            let out = bilateral(&m, &params(&[5, 5], range)).unwrap();
+            assert_allclose(&out, &vec![42.0; 64], 1e-5, 1e-4);
+        }
+    }
+
+    #[test]
+    fn excessive_sigma_degenerates_to_gaussian() {
+        // Fig 3(d): σ_r ≫ ‖Σ_d‖ -> plain spatial gaussian
+        let x = Tensor::random(&[10, 10], 0.0, 255.0, 3).unwrap();
+        let op = Operator::cubic(5, 2).unwrap();
+        let m = melt(&x, &op, GridMode::Same, BoundaryMode::Reflect).unwrap();
+        let p = params(&[5, 5], RangeSigma::Constant(1e6));
+        let got = bilateral(&m, &p).unwrap();
+        // normalized spatial kernel applied as a global filter
+        let sum: f32 = p.spatial.iter().sum();
+        let k: Vec<f32> = p.spatial.iter().map(|v| v / sum).collect();
+        let want = apply_kernel_broadcast(&m, &k);
+        assert_allclose(&got, &want, 1e-4, 1e-2);
+    }
+
+    #[test]
+    fn edge_preservation_vs_gaussian() {
+        // Fig 3(c): a step edge survives small-σ_r bilateral, not gaussian
+        let mut x = Tensor::zeros(&[12, 12]).unwrap();
+        for y in 0..12 {
+            for xx in 6..12 {
+                x.set(&[y, xx], 200.0).unwrap();
+            }
+        }
+        let op = Operator::cubic(5, 2).unwrap();
+        let m = melt(&x, &op, GridMode::Same, BoundaryMode::Reflect).unwrap();
+        let bi = bilateral(&m, &params(&[5, 5], RangeSigma::Constant(10.0))).unwrap();
+        let ga = apply_kernel_broadcast(&m, &gaussian_kernel(&[5, 5], 1.5));
+        // at the edge-adjacent column (5), bilateral stays near 0
+        let p_bi = bi[5 * 12 + 5];
+        let p_ga = ga[5 * 12 + 5];
+        assert!(p_bi < 10.0, "bilateral leaked: {p_bi}");
+        assert!(p_ga > 30.0, "gaussian should mix: {p_ga}");
+    }
+
+    #[test]
+    fn adaptive_denoises_flat_noise_more_than_const_small_sigma() {
+        // adaptive σ_r tracks the local noise level, so pure-noise regions
+        // are smoothed; a tiny constant σ_r barely averages anything.
+        let x = Tensor::random(&[16, 16], 100.0, 130.0, 5).unwrap();
+        let op = Operator::cubic(5, 2).unwrap();
+        let m = melt(&x, &op, GridMode::Same, BoundaryMode::Reflect).unwrap();
+        let adaptive = bilateral(&m, &params(&[5, 5], RangeSigma::Adaptive { floor: 1.0 })).unwrap();
+        let tiny = bilateral(&m, &params(&[5, 5], RangeSigma::Constant(0.05))).unwrap();
+        let var = |v: &[f32]| {
+            let mu = v.iter().sum::<f32>() / v.len() as f32;
+            v.iter().map(|a| (a - mu) * (a - mu)).sum::<f32>() / v.len() as f32
+        };
+        assert!(
+            var(&adaptive) < 0.6 * var(&tiny),
+            "adaptive {} vs tiny-sigma {}",
+            var(&adaptive),
+            var(&tiny)
+        );
+    }
+
+    #[test]
+    fn into_matches_wrapper_property() {
+        check_property("bilateral_into == bilateral on blocks", 20, |rng: &mut SplitMix64| {
+            let dims = [4 + rng.below(5), 4 + rng.below(5)];
+            let x = Tensor::random(&dims, 0.0, 255.0, rng.next_u64()).unwrap();
+            let op = Operator::cubic(3, 2).unwrap();
+            let m = melt(&x, &op, GridMode::Same, BoundaryMode::Reflect).unwrap();
+            let p = params(&[3, 3], RangeSigma::Constant(20.0));
+            let full = bilateral(&m, &p).unwrap();
+            let lo = rng.below(m.rows() / 2);
+            let hi = lo + 1 + rng.below(m.rows() - lo - 1);
+            let mut part = vec![0.0f32; hi - lo];
+            bilateral_into(
+                m.row_block(lo, hi).unwrap(),
+                hi - lo,
+                m.cols(),
+                m.center(),
+                &p,
+                &mut part,
+            )
+            .unwrap();
+            assert_allclose(&part, &full[lo..hi], 1e-6, 1e-5);
+        });
+    }
+
+    #[test]
+    fn rejects_invalid_params() {
+        let m = MeltMatrix::new(vec![0.0; 18], 2, 9, vec![2], vec![3, 3]).unwrap();
+        assert!(bilateral_const(&m, &[1.0; 8], 1.0).is_err()); // bad spatial len
+        assert!(bilateral_const(&m, &[1.0; 9], 0.0).is_err()); // bad sigma
+        assert!(bilateral_adaptive(&m, &[1.0; 9], -1.0).is_err()); // bad floor
+        assert!(BilateralParams::isotropic(&[3, 3], 0.0, RangeSigma::Constant(1.0)).is_err());
+    }
+}

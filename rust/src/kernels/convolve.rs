@@ -1,0 +1,97 @@
+//! Generic N-D convolution/filtering via the melt pipeline — the one-call
+//! composition (melt → broadcast → fold) of paper Fig 2 that examples and
+//! the serial baselines use.
+
+use crate::error::Result;
+use crate::kernels::paradigm::{apply_kernel, Paradigm};
+use crate::melt::fold::fold;
+use crate::melt::grid::GridMode;
+use crate::melt::melt::{melt, BoundaryMode};
+use crate::melt::operator::Operator;
+use crate::tensor::dense::Tensor;
+
+/// Convolve `x` with a kernel given over the ravel of `op`'s window.
+/// This is the whole Fig 2 pipeline on a single computing unit.
+pub fn convolve(
+    x: &Tensor<f32>,
+    op: &Operator,
+    kernel: &[f32],
+    grid_mode: GridMode,
+    boundary: BoundaryMode,
+    paradigm: Paradigm,
+) -> Result<Tensor<f32>> {
+    let m = melt(x, op, grid_mode, boundary)?;
+    let rows = apply_kernel(&m, kernel, paradigm);
+    fold(&rows, m.grid_shape())
+}
+
+/// Gaussian filter convenience: isotropic kernel of `sigma` over `op`.
+pub fn gaussian_filter(
+    x: &Tensor<f32>,
+    op: &Operator,
+    sigma: f32,
+    boundary: BoundaryMode,
+) -> Result<Tensor<f32>> {
+    let k = crate::kernels::gaussian::gaussian_kernel(op.window(), sigma);
+    convolve(x, op, &k, GridMode::Same, boundary, Paradigm::MatBroadcast)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_allclose, check_property, SplitMix64};
+
+    #[test]
+    fn identity_kernel_round_trips() {
+        let x = Tensor::random(&[6, 7], -3.0, 3.0, 1).unwrap();
+        let op = Operator::cubic(3, 2).unwrap();
+        let mut k = vec![0.0f32; 9];
+        k[4] = 1.0;
+        let y = convolve(&x, &op, &k, GridMode::Same, BoundaryMode::Reflect, Paradigm::MatBroadcast)
+            .unwrap();
+        assert_allclose(y.data(), x.data(), 0.0, 0.0);
+    }
+
+    #[test]
+    fn box_kernel_averages() {
+        let x = Tensor::full(&[5, 5], 10.0).unwrap();
+        let op = Operator::cubic(3, 2).unwrap();
+        let k = vec![1.0f32 / 9.0; 9];
+        let y = convolve(&x, &op, &k, GridMode::Same, BoundaryMode::Reflect, Paradigm::VectorWise)
+            .unwrap();
+        assert_allclose(y.data(), &vec![10.0; 25], 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn gaussian_filter_smooths_noise() {
+        let x = Tensor::random(&[24, 24], 0.0, 255.0, 7).unwrap();
+        let op = Operator::cubic(5, 2).unwrap();
+        let y = gaussian_filter(&x, &op, 1.5, BoundaryMode::Reflect).unwrap();
+        assert!(y.variance() < x.variance());
+        // preserves the mean (normalized kernel, reflect boundary)
+        assert!((y.mean() - x.mean()).abs() < 3.0);
+    }
+
+    #[test]
+    fn valid_mode_shrinks_output() {
+        let x = Tensor::random(&[8, 9], 0.0, 1.0, 2).unwrap();
+        let op = Operator::cubic(3, 2).unwrap();
+        let k = vec![1.0f32 / 9.0; 9];
+        let y = convolve(&x, &op, &k, GridMode::Valid, BoundaryMode::Reflect, Paradigm::MatBroadcast)
+            .unwrap();
+        assert_eq!(y.shape(), &[6, 7]);
+    }
+
+    #[test]
+    fn paradigms_agree_end_to_end_property() {
+        check_property("convolve invariant under paradigm", 15, |rng: &mut SplitMix64| {
+            let x = Tensor::random(&[4 + rng.below(5), 4 + rng.below(5)], -5.0, 5.0, rng.next_u64())
+                .unwrap();
+            let op = Operator::cubic(3, 2).unwrap();
+            let k = crate::kernels::gaussian::gaussian_kernel(&[3, 3], 1.0);
+            let a = convolve(&x, &op, &k, GridMode::Same, BoundaryMode::Reflect, Paradigm::ElementWise).unwrap();
+            let b = convolve(&x, &op, &k, GridMode::Same, BoundaryMode::Reflect, Paradigm::MatBroadcast).unwrap();
+            assert_allclose(a.data(), b.data(), 1e-5, 1e-5);
+        });
+    }
+}

@@ -1,0 +1,139 @@
+//! N-D gaussian kernel generation (the `gaussian_kernel` generator of paper
+//! §3.2) and the melt-row application used by the global filter.
+
+use crate::error::{Error, Result};
+use crate::stats::linalg::Mat;
+
+/// Unnormalized spatial gaussian component exp(-(x-s)ᵀ Σ_d⁻¹ (x-s)/2) over
+/// the window ravel — eq. (3)'s first exponential item. `sigma_inv` is the
+/// nd×nd inverse covariance (anisotropy support for voxel computation).
+/// Column order matches `Operator::offsets` and the python `ref.py`.
+pub fn spatial_gaussian(window: &[usize], sigma_inv: &Mat) -> Result<Vec<f32>> {
+    let nd = window.len();
+    if sigma_inv.rows() != nd || sigma_inv.cols() != nd {
+        return Err(Error::shape(format!(
+            "sigma_inv {}x{} vs window rank {nd}",
+            sigma_inv.rows(),
+            sigma_inv.cols()
+        )));
+    }
+    if window.iter().any(|&w| w == 0 || w % 2 == 0) {
+        return Err(Error::Operator(format!(
+            "window extents must be odd, got {window:?}"
+        )));
+    }
+    let ravel: usize = window.iter().product();
+    let mut out = Vec::with_capacity(ravel);
+    let mut idx = vec![0usize; nd];
+    loop {
+        let r: Vec<f64> = idx
+            .iter()
+            .zip(window)
+            .map(|(&i, &w)| i as f64 - (w / 2) as f64)
+            .collect();
+        out.push((-0.5 * sigma_inv.quad_form(&r)?).exp() as f32);
+        // odometer
+        let mut a = nd;
+        loop {
+            if a == 0 {
+                return Ok(out);
+            }
+            a -= 1;
+            idx[a] += 1;
+            if idx[a] < window[a] {
+                break;
+            }
+            idx[a] = 0;
+        }
+    }
+}
+
+/// Normalized isotropic N-D gaussian kernel over the window ravel.
+pub fn gaussian_kernel(window: &[usize], sigma: f32) -> Vec<f32> {
+    let nd = window.len();
+    let inv = Mat::diag(&vec![1.0 / (sigma as f64 * sigma as f64); nd]);
+    let mut k = spatial_gaussian(window, &inv).expect("isotropic inverse is square by construction");
+    let sum: f64 = k.iter().map(|&v| v as f64).sum();
+    for v in &mut k {
+        *v = (*v as f64 / sum) as f32;
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check_property, SplitMix64};
+
+    #[test]
+    fn kernel_normalized_and_positive() {
+        for window in [vec![3, 3], vec![5, 5], vec![3, 3, 3], vec![5, 5, 5]] {
+            let k = gaussian_kernel(&window, 1.3);
+            let sum: f64 = k.iter().map(|&v| v as f64).sum();
+            assert!((sum - 1.0).abs() < 1e-6, "{window:?}: sum {sum}");
+            assert!(k.iter().all(|&v| v > 0.0));
+        }
+    }
+
+    #[test]
+    fn kernel_peak_at_center() {
+        let k = gaussian_kernel(&[5, 5], 1.0);
+        let center = k.len() / 2;
+        for (i, &v) in k.iter().enumerate() {
+            if i != center {
+                assert!(v < k[center]);
+            }
+        }
+    }
+
+    #[test]
+    fn spatial_symmetry_isotropic() {
+        let s = spatial_gaussian(&[5, 5], &Mat::eye(2)).unwrap();
+        // transpose symmetry of the 5x5 grid
+        for r in 0..5 {
+            for c in 0..5 {
+                assert!((s[r * 5 + c] - s[c * 5 + r]).abs() < 1e-6);
+            }
+        }
+        assert!((s[12] - 1.0).abs() < 1e-6); // centre value
+    }
+
+    #[test]
+    fn spatial_anisotropy() {
+        // heavier inverse weight on axis 0 -> faster decay off-centre axis 0
+        let inv = Mat::diag(&[4.0, 0.25]);
+        let s = spatial_gaussian(&[5, 5], &inv).unwrap();
+        assert!(s[2] < s[10]); // (0,2) off on axis0 vs (2,0) off on axis1
+    }
+
+    #[test]
+    fn spatial_rejects_bad_inputs() {
+        assert!(spatial_gaussian(&[4, 4], &Mat::eye(2)).is_err()); // even window
+        assert!(spatial_gaussian(&[3, 3], &Mat::eye(3)).is_err()); // rank mismatch
+    }
+
+    #[test]
+    fn sigma_limits_property() {
+        // very large sigma -> nearly uniform kernel; very small -> delta
+        check_property("gaussian kernel sigma limits", 10, |rng: &mut SplitMix64| {
+            let window = [3usize, 3];
+            let _ = rng.next_u64();
+            let flat = gaussian_kernel(&window, 1e4);
+            let spread = flat.iter().cloned().fold(f32::MIN, f32::max)
+                - flat.iter().cloned().fold(f32::MAX, f32::min);
+            assert!(spread < 1e-6, "flat kernel spread {spread}");
+            let sharp = gaussian_kernel(&window, 1e-2);
+            assert!(sharp[4] > 0.999, "delta kernel centre {}", sharp[4]);
+        });
+    }
+
+    #[test]
+    fn matches_python_ref_values() {
+        // golden values from python ref.gaussian_kernel((3,3), 1.0):
+        // corner = exp(-1), edge = exp(-0.5), relative to centre 1.0
+        let k = gaussian_kernel(&[3, 3], 1.0);
+        let c = k[4];
+        assert!((k[0] / c - (-1.0f32).exp()).abs() < 1e-5);
+        assert!((k[1] / c - (-0.5f32).exp()).abs() < 1e-5);
+    }
+}

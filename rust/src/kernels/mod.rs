@@ -1,0 +1,16 @@
+//! Native compute kernels on melt matrices.
+//!
+//! These are the rust-side counterparts of the L1 Pallas kernels in
+//! `python/compile/kernels/` — same melt-row contract, same column order,
+//! same numerics (cross-checked in `rust/tests/`). They serve three roles:
+//! the `Backend::Native` execution path, the baselines of the paper's
+//! Fig 7 paradigm comparison ([`paradigm`]), and the reference for the
+//! PJRT-vs-native equivalence tests.
+
+pub mod bilateral;
+pub mod convolve;
+pub mod curvature;
+pub mod gaussian;
+pub mod paradigm;
+pub mod rankfilter;
+pub mod stencil;

@@ -1,0 +1,222 @@
+//! The three abstraction levels of paper Fig 7: ElementWise, VectorWise,
+//! and MatBroadcast implementations of the same kernel-on-melt computation.
+//!
+//! "The degree of abstraction attained for the object undergoing iterative
+//! processing directly correlates with the efficiency of the computing
+//! implementation" — `benches/fig7_paradigms.rs` reproduces the comparison;
+//! the tests here pin all three to identical numerics.
+//!
+//! - **ElementWise**: scalar iteration with per-element index arithmetic —
+//!   the naive double loop a pre-array-programming implementation writes.
+//!   Indices are recomputed per element through a deliberately generic
+//!   (rank-agnostic, bounds-checked) accessor, as an interpreter would.
+//! - **VectorWise**: row-at-a-time processing: each melt row is treated as
+//!   one vector object, combined with the kernel via an explicit
+//!   per-element loop over that vector.
+//! - **MatBroadcast**: whole-matrix array programming — the kernel vector is
+//!   broadcast against the melt matrix in cache-blocked, unrolled strips
+//!   (what numpy's vectorized C loops do under the hood).
+
+use crate::melt::matrix::MeltMatrix;
+
+/// Execution paradigm selector (Fig 7 series).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Paradigm {
+    ElementWise,
+    VectorWise,
+    MatBroadcast,
+}
+
+impl Paradigm {
+    pub const ALL: [Paradigm; 3] = [
+        Paradigm::ElementWise,
+        Paradigm::VectorWise,
+        Paradigm::MatBroadcast,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Paradigm::ElementWise => "ElementWise",
+            Paradigm::VectorWise => "VectorWise",
+            Paradigm::MatBroadcast => "MatBroadcast",
+        }
+    }
+}
+
+/// Apply a kernel vector to every melt row under the chosen paradigm.
+pub fn apply_kernel(m: &MeltMatrix, kernel: &[f32], paradigm: Paradigm) -> Vec<f32> {
+    match paradigm {
+        Paradigm::ElementWise => apply_kernel_elementwise(m, kernel),
+        Paradigm::VectorWise => apply_kernel_vectorwise(m, kernel),
+        Paradigm::MatBroadcast => apply_kernel_broadcast(m, kernel),
+    }
+}
+
+/// The per-element generic accessor of the ElementWise paradigm. The
+/// `#[inline(never)]` is the point: an interpreted environment (the paper's
+/// python element-wise loop) performs a dynamic dispatch + bounds check for
+/// *every element*; inlining would let the optimizer erase exactly the cost
+/// this paradigm exists to measure.
+#[inline(never)]
+fn element_at(data: &[f32], cols: usize, r: usize, c: usize) -> f32 {
+    let flat = r
+        .checked_mul(cols)
+        .and_then(|v| v.checked_add(c))
+        .expect("index overflow");
+    *data.get(flat).expect("in range")
+}
+
+/// ElementWise: scalar loops, one dispatched generic access per element.
+pub fn apply_kernel_elementwise(m: &MeltMatrix, kernel: &[f32]) -> Vec<f32> {
+    assert_eq!(kernel.len(), m.cols());
+    let (rows, cols) = (m.rows(), m.cols());
+    let data = m.data();
+    let mut out = vec![0.0f32; rows];
+    for (r, o) in out.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for (c, k) in kernel.iter().enumerate() {
+            acc += element_at(data, cols, r, c) * k;
+        }
+        *o = acc;
+    }
+    out
+}
+
+/// One vector-level operation: a strict-order scalar dot product. Out-lined
+/// so each row costs one call (the paradigm's per-vector overhead) and the
+/// single accumulator keeps IEEE order — no reassociation, no SIMD.
+#[inline(never)]
+fn row_dot(row: &[f32], kernel: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (v, k) in row.iter().zip(kernel.iter()) {
+        acc += v * k;
+    }
+    acc
+}
+
+/// VectorWise: one melt row = one vector object per iteration step.
+pub fn apply_kernel_vectorwise(m: &MeltMatrix, kernel: &[f32]) -> Vec<f32> {
+    assert_eq!(kernel.len(), m.cols());
+    let mut out = Vec::with_capacity(m.rows());
+    for r in 0..m.rows() {
+        out.push(row_dot(m.row(r), kernel));
+    }
+    out
+}
+
+/// MatBroadcast: whole-matrix broadcast with 4-way unrolled strips — the
+/// array-programming hot path shared by the native backend.
+pub fn apply_kernel_broadcast(m: &MeltMatrix, kernel: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; m.rows()];
+    apply_kernel_broadcast_into(m.data(), m.rows(), m.cols(), kernel, &mut out);
+    out
+}
+
+/// Allocation-free broadcast core over a raw row-major block (used by both
+/// [`apply_kernel_broadcast`] and the coordinator's worker loop).
+pub fn apply_kernel_broadcast_into(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    kernel: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(data.len(), rows * cols);
+    assert_eq!(kernel.len(), cols);
+    assert_eq!(out.len(), rows);
+    for (row, o) in data.chunks_exact(cols).zip(out.iter_mut()) {
+        // 4 independent accumulators over bounds-check-free fixed-width
+        // strips: the compiler turns this into packed FMA lanes.
+        let mut acc = [0.0f32; 4];
+        let rc = row.chunks_exact(4);
+        let kc = kernel.chunks_exact(4);
+        let (rrem, krem) = (rc.remainder(), kc.remainder());
+        for (rv, kv) in rc.zip(kc) {
+            acc[0] += rv[0] * kv[0];
+            acc[1] += rv[1] * kv[1];
+            acc[2] += rv[2] * kv[2];
+            acc[3] += rv[3] * kv[3];
+        }
+        let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+        for (v, k) in rrem.iter().zip(krem.iter()) {
+            s += v * k;
+        }
+        *o = s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gaussian::gaussian_kernel;
+    use crate::melt::grid::GridMode;
+    use crate::melt::melt::{melt, BoundaryMode};
+    use crate::melt::operator::Operator;
+    use crate::tensor::dense::Tensor;
+    use crate::testing::{assert_allclose, check_property, SplitMix64};
+
+    fn sample_melt(rng: &mut SplitMix64) -> (MeltMatrix, Vec<f32>) {
+        let dims = [3 + rng.below(6), 3 + rng.below(6)];
+        let x = Tensor::random(&dims, -10.0, 10.0, rng.next_u64()).unwrap();
+        let op = Operator::cubic(3, 2).unwrap();
+        let m = melt(&x, &op, GridMode::Same, BoundaryMode::Reflect).unwrap();
+        let k = gaussian_kernel(op.window(), 1.0);
+        (m, k)
+    }
+
+    #[test]
+    fn all_paradigms_agree_property() {
+        check_property("three paradigms identical numerics", 30, |rng: &mut SplitMix64| {
+            let (m, k) = sample_melt(rng);
+            let e = apply_kernel_elementwise(&m, &k);
+            let v = apply_kernel_vectorwise(&m, &k);
+            let b = apply_kernel_broadcast(&m, &k);
+            // unroll reorders the sum; allow float tolerance
+            assert_allclose(&e, &v, 0.0, 0.0);
+            assert_allclose(&v, &b, 1e-5, 1e-4);
+        });
+    }
+
+    #[test]
+    fn dispatcher_matches_direct_calls() {
+        let mut rng = SplitMix64::new(3);
+        let (m, k) = sample_melt(&mut rng);
+        for p in Paradigm::ALL {
+            let got = apply_kernel(&m, &k, p);
+            let want = match p {
+                Paradigm::ElementWise => apply_kernel_elementwise(&m, &k),
+                Paradigm::VectorWise => apply_kernel_vectorwise(&m, &k),
+                Paradigm::MatBroadcast => apply_kernel_broadcast(&m, &k),
+            };
+            assert_allclose(&got, &want, 0.0, 0.0);
+        }
+    }
+
+    #[test]
+    fn broadcast_into_block_view() {
+        // broadcasting a sub-block equals the corresponding output slice
+        let mut rng = SplitMix64::new(9);
+        let (m, k) = sample_melt(&mut rng);
+        let full = apply_kernel_broadcast(&m, &k);
+        let (lo, hi) = (1usize, m.rows() - 1);
+        let mut part = vec![0.0f32; hi - lo];
+        apply_kernel_broadcast_into(m.row_block(lo, hi).unwrap(), hi - lo, m.cols(), &k, &mut part);
+        assert_allclose(&part, &full[lo..hi], 0.0, 0.0);
+    }
+
+    #[test]
+    fn odd_column_tail_handled() {
+        // cols=5 exercises the non-multiple-of-4 tail loop
+        let m = MeltMatrix::new((0..15).map(|i| i as f32).collect(), 3, 5, vec![3], vec![5]).unwrap();
+        let k = vec![1.0f32; 5];
+        let got = apply_kernel_broadcast(&m, &k);
+        assert_allclose(&got, &[10.0, 35.0, 60.0], 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn labels_stable() {
+        assert_eq!(Paradigm::ElementWise.label(), "ElementWise");
+        assert_eq!(Paradigm::VectorWise.label(), "VectorWise");
+        assert_eq!(Paradigm::MatBroadcast.label(), "MatBroadcast");
+    }
+}

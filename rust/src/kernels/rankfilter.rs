@@ -1,0 +1,186 @@
+//! Rank-order filters on melt matrices: median / min / max / percentile.
+//!
+//! These are the *sample-determined* counterparts of the aggregation
+//! filters (paper §2.4): each output value is an order statistic of its
+//! melt row. They ride the same melt/partition machinery — row independence
+//! still holds (each row's statistic depends only on that row), so the
+//! §2.4 partitioning remains exact even though combining order statistics
+//! *across* rows would not be (see `stats::rank` for that distinction).
+//! Median filtering is also the classic salt-and-pepper denoiser the
+//! bilateral is usually compared against.
+
+use crate::error::{Error, Result};
+use crate::melt::matrix::MeltMatrix;
+use crate::stats::rank::{quantile, select};
+
+/// Which order statistic to extract per melt row.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RankKind {
+    Median,
+    Min,
+    Max,
+    /// Linear-interpolated quantile, q in [0, 1].
+    Quantile(f64),
+}
+
+/// Apply a rank filter to every melt row.
+pub fn rank_filter(m: &MeltMatrix, kind: RankKind) -> Result<Vec<f32>> {
+    let mut out = vec![0.0f32; m.rows()];
+    rank_filter_into(m.data(), m.rows(), m.cols(), kind, &mut out)?;
+    Ok(out)
+}
+
+/// Allocation-light core over a raw row-major block (coordinator-style
+/// signature, usable from worker loops).
+pub fn rank_filter_into(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    kind: RankKind,
+    out: &mut [f32],
+) -> Result<()> {
+    if data.len() != rows * cols || out.len() != rows {
+        return Err(Error::shape(format!(
+            "rank_filter_into: data {} rows {rows} cols {cols} out {}",
+            data.len(),
+            out.len()
+        )));
+    }
+    if let RankKind::Quantile(q) = kind {
+        if !(0.0..=1.0).contains(&q) {
+            return Err(Error::Operator(format!("quantile {q} outside [0, 1]")));
+        }
+    }
+    for (row, o) in data.chunks_exact(cols).zip(out.iter_mut()) {
+        *o = match kind {
+            RankKind::Min => row.iter().copied().fold(f32::INFINITY, f32::min),
+            RankKind::Max => row.iter().copied().fold(f32::NEG_INFINITY, f32::max),
+            RankKind::Median => {
+                if cols % 2 == 1 {
+                    select(row, cols / 2)
+                } else {
+                    (select(row, cols / 2 - 1) + select(row, cols / 2)) / 2.0
+                }
+            }
+            RankKind::Quantile(q) => quantile(row, q),
+        };
+    }
+    Ok(())
+}
+
+/// Morphological erosion (min filter) of a tensor via the melt pipeline.
+pub fn erode(
+    x: &crate::tensor::dense::Tensor<f32>,
+    op: &crate::melt::operator::Operator,
+) -> Result<crate::tensor::dense::Tensor<f32>> {
+    let m = crate::melt::melt::melt(
+        x,
+        op,
+        crate::melt::grid::GridMode::Same,
+        crate::melt::melt::BoundaryMode::Nearest,
+    )?;
+    crate::melt::fold::fold(&rank_filter(&m, RankKind::Min)?, m.grid_shape())
+}
+
+/// Morphological dilation (max filter) of a tensor via the melt pipeline.
+pub fn dilate(
+    x: &crate::tensor::dense::Tensor<f32>,
+    op: &crate::melt::operator::Operator,
+) -> Result<crate::tensor::dense::Tensor<f32>> {
+    let m = crate::melt::melt::melt(
+        x,
+        op,
+        crate::melt::grid::GridMode::Same,
+        crate::melt::melt::BoundaryMode::Nearest,
+    )?;
+    crate::melt::fold::fold(&rank_filter(&m, RankKind::Max)?, m.grid_shape())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::melt::grid::GridMode;
+    use crate::melt::melt::{melt, BoundaryMode};
+    use crate::melt::operator::Operator;
+    use crate::tensor::dense::Tensor;
+    use crate::testing::{assert_allclose, check_property, SplitMix64};
+
+    fn sample(rng: &mut SplitMix64) -> MeltMatrix {
+        let dims = [4 + rng.below(6), 4 + rng.below(6)];
+        let x = Tensor::random(&dims, -50.0, 50.0, rng.next_u64()).unwrap();
+        melt(&x, &Operator::cubic(3, 2).unwrap(), GridMode::Same, BoundaryMode::Reflect).unwrap()
+    }
+
+    #[test]
+    fn median_matches_sort_property() {
+        check_property("row median == sorted middle", 20, |rng: &mut SplitMix64| {
+            let m = sample(rng);
+            let got = rank_filter(&m, RankKind::Median).unwrap();
+            for r in 0..m.rows() {
+                let mut row = m.row(r).to_vec();
+                row.sort_by(f32::total_cmp);
+                assert_eq!(got[r], row[row.len() / 2]);
+            }
+        });
+    }
+
+    #[test]
+    fn min_max_bound_the_row() {
+        let mut rng = SplitMix64::new(3);
+        let m = sample(&mut rng);
+        let mins = rank_filter(&m, RankKind::Min).unwrap();
+        let maxs = rank_filter(&m, RankKind::Max).unwrap();
+        let meds = rank_filter(&m, RankKind::Median).unwrap();
+        for r in 0..m.rows() {
+            assert!(mins[r] <= meds[r] && meds[r] <= maxs[r]);
+            assert_eq!(mins[r], m.row(r).iter().copied().fold(f32::INFINITY, f32::min));
+        }
+    }
+
+    #[test]
+    fn quantile_endpoints_equal_min_max() {
+        let mut rng = SplitMix64::new(5);
+        let m = sample(&mut rng);
+        let q0 = rank_filter(&m, RankKind::Quantile(0.0)).unwrap();
+        let q1 = rank_filter(&m, RankKind::Quantile(1.0)).unwrap();
+        assert_allclose(&q0, &rank_filter(&m, RankKind::Min).unwrap(), 0.0, 0.0);
+        assert_allclose(&q1, &rank_filter(&m, RankKind::Max).unwrap(), 0.0, 0.0);
+        assert!(rank_filter(&m, RankKind::Quantile(1.5)).is_err());
+    }
+
+    #[test]
+    fn median_removes_salt_and_pepper() {
+        // classic: impulse noise vanishes under a 3x3 median
+        let mut x = Tensor::full(&[12, 12], 100.0).unwrap();
+        x.set(&[3, 4], 255.0).unwrap(); // salt
+        x.set(&[8, 7], 0.0).unwrap(); // pepper
+        let m = melt(&x, &Operator::cubic(3, 2).unwrap(), GridMode::Same, BoundaryMode::Reflect)
+            .unwrap();
+        let out = rank_filter(&m, RankKind::Median).unwrap();
+        assert!(out.iter().all(|&v| v == 100.0));
+    }
+
+    #[test]
+    fn erosion_dilation_duality() {
+        // dilate(x) == -erode(-x) (lattice duality)
+        let x = Tensor::random(&[8, 9], -10.0, 10.0, 7).unwrap();
+        let op = Operator::cubic(3, 2).unwrap();
+        let d = dilate(&x, &op).unwrap();
+        let e = erode(&x.scale(-1.0), &op).unwrap().scale(-1.0);
+        assert_allclose(d.data(), e.data(), 0.0, 0.0);
+    }
+
+    #[test]
+    fn erosion_shrinks_dilation_grows() {
+        let mask = Tensor::segmentation_mask(&[32, 32]);
+        let op = Operator::cubic(3, 2).unwrap();
+        let er = erode(&mask, &op).unwrap();
+        let di = dilate(&mask, &op).unwrap();
+        assert!(er.sum() < mask.sum());
+        assert!(di.sum() > mask.sum());
+        // idempotent bounds: erode <= x <= dilate pointwise
+        for i in 0..mask.len() {
+            assert!(er.data()[i] <= mask.data()[i] && mask.data()[i] <= di.data()[i]);
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! Central-difference stencil matrices over window ravels.
+//!
+//! `stencil_matrix(window)` is the S of the curvature kernel: applying a
+//! melt row gives all first- and second-order partial differentials of the
+//! grid point at unit spacing, packed `[g_0..g_{nd-1}, H_00, H_01, ...,
+//! H_{nd-1,nd-1}]` (gradients then upper-triangular Hessian). The column
+//! order is the shared contract with `python/compile/kernels/ref.py`.
+
+use crate::error::{Error, Result};
+use crate::tensor::shape::row_major_strides;
+
+/// Number of packed differential columns for rank `nd`.
+pub fn ncols(nd: usize) -> usize {
+    nd + nd * (nd + 1) / 2
+}
+
+/// Build the stencil matrix: `W x ncols(nd)` in row-major order, where
+/// `W = prod(window)`. Every extent must be odd and >= 3.
+pub fn stencil_matrix(window: &[usize]) -> Result<Vec<f32>> {
+    let nd = window.len();
+    if nd == 0 {
+        return Err(Error::Operator("empty stencil window".into()));
+    }
+    if window.iter().any(|&w| w < 3 || w % 2 == 0) {
+        return Err(Error::Operator(format!(
+            "stencil extents must be odd and >= 3, got {window:?}"
+        )));
+    }
+    let w_total: usize = window.iter().product();
+    let cols = ncols(nd);
+    let strides = row_major_strides(window);
+    let center_flat: usize = window
+        .iter()
+        .zip(&strides)
+        .map(|(&w, &s)| (w / 2) * s)
+        .sum();
+    let mut s = vec![0.0f32; w_total * cols];
+
+    let mut put = |axis_offsets: &[(usize, isize)], col: usize, val: f32| {
+        let mut flat = center_flat as isize;
+        for &(a, o) in axis_offsets {
+            flat += o * strides[a] as isize;
+        }
+        s[flat as usize * cols + col] += val;
+    };
+
+    // gradients: (f[+e_a] - f[-e_a]) / 2
+    for a in 0..nd {
+        put(&[(a, 1)], a, 0.5);
+        put(&[(a, -1)], a, -0.5);
+    }
+    // Hessian upper triangle, row-major over (a, b >= a)
+    let mut col = nd;
+    for a in 0..nd {
+        for b in a..nd {
+            if a == b {
+                put(&[(a, 1)], col, 1.0);
+                put(&[], col, -2.0);
+                put(&[(a, -1)], col, 1.0);
+            } else {
+                put(&[(a, 1), (b, 1)], col, 0.25);
+                put(&[(a, -1), (b, -1)], col, 0.25);
+                put(&[(a, 1), (b, -1)], col, -0.25);
+                put(&[(a, -1), (b, 1)], col, -0.25);
+            }
+            col += 1;
+        }
+    }
+    Ok(s)
+}
+
+/// Apply the stencil matrix to one melt row: returns the packed differentials.
+pub fn apply_stencil(row: &[f32], stencil: &[f32], cols: usize) -> Vec<f32> {
+    debug_assert_eq!(row.len() * cols, stencil.len());
+    let mut out = vec![0.0f32; cols];
+    for (w, srow) in row.iter().zip(stencil.chunks_exact(cols)) {
+        if *w == 0.0 {
+            continue;
+        }
+        for (o, s) in out.iter_mut().zip(srow) {
+            *o += w * s;
+        }
+    }
+    out
+}
+
+/// Sparse form of the stencil matrix: `(window_flat, col, weight)` triples.
+/// Central-difference stencils are ~90% zeros (a 3^3 window has 243 dense
+/// entries but only ~40 non-zeros), so the curvature hot loop contracts the
+/// sparse triples instead (see `kernels::curvature::curvature_into`).
+pub fn stencil_sparse(window: &[usize]) -> Result<Vec<(u32, u32, f32)>> {
+    let nd = window.len();
+    let cols = ncols(nd);
+    let dense = stencil_matrix(window)?;
+    let mut out = Vec::new();
+    for (flat, row) in dense.chunks_exact(cols).enumerate() {
+        for (c, &v) in row.iter().enumerate() {
+            if v != 0.0 {
+                out.push((flat as u32, c as u32, v));
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_allclose, check_property, SplitMix64};
+
+    #[test]
+    fn rejects_bad_windows() {
+        assert!(stencil_matrix(&[]).is_err());
+        assert!(stencil_matrix(&[1, 3]).is_err()); // extent < 3
+        assert!(stencil_matrix(&[4, 3]).is_err()); // even
+    }
+
+    #[test]
+    fn columns_annihilate_constants() {
+        for window in [vec![3, 3], vec![3, 3, 3], vec![5, 5]] {
+            let nd = window.len();
+            let s = stencil_matrix(&window).unwrap();
+            let w: usize = window.iter().product();
+            for c in 0..ncols(nd) {
+                let col_sum: f32 = (0..w).map(|r| s[r * ncols(nd) + c]).sum();
+                assert!(col_sum.abs() < 1e-6, "col {c} sums to {col_sum}");
+            }
+        }
+    }
+
+    #[test]
+    fn gradient_1d_central_difference() {
+        let s = stencil_matrix(&[3]).unwrap();
+        // f = [0, 1, 4]: g = (4-0)/2 = 2, h = 4 - 2 + 0 = 2
+        let d = apply_stencil(&[0.0, 1.0, 4.0], &s, ncols(1));
+        assert_allclose(&d, &[2.0, 2.0], 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn exact_on_quadratics_property() {
+        // m @ S recovers the exact gradient and Hessian of any quadratic.
+        check_property("stencil exact on quadratics", 25, |rng: &mut SplitMix64| {
+            let nd = 1 + rng.below(3);
+            let window = vec![3usize; nd];
+            let w: usize = window.iter().product();
+            // random symmetric A and vector b
+            let mut a = vec![0.0f64; nd * nd];
+            for r in 0..nd {
+                for c in 0..=r {
+                    let v = rng.normal() as f64;
+                    a[r * nd + c] = v;
+                    a[c * nd + r] = v;
+                }
+            }
+            let b: Vec<f64> = (0..nd).map(|_| rng.normal() as f64).collect();
+            // evaluate the quadratic on the window offsets (ravel order)
+            let strides = row_major_strides(&window);
+            let mut vals = vec![0.0f32; w];
+            for (flat, v) in vals.iter_mut().enumerate() {
+                let mut rem = flat;
+                let off: Vec<f64> = strides
+                    .iter()
+                    .zip(&window)
+                    .map(|(&s, &we)| {
+                        let i = rem / s;
+                        rem %= s;
+                        i as f64 - (we / 2) as f64
+                    })
+                    .collect();
+                let mut f = 0.0f64;
+                for r in 0..nd {
+                    f += b[r] * off[r];
+                    for c in 0..nd {
+                        f += 0.5 * a[r * nd + c] * off[r] * off[c];
+                    }
+                }
+                *v = f as f32;
+            }
+            let s = stencil_matrix(&window).unwrap();
+            let d = apply_stencil(&vals, &s, ncols(nd));
+            for r in 0..nd {
+                assert!(
+                    (d[r] as f64 - b[r]).abs() < 1e-4,
+                    "gradient axis {r}: {} vs {}",
+                    d[r],
+                    b[r]
+                );
+            }
+            let mut col = nd;
+            for r in 0..nd {
+                for c in r..nd {
+                    assert!(
+                        (d[col] as f64 - a[r * nd + c]).abs() < 1e-4,
+                        "H[{r}{c}]: {} vs {}",
+                        d[col],
+                        a[r * nd + c]
+                    );
+                    col += 1;
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn wider_windows_keep_3point_core() {
+        // extents > 3 still place the stencil around the centre
+        let s5 = stencil_matrix(&[5]).unwrap();
+        let d = apply_stencil(&[0.0, 0.0, 1.0, 4.0, 0.0], &s5, ncols(1));
+        // centre index 2: g = (4 - 0)/2 = 2 using +/-1 neighbours
+        assert_allclose(&d, &[2.0, 2.0], 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn ncols_formula() {
+        assert_eq!(ncols(1), 2);
+        assert_eq!(ncols(2), 5);
+        assert_eq!(ncols(3), 9);
+        assert_eq!(ncols(4), 14);
+    }
+}

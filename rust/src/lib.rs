@@ -1,0 +1,83 @@
+//! # meltframe
+//!
+//! Reproduction of *"Mathematical Computation on High-dimensional Data via
+//! Array Programming and Parallel Acceleration"* (Chen Zhang, 2025) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! The paper's central object is the **melt matrix**: a rank-2, row-decoupled
+//! intermediate derived from an arbitrary-rank dense tensor. Row `i` holds the
+//! raveled neighbourhood of output grid point `i`, so every
+//! neighbourhood-driven computation (global filtering, bilateral filtering,
+//! differential geometry, local statistics) becomes a broadcast over rows —
+//! and because rows are computationally independent, the melt matrix can be
+//! partitioned row-wise across parallel workers and re-aggregated exactly
+//! (paper §2.4, §3.1).
+//!
+//! ## Layer map
+//!
+//! - [`tensor`] — dense N-D tensor substrate (shapes, strides, ops, `.npy`
+//!   and PGM/PPM interchange, synthetic workload generators).
+//! - [`melt`] — the paper's contribution: quasi-grid calculus, melt/fold,
+//!   row partitioning with the §2.4 validity conditions.
+//! - [`kernels`] — native compute on melt matrices: gaussian, bilateral
+//!   (eq. 3), gaussian curvature (eq. 6/7), and the three execution
+//!   paradigms of Fig 7.
+//! - [`stats`] — mathematical-statistics substrate: small dense linear
+//!   algebra, the multivariate gaussian of Table 2, partition-aggregable
+//!   descriptive statistics, rank statistics under partitioning.
+//! - [`coordinator`] — L3: chunk planning, worker pool scheduling,
+//!   aggregation, metrics, multi-stage pipelines.
+//! - [`runtime`] — PJRT: loads the AOT artifacts (`artifacts/*.hlo.txt`
+//!   lowered from the L1 Pallas kernels by `python/compile/aot.py`),
+//!   compiles them once, and executes them from the hot path.
+//! - [`config`] / [`cli`] — run configuration (TOML subset + JSON manifest
+//!   parsing) and the command-line front end.
+//! - [`bench_harness`] — measurement harness used by `cargo bench`
+//!   (criterion substitute; see DESIGN.md §Substitutions).
+//! - [`testing`] — deterministic PRNG + property-test helpers.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use meltframe::prelude::*;
+//!
+//! // a synthetic noisy 3-D volume
+//! let vol = Tensor::<f32>::synthetic_volume(&[32, 32, 32], 42);
+//! // melt with a 3^3 operator, same-size grid, reflect boundary
+//! let op = Operator::cubic(3, 3).unwrap();
+//! let m = melt(&vol, &op, GridMode::Same, BoundaryMode::Reflect).unwrap();
+//! // gaussian broadcast over rows, folded back to the grid tensor
+//! let k = gaussian_kernel(op.window(), 1.0);
+//! let out = fold(&apply_kernel_broadcast(&m, &k), m.grid_shape()).unwrap();
+//! assert_eq!(out.shape(), vol.shape());
+//! ```
+
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod kernels;
+pub mod melt;
+pub mod runtime;
+pub mod stats;
+pub mod tensor;
+pub mod testing;
+
+pub mod prelude {
+    //! Convenience re-exports of the public API surface.
+    pub use crate::error::{Error, Result};
+    pub use crate::kernels::bilateral::{bilateral_adaptive, bilateral_const, BilateralParams};
+    pub use crate::kernels::curvature::gaussian_curvature;
+    pub use crate::kernels::gaussian::{gaussian_kernel, spatial_gaussian};
+    pub use crate::kernels::paradigm::{
+        apply_kernel_broadcast, apply_kernel_elementwise, apply_kernel_vectorwise, Paradigm,
+    };
+    pub use crate::melt::fold::fold;
+    pub use crate::melt::grid::{GridMode, QuasiGrid};
+    pub use crate::melt::matrix::MeltMatrix;
+    pub use crate::melt::melt::{melt, BoundaryMode};
+    pub use crate::melt::operator::Operator;
+    pub use crate::melt::partition::RowPartition;
+    pub use crate::tensor::dense::Tensor;
+}

@@ -1,0 +1,141 @@
+//! The fold (coupling) stage: per-row results -> grid tensor (Fig 2's final
+//! aggregation), plus partition-aware reassembly used by the coordinator.
+
+use crate::error::{Error, Result};
+use crate::tensor::dense::Tensor;
+
+/// Fold a per-row result vector back into the grid tensor of shape `s'`.
+pub fn fold(row_results: &[f32], grid_shape: &[usize]) -> Result<Tensor<f32>> {
+    let vol: usize = grid_shape.iter().product();
+    if row_results.len() != vol {
+        return Err(Error::shape(format!(
+            "fold: {} results vs grid volume {vol} ({grid_shape:?})",
+            row_results.len()
+        )));
+    }
+    Tensor::from_vec(grid_shape, row_results.to_vec())
+}
+
+/// Reassemble per-partition result chunks (in partition order) into the grid
+/// tensor. `ranges` are the row ranges of the partition; chunks may be padded
+/// beyond their range length (fixed-shape PJRT outputs) — the excess is
+/// sliced off, mirroring the coordinator's padding contract.
+pub fn fold_partitions(
+    chunks: &[Vec<f32>],
+    ranges: &[std::ops::Range<usize>],
+    grid_shape: &[usize],
+) -> Result<Tensor<f32>> {
+    if chunks.len() != ranges.len() {
+        return Err(Error::shape(format!(
+            "fold_partitions: {} chunks vs {} ranges",
+            chunks.len(),
+            ranges.len()
+        )));
+    }
+    let vol: usize = grid_shape.iter().product();
+    let mut out = vec![f32::NAN; vol];
+    let mut covered = 0usize;
+    for (chunk, range) in chunks.iter().zip(ranges) {
+        let n = range.len();
+        if chunk.len() < n {
+            return Err(Error::shape(format!(
+                "chunk of {} results cannot fill range {range:?}",
+                chunk.len()
+            )));
+        }
+        if range.end > vol {
+            return Err(Error::shape(format!(
+                "range {range:?} exceeds grid volume {vol}"
+            )));
+        }
+        out[range.start..range.end].copy_from_slice(&chunk[..n]);
+        covered += n;
+    }
+    if covered != vol {
+        return Err(Error::Partition(format!(
+            "partitions cover {covered} of {vol} grid points"
+        )));
+    }
+    Tensor::from_vec(grid_shape, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::melt::melt::{melt, BoundaryMode};
+    use crate::melt::grid::GridMode;
+    use crate::melt::operator::Operator;
+    use crate::testing::{assert_allclose, check_property, SplitMix64};
+
+    #[test]
+    fn fold_shapes() {
+        let t = fold(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.at(&[1, 2]), 6.0);
+        assert!(fold(&[1.0; 5], &[2, 3]).is_err());
+    }
+
+    #[test]
+    fn melt_then_center_fold_is_identity() {
+        // extracting the centre column and folding reproduces the tensor
+        let x = Tensor::random(&[4, 5, 3], -2.0, 2.0, 8).unwrap();
+        let op = Operator::cubic(3, 3).unwrap();
+        let m = melt(&x, &op, GridMode::Same, BoundaryMode::Reflect).unwrap();
+        let centers: Vec<f32> = (0..m.rows()).map(|r| m.row(r)[m.center()]).collect();
+        let back = fold(&centers, m.grid_shape()).unwrap();
+        assert_allclose(back.data(), x.data(), 0.0, 0.0);
+    }
+
+    #[test]
+    fn fold_partitions_reassembles() {
+        let chunks = vec![vec![0.0, 1.0, 2.0], vec![3.0, 4.0, 5.0]];
+        let ranges = vec![0..3, 3..6];
+        let t = fold_partitions(&chunks, &ranges, &[2, 3]).unwrap();
+        assert_eq!(t.data(), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn fold_partitions_slices_padding() {
+        // a padded fixed-shape chunk (PJRT contract): extra rows discarded
+        let chunks = vec![vec![0.0, 1.0, 2.0, 9.0, 9.0], vec![3.0, 4.0, 5.0, 9.0]];
+        let ranges = vec![0..3, 3..6];
+        let t = fold_partitions(&chunks, &ranges, &[6]).unwrap();
+        assert_eq!(t.data(), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn fold_partitions_detects_gaps_and_overruns() {
+        let chunks = vec![vec![0.0; 2], vec![0.0; 2]];
+        assert!(fold_partitions(&chunks, &[0..2, 3..5], &[6]).is_err()); // gap
+        assert!(fold_partitions(&chunks, &[0..2, 2..7], &[6]).is_err()); // overrun + short chunk
+        assert!(fold_partitions(&chunks, &[0..2], &[4]).is_err()); // count mismatch
+    }
+
+    #[test]
+    fn partition_order_independence_property() {
+        // §2.4: any row partition reassembles to the same tensor
+        check_property("fold_partitions == fold", 30, |rng: &mut SplitMix64| {
+            let n = 8 + rng.below(40);
+            let results = rng.uniform_vec(n, -5.0, 5.0);
+            // random contiguous partition
+            let mut cuts: Vec<usize> = vec![0, n];
+            for _ in 0..rng.below(4) {
+                cuts.push(rng.below(n));
+            }
+            cuts.sort_unstable();
+            cuts.dedup();
+            let ranges: Vec<std::ops::Range<usize>> = cuts
+                .windows(2)
+                .filter(|w| w[0] < w[1])
+                .map(|w| w[0]..w[1])
+                .collect();
+            let chunks: Vec<Vec<f32>> = ranges
+                .iter()
+                .map(|r| results[r.clone()].to_vec())
+                .collect();
+            let a = fold_partitions(&chunks, &ranges, &[n]).unwrap();
+            let b = fold(&results, &[n]).unwrap();
+            assert_allclose(a.data(), b.data(), 0.0, 0.0);
+        });
+    }
+}

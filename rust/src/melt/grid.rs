@@ -1,0 +1,183 @@
+//! The quasi-grid `f1` (paper Fig 2): computes which grid points (and hence
+//! how many melt rows) a traversal of tensor `x` under operator `m` visits.
+//!
+//! The paper's three ravel regimes (Fig 1) map to:
+//! - `Same`    — global filtering: the grid is `x`'s own structure (d_e);
+//! - `Valid`   — shrinking manipulations: only fully-interior points (d_l);
+//! - `Strided` — hyperplane families expanded with pre-defined stride
+//!   distances along their coordinates (d_g, e.g. pooling/downsampling).
+
+use crate::error::{Error, Result};
+use crate::melt::operator::Operator;
+use crate::tensor::shape::Shape;
+
+/// Grid construction mode.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GridMode {
+    /// One grid point per input element (output shape == input shape).
+    Same,
+    /// Only positions where the whole operator fits inside the tensor.
+    Valid,
+    /// `Same` semantics but sampling every `stride[a]`-th point on axis `a`.
+    Strided(Vec<usize>),
+}
+
+/// A resolved quasi-grid: output shape + per-axis start offset and stride
+/// mapping grid coordinates back to input coordinates.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QuasiGrid {
+    out_shape: Vec<usize>,
+    origin: Vec<isize>,
+    stride: Vec<usize>,
+}
+
+impl QuasiGrid {
+    /// Resolve a grid for `input_shape` under `op` and `mode`.
+    pub fn resolve(input_shape: &[usize], op: &Operator, mode: &GridMode) -> Result<Self> {
+        if input_shape.len() != op.rank() {
+            return Err(Error::shape(format!(
+                "operator rank {} vs tensor rank {}",
+                op.rank(),
+                input_shape.len()
+            )));
+        }
+        let radius = op.radius();
+        match mode {
+            GridMode::Same => Ok(Self {
+                out_shape: input_shape.to_vec(),
+                origin: vec![0; input_shape.len()],
+                stride: vec![1; input_shape.len()],
+            }),
+            GridMode::Valid => {
+                let mut out = Vec::with_capacity(input_shape.len());
+                for (a, (&d, &r)) in input_shape.iter().zip(&radius).enumerate() {
+                    if d < 2 * r + 1 {
+                        return Err(Error::shape(format!(
+                            "axis {a}: extent {d} smaller than operator window {}",
+                            2 * r + 1
+                        )));
+                    }
+                    out.push(d - 2 * r);
+                }
+                Ok(Self {
+                    out_shape: out,
+                    origin: radius.iter().map(|&r| r as isize).collect(),
+                    stride: vec![1; input_shape.len()],
+                })
+            }
+            GridMode::Strided(strides) => {
+                if strides.len() != input_shape.len() {
+                    return Err(Error::shape(format!(
+                        "stride rank {} vs tensor rank {}",
+                        strides.len(),
+                        input_shape.len()
+                    )));
+                }
+                if strides.iter().any(|&s| s == 0) {
+                    return Err(Error::shape("zero stride"));
+                }
+                // crossover points of the expanded hyperplane families:
+                // ceil(d / stride) sample points per axis, starting at 0.
+                let out: Vec<usize> = input_shape
+                    .iter()
+                    .zip(strides)
+                    .map(|(&d, &s)| d.div_ceil(s))
+                    .collect();
+                Ok(Self {
+                    out_shape: out,
+                    origin: vec![0; input_shape.len()],
+                    stride: strides.clone(),
+                })
+            }
+        }
+    }
+
+    /// The grid tensor's shape `s'` (defines the melt row count).
+    pub fn out_shape(&self) -> &[usize] {
+        &self.out_shape
+    }
+
+    /// Total number of grid points (= melt matrix rows).
+    pub fn rows(&self) -> usize {
+        self.out_shape.iter().product()
+    }
+
+    /// Per-axis grid-to-input stride.
+    pub fn stride(&self) -> &[usize] {
+        &self.stride
+    }
+
+    /// Map a grid multi-index to the input-space coordinates of its centre.
+    pub fn to_input(&self, grid_idx: &[usize]) -> Vec<isize> {
+        grid_idx
+            .iter()
+            .zip(&self.origin)
+            .zip(&self.stride)
+            .map(|((&g, &o), &s)| o + (g * s) as isize)
+            .collect()
+    }
+
+    /// Shape object for ravel/unravel over the grid.
+    pub fn shape_obj(&self) -> Shape {
+        Shape::new(&self.out_shape).expect("grid shapes are validated non-empty")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(window: &[usize]) -> Operator {
+        Operator::new(window).unwrap()
+    }
+
+    #[test]
+    fn same_grid_is_input_shape() {
+        let g = QuasiGrid::resolve(&[10, 12], &op(&[3, 3]), &GridMode::Same).unwrap();
+        assert_eq!(g.out_shape(), &[10, 12]);
+        assert_eq!(g.rows(), 120);
+        assert_eq!(g.to_input(&[0, 0]), vec![0, 0]);
+        assert_eq!(g.to_input(&[9, 11]), vec![9, 11]);
+    }
+
+    #[test]
+    fn valid_grid_shrinks_by_window() {
+        let g = QuasiGrid::resolve(&[10, 12], &op(&[3, 5]), &GridMode::Valid).unwrap();
+        assert_eq!(g.out_shape(), &[8, 8]);
+        // first valid centre is the radius
+        assert_eq!(g.to_input(&[0, 0]), vec![1, 2]);
+        assert_eq!(g.to_input(&[7, 7]), vec![8, 9]);
+    }
+
+    #[test]
+    fn valid_grid_rejects_small_tensor() {
+        assert!(QuasiGrid::resolve(&[2, 10], &op(&[3, 3]), &GridMode::Valid).is_err());
+    }
+
+    #[test]
+    fn strided_grid_ceil_semantics() {
+        let g = QuasiGrid::resolve(&[10, 9], &op(&[3, 3]), &GridMode::Strided(vec![2, 3])).unwrap();
+        assert_eq!(g.out_shape(), &[5, 3]);
+        assert_eq!(g.to_input(&[1, 1]), vec![2, 3]);
+        assert_eq!(g.to_input(&[4, 2]), vec![8, 6]);
+    }
+
+    #[test]
+    fn strided_rejects_bad_strides() {
+        assert!(QuasiGrid::resolve(&[10], &op(&[3]), &GridMode::Strided(vec![0])).is_err());
+        assert!(QuasiGrid::resolve(&[10], &op(&[3]), &GridMode::Strided(vec![1, 1])).is_err());
+    }
+
+    #[test]
+    fn rank_mismatch_rejected() {
+        assert!(QuasiGrid::resolve(&[10, 10], &op(&[3]), &GridMode::Same).is_err());
+    }
+
+    #[test]
+    fn stride_one_equals_same() {
+        let a = QuasiGrid::resolve(&[7, 8], &op(&[3, 3]), &GridMode::Same).unwrap();
+        let b = QuasiGrid::resolve(&[7, 8], &op(&[3, 3]), &GridMode::Strided(vec![1, 1])).unwrap();
+        assert_eq!(a.out_shape(), b.out_shape());
+        assert_eq!(a.to_input(&[3, 4]), b.to_input(&[3, 4]));
+    }
+}

@@ -1,0 +1,170 @@
+//! The melt matrix intermediate structure (paper Fig 1/2).
+//!
+//! Besides the rank-2 data, the structure carries the grid shape `s'` and
+//! the operator's ravel metadata — "for the facilitation for subsequent
+//! partition, broadcast operations ... as well as further aggregation
+//! manipulations" (paper §3.1).
+
+use crate::error::{Error, Result};
+use crate::tensor::dense::Tensor;
+
+/// Row-decoupled melt matrix: `rows x cols` f32 in row-major order, plus the
+/// metadata needed to fold results back and to re-melt on workers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MeltMatrix {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+    grid_shape: Vec<usize>,
+    window: Vec<usize>,
+}
+
+impl MeltMatrix {
+    /// Assemble from parts (checked).
+    pub fn new(
+        data: Vec<f32>,
+        rows: usize,
+        cols: usize,
+        grid_shape: Vec<usize>,
+        window: Vec<usize>,
+    ) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::shape(format!(
+                "melt data length {} != {rows}x{cols}",
+                data.len()
+            )));
+        }
+        if grid_shape.iter().product::<usize>() != rows {
+            return Err(Error::shape(format!(
+                "grid shape {grid_shape:?} volume != rows {rows}"
+            )));
+        }
+        if window.iter().product::<usize>() != cols {
+            return Err(Error::shape(format!(
+                "window {window:?} ravel length != cols {cols}"
+            )));
+        }
+        Ok(Self {
+            data,
+            rows,
+            cols,
+            grid_shape,
+            window,
+        })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The grid tensor shape `s'` results fold back to.
+    pub fn grid_shape(&self) -> &[usize] {
+        &self.grid_shape
+    }
+
+    /// The operator extents this matrix was melted with.
+    pub fn window(&self) -> &[usize] {
+        &self.window
+    }
+
+    /// Flat column index of the operator centre.
+    pub fn center(&self) -> usize {
+        self.cols / 2
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// One row (the raveled neighbourhood of grid point `r`).
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Zero-copy view of a contiguous row block `[start, end)` — the unit of
+    /// work the coordinator ships to workers.
+    pub fn row_block(&self, start: usize, end: usize) -> Result<&[f32]> {
+        if start > end || end > self.rows {
+            return Err(Error::shape(format!(
+                "row block {start}..{end} out of range 0..{}",
+                self.rows
+            )));
+        }
+        Ok(&self.data[start * self.cols..end * self.cols])
+    }
+
+    /// Owned sub-matrix over a row range (used when a partition must be
+    /// shipped across an ownership boundary, e.g. into a PJRT literal).
+    pub fn sub_matrix(&self, start: usize, end: usize) -> Result<MeltMatrix> {
+        let block = self.row_block(start, end)?.to_vec();
+        MeltMatrix::new(
+            block,
+            end - start,
+            self.cols,
+            vec![end - start],
+            self.window.clone(),
+        )
+    }
+
+    /// View the melt matrix as a rank-2 tensor (copies).
+    pub fn to_tensor(&self) -> Tensor<f32> {
+        Tensor::from_vec(&[self.rows, self.cols], self.data.clone())
+            .expect("melt dims are consistent by construction")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> MeltMatrix {
+        MeltMatrix::new((0..24).map(|i| i as f32).collect(), 8, 3, vec![2, 4], vec![3]).unwrap()
+    }
+
+    #[test]
+    fn construction_validates() {
+        assert!(MeltMatrix::new(vec![0.0; 10], 5, 2, vec![5], vec![3]).is_err()); // window
+        assert!(MeltMatrix::new(vec![0.0; 10], 5, 2, vec![4], vec![1, 1, 2]).is_err()); // grid
+        assert!(MeltMatrix::new(vec![0.0; 9], 5, 2, vec![5], vec![1, 1, 2]).is_err()); // len
+    }
+
+    #[test]
+    fn rows_and_blocks() {
+        let m = sample();
+        assert_eq!(m.row(2), &[6.0, 7.0, 8.0]);
+        assert_eq!(m.row_block(1, 3).unwrap(), &[3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        assert!(m.row_block(7, 9).is_err());
+        assert!(m.row_block(3, 2).is_err());
+    }
+
+    #[test]
+    fn sub_matrix_is_self_contained() {
+        let m = sample();
+        let s = m.sub_matrix(2, 5).unwrap();
+        assert_eq!(s.rows(), 3);
+        assert_eq!(s.cols(), 3);
+        assert_eq!(s.row(0), m.row(2));
+        assert_eq!(s.window(), m.window());
+    }
+
+    #[test]
+    fn to_tensor_shape() {
+        let t = sample().to_tensor();
+        assert_eq!(t.shape(), &[8, 3]);
+        assert_eq!(t.at(&[1, 1]), 4.0);
+    }
+
+    #[test]
+    fn center_column() {
+        let m = MeltMatrix::new(vec![0.0; 45], 5, 9, vec![5], vec![3, 3]).unwrap();
+        assert_eq!(m.center(), 4);
+    }
+}

@@ -1,0 +1,473 @@
+//! The melt operation: tensor -> melt matrix (the "decoupling" of Fig 2).
+//!
+//! Implementation notes. The gather is factored per axis: for axis `a` we
+//! precompute `table[a][g][w]` = the flat-stride contribution of grid
+//! position `g` combined with window offset `w` after boundary mapping.
+//! The flat source index of any (grid point, window offset) pair is then a
+//! sum of per-axis contributions, so the inner loop is pure integer adds —
+//! no division, no per-element boundary branching on the hot path (boundary
+//! handling is amortized into the tables). `Constant` mode, whose
+//! out-of-range cells have no source index, uses a sentinel-checking path.
+
+use crate::error::{Error, Result};
+use crate::melt::grid::{GridMode, QuasiGrid};
+use crate::melt::matrix::MeltMatrix;
+use crate::melt::operator::Operator;
+use crate::tensor::dense::Tensor;
+use crate::tensor::shape::row_major_strides;
+
+/// Out-of-range handling at tensor borders.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BoundaryMode {
+    /// Mirror without repeating the edge sample (numpy `reflect`) — the
+    /// default used throughout the paper's experiments and by `ref.py`.
+    Reflect,
+    /// Clamp to the nearest edge sample (numpy `edge`).
+    Nearest,
+    /// Fill with a constant.
+    Constant(f32),
+    /// Periodic wrap (numpy `wrap`).
+    Wrap,
+}
+
+/// Map coordinate `i` (possibly out of range) into `[0, d)` per `mode`.
+/// Returns `None` only for `Constant`.
+fn map_coord(i: isize, d: usize, mode: BoundaryMode) -> Option<usize> {
+    let d = d as isize;
+    if (0..d).contains(&i) {
+        return Some(i as usize);
+    }
+    match mode {
+        BoundaryMode::Reflect => {
+            if d == 1 {
+                return Some(0);
+            }
+            // period of the reflect pattern is 2(d-1)
+            let p = 2 * (d - 1);
+            let mut m = i.rem_euclid(p);
+            if m >= d {
+                m = p - m;
+            }
+            Some(m as usize)
+        }
+        BoundaryMode::Nearest => Some(i.clamp(0, d - 1) as usize),
+        BoundaryMode::Wrap => Some(i.rem_euclid(d) as usize),
+        BoundaryMode::Constant(_) => None,
+    }
+}
+
+/// Per-axis contribution tables: `tables[a][g * window[a] + w]` holds the
+/// stride-scaled mapped index, or -1 for Constant out-of-range.
+fn build_tables(
+    input_shape: &[usize],
+    grid: &QuasiGrid,
+    op: &Operator,
+    mode: BoundaryMode,
+) -> Vec<Vec<i64>> {
+    let strides = row_major_strides(input_shape);
+    let radius = op.radius();
+    let mut tables = Vec::with_capacity(input_shape.len());
+    for a in 0..input_shape.len() {
+        let w = op.window()[a];
+        let ge = grid.out_shape()[a];
+        let mut table = vec![0i64; ge * w];
+        for g in 0..ge {
+            // input-space centre coordinate on this axis
+            let centre = grid.to_input(&unit_idx(a, g, grid.out_shape().len()))[a];
+            for k in 0..w {
+                let coord = centre + k as isize - radius[a] as isize;
+                table[g * w + k] = match map_coord(coord, input_shape[a], mode) {
+                    Some(c) => (c * strides[a]) as i64,
+                    None => -1,
+                };
+            }
+        }
+        tables.push(table);
+    }
+    tables
+}
+
+/// Helper: a grid multi-index that is `g` on axis `a` and 0 elsewhere.
+fn unit_idx(a: usize, g: usize, rank: usize) -> Vec<usize> {
+    let mut idx = vec![0usize; rank];
+    idx[a] = g;
+    idx
+}
+
+/// Allocate an uninitialized f32 buffer that the caller promises to fill
+/// completely before reading. `melt_into` writes every element of its
+/// output (both gather paths cover all `cols` of every row), so skipping
+/// the ~`rows*cols*4`-byte memset is sound and saves a full write pass
+/// over the buffer (§Perf iteration 4).
+pub(crate) fn uninit_buffer(n: usize) -> Vec<f32> {
+    let mut v = Vec::with_capacity(n);
+    // SAFETY: f32 has no drop glue and no invalid bit patterns; every
+    // element is overwritten by melt_into before any read.
+    #[allow(clippy::uninit_vec)]
+    unsafe {
+        v.set_len(n);
+    }
+    v
+}
+
+/// Melt `x` under operator `op` on the quasi-grid of `mode`, allocating the
+/// output matrix.
+pub fn melt(
+    x: &Tensor<f32>,
+    op: &Operator,
+    grid_mode: GridMode,
+    boundary: BoundaryMode,
+) -> Result<MeltMatrix> {
+    let grid = QuasiGrid::resolve(x.shape(), op, &grid_mode)?;
+    let rows = grid.rows();
+    let cols = op.ravel_len();
+    let mut data = uninit_buffer(rows * cols);
+    melt_into(x, op, &grid, boundary, &mut data)?;
+    MeltMatrix::new(data, rows, cols, grid.out_shape().to_vec(), op.window().to_vec())
+}
+
+/// Melt into a caller-provided buffer of exactly `grid.rows() * op.ravel_len()`
+/// elements — the allocation-free path the coordinator hot loop uses.
+pub fn melt_into(
+    x: &Tensor<f32>,
+    op: &Operator,
+    grid: &QuasiGrid,
+    boundary: BoundaryMode,
+    out: &mut [f32],
+) -> Result<()> {
+    let rank = x.rank();
+    if op.rank() != rank {
+        return Err(Error::shape(format!(
+            "operator rank {} vs tensor rank {rank}",
+            op.rank()
+        )));
+    }
+    let rows = grid.rows();
+    let cols = op.ravel_len();
+    if out.len() != rows * cols {
+        return Err(Error::shape(format!(
+            "melt_into buffer length {} != {rows}x{cols}",
+            out.len()
+        )));
+    }
+    let tables = build_tables(x.shape(), grid, op, boundary);
+    let window = op.window();
+    let src = x.data();
+    let fill = match boundary {
+        BoundaryMode::Constant(c) => c,
+        _ => 0.0,
+    };
+    let has_sentinel = matches!(boundary, BoundaryMode::Constant(_));
+
+    // ---- interior fast path precomputation --------------------------------
+    // A grid point whose whole window stays in bounds needs no boundary
+    // mapping: its row is prod(window[..rank-1]) *contiguous* runs of
+    // window[rank-1] source elements (innermost stride is 1 in row-major),
+    // so the hot loop is pure memcpy. Precompute per-axis interiority and
+    // the source deltas of the leading-offset combinations.
+    let dims = x.shape();
+    let radius = op.radius();
+    let strides_in = row_major_strides(dims);
+    // interior[a][g]: window fully in bounds on axis a at grid position g
+    let interior: Vec<Vec<bool>> = (0..rank)
+        .map(|a| {
+            (0..grid.out_shape()[a])
+                .map(|g| {
+                    let c = grid.to_input(&unit_idx(a, g, rank))[a];
+                    c >= radius[a] as isize && c + (radius[a] as isize) < dims[a] as isize
+                })
+                .collect()
+        })
+        .collect();
+    // source deltas for every combination of leading-axis window offsets
+    let wlast = window[rank - 1];
+    let mut prefix_deltas: Vec<isize> = vec![0];
+    for a in 0..rank - 1 {
+        let mut next = Vec::with_capacity(prefix_deltas.len() * window[a]);
+        for &d in &prefix_deltas {
+            for k in 0..window[a] {
+                next.push(d + (k as isize - radius[a] as isize) * strides_in[a] as isize);
+            }
+        }
+        prefix_deltas = next;
+    }
+
+    // odometer over grid indices; per-axis running contributions let us
+    // avoid re-deriving the multi-index per row.
+    let gshape = grid.out_shape().to_vec();
+    let mut gidx = vec![0usize; rank];
+    let mut wtab: Vec<&[i64]> = (0..rank)
+        .map(|a| &tables[a][0..window[a]])
+        .collect();
+    // running centre flat index for the fast path
+    let mut centre_flat: isize = {
+        let c0 = grid.to_input(&gidx);
+        (0..rank).map(|a| c0[a] * strides_in[a] as isize).sum()
+    };
+    for r in 0..rows {
+        let dst = &mut out[r * cols..(r + 1) * cols];
+        if (0..rank).all(|a| interior[a][gidx[a]]) {
+            // fast path: contiguous runs, no boundary mapping. The run
+            // length is the innermost window extent — typically 3 or 5 —
+            // so fixed-width copies beat generic memcpy dispatch.
+            let base = centre_flat - radius[rank - 1] as isize;
+            match wlast {
+                3 => {
+                    for (seg, &pd) in dst.chunks_exact_mut(3).zip(prefix_deltas.iter()) {
+                        let s = (base + pd) as usize;
+                        let run: [f32; 3] = src[s..s + 3].try_into().unwrap();
+                        seg.copy_from_slice(&run);
+                    }
+                }
+                5 => {
+                    for (seg, &pd) in dst.chunks_exact_mut(5).zip(prefix_deltas.iter()) {
+                        let s = (base + pd) as usize;
+                        let run: [f32; 5] = src[s..s + 5].try_into().unwrap();
+                        seg.copy_from_slice(&run);
+                    }
+                }
+                _ => {
+                    for (seg, &pd) in dst.chunks_exact_mut(wlast).zip(prefix_deltas.iter()) {
+                        let s = (base + pd) as usize;
+                        seg.copy_from_slice(&src[s..s + wlast]);
+                    }
+                }
+            }
+        } else {
+            gather_row_slow(dst, src, &wtab, window, rank, fill, has_sentinel);
+        }
+        // increment grid odometer and refresh per-axis table slices
+        if r + 1 < rows {
+            for a in (0..rank).rev() {
+                gidx[a] += 1;
+                centre_flat += (grid.stride()[a] * strides_in[a]) as isize;
+                if gidx[a] < gshape[a] {
+                    wtab[a] = &tables[a][gidx[a] * window[a]..(gidx[a] + 1) * window[a]];
+                    break;
+                }
+                gidx[a] = 0;
+                centre_flat -= (gshape[a] * grid.stride()[a] * strides_in[a]) as isize;
+                wtab[a] = &tables[a][0..window[a]];
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Slow-path gather for one (boundary-touching) row: odometer over window
+/// offsets accumulating per-axis table contributions.
+fn gather_row_slow(
+    dst: &mut [f32],
+    src: &[f32],
+    wtab: &[&[i64]],
+    window: &[usize],
+    rank: usize,
+    fill: f32,
+    has_sentinel: bool,
+) {
+    let mut widx = vec![0usize; rank];
+    // sentinel entries contribute 0 to acc and 1 to neg
+    let mut acc: i64 = wtab.iter().map(|t| t[0].max(0)).sum();
+    let mut neg = wtab.iter().filter(|t| t[0] < 0).count();
+    for d in dst.iter_mut() {
+        *d = if has_sentinel && neg > 0 {
+            fill
+        } else {
+            src[acc as usize]
+        };
+        // increment window odometer
+        for a in (0..rank).rev() {
+            let t = wtab[a];
+            let old = t[widx[a]];
+            if old < 0 {
+                neg -= 1;
+            } else {
+                acc -= old;
+            }
+            widx[a] += 1;
+            if widx[a] < window[a] {
+                let new = t[widx[a]];
+                if new < 0 {
+                    neg += 1;
+                } else {
+                    acc += new;
+                }
+                break;
+            }
+            widx[a] = 0;
+            let new = t[0];
+            if new < 0 {
+                neg += 1;
+            } else {
+                acc += new;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_allclose, check_property, SplitMix64};
+
+    fn melt_naive(
+        x: &Tensor<f32>,
+        op: &Operator,
+        grid: &QuasiGrid,
+        boundary: BoundaryMode,
+    ) -> Vec<f32> {
+        // direct per-element gather — the obviously-correct oracle
+        let mut out = Vec::with_capacity(grid.rows() * op.ravel_len());
+        for gidx in grid.shape_obj().iter_indices() {
+            let centre = grid.to_input(&gidx);
+            for off in op.offsets() {
+                let mut idx = Vec::with_capacity(x.rank());
+                let mut outside = false;
+                for a in 0..x.rank() {
+                    match map_coord(centre[a] + off[a], x.shape()[a], boundary) {
+                        Some(c) => idx.push(c),
+                        None => {
+                            outside = true;
+                            break;
+                        }
+                    }
+                }
+                out.push(if outside {
+                    match boundary {
+                        BoundaryMode::Constant(c) => c,
+                        _ => unreachable!(),
+                    }
+                } else {
+                    x.at(&idx)
+                });
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn map_coord_reflect() {
+        // numpy reflect on d=4: -2 -> 2, -1 -> 1, 4 -> 2, 5 -> 1
+        assert_eq!(map_coord(-2, 4, BoundaryMode::Reflect), Some(2));
+        assert_eq!(map_coord(-1, 4, BoundaryMode::Reflect), Some(1));
+        assert_eq!(map_coord(4, 4, BoundaryMode::Reflect), Some(2));
+        assert_eq!(map_coord(5, 4, BoundaryMode::Reflect), Some(1));
+        assert_eq!(map_coord(0, 1, BoundaryMode::Reflect), Some(0));
+        assert_eq!(map_coord(3, 1, BoundaryMode::Reflect), Some(0));
+    }
+
+    #[test]
+    fn map_coord_other_modes() {
+        assert_eq!(map_coord(-3, 4, BoundaryMode::Nearest), Some(0));
+        assert_eq!(map_coord(9, 4, BoundaryMode::Nearest), Some(3));
+        assert_eq!(map_coord(-1, 4, BoundaryMode::Wrap), Some(3));
+        assert_eq!(map_coord(4, 4, BoundaryMode::Wrap), Some(0));
+        assert_eq!(map_coord(-1, 4, BoundaryMode::Constant(9.0)), None);
+        assert_eq!(map_coord(2, 4, BoundaryMode::Constant(9.0)), Some(2));
+    }
+
+    #[test]
+    fn center_column_is_input_ravel() {
+        let x = Tensor::random(&[5, 6], 0.0, 10.0, 1).unwrap();
+        let op = Operator::cubic(3, 2).unwrap();
+        let m = melt(&x, &op, GridMode::Same, BoundaryMode::Reflect).unwrap();
+        assert_eq!(m.rows(), 30);
+        assert_eq!(m.cols(), 9);
+        for r in 0..m.rows() {
+            assert_eq!(m.row(r)[m.center()], x.data()[r]);
+        }
+    }
+
+    #[test]
+    fn interior_row_is_exact_neighbourhood() {
+        let x = Tensor::random(&[4, 5, 6], -1.0, 1.0, 2).unwrap();
+        let op = Operator::cubic(3, 3).unwrap();
+        let m = melt(&x, &op, GridMode::Same, BoundaryMode::Reflect).unwrap();
+        // interior point (2, 2, 3)
+        let flat = x.shape_obj().ravel(&[2, 2, 3]);
+        let row = m.row(flat);
+        let mut col = 0;
+        for dz in -1isize..=1 {
+            for dy in -1isize..=1 {
+                for dx in -1isize..=1 {
+                    let v = x.at(&[
+                        (2 + dz) as usize,
+                        (2 + dy) as usize,
+                        (3 + dx) as usize,
+                    ]);
+                    assert_eq!(row[col], v, "col {col}");
+                    col += 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_naive_all_modes_property() {
+        let modes = [
+            BoundaryMode::Reflect,
+            BoundaryMode::Nearest,
+            BoundaryMode::Wrap,
+            BoundaryMode::Constant(-7.5),
+        ];
+        check_property("melt == naive gather", 40, |rng: &mut SplitMix64| {
+            let rank = 1 + rng.below(3);
+            let dims: Vec<usize> = (0..rank).map(|_| 3 + rng.below(5)).collect();
+            let window: Vec<usize> = (0..rank).map(|_| 1 + 2 * rng.below(2)).collect();
+            let n: usize = dims.iter().product();
+            let x = Tensor::from_vec(&dims, rng.uniform_vec(n, -9.0, 9.0)).unwrap();
+            let op = Operator::new(&window).unwrap();
+            let boundary = modes[rng.below(modes.len())];
+            let gm = match rng.below(3) {
+                0 => GridMode::Same,
+                1 => GridMode::Valid,
+                _ => GridMode::Strided((0..rank).map(|_| 1 + rng.below(2)).collect()),
+            };
+            let grid = match QuasiGrid::resolve(&dims, &op, &gm) {
+                Ok(g) => g,
+                Err(_) => return, // valid mode on small tensors can reject
+            };
+            let m = melt(&x, &op, gm, boundary).unwrap();
+            let want = melt_naive(&x, &op, &grid, boundary);
+            assert_allclose(m.data(), &want, 0.0, 0.0);
+        });
+    }
+
+    #[test]
+    fn valid_grid_needs_no_boundary() {
+        // in Valid mode every window fits: Constant and Reflect must agree
+        let x = Tensor::random(&[6, 7], 0.0, 1.0, 4).unwrap();
+        let op = Operator::cubic(3, 2).unwrap();
+        let a = melt(&x, &op, GridMode::Valid, BoundaryMode::Constant(999.0)).unwrap();
+        let b = melt(&x, &op, GridMode::Valid, BoundaryMode::Reflect).unwrap();
+        assert_allclose(a.data(), b.data(), 0.0, 0.0);
+    }
+
+    #[test]
+    fn constant_mode_fills_borders() {
+        let x = Tensor::full(&[3], 1.0).unwrap();
+        let op = Operator::new(&[3]).unwrap();
+        let m = melt(&x, &op, GridMode::Same, BoundaryMode::Constant(5.0)).unwrap();
+        assert_eq!(m.row(0), &[5.0, 1.0, 1.0]);
+        assert_eq!(m.row(2), &[1.0, 1.0, 5.0]);
+    }
+
+    #[test]
+    fn melt_into_rejects_bad_buffer() {
+        let x = Tensor::full(&[4], 0.0).unwrap();
+        let op = Operator::new(&[3]).unwrap();
+        let grid = QuasiGrid::resolve(&[4], &op, &GridMode::Same).unwrap();
+        let mut buf = vec![0.0; 5];
+        assert!(melt_into(&x, &op, &grid, BoundaryMode::Reflect, &mut buf).is_err());
+    }
+
+    #[test]
+    fn python_ref_cross_check_2d() {
+        // mirror of python tests/test_ref_properties.py::test_melt_reflect_boundary_2d
+        let x = Tensor::from_vec(&[3, 3], (0..9).map(|i| i as f32).collect()).unwrap();
+        let op = Operator::cubic(3, 2).unwrap();
+        let m = melt(&x, &op, GridMode::Same, BoundaryMode::Reflect).unwrap();
+        // numpy pad reflect around corner (0,0)
+        assert_eq!(m.row(0), &[4.0, 3.0, 4.0, 1.0, 0.0, 1.0, 4.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,33 @@
+//! The melt matrix — the paper's central contribution (§3.1, Figs 1–2).
+//!
+//! A melt matrix of tensor `x` under neighbourhood operator `m` is the
+//! rank-2 array whose row `i` is the raveled `m`-superposed region of `x`
+//! at grid point `i` of the quasi-grid `f1(x)`. It simultaneously satisfies
+//! the three partition conditions of §2.4 *and* gives row-wise computational
+//! independence, which is what licenses parallel acceleration:
+//!
+//! ```text
+//! x (any rank) --melt--> M (rank 2) --partition--> row blocks
+//!                                      | broadcast kernel per block
+//! out (grid)  <--fold---  per-row results <--aggregate--
+//! ```
+//!
+//! Submodules: [`operator`] (the user tensor `m`), [`grid`] (the quasi-grid
+//! `f1`), [`melt`] (the decoupling), [`matrix`] (the intermediate
+//! structure), [`fold`] (the coupling back), [`partition`] (row partitions
+//! with §2.4 validity).
+
+pub mod fold;
+pub mod grid;
+pub mod matrix;
+#[allow(clippy::module_inception)]
+pub mod melt;
+pub mod operator;
+pub mod partition;
+
+pub use fold::fold;
+pub use grid::{GridMode, QuasiGrid};
+pub use matrix::MeltMatrix;
+pub use melt::{melt, melt_into, BoundaryMode};
+pub use operator::Operator;
+pub use partition::RowPartition;

@@ -1,0 +1,153 @@
+//! The neighbourhood operator `m` (paper Fig 2): a user-customized tensor of
+//! the same rank as the data, defining the local region each melt row sees.
+
+use crate::error::{Error, Result};
+
+/// A neighbourhood operator: per-axis odd extents centred on the grid point.
+///
+/// The operator's *ravel vector* `v` (its raveled weights, when it carries
+/// weights) and its extents travel with the melt matrix so downstream
+/// broadcast/aggregation steps can be built without the original tensor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Operator {
+    window: Vec<usize>,
+}
+
+impl Operator {
+    /// Operator with explicit per-axis extents; all must be odd and >= 1.
+    pub fn new(window: &[usize]) -> Result<Self> {
+        if window.is_empty() {
+            return Err(Error::Operator("empty operator window".into()));
+        }
+        if window.iter().any(|&w| w == 0 || w % 2 == 0) {
+            return Err(Error::Operator(format!(
+                "operator extents must be odd and positive, got {window:?}"
+            )));
+        }
+        Ok(Self {
+            window: window.to_vec(),
+        })
+    }
+
+    /// Isotropic operator: `extent` repeated over `rank` axes
+    /// (e.g. `cubic(3, 3)` is the 3x3x3 voxel operator).
+    pub fn cubic(extent: usize, rank: usize) -> Result<Self> {
+        if rank == 0 {
+            return Err(Error::Operator("rank-0 operator".into()));
+        }
+        Self::new(&vec![extent; rank])
+    }
+
+    pub fn rank(&self) -> usize {
+        self.window.len()
+    }
+
+    pub fn window(&self) -> &[usize] {
+        &self.window
+    }
+
+    /// Number of elements in the operator's ravel vector (melt column count).
+    pub fn ravel_len(&self) -> usize {
+        self.window.iter().product()
+    }
+
+    /// Per-axis half-extents (radius).
+    pub fn radius(&self) -> Vec<usize> {
+        self.window.iter().map(|w| w / 2).collect()
+    }
+
+    /// Flat column index of the operator's centre (the grid point itself).
+    pub fn center(&self) -> usize {
+        self.ravel_len() / 2 // odd extents -> ravel midpoint
+    }
+
+    /// All window offsets relative to the centre, in ravel (row-major) order.
+    /// This column order is the contract shared with `python/compile/kernels`.
+    pub fn offsets(&self) -> Vec<Vec<isize>> {
+        let mut out = Vec::with_capacity(self.ravel_len());
+        let mut idx = vec![0usize; self.rank()];
+        loop {
+            out.push(
+                idx.iter()
+                    .zip(&self.window)
+                    .map(|(&i, &w)| i as isize - (w / 2) as isize)
+                    .collect(),
+            );
+            // odometer
+            let mut a = self.rank();
+            loop {
+                if a == 0 {
+                    return out;
+                }
+                a -= 1;
+                idx[a] += 1;
+                if idx[a] < self.window[a] {
+                    break;
+                }
+                idx[a] = 0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_even_or_zero_extent() {
+        assert!(Operator::new(&[3, 4]).is_err());
+        assert!(Operator::new(&[0]).is_err());
+        assert!(Operator::new(&[]).is_err());
+        assert!(Operator::cubic(3, 0).is_err());
+    }
+
+    #[test]
+    fn cubic_builds_isotropic() {
+        let op = Operator::cubic(5, 3).unwrap();
+        assert_eq!(op.window(), &[5, 5, 5]);
+        assert_eq!(op.ravel_len(), 125);
+        assert_eq!(op.radius(), vec![2, 2, 2]);
+        assert_eq!(op.center(), 62);
+    }
+
+    #[test]
+    fn center_is_zero_offset() {
+        for window in [vec![3, 3], vec![5, 3], vec![3, 3, 3], vec![1, 5, 3]] {
+            let op = Operator::new(&window).unwrap();
+            let offs = op.offsets();
+            assert_eq!(offs.len(), op.ravel_len());
+            assert!(offs[op.center()].iter().all(|&o| o == 0));
+        }
+    }
+
+    #[test]
+    fn offsets_row_major_order_2d() {
+        let op = Operator::new(&[3, 3]).unwrap();
+        let offs = op.offsets();
+        assert_eq!(offs[0], vec![-1, -1]);
+        assert_eq!(offs[1], vec![-1, 0]);
+        assert_eq!(offs[3], vec![0, -1]);
+        assert_eq!(offs[8], vec![1, 1]);
+    }
+
+    #[test]
+    fn offsets_symmetric() {
+        // window offsets come in +/- pairs summing to zero overall
+        let op = Operator::new(&[3, 5, 3]).unwrap();
+        let sum: Vec<isize> = op.offsets().iter().fold(vec![0; 3], |mut acc, o| {
+            for (a, v) in o.iter().enumerate() {
+                acc[a] += v;
+            }
+            acc
+        });
+        assert_eq!(sum, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn anisotropic_extents() {
+        let op = Operator::new(&[1, 5]).unwrap();
+        assert_eq!(op.ravel_len(), 5);
+        assert_eq!(op.radius(), vec![0, 2]);
+    }
+}

@@ -1,0 +1,203 @@
+//! Row partitions of a melt matrix with the §2.4 validity conditions.
+//!
+//! The paper's three conditions for a columnar partition P of M ∈ R^{n×m}:
+//!   1. P_i ∈ R^{k_i × m}, n = Σ k_i, k_i > 0;
+//!   2. the parts are disjoint;
+//!   3. an invertible (row-permutation) A exists with A·vstack(P) = M.
+//!
+//! Contiguous row ranges satisfy all three with A = I; the general interface
+//! also models permuted partitions (work stealing can complete chunks out of
+//! order) and exposes the §2.4 check as [`RowPartition::validate`].
+
+use crate::error::{Error, Result};
+
+/// A partition of `rows` melt rows into non-empty, disjoint, covering parts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RowPartition {
+    rows: usize,
+    ranges: Vec<std::ops::Range<usize>>,
+}
+
+impl RowPartition {
+    /// Split `rows` into `parts` near-equal contiguous ranges
+    /// (the "row-major matrix blocks" of the paper's Fig 6 benchmark).
+    pub fn even(rows: usize, parts: usize) -> Result<Self> {
+        if rows == 0 || parts == 0 {
+            return Err(Error::Partition(format!(
+                "cannot split {rows} rows into {parts} parts"
+            )));
+        }
+        let parts = parts.min(rows);
+        let base = rows / parts;
+        let extra = rows % parts;
+        let mut ranges = Vec::with_capacity(parts);
+        let mut start = 0usize;
+        for i in 0..parts {
+            let k = base + usize::from(i < extra);
+            ranges.push(start..start + k);
+            start += k;
+        }
+        Ok(Self { rows, ranges })
+    }
+
+    /// Split into chunks of at most `chunk_rows` rows (the PJRT fixed-shape
+    /// chunking policy; the final short chunk is padded at execution time).
+    pub fn chunked(rows: usize, chunk_rows: usize) -> Result<Self> {
+        if rows == 0 || chunk_rows == 0 {
+            return Err(Error::Partition(format!(
+                "cannot chunk {rows} rows by {chunk_rows}"
+            )));
+        }
+        let mut ranges = Vec::with_capacity(rows.div_ceil(chunk_rows));
+        let mut start = 0usize;
+        while start < rows {
+            let end = (start + chunk_rows).min(rows);
+            ranges.push(start..end);
+            start = end;
+        }
+        Ok(Self { rows, ranges })
+    }
+
+    /// Build from explicit ranges (validated).
+    pub fn from_ranges(rows: usize, ranges: Vec<std::ops::Range<usize>>) -> Result<Self> {
+        let p = Self { rows, ranges };
+        p.validate()?;
+        Ok(p)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn ranges(&self) -> &[std::ops::Range<usize>] {
+        &self.ranges
+    }
+
+    pub fn num_parts(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Check the §2.4 conditions: non-empty parts (1), pairwise disjoint (2),
+    /// and existence of a row permutation reassembling M (3) — equivalent to
+    /// the sorted parts exactly covering `0..rows`.
+    pub fn validate(&self) -> Result<()> {
+        if self.ranges.is_empty() {
+            return Err(Error::Partition("empty partition".into()));
+        }
+        let mut sorted: Vec<_> = self.ranges.clone();
+        sorted.sort_by_key(|r| r.start);
+        let mut cursor = 0usize;
+        for r in &sorted {
+            if r.is_empty() {
+                return Err(Error::Partition(format!("empty part {r:?} (violates k_i > 0)")));
+            }
+            if r.start < cursor {
+                return Err(Error::Partition(format!(
+                    "part {r:?} overlaps previous coverage up to {cursor} (violates disjointness)"
+                )));
+            }
+            if r.start > cursor {
+                return Err(Error::Partition(format!(
+                    "rows {cursor}..{} uncovered (violates reassembly)",
+                    r.start
+                )));
+            }
+            cursor = r.end;
+        }
+        if cursor != self.rows {
+            return Err(Error::Partition(format!(
+                "parts cover 0..{cursor}, matrix has {} rows",
+                self.rows
+            )));
+        }
+        Ok(())
+    }
+
+    /// The permutation A of condition 3: `perm[i]` is the original row index
+    /// of row `i` of vstack(P). For sorted contiguous partitions this is the
+    /// identity; for out-of-order completion it reorders chunks.
+    pub fn permutation(&self) -> Vec<usize> {
+        let mut perm = Vec::with_capacity(self.rows);
+        for r in &self.ranges {
+            perm.extend(r.clone());
+        }
+        perm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check_property, SplitMix64};
+
+    #[test]
+    fn even_split_balances() {
+        let p = RowPartition::even(10, 3).unwrap();
+        assert_eq!(p.ranges(), &[0..4, 4..7, 7..10]);
+        p.validate().unwrap();
+        let p = RowPartition::even(9, 3).unwrap();
+        assert_eq!(p.ranges(), &[0..3, 3..6, 6..9]);
+    }
+
+    #[test]
+    fn even_split_caps_parts_at_rows() {
+        let p = RowPartition::even(2, 8).unwrap();
+        assert_eq!(p.num_parts(), 2);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn chunked_split() {
+        let p = RowPartition::chunked(10, 4).unwrap();
+        assert_eq!(p.ranges(), &[0..4, 4..8, 8..10]);
+        p.validate().unwrap();
+        assert!(RowPartition::chunked(0, 4).is_err());
+        assert!(RowPartition::chunked(4, 0).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_violations() {
+        // overlap (condition 2)
+        assert!(RowPartition::from_ranges(6, vec![0..4, 3..6]).is_err());
+        // gap (condition 3)
+        assert!(RowPartition::from_ranges(6, vec![0..2, 3..6]).is_err());
+        // empty part (condition 1)
+        assert!(RowPartition::from_ranges(6, vec![0..0, 0..6]).is_err());
+        // over-coverage
+        assert!(RowPartition::from_ranges(6, vec![0..7]).is_err());
+    }
+
+    #[test]
+    fn out_of_order_ranges_are_valid() {
+        // work stealing may record parts out of order; §2.4 only demands a
+        // permutation A exists.
+        let p = RowPartition::from_ranges(6, vec![3..6, 0..3]).unwrap();
+        assert_eq!(p.permutation(), vec![3, 4, 5, 0, 1, 2]);
+    }
+
+    #[test]
+    fn permutation_is_bijective_property() {
+        check_property("partition permutation is a bijection", 30, |rng: &mut SplitMix64| {
+            let rows = 4 + rng.below(60);
+            let parts = 1 + rng.below(6);
+            let p = RowPartition::even(rows, parts).unwrap();
+            let mut perm = p.permutation();
+            assert_eq!(perm.len(), rows);
+            perm.sort_unstable();
+            assert!(perm.iter().enumerate().all(|(i, &v)| i == v));
+        });
+    }
+
+    #[test]
+    fn chunked_part_sizes_bounded_property() {
+        check_property("chunk sizes bounded", 30, |rng: &mut SplitMix64| {
+            let rows = 1 + rng.below(500);
+            let chunk = 1 + rng.below(64);
+            let p = RowPartition::chunked(rows, chunk).unwrap();
+            p.validate().unwrap();
+            for r in p.ranges() {
+                assert!(r.len() <= chunk && !r.is_empty());
+            }
+        });
+    }
+}

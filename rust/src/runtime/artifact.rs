@@ -1,0 +1,219 @@
+//! The AOT artifact registry: parses `artifacts/manifest.json` (written by
+//! `python -m compile.aot`) and validates each entry against the files on
+//! disk. The manifest is the L2→L3 contract: variant kind, operator window,
+//! fixed chunk height, and all input/output shapes.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::json::JsonValue;
+use crate::error::{Error, Result};
+
+/// One AOT-compiled variant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    /// Variant name, e.g. `gaussian_w27`.
+    pub name: String,
+    /// Variant kind: `gaussian` | `bilateral_const` | `bilateral_adaptive`
+    /// | `curvature`.
+    pub kind: String,
+    /// HLO text file path (absolute).
+    pub path: PathBuf,
+    /// Operator window extents.
+    pub window: Vec<usize>,
+    /// Fixed chunk height (melt rows per execution).
+    pub rows: usize,
+    /// Input shapes, first is always the melt chunk `[rows, prod(window)]`.
+    pub inputs: Vec<Vec<usize>>,
+}
+
+impl ArtifactEntry {
+    /// The melt chunk's column count.
+    pub fn cols(&self) -> usize {
+        self.window.iter().product()
+    }
+}
+
+/// Parsed manifest with entry lookup.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    pub chunk_rows: usize,
+    entries: Vec<ArtifactEntry>,
+}
+
+impl ArtifactManifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `dir` anchors relative artifact files.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let root = JsonValue::parse(text)?;
+        let chunk_rows = root.field("chunk_rows")?.as_usize()?;
+        if chunk_rows == 0 {
+            return Err(Error::Artifact("chunk_rows must be positive".into()));
+        }
+        let mut entries = Vec::new();
+        for item in root.field("artifacts")?.as_array()? {
+            let name = item.field("name")?.as_str()?.to_string();
+            let kind = item.field("kind")?.as_str()?.to_string();
+            let file = item.field("file")?.as_str()?;
+            let window = item.field("window")?.as_usize_vec()?;
+            let rows = item.field("rows")?.as_usize()?;
+            let inputs: Vec<Vec<usize>> = item
+                .field("inputs")?
+                .as_array()?
+                .iter()
+                .map(|v| v.as_usize_vec())
+                .collect::<Result<_>>()?;
+            if window.is_empty() || window.iter().any(|&w| w == 0 || w % 2 == 0) {
+                return Err(Error::Artifact(format!(
+                    "artifact {name}: invalid window {window:?}"
+                )));
+            }
+            let cols: usize = window.iter().product();
+            match inputs.first() {
+                Some(first) if first == &vec![rows, cols] => {}
+                other => {
+                    return Err(Error::Artifact(format!(
+                        "artifact {name}: first input {other:?} != melt chunk [{rows}, {cols}]"
+                    )))
+                }
+            }
+            entries.push(ArtifactEntry {
+                name,
+                kind,
+                path: dir.join(file),
+                window,
+                rows,
+                inputs,
+            });
+        }
+        if entries.is_empty() {
+            return Err(Error::Artifact("manifest has no artifacts".into()));
+        }
+        Ok(Self { chunk_rows, entries })
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    /// Find by exact name.
+    pub fn by_name(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name).ok_or_else(|| {
+            Error::Artifact(format!(
+                "no artifact '{name}' (available: {})",
+                self.entries
+                    .iter()
+                    .map(|e| e.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        })
+    }
+
+    /// Find by kind + window (how the coordinator resolves a Job).
+    pub fn by_kind_window(&self, kind: &str, window: &[usize]) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.window == window)
+            .ok_or_else(|| {
+                Error::Artifact(format!("no artifact for kind '{kind}' window {window:?}"))
+            })
+    }
+
+    /// Check every referenced HLO file exists.
+    pub fn verify_files(&self) -> Result<()> {
+        for e in &self.entries {
+            if !e.path.exists() {
+                return Err(Error::Artifact(format!(
+                    "artifact file missing: {}",
+                    e.path.display()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "chunk_rows": 2048,
+        "dtype": "f32",
+        "artifacts": [
+            {"name": "gaussian_w27", "kind": "gaussian", "file": "gaussian_w27.hlo.txt",
+             "window": [3, 3, 3], "rows": 2048, "inputs": [[2048, 27], [27]], "outputs": [[2048]]},
+            {"name": "curvature2d_w9", "kind": "curvature", "file": "curvature2d_w9.hlo.txt",
+             "window": [3, 3], "rows": 2048, "inputs": [[2048, 9]], "outputs": [[2048]]}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/tmp/artifacts")).unwrap();
+        assert_eq!(m.chunk_rows, 2048);
+        assert_eq!(m.entries().len(), 2);
+        let g = m.by_name("gaussian_w27").unwrap();
+        assert_eq!(g.kind, "gaussian");
+        assert_eq!(g.cols(), 27);
+        assert_eq!(g.path, Path::new("/tmp/artifacts/gaussian_w27.hlo.txt"));
+        let c = m.by_kind_window("curvature", &[3, 3]).unwrap();
+        assert_eq!(c.name, "curvature2d_w9");
+    }
+
+    #[test]
+    fn lookup_errors_name_available() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        let err = m.by_name("nope").unwrap_err().to_string();
+        assert!(err.contains("gaussian_w27"), "{err}");
+        assert!(m.by_kind_window("gaussian", &[5, 5]).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_entries() {
+        // first input shape disagreeing with rows x window
+        let bad = SAMPLE.replace("[[2048, 27], [27]]", "[[2048, 25], [27]]");
+        assert!(ArtifactManifest::parse(&bad, Path::new("/x")).is_err());
+        // even window
+        let bad = SAMPLE.replace("[3, 3, 3]", "[4, 3, 3]");
+        assert!(ArtifactManifest::parse(&bad, Path::new("/x")).is_err());
+        // empty artifact list
+        assert!(ArtifactManifest::parse(
+            r#"{"chunk_rows": 2048, "artifacts": []}"#,
+            Path::new("/x")
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn verify_files_reports_missing() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/definitely/missing")).unwrap();
+        assert!(m.verify_files().is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = ArtifactManifest::load(&dir).unwrap();
+        m.verify_files().unwrap();
+        assert!(m.by_kind_window("gaussian", &[3, 3, 3]).is_ok());
+        assert!(m.by_kind_window("bilateral_const", &[5, 5]).is_ok());
+        assert!(m.by_kind_window("bilateral_adaptive", &[3, 3, 3]).is_ok());
+        assert!(m.by_kind_window("curvature", &[3, 3]).is_ok());
+    }
+}

@@ -1,0 +1,47 @@
+//! Thin wrapper over the PJRT CPU client with device diagnostics.
+
+use crate::error::Result;
+
+/// A thread-confined PJRT CPU client.
+///
+/// `xla::PjRtClient` is `Rc`-backed, so this type is deliberately `!Send`;
+/// the coordinator builds one per worker thread.
+pub struct PjrtContext {
+    client: xla::PjRtClient,
+}
+
+impl PjrtContext {
+    /// Create the CPU client (the only backend in this image).
+    pub fn cpu() -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Human-readable platform summary for `meltframe inspect`.
+    pub fn describe(&self) -> String {
+        format!(
+            "platform={} version={} devices={}",
+            self.client.platform_name(),
+            self.client.platform_version(),
+            self.client.device_count()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_constructs_and_describes() {
+        let ctx = PjrtContext::cpu().unwrap();
+        let d = ctx.describe();
+        assert!(d.contains("platform="), "{d}");
+        assert!(ctx.client.device_count() >= 1);
+    }
+}

@@ -1,0 +1,259 @@
+//! Compile-once execute-many engine over the AOT artifacts.
+//!
+//! An [`Engine`] owns a PJRT client plus a cache of compiled executables,
+//! keyed by artifact name; compilation happens lazily on first use and is
+//! then amortized across every chunk of every job (the "compiled executable
+//! cache" of DESIGN.md). Execution takes a melt row-block (possibly shorter
+//! than the artifact's fixed chunk height — it is zero-padded, and the
+//! padding sliced off the result per the coordinator contract).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::runtime::artifact::{ArtifactEntry, ArtifactManifest};
+use crate::runtime::client::PjrtContext;
+
+/// Extra (non-melt) inputs of a variant, matching `inputs[1..]` of its
+/// manifest entry: e.g. the kernel vector for `gaussian`, the spatial
+/// component + scalar for the bilateral variants.
+#[derive(Clone, Debug, Default)]
+pub struct ExtraInputs {
+    pub vectors: Vec<Vec<f32>>,
+}
+
+impl ExtraInputs {
+    pub fn none() -> Self {
+        Self { vectors: vec![] }
+    }
+
+    pub fn one(v: Vec<f32>) -> Self {
+        Self { vectors: vec![v] }
+    }
+
+    pub fn two(a: Vec<f32>, b: Vec<f32>) -> Self {
+        Self { vectors: vec![a, b] }
+    }
+}
+
+/// Thread-confined PJRT engine: client + compiled-executable cache.
+pub struct Engine {
+    ctx: PjrtContext,
+    manifest: ArtifactManifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Scratch buffer reused when a short final chunk must be zero-padded
+    /// to the artifact's fixed height (avoids a 1 MiB alloc per tail call).
+    pad_scratch: RefCell<Vec<f32>>,
+}
+
+/// Job-constant inputs pre-uploaded to device buffers once per job
+/// (§Perf iteration 5): the kernel/spatial/stencil vectors never change
+/// across a job's chunks, so re-marshalling them per chunk is pure waste.
+pub struct PreparedInputs {
+    buffers: Vec<xla::PjRtBuffer>,
+}
+
+impl Engine {
+    /// Build an engine over an artifact directory (reads the manifest,
+    /// verifies files; compiles lazily).
+    pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = ArtifactManifest::load(dir)?;
+        manifest.verify_files()?;
+        Ok(Self {
+            ctx: PjrtContext::cpu()?,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            pad_scratch: RefCell::new(Vec::new()),
+        })
+    }
+
+    /// Upload the job-constant extra inputs (manifest `inputs[1..]`) to
+    /// device buffers, validated against the entry's shapes.
+    pub fn prepare_inputs(&self, entry: &ArtifactEntry, extra: &ExtraInputs) -> Result<PreparedInputs> {
+        if extra.vectors.len() != entry.inputs.len() - 1 {
+            return Err(Error::Runtime(format!(
+                "artifact {} expects {} extra inputs, got {}",
+                entry.name,
+                entry.inputs.len() - 1,
+                extra.vectors.len()
+            )));
+        }
+        let mut buffers = Vec::with_capacity(extra.vectors.len());
+        for (i, v) in extra.vectors.iter().enumerate() {
+            let want = &entry.inputs[i + 1];
+            let n: usize = want.iter().product();
+            if v.len() != n {
+                return Err(Error::Runtime(format!(
+                    "extra input {i} for {}: {} values vs shape {want:?}",
+                    entry.name,
+                    v.len()
+                )));
+            }
+            buffers.push(self.ctx.client().buffer_from_host_buffer(v, want, None)?);
+        }
+        Ok(PreparedInputs { buffers })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    pub fn describe(&self) -> String {
+        self.ctx.describe()
+    }
+
+    /// Ensure `name` is compiled (useful to front-load compile cost before
+    /// timing loops).
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        let entry = self.manifest.by_name(name)?.clone();
+        self.with_compiled(&entry, |_| Ok(()))
+    }
+
+    fn with_compiled<T>(
+        &self,
+        entry: &ArtifactEntry,
+        f: impl FnOnce(&xla::PjRtLoadedExecutable) -> Result<T>,
+    ) -> Result<T> {
+        {
+            let cache = self.cache.borrow();
+            if let Some(exe) = cache.get(&entry.name) {
+                return f(exe);
+            }
+        }
+        let proto = xla::HloModuleProto::from_text_file(&entry.path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.ctx.client().compile(&comp)?;
+        let mut cache = self.cache.borrow_mut();
+        let exe = cache.entry(entry.name.clone()).or_insert(exe);
+        f(exe)
+    }
+
+    /// Execute one melt row-block through artifact `entry`, marshalling the
+    /// extra inputs on the spot. Convenience wrapper over
+    /// [`Engine::prepare_inputs`] + [`Engine::execute_prepared`]; the
+    /// coordinator hot path prepares once per job instead.
+    pub fn execute_chunk(
+        &self,
+        entry: &ArtifactEntry,
+        block: &[f32],
+        valid_rows: usize,
+        extra: &ExtraInputs,
+    ) -> Result<Vec<f32>> {
+        let prepared = self.prepare_inputs(entry, extra)?;
+        self.execute_prepared(entry, block, valid_rows, &prepared)
+    }
+
+    /// Execute one melt row-block through artifact `entry` with
+    /// pre-uploaded job-constant inputs.
+    ///
+    /// `block` is `valid_rows * cols` values with `valid_rows <=
+    /// entry.rows`; shorter blocks are zero-padded to the fixed chunk
+    /// height (rows are independent, so padding is inert) and the result is
+    /// truncated back to `valid_rows`. The melt block goes host→device as
+    /// one shaped upload (no Literal intermediary — §Perf iteration 5).
+    pub fn execute_prepared(
+        &self,
+        entry: &ArtifactEntry,
+        block: &[f32],
+        valid_rows: usize,
+        prepared: &PreparedInputs,
+    ) -> Result<Vec<f32>> {
+        let cols = entry.cols();
+        if block.len() != valid_rows * cols {
+            return Err(Error::Runtime(format!(
+                "block of {} values is not {valid_rows} rows x {cols} cols",
+                block.len()
+            )));
+        }
+        if valid_rows == 0 || valid_rows > entry.rows {
+            return Err(Error::Runtime(format!(
+                "valid_rows {valid_rows} outside 1..={}",
+                entry.rows
+            )));
+        }
+        if prepared.buffers.len() != entry.inputs.len() - 1 {
+            return Err(Error::Runtime(format!(
+                "artifact {} expects {} prepared inputs, got {}",
+                entry.name,
+                entry.inputs.len() - 1,
+                prepared.buffers.len()
+            )));
+        }
+
+        let dims = [entry.rows, cols];
+        let melt_buf = if valid_rows == entry.rows {
+            self.ctx.client().buffer_from_host_buffer(block, &dims, None)?
+        } else {
+            // zero-pad the tail chunk in the reusable scratch buffer
+            let mut scratch = self.pad_scratch.borrow_mut();
+            scratch.clear();
+            scratch.resize(entry.rows * cols, 0.0);
+            scratch[..block.len()].copy_from_slice(block);
+            self.ctx.client().buffer_from_host_buffer(&scratch, &dims, None)?
+        };
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + prepared.buffers.len());
+        args.push(&melt_buf);
+        args.extend(prepared.buffers.iter());
+
+        let out = self.with_compiled(entry, |exe| {
+            let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+            Ok(result[0][0].to_literal_sync()?)
+        })?;
+        // aot.py lowers with return_tuple=True -> a 1-tuple
+        let mut values = out.to_tuple1()?.to_vec::<f32>()?;
+        values.truncate(valid_rows);
+        Ok(values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn engine_loads_and_validates_inputs() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::from_dir(&dir).unwrap();
+        let entry = engine.manifest().by_name("gaussian_w27").unwrap().clone();
+        // wrong block size
+        assert!(engine
+            .execute_chunk(&entry, &[0.0; 26], 1, &ExtraInputs::one(vec![0.0; 27]))
+            .is_err());
+        // wrong extra input count
+        assert!(engine
+            .execute_chunk(&entry, &[0.0; 27], 1, &ExtraInputs::none())
+            .is_err());
+        // wrong extra input length
+        assert!(engine
+            .execute_chunk(&entry, &[0.0; 27], 1, &ExtraInputs::one(vec![0.0; 3]))
+            .is_err());
+        // zero rows
+        assert!(engine
+            .execute_chunk(&entry, &[], 0, &ExtraInputs::one(vec![0.0; 27]))
+            .is_err());
+    }
+
+    #[test]
+    fn gaussian_artifact_matches_native_kernel() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::from_dir(&dir).unwrap();
+        let entry = engine.manifest().by_name("gaussian_w27").unwrap().clone();
+        let rows = 300usize; // deliberately not the fixed chunk height
+        let mut rng = crate::testing::SplitMix64::new(42);
+        let block = rng.uniform_vec(rows * 27, 0.0, 255.0);
+        let kernel = crate::kernels::gaussian::gaussian_kernel(&[3, 3, 3], 1.0);
+        let got = engine
+            .execute_chunk(&entry, &block, rows, &ExtraInputs::one(kernel.clone()))
+            .unwrap();
+        assert_eq!(got.len(), rows);
+        let mut want = vec![0.0f32; rows];
+        crate::kernels::paradigm::apply_kernel_broadcast_into(&block, rows, 27, &kernel, &mut want);
+        crate::testing::assert_allclose(&got, &want, 1e-4, 1e-3);
+    }
+}

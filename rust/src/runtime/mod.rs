@@ -1,0 +1,19 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO text + manifest), compiles them on the CPU PJRT client, and executes
+//! them from the coordinator hot path.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits serialized protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md). Python never runs at
+//! request time — artifacts are compiled once per [`Engine`] and reused.
+//!
+//! Threading note: `xla::PjRtClient` is `Rc`-backed (not `Send`), so an
+//! [`Engine`] is thread-confined; multi-worker PJRT execution gives each
+//! worker thread its own engine (see `coordinator::worker`).
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{ArtifactEntry, ArtifactManifest};
+pub use executor::Engine;

@@ -1,0 +1,172 @@
+//! Partition-aggregable descriptive statistics (paper §2.4).
+//!
+//! "The majority of algorithms that have been demonstrated on distributed
+//! systems make use of aggregation functions ... which can be operated
+//! directly on both populations and samples." This module models exactly
+//! that class: a [`Moments`] accumulator whose `merge` is exact, so any row
+//! partition of a melt matrix yields bit-stable statistics regardless of how
+//! work was split (Chan et al. parallel-variance formulas).
+
+/// Streaming count/mean/M2/min/max accumulator with exact pairwise merge.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Moments {
+    pub count: u64,
+    pub mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Default for Moments {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Moments {
+    pub fn new() -> Self {
+        Self {
+            count: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Welford single-value update.
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        let d = x - self.mean;
+        self.mean += d / self.count as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Accumulate a slice.
+    pub fn push_slice(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.push(x as f64);
+        }
+    }
+
+    /// Exact merge of two accumulators (Chan et al.): the MapReduce combine
+    /// step for partitioned melt rows.
+    pub fn merge(&self, other: &Moments) -> Moments {
+        if self.count == 0 {
+            return *other;
+        }
+        if other.count == 0 {
+            return *self;
+        }
+        let n = (self.count + other.count) as f64;
+        let d = other.mean - self.mean;
+        Moments {
+            count: self.count + other.count,
+            mean: self.mean + d * other.count as f64 / n,
+            m2: self.m2 + other.m2 + d * d * self.count as f64 * other.count as f64 / n,
+            min: self.min.min(other.min),
+            max: self.max.max(other.max),
+        }
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.m2 / self.count as f64
+    }
+
+    /// Sample (Bessel-corrected) variance.
+    pub fn sample_variance(&self) -> f64 {
+        if self.count < 2 {
+            return f64::NAN;
+        }
+        self.m2 / (self.count - 1) as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Compute moments over a slice in one pass.
+pub fn moments(xs: &[f32]) -> Moments {
+    let mut m = Moments::new();
+    m.push_slice(xs);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check_property, SplitMix64};
+
+    #[test]
+    fn known_values() {
+        let m = moments(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.count, 4);
+        assert_eq!(m.mean, 2.5);
+        assert_eq!(m.variance(), 1.25);
+        assert!((m.sample_variance() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.min, 1.0);
+        assert_eq!(m.max, 4.0);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let e = Moments::new();
+        assert!(e.variance().is_nan());
+        let mut s = Moments::new();
+        s.push(5.0);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.variance(), 0.0);
+        assert!(s.sample_variance().is_nan());
+    }
+
+    #[test]
+    fn merge_identity() {
+        let a = moments(&[1.0, 2.0, 3.0]);
+        let e = Moments::new();
+        assert_eq!(a.merge(&e), a);
+        assert_eq!(e.merge(&a), a);
+    }
+
+    #[test]
+    fn merge_equals_global_property() {
+        // §2.4: aggregation functions are partition-exact.
+        check_property("merged moments == global moments", 40, |rng: &mut SplitMix64| {
+            let n = 4 + rng.below(200);
+            let xs = rng.uniform_vec(n, -100.0, 100.0);
+            let parts = 1 + rng.below(5);
+            let global = moments(&xs);
+            let mut merged = Moments::new();
+            let chunk = n.div_ceil(parts);
+            for c in xs.chunks(chunk) {
+                merged = merged.merge(&moments(c));
+            }
+            assert_eq!(merged.count, global.count);
+            assert!((merged.mean - global.mean).abs() < 1e-9);
+            assert!((merged.variance() - global.variance()).abs() < 1e-7);
+            assert_eq!(merged.min, global.min);
+            assert_eq!(merged.max, global.max);
+        });
+    }
+
+    #[test]
+    fn merge_is_associative_property() {
+        check_property("moments merge associativity", 30, |rng: &mut SplitMix64| {
+            let (na, nb, nc) = (1 + rng.below(20), 1 + rng.below(20), 1 + rng.below(20));
+            let a = moments(&rng.uniform_vec(na, -5.0, 5.0));
+            let b = moments(&rng.uniform_vec(nb, -5.0, 5.0));
+            let c = moments(&rng.uniform_vec(nc, -5.0, 5.0));
+            let l = a.merge(&b).merge(&c);
+            let r = a.merge(&b.merge(&c));
+            assert_eq!(l.count, r.count);
+            assert!((l.mean - r.mean).abs() < 1e-10);
+            assert!((l.variance() - r.variance()).abs() < 1e-9);
+        });
+    }
+}

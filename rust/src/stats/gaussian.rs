@@ -1,0 +1,210 @@
+//! The Hilbert-space-generalized gaussian of paper Table 2.
+//!
+//! The multivariate N(x|μ, Σ) with its gradient is the generic form; the
+//! univariate/bivariate densities are degenerated cases. Table 2's claim —
+//! that the k=1 multivariate formulas reduce exactly to the familiar
+//! univariate ones — is validated in the tests and timed by
+//! `benches/table2_gaussian.rs`.
+
+use crate::error::{Error, Result};
+use crate::stats::linalg::Mat;
+
+/// A multivariate gaussian N(μ, Σ) with precomputed Σ⁻¹ and |Σ|.
+#[derive(Clone, Debug)]
+pub struct MultivariateGaussian {
+    mu: Vec<f64>,
+    sigma_inv: Mat,
+    norm: f64, // 1 / ((2π)^{k/2} |Σ|^{1/2})
+}
+
+impl MultivariateGaussian {
+    /// Construct from mean and covariance; Σ must be SPD.
+    pub fn new(mu: Vec<f64>, sigma: Mat) -> Result<Self> {
+        let k = mu.len();
+        if sigma.rows() != k || sigma.cols() != k {
+            return Err(Error::Linalg(format!(
+                "covariance {}x{} vs mean dim {k}",
+                sigma.rows(),
+                sigma.cols()
+            )));
+        }
+        // SPD check via cholesky; |Σ| from the factor's diagonal
+        let l = sigma.cholesky().map_err(|e| {
+            Error::Linalg(format!("covariance must be SPD: {e}"))
+        })?;
+        let log_det: f64 = (0..k).map(|i| l.at(i, i).ln()).sum::<f64>() * 2.0;
+        let sigma_inv = sigma.inverse()?;
+        let norm = (-0.5 * (k as f64 * (2.0 * std::f64::consts::PI).ln() + log_det)).exp();
+        Ok(Self {
+            mu,
+            sigma_inv,
+            norm,
+        })
+    }
+
+    /// Convenience: isotropic N(μ, σ²I).
+    pub fn isotropic(mu: Vec<f64>, sigma: f64) -> Result<Self> {
+        if sigma <= 0.0 {
+            return Err(Error::Linalg(format!("sigma must be positive, got {sigma}")));
+        }
+        let k = mu.len();
+        Self::new(mu, Mat::diag(&vec![sigma * sigma; k]))
+    }
+
+    pub fn dim(&self) -> usize {
+        self.mu.len()
+    }
+
+    /// Density p(x) — Table 2 row 1, multivariate column.
+    pub fn pdf(&self, x: &[f64]) -> Result<f64> {
+        let d = self.centered(x)?;
+        let q = self.sigma_inv.quad_form(&d)?;
+        Ok(self.norm * (-0.5 * q).exp())
+    }
+
+    /// Gradient ∂p/∂x — Table 2 row 2, multivariate column:
+    /// -Σ⁻¹(x-μ) · p(x).
+    pub fn grad(&self, x: &[f64]) -> Result<Vec<f64>> {
+        let d = self.centered(x)?;
+        let p = self.pdf(x)?;
+        let siv = self.sigma_inv.matvec(&d)?;
+        Ok(siv.iter().map(|v| -v * p).collect())
+    }
+
+    fn centered(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if x.len() != self.mu.len() {
+            return Err(Error::Linalg(format!(
+                "x dim {} vs gaussian dim {}",
+                x.len(),
+                self.mu.len()
+            )));
+        }
+        Ok(x.iter().zip(&self.mu).map(|(a, b)| a - b).collect())
+    }
+}
+
+/// Closed-form univariate density — Table 2 row 1, univariate column.
+/// Kept as the independent comparator for the degeneration tests/bench.
+pub fn univariate_pdf(x: f64, mu: f64, sigma: f64) -> f64 {
+    let z = (x - mu) / sigma;
+    (-0.5 * z * z).exp() / ((2.0 * std::f64::consts::PI).sqrt() * sigma)
+}
+
+/// Closed-form univariate gradient — Table 2 row 2, univariate column.
+pub fn univariate_grad(x: f64, mu: f64, sigma: f64) -> f64 {
+    -(x - mu) / (sigma * sigma) * univariate_pdf(x, mu, sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check_property, SplitMix64};
+
+    #[test]
+    fn univariate_degeneration_pdf() {
+        // Table 2: the k=1 multivariate reduces exactly to the univariate.
+        check_property("k=1 multivariate == univariate pdf", 40, |rng: &mut SplitMix64| {
+            let mu = rng.normal() as f64 * 3.0;
+            let sigma = 0.2 + rng.next_f64() * 4.0;
+            let x = rng.normal() as f64 * 5.0;
+            let g = MultivariateGaussian::isotropic(vec![mu], sigma).unwrap();
+            let a = g.pdf(&[x]).unwrap();
+            let b = univariate_pdf(x, mu, sigma);
+            assert!((a - b).abs() < 1e-12 * (1.0 + b), "{a} vs {b}");
+        });
+    }
+
+    #[test]
+    fn univariate_degeneration_grad() {
+        check_property("k=1 multivariate == univariate grad", 40, |rng: &mut SplitMix64| {
+            let mu = rng.normal() as f64;
+            let sigma = 0.2 + rng.next_f64() * 2.0;
+            let x = rng.normal() as f64 * 3.0;
+            let g = MultivariateGaussian::isotropic(vec![mu], sigma).unwrap();
+            let a = g.grad(&[x]).unwrap()[0];
+            let b = univariate_grad(x, mu, sigma);
+            assert!((a - b).abs() < 1e-12 * (1.0 + b.abs()), "{a} vs {b}");
+        });
+    }
+
+    #[test]
+    fn pdf_integrates_to_one_1d() {
+        // trapezoid over [-10σ, 10σ]
+        let g = MultivariateGaussian::isotropic(vec![1.5], 0.7).unwrap();
+        let n = 4000;
+        let (lo, hi) = (1.5 - 7.0, 1.5 + 7.0);
+        let h = (hi - lo) / n as f64;
+        let mut s = 0.0;
+        for i in 0..=n {
+            let x = lo + i as f64 * h;
+            let w = if i == 0 || i == n { 0.5 } else { 1.0 };
+            s += w * g.pdf(&[x]).unwrap();
+        }
+        assert!((s * h - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pdf_peak_at_mean_and_symmetry() {
+        let g = MultivariateGaussian::isotropic(vec![0.0, 0.0], 1.0).unwrap();
+        let p0 = g.pdf(&[0.0, 0.0]).unwrap();
+        assert!((p0 - 1.0 / (2.0 * std::f64::consts::PI)).abs() < 1e-12);
+        let pa = g.pdf(&[1.0, 0.5]).unwrap();
+        let pb = g.pdf(&[-1.0, -0.5]).unwrap();
+        assert!((pa - pb).abs() < 1e-15);
+        assert!(pa < p0);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference_property() {
+        check_property("grad == finite difference", 25, |rng: &mut SplitMix64| {
+            let k = 1 + rng.below(4);
+            let mu: Vec<f64> = (0..k).map(|_| rng.normal() as f64).collect();
+            // random SPD covariance
+            let mut a = Mat::zeros(k, k);
+            for r in 0..k {
+                for c in 0..k {
+                    a.set(r, c, rng.normal() as f64);
+                }
+            }
+            let mut sigma = a.matmul(&a.transpose()).unwrap();
+            for i in 0..k {
+                sigma.set(i, i, sigma.at(i, i) + 1.0);
+            }
+            let g = MultivariateGaussian::new(mu, sigma).unwrap();
+            let x: Vec<f64> = (0..k).map(|_| rng.normal() as f64).collect();
+            let grad = g.grad(&x).unwrap();
+            let h = 1e-6;
+            for a_ in 0..k {
+                let mut xp = x.clone();
+                let mut xm = x.clone();
+                xp[a_] += h;
+                xm[a_] -= h;
+                let fd = (g.pdf(&xp).unwrap() - g.pdf(&xm).unwrap()) / (2.0 * h);
+                assert!(
+                    (grad[a_] - fd).abs() < 1e-6 * (1.0 + fd.abs()),
+                    "axis {a_}: {} vs {fd}",
+                    grad[a_]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn anisotropic_contours() {
+        // larger variance on axis 0 -> slower decay along axis 0
+        let g = MultivariateGaussian::new(vec![0.0, 0.0], Mat::diag(&[4.0, 0.25])).unwrap();
+        assert!(g.pdf(&[1.0, 0.0]).unwrap() > g.pdf(&[0.0, 1.0]).unwrap());
+    }
+
+    #[test]
+    fn rejects_invalid_inputs() {
+        assert!(MultivariateGaussian::isotropic(vec![0.0], 0.0).is_err());
+        assert!(MultivariateGaussian::new(
+            vec![0.0, 0.0],
+            Mat::new(2, 2, vec![1.0, 2.0, 2.0, 1.0]).unwrap() // not SPD
+        )
+        .is_err());
+        let g = MultivariateGaussian::isotropic(vec![0.0, 0.0], 1.0).unwrap();
+        assert!(g.pdf(&[0.0]).is_err());
+    }
+}

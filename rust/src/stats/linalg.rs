@@ -1,0 +1,395 @@
+//! Small dense linear algebra: the square matrices of the framework are
+//! operator covariances Σ_d and Hessians — k ≤ ~8 — so an O(k³) LU with
+//! partial pivoting in f64 covers every need (det, inverse, solve) with
+//! headroom to spare. Cholesky is provided for SPD covariance validation.
+
+use crate::error::{Error, Result};
+
+/// A small dense square-capable matrix in row-major f64 storage.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn new(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        if rows == 0 || cols == 0 || data.len() != rows * cols {
+            return Err(Error::Linalg(format!(
+                "bad Mat dims {rows}x{cols} for {} values",
+                data.len()
+            )));
+        }
+        Ok(Self { rows, cols, data })
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Diagonal matrix from entries.
+    pub fn diag(d: &[f64]) -> Self {
+        let n = d.len();
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = d[i];
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.set(c, r, self.at(r, c));
+            }
+        }
+        t
+    }
+
+    /// Matrix product.
+    pub fn matmul(&self, other: &Mat) -> Result<Mat> {
+        if self.cols != other.rows {
+            return Err(Error::Linalg(format!(
+                "matmul {}x{} by {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for r in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(r, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for c in 0..other.cols {
+                    out.data[r * other.cols + c] += a * other.at(k, c);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, v: &[f64]) -> Result<Vec<f64>> {
+        if v.len() != self.cols {
+            return Err(Error::Linalg(format!(
+                "matvec {}x{} by len-{}",
+                self.rows,
+                self.cols,
+                v.len()
+            )));
+        }
+        Ok((0..self.rows)
+            .map(|r| (0..self.cols).map(|c| self.at(r, c) * v[c]).sum())
+            .collect())
+    }
+
+    /// Quadratic form vᵀ M v (square only).
+    pub fn quad_form(&self, v: &[f64]) -> Result<f64> {
+        let mv = self.matvec(v)?;
+        Ok(v.iter().zip(&mv).map(|(a, b)| a * b).sum())
+    }
+
+    fn require_square(&self) -> Result<usize> {
+        if self.rows != self.cols {
+            return Err(Error::Linalg(format!(
+                "operation requires square matrix, got {}x{}",
+                self.rows, self.cols
+            )));
+        }
+        Ok(self.rows)
+    }
+
+    /// LU decomposition with partial pivoting; returns (LU, perm, sign).
+    fn lu(&self) -> Result<(Vec<f64>, Vec<usize>, f64)> {
+        let n = self.require_square()?;
+        let mut lu = self.data.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0f64;
+        for k in 0..n {
+            // pivot
+            let mut p = k;
+            let mut best = lu[k * n + k].abs();
+            for r in k + 1..n {
+                let v = lu[r * n + k].abs();
+                if v > best {
+                    best = v;
+                    p = r;
+                }
+            }
+            if best < 1e-300 {
+                return Err(Error::Linalg("singular matrix in LU".into()));
+            }
+            if p != k {
+                for c in 0..n {
+                    lu.swap(k * n + c, p * n + c);
+                }
+                perm.swap(k, p);
+                sign = -sign;
+            }
+            let pivot = lu[k * n + k];
+            for r in k + 1..n {
+                let f = lu[r * n + k] / pivot;
+                lu[r * n + k] = f;
+                for c in k + 1..n {
+                    lu[r * n + c] -= f * lu[k * n + c];
+                }
+            }
+        }
+        Ok((lu, perm, sign))
+    }
+
+    /// Determinant via LU (exact closed forms for n <= 3 to avoid pivoting
+    /// noise on the curvature hot path).
+    pub fn det(&self) -> Result<f64> {
+        let n = self.require_square()?;
+        match n {
+            1 => Ok(self.data[0]),
+            2 => Ok(self.data[0] * self.data[3] - self.data[1] * self.data[2]),
+            3 => {
+                let d = &self.data;
+                Ok(d[0] * (d[4] * d[8] - d[5] * d[7]) - d[1] * (d[3] * d[8] - d[5] * d[6])
+                    + d[2] * (d[3] * d[7] - d[4] * d[6]))
+            }
+            _ => match self.lu() {
+                Ok((lu, _, sign)) => {
+                    Ok(sign * (0..n).map(|i| lu[i * n + i]).product::<f64>())
+                }
+                // a singular matrix has determinant 0
+                Err(_) => Ok(0.0),
+            },
+        }
+    }
+
+    /// Solve M x = b via LU.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        let n = self.require_square()?;
+        if b.len() != n {
+            return Err(Error::Linalg(format!("solve rhs len {} vs n {n}", b.len())));
+        }
+        let (lu, perm, _) = self.lu()?;
+        // forward substitution on permuted rhs
+        let mut y = vec![0.0f64; n];
+        for r in 0..n {
+            let mut s = b[perm[r]];
+            for c in 0..r {
+                s -= lu[r * n + c] * y[c];
+            }
+            y[r] = s;
+        }
+        // back substitution
+        let mut x = vec![0.0f64; n];
+        for r in (0..n).rev() {
+            let mut s = y[r];
+            for c in r + 1..n {
+                s -= lu[r * n + c] * x[c];
+            }
+            x[r] = s / lu[r * n + r];
+        }
+        Ok(x)
+    }
+
+    /// Inverse via LU column solves.
+    pub fn inverse(&self) -> Result<Mat> {
+        let n = self.require_square()?;
+        let mut out = Mat::zeros(n, n);
+        for c in 0..n {
+            let mut e = vec![0.0f64; n];
+            e[c] = 1.0;
+            let col = self.solve(&e)?;
+            for r in 0..n {
+                out.set(r, c, col[r]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Cholesky factor L (lower) of an SPD matrix; errors when not SPD.
+    pub fn cholesky(&self) -> Result<Mat> {
+        let n = self.require_square()?;
+        let mut l = Mat::zeros(n, n);
+        for r in 0..n {
+            for c in 0..=r {
+                let mut s = self.at(r, c);
+                for k in 0..c {
+                    s -= l.at(r, k) * l.at(c, k);
+                }
+                if r == c {
+                    if s <= 0.0 {
+                        return Err(Error::Linalg(format!(
+                            "matrix not SPD (pivot {s} at {r})"
+                        )));
+                    }
+                    l.set(r, c, s.sqrt());
+                } else {
+                    l.set(r, c, s / l.at(c, c));
+                }
+            }
+        }
+        Ok(l)
+    }
+
+    /// Symmetrise: (M + Mᵀ)/2.
+    pub fn symmetrize(&self) -> Result<Mat> {
+        self.require_square()?;
+        let t = self.transpose();
+        let mut out = self.clone();
+        for i in 0..self.data.len() {
+            out.data[i] = (self.data[i] + t.data[i]) / 2.0;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check_property, SplitMix64};
+
+    fn random_spd(rng: &mut SplitMix64, n: usize) -> Mat {
+        // A Aᵀ + n I is SPD
+        let mut a = Mat::zeros(n, n);
+        for r in 0..n {
+            for c in 0..n {
+                a.set(r, c, rng.normal() as f64);
+            }
+        }
+        let mut spd = a.matmul(&a.transpose()).unwrap();
+        for i in 0..n {
+            spd.set(i, i, spd.at(i, i) + n as f64);
+        }
+        spd
+    }
+
+    #[test]
+    fn construction_and_identity() {
+        assert!(Mat::new(2, 2, vec![0.0; 3]).is_err());
+        let i = Mat::eye(3);
+        assert_eq!(i.det().unwrap(), 1.0);
+        assert_eq!(i.matvec(&[1.0, 2.0, 3.0]).unwrap(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn det_closed_forms() {
+        let m2 = Mat::new(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(m2.det().unwrap(), -2.0);
+        let m3 = Mat::new(3, 3, vec![2.0, 0.0, 1.0, 1.0, 3.0, 0.0, 0.0, 1.0, 4.0]).unwrap();
+        assert!((m3.det().unwrap() - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn det_lu_matches_closed_form_property() {
+        check_property("LU det == cofactor det (n=3)", 40, |rng: &mut SplitMix64| {
+            let data: Vec<f64> = (0..9).map(|_| rng.normal() as f64).collect();
+            let m = Mat::new(3, 3, data.clone()).unwrap();
+            // force the LU path via a 4x4 embedding with unit extra pivot
+            let mut big = Mat::eye(4);
+            for r in 0..3 {
+                for c in 0..3 {
+                    big.set(r, c, data[r * 3 + c]);
+                }
+            }
+            let (a, b) = (m.det().unwrap(), big.det().unwrap());
+            assert!((a - b).abs() < 1e-9 * (1.0 + a.abs()), "{a} vs {b}");
+        });
+    }
+
+    #[test]
+    fn solve_and_inverse_round_trip_property() {
+        check_property("M · M⁻¹ = I; M·solve(b)=b", 30, |rng: &mut SplitMix64| {
+            let n = 1 + rng.below(6);
+            let m = random_spd(rng, n);
+            let inv = m.inverse().unwrap();
+            let prod = m.matmul(&inv).unwrap();
+            for r in 0..n {
+                for c in 0..n {
+                    let want = if r == c { 1.0 } else { 0.0 };
+                    assert!((prod.at(r, c) - want).abs() < 1e-8);
+                }
+            }
+            let b: Vec<f64> = (0..n).map(|_| rng.normal() as f64).collect();
+            let x = m.solve(&b).unwrap();
+            let back = m.matvec(&x).unwrap();
+            for (u, v) in back.iter().zip(&b) {
+                assert!((u - v).abs() < 1e-8);
+            }
+        });
+    }
+
+    #[test]
+    fn singular_matrix_rejected() {
+        let m = Mat::new(2, 2, vec![1.0, 2.0, 2.0, 4.0]).unwrap();
+        assert!(m.solve(&[1.0, 1.0]).is_err());
+        assert!(m.inverse().is_err());
+        assert_eq!(m.det().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn cholesky_recomposes_property() {
+        check_property("L Lᵀ == M", 25, |rng: &mut SplitMix64| {
+            let n = 1 + rng.below(5);
+            let m = random_spd(rng, n);
+            let l = m.cholesky().unwrap();
+            let back = l.matmul(&l.transpose()).unwrap();
+            for i in 0..n * n {
+                assert!((back.data()[i] - m.data()[i]).abs() < 1e-8);
+            }
+        });
+    }
+
+    #[test]
+    fn cholesky_rejects_non_spd() {
+        let m = Mat::new(2, 2, vec![1.0, 2.0, 2.0, 1.0]).unwrap(); // eigenvalues 3, -1
+        assert!(m.cholesky().is_err());
+    }
+
+    #[test]
+    fn quad_form_matches_manual() {
+        let m = Mat::new(2, 2, vec![2.0, 1.0, 1.0, 3.0]).unwrap();
+        // [1,2] M [1,2]^T = 2 + 2 + 2 + 12 = 18
+        assert_eq!(m.quad_form(&[1.0, 2.0]).unwrap(), 18.0);
+    }
+
+    #[test]
+    fn transpose_symmetrize() {
+        let m = Mat::new(2, 2, vec![1.0, 5.0, 3.0, 2.0]).unwrap();
+        let s = m.symmetrize().unwrap();
+        assert_eq!(s.at(0, 1), 4.0);
+        assert_eq!(s.at(1, 0), 4.0);
+        assert_eq!(m.transpose().at(0, 1), 3.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Mathematical-statistics substrate.
+//!
+//! The paper distinguishes *mathematical* statistics (serving downstream
+//! analysis) from the descriptive statistics business toolchains optimize
+//! for (§1, abstract). This module supplies the mathematical side the
+//! framework depends on: small dense linear algebra ([`linalg`]), the
+//! Hilbert-space-generalized gaussian of Table 2 ([`gaussian`]),
+//! partition-aggregable descriptive moments ([`descriptive`]), and the
+//! sample-determined rank statistics whose behaviour under partitioning
+//! §2.4 discusses ([`rank`]).
+
+pub mod descriptive;
+pub mod gaussian;
+pub mod linalg;
+pub mod rank;
+
+pub use gaussian::MultivariateGaussian;
+pub use linalg::Mat;

@@ -1,0 +1,180 @@
+//! Sample-determined (rank-order) statistics under partitioning (§2.4).
+//!
+//! Unlike aggregation functions, the median and other rank statistics are
+//! *sample-determined*: computing them per partition and combining is
+//! biased. The paper's position is that "the application of modern
+//! techniques such as randomization to some extent ensures that the
+//! statistical results derived from samples converge towards that of the
+//! population" — modelled here as (a) the exact selection median, (b) the
+//! biased median-of-partition-medians, and (c) a randomized-sample
+//! estimator whose convergence the tests check.
+
+use crate::testing::SplitMix64;
+
+/// Exact median via quickselect (O(n) expected); even counts average the
+/// two central order statistics.
+pub fn median_exact(xs: &[f32]) -> f32 {
+    assert!(!xs.is_empty(), "median of empty slice");
+    let n = xs.len();
+    if n % 2 == 1 {
+        select(xs, n / 2)
+    } else {
+        (select(xs, n / 2 - 1) + select(xs, n / 2)) / 2.0
+    }
+}
+
+/// k-th smallest (0-based) via quickselect with median-of-three pivoting.
+pub fn select(xs: &[f32], k: usize) -> f32 {
+    assert!(k < xs.len());
+    let mut v = xs.to_vec();
+    let (mut lo, mut hi) = (0usize, v.len());
+    loop {
+        if hi - lo <= 1 {
+            return v[lo];
+        }
+        // median-of-three pivot
+        let mid = lo + (hi - lo) / 2;
+        let (a, b, c) = (v[lo], v[mid], v[hi - 1]);
+        let pivot = a.max(b.min(c)).min(b.max(c));
+        let mut lt = lo;
+        let mut gt = hi;
+        let mut i = lo;
+        while i < gt {
+            if v[i] < pivot {
+                v.swap(lt, i);
+                lt += 1;
+                i += 1;
+            } else if v[i] > pivot {
+                gt -= 1;
+                v.swap(i, gt);
+            } else {
+                i += 1;
+            }
+        }
+        if k < lt {
+            hi = lt;
+        } else if k >= gt {
+            lo = gt;
+        } else {
+            return pivot;
+        }
+    }
+}
+
+/// The biased combine: median of per-partition medians. Exposed to make the
+/// §2.4 caveat measurable (tests/benches compare it against exact).
+pub fn median_of_partition_medians(partitions: &[&[f32]]) -> f32 {
+    let meds: Vec<f32> = partitions
+        .iter()
+        .filter(|p| !p.is_empty())
+        .map(|p| median_exact(p))
+        .collect();
+    median_exact(&meds)
+}
+
+/// Randomized estimator: median of a uniform sample of size `sample` drawn
+/// across all partitions (the paper's randomization argument). Converges to
+/// the population median as `sample` grows.
+pub fn median_randomized(partitions: &[&[f32]], sample: usize, seed: u64) -> f32 {
+    let total: usize = partitions.iter().map(|p| p.len()).sum();
+    assert!(total > 0 && sample > 0);
+    let mut rng = SplitMix64::new(seed);
+    let mut buf = Vec::with_capacity(sample);
+    for _ in 0..sample {
+        let mut flat = rng.below(total);
+        for p in partitions {
+            if flat < p.len() {
+                buf.push(p[flat]);
+                break;
+            }
+            flat -= p.len();
+        }
+    }
+    median_exact(&buf)
+}
+
+/// Quantile (linear interpolation between order statistics), q in [0, 1].
+pub fn quantile(xs: &[f32], q: f64) -> f32 {
+    assert!(!xs.is_empty() && (0.0..=1.0).contains(&q));
+    let n = xs.len();
+    if n == 1 {
+        return xs[0];
+    }
+    let pos = q * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        return select(xs, lo);
+    }
+    let w = (pos - lo as f64) as f32;
+    select(xs, lo) * (1.0 - w) + select(xs, hi) * w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check_property, SplitMix64};
+
+    #[test]
+    fn median_known_values() {
+        assert_eq!(median_exact(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median_exact(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+        assert_eq!(median_exact(&[7.0]), 7.0);
+        assert_eq!(median_exact(&[2.0, 2.0, 2.0, 2.0]), 2.0);
+    }
+
+    #[test]
+    fn select_matches_sort_property() {
+        check_property("quickselect == sort-index", 40, |rng: &mut SplitMix64| {
+            let n = 1 + rng.below(200);
+            let xs = rng.uniform_vec(n, -50.0, 50.0);
+            let k = rng.below(n);
+            let mut sorted = xs.clone();
+            sorted.sort_by(f32::total_cmp);
+            assert_eq!(select(&xs, k), sorted[k]);
+        });
+    }
+
+    #[test]
+    fn quantile_endpoints_and_midpoint() {
+        let xs = vec![10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(quantile(&xs, 0.0), 10.0);
+        assert_eq!(quantile(&xs, 1.0), 50.0);
+        assert_eq!(quantile(&xs, 0.5), 30.0);
+        assert_eq!(quantile(&xs, 0.25), 20.0);
+        // interpolation
+        assert!((quantile(&xs, 0.1) - 14.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn partition_medians_can_be_biased() {
+        // a construction where median-of-medians != exact median
+        let a = [1.0f32, 2.0, 100.0];
+        let b = [3.0f32, 4.0, 5.0];
+        let c = [6.0f32, 7.0, 8.0];
+        let exact = median_exact(&[1.0, 2.0, 100.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let mom = median_of_partition_medians(&[&a, &b, &c]);
+        assert_eq!(exact, 5.0);
+        assert_eq!(mom, 4.0); // demonstrably biased
+    }
+
+    #[test]
+    fn randomized_median_converges_property() {
+        // §2.4's randomization claim: sampled median approaches exact as the
+        // sample grows; tolerance shrinks with sample size.
+        check_property("randomized median converges", 10, |rng: &mut SplitMix64| {
+            let n = 3000;
+            let xs = rng.uniform_vec(n, 0.0, 1000.0);
+            let cut1 = n / 3;
+            let cut2 = 2 * n / 3;
+            let parts: Vec<&[f32]> = vec![&xs[..cut1], &xs[cut1..cut2], &xs[cut2..]];
+            let exact = median_exact(&xs);
+            let small = median_randomized(&parts, 30, 1);
+            let large = median_randomized(&parts, 2000, 1);
+            // the large-sample estimate must be within ~3% of the range;
+            // the small one is allowed to be worse but both must be finite.
+            assert!((large - exact).abs() < 30.0, "large {large} vs {exact}");
+            assert!(small.is_finite());
+        });
+    }
+}

@@ -1,0 +1,136 @@
+//! NumPy-style broadcasting for dense tensors.
+//!
+//! Array programming's "syntax sugar" (paper §2.3/§4) is mostly broadcast
+//! semantics; the melt-matrix MatBroadcast paradigm relies on the same
+//! rules, so they are implemented once here and reused by `kernels::paradigm`.
+
+use crate::error::{Error, Result};
+use crate::tensor::dense::Tensor;
+use crate::tensor::shape::row_major_strides;
+
+/// Compute the broadcast result shape of two extent lists (NumPy rules:
+/// right-align, each pair must be equal or one of them 1).
+pub fn broadcast_shape(a: &[usize], b: &[usize]) -> Result<Vec<usize>> {
+    let rank = a.len().max(b.len());
+    let mut out = vec![0usize; rank];
+    for i in 0..rank {
+        let da = if i < rank - a.len() { 1 } else { a[i - (rank - a.len())] };
+        let db = if i < rank - b.len() { 1 } else { b[i - (rank - b.len())] };
+        out[i] = match (da, db) {
+            (x, y) if x == y => x,
+            (1, y) => y,
+            (x, 1) => x,
+            (x, y) => {
+                return Err(Error::shape(format!(
+                    "cannot broadcast {a:?} with {b:?} (axis {i}: {x} vs {y})"
+                )))
+            }
+        };
+    }
+    Ok(out)
+}
+
+/// Strides of `dims` virtually expanded to `out`: broadcast axes get stride 0.
+fn broadcast_strides(dims: &[usize], out: &[usize]) -> Vec<usize> {
+    let base = row_major_strides(dims);
+    let offset = out.len() - dims.len();
+    let mut strides = vec![0usize; out.len()];
+    for i in 0..dims.len() {
+        strides[offset + i] = if dims[i] == 1 { 0 } else { base[i] };
+    }
+    strides
+}
+
+/// Elementwise combine with full NumPy broadcasting.
+pub fn broadcast_zip(
+    a: &Tensor<f32>,
+    b: &Tensor<f32>,
+    f: impl Fn(f32, f32) -> f32,
+) -> Result<Tensor<f32>> {
+    let out_dims = broadcast_shape(a.shape(), b.shape())?;
+    let sa = broadcast_strides(a.shape(), &out_dims);
+    let sb = broadcast_strides(b.shape(), &out_dims);
+    let n: usize = out_dims.iter().product();
+    let mut data = Vec::with_capacity(n);
+    let mut idx = vec![0usize; out_dims.len()];
+    let (da, db) = (a.data(), b.data());
+    let (mut fa, mut fb) = (0usize, 0usize);
+    for _ in 0..n {
+        data.push(f(da[fa], db[fb]));
+        // odometer increment, updating flat offsets incrementally
+        for ax in (0..out_dims.len()).rev() {
+            idx[ax] += 1;
+            fa += sa[ax];
+            fb += sb[ax];
+            if idx[ax] < out_dims[ax] {
+                break;
+            }
+            fa -= sa[ax] * out_dims[ax];
+            fb -= sb[ax] * out_dims[ax];
+            idx[ax] = 0;
+        }
+    }
+    Tensor::from_vec(&out_dims, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_allclose, check_property, SplitMix64};
+
+    #[test]
+    fn shape_rules() {
+        assert_eq!(broadcast_shape(&[2, 3], &[2, 3]).unwrap(), vec![2, 3]);
+        assert_eq!(broadcast_shape(&[2, 1], &[1, 3]).unwrap(), vec![2, 3]);
+        assert_eq!(broadcast_shape(&[3], &[4, 3]).unwrap(), vec![4, 3]);
+        assert_eq!(broadcast_shape(&[5, 1, 7], &[6, 1]).unwrap(), vec![5, 6, 7]);
+        assert!(broadcast_shape(&[2, 3], &[4, 3]).is_err());
+    }
+
+    #[test]
+    fn row_vector_times_matrix() {
+        let m = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let v = Tensor::from_vec(&[3], vec![10.0, 100.0, 1000.0]).unwrap();
+        let out = broadcast_zip(&m, &v, |a, b| a * b).unwrap();
+        assert_eq!(out.data(), &[10.0, 200.0, 3000.0, 40.0, 500.0, 6000.0]);
+    }
+
+    #[test]
+    fn column_broadcast() {
+        let m = Tensor::from_vec(&[2, 3], vec![1.0; 6]).unwrap();
+        let c = Tensor::from_vec(&[2, 1], vec![5.0, 7.0]).unwrap();
+        let out = broadcast_zip(&m, &c, |a, b| a + b).unwrap();
+        assert_eq!(out.data(), &[6.0, 6.0, 6.0, 8.0, 8.0, 8.0]);
+    }
+
+    #[test]
+    fn scalar_like_broadcast() {
+        let m = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let s = Tensor::from_vec(&[1], vec![2.0]).unwrap();
+        let out = broadcast_zip(&m, &s, |a, b| a * b).unwrap();
+        assert_eq!(out.data(), &[2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn equal_shape_matches_zip_map_property() {
+        check_property("broadcast == zip_map on equal shapes", 25, |rng: &mut SplitMix64| {
+            let h = 1 + rng.below(6);
+            let w = 1 + rng.below(6);
+            let a = Tensor::from_vec(&[h, w], rng.uniform_vec(h * w, -5.0, 5.0)).unwrap();
+            let b = Tensor::from_vec(&[h, w], rng.uniform_vec(h * w, -5.0, 5.0)).unwrap();
+            let x = broadcast_zip(&a, &b, |p, q| p + q).unwrap();
+            let y = a.zip_map(&b, |p, q| p + q).unwrap();
+            assert_allclose(x.data(), y.data(), 0.0, 0.0);
+        });
+    }
+
+    #[test]
+    fn broadcast_commutes_with_transposed_roles() {
+        // f(a, b) with a: [1,3], b: [2,1] equals f evaluated pointwise.
+        let a = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::from_vec(&[2, 1], vec![10.0, 20.0]).unwrap();
+        let out = broadcast_zip(&a, &b, |x, y| x + y).unwrap();
+        assert_eq!(out.shape(), &[2, 3]);
+        assert_eq!(out.data(), &[11.0, 12.0, 13.0, 21.0, 22.0, 23.0]);
+    }
+}

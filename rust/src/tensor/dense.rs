@@ -1,0 +1,299 @@
+//! The owned dense tensor: contiguous row-major storage + a [`Shape`].
+
+use crate::error::{Error, Result};
+use crate::tensor::shape::Shape;
+use crate::testing::SplitMix64;
+
+/// Dense N-D tensor with contiguous row-major storage.
+///
+/// This is the paper's "generic container" (§2.3): all higher machinery
+/// (melt matrices, grids, filters) treats it as an opaque (shape, buffer)
+/// pair, which is also exactly what crosses the PJRT boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T> {
+    shape: Shape,
+    data: Vec<T>,
+}
+
+impl<T: Copy> Tensor<T> {
+    /// Build from an explicit buffer; `data.len()` must equal the shape volume.
+    pub fn from_vec(dims: &[usize], data: Vec<T>) -> Result<Self> {
+        let shape = Shape::new(dims)?;
+        if data.len() != shape.len() {
+            return Err(Error::shape(format!(
+                "buffer length {} != shape volume {} for {dims:?}",
+                data.len(),
+                shape.len()
+            )));
+        }
+        Ok(Self { shape, data })
+    }
+
+    /// Constant-filled tensor.
+    pub fn full(dims: &[usize], value: T) -> Result<Self> {
+        let shape = Shape::new(dims)?;
+        let n = shape.len();
+        Ok(Self {
+            shape,
+            data: vec![value; n],
+        })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.rank()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Shape object (strides, ravel/unravel).
+    pub fn shape_obj(&self) -> &Shape {
+        &self.shape
+    }
+
+    /// Value at a multi-index (unchecked in release; use `get` for checked).
+    pub fn at(&self, idx: &[usize]) -> T {
+        self.data[self.shape.ravel(idx)]
+    }
+
+    /// Checked access.
+    pub fn get(&self, idx: &[usize]) -> Result<T> {
+        Ok(self.data[self.shape.ravel_checked(idx)?])
+    }
+
+    /// Checked write.
+    pub fn set(&mut self, idx: &[usize], value: T) -> Result<()> {
+        let flat = self.shape.ravel_checked(idx)?;
+        self.data[flat] = value;
+        Ok(())
+    }
+
+    /// Reshape without moving data (volume must match).
+    pub fn reshape(&self, dims: &[usize]) -> Result<Self> {
+        let shape = Shape::new(dims)?;
+        if shape.len() != self.len() {
+            return Err(Error::shape(format!(
+                "cannot reshape volume {} into {dims:?}",
+                self.len()
+            )));
+        }
+        Ok(Self {
+            shape,
+            data: self.data.clone(),
+        })
+    }
+
+    /// Apply `f` elementwise, producing a new tensor.
+    pub fn map<U: Copy>(&self, f: impl Fn(T) -> U) -> Tensor<U> {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// Combine elementwise with another tensor of identical shape.
+    pub fn zip_map(&self, other: &Self, f: impl Fn(T, T) -> T) -> Result<Self> {
+        if self.shape() != other.shape() {
+            return Err(Error::shape(format!(
+                "zip_map shape mismatch: {:?} vs {:?}",
+                self.shape(),
+                other.shape()
+            )));
+        }
+        Ok(Self {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        })
+    }
+}
+
+impl Tensor<f32> {
+    /// Zero-filled tensor.
+    pub fn zeros(dims: &[usize]) -> Result<Self> {
+        Self::full(dims, 0.0)
+    }
+
+    /// Deterministic uniform-noise tensor in [lo, hi) — workload generator.
+    pub fn random(dims: &[usize], lo: f32, hi: f32, seed: u64) -> Result<Self> {
+        let shape = Shape::new(dims)?;
+        let mut rng = SplitMix64::new(seed);
+        let data = rng.uniform_vec(shape.len(), lo, hi);
+        Ok(Self { shape, data })
+    }
+
+    /// Synthetic "natural image": smooth low-frequency field + two sharp
+    /// plateaus (edges) + texture + additive noise. Deterministic in `seed`.
+    ///
+    /// This replaces the paper's pixnio.com photographs (Fig 3): bilateral
+    /// regimes depend only on the edge/noise structure, which this
+    /// generator controls explicitly (DESIGN.md §Substitutions).
+    pub fn synthetic_image(dims: &[usize; 2], seed: u64) -> Self {
+        let (h, w) = (dims[0], dims[1]);
+        let mut rng = SplitMix64::new(seed);
+        let mut data = Vec::with_capacity(h * w);
+        for y in 0..h {
+            for x in 0..w {
+                let (fy, fx) = (y as f32 / h as f32, x as f32 / w as f32);
+                // smooth background
+                let mut v = 90.0 + 50.0 * (2.0 * std::f32::consts::PI * fy).sin() * (std::f32::consts::PI * fx).cos();
+                // bright plateau (sharp edges) in the upper-left quadrant
+                if fy < 0.45 && fx < 0.45 {
+                    v = 210.0;
+                }
+                // dark disc
+                let (cy, cx) = (fy - 0.7, fx - 0.65);
+                if cy * cy + cx * cx < 0.04 {
+                    v = 30.0;
+                }
+                // fine texture + noise
+                v += 6.0 * ((x as f32 * 0.9).sin() * (y as f32 * 1.1).cos());
+                v += 12.0 * rng.normal();
+                data.push(v.clamp(0.0, 255.0));
+            }
+        }
+        Tensor {
+            shape: Shape::new(&[h, w]).unwrap(),
+            data,
+        }
+    }
+
+    /// Synthetic 3-D volume: an axis-aligned bright cuboid in a noisy field
+    /// (the Fig 5 cube workload), deterministic in `seed`.
+    pub fn synthetic_volume(dims: &[usize], seed: u64) -> Self {
+        assert_eq!(dims.len(), 3, "synthetic_volume is 3-D");
+        let shape = Shape::new(dims).unwrap();
+        let mut rng = SplitMix64::new(seed);
+        let mut data = Vec::with_capacity(shape.len());
+        for idx in shape.iter_indices() {
+            let inside = idx
+                .iter()
+                .zip(dims)
+                .all(|(&i, &d)| i >= d / 4 && i < d - d / 4);
+            let v = if inside { 200.0 } else { 40.0 };
+            data.push(v + 8.0 * rng.normal());
+        }
+        Tensor { shape, data }
+    }
+
+    /// Binary polygon mask (the Fig 4 "2-D geometrical segmentation"):
+    /// an axis-aligned rectangle union a right triangle, values {0, 1}.
+    pub fn segmentation_mask(dims: &[usize; 2]) -> Self {
+        let (h, w) = (dims[0], dims[1]);
+        let mut data = vec![0.0f32; h * w];
+        for y in 0..h {
+            for x in 0..w {
+                let rect = y >= h / 5 && y < 3 * h / 5 && x >= w / 6 && x < w / 2;
+                let tri = y >= h / 2 && x >= w / 2 && (x - w / 2) <= (y - h / 2) && y < 9 * h / 10;
+                if rect || tri {
+                    data[y * w + x] = 1.0;
+                }
+            }
+        }
+        Tensor {
+            shape: Shape::new(&[h, w]).unwrap(),
+            data,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_validates_volume() {
+        assert!(Tensor::from_vec(&[2, 3], vec![0.0f32; 6]).is_ok());
+        assert!(Tensor::from_vec(&[2, 3], vec![0.0f32; 5]).is_err());
+    }
+
+    #[test]
+    fn indexing_round_trip() {
+        let mut t = Tensor::<f32>::zeros(&[3, 4, 5]).unwrap();
+        t.set(&[2, 1, 3], 7.5).unwrap();
+        assert_eq!(t.at(&[2, 1, 3]), 7.5);
+        assert_eq!(t.get(&[2, 1, 3]).unwrap(), 7.5);
+        assert!(t.get(&[3, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 6], (0..12).map(|i| i as f32).collect()).unwrap();
+        let r = t.reshape(&[3, 4]).unwrap();
+        assert_eq!(r.shape(), &[3, 4]);
+        assert_eq!(r.data(), t.data());
+        assert!(t.reshape(&[5, 5]).is_err());
+    }
+
+    #[test]
+    fn map_and_zip_map() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0f32, 2.0, 3.0, 4.0]).unwrap();
+        let b = a.map(|v| v * 2.0);
+        assert_eq!(b.data(), &[2.0, 4.0, 6.0, 8.0]);
+        let c = a.zip_map(&b, |x, y| y - x).unwrap();
+        assert_eq!(c.data(), &[1.0, 2.0, 3.0, 4.0]);
+        let wrong = Tensor::<f32>::zeros(&[4]).unwrap();
+        assert!(a.zip_map(&wrong, |x, _| x).is_err());
+    }
+
+    #[test]
+    fn random_is_deterministic_and_bounded() {
+        let a = Tensor::random(&[4, 4], -1.0, 1.0, 9).unwrap();
+        let b = Tensor::random(&[4, 4], -1.0, 1.0, 9).unwrap();
+        assert_eq!(a, b);
+        assert!(a.data().iter().all(|v| (-1.0..1.0).contains(v)));
+    }
+
+    #[test]
+    fn synthetic_image_has_edges_and_range() {
+        let img = Tensor::synthetic_image(&[64, 64], 3);
+        assert_eq!(img.shape(), &[64, 64]);
+        let (mn, mx) = img
+            .data()
+            .iter()
+            .fold((f32::MAX, f32::MIN), |(a, b), &v| (a.min(v), b.max(v)));
+        assert!(mn >= 0.0 && mx <= 255.0);
+        assert!(mx - mn > 100.0, "needs strong edges, got range {}", mx - mn);
+    }
+
+    #[test]
+    fn synthetic_volume_cube_contrast() {
+        let vol = Tensor::synthetic_volume(&[16, 16, 16], 1);
+        // centre voxel inside cuboid, corner outside
+        assert!(vol.at(&[8, 8, 8]) > 150.0);
+        assert!(vol.at(&[0, 0, 0]) < 90.0);
+    }
+
+    #[test]
+    fn segmentation_mask_binary() {
+        let m = Tensor::segmentation_mask(&[64, 64]);
+        assert!(m.data().iter().all(|&v| v == 0.0 || v == 1.0));
+        let ones = m.data().iter().filter(|&&v| v == 1.0).count();
+        assert!(ones > 200, "mask should have interior, got {ones}");
+    }
+}

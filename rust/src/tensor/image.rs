@@ -1,0 +1,171 @@
+//! PGM (P5) image I/O + grayscale render helpers.
+//!
+//! Examples write their Fig 3/4/5 panels as binary PGM — viewable anywhere,
+//! zero dependencies. Values are min/max normalized to 8-bit on save.
+
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::tensor::dense::Tensor;
+
+/// Normalize a 2-D tensor to u8 levels (min -> 0, max -> 255).
+pub fn to_gray8(t: &Tensor<f32>) -> Result<Vec<u8>> {
+    if t.rank() != 2 {
+        return Err(Error::shape("to_gray8 requires a rank-2 tensor"));
+    }
+    let (mn, mx) = (t.min(), t.max());
+    let span = if mx > mn { mx - mn } else { 1.0 };
+    Ok(t.data()
+        .iter()
+        .map(|&v| (((v - mn) / span) * 255.0).round().clamp(0.0, 255.0) as u8)
+        .collect())
+}
+
+/// Save a 2-D tensor as binary PGM (P5), min/max normalized.
+pub fn save_pgm(t: &Tensor<f32>, path: impl AsRef<Path>) -> Result<()> {
+    let gray = to_gray8(t)?;
+    let (h, w) = (t.shape()[0], t.shape()[1]);
+    let mut f = BufWriter::new(std::fs::File::create(path)?);
+    write!(f, "P5\n{w} {h}\n255\n")?;
+    f.write_all(&gray)?;
+    Ok(())
+}
+
+/// Load a binary PGM (P5) as a f32 tensor with values in [0, 255].
+pub fn load_pgm(path: impl AsRef<Path>) -> Result<Tensor<f32>> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+    parse_pgm(&bytes)
+}
+
+fn parse_pgm(bytes: &[u8]) -> Result<Tensor<f32>> {
+    if !bytes.starts_with(b"P5") {
+        return Err(Error::Format("not a binary PGM (P5)".into()));
+    }
+    // tokenise the header: magic, width, height, maxval (comments allowed)
+    let mut pos = 2usize;
+    let mut fields = Vec::with_capacity(3);
+    while fields.len() < 3 && pos < bytes.len() {
+        // skip whitespace and comment lines
+        while pos < bytes.len() {
+            if bytes[pos] == b'#' {
+                while pos < bytes.len() && bytes[pos] != b'\n' {
+                    pos += 1;
+                }
+            } else if bytes[pos].is_ascii_whitespace() {
+                pos += 1;
+            } else {
+                break;
+            }
+        }
+        let start = pos;
+        while pos < bytes.len() && !bytes[pos].is_ascii_whitespace() {
+            pos += 1;
+        }
+        if start == pos {
+            return Err(Error::Format("truncated PGM header".into()));
+        }
+        let tok = std::str::from_utf8(&bytes[start..pos])
+            .map_err(|_| Error::Format("PGM header not ascii".into()))?;
+        fields.push(
+            tok.parse::<usize>()
+                .map_err(|_| Error::Format(format!("bad PGM field '{tok}'")))?,
+        );
+    }
+    if fields.len() != 3 {
+        return Err(Error::Format("incomplete PGM header".into()));
+    }
+    let (w, h, maxval) = (fields[0], fields[1], fields[2]);
+    if maxval > 255 {
+        return Err(Error::Format("16-bit PGM not supported".into()));
+    }
+    pos += 1; // single whitespace after maxval
+    if bytes.len() < pos + w * h {
+        return Err(Error::Format("PGM body too short".into()));
+    }
+    let data: Vec<f32> = bytes[pos..pos + w * h].iter().map(|&b| b as f32).collect();
+    Tensor::from_vec(&[h, w], data)
+}
+
+/// Side-by-side montage of equally sized 2-D tensors (for Fig 3 panels).
+pub fn montage(panels: &[&Tensor<f32>], gap: usize) -> Result<Tensor<f32>> {
+    if panels.is_empty() {
+        return Err(Error::shape("montage of zero panels"));
+    }
+    let (h, w) = (panels[0].shape()[0], panels[0].shape()[1]);
+    for p in panels {
+        if p.shape() != [h, w] {
+            return Err(Error::shape("montage panels must share shape"));
+        }
+    }
+    let total_w = w * panels.len() + gap * (panels.len() - 1);
+    let mut out = Tensor::full(&[h, total_w], 255.0)?;
+    for (k, p) in panels.iter().enumerate() {
+        let x0 = k * (w + gap);
+        for y in 0..h {
+            for x in 0..w {
+                out.set(&[y, x0 + x], p.at(&[y, x]))?;
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gray8_normalizes_full_range() {
+        let t = Tensor::from_vec(&[1, 3], vec![-1.0, 0.0, 1.0]).unwrap();
+        assert_eq!(to_gray8(&t).unwrap(), vec![0, 128, 255]);
+    }
+
+    #[test]
+    fn gray8_constant_image_no_nan() {
+        let t = Tensor::full(&[2, 2], 5.0).unwrap();
+        assert_eq!(to_gray8(&t).unwrap(), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn pgm_round_trip() {
+        let t = Tensor::from_vec(&[2, 3], vec![0.0, 51.0, 102.0, 153.0, 204.0, 255.0]).unwrap();
+        let path = std::env::temp_dir().join("meltframe_pgm_test.pgm");
+        save_pgm(&t, &path).unwrap();
+        let back = load_pgm(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.shape(), &[2, 3]);
+        // save normalizes; 0..255 input is preserved exactly
+        assert_eq!(back.data(), t.data());
+    }
+
+    #[test]
+    fn pgm_parser_handles_comments() {
+        let body: Vec<u8> = vec![1, 2, 3, 4];
+        let mut bytes = b"P5\n# a comment\n2 2\n255\n".to_vec();
+        bytes.extend(&body);
+        let t = parse_pgm(&bytes).unwrap();
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn pgm_rejects_bad_input() {
+        assert!(parse_pgm(b"P6\n1 1\n255\nx").is_err());
+        assert!(parse_pgm(b"P5\n4 4\n255\nxx").is_err()); // short body
+    }
+
+    #[test]
+    fn montage_layout() {
+        let a = Tensor::full(&[2, 2], 0.0).unwrap();
+        let b = Tensor::full(&[2, 2], 100.0).unwrap();
+        let m = montage(&[&a, &b], 1).unwrap();
+        assert_eq!(m.shape(), &[2, 5]);
+        assert_eq!(m.at(&[0, 0]), 0.0);
+        assert_eq!(m.at(&[0, 2]), 255.0); // gap filler
+        assert_eq!(m.at(&[0, 3]), 100.0);
+        let c = Tensor::full(&[3, 2], 0.0).unwrap();
+        assert!(montage(&[&a, &c], 1).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Dense N-D tensor substrate.
+//!
+//! The paper's generic container (§2.3) is the dense array in row-major
+//! (C-order) layout. This module supplies the shape/stride calculus, the
+//! owned [`dense::Tensor`] type, elementwise/reduction/broadcast ops, the
+//! `.npy` + PGM/PPM interchange formats, and the deterministic synthetic
+//! workload generators used by examples, benches, and the e2e driver.
+
+pub mod broadcast;
+pub mod dense;
+pub mod image;
+pub mod npy;
+pub mod ops;
+pub mod shape;
+
+pub use dense::Tensor;
+pub use shape::Shape;

@@ -1,0 +1,187 @@
+//! Minimal `.npy` (NumPy format 1.0) reader/writer for f32 tensors.
+//!
+//! This is the interchange format between the rust substrate and the python
+//! build path: python tests can emit golden tensors, and examples can dump
+//! results that `numpy.load` opens directly. Only little-endian f32,
+//! C-order, format version 1.0 — exactly what both sides produce.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::tensor::dense::Tensor;
+
+const MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+/// Serialize a tensor to `.npy` bytes.
+pub fn to_npy_bytes(t: &Tensor<f32>) -> Vec<u8> {
+    let shape_str = match t.shape().len() {
+        1 => format!("({},)", t.shape()[0]),
+        _ => format!(
+            "({})",
+            t.shape()
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    // pad header so that magic(6)+version(2)+len(2)+header is a multiple of 64
+    let unpadded = 6 + 2 + 2 + header.len() + 1; // +1 for the trailing \n
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+
+    let mut out = Vec::with_capacity(10 + header.len() + t.len() * 4);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&[1u8, 0u8]); // version 1.0
+    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    for &v in t.data() {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Write a tensor to a `.npy` file.
+pub fn save(t: &Tensor<f32>, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&to_npy_bytes(t))?;
+    Ok(())
+}
+
+/// Parse `.npy` bytes into a tensor (little-endian f32, C-order only).
+pub fn from_npy_bytes(bytes: &[u8]) -> Result<Tensor<f32>> {
+    if bytes.len() < 10 || &bytes[..6] != MAGIC {
+        return Err(Error::Format("not an npy file (bad magic)".into()));
+    }
+    let (major, _minor) = (bytes[6], bytes[7]);
+    if major != 1 {
+        return Err(Error::Format(format!("unsupported npy version {major}")));
+    }
+    let hlen = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+    if bytes.len() < 10 + hlen {
+        return Err(Error::Format("truncated npy header".into()));
+    }
+    let header = std::str::from_utf8(&bytes[10..10 + hlen])
+        .map_err(|_| Error::Format("npy header not utf-8".into()))?;
+    if !header.contains("'<f4'") {
+        return Err(Error::Format(format!("unsupported dtype in header: {header}")));
+    }
+    if header.contains("'fortran_order': True") {
+        return Err(Error::Format("fortran-order npy not supported".into()));
+    }
+    let dims = parse_shape(header)?;
+    let n: usize = dims.iter().product();
+    let body = &bytes[10 + hlen..];
+    if body.len() < n * 4 {
+        return Err(Error::Format(format!(
+            "npy body too short: {} bytes for {n} f32",
+            body.len()
+        )));
+    }
+    let data: Vec<f32> = body[..n * 4]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Tensor::from_vec(&dims, data)
+}
+
+/// Read a `.npy` file.
+pub fn load(path: impl AsRef<Path>) -> Result<Tensor<f32>> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+    from_npy_bytes(&bytes)
+}
+
+fn parse_shape(header: &str) -> Result<Vec<usize>> {
+    let start = header
+        .find("'shape':")
+        .ok_or_else(|| Error::Format("npy header missing shape".into()))?;
+    let rest = &header[start..];
+    let open = rest
+        .find('(')
+        .ok_or_else(|| Error::Format("npy shape missing '('".into()))?;
+    let close = rest
+        .find(')')
+        .ok_or_else(|| Error::Format("npy shape missing ')'".into()))?;
+    let inner = &rest[open + 1..close];
+    let dims: Vec<usize> = inner
+        .split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            s.parse::<usize>()
+                .map_err(|_| Error::Format(format!("bad npy extent '{s}'")))
+        })
+        .collect::<Result<_>>()?;
+    if dims.is_empty() {
+        return Err(Error::Format("rank-0 npy not supported".into()));
+    }
+    Ok(dims)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check_property, SplitMix64};
+
+    #[test]
+    fn round_trip_2d() {
+        let t = Tensor::from_vec(&[3, 4], (0..12).map(|i| i as f32 * 0.5).collect()).unwrap();
+        let back = from_npy_bytes(&to_npy_bytes(&t)).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn round_trip_1d_trailing_comma() {
+        let t = Tensor::from_vec(&[5], vec![1.0, -2.0, 3.5, 0.0, 9.0]).unwrap();
+        let bytes = to_npy_bytes(&t);
+        // 1-D shapes serialize with the python tuple trailing comma
+        let header = String::from_utf8_lossy(&bytes[10..]).to_string();
+        assert!(header.contains("(5,)"));
+        assert_eq!(from_npy_bytes(&bytes).unwrap(), t);
+    }
+
+    #[test]
+    fn header_alignment_is_64() {
+        let t = Tensor::<f32>::zeros(&[7, 7, 7]).unwrap();
+        let bytes = to_npy_bytes(&t);
+        let hlen = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        assert_eq!((10 + hlen) % 64, 0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(from_npy_bytes(b"not npy at all").is_err());
+        let t = Tensor::<f32>::zeros(&[2, 2]).unwrap();
+        let mut bytes = to_npy_bytes(&t);
+        bytes.truncate(bytes.len() - 4); // drop one f32
+        assert!(from_npy_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let t = Tensor::random(&[4, 6], -3.0, 3.0, 77).unwrap();
+        let path = std::env::temp_dir().join("meltframe_npy_test.npy");
+        save(&t, &path).unwrap();
+        let back = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn round_trip_property() {
+        check_property("npy round trip", 20, |rng: &mut SplitMix64| {
+            let rank = 1 + rng.below(4);
+            let dims: Vec<usize> = (0..rank).map(|_| 1 + rng.below(6)).collect();
+            let n: usize = dims.iter().product();
+            let t = Tensor::from_vec(&dims, rng.uniform_vec(n, -100.0, 100.0)).unwrap();
+            let back = from_npy_bytes(&to_npy_bytes(&t)).unwrap();
+            assert_eq!(back, t);
+        });
+    }
+}

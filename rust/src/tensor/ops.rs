@@ -1,0 +1,245 @@
+//! Elementwise arithmetic and reductions over dense tensors.
+//!
+//! Reductions come in two flavours mirroring the paper's §2.4 distinction:
+//! *aggregation functions* (sum/min/max/mean/var) that combine exactly
+//! across partitions, and axis reductions used by the fold stage.
+
+use crate::error::{Error, Result};
+use crate::tensor::dense::Tensor;
+
+impl Tensor<f32> {
+    /// Elementwise sum with shape check.
+    pub fn add(&self, other: &Self) -> Result<Self> {
+        self.zip_map(other, |a, b| a + b)
+    }
+
+    /// Elementwise difference.
+    pub fn sub(&self, other: &Self) -> Result<Self> {
+        self.zip_map(other, |a, b| a - b)
+    }
+
+    /// Elementwise product (Hadamard).
+    pub fn mul(&self, other: &Self) -> Result<Self> {
+        self.zip_map(other, |a, b| a * b)
+    }
+
+    /// Scalar multiply.
+    pub fn scale(&self, s: f32) -> Self {
+        self.map(|v| v * s)
+    }
+
+    /// Scalar offset.
+    pub fn offset(&self, s: f32) -> Self {
+        self.map(|v| v + s)
+    }
+
+    /// Sum of all elements (f64 accumulator for stability).
+    pub fn sum(&self) -> f64 {
+        self.data().iter().map(|&v| v as f64).sum()
+    }
+
+    /// Arithmetic mean.
+    pub fn mean(&self) -> f64 {
+        self.sum() / self.len() as f64
+    }
+
+    /// Population variance (f64 accumulator).
+    pub fn variance(&self) -> f64 {
+        let m = self.mean();
+        self.data()
+            .iter()
+            .map(|&v| {
+                let d = v as f64 - m;
+                d * d
+            })
+            .sum::<f64>()
+            / self.len() as f64
+    }
+
+    /// Minimum element.
+    pub fn min(&self) -> f32 {
+        self.data().iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    /// Maximum element.
+    pub fn max(&self) -> f32 {
+        self.data().iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    /// L2 norm of the flattened tensor.
+    pub fn norm(&self) -> f64 {
+        self.data()
+            .iter()
+            .map(|&v| (v as f64) * (v as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Mean squared error against another tensor (shape-checked).
+    pub fn mse(&self, other: &Self) -> Result<f64> {
+        if self.shape() != other.shape() {
+            return Err(Error::shape(format!(
+                "mse shape mismatch: {:?} vs {:?}",
+                self.shape(),
+                other.shape()
+            )));
+        }
+        let s: f64 = self
+            .data()
+            .iter()
+            .zip(other.data())
+            .map(|(&a, &b)| {
+                let d = a as f64 - b as f64;
+                d * d
+            })
+            .sum();
+        Ok(s / self.len() as f64)
+    }
+
+    /// Peak signal-to-noise ratio in dB for a given peak value.
+    pub fn psnr(&self, other: &Self, peak: f32) -> Result<f64> {
+        let mse = self.mse(other)?;
+        if mse == 0.0 {
+            return Ok(f64::INFINITY);
+        }
+        Ok(10.0 * ((peak as f64 * peak as f64) / mse).log10())
+    }
+
+    /// Extract the 2-D slice at position `pos` along `axis` of a 3-D tensor
+    /// (the Fig 5 "forced planar operator" path and render helper).
+    pub fn slice_plane(&self, axis: usize, pos: usize) -> Result<Self> {
+        if self.rank() != 3 {
+            return Err(Error::shape("slice_plane requires a rank-3 tensor"));
+        }
+        let d = self.shape().to_vec();
+        if axis >= 3 || pos >= d[axis] {
+            return Err(Error::shape(format!(
+                "slice_plane axis {axis} pos {pos} out of range for {d:?}"
+            )));
+        }
+        let keep: Vec<usize> = (0..3).filter(|&a| a != axis).collect();
+        let out_dims = [d[keep[0]], d[keep[1]]];
+        let mut out = Vec::with_capacity(out_dims[0] * out_dims[1]);
+        let mut idx = [0usize; 3];
+        idx[axis] = pos;
+        for i in 0..out_dims[0] {
+            for j in 0..out_dims[1] {
+                idx[keep[0]] = i;
+                idx[keep[1]] = j;
+                out.push(self.at(&idx));
+            }
+        }
+        Tensor::from_vec(&out_dims, out)
+    }
+
+    /// Insert a 2-D plane into a 3-D tensor at `pos` along `axis`
+    /// (inverse of [`slice_plane`]; used to stack per-slice 2-D results).
+    pub fn set_plane(&mut self, axis: usize, pos: usize, plane: &Self) -> Result<()> {
+        if self.rank() != 3 || plane.rank() != 2 {
+            return Err(Error::shape("set_plane requires rank-3 target, rank-2 plane"));
+        }
+        let d = self.shape().to_vec();
+        let keep: Vec<usize> = (0..3).filter(|&a| a != axis).collect();
+        if plane.shape() != [d[keep[0]], d[keep[1]]] {
+            return Err(Error::shape(format!(
+                "plane shape {:?} does not fit axis {axis} of {d:?}",
+                plane.shape()
+            )));
+        }
+        let mut idx = [0usize; 3];
+        idx[axis] = pos;
+        for i in 0..plane.shape()[0] {
+            for j in 0..plane.shape()[1] {
+                idx[keep[0]] = i;
+                idx[keep[1]] = j;
+                let v = plane.at(&[i, j]);
+                self.set(&idx, v)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_allclose, check_property, SplitMix64};
+
+    fn t(dims: &[usize], data: Vec<f32>) -> Tensor<f32> {
+        Tensor::from_vec(dims, data).unwrap()
+    }
+
+    #[test]
+    fn arithmetic_basics() {
+        let a = t(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = t(&[2, 2], vec![4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(a.add(&b).unwrap().data(), &[5.0; 4]);
+        assert_eq!(a.sub(&b).unwrap().data(), &[-3.0, -1.0, 1.0, 3.0]);
+        assert_eq!(a.mul(&b).unwrap().data(), &[4.0, 6.0, 6.0, 4.0]);
+        assert_eq!(a.scale(2.0).data(), &[2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(a.offset(1.0).data(), &[2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn reductions() {
+        let a = t(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.sum(), 10.0);
+        assert_eq!(a.mean(), 2.5);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 4.0);
+        assert!((a.variance() - 1.25).abs() < 1e-12);
+        assert!((a.norm() - 30.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mse_psnr() {
+        let a = t(&[2], vec![0.0, 0.0]);
+        let b = t(&[2], vec![3.0, 4.0]);
+        assert_eq!(a.mse(&b).unwrap(), 12.5);
+        assert_eq!(a.psnr(&a, 255.0).unwrap(), f64::INFINITY);
+        let p = a.psnr(&b, 255.0).unwrap();
+        assert!((p - 10.0 * (255.0f64 * 255.0 / 12.5).log10()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slice_set_plane_round_trip() {
+        let vol = Tensor::random(&[4, 5, 6], 0.0, 1.0, 2).unwrap();
+        for axis in 0..3 {
+            let pos = 1;
+            let plane = vol.slice_plane(axis, pos).unwrap();
+            let mut copy = Tensor::zeros(vol.shape()).unwrap();
+            copy.set_plane(axis, pos, &plane).unwrap();
+            let back = copy.slice_plane(axis, pos).unwrap();
+            assert_allclose(back.data(), plane.data(), 0.0, 0.0);
+        }
+        assert!(vol.slice_plane(3, 0).is_err());
+        assert!(vol.slice_plane(0, 10).is_err());
+    }
+
+    #[test]
+    fn plane_extraction_matches_manual_indexing() {
+        let vol = Tensor::random(&[3, 4, 5], 0.0, 1.0, 5).unwrap();
+        let p = vol.slice_plane(1, 2).unwrap(); // fix axis1=2 -> shape [3,5]
+        assert_eq!(p.shape(), &[3, 5]);
+        for i in 0..3 {
+            for j in 0..5 {
+                assert_eq!(p.at(&[i, j]), vol.at(&[i, 2, j]));
+            }
+        }
+    }
+
+    #[test]
+    fn partitioned_sum_equals_global_property() {
+        // §2.4: aggregation functions combine exactly across partitions.
+        check_property("partitioned sum == global sum", 30, |rng: &mut SplitMix64| {
+            let n = 16 + rng.below(64);
+            let data = rng.uniform_vec(n, -10.0, 10.0);
+            let a = t(&[n], data.clone());
+            let cut = 1 + rng.below(n - 1);
+            let left = t(&[cut], data[..cut].to_vec());
+            let right = t(&[n - cut], data[cut..].to_vec());
+            let err = (a.sum() - (left.sum() + right.sum())).abs();
+            assert!(err < 1e-6, "err {err}");
+        });
+    }
+}

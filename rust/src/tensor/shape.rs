@@ -1,0 +1,199 @@
+//! Shape/stride calculus for row-major dense tensors.
+//!
+//! Everything downstream (melt grids, partitions, PJRT literal shapes)
+//! reduces to this module's ravel/unravel arithmetic, so it is kept
+//! dependency-free and heavily tested.
+
+use crate::error::{Error, Result};
+
+/// An N-D extent list with its derived row-major strides.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shape {
+    dims: Vec<usize>,
+    strides: Vec<usize>,
+}
+
+impl Shape {
+    /// Build a shape; every extent must be non-zero.
+    pub fn new(dims: &[usize]) -> Result<Self> {
+        if dims.is_empty() {
+            return Err(Error::shape("rank-0 shapes are not supported"));
+        }
+        if dims.iter().any(|&d| d == 0) {
+            return Err(Error::shape(format!("zero extent in {dims:?}")));
+        }
+        Ok(Self {
+            strides: row_major_strides(dims),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn strides(&self) -> &[usize] {
+        &self.strides
+    }
+
+    /// Total number of elements.
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // zero extents are rejected at construction
+    }
+
+    /// Row-major flat index of a multi-index.
+    pub fn ravel(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.rank());
+        idx.iter().zip(&self.strides).map(|(i, s)| i * s).sum()
+    }
+
+    /// Checked ravel: errors on rank mismatch or out-of-range coordinates.
+    pub fn ravel_checked(&self, idx: &[usize]) -> Result<usize> {
+        if idx.len() != self.rank() {
+            return Err(Error::shape(format!(
+                "index rank {} vs shape rank {}",
+                idx.len(),
+                self.rank()
+            )));
+        }
+        for (a, (&i, &d)) in idx.iter().zip(&self.dims).enumerate().map(|(a, p)| (a, p)) {
+            if i >= d {
+                return Err(Error::shape(format!("index {i} >= extent {d} on axis {a}")));
+            }
+        }
+        Ok(self.ravel(idx))
+    }
+
+    /// Multi-index of a row-major flat index.
+    pub fn unravel(&self, mut flat: usize) -> Vec<usize> {
+        debug_assert!(flat < self.len());
+        let mut idx = vec![0usize; self.rank()];
+        for (a, &s) in self.strides.iter().enumerate() {
+            idx[a] = flat / s;
+            flat %= s;
+        }
+        idx
+    }
+
+    /// Iterate all multi-indices in row-major order.
+    pub fn iter_indices(&self) -> IndexIter {
+        IndexIter {
+            dims: self.dims.clone(),
+            cur: vec![0; self.rank()],
+            done: false,
+        }
+    }
+}
+
+/// Row-major (C-order) strides of an extent list.
+pub fn row_major_strides(dims: &[usize]) -> Vec<usize> {
+    let mut strides = vec![1usize; dims.len()];
+    for a in (0..dims.len().saturating_sub(1)).rev() {
+        strides[a] = strides[a + 1] * dims[a + 1];
+    }
+    strides
+}
+
+/// Row-major multi-index iterator (odometer order).
+pub struct IndexIter {
+    dims: Vec<usize>,
+    cur: Vec<usize>,
+    done: bool,
+}
+
+impl Iterator for IndexIter {
+    type Item = Vec<usize>;
+
+    fn next(&mut self) -> Option<Vec<usize>> {
+        if self.done {
+            return None;
+        }
+        let out = self.cur.clone();
+        // odometer increment from the last axis
+        for a in (0..self.dims.len()).rev() {
+            self.cur[a] += 1;
+            if self.cur[a] < self.dims[a] {
+                return Some(out);
+            }
+            self.cur[a] = 0;
+        }
+        self.done = true;
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check_property, SplitMix64};
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(row_major_strides(&[4, 5, 6]), vec![30, 6, 1]);
+        assert_eq!(row_major_strides(&[7]), vec![1]);
+    }
+
+    #[test]
+    fn rejects_zero_extent_and_rank0() {
+        assert!(Shape::new(&[3, 0, 2]).is_err());
+        assert!(Shape::new(&[]).is_err());
+    }
+
+    #[test]
+    fn ravel_matches_manual() {
+        let s = Shape::new(&[4, 5, 6]).unwrap();
+        assert_eq!(s.ravel(&[0, 0, 0]), 0);
+        assert_eq!(s.ravel(&[1, 2, 3]), 30 + 12 + 3);
+        assert_eq!(s.ravel(&[3, 4, 5]), s.len() - 1);
+    }
+
+    #[test]
+    fn ravel_checked_bounds() {
+        let s = Shape::new(&[2, 3]).unwrap();
+        assert!(s.ravel_checked(&[1, 2]).is_ok());
+        assert!(s.ravel_checked(&[2, 0]).is_err());
+        assert!(s.ravel_checked(&[0]).is_err());
+    }
+
+    #[test]
+    fn unravel_inverts_ravel_property() {
+        check_property("unravel∘ravel = id", 50, |rng: &mut SplitMix64| {
+            let rank = 1 + rng.below(4);
+            let dims: Vec<usize> = (0..rank).map(|_| 1 + rng.below(7)).collect();
+            let s = Shape::new(&dims).unwrap();
+            let flat = rng.below(s.len());
+            assert_eq!(s.ravel(&s.unravel(flat)), flat);
+        });
+    }
+
+    #[test]
+    fn iter_indices_row_major_order() {
+        let s = Shape::new(&[2, 3]).unwrap();
+        let idxs: Vec<Vec<usize>> = s.iter_indices().collect();
+        assert_eq!(
+            idxs,
+            vec![
+                vec![0, 0],
+                vec![0, 1],
+                vec![0, 2],
+                vec![1, 0],
+                vec![1, 1],
+                vec![1, 2]
+            ]
+        );
+    }
+
+    #[test]
+    fn iter_indices_count_matches_len() {
+        let s = Shape::new(&[3, 4, 2]).unwrap();
+        assert_eq!(s.iter_indices().count(), s.len());
+    }
+}

@@ -1,0 +1,154 @@
+//! Integration: coordinator invariants across modules — melt → partition →
+//! schedule → aggregate against the serial pipeline, failure injection, and
+//! the run-config front end driving the whole stack.
+
+use meltframe::config::spec::RunConfig;
+use meltframe::coordinator::pipeline::{run_job, run_pipeline, ExecOptions};
+use meltframe::coordinator::plan::ChunkPolicy;
+use meltframe::coordinator::simulate::{list_schedule, run_job_timed_chunks};
+use meltframe::coordinator::Job;
+use meltframe::kernels::convolve::gaussian_filter;
+use meltframe::melt::melt::BoundaryMode;
+use meltframe::melt::operator::Operator;
+use meltframe::tensor::dense::Tensor;
+use meltframe::testing::{assert_allclose, check_property, SplitMix64};
+
+#[test]
+fn coordinator_equals_serial_across_jobs_and_shapes() {
+    check_property("coordinator == serial reference", 8, |rng: &mut SplitMix64| {
+        let rank = 2 + rng.below(2);
+        let dims: Vec<usize> = (0..rank).map(|_| 6 + rng.below(6)).collect();
+        let x = Tensor::random(&dims, 0.0, 255.0, rng.next_u64()).unwrap();
+        let window: Vec<usize> = vec![3; rank];
+        let job = Job::gaussian(&window, 1.0);
+        let (par, _) = run_job(&x, &job, &ExecOptions::native(1 + rng.below(4))).unwrap();
+        let op = Operator::new(&window).unwrap();
+        let serial = gaussian_filter(&x, &op, 1.0, BoundaryMode::Reflect).unwrap();
+        assert_allclose(par.data(), serial.data(), 1e-6, 1e-5);
+    });
+}
+
+#[test]
+fn all_filter_kinds_run_on_2d_and_3d() {
+    for dims in [vec![10usize, 11], vec![8, 9, 10]] {
+        let window: Vec<usize> = vec![3; dims.len()];
+        let x = Tensor::random(&dims, 0.0, 255.0, 5).unwrap();
+        for job in [
+            Job::gaussian(&window, 1.0),
+            Job::bilateral_const(&window, 1.5, 25.0),
+            Job::bilateral_adaptive(&window, 1.5, 2.0),
+            Job::curvature(&window),
+        ] {
+            let (out, metrics) = run_job(&x, &job, &ExecOptions::native(2)).unwrap();
+            assert_eq!(out.shape(), &dims[..], "{job:?}");
+            assert!(out.data().iter().all(|v| v.is_finite()), "{job:?}");
+            assert_eq!(metrics.rows, x.len());
+        }
+    }
+}
+
+#[test]
+fn simulated_and_threaded_outputs_identical() {
+    let x = Tensor::synthetic_volume(&[14, 14, 14], 77);
+    for job in [Job::gaussian(&[3, 3, 3], 1.0), Job::curvature(&[3, 3, 3])] {
+        let (sim, durations) =
+            run_job_timed_chunks(&x, &job, ChunkPolicy::Fixed { chunk_rows: 777 }).unwrap();
+        let (thr, _) = run_job(&x, &job, &ExecOptions::native(4)).unwrap();
+        assert_allclose(sim.data(), thr.data(), 0.0, 0.0);
+        // makespan sanity over the real chunk durations
+        let one = list_schedule(&durations, 1).unwrap();
+        let four = list_schedule(&durations, 4).unwrap();
+        assert!(four.makespan <= one.makespan);
+        assert!(four.speedup() >= 1.0);
+    }
+}
+
+#[test]
+fn run_config_drives_full_stack() {
+    let cfg = RunConfig::parse(
+        r#"
+        workers = 2
+        [input]
+        kind = "volume"
+        dims = [10, 10, 10]
+        seed = 3
+        [job.1]
+        kind = "gaussian"
+        window = [3, 3, 3]
+        sigma = 1.0
+        [job.2]
+        kind = "curvature"
+        window = [3, 3, 3]
+        "#,
+    )
+    .unwrap();
+    let x = cfg.input.load().unwrap();
+    let (out, metrics) = run_pipeline(&x, &cfg.jobs, &cfg.options).unwrap();
+    assert_eq!(out.shape(), &[10, 10, 10]);
+    assert_eq!(metrics.len(), 2);
+    assert!(out.data().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn grid_modes_through_coordinator() {
+    use meltframe::melt::grid::GridMode;
+    let x = Tensor::random(&[12, 12], 0.0, 1.0, 2).unwrap();
+    let mut job = Job::gaussian(&[3, 3], 1.0);
+    job.grid = GridMode::Valid;
+    let (out, _) = run_job(&x, &job, &ExecOptions::native(2)).unwrap();
+    assert_eq!(out.shape(), &[10, 10]);
+    job.grid = GridMode::Strided(vec![2, 2]);
+    let (out, _) = run_job(&x, &job, &ExecOptions::native(2)).unwrap();
+    assert_eq!(out.shape(), &[6, 6]);
+}
+
+#[test]
+fn boundary_modes_through_coordinator() {
+    let x = Tensor::random(&[9, 9], 100.0, 255.0, 8).unwrap();
+    let mut outs = Vec::new();
+    for b in [
+        BoundaryMode::Reflect,
+        BoundaryMode::Nearest,
+        BoundaryMode::Wrap,
+        BoundaryMode::Constant(0.0),
+    ] {
+        let mut job = Job::gaussian(&[3, 3], 1.0);
+        job.boundary = b;
+        let (out, _) = run_job(&x, &job, &ExecOptions::native(2)).unwrap();
+        outs.push(out);
+    }
+    // interior values agree across boundary modes; the zero-fill border
+    // darkens the corner relative to reflect
+    let interior = |t: &Tensor<f32>| t.at(&[4, 4]);
+    for o in &outs[1..] {
+        assert!((interior(o) - interior(&outs[0])).abs() < 1e-4);
+    }
+    assert!(outs[3].at(&[0, 0]) < outs[0].at(&[0, 0]));
+}
+
+#[test]
+fn failure_injection_surfaces_errors() {
+    let x = Tensor::random(&[8, 8], 0.0, 1.0, 1).unwrap();
+    // window rank mismatch -> error, not panic
+    assert!(run_job(&x, &Job::gaussian(&[3, 3, 3], 1.0), &ExecOptions::native(2)).is_err());
+    // operator larger than tensor in Valid mode -> error
+    let mut job = Job::gaussian(&[3, 3], 1.0);
+    job.grid = meltframe::melt::grid::GridMode::Valid;
+    let tiny = Tensor::random(&[2, 2], 0.0, 1.0, 1).unwrap();
+    assert!(run_job(&tiny, &job, &ExecOptions::native(1)).is_err());
+    // bogus artifact dir on the pjrt backend -> error
+    let opts = ExecOptions::pjrt(1, "/definitely/not/here");
+    assert!(run_job(&x, &Job::gaussian(&[3, 3], 1.0), &opts).is_err());
+}
+
+#[test]
+fn metrics_are_consistent() {
+    let x = Tensor::synthetic_volume(&[12, 12, 12], 4);
+    let (_, m) = run_job(&x, &Job::gaussian(&[3, 3, 3], 1.0), &ExecOptions::native(3)).unwrap();
+    assert_eq!(m.rows, 12 * 12 * 12);
+    assert_eq!(m.cols, 27);
+    assert_eq!(m.chunks_per_worker.len(), 3);
+    assert_eq!(m.chunks_per_worker.iter().sum::<usize>(), 12); // 4 parts/worker * 3
+    assert!(m.total() >= m.compute);
+    assert!(m.rows_per_sec() > 0.0);
+}

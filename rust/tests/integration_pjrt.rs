@@ -1,0 +1,147 @@
+//! Integration: AOT Pallas artifacts (via PJRT) vs native rust kernels —
+//! the cross-language contract check for every variant.
+//!
+//! Requires `make artifacts`; each test skips cleanly when absent.
+
+use meltframe::coordinator::worker::JobResources;
+use meltframe::coordinator::Job;
+use meltframe::kernels::bilateral::{bilateral_into, BilateralParams, RangeSigma};
+use meltframe::kernels::curvature::curvature_into;
+use meltframe::kernels::paradigm::apply_kernel_broadcast_into;
+use meltframe::runtime::executor::{Engine, ExtraInputs};
+use meltframe::testing::{assert_allclose, SplitMix64};
+
+fn engine() -> Option<Engine> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json")
+        .exists()
+        .then(|| Engine::from_dir(&dir).unwrap())
+}
+
+fn block(rows: usize, cols: usize, seed: u64, lo: f32, hi: f32) -> Vec<f32> {
+    SplitMix64::new(seed).uniform_vec(rows * cols, lo, hi)
+}
+
+#[test]
+fn gaussian_artifacts_match_native() {
+    let Some(engine) = engine() else { return };
+    for (name, window) in [
+        ("gaussian_w9", vec![3usize, 3]),
+        ("gaussian_w25", vec![5, 5]),
+        ("gaussian_w27", vec![3, 3, 3]),
+        ("gaussian_w125", vec![5, 5, 5]),
+    ] {
+        let entry = engine.manifest().by_name(name).unwrap().clone();
+        let cols = entry.cols();
+        let rows = 513; // odd, not a chunk multiple -> exercises padding
+        let data = block(rows, cols, 7, 0.0, 255.0);
+        let kernel = meltframe::kernels::gaussian::gaussian_kernel(&window, 1.1);
+        let got = engine
+            .execute_chunk(&entry, &data, rows, &ExtraInputs::one(kernel.clone()))
+            .unwrap();
+        let mut want = vec![0.0f32; rows];
+        apply_kernel_broadcast_into(&data, rows, cols, &kernel, &mut want);
+        assert_allclose(&got, &want, 1e-4, 1e-3);
+    }
+}
+
+#[test]
+fn bilateral_artifacts_match_native() {
+    let Some(engine) = engine() else { return };
+    for (name, window, adaptive) in [
+        ("bilateral_const_w25", vec![5usize, 5], false),
+        ("bilateral_const_w27", vec![3, 3, 3], false),
+        ("bilateral_adaptive_w25", vec![5, 5], true),
+        ("bilateral_adaptive_w27", vec![3, 3, 3], true),
+    ] {
+        let entry = engine.manifest().by_name(name).unwrap().clone();
+        let cols = entry.cols();
+        let rows = 700;
+        let data = block(rows, cols, 11, 0.0, 255.0);
+        let scalar = if adaptive { 2.0f32 } else { 30.0f32 };
+        let range = if adaptive {
+            RangeSigma::Adaptive { floor: scalar }
+        } else {
+            RangeSigma::Constant(scalar)
+        };
+        let params = BilateralParams::isotropic(&window, 1.5, range).unwrap();
+        let got = engine
+            .execute_chunk(
+                &entry,
+                &data,
+                rows,
+                &ExtraInputs::two(params.spatial.clone(), vec![scalar]),
+            )
+            .unwrap();
+        let mut want = vec![0.0f32; rows];
+        bilateral_into(&data, rows, cols, cols / 2, &params, &mut want).unwrap();
+        assert_allclose(&got, &want, 1e-3, 1e-2);
+    }
+}
+
+#[test]
+fn curvature_artifacts_match_native() {
+    let Some(engine) = engine() else { return };
+    for (name, window) in [
+        ("curvature2d_w9", vec![3usize, 3]),
+        ("curvature3d_w27", vec![3, 3, 3]),
+    ] {
+        let entry = engine.manifest().by_name(name).unwrap().clone();
+        let cols = entry.cols();
+        let rows = 600;
+        // smooth-ish data: curvature det is cancellation-sensitive in f32
+        let data = block(rows, cols, 13, 0.0, 10.0);
+        let stencil = meltframe::kernels::stencil::stencil_matrix(&window).unwrap();
+        let got = engine
+            .execute_chunk(&entry, &data, rows, &ExtraInputs::one(stencil))
+            .unwrap();
+        let mut want = vec![0.0f32; rows];
+        curvature_into(&data, rows, cols, &window, &mut want).unwrap();
+        assert_allclose(&got, &want, 1e-2, 1e-2);
+    }
+}
+
+#[test]
+fn coordinator_end_to_end_backends_agree() {
+    let Some(_) = engine() else { return };
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let vol = meltframe::tensor::dense::Tensor::synthetic_volume(&[16, 16, 16], 3);
+    use meltframe::coordinator::pipeline::{run_job, ExecOptions};
+    for job in [
+        Job::gaussian(&[3, 3, 3], 1.0),
+        Job::bilateral_const(&[3, 3, 3], 1.5, 30.0),
+        Job::bilateral_adaptive(&[3, 3, 3], 1.5, 2.0),
+    ] {
+        let (native, _) = run_job(&vol, &job, &ExecOptions::native(1)).unwrap();
+        let (pjrt, _) = run_job(&vol, &job, &ExecOptions::pjrt(1, &dir)).unwrap();
+        assert_allclose(pjrt.data(), native.data(), 1e-3, 1e-2);
+    }
+}
+
+#[test]
+fn extra_input_arity_matches_manifest() {
+    let Some(engine) = engine() else { return };
+    // the JobResources -> ExtraInputs contract against the real manifest
+    for (job, name) in [
+        (Job::gaussian(&[3, 3, 3], 1.0), "gaussian_w27"),
+        (Job::bilateral_const(&[5, 5], 1.5, 30.0), "bilateral_const_w25"),
+        (Job::bilateral_adaptive(&[3, 3, 3], 1.5, 2.0), "bilateral_adaptive_w27"),
+        (Job::curvature(&[3, 3]), "curvature2d_w9"),
+    ] {
+        let res = JobResources::prepare(&job).unwrap();
+        let entry = engine.manifest().by_name(name).unwrap();
+        assert_eq!(
+            res.extra_inputs().vectors.len(),
+            entry.inputs.len() - 1,
+            "{name}"
+        );
+        assert_eq!(
+            engine
+                .manifest()
+                .by_kind_window(job.kind.artifact_kind(), &job.window)
+                .unwrap()
+                .name,
+            name
+        );
+    }
+}
