@@ -19,10 +19,10 @@
 use std::time::Duration;
 
 use meltframe::bench_harness::{Measurement, Report};
-use meltframe::coordinator::pipeline::{run_job, ExecOptions};
+use meltframe::coordinator::pipeline::{run_job, run_pipeline, ExecOptions};
 use meltframe::coordinator::plan::ChunkPolicy;
 use meltframe::coordinator::simulate::{list_schedule, run_job_timed_chunks};
-use meltframe::coordinator::Job;
+use meltframe::coordinator::{Job, Plan};
 use meltframe::tensor::dense::Tensor;
 
 const REPS: usize = 20; // the paper's repetition count
@@ -89,4 +89,45 @@ fn main() {
         });
     }
     real.print(Some("Single"));
+
+    // ---- fusion payoff: the same scaling axis for a 2-stage pipeline -------
+    // gaussian → curvature through (a) the legacy fold→re-melt path and
+    // (b) the fused chunk-resident Plan: the fused series removes the
+    // serial stage-2 re-melt, so its scaling curve stays closer to ideal.
+    println!();
+    let jobs = [Job::gaussian(&[3, 3, 3], 1.0), Job::curvature(&[3, 3, 3])];
+    let mut fusion = Report::new(
+        "Fig 6 extension — gaussian→curvature total wall time, legacy vs fused Plan",
+    );
+    for (label, workers) in SERIES {
+        let opts = ExecOptions::native(workers);
+        run_pipeline(&vol, &jobs, &opts).unwrap(); // warmup
+        let s: Vec<Duration> = (0..REPS)
+            .map(|_| {
+                let t = std::time::Instant::now();
+                run_pipeline(&vol, &jobs, &opts).unwrap();
+                t.elapsed()
+            })
+            .collect();
+        fusion.push(Measurement {
+            label: format!("legacy {label}"),
+            samples: s,
+        });
+        let s: Vec<Duration> = (0..REPS)
+            .map(|_| {
+                let t = std::time::Instant::now();
+                Plan::over(&vol)
+                    .gaussian(&[3, 3, 3], 1.0)
+                    .curvature(&[3, 3, 3])
+                    .run(&opts)
+                    .unwrap();
+                t.elapsed()
+            })
+            .collect();
+        fusion.push(Measurement {
+            label: format!("fused {label}"),
+            samples: s,
+        });
+    }
+    fusion.print(Some("legacy Single"));
 }

@@ -1,0 +1,80 @@
+//! Pipeline bench: the lazy `Plan`'s fused chunk-resident executor vs the
+//! legacy per-stage fold→re-melt path, on the same three-stage workload
+//! (gaussian 3^3 → curvature 3^3 → median 3^3 over a 48^3 volume).
+//!
+//! What fusion removes per extra stage: one full-tensor materialization,
+//! one leader-side *serial* global melt (rows × cols gather), and one
+//! global synchronization barrier. What it adds: a few halo rows of
+//! duplicated kernel work per chunk. The halo cost is O(chunks × halo),
+//! the savings are O(rows × cols) — fused wins and the gap widens with
+//! stage count and worker count (the band re-melts parallelize; the legacy
+//! melts never did).
+//!
+//! Run: `cargo bench --bench pipeline_fusion`
+
+use meltframe::bench_harness::{black_box, Measurement, Report};
+use meltframe::coordinator::pipeline::{run_pipeline, ExecOptions};
+use meltframe::coordinator::{Job, Plan};
+use meltframe::tensor::dense::Tensor;
+
+fn jobs() -> Vec<Job> {
+    vec![
+        Job::gaussian(&[3, 3, 3], 1.0),
+        Job::curvature(&[3, 3, 3]),
+        Job::median(&[3, 3, 3]),
+    ]
+}
+
+fn fused(vol: &Tensor<f32>, opts: &ExecOptions) -> (Tensor<f32>, meltframe::coordinator::PlanMetrics) {
+    Plan::over(vol)
+        .gaussian(&[3, 3, 3], 1.0)
+        .curvature(&[3, 3, 3])
+        .median(&[3, 3, 3])
+        .run(opts)
+        .unwrap()
+}
+
+fn main() {
+    let vol = Tensor::<f32>::synthetic_volume(&[48, 48, 48], 42);
+    let jobs = jobs();
+
+    // ---- correctness + structure proof before timing ----------------------
+    let opts1 = ExecOptions::native(1);
+    let (legacy_out, legacy_metrics) = run_pipeline(&vol, &jobs, &opts1).unwrap();
+    let (fused_out, pm) = fused(&vol, &opts1);
+    assert_eq!(
+        fused_out.data(),
+        legacy_out.data(),
+        "fused Plan must match legacy run_pipeline bit-for-bit"
+    );
+    assert_eq!(pm.groups.len(), 1, "all three stages must fuse");
+    assert_eq!(pm.melts(), 1, "fused group must perform exactly one melt");
+    assert_eq!(pm.folds(), 1, "fused group must perform exactly one fold");
+    let legacy_melts: usize = legacy_metrics.iter().map(|m| m.melts).sum();
+    println!(
+        "structure: legacy = {} melts / {} folds, fused = {} melt / {} fold\n",
+        legacy_melts,
+        legacy_metrics.iter().map(|m| m.folds).sum::<usize>(),
+        pm.melts(),
+        pm.folds()
+    );
+
+    // ---- timing, across worker counts -------------------------------------
+    for workers in [1usize, 2, 4] {
+        let opts = ExecOptions::native(workers);
+        let mut report = Report::new(format!(
+            "Pipeline — 3 stages on 48^3, {workers} worker(s): fold→re-melt vs fused streaming"
+        ));
+        report.push(Measurement::run("legacy run_pipeline", 1, 10, || {
+            black_box(run_pipeline(&vol, &jobs, &opts).unwrap())
+        }));
+        report.push(Measurement::run("fused Plan::run", 1, 10, || {
+            black_box(fused(&vol, &opts))
+        }));
+        report.print(Some("legacy run_pipeline"));
+        println!();
+    }
+
+    println!("fused streaming removes 2 intermediate tensors, 2 serial re-melts and 2");
+    println!("barriers from this pipeline; the margin grows with stages and workers.");
+}

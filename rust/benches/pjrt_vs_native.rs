@@ -10,16 +10,18 @@
 use meltframe::bench_harness::{black_box, Measurement, Report};
 use meltframe::coordinator::pipeline::{run_job, ExecOptions};
 use meltframe::coordinator::worker::JobResources;
-use meltframe::coordinator::Job;
+use meltframe::coordinator::{Backend, Job};
+use meltframe::kernels::gaussian::gaussian_kernel;
 use meltframe::kernels::paradigm::apply_kernel_broadcast_into;
+use meltframe::runtime::client::PjrtContext;
 use meltframe::runtime::executor::Engine;
 use meltframe::tensor::dense::Tensor;
 use meltframe::testing::SplitMix64;
 
 fn main() {
     let dir = std::path::PathBuf::from("artifacts");
-    if !dir.join("manifest.json").exists() {
-        println!("SKIP: artifacts/manifest.json missing — run `make artifacts` first");
+    if !dir.join("manifest.json").exists() || !PjrtContext::available() {
+        println!("SKIP: artifacts/manifest.json or PJRT bindings missing — run `make artifacts`");
         return;
     }
 
@@ -46,9 +48,9 @@ fn main() {
     let rows = entry.rows;
     let mut rng = SplitMix64::new(1);
     let block = rng.uniform_vec(rows * 27, 0.0, 255.0);
-    let res = JobResources::prepare(&Job::gaussian(&[3, 3, 3], 1.0)).unwrap();
-    let kernel = res.kernel.clone().unwrap();
-    let extra = res.extra_inputs();
+    let res = JobResources::for_job(&Job::gaussian(&[3, 3, 3], 1.0), Backend::Native, None).unwrap();
+    let kernel = gaussian_kernel(&[3, 3, 3], 1.0);
+    let extra = res.extra_inputs().unwrap();
     engine.warmup(&entry.name).unwrap();
 
     let mut chunk = Report::new(format!("chunk microbench — {rows} x 27 gaussian chunk"));

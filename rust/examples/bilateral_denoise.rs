@@ -50,13 +50,21 @@ fn main() -> Result<()> {
     let sigma_d = 1.5f32;
     let opts = ExecOptions::native(4);
 
+    // the four regimes as single-stage lazy plans through the coordinator
     // (b) adaptive σ_r
-    let (adaptive, mb) = run_job(&noisy, &Job::bilateral_adaptive(&window, sigma_d, 2.0), &opts)?;
+    let (adaptive, mb) = Plan::over(&noisy)
+        .bilateral_adaptive(&window, sigma_d, 2.0)
+        .run(&opts)?;
     // (c) appropriate constant σ_r — on the scale of the local noise
-    let (appropriate, mc) = run_job(&noisy, &Job::bilateral_const(&window, sigma_d, 30.0), &opts)?;
+    let (appropriate, mc) = Plan::over(&noisy)
+        .bilateral_const(&window, sigma_d, 30.0)
+        .run(&opts)?;
     // (d) excessive constant σ_r — range term vanishes, gaussian behaviour
-    let (excessive, md) = run_job(&noisy, &Job::bilateral_const(&window, sigma_d, 1e5), &opts)?;
-    // reference gaussian for the (d) comparison
+    let (excessive, md) = Plan::over(&noisy)
+        .bilateral_const(&window, sigma_d, 1e5)
+        .run(&opts)?;
+    // reference gaussian for the (d) comparison; the legacy run_job shim
+    // computes the identical tensor through the same executor
     let (gaussian, _) = run_job(&noisy, &Job::gaussian(&window, sigma_d), &opts)?;
 
     println!("timings: adaptive {} | const {} | excessive {}", mb.summary(), mc.summary(), md.summary());

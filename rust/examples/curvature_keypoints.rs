@@ -50,14 +50,14 @@ fn fig4(opts: &ExecOptions) -> Result<()> {
     println!("== Fig 4: 2-D segmentation -> corner enhancement ==");
     let dims = [128usize, 128usize];
     let mask = Tensor::<f32>::segmentation_mask(&dims);
-    // light smoothing first (the paper's masks are anti-aliased renders)
-    let pipeline = [Job::gaussian(&[3, 3], 0.8), Job::curvature(&[3, 3])];
-    let mut cur = mask.clone();
-    for job in &pipeline {
-        let (next, _) = run_job(&cur, job, opts)?;
-        cur = next;
-    }
-    let k = cur;
+    // light smoothing first (the paper's masks are anti-aliased renders),
+    // fused with the curvature stage: one melt, one fold, chunk-resident
+    let (k, pm) = Plan::over(&mask)
+        .gaussian(&[3, 3], 0.8)
+        .curvature(&[3, 3])
+        .run(opts)?;
+    assert_eq!(pm.melts(), 1, "smooth + curvature must fuse into one melt");
+    println!("fused plan: {}", pm.summary());
 
     // rectangle corners of segmentation_mask: y in {h/5, 3h/5}, x in {w/6, w/2}
     let corners = [

@@ -22,9 +22,12 @@ use meltframe::prelude::*;
 
 fn main() -> Result<()> {
     let artifact_dir = std::path::PathBuf::from("artifacts");
-    let have_artifacts = artifact_dir.join("manifest.json").exists();
+    let have_artifacts = artifact_dir.join("manifest.json").exists()
+        && meltframe::runtime::client::PjrtContext::available();
     if !have_artifacts {
-        eprintln!("warning: artifacts/ missing — run `make artifacts`; PJRT half skipped");
+        eprintln!(
+            "warning: artifacts/ or PJRT bindings missing — run `make artifacts`; PJRT half skipped"
+        );
     }
 
     // ---- the dataset: 6 synthetic volumes ---------------------------------
@@ -72,24 +75,44 @@ fn main() -> Result<()> {
         println!("| {units} | {:.2} ms | {:.2}x |", mean * 1e3, base / mean);
     }
 
-    // ---- stage 2: the full pipeline (denoise -> curvature) ----------------
-    println!("\n## multi-stage pipeline (bilateral_adaptive 3^3 -> curvature 3^3)\n");
+    // ---- stage 2: the full pipeline (denoise -> curvature -> quantile) ----
+    // run BOTH executors over the dataset: the legacy fold→re-melt baseline
+    // and the fused lazy Plan (one melt/fold, chunk-resident streaming) —
+    // identical outputs, the fused path skips every intermediate tensor.
+    println!("\n## multi-stage pipeline (bilateral_adaptive 3^3 -> curvature 3^3 -> q90 3^3)\n");
     let stages = vec![
         Job::bilateral_adaptive(&[3, 3, 3], 1.5, 2.0),
         Job::curvature(&[3, 3, 3]),
+        Job::quantile(&[3, 3, 3], 0.9),
     ];
     let opts = ExecOptions::native(4);
     let t = Instant::now();
-    let mut responses = Vec::new();
+    let mut legacy_outs = Vec::new();
     for vol in &dataset {
         let (k, _) = run_pipeline(vol, &stages, &opts)?;
+        legacy_outs.push(k);
+    }
+    let legacy_elapsed = t.elapsed();
+    let t = Instant::now();
+    let mut responses = Vec::new();
+    for (vol, legacy) in dataset.iter().zip(&legacy_outs) {
+        let (k, pm) = Plan::over(vol)
+            .bilateral_adaptive(&[3, 3, 3], 1.5, 2.0)
+            .curvature(&[3, 3, 3])
+            .quantile(&[3, 3, 3], 0.9)
+            .run(&opts)?;
+        assert_eq!(pm.melts(), 1, "three fusable stages must share one melt");
+        assert_eq!(k.data(), legacy.data(), "fused must equal legacy bit-for-bit");
         // headline analytic: cuboid vertices light up
         responses.push(k.map(|v| v.abs()).max());
     }
     println!(
-        "processed {} volumes in {:.2?}; max |K| per volume: {:?}",
+        "processed {} volumes | legacy fold→re-melt {legacy_elapsed:.2?} | fused Plan {:.2?}",
         dataset.len(),
         t.elapsed(),
+    );
+    println!(
+        "max |K|-q90 per volume: {:?}",
         responses.iter().map(|v| format!("{v:.3}")).collect::<Vec<_>>()
     );
     assert!(responses.iter().all(|&r| r > 0.0));

@@ -2,7 +2,9 @@
 //!
 //! 1. build a tensor, 2. melt it under an operator on a quasi-grid,
 //! 3. broadcast a kernel over the rows, 4. fold back, 5. do the same thing
-//! through the parallel coordinator and check the outputs agree.
+//! through the parallel coordinator and check the outputs agree, 6. compose
+//! a multi-stage lazy `Plan` and watch the planner fuse it into one
+//! melt/fold pass.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -50,6 +52,30 @@ fn main() -> Result<()> {
         assert_eq!(out.data(), smoothed.data(), "worker count must not change results");
         println!("{workers} worker(s): {}", metrics.summary());
     }
+
+    // ---- 6. the lazy Plan: record stages, fuse, stream --------------------
+    // gaussian → curvature → per-row median (a stats reduction) become ONE
+    // melt and ONE fold; chunks stream worker-resident through all three.
+    let plan = Plan::over(&vol)
+        .gaussian(&[3, 3, 3], 1.0)
+        .curvature(&[3, 3, 3])
+        .median(&[3, 3, 3]);
+    let compiled = plan.compile(Backend::Native)?;
+    println!("plan: {}", compiled.describe());
+    let (fused, pm) = compiled.execute(&ExecOptions::native(4))?;
+    assert_eq!(pm.melts(), 1);
+    assert_eq!(pm.folds(), 1);
+    assert_eq!(pm.stages(), 3);
+    println!("fused plan: {}", pm.summary());
+
+    // bit-for-bit equal to the legacy stage-by-stage path
+    let jobs = [
+        Job::gaussian(&[3, 3, 3], 1.0),
+        Job::curvature(&[3, 3, 3]),
+        Job::median(&[3, 3, 3]),
+    ];
+    let (legacy, _) = run_pipeline(&vol, &jobs, &ExecOptions::native(4))?;
+    assert_eq!(fused.data(), legacy.data(), "fused must equal legacy bit-for-bit");
 
     // ---- bonus: partitions are §2.4-valid by construction -----------------
     let partition = RowPartition::even(m.rows(), 4)?;

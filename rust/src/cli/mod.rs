@@ -17,6 +17,9 @@ pub enum Command {
     Run {
         config: PathBuf,
         out: Option<PathBuf>,
+        /// Force the stage-by-stage fold→re-melt baseline instead of the
+        /// fused lazy `Plan` executor.
+        legacy: bool,
     },
     Inspect {
         artifacts: PathBuf,
@@ -33,10 +36,13 @@ pub const USAGE: &str = "\
 meltframe — melt-matrix array programming with parallel acceleration
 
 USAGE:
-    meltframe run <config.toml> [--out <file.npy>]
+    meltframe run <config.toml> [--out <file.npy>] [--legacy]
     meltframe inspect [--artifacts <dir>]
     meltframe demo [--workers <n>] [--backend native|pjrt] [--artifacts <dir>]
     meltframe help
+
+`run` executes the configured stages through the fused lazy Plan (one melt,
+one fold per fusable group); `--legacy` forces the stage-by-stage baseline.
 ";
 
 /// Parse argv (without the program name).
@@ -50,11 +56,13 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
         "run" => {
             let mut config = None;
             let mut out = None;
+            let mut legacy = false;
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--out" => {
                         out = Some(PathBuf::from(expect_value(&mut it, "--out")?));
                     }
+                    "--legacy" => legacy = true,
                     flag if flag.starts_with("--") => {
                         return Err(Error::Config(format!("unknown flag '{flag}' for run")))
                     }
@@ -68,6 +76,7 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
             Ok(Command::Run {
                 config: config.ok_or_else(|| Error::Config("run requires a config file".into()))?,
                 out,
+                legacy,
             })
         }
         "inspect" => {
@@ -135,6 +144,16 @@ mod tests {
             Command::Run {
                 config: PathBuf::from("pipeline.toml"),
                 out: Some(PathBuf::from("result.npy")),
+                legacy: false,
+            }
+        );
+        let c = parse_args(&argv("run pipeline.toml --legacy")).unwrap();
+        assert_eq!(
+            c,
+            Command::Run {
+                config: PathBuf::from("pipeline.toml"),
+                out: None,
+                legacy: true,
             }
         );
     }

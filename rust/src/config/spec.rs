@@ -25,6 +25,7 @@ use std::path::PathBuf;
 use crate::config::toml::TomlDoc;
 use crate::coordinator::job::{Backend, Job};
 use crate::coordinator::pipeline::ExecOptions;
+use crate::coordinator::plan::Plan;
 use crate::error::{Error, Result};
 use crate::tensor::dense::Tensor;
 
@@ -34,6 +35,9 @@ pub struct RunConfig {
     pub options: ExecOptions,
     pub input: InputSpec,
     pub jobs: Vec<Job>,
+    /// Execute through the fused lazy `Plan` (default) or the legacy
+    /// stage-by-stage `run_pipeline` baseline (`fused = false`).
+    pub fused: bool,
 }
 
 /// Where the input tensor comes from.
@@ -89,6 +93,12 @@ impl RunConfig {
             return Err(Error::Config("backend = \"pjrt\" requires artifacts = \"<dir>\"".into()));
         }
 
+        let fused = doc
+            .get("", "fused")
+            .map(|v| v.as_bool())
+            .transpose()?
+            .unwrap_or(true);
+
         let input = Self::parse_input(&doc)?;
         let jobs = Self::parse_jobs(&doc)?;
         Ok(Self {
@@ -100,12 +110,22 @@ impl RunConfig {
             },
             input,
             jobs,
+            fused,
         })
     }
 
     /// Read + parse a config file.
     pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
         Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Lower the configured job list into a lazy [`Plan`] over `input`.
+    pub fn plan<'a>(&self, input: &'a Tensor<f32>) -> Result<Plan<'a>> {
+        let mut plan = Plan::over(input);
+        for job in &self.jobs {
+            plan = plan.stage(job.to_stage()?);
+        }
+        Ok(plan)
     }
 
     fn parse_input(doc: &TomlDoc) -> Result<InputSpec> {
@@ -181,9 +201,16 @@ impl RunConfig {
                 Job::bilateral_adaptive(&window, getf("sigma_d")?, getf("floor")?)
             }
             "curvature" => Job::curvature(&window),
+            "median" => Job::median(&window),
+            "quantile" => Job::quantile(&window, getf("q")? as f64),
+            "minimum" => Job::rank_min(&window),
+            "maximum" => Job::rank_max(&window),
+            "local_mean" => Job::local_mean(&window),
+            "local_std" => Job::local_std(&window),
             other => {
                 return Err(Error::Config(format!(
-                    "unknown job kind '{other}' (gaussian|bilateral_const|bilateral_adaptive|curvature)"
+                    "unknown job kind '{other}' (gaussian|bilateral_const|bilateral_adaptive|\
+                     curvature|median|quantile|minimum|maximum|local_mean|local_std)"
                 )))
             }
         };
@@ -223,6 +250,40 @@ mod tests {
         assert!(matches!(cfg.jobs[1].kind, FilterKind::Curvature));
         let x = cfg.input.load().unwrap();
         assert_eq!(x.shape(), &[16, 16, 16]);
+    }
+
+    #[test]
+    fn parses_stats_jobs_and_fused_flag() {
+        let cfg = RunConfig::parse(
+            r#"
+            workers = 2
+            fused = false
+            [input]
+            kind = "image"
+            dims = [16, 16]
+            [job.1]
+            kind = "quantile"
+            window = [3, 3]
+            q = 0.5
+            [job.2]
+            kind = "local_std"
+            window = [3, 3]
+            "#,
+        )
+        .unwrap();
+        assert!(!cfg.fused);
+        assert!(matches!(cfg.jobs[0].kind, FilterKind::Rank(_)));
+        assert!(matches!(cfg.jobs[1].kind, FilterKind::LocalMoment(_)));
+        // the plan lowering records both stages lazily
+        let x = cfg.input.load().unwrap();
+        let plan = cfg.plan(&x).unwrap();
+        assert_eq!(plan.len(), 2);
+        // default is fused
+        assert!(RunConfig::parse(
+            "[input]\nkind = \"mask\"\ndims = [8, 8]\n[job]\nkind = \"median\"\nwindow = [3, 3]"
+        )
+        .unwrap()
+        .fused);
     }
 
     #[test]

@@ -1,0 +1,450 @@
+//! The plan executor: Fig 2 at runtime, for lazy stage graphs.
+//!
+//! Singleton groups run the classic barrier path (global melt → partition →
+//! parallel execute → fold), on either backend. Fused groups run the
+//! chunk-resident streaming path: ONE global melt feeds stage 1, then each
+//! worker pushes its chunk through *all* remaining stages while the
+//! intermediate values are resident — stage `k ≥ 2` re-melts locally from a
+//! halo-extended value slab of stage `k − 1` (see
+//! [`crate::melt::melt::melt_band_into`]) instead of waiting for a global
+//! fold → re-melt barrier. The result: a fused n-stage group performs
+//! exactly one global melt and one global fold, never materializes an
+//! intermediate full tensor, and parallelizes the re-melt gathers that the
+//! legacy `run_pipeline` executed serially on the leader.
+//!
+//! Halo accounting: stage `k`'s gathers reach at most
+//! `flat_halo(grid, op_k)` rows from each output row, so a chunk `[s, e)`
+//! needs stage `k`'s output on `[s − B_k, e + B_k)` (clamped), where
+//! `B_k = Σ_{j>k} flat_halo(op_j)` is the *downstream* halo budget. Rows in
+//! the overlap are computed by more than one worker — a few halo rows per
+//! chunk, traded for the removal of the global barrier and the intermediate
+//! tensors. Bit-for-bit equality with the legacy path holds because every
+//! gather copies the same values through the same boundary mapping and
+//! every kernel is row-deterministic (§2.4 row independence).
+
+use std::ops::Range;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::aggregator::{assemble, merged_moments};
+use crate::coordinator::job::Backend;
+use crate::coordinator::kernel::RowKernel;
+use crate::coordinator::metrics::{PlanMetrics, RunMetrics};
+use crate::coordinator::pipeline::ExecOptions;
+use crate::coordinator::plan::Stage;
+use crate::coordinator::scheduler::{ResultBoard, WorkQueue};
+use crate::coordinator::worker::{JobResources, WorkerContext};
+use crate::error::{Error, Result};
+use crate::melt::grid::QuasiGrid;
+use crate::melt::matrix::MeltMatrix;
+use crate::melt::melt::{flat_halo, melt_band_into, melt_into, uninit_buffer};
+use crate::melt::operator::Operator;
+use crate::stats::descriptive::Moments;
+use crate::tensor::dense::Tensor;
+
+/// Clamp `range` extended by `budget` rows on both sides to `[0, rows)`.
+fn extend(range: &Range<usize>, budget: usize, rows: usize) -> Range<usize> {
+    range.start.saturating_sub(budget)..(range.end + budget).min(rows)
+}
+
+/// Execute a planned stage graph group by group, feeding each group's
+/// output tensor to the next.
+pub(crate) fn execute_groups(
+    x: &Tensor<f32>,
+    stages: &[Stage],
+    groups: &[Range<usize>],
+    opts: &ExecOptions,
+) -> Result<(Tensor<f32>, PlanMetrics)> {
+    if opts.workers == 0 {
+        return Err(Error::Coordinator("workers must be >= 1".into()));
+    }
+    if stages.is_empty() || groups.is_empty() {
+        return Err(Error::Coordinator("empty plan".into()));
+    }
+    let mut cur: Option<Tensor<f32>> = None;
+    let mut metrics = Vec::with_capacity(groups.len());
+    let mut out_moments = Moments::new();
+    for (gi, g) in groups.iter().enumerate() {
+        // only the final group's statistics are kept — intermediate groups
+        // skip the pass entirely
+        let last = gi + 1 == groups.len();
+        let input = cur.as_ref().unwrap_or(x);
+        let (next, m, mom) = if g.len() == 1 {
+            run_single_stage(input, &stages[g.start], opts, last)?
+        } else {
+            run_fused_group(input, &stages[g.clone()], opts, last)?
+        };
+        metrics.push(m);
+        if let Some(mom) = mom {
+            out_moments = mom;
+        }
+        cur = Some(next);
+    }
+    Ok((
+        cur.expect("at least one group executed"),
+        PlanMetrics {
+            groups: metrics,
+            output_moments: out_moments,
+        },
+    ))
+}
+
+/// The barrier path: one stage, melt → partition → parallel execute →
+/// fold, on either backend. Also the body of the legacy `run_job` shim.
+/// `collect_moments` merges per-chunk output statistics (the §2.4
+/// aggregation path) — skipped when the caller discards them, and always
+/// outside the timed aggregation window.
+pub(crate) fn run_single_stage(
+    x: &Tensor<f32>,
+    stage: &Stage,
+    opts: &ExecOptions,
+    collect_moments: bool,
+) -> Result<(Tensor<f32>, RunMetrics, Option<Moments>)> {
+    if opts.workers == 0 {
+        return Err(Error::Coordinator("workers must be >= 1".into()));
+    }
+    let t_setup = Instant::now();
+    let res = JobResources::prepare(stage, opts.backend, opts.artifact_dir.as_ref())?;
+    let op = stage.operator()?;
+    let grid = QuasiGrid::resolve(x.shape(), &op, stage.grid())?;
+
+    // melt (leader-side; row-decoupled by construction); uninitialized
+    // buffer is sound — melt_into writes every element (§Perf iteration 4)
+    let rows = grid.rows();
+    let cols = op.ravel_len();
+    let mut data = uninit_buffer(rows * cols);
+    melt_into(x, &op, &grid, stage.boundary(), &mut data)?;
+    let m = MeltMatrix::new(data, rows, cols, grid.out_shape().to_vec(), op.window().to_vec())?;
+
+    // partition per policy; PJRT needs the manifest's fixed chunk height —
+    // read from the resources loaded once above, not from disk again
+    let pjrt_chunk_rows = res.manifest.as_ref().map(|mf| mf.chunk_rows).unwrap_or(0);
+    let partition = opts.resolve_policy(pjrt_chunk_rows).partition(rows, opts.workers)?;
+    partition.validate()?;
+
+    let queue = WorkQueue::new(&partition);
+    let board = ResultBoard::new(queue.num_chunks());
+    let mut chunk_counts = vec![0usize; opts.workers];
+    // +1: the leader also waits on the barrier to timestamp compute start
+    // only after every worker finished its (PJRT) engine build.
+    let barrier = Barrier::new(opts.workers + 1);
+    let backend = opts.backend;
+
+    let mut setup = t_setup.elapsed();
+    let mut compute = Duration::ZERO;
+
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::with_capacity(opts.workers);
+        for _ in 0..opts.workers {
+            let res = &res;
+            let m = &m;
+            let queue = &queue;
+            let board = &board;
+            let barrier = &barrier;
+            handles.push(s.spawn(move || -> Result<(usize, Instant, Instant)> {
+                // engine build + artifact compile = setup, not compute
+                let ctx = WorkerContext::build(res, backend);
+                barrier.wait();
+                let ctx = ctx?;
+                // workers self-report their compute window: the leader may
+                // be descheduled at barrier release, so leader-side clocks
+                // would under-measure the parallel phase.
+                let t0 = Instant::now();
+                let mut done = 0usize;
+                while let Some((id, range)) = queue.pop() {
+                    let block = m.row_block(range.start, range.end)?;
+                    let out = ctx.execute(res, block, range.len())?;
+                    board.put(id, out)?;
+                    done += 1;
+                }
+                Ok((done, t0, Instant::now()))
+            }));
+        }
+        barrier.wait();
+        setup = t_setup.elapsed();
+        let mut first_start: Option<Instant> = None;
+        let mut last_end: Option<Instant> = None;
+        for (w, h) in handles.into_iter().enumerate() {
+            let (done, t0, t1) = h
+                .join()
+                .map_err(|_| Error::Coordinator(format!("worker {w} panicked")))??;
+            chunk_counts[w] = done;
+            first_start = Some(first_start.map_or(t0, |f| f.min(t0)));
+            last_end = Some(last_end.map_or(t1, |l| l.max(t1)));
+        }
+        compute = match (first_start, last_end) {
+            (Some(a), Some(b)) => b.duration_since(a),
+            _ => Duration::ZERO,
+        };
+        Ok(())
+    })?;
+
+    let t_agg = Instant::now();
+    let chunks = board.into_chunks()?;
+    let out = assemble(&chunks, &partition, m.grid_shape())?;
+    let aggregate = t_agg.elapsed();
+    let moments = collect_moments.then(|| merged_moments(&chunks));
+
+    Ok((
+        out,
+        RunMetrics {
+            setup,
+            compute,
+            aggregate,
+            chunks_per_worker: chunk_counts,
+            rows,
+            cols,
+            melts: 1,
+            folds: 1,
+            stages: 1,
+        },
+        moments,
+    ))
+}
+
+/// The streaming path: one global melt, then every chunk flows through all
+/// member stages inside its worker, re-melting locally from halo slabs.
+pub(crate) fn run_fused_group(
+    x: &Tensor<f32>,
+    stages: &[Stage],
+    opts: &ExecOptions,
+    collect_moments: bool,
+) -> Result<(Tensor<f32>, RunMetrics, Option<Moments>)> {
+    if stages.len() < 2 {
+        return Err(Error::Coordinator("fused groups need at least 2 stages".into()));
+    }
+    if opts.backend != Backend::Native {
+        return Err(Error::Coordinator(
+            "fused groups execute on the native backend (the planner keeps PJRT stages in singleton groups)".into(),
+        ));
+    }
+    if opts.workers == 0 {
+        return Err(Error::Coordinator("workers must be >= 1".into()));
+    }
+    for s in &stages[1..] {
+        if !s.streamable() {
+            return Err(Error::Coordinator(
+                "non-streamable stage inside a fused group (planner bug)".into(),
+            ));
+        }
+    }
+
+    let t_setup = Instant::now();
+    let n = stages.len();
+    let ops: Vec<Operator> = stages.iter().map(|s| s.operator()).collect::<Result<_>>()?;
+    let kernels: Vec<Arc<dyn RowKernel>> = stages.iter().map(|s| s.kernel().clone()).collect();
+    let colsv: Vec<usize> = ops.iter().map(|o| o.ravel_len()).collect();
+
+    // the first stage's quasi-grid defines the group's row space; later
+    // stages are Same-mode over it (planner invariant checked above)
+    let grid = QuasiGrid::resolve(x.shape(), &ops[0], stages[0].grid())?;
+    let grid_shape = grid.out_shape().to_vec();
+    let rows = grid.rows();
+    let cols0 = colsv[0];
+
+    // ONE global melt for the whole group
+    let mut data = uninit_buffer(rows * cols0);
+    melt_into(x, &ops[0], &grid, stages[0].boundary(), &mut data)?;
+    let m = MeltMatrix::new(data, rows, cols0, grid_shape.clone(), ops[0].window().to_vec())?;
+
+    // downstream halo budgets: stage k's output must cover the chunk
+    // extended by the halos of every later stage
+    let halos: Vec<usize> = ops.iter().map(|o| flat_halo(&grid_shape, o)).collect();
+    let mut budget = vec![0usize; n];
+    for k in (0..n - 1).rev() {
+        budget[k] = budget[k + 1] + halos[k + 1];
+    }
+
+    // halo rows are recomputed per chunk, so the default fused partition
+    // targets chunks of >= ~8x the total halo budget to keep duplicated
+    // work a small fraction. The target is best-effort: the part count is
+    // floored at the worker count (idle workers cost more wall-clock than
+    // halo recompute) and capped at 4 parts/worker for load balancing, so
+    // small inputs trade some redundant kernel work for full utilization.
+    let partition = match opts.chunk_policy {
+        Some(p) => p.partition(rows, opts.workers)?,
+        None => {
+            let max_parts = 4 * opts.workers;
+            let halo_budget = budget[0].max(1);
+            let parts = (rows / (8 * halo_budget)).clamp(opts.workers, max_parts);
+            crate::melt::partition::RowPartition::even(rows, parts)?
+        }
+    };
+    partition.validate()?;
+    let queue = WorkQueue::new(&partition);
+    let board = ResultBoard::new(queue.num_chunks());
+    let mut chunk_counts = vec![0usize; opts.workers];
+    let barrier = Barrier::new(opts.workers + 1);
+
+    let mut setup = t_setup.elapsed();
+    let mut compute = Duration::ZERO;
+
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::with_capacity(opts.workers);
+        for _ in 0..opts.workers {
+            let m = &m;
+            let queue = &queue;
+            let board = &board;
+            let barrier = &barrier;
+            let kernels = &kernels;
+            let colsv = &colsv;
+            let budget = &budget;
+            let ops = &ops;
+            let grid_shape = &grid_shape;
+            handles.push(s.spawn(move || -> Result<(usize, Instant, Instant)> {
+                barrier.wait();
+                let t0 = Instant::now();
+                let mut done = 0usize;
+                // reusable per-worker scratch: current/next value slabs and
+                // the local re-melt band
+                let mut vals: Vec<f32> = Vec::new();
+                let mut next_vals: Vec<f32> = Vec::new();
+                let mut band: Vec<f32> = Vec::new();
+                while let Some((id, range)) = queue.pop() {
+                    // stage 0 over the halo-extended range, straight off
+                    // the global melt matrix
+                    let ext0 = extend(&range, budget[0], rows);
+                    let block = m.row_block(ext0.start, ext0.end)?;
+                    vals.clear();
+                    vals.resize(ext0.len(), 0.0);
+                    kernels[0].execute(block, ext0.len(), colsv[0], &mut vals)?;
+                    let mut prev_range = ext0;
+                    // remaining stages: local band re-melt from the
+                    // previous slab, then the kernel — all chunk-resident
+                    for k in 1..kernels.len() {
+                        let ext = extend(&range, budget[k], rows);
+                        band.clear();
+                        band.resize(ext.len() * colsv[k], 0.0);
+                        melt_band_into(
+                            &vals,
+                            prev_range.start,
+                            grid_shape,
+                            &ops[k],
+                            stages[k].boundary(),
+                            ext.clone(),
+                            &mut band,
+                        )?;
+                        next_vals.clear();
+                        next_vals.resize(ext.len(), 0.0);
+                        kernels[k].execute(&band, ext.len(), colsv[k], &mut next_vals)?;
+                        std::mem::swap(&mut vals, &mut next_vals);
+                        prev_range = ext;
+                    }
+                    debug_assert_eq!(prev_range, range);
+                    board.put(id, vals.clone())?;
+                    done += 1;
+                }
+                Ok((done, t0, Instant::now()))
+            }));
+        }
+        barrier.wait();
+        setup = t_setup.elapsed();
+        let mut first_start: Option<Instant> = None;
+        let mut last_end: Option<Instant> = None;
+        for (w, h) in handles.into_iter().enumerate() {
+            let (done, t0, t1) = h
+                .join()
+                .map_err(|_| Error::Coordinator(format!("worker {w} panicked")))??;
+            chunk_counts[w] = done;
+            first_start = Some(first_start.map_or(t0, |f| f.min(t0)));
+            last_end = Some(last_end.map_or(t1, |l| l.max(t1)));
+        }
+        compute = match (first_start, last_end) {
+            (Some(a), Some(b)) => b.duration_since(a),
+            _ => Duration::ZERO,
+        };
+        Ok(())
+    })?;
+
+    let t_agg = Instant::now();
+    let chunks = board.into_chunks()?;
+    let out = assemble(&chunks, &partition, &grid_shape)?;
+    let aggregate = t_agg.elapsed();
+    let moments = collect_moments.then(|| merged_moments(&chunks));
+
+    Ok((
+        out,
+        RunMetrics {
+            setup,
+            compute,
+            aggregate,
+            chunks_per_worker: chunk_counts,
+            rows,
+            cols: cols0,
+            melts: 1,
+            folds: 1,
+            stages: n,
+        },
+        moments,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::Job;
+    use crate::coordinator::pipeline::run_pipeline;
+    use crate::testing::assert_allclose;
+
+    fn stages_of(jobs: &[Job]) -> Vec<Stage> {
+        jobs.iter().map(|j| j.to_stage().unwrap()).collect()
+    }
+
+    #[test]
+    fn fused_group_matches_legacy_stage_by_stage() {
+        let x = Tensor::random(&[12, 13], 0.0, 255.0, 21).unwrap();
+        let jobs = vec![
+            Job::gaussian(&[3, 3], 1.0),
+            Job::curvature(&[3, 3]),
+            Job::median(&[3, 3]),
+        ];
+        let opts = ExecOptions::native(3);
+        let (legacy, _) = run_pipeline(&x, &jobs, &ExecOptions::native(1)).unwrap();
+        let (fused, m, mom) = run_fused_group(&x, &stages_of(&jobs), &opts, true).unwrap();
+        assert!(mom.is_some());
+        assert_allclose(fused.data(), legacy.data(), 0.0, 0.0);
+        assert_eq!(m.melts, 1);
+        assert_eq!(m.folds, 1);
+        assert_eq!(m.stages, 3);
+        assert_eq!(m.chunks_per_worker.len(), 3);
+    }
+
+    #[test]
+    fn fused_group_rejects_bad_shapes() {
+        let x = Tensor::random(&[8, 8], 0.0, 1.0, 1).unwrap();
+        let jobs = vec![Job::gaussian(&[3, 3], 1.0), Job::curvature(&[3, 3])];
+        // single stage is not a fused group
+        assert!(
+            run_fused_group(&x, &stages_of(&jobs[..1]), &ExecOptions::native(2), true).is_err()
+        );
+        // pjrt backend never streams
+        let opts = ExecOptions::pjrt(1, "/nowhere");
+        assert!(run_fused_group(&x, &stages_of(&jobs), &opts, true).is_err());
+        // zero workers
+        assert!(run_fused_group(&x, &stages_of(&jobs), &ExecOptions::native(0), true).is_err());
+    }
+
+    #[test]
+    fn execute_groups_chains_group_outputs() {
+        // gaussian (Valid grid) as its own group, then a fused pair
+        let x = Tensor::random(&[14, 14], 0.0, 255.0, 9).unwrap();
+        let mut g = Job::gaussian(&[3, 3], 1.0);
+        g.grid = crate::melt::grid::GridMode::Valid;
+        let jobs = vec![g, Job::curvature(&[3, 3]), Job::local_std(&[3, 3])];
+        let stages = stages_of(&jobs);
+        let groups = vec![0..1, 1..3];
+        let opts = ExecOptions::native(2);
+        let (out, pm) = execute_groups(&x, &stages, &groups, &opts).unwrap();
+        assert_eq!(out.shape(), &[12, 12]);
+        assert_eq!(pm.groups.len(), 2);
+        assert_eq!(pm.melts(), 2);
+        assert_eq!(pm.stages(), 3);
+        // legacy reference
+        let (legacy, _) = run_pipeline(&x, &jobs, &ExecOptions::native(1)).unwrap();
+        assert_allclose(out.data(), legacy.data(), 0.0, 0.0);
+        // output moments match a direct pass over the result
+        let direct = crate::stats::descriptive::moments(out.data());
+        assert_eq!(pm.output_moments.count, direct.count);
+        assert!((pm.output_moments.mean - direct.mean).abs() < 1e-6);
+    }
+}

@@ -1,12 +1,28 @@
-//! Job specifications: what to compute, on which backend.
+//! Job specifications: the declarative *spec* layer over the open
+//! [`RowKernel`] trait.
+//!
+//! A [`Job`] is what configs (TOML/JSON) and the CLI parse into; execution
+//! lowers it to a [`Stage`] via [`Job::to_stage`] and runs through the lazy
+//! `Plan` machinery — `FilterKind` is no longer the closed execution
+//! surface, just a serializable catalogue of the built-in kernels
+//! (including the `stats`-layer reductions: rank statistics and local
+//! moments).
 
+use std::sync::Arc;
+
+use crate::coordinator::kernel::{
+    BilateralRowKernel, CurvatureRowKernel, GaussianRowKernel, LocalMomentKernel, MomentStat,
+    RankRowKernel, RowKernel,
+};
+use crate::coordinator::plan::Stage;
 use crate::error::{Error, Result};
 use crate::kernels::bilateral::{BilateralParams, RangeSigma};
+use crate::kernels::rankfilter::RankKind;
 use crate::melt::grid::GridMode;
 use crate::melt::melt::BoundaryMode;
 use crate::melt::operator::Operator;
 
-/// Which filter a job applies over the melt rows.
+/// Which built-in computation a job applies over the melt rows.
 #[derive(Clone, Debug, PartialEq)]
 pub enum FilterKind {
     /// Global gaussian filter, isotropic `sigma` (paper Fig 6 workload).
@@ -17,16 +33,23 @@ pub enum FilterKind {
     BilateralAdaptive { sigma_d: f32, floor: f32 },
     /// N-D Gaussian curvature (Figs 4/5).
     Curvature,
+    /// Per-row order statistic (the `stats::rank` reduction — §2.4's
+    /// sample-determined class, exact under partitioning per row).
+    Rank(RankKind),
+    /// Per-row descriptive moment (the `stats::descriptive` path).
+    LocalMoment(MomentStat),
 }
 
 impl FilterKind {
-    /// The manifest `kind` string this filter resolves to on the PJRT path.
-    pub fn artifact_kind(&self) -> &'static str {
+    /// The manifest `kind` string this filter resolves to on the PJRT
+    /// path, when an AOT artifact exists for it.
+    pub fn artifact_kind(&self) -> Option<&'static str> {
         match self {
-            FilterKind::Gaussian { .. } => "gaussian",
-            FilterKind::BilateralConst { .. } => "bilateral_const",
-            FilterKind::BilateralAdaptive { .. } => "bilateral_adaptive",
-            FilterKind::Curvature => "curvature",
+            FilterKind::Gaussian { .. } => Some("gaussian"),
+            FilterKind::BilateralConst { .. } => Some("bilateral_const"),
+            FilterKind::BilateralAdaptive { .. } => Some("bilateral_adaptive"),
+            FilterKind::Curvature => Some("curvature"),
+            FilterKind::Rank(_) | FilterKind::LocalMoment(_) => None,
         }
     }
 
@@ -36,13 +59,34 @@ impl FilterKind {
             FilterKind::Gaussian { sigma } => *sigma > 0.0,
             FilterKind::BilateralConst { sigma_d, sigma_r } => *sigma_d > 0.0 && *sigma_r > 0.0,
             FilterKind::BilateralAdaptive { sigma_d, floor } => *sigma_d > 0.0 && *floor > 0.0,
-            FilterKind::Curvature => true,
+            FilterKind::Curvature | FilterKind::LocalMoment(_) => true,
+            FilterKind::Rank(kind) => match kind {
+                RankKind::Quantile(q) => (0.0..=1.0).contains(q),
+                _ => true,
+            },
         };
         if ok {
             Ok(())
         } else {
             Err(Error::Coordinator(format!("invalid filter parameters: {self:?}")))
         }
+    }
+
+    /// Lower the spec to an executable [`RowKernel`] for `window`.
+    pub fn build_kernel(&self, window: &[usize]) -> Result<Arc<dyn RowKernel>> {
+        let kernel: Arc<dyn RowKernel> = match self {
+            FilterKind::Gaussian { sigma } => Arc::new(GaussianRowKernel::new(window, *sigma)?),
+            FilterKind::BilateralConst { sigma_d, sigma_r } => {
+                Arc::new(BilateralRowKernel::constant(window, *sigma_d, *sigma_r)?)
+            }
+            FilterKind::BilateralAdaptive { sigma_d, floor } => {
+                Arc::new(BilateralRowKernel::adaptive(window, *sigma_d, *floor)?)
+            }
+            FilterKind::Curvature => Arc::new(CurvatureRowKernel::new(window)?),
+            FilterKind::Rank(kind) => Arc::new(RankRowKernel::new(*kind)?),
+            FilterKind::LocalMoment(stat) => Arc::new(LocalMomentKernel::new(*stat)),
+        };
+        Ok(kernel)
     }
 
     /// Native-path bilateral params, if this is a bilateral filter.
@@ -64,7 +108,8 @@ impl FilterKind {
 }
 
 /// Execution backend: the Fig 8 "swap the computing backend under a stable
-/// array API" axis.
+/// array API" axis. Plans are backend-agnostic — the same stage graph runs
+/// on either; the planner only restricts *fusion* to the native backend.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
     /// Rust broadcast kernels (`kernels::*`).
@@ -83,48 +128,75 @@ pub struct Job {
 }
 
 impl Job {
+    fn with_defaults(kind: FilterKind, window: &[usize]) -> Self {
+        Self {
+            kind,
+            window: window.to_vec(),
+            grid: GridMode::Same,
+            boundary: BoundaryMode::Reflect,
+        }
+    }
+
     /// Gaussian job with `Same` grid and reflect boundary (the defaults the
     /// paper's benchmarks use).
     pub fn gaussian(window: &[usize], sigma: f32) -> Self {
-        Self {
-            kind: FilterKind::Gaussian { sigma },
-            window: window.to_vec(),
-            grid: GridMode::Same,
-            boundary: BoundaryMode::Reflect,
-        }
+        Self::with_defaults(FilterKind::Gaussian { sigma }, window)
     }
 
     pub fn bilateral_const(window: &[usize], sigma_d: f32, sigma_r: f32) -> Self {
-        Self {
-            kind: FilterKind::BilateralConst { sigma_d, sigma_r },
-            window: window.to_vec(),
-            grid: GridMode::Same,
-            boundary: BoundaryMode::Reflect,
-        }
+        Self::with_defaults(FilterKind::BilateralConst { sigma_d, sigma_r }, window)
     }
 
     pub fn bilateral_adaptive(window: &[usize], sigma_d: f32, floor: f32) -> Self {
-        Self {
-            kind: FilterKind::BilateralAdaptive { sigma_d, floor },
-            window: window.to_vec(),
-            grid: GridMode::Same,
-            boundary: BoundaryMode::Reflect,
-        }
+        Self::with_defaults(FilterKind::BilateralAdaptive { sigma_d, floor }, window)
     }
 
     pub fn curvature(window: &[usize]) -> Self {
-        Self {
-            kind: FilterKind::Curvature,
-            window: window.to_vec(),
-            grid: GridMode::Same,
-            boundary: BoundaryMode::Reflect,
-        }
+        Self::with_defaults(FilterKind::Curvature, window)
+    }
+
+    /// Median filter job (`stats::rank` through the coordinator).
+    pub fn median(window: &[usize]) -> Self {
+        Self::with_defaults(FilterKind::Rank(RankKind::Median), window)
+    }
+
+    /// Per-row quantile job, `q` in `[0, 1]`.
+    pub fn quantile(window: &[usize], q: f64) -> Self {
+        Self::with_defaults(FilterKind::Rank(RankKind::Quantile(q)), window)
+    }
+
+    /// Per-row minimum (morphological erosion) job.
+    pub fn rank_min(window: &[usize]) -> Self {
+        Self::with_defaults(FilterKind::Rank(RankKind::Min), window)
+    }
+
+    /// Per-row maximum (morphological dilation) job.
+    pub fn rank_max(window: &[usize]) -> Self {
+        Self::with_defaults(FilterKind::Rank(RankKind::Max), window)
+    }
+
+    /// Local mean map job (`stats::descriptive` through the coordinator).
+    pub fn local_mean(window: &[usize]) -> Self {
+        Self::with_defaults(FilterKind::LocalMoment(MomentStat::Mean), window)
+    }
+
+    /// Local standard-deviation map job.
+    pub fn local_std(window: &[usize]) -> Self {
+        Self::with_defaults(FilterKind::LocalMoment(MomentStat::Std), window)
     }
 
     /// Build the operator and validate the whole spec.
     pub fn operator(&self) -> Result<Operator> {
         self.kind.validate()?;
         Operator::new(&self.window)
+    }
+
+    /// Lower this spec into an executable [`Stage`] for the `Plan` path.
+    pub fn to_stage(&self) -> Result<Stage> {
+        self.kind.validate()?;
+        Ok(Stage::new(self.kind.build_kernel(&self.window)?, &self.window)?
+            .with_grid(self.grid.clone())
+            .with_boundary(self.boundary))
     }
 }
 
@@ -137,7 +209,7 @@ mod tests {
         let j = Job::gaussian(&[3, 3, 3], 1.0);
         assert_eq!(j.grid, GridMode::Same);
         assert_eq!(j.boundary, BoundaryMode::Reflect);
-        assert_eq!(j.kind.artifact_kind(), "gaussian");
+        assert_eq!(j.kind.artifact_kind(), Some("gaussian"));
         j.operator().unwrap();
     }
 
@@ -147,19 +219,24 @@ mod tests {
         assert!(Job::bilateral_const(&[3, 3], 1.0, -2.0).operator().is_err());
         assert!(Job::bilateral_adaptive(&[3, 3], 0.0, 1.0).operator().is_err());
         assert!(Job::gaussian(&[4, 4], 1.0).operator().is_err()); // even window
+        assert!(Job::quantile(&[3, 3], 1.5).operator().is_err());
+        assert!(Job::quantile(&[3, 3], 1.5).to_stage().is_err());
     }
 
     #[test]
     fn artifact_kind_mapping() {
         assert_eq!(
             Job::bilateral_const(&[5, 5], 1.0, 2.0).kind.artifact_kind(),
-            "bilateral_const"
+            Some("bilateral_const")
         );
         assert_eq!(
             Job::bilateral_adaptive(&[5, 5], 1.0, 2.0).kind.artifact_kind(),
-            "bilateral_adaptive"
+            Some("bilateral_adaptive")
         );
-        assert_eq!(Job::curvature(&[3, 3]).kind.artifact_kind(), "curvature");
+        assert_eq!(Job::curvature(&[3, 3]).kind.artifact_kind(), Some("curvature"));
+        // the stats reductions are native-only
+        assert_eq!(Job::median(&[3, 3]).kind.artifact_kind(), None);
+        assert_eq!(Job::local_std(&[3, 3]).kind.artifact_kind(), None);
     }
 
     #[test]
@@ -175,5 +252,17 @@ mod tests {
             .unwrap()
             .unwrap();
         assert_eq!(p.spatial.len(), 9);
+    }
+
+    #[test]
+    fn to_stage_carries_geometry_and_kernel() {
+        let mut j = Job::quantile(&[3, 3], 0.25);
+        j.boundary = BoundaryMode::Nearest;
+        j.grid = GridMode::Valid;
+        let s = j.to_stage().unwrap();
+        assert_eq!(s.kernel().name(), "quantile");
+        assert_eq!(s.window(), &[3, 3]);
+        assert_eq!(s.grid(), &GridMode::Valid);
+        assert_eq!(s.boundary(), BoundaryMode::Nearest);
     }
 }

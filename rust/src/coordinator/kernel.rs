@@ -1,0 +1,390 @@
+//! The open kernel surface of the lazy [`Plan`](crate::coordinator::Plan)
+//! API: an object-safe [`RowKernel`] trait that every row-wise compute
+//! implements — the paper's point that *any* neighbourhood-driven
+//! computation becomes a broadcast over melt rows, made extensible.
+//!
+//! The closed `FilterKind` enum survives only as a *spec* (config/TOML
+//! parsing, PJRT artifact lookup); execution dispatches through this trait,
+//! so user crates can plug custom kernels into the same coordinator,
+//! fusion, and chunk-streaming machinery. Built-ins cover the paper's
+//! filters (gaussian, bilateral const/adaptive, curvature) plus the
+//! `stats`-layer reductions that were previously unreachable from the
+//! coordinator: per-row rank statistics ([`RankRowKernel`], backed by
+//! `stats::rank`) and per-row descriptive moments ([`LocalMomentKernel`],
+//! backed by `stats::descriptive`).
+//!
+//! Contract: `execute` consumes a row-major melt block of `rows * cols`
+//! values and writes exactly one output value per row — row independence
+//! (§2.4) is what licenses both the worker partitioning and the fused
+//! chunk-resident pipeline in `coordinator::exec`. All parameter
+//! precomputation (kernel vectors, spatial components) happens at
+//! construction on the leader; `execute` is the pure hot loop.
+
+use std::fmt;
+
+use crate::error::{Error, Result};
+use crate::kernels::bilateral::{bilateral_into, BilateralParams, RangeSigma};
+use crate::kernels::curvature::curvature_into;
+use crate::kernels::gaussian::gaussian_kernel;
+use crate::kernels::paradigm::apply_kernel_broadcast_into;
+use crate::kernels::rankfilter::{rank_filter_into, RankKind};
+use crate::melt::operator::Operator;
+use crate::runtime::executor::ExtraInputs;
+use crate::stats::descriptive::moments;
+
+/// One row-wise computation over a melt block. Object-safe: plans hold
+/// `Arc<dyn RowKernel>`, so the kernel set is open — implement this trait
+/// to run custom computations through the coordinator unchanged.
+pub trait RowKernel: Send + Sync + fmt::Debug {
+    /// Stable display name (diagnostics, plan explain output).
+    fn name(&self) -> &str;
+
+    /// Compute one output value per melt row of `block` (`rows * cols`
+    /// row-major values) into `out` (`rows` values).
+    fn execute(&self, block: &[f32], rows: usize, cols: usize, out: &mut [f32]) -> Result<()>;
+
+    /// AOT artifact kind when a PJRT-compiled variant of this kernel
+    /// exists (`None` keeps the kernel native-only — backend selection
+    /// lives behind the trait, so plans stay backend-agnostic).
+    fn artifact_kind(&self) -> Option<&'static str> {
+        None
+    }
+
+    /// Extra artifact inputs (`inputs[1..]` of the matching manifest
+    /// entry) for the PJRT path.
+    fn extra_inputs(&self) -> Result<ExtraInputs> {
+        Ok(ExtraInputs::none())
+    }
+}
+
+fn check_block(block: &[f32], rows: usize, cols: usize, out: &[f32]) -> Result<()> {
+    if block.len() != rows * cols || out.len() != rows {
+        return Err(Error::shape(format!(
+            "row kernel block {} vs {rows}x{cols}, out {}",
+            block.len(),
+            out.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Global gaussian filter: normalized isotropic kernel broadcast over rows.
+#[derive(Clone, Debug)]
+pub struct GaussianRowKernel {
+    kernel: Vec<f32>,
+}
+
+impl GaussianRowKernel {
+    pub fn new(window: &[usize], sigma: f32) -> Result<Self> {
+        if sigma <= 0.0 {
+            return Err(Error::Operator(format!("sigma must be positive: {sigma}")));
+        }
+        Operator::new(window)?;
+        Ok(Self {
+            kernel: gaussian_kernel(window, sigma),
+        })
+    }
+}
+
+impl RowKernel for GaussianRowKernel {
+    fn name(&self) -> &str {
+        "gaussian"
+    }
+
+    fn execute(&self, block: &[f32], rows: usize, cols: usize, out: &mut [f32]) -> Result<()> {
+        check_block(block, rows, cols, out)?;
+        if self.kernel.len() != cols {
+            return Err(Error::shape(format!(
+                "gaussian kernel length {} vs melt cols {cols}",
+                self.kernel.len()
+            )));
+        }
+        apply_kernel_broadcast_into(block, rows, cols, &self.kernel, out);
+        Ok(())
+    }
+
+    fn artifact_kind(&self) -> Option<&'static str> {
+        Some("gaussian")
+    }
+
+    fn extra_inputs(&self) -> Result<ExtraInputs> {
+        Ok(ExtraInputs::one(self.kernel.clone()))
+    }
+}
+
+/// Bilateral filter (eq. 3), constant or locally adaptive σ_r.
+#[derive(Clone, Debug)]
+pub struct BilateralRowKernel {
+    params: BilateralParams,
+    /// σ_r (constant) or the adaptive floor — the artifact's scalar input.
+    scalar: f32,
+    adaptive: bool,
+}
+
+impl BilateralRowKernel {
+    pub fn constant(window: &[usize], sigma_d: f32, sigma_r: f32) -> Result<Self> {
+        if sigma_r <= 0.0 {
+            return Err(Error::Operator(format!("sigma_r must be positive: {sigma_r}")));
+        }
+        Ok(Self {
+            params: BilateralParams::isotropic(window, sigma_d, RangeSigma::Constant(sigma_r))?,
+            scalar: sigma_r,
+            adaptive: false,
+        })
+    }
+
+    pub fn adaptive(window: &[usize], sigma_d: f32, floor: f32) -> Result<Self> {
+        if floor <= 0.0 {
+            return Err(Error::Operator(format!("floor must be positive: {floor}")));
+        }
+        Ok(Self {
+            params: BilateralParams::isotropic(window, sigma_d, RangeSigma::Adaptive { floor })?,
+            scalar: floor,
+            adaptive: true,
+        })
+    }
+}
+
+impl RowKernel for BilateralRowKernel {
+    fn name(&self) -> &str {
+        if self.adaptive {
+            "bilateral_adaptive"
+        } else {
+            "bilateral_const"
+        }
+    }
+
+    fn execute(&self, block: &[f32], rows: usize, cols: usize, out: &mut [f32]) -> Result<()> {
+        check_block(block, rows, cols, out)?;
+        if self.params.spatial.len() != cols {
+            return Err(Error::shape(format!(
+                "bilateral spatial length {} vs melt cols {cols}",
+                self.params.spatial.len()
+            )));
+        }
+        bilateral_into(block, rows, cols, cols / 2, &self.params, out)
+    }
+
+    fn artifact_kind(&self) -> Option<&'static str> {
+        Some(if self.adaptive {
+            "bilateral_adaptive"
+        } else {
+            "bilateral_const"
+        })
+    }
+
+    fn extra_inputs(&self) -> Result<ExtraInputs> {
+        Ok(ExtraInputs::two(self.params.spatial.clone(), vec![self.scalar]))
+    }
+}
+
+/// N-D Gaussian curvature (eq. 4–7) via the central-difference stencil.
+#[derive(Clone, Debug)]
+pub struct CurvatureRowKernel {
+    window: Vec<usize>,
+}
+
+impl CurvatureRowKernel {
+    pub fn new(window: &[usize]) -> Result<Self> {
+        Operator::new(window)?;
+        Ok(Self {
+            window: window.to_vec(),
+        })
+    }
+}
+
+impl RowKernel for CurvatureRowKernel {
+    fn name(&self) -> &str {
+        "curvature"
+    }
+
+    fn execute(&self, block: &[f32], rows: usize, cols: usize, out: &mut [f32]) -> Result<()> {
+        check_block(block, rows, cols, out)?;
+        if self.window.iter().product::<usize>() != cols {
+            return Err(Error::shape(format!(
+                "curvature window {:?} vs melt cols {cols}",
+                self.window
+            )));
+        }
+        curvature_into(block, rows, cols, &self.window, out)
+    }
+
+    fn artifact_kind(&self) -> Option<&'static str> {
+        Some("curvature")
+    }
+
+    fn extra_inputs(&self) -> Result<ExtraInputs> {
+        // the stencil matrix is a runtime artifact input: HLO text elides
+        // large constants, so it cannot be baked at AOT time
+        Ok(ExtraInputs::one(crate::kernels::stencil::stencil_matrix(
+            &self.window,
+        )?))
+    }
+}
+
+/// Per-row order statistic (median / min / max / quantile) — the
+/// sample-determined `stats::rank` reduction, now first-class in the
+/// coordinator. Row independence holds: each output depends only on its
+/// own neighbourhood, so §2.4 partitioning stays exact.
+#[derive(Clone, Debug)]
+pub struct RankRowKernel {
+    kind: RankKind,
+}
+
+impl RankRowKernel {
+    pub fn new(kind: RankKind) -> Result<Self> {
+        if let RankKind::Quantile(q) = kind {
+            if !(0.0..=1.0).contains(&q) {
+                return Err(Error::Operator(format!("quantile {q} outside [0, 1]")));
+            }
+        }
+        Ok(Self { kind })
+    }
+}
+
+impl RowKernel for RankRowKernel {
+    fn name(&self) -> &str {
+        match self.kind {
+            RankKind::Median => "median",
+            RankKind::Min => "rank_min",
+            RankKind::Max => "rank_max",
+            RankKind::Quantile(_) => "quantile",
+        }
+    }
+
+    fn execute(&self, block: &[f32], rows: usize, cols: usize, out: &mut [f32]) -> Result<()> {
+        rank_filter_into(block, rows, cols, self.kind, out)
+    }
+}
+
+/// Which per-row descriptive moment [`LocalMomentKernel`] extracts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MomentStat {
+    Mean,
+    Std,
+    Variance,
+}
+
+/// Per-row descriptive moment (local mean / std / variance map) — the
+/// partition-aggregable `stats::descriptive` accumulator applied to each
+/// neighbourhood, a building block for adaptive filtering and feature maps.
+#[derive(Clone, Debug)]
+pub struct LocalMomentKernel {
+    stat: MomentStat,
+}
+
+impl LocalMomentKernel {
+    pub fn new(stat: MomentStat) -> Self {
+        Self { stat }
+    }
+}
+
+impl RowKernel for LocalMomentKernel {
+    fn name(&self) -> &str {
+        match self.stat {
+            MomentStat::Mean => "local_mean",
+            MomentStat::Std => "local_std",
+            MomentStat::Variance => "local_var",
+        }
+    }
+
+    fn execute(&self, block: &[f32], rows: usize, cols: usize, out: &mut [f32]) -> Result<()> {
+        check_block(block, rows, cols, out)?;
+        for (row, o) in block.chunks_exact(cols).zip(out.iter_mut()) {
+            let m = moments(row);
+            *o = match self.stat {
+                MomentStat::Mean => m.mean as f32,
+                MomentStat::Std => m.std() as f32,
+                MomentStat::Variance => m.variance() as f32,
+            };
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::rankfilter::rank_filter;
+    use crate::melt::grid::GridMode;
+    use crate::melt::melt::{melt, BoundaryMode};
+    use crate::tensor::dense::Tensor;
+    use crate::testing::assert_allclose;
+
+    fn sample_melt() -> crate::melt::matrix::MeltMatrix {
+        let x = Tensor::random(&[8, 9], 0.0, 255.0, 11).unwrap();
+        let op = Operator::cubic(3, 2).unwrap();
+        melt(&x, &op, GridMode::Same, BoundaryMode::Reflect).unwrap()
+    }
+
+    #[test]
+    fn gaussian_kernel_matches_paradigm_broadcast() {
+        let m = sample_melt();
+        let k = GaussianRowKernel::new(&[3, 3], 1.0).unwrap();
+        let mut got = vec![0.0f32; m.rows()];
+        k.execute(m.data(), m.rows(), m.cols(), &mut got).unwrap();
+        let want = crate::kernels::paradigm::apply_kernel_broadcast(
+            &m,
+            &gaussian_kernel(&[3, 3], 1.0),
+        );
+        assert_allclose(&got, &want, 0.0, 0.0);
+        assert_eq!(k.artifact_kind(), Some("gaussian"));
+        assert_eq!(k.extra_inputs().unwrap().vectors.len(), 1);
+    }
+
+    #[test]
+    fn rank_kernel_matches_rank_filter() {
+        let m = sample_melt();
+        let k = RankRowKernel::new(RankKind::Median).unwrap();
+        let mut got = vec![0.0f32; m.rows()];
+        k.execute(m.data(), m.rows(), m.cols(), &mut got).unwrap();
+        let want = rank_filter(&m, RankKind::Median).unwrap();
+        assert_allclose(&got, &want, 0.0, 0.0);
+        assert!(k.artifact_kind().is_none());
+        assert!(RankRowKernel::new(RankKind::Quantile(1.5)).is_err());
+    }
+
+    #[test]
+    fn local_moment_kernel_per_row_stats() {
+        let m = sample_melt();
+        let mut mean = vec![0.0f32; m.rows()];
+        let mut std = vec![0.0f32; m.rows()];
+        LocalMomentKernel::new(MomentStat::Mean)
+            .execute(m.data(), m.rows(), m.cols(), &mut mean)
+            .unwrap();
+        LocalMomentKernel::new(MomentStat::Std)
+            .execute(m.data(), m.rows(), m.cols(), &mut std)
+            .unwrap();
+        for r in 0..m.rows() {
+            let mm = moments(m.row(r));
+            assert!((mean[r] - mm.mean as f32).abs() < 1e-4);
+            assert!((std[r] - mm.std() as f32).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn kernels_validate_inputs() {
+        assert!(GaussianRowKernel::new(&[3, 3], 0.0).is_err());
+        assert!(GaussianRowKernel::new(&[4, 4], 1.0).is_err());
+        assert!(BilateralRowKernel::constant(&[3, 3], 1.0, -2.0).is_err());
+        assert!(BilateralRowKernel::adaptive(&[3, 3], 0.0, 1.0).is_err());
+        assert!(CurvatureRowKernel::new(&[4, 3]).is_err());
+        // cols mismatch surfaces as a shape error, not a panic
+        let g = GaussianRowKernel::new(&[3, 3], 1.0).unwrap();
+        let mut out = vec![0.0f32; 2];
+        assert!(g.execute(&[0.0; 10], 2, 5, &mut out).is_err());
+    }
+
+    #[test]
+    fn bilateral_kernel_artifact_contract() {
+        let c = BilateralRowKernel::constant(&[3, 3], 1.5, 25.0).unwrap();
+        assert_eq!(c.artifact_kind(), Some("bilateral_const"));
+        let e = c.extra_inputs().unwrap();
+        assert_eq!(e.vectors.len(), 2);
+        assert_eq!(e.vectors[0].len(), 9);
+        assert_eq!(e.vectors[1], vec![25.0]);
+        let a = BilateralRowKernel::adaptive(&[3, 3], 1.5, 0.5).unwrap();
+        assert_eq!(a.artifact_kind(), Some("bilateral_adaptive"));
+        assert_eq!(a.extra_inputs().unwrap().vectors[1], vec![0.5]);
+    }
+}

@@ -1,11 +1,16 @@
-//! Run metrics: setup vs compute timing, per-worker chunk counts, and a
-//! latency histogram — enough to regenerate the paper's Fig 6 methodology
-//! ("deducting the time spent in the process initialization and data
-//! partitioning from the total time cost").
+//! Run metrics: setup vs compute timing, per-worker chunk counts, and
+//! melt/fold pass accounting — enough to regenerate the paper's Fig 6
+//! methodology ("deducting the time spent in the process initialization
+//! and data partitioning from the total time cost") *and* to assert the
+//! lazy `Plan` executor's structural claim: a fused group performs exactly
+//! one global melt and one global fold however many stages it streams.
 
 use std::time::Duration;
 
-/// Timing and throughput record of one coordinator run.
+use crate::stats::descriptive::Moments;
+
+/// Timing and throughput record of one coordinator run (a single stage or
+/// one fused group).
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
     /// melt + partition + worker spawn.
@@ -18,8 +23,14 @@ pub struct RunMetrics {
     pub chunks_per_worker: Vec<usize>,
     /// total melt rows processed.
     pub rows: usize,
-    /// melt columns (window ravel length).
+    /// melt columns of the first stage (window ravel length).
     pub cols: usize,
+    /// global melt passes performed (fused groups keep this at 1).
+    pub melts: usize,
+    /// global fold/assemble passes performed (fused groups keep this at 1).
+    pub folds: usize,
+    /// stages executed in this run (fused group size; 1 for a single job).
+    pub stages: usize,
 }
 
 impl RunMetrics {
@@ -61,12 +72,63 @@ impl RunMetrics {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "setup {:.2?} | compute {:.2?} | aggregate {:.2?} | {:.2e} rows/s | workers {:?}",
+            "setup {:.2?} | compute {:.2?} | aggregate {:.2?} | {:.2e} rows/s | {} stage(s), {} melt, {} fold | workers {:?}",
             self.setup,
             self.compute,
             self.aggregate,
             self.rows_per_sec(),
+            self.stages,
+            self.melts,
+            self.folds,
             self.chunks_per_worker
+        )
+    }
+}
+
+/// Metrics of one lazy-`Plan` execution: one [`RunMetrics`] per fusion
+/// group plus partition-exact output statistics, merged per-chunk at the
+/// aggregation barrier (the §2.4 aggregation-function path — free, since
+/// the chunks are already in hand).
+#[derive(Clone, Debug)]
+pub struct PlanMetrics {
+    /// One record per executed group, in pipeline order.
+    pub groups: Vec<RunMetrics>,
+    /// Moments of the final output, merged from per-chunk accumulators.
+    pub output_moments: Moments,
+}
+
+impl PlanMetrics {
+    /// End-to-end wall time across all groups.
+    pub fn total(&self) -> Duration {
+        self.groups.iter().map(|g| g.total()).sum()
+    }
+
+    /// Total global melt passes across the plan.
+    pub fn melts(&self) -> usize {
+        self.groups.iter().map(|g| g.melts).sum()
+    }
+
+    /// Total global fold passes across the plan.
+    pub fn folds(&self) -> usize {
+        self.groups.iter().map(|g| g.folds).sum()
+    }
+
+    /// Total stages executed.
+    pub fn stages(&self) -> usize {
+        self.groups.iter().map(|g| g.stages).sum()
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} group(s) | {} stage(s) | {} melt(s), {} fold(s) | total {:.2?} | out mean {:.4} std {:.4}",
+            self.groups.len(),
+            self.stages(),
+            self.melts(),
+            self.folds(),
+            self.total(),
+            self.output_moments.mean,
+            self.output_moments.std()
         )
     }
 }
@@ -84,12 +146,16 @@ mod tests {
             chunks_per_worker: vec![4, 4],
             rows: 1000,
             cols: 27,
+            melts: 1,
+            folds: 1,
+            stages: 1,
         };
         assert_eq!(m.total(), Duration::from_millis(115));
         assert!((m.rows_per_sec() - 10_000.0).abs() < 1.0);
         assert!((m.melt_elems_per_sec() - 270_000.0).abs() < 30.0);
         assert_eq!(m.imbalance(), 1.0);
         assert!(m.summary().contains("compute"));
+        assert!(m.summary().contains("1 melt"));
     }
 
     #[test]
@@ -111,5 +177,32 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(m.imbalance(), 4.0);
+    }
+
+    #[test]
+    fn plan_metrics_aggregate_groups() {
+        let g1 = RunMetrics {
+            compute: Duration::from_millis(10),
+            melts: 1,
+            folds: 1,
+            stages: 3,
+            ..Default::default()
+        };
+        let g2 = RunMetrics {
+            compute: Duration::from_millis(5),
+            melts: 1,
+            folds: 1,
+            stages: 1,
+            ..Default::default()
+        };
+        let pm = PlanMetrics {
+            groups: vec![g1, g2],
+            output_moments: Moments::new(),
+        };
+        assert_eq!(pm.melts(), 2);
+        assert_eq!(pm.folds(), 2);
+        assert_eq!(pm.stages(), 4);
+        assert_eq!(pm.total(), Duration::from_millis(15));
+        assert!(pm.summary().contains("2 group(s)"));
     }
 }

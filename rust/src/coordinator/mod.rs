@@ -1,22 +1,38 @@
-//! L3 coordinator: the paper's parallel-acceleration system contribution.
-//!
-//! The coordinator owns the whole Fig 2 schematic at runtime:
+//! L3 coordinator: the paper's parallel-acceleration system contribution,
+//! exposed through the lazy **`Plan`** API.
 //!
 //! ```text
-//!  Job (filter spec) ──► plan (quasi-grid + chunking policy)
-//!       melt x ──► MeltMatrix ──► RowPartition (work queue)
-//!       workers (std::thread::scope, work stealing) pull row blocks:
-//!           Backend::Native  → kernels::* broadcast cores
-//!           Backend::Pjrt    → per-thread runtime::Engine (AOT artifacts)
-//!       aggregator reassembles chunks ──► fold ──► output tensor
+//!  Plan::over(&x).gaussian(..).curvature(..).quantile(..)   (pure recording)
+//!       └─ compile ──► planner: fuse streamable stages into groups
+//!       └─ execute ──► per group:
+//!            melt x ONCE ──► MeltMatrix ──► RowPartition (work queue)
+//!            workers (std::thread::scope, work stealing) pull row chunks
+//!            and stream them through ALL member stages while resident:
+//!                stage 1: RowKernel over the global melt block
+//!                stage k: local band re-melt (halo slab) + RowKernel
+//!                Backend::Native → kernels::* broadcast cores
+//!                Backend::Pjrt   → per-thread runtime::Engine (singleton
+//!                                  groups; manifest loaded once, on the
+//!                                  leader)
+//!            aggregator reassembles chunks ──► ONE fold ──► group output
 //! ```
+//!
+//! The kernel surface is open ([`kernel::RowKernel`]): gaussian, bilateral,
+//! curvature, the `stats` rank reductions and local moments all implement
+//! one object-safe trait, and user kernels plug into the same fusion and
+//! chunk-streaming machinery. [`Job`]/[`run_job`]/[`run_pipeline`] remain
+//! as thin spec-level shims (config files parse to them), with
+//! `run_pipeline` doubling as the unfused fold→re-melt baseline.
 //!
 //! Setup time (melt + partition + thread spawn) is metered separately from
 //! compute time so Fig 6's "deduct the process-initialization cost"
-//! methodology can be reproduced faithfully.
+//! methodology can be reproduced faithfully; [`RunMetrics`] additionally
+//! counts global melt/fold passes so fusion is asserted, not assumed.
 
 pub mod aggregator;
+pub mod exec;
 pub mod job;
+pub mod kernel;
 pub mod metrics;
 pub mod pipeline;
 pub mod plan;
@@ -25,5 +41,7 @@ pub mod simulate;
 pub mod worker;
 
 pub use job::{Backend, FilterKind, Job};
-pub use metrics::RunMetrics;
+pub use kernel::{MomentStat, RowKernel};
+pub use metrics::{PlanMetrics, RunMetrics};
 pub use pipeline::{run_job, run_pipeline, ExecOptions};
+pub use plan::{ChunkPolicy, CompiledPlan, Plan, Stage};

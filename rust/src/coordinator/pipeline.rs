@@ -1,20 +1,22 @@
-//! The coordinator entry points: run one job or a multi-stage pipeline over
-//! a tensor with a worker fleet — the executable form of paper Fig 2.
+//! The legacy coordinator entry points, now thin shims over the lazy
+//! `Plan` executor.
+//!
+//! [`run_job`] lowers one [`Job`] spec to a [`Stage`](crate::coordinator::Stage)
+//! and runs the barrier path; [`run_pipeline`] chains `run_job` stage by
+//! stage — the fold→re-melt baseline the fused
+//! [`Plan`](crate::coordinator::Plan) path is benchmarked against
+//! (`benches/pipeline_fusion.rs`). New code should prefer
+//! `Plan::over(&x).gaussian(..).curvature(..).run(&opts)`: same results
+//! bit-for-bit, one global melt/fold per fused group instead of one per
+//! stage.
 
 use std::path::PathBuf;
-use std::sync::Barrier;
-use std::time::Instant;
 
-use crate::coordinator::aggregator::assemble;
+use crate::coordinator::exec::run_single_stage;
 use crate::coordinator::job::{Backend, Job};
 use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::plan::ChunkPolicy;
-use crate::coordinator::scheduler::{ResultBoard, WorkQueue};
-use crate::coordinator::worker::{JobResources, WorkerContext};
 use crate::error::{Error, Result};
-use crate::melt::grid::QuasiGrid;
-use crate::melt::melt::melt_into;
-use crate::melt::matrix::MeltMatrix;
 use crate::tensor::dense::Tensor;
 
 /// Execution options for a coordinator run.
@@ -51,7 +53,7 @@ impl ExecOptions {
         }
     }
 
-    fn resolve_policy(&self, pjrt_chunk_rows: usize) -> ChunkPolicy {
+    pub(crate) fn resolve_policy(&self, pjrt_chunk_rows: usize) -> ChunkPolicy {
         if let Some(p) = self.chunk_policy {
             return p;
         }
@@ -65,114 +67,27 @@ impl ExecOptions {
 }
 
 /// Run one job over `x`: melt → partition → parallel execute → aggregate.
+/// Thin shim over the single-stage `Plan` executor.
 pub fn run_job(x: &Tensor<f32>, job: &Job, opts: &ExecOptions) -> Result<(Tensor<f32>, RunMetrics)> {
     if opts.workers == 0 {
         return Err(Error::Coordinator("workers must be >= 1".into()));
     }
-    let t_setup = Instant::now();
-    let res = JobResources::prepare(job)?;
-    let op = job.operator()?;
-    let grid = QuasiGrid::resolve(x.shape(), &op, &job.grid)?;
-
-    // melt (leader-side; row-decoupled by construction); uninitialized
-    // buffer is sound — melt_into writes every element (§Perf iteration 4)
-    let rows = grid.rows();
-    let cols = op.ravel_len();
-    let mut data = crate::melt::melt::uninit_buffer(rows * cols);
-    melt_into(x, &op, &grid, job.boundary, &mut data)?;
-    let m = MeltMatrix::new(data, rows, cols, grid.out_shape().to_vec(), op.window().to_vec())?;
-
-    // partition per policy; PJRT needs the manifest's fixed chunk height
-    let pjrt_chunk_rows = match opts.backend {
-        Backend::Pjrt => {
-            let dir = opts.artifact_dir.as_ref().ok_or_else(|| {
-                Error::Coordinator("PJRT backend requires an artifact directory".into())
-            })?;
-            crate::runtime::artifact::ArtifactManifest::load(dir)?.chunk_rows
-        }
-        Backend::Native => 0,
-    };
-    let partition = opts.resolve_policy(pjrt_chunk_rows).partition(rows, opts.workers)?;
-    partition.validate()?;
-
-    let queue = WorkQueue::new(&partition);
-    let board = ResultBoard::new(queue.num_chunks());
-    let mut chunk_counts = vec![0usize; opts.workers];
-    // +1: the leader also waits on the barrier to timestamp compute start
-    // only after every worker finished its (PJRT) engine build.
-    let barrier = Barrier::new(opts.workers + 1);
-
-    let mut setup = t_setup.elapsed();
-    let mut compute = std::time::Duration::ZERO;
-
-    std::thread::scope(|s| -> Result<()> {
-        let mut handles = Vec::with_capacity(opts.workers);
-        for _ in 0..opts.workers {
-            let res = &res;
-            let m = &m;
-            let queue = &queue;
-            let board = &board;
-            let barrier = &barrier;
-            let opts = &opts;
-            handles.push(s.spawn(move || -> Result<(usize, Instant, Instant)> {
-                // engine build + artifact compile = setup, not compute
-                let ctx = WorkerContext::build(res, opts.backend, opts.artifact_dir.as_ref());
-                barrier.wait();
-                let ctx = ctx?;
-                // workers self-report their compute window: the leader may
-                // be descheduled at barrier release, so leader-side clocks
-                // would under-measure the parallel phase.
-                let t0 = Instant::now();
-                let mut done = 0usize;
-                while let Some((id, range)) = queue.pop() {
-                    let block = m.row_block(range.start, range.end)?;
-                    let out = ctx.execute(res, block, range.len())?;
-                    board.put(id, out)?;
-                    done += 1;
-                }
-                Ok((done, t0, Instant::now()))
-            }));
-        }
-        barrier.wait();
-        setup = t_setup.elapsed();
-        let mut first_start: Option<Instant> = None;
-        let mut last_end: Option<Instant> = None;
-        for (w, h) in handles.into_iter().enumerate() {
-            let (done, t0, t1) = h
-                .join()
-                .map_err(|_| Error::Coordinator(format!("worker {w} panicked")))??;
-            chunk_counts[w] = done;
-            first_start = Some(first_start.map_or(t0, |f| f.min(t0)));
-            last_end = Some(last_end.map_or(t1, |l| l.max(t1)));
-        }
-        compute = match (first_start, last_end) {
-            (Some(a), Some(b)) => b.duration_since(a),
-            _ => std::time::Duration::ZERO,
-        };
-        Ok(())
-    })?;
-
-    let t_agg = Instant::now();
-    let chunks = board.into_chunks()?;
-    let out = assemble(&chunks, &partition, m.grid_shape())?;
-    let aggregate = t_agg.elapsed();
-
-    Ok((
-        out,
-        RunMetrics {
-            setup,
-            compute,
-            aggregate,
-            chunks_per_worker: chunk_counts,
-            rows,
-            cols,
-        },
-    ))
+    let stage = job.to_stage()?;
+    // the legacy shim discards output statistics, so skip collecting them
+    let (out, metrics, _moments) = run_single_stage(x, &stage, opts, false)?;
+    Ok((out, metrics))
 }
 
-/// Run a sequence of jobs, feeding each stage's output to the next
-/// (the "new workflows" composition of the paper's abstract). Returns the
-/// final tensor and per-stage metrics.
+/// Run a sequence of jobs, feeding each stage's output to the next, with a
+/// full fold → re-melt barrier between stages. Returns the final tensor
+/// and per-stage metrics.
+///
+/// This is the *unfused* baseline: it materializes every intermediate
+/// tensor and re-melts it globally. Prefer the lazy
+/// [`Plan`](crate::coordinator::Plan), which fuses compatible stages into
+/// one melt/fold and streams chunks through all of them worker-resident;
+/// its output is bit-for-bit identical (asserted in
+/// `tests/integration_plan.rs`).
 pub fn run_pipeline(
     x: &Tensor<f32>,
     jobs: &[Job],
@@ -209,6 +124,8 @@ mod tests {
         assert_allclose(got.data(), want.data(), 1e-6, 1e-5);
         assert_eq!(metrics.rows, 12 * 13);
         assert_eq!(metrics.cols, 9);
+        assert_eq!(metrics.melts, 1);
+        assert_eq!(metrics.folds, 1);
     }
 
     #[test]
@@ -217,9 +134,10 @@ mod tests {
         check_property("output invariant under worker count", 10, |rng: &mut SplitMix64| {
             let dims = [6 + rng.below(8), 6 + rng.below(8)];
             let x = Tensor::random(&dims, 0.0, 255.0, rng.next_u64()).unwrap();
-            let job = match rng.below(3) {
+            let job = match rng.below(4) {
                 0 => Job::gaussian(&[3, 3], 1.0),
                 1 => Job::bilateral_const(&[3, 3], 1.5, 25.0),
+                2 => Job::quantile(&[3, 3], 0.75),
                 _ => Job::curvature(&[3, 3]),
             };
             let (base, _) = run_job(&x, &job, &ExecOptions::native(1)).unwrap();
@@ -242,6 +160,30 @@ mod tests {
         let (s1, _) = run_job(&x, &jobs[0], &ExecOptions::native(1)).unwrap();
         let (s2, _) = run_job(&s1, &jobs[1], &ExecOptions::native(1)).unwrap();
         assert_allclose(out.data(), s2.data(), 0.0, 0.0);
+    }
+
+    #[test]
+    fn stats_reductions_run_through_the_coordinator() {
+        // per-row quantile: previously unreachable from the coordinator
+        let x = Tensor::random(&[9, 9], 0.0, 100.0, 12).unwrap();
+        let (out, m) = run_job(&x, &Job::quantile(&[3, 3], 0.5), &ExecOptions::native(2)).unwrap();
+        assert_eq!(out.shape(), x.shape());
+        assert_eq!(m.stages, 1);
+        // reference: serial melt + rank filter
+        let op = Operator::cubic(3, 2).unwrap();
+        let melt = crate::melt::melt::melt(
+            &x,
+            &op,
+            crate::melt::grid::GridMode::Same,
+            BoundaryMode::Reflect,
+        )
+        .unwrap();
+        let want = crate::kernels::rankfilter::rank_filter(
+            &melt,
+            crate::kernels::rankfilter::RankKind::Quantile(0.5),
+        )
+        .unwrap();
+        assert_allclose(out.data(), &want, 0.0, 0.0);
     }
 
     #[test]

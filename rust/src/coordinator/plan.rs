@@ -1,12 +1,46 @@
-//! Chunking policy: how a melt matrix is partitioned for a worker fleet.
+//! Planning: how work is shaped before it runs.
 //!
-//! Native workers prefer a handful of large contiguous blocks (low queue
-//! overhead, good prefetch); the PJRT path must slice at the artifacts'
-//! fixed chunk height. Both policies produce a validated [`RowPartition`],
-//! so the §2.4 conditions hold by construction.
+//! Two layers live here:
+//!
+//! * [`ChunkPolicy`] — how a melt matrix is partitioned for a worker fleet
+//!   (native: a handful of large blocks; PJRT: the artifacts' fixed chunk
+//!   height). Both produce a validated `RowPartition`, so the §2.4
+//!   conditions hold by construction.
+//! * The lazy [`Plan`] — the crate's execution API. `Plan::over(&x)`
+//!   records a *stage graph* instead of executing: each [`Stage`] pairs an
+//!   open [`RowKernel`](crate::coordinator::kernel::RowKernel) with its
+//!   melt geometry (window, quasi-grid mode, boundary). [`Plan::compile`]
+//!   runs the planner, which fuses consecutive compatible stages into
+//!   groups that the executor (`coordinator::exec`) streams chunk-resident
+//!   through the workers — one global melt, one global fold per group,
+//!   instead of the legacy per-stage fold→re-melt barrier.
+//!
+//! Fusion rule: a stage joins its predecessor's group when it is
+//! *streamable* — `GridMode::Same` (the group's row space is unchanged) and
+//! a non-`Wrap` boundary (gathers stay within a bounded halo; see
+//! [`crate::melt::melt::flat_halo`]) — and the backend is native (PJRT
+//! artifacts have fixed chunk shapes, so PJRT stages run as singleton
+//! groups). The *first* stage of a group is unconstrained: it is melted
+//! globally, so any grid mode or boundary works there.
 
-use crate::error::Result;
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::coordinator::exec::execute_groups;
+use crate::coordinator::job::Backend;
+use crate::coordinator::kernel::{
+    BilateralRowKernel, CurvatureRowKernel, GaussianRowKernel, LocalMomentKernel, MomentStat,
+    RankRowKernel, RowKernel,
+};
+use crate::coordinator::metrics::PlanMetrics;
+use crate::coordinator::pipeline::ExecOptions;
+use crate::error::{Error, Result};
+use crate::kernels::rankfilter::RankKind;
+use crate::melt::grid::GridMode;
+use crate::melt::melt::BoundaryMode;
+use crate::melt::operator::Operator;
 use crate::melt::partition::RowPartition;
+use crate::tensor::dense::Tensor;
 
 /// How to split melt rows into work units.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -33,6 +67,319 @@ impl ChunkPolicy {
             }
             ChunkPolicy::Fixed { chunk_rows } => RowPartition::chunked(rows, *chunk_rows),
         }
+    }
+}
+
+/// One recorded pipeline stage: an open row kernel plus its melt geometry.
+#[derive(Clone, Debug)]
+pub struct Stage {
+    kernel: Arc<dyn RowKernel>,
+    window: Vec<usize>,
+    grid: GridMode,
+    boundary: BoundaryMode,
+}
+
+impl Stage {
+    /// Build a stage from any [`RowKernel`] (defaults: `Same` grid,
+    /// `Reflect` boundary — the paper's benchmark settings).
+    pub fn new(kernel: Arc<dyn RowKernel>, window: &[usize]) -> Result<Self> {
+        Operator::new(window)?;
+        Ok(Self {
+            kernel,
+            window: window.to_vec(),
+            grid: GridMode::Same,
+            boundary: BoundaryMode::Reflect,
+        })
+    }
+
+    pub fn with_grid(mut self, grid: GridMode) -> Self {
+        self.grid = grid;
+        self
+    }
+
+    pub fn with_boundary(mut self, boundary: BoundaryMode) -> Self {
+        self.boundary = boundary;
+        self
+    }
+
+    pub fn kernel(&self) -> &Arc<dyn RowKernel> {
+        &self.kernel
+    }
+
+    pub fn window(&self) -> &[usize] {
+        &self.window
+    }
+
+    pub fn grid(&self) -> &GridMode {
+        &self.grid
+    }
+
+    pub fn boundary(&self) -> BoundaryMode {
+        self.boundary
+    }
+
+    pub fn operator(&self) -> Result<Operator> {
+        Operator::new(&self.window)
+    }
+
+    /// Whether this stage can join a fused group as a *non-first* member:
+    /// its gathers must stay within a bounded flat-row halo of each output
+    /// row, which holds for `Same` grids with non-periodic boundaries.
+    pub(crate) fn streamable(&self) -> bool {
+        self.grid == GridMode::Same && !matches!(self.boundary, BoundaryMode::Wrap)
+    }
+}
+
+/// A lazy, composable execution plan over one input tensor. Building is
+/// pure recording; nothing executes until [`Plan::run`] /
+/// [`Plan::compile`]. Builder errors (bad window, bad parameters) are
+/// deferred and surfaced at compile time so the fluent chain stays clean.
+#[derive(Debug)]
+pub struct Plan<'a> {
+    input: &'a Tensor<f32>,
+    stages: Vec<Stage>,
+    deferred: Option<Error>,
+}
+
+impl<'a> Plan<'a> {
+    /// Start a plan over `input`.
+    pub fn over(input: &'a Tensor<f32>) -> Self {
+        Self {
+            input,
+            stages: Vec::new(),
+            deferred: None,
+        }
+    }
+
+    /// Append an explicit [`Stage`] (the open-extension path for custom
+    /// [`RowKernel`] implementations).
+    pub fn stage(mut self, stage: Stage) -> Self {
+        if self.deferred.is_none() {
+            self.stages.push(stage);
+        }
+        self
+    }
+
+    fn push(mut self, built: Result<Stage>) -> Self {
+        if self.deferred.is_none() {
+            match built {
+                Ok(s) => self.stages.push(s),
+                Err(e) => self.deferred = Some(e),
+            }
+        }
+        self
+    }
+
+    /// Global gaussian filter stage.
+    pub fn gaussian(self, window: &[usize], sigma: f32) -> Self {
+        let built = GaussianRowKernel::new(window, sigma)
+            .and_then(|k| Stage::new(Arc::new(k), window));
+        self.push(built)
+    }
+
+    /// Bilateral stage with constant σ_r.
+    pub fn bilateral_const(self, window: &[usize], sigma_d: f32, sigma_r: f32) -> Self {
+        let built = BilateralRowKernel::constant(window, sigma_d, sigma_r)
+            .and_then(|k| Stage::new(Arc::new(k), window));
+        self.push(built)
+    }
+
+    /// Bilateral stage with locally adaptive σ_r.
+    pub fn bilateral_adaptive(self, window: &[usize], sigma_d: f32, floor: f32) -> Self {
+        let built = BilateralRowKernel::adaptive(window, sigma_d, floor)
+            .and_then(|k| Stage::new(Arc::new(k), window));
+        self.push(built)
+    }
+
+    /// N-D Gaussian curvature stage.
+    pub fn curvature(self, window: &[usize]) -> Self {
+        let built =
+            CurvatureRowKernel::new(window).and_then(|k| Stage::new(Arc::new(k), window));
+        self.push(built)
+    }
+
+    /// Per-row rank statistic stage (the `stats::rank` reduction).
+    pub fn rank(self, window: &[usize], kind: RankKind) -> Self {
+        let built = RankRowKernel::new(kind).and_then(|k| Stage::new(Arc::new(k), window));
+        self.push(built)
+    }
+
+    /// Median filter stage.
+    pub fn median(self, window: &[usize]) -> Self {
+        self.rank(window, RankKind::Median)
+    }
+
+    /// Linear-interpolated per-row quantile stage, `q` in `[0, 1]`.
+    pub fn quantile(self, window: &[usize], q: f64) -> Self {
+        self.rank(window, RankKind::Quantile(q))
+    }
+
+    /// Morphological erosion (per-row min) stage.
+    pub fn rank_min(self, window: &[usize]) -> Self {
+        self.rank(window, RankKind::Min)
+    }
+
+    /// Morphological dilation (per-row max) stage.
+    pub fn rank_max(self, window: &[usize]) -> Self {
+        self.rank(window, RankKind::Max)
+    }
+
+    /// Per-row descriptive moment stage (the `stats::descriptive` path).
+    pub fn local_moment(self, window: &[usize], stat: MomentStat) -> Self {
+        let built = Stage::new(Arc::new(LocalMomentKernel::new(stat)), window);
+        self.push(built)
+    }
+
+    /// Local mean map stage.
+    pub fn local_mean(self, window: &[usize]) -> Self {
+        self.local_moment(window, MomentStat::Mean)
+    }
+
+    /// Local standard-deviation map stage.
+    pub fn local_std(self, window: &[usize]) -> Self {
+        self.local_moment(window, MomentStat::Std)
+    }
+
+    /// Override the boundary mode of the most recently added stage.
+    pub fn boundary(mut self, boundary: BoundaryMode) -> Self {
+        if self.deferred.is_none() {
+            match self.stages.last_mut() {
+                Some(s) => s.boundary = boundary,
+                None => {
+                    self.deferred =
+                        Some(Error::Coordinator("boundary() before any stage".into()))
+                }
+            }
+        }
+        self
+    }
+
+    /// Override the grid mode of the most recently added stage.
+    pub fn grid(mut self, grid: GridMode) -> Self {
+        if self.deferred.is_none() {
+            match self.stages.last_mut() {
+                Some(s) => s.grid = grid,
+                None => {
+                    self.deferred = Some(Error::Coordinator("grid() before any stage".into()))
+                }
+            }
+        }
+        self
+    }
+
+    /// The recorded stages, in order.
+    pub fn stages(&self) -> &[Stage] {
+        &self.stages
+    }
+
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// Run the planner for `backend`: surface deferred builder errors and
+    /// fuse consecutive streamable stages into groups.
+    pub fn compile(self, backend: Backend) -> Result<CompiledPlan<'a>> {
+        if let Some(e) = self.deferred {
+            return Err(e);
+        }
+        if self.stages.is_empty() {
+            return Err(Error::Coordinator("empty plan".into()));
+        }
+        let groups = plan_groups(&self.stages, backend);
+        Ok(CompiledPlan {
+            input: self.input,
+            stages: self.stages,
+            groups,
+            backend,
+        })
+    }
+
+    /// Compile and execute in one call.
+    pub fn run(self, opts: &ExecOptions) -> Result<(Tensor<f32>, PlanMetrics)> {
+        self.compile(opts.backend)?.execute(opts)
+    }
+}
+
+/// The planner: split `stages` into maximal fusable groups. A stage joins
+/// the current group when the backend is native and the stage is
+/// streamable; otherwise it starts a new group.
+pub(crate) fn plan_groups(stages: &[Stage], backend: Backend) -> Vec<Range<usize>> {
+    let mut groups = Vec::new();
+    if stages.is_empty() {
+        return groups;
+    }
+    let mut start = 0usize;
+    for i in 1..stages.len() {
+        let fuse = backend == Backend::Native && stages[i].streamable();
+        if !fuse {
+            groups.push(start..i);
+            start = i;
+        }
+    }
+    groups.push(start..stages.len());
+    groups
+}
+
+/// A planned stage graph bound to its input: fusion groups are fixed,
+/// execution is [`CompiledPlan::execute`].
+#[derive(Debug)]
+pub struct CompiledPlan<'a> {
+    input: &'a Tensor<f32>,
+    stages: Vec<Stage>,
+    groups: Vec<Range<usize>>,
+    backend: Backend,
+}
+
+impl CompiledPlan<'_> {
+    /// The fusion groups (ranges over the stage list).
+    pub fn groups(&self) -> &[Range<usize>] {
+        &self.groups
+    }
+
+    /// The backend this plan's groups were planned for.
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    pub fn stages(&self) -> &[Stage] {
+        &self.stages
+    }
+
+    /// Human-readable plan summary, e.g.
+    /// `[gaussian + curvature + median (fused)] [quantile]`.
+    pub fn describe(&self) -> String {
+        let mut parts = Vec::with_capacity(self.groups.len());
+        for g in &self.groups {
+            let names: Vec<&str> = self.stages[g.clone()]
+                .iter()
+                .map(|s| s.kernel().name())
+                .collect();
+            if g.len() > 1 {
+                parts.push(format!("[{} (fused)]", names.join(" + ")));
+            } else {
+                parts.push(format!("[{}]", names[0]));
+            }
+        }
+        parts.join(" ")
+    }
+
+    /// Execute the plan: each fused group performs exactly one global melt
+    /// and one global fold, streaming chunks through all member stages
+    /// while resident in a worker. The options' backend must match the one
+    /// the plan was compiled for (fusion groups are backend-dependent).
+    pub fn execute(&self, opts: &ExecOptions) -> Result<(Tensor<f32>, PlanMetrics)> {
+        if opts.backend != self.backend {
+            return Err(Error::Coordinator(format!(
+                "plan compiled for {:?} but executed with {:?} options — recompile with \
+                 Plan::compile({:?})",
+                self.backend, opts.backend, opts.backend
+            )));
+        }
+        execute_groups(self.input, &self.stages, &self.groups, opts)
     }
 }
 
@@ -74,5 +421,94 @@ mod tests {
             p.validate().unwrap();
             assert_eq!(p.rows(), rows);
         });
+    }
+
+    #[test]
+    fn plan_records_without_executing() {
+        let x = Tensor::zeros(&[6, 6]).unwrap();
+        let plan = Plan::over(&x)
+            .gaussian(&[3, 3], 1.0)
+            .curvature(&[3, 3])
+            .quantile(&[3, 3], 0.5);
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan.stages()[0].kernel().name(), "gaussian");
+        assert_eq!(plan.stages()[2].kernel().name(), "quantile");
+    }
+
+    #[test]
+    fn builder_defers_errors_to_compile() {
+        let x = Tensor::zeros(&[6, 6]).unwrap();
+        // even window: recorded as a deferred error, surfaced at compile
+        let plan = Plan::over(&x).gaussian(&[4, 4], 1.0).curvature(&[3, 3]);
+        assert!(plan.compile(Backend::Native).is_err());
+        // bad quantile
+        assert!(Plan::over(&x)
+            .quantile(&[3, 3], 2.0)
+            .compile(Backend::Native)
+            .is_err());
+        // modifier before any stage
+        assert!(Plan::over(&x)
+            .boundary(BoundaryMode::Nearest)
+            .gaussian(&[3, 3], 1.0)
+            .compile(Backend::Native)
+            .is_err());
+        // empty plan
+        assert!(Plan::over(&x).compile(Backend::Native).is_err());
+    }
+
+    #[test]
+    fn planner_fuses_streamable_runs() {
+        let x = Tensor::zeros(&[6, 6]).unwrap();
+        let all_same = Plan::over(&x)
+            .gaussian(&[3, 3], 1.0)
+            .curvature(&[3, 3])
+            .median(&[3, 3])
+            .compile(Backend::Native)
+            .unwrap();
+        assert_eq!(all_same.groups(), &[0..3]);
+        assert!(all_same.describe().contains("fused"));
+
+        // a Wrap stage cannot join a group (non-local gathers) …
+        let wrapped = Plan::over(&x)
+            .gaussian(&[3, 3], 1.0)
+            .curvature(&[3, 3])
+            .boundary(BoundaryMode::Wrap)
+            .median(&[3, 3])
+            .compile(Backend::Native)
+            .unwrap();
+        // … but it can *start* one: groups split at the wrap stage only
+        assert_eq!(wrapped.groups(), &[0..1, 1..3]);
+
+        // grid changes split too
+        let strided = Plan::over(&x)
+            .gaussian(&[3, 3], 1.0)
+            .median(&[3, 3])
+            .grid(GridMode::Strided(vec![2, 2]))
+            .compile(Backend::Native)
+            .unwrap();
+        assert_eq!(strided.groups(), &[0..1, 1..2]);
+    }
+
+    #[test]
+    fn execute_rejects_backend_mismatch() {
+        let x = Tensor::zeros(&[6, 6]).unwrap();
+        let compiled = Plan::over(&x)
+            .gaussian(&[3, 3], 1.0)
+            .compile(Backend::Pjrt)
+            .unwrap();
+        assert_eq!(compiled.backend(), Backend::Pjrt);
+        let err = compiled.execute(&ExecOptions::native(1)).unwrap_err();
+        assert!(err.to_string().contains("compiled for"), "{err}");
+    }
+
+    #[test]
+    fn planner_never_fuses_on_pjrt() {
+        let x = Tensor::zeros(&[6, 6]).unwrap();
+        let compiled = Plan::over(&x)
+            .gaussian(&[3, 3], 1.0)
+            .curvature(&[3, 3])
+            .compile(Backend::Pjrt)
+            .unwrap();
+        assert_eq!(compiled.groups(), &[0..1, 1..2]);
     }
 }

@@ -21,7 +21,7 @@
 
 use std::time::{Duration, Instant};
 
-use crate::coordinator::job::Job;
+use crate::coordinator::job::{Backend, Job};
 use crate::coordinator::plan::ChunkPolicy;
 use crate::coordinator::worker::{execute_native, JobResources};
 use crate::error::{Error, Result};
@@ -83,7 +83,7 @@ pub fn run_job_timed_chunks(
     job: &Job,
     policy: ChunkPolicy,
 ) -> Result<(Tensor<f32>, Vec<Duration>)> {
-    let res = JobResources::prepare(job)?;
+    let res = JobResources::for_job(job, Backend::Native, None)?;
     let op = job.operator()?;
     let grid = QuasiGrid::resolve(x.shape(), &op, &job.grid)?;
     let rows = grid.rows();

@@ -1,76 +1,76 @@
 //! Worker-side chunk execution: one melt row block in, one result vector
-//! out, on either backend.
+//! out, on either backend, for any [`RowKernel`].
 //!
-//! All job-level precomputation (gaussian kernel vector, bilateral spatial
-//! component) happens once on the leader in [`JobResources::prepare`]; the
-//! worker hot loop is pure compute. On the PJRT backend every worker thread
-//! builds its own [`Engine`] (the client is `Rc`-backed and `!Send`) and
-//! compiles the one artifact its job needs — cost that the coordinator
-//! meters as setup, not compute, matching Fig 6's methodology.
+//! All stage-level precomputation (gaussian kernel vector, bilateral
+//! spatial component) happens once at kernel construction on the leader;
+//! the worker hot loop is pure compute. The PJRT `ArtifactManifest` is
+//! likewise loaded and verified exactly once on the leader, into
+//! [`JobResources`], and shared read-only with every worker — previously
+//! the leader *and* each worker re-read `manifest.json` from disk. On the
+//! PJRT backend every worker thread still builds its own
+//! [`Engine`] (the client is `Rc`-backed and `!Send`) from that shared
+//! manifest and compiles the one artifact its stage needs — cost the
+//! coordinator meters as setup, not compute, matching Fig 6's methodology.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
-use crate::coordinator::job::{Backend, FilterKind, Job};
+use crate::coordinator::job::{Backend, Job};
+use crate::coordinator::kernel::RowKernel;
+use crate::coordinator::plan::Stage;
 use crate::error::{Error, Result};
-use crate::kernels::bilateral::{bilateral_into, BilateralParams};
-use crate::kernels::curvature::curvature_into;
-use crate::kernels::gaussian::gaussian_kernel;
-use crate::kernels::paradigm::apply_kernel_broadcast_into;
+use crate::runtime::artifact::ArtifactManifest;
 use crate::runtime::executor::{Engine, ExtraInputs, PreparedInputs};
 
-/// Leader-side precomputed job state, shared read-only with all workers.
+/// Leader-side prepared stage state, shared read-only with all workers.
 #[derive(Clone, Debug)]
 pub struct JobResources {
-    pub job: Job,
+    /// The stage's row kernel (parameters precomputed at construction).
+    pub kernel: Arc<dyn RowKernel>,
+    /// Operator window extents.
+    pub window: Vec<usize>,
+    /// Melt column count (window ravel length).
     pub cols: usize,
-    pub center: usize,
-    /// Normalized kernel vector (gaussian jobs).
-    pub kernel: Option<Vec<f32>>,
-    /// Bilateral parameters (bilateral jobs).
-    pub bilateral: Option<BilateralParams>,
+    /// PJRT manifest, loaded and file-verified ONCE on the leader; workers
+    /// build their engines from this instead of re-reading disk.
+    pub manifest: Option<Arc<ArtifactManifest>>,
 }
 
 impl JobResources {
-    /// Precompute everything a worker needs for `job`.
-    pub fn prepare(job: &Job) -> Result<Self> {
-        let op = job.operator()?;
-        let cols = op.ravel_len();
-        let kernel = match job.kind {
-            FilterKind::Gaussian { sigma } => Some(gaussian_kernel(&job.window, sigma)),
-            _ => None,
+    /// Prepare everything a worker fleet needs for `stage` on `backend`.
+    pub fn prepare(
+        stage: &Stage,
+        backend: Backend,
+        artifact_dir: Option<&PathBuf>,
+    ) -> Result<Self> {
+        let op = stage.operator()?;
+        let manifest = match backend {
+            Backend::Native => None,
+            Backend::Pjrt => {
+                let dir = artifact_dir.ok_or_else(|| {
+                    Error::Coordinator("PJRT backend requires an artifact directory".into())
+                })?;
+                let mf = ArtifactManifest::load(dir)?;
+                mf.verify_files()?;
+                Some(Arc::new(mf))
+            }
         };
-        let bilateral = job.kind.bilateral_params(&job.window)?;
         Ok(Self {
-            job: job.clone(),
-            cols,
-            center: cols / 2,
-            kernel,
-            bilateral,
+            kernel: stage.kernel().clone(),
+            window: stage.window().to_vec(),
+            cols: op.ravel_len(),
+            manifest,
         })
     }
 
+    /// Legacy-spec convenience: prepare from a [`Job`].
+    pub fn for_job(job: &Job, backend: Backend, artifact_dir: Option<&PathBuf>) -> Result<Self> {
+        Self::prepare(&job.to_stage()?, backend, artifact_dir)
+    }
+
     /// Extra PJRT inputs (`inputs[1..]` of the matching artifact).
-    pub fn extra_inputs(&self) -> ExtraInputs {
-        match &self.job.kind {
-            FilterKind::Gaussian { .. } => {
-                ExtraInputs::one(self.kernel.clone().expect("prepared gaussian kernel"))
-            }
-            FilterKind::BilateralConst { sigma_r, .. } => ExtraInputs::two(
-                self.bilateral.as_ref().expect("prepared bilateral").spatial.clone(),
-                vec![*sigma_r],
-            ),
-            FilterKind::BilateralAdaptive { floor, .. } => ExtraInputs::two(
-                self.bilateral.as_ref().expect("prepared bilateral").spatial.clone(),
-                vec![*floor],
-            ),
-            FilterKind::Curvature => {
-                // the stencil matrix is a runtime artifact input: HLO text
-                // elides large constants, so it cannot be baked at AOT time
-                let s = crate::kernels::stencil::stencil_matrix(&self.job.window)
-                    .expect("window validated by prepare");
-                ExtraInputs::one(s)
-            }
-        }
+    pub fn extra_inputs(&self) -> Result<ExtraInputs> {
+        self.kernel.extra_inputs()
     }
 }
 
@@ -81,21 +81,10 @@ pub fn execute_native(
     rows: usize,
     out: &mut [f32],
 ) -> Result<()> {
-    match &res.job.kind {
-        FilterKind::Gaussian { .. } => {
-            let k = res.kernel.as_ref().expect("prepared gaussian kernel");
-            apply_kernel_broadcast_into(block, rows, res.cols, k, out);
-            Ok(())
-        }
-        FilterKind::BilateralConst { .. } | FilterKind::BilateralAdaptive { .. } => {
-            let p = res.bilateral.as_ref().expect("prepared bilateral");
-            bilateral_into(block, rows, res.cols, res.center, p, out)
-        }
-        FilterKind::Curvature => curvature_into(block, rows, res.cols, &res.job.window, out),
-    }
+    res.kernel.execute(block, rows, res.cols, out)
 }
 
-/// A worker's execution context for one job.
+/// A worker's execution context for one stage.
 pub enum WorkerContext {
     Native,
     Pjrt {
@@ -108,21 +97,24 @@ pub enum WorkerContext {
 
 impl WorkerContext {
     /// Build (and for PJRT: compile + warm up) the context on the calling
-    /// worker thread.
-    pub fn build(res: &JobResources, backend: Backend, artifact_dir: Option<&PathBuf>) -> Result<Self> {
+    /// worker thread, from the leader's shared resources.
+    pub fn build(res: &JobResources, backend: Backend) -> Result<Self> {
         match backend {
             Backend::Native => Ok(WorkerContext::Native),
             Backend::Pjrt => {
-                let dir = artifact_dir.ok_or_else(|| {
-                    Error::Coordinator("PJRT backend requires an artifact directory".into())
+                let manifest = res.manifest.as_ref().ok_or_else(|| {
+                    Error::Coordinator("PJRT context requires a leader-loaded manifest".into())
                 })?;
-                let engine = Engine::from_dir(dir)?;
-                let entry = engine
-                    .manifest()
-                    .by_kind_window(res.job.kind.artifact_kind(), &res.job.window)?
-                    .clone();
+                let kind = res.kernel.artifact_kind().ok_or_else(|| {
+                    Error::Coordinator(format!(
+                        "kernel '{}' has no AOT artifact; run it on Backend::Native",
+                        res.kernel.name()
+                    ))
+                })?;
+                let engine = Engine::with_manifest((**manifest).clone())?;
+                let entry = engine.manifest().by_kind_window(kind, &res.window)?.clone();
                 engine.warmup(&entry.name)?;
-                let prepared = engine.prepare_inputs(&entry, &res.extra_inputs())?;
+                let prepared = engine.prepare_inputs(&entry, &res.extra_inputs()?)?;
                 Ok(WorkerContext::Pjrt {
                     engine,
                     entry,
@@ -140,9 +132,11 @@ impl WorkerContext {
                 execute_native(res, block, rows, &mut out)?;
                 Ok(out)
             }
-            WorkerContext::Pjrt { engine, entry, prepared } => {
-                engine.execute_prepared(entry, block, rows, prepared)
-            }
+            WorkerContext::Pjrt {
+                engine,
+                entry,
+                prepared,
+            } => engine.execute_prepared(entry, block, rows, prepared),
         }
     }
 }
@@ -164,27 +158,34 @@ mod tests {
 
     #[test]
     fn prepare_builds_right_resources() {
-        let g = JobResources::prepare(&Job::gaussian(&[3, 3], 1.0)).unwrap();
-        assert!(g.kernel.is_some() && g.bilateral.is_none());
+        let g = JobResources::for_job(&Job::gaussian(&[3, 3], 1.0), Backend::Native, None).unwrap();
         assert_eq!(g.cols, 9);
-        let b = JobResources::prepare(&Job::bilateral_const(&[3, 3], 1.0, 5.0)).unwrap();
-        assert!(b.kernel.is_none() && b.bilateral.is_some());
-        let c = JobResources::prepare(&Job::curvature(&[3, 3])).unwrap();
-        assert!(c.kernel.is_none() && c.bilateral.is_none());
+        assert_eq!(g.kernel.name(), "gaussian");
+        assert!(g.manifest.is_none());
+        let b = JobResources::for_job(&Job::bilateral_const(&[3, 3], 1.0, 5.0), Backend::Native, None)
+            .unwrap();
+        assert_eq!(b.kernel.name(), "bilateral_const");
+        let q = JobResources::for_job(&Job::quantile(&[3, 3], 0.5), Backend::Native, None).unwrap();
+        assert!(q.kernel.artifact_kind().is_none());
     }
 
     #[test]
     fn extra_inputs_arity_matches_artifacts() {
         // contract with python model.py variant input lists
-        let g = JobResources::prepare(&Job::gaussian(&[3, 3], 1.0)).unwrap();
-        assert_eq!(g.extra_inputs().vectors.len(), 1);
-        let b = JobResources::prepare(&Job::bilateral_adaptive(&[3, 3], 1.0, 0.5)).unwrap();
-        let e = b.extra_inputs();
+        let g = JobResources::for_job(&Job::gaussian(&[3, 3], 1.0), Backend::Native, None).unwrap();
+        assert_eq!(g.extra_inputs().unwrap().vectors.len(), 1);
+        let b = JobResources::for_job(
+            &Job::bilateral_adaptive(&[3, 3], 1.0, 0.5),
+            Backend::Native,
+            None,
+        )
+        .unwrap();
+        let e = b.extra_inputs().unwrap();
         assert_eq!(e.vectors.len(), 2);
         assert_eq!(e.vectors[0].len(), 9);
         assert_eq!(e.vectors[1], vec![0.5]);
-        let c = JobResources::prepare(&Job::curvature(&[3, 3])).unwrap();
-        let ce = c.extra_inputs();
+        let c = JobResources::for_job(&Job::curvature(&[3, 3]), Backend::Native, None).unwrap();
+        let ce = c.extra_inputs().unwrap();
         assert_eq!(ce.vectors.len(), 1); // the stencil matrix (W x ncols)
         assert_eq!(ce.vectors[0].len(), 9 * 5);
     }
@@ -192,19 +193,25 @@ mod tests {
     #[test]
     fn native_execution_matches_kernels() {
         let m = sample_melt();
-        let res = JobResources::prepare(&Job::gaussian(&[3, 3], 1.0)).unwrap();
-        let ctx = WorkerContext::build(&res, Backend::Native, None).unwrap();
+        let res = JobResources::for_job(&Job::gaussian(&[3, 3], 1.0), Backend::Native, None).unwrap();
+        let ctx = WorkerContext::build(&res, Backend::Native).unwrap();
         let got = ctx.execute(&res, m.data(), m.rows()).unwrap();
         let want = crate::kernels::paradigm::apply_kernel_broadcast(
             &m,
-            res.kernel.as_ref().unwrap(),
+            &crate::kernels::gaussian::gaussian_kernel(&[3, 3], 1.0),
         );
         assert_allclose(&got, &want, 0.0, 0.0);
     }
 
     #[test]
-    fn pjrt_context_requires_dir() {
-        let res = JobResources::prepare(&Job::gaussian(&[3, 3], 1.0)).unwrap();
-        assert!(WorkerContext::build(&res, Backend::Pjrt, None).is_err());
+    fn pjrt_resources_require_dir_and_manifest() {
+        // no artifact dir -> prepare fails on the leader, before any worker
+        assert!(
+            JobResources::for_job(&Job::gaussian(&[3, 3], 1.0), Backend::Pjrt, None).is_err()
+        );
+        // native-prepared resources cannot build a PJRT context
+        let res =
+            JobResources::for_job(&Job::gaussian(&[3, 3], 1.0), Backend::Native, None).unwrap();
+        assert!(WorkerContext::build(&res, Backend::Pjrt).is_err());
     }
 }

@@ -1,56 +1,76 @@
 //! Unified error type for the whole framework.
+//!
+//! Hand-rolled `Display`/`Error` impls: the build image vendors no registry
+//! crates, so `thiserror` is not available (DESIGN.md §Substitutions).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Framework-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// All failure modes of the meltframe library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Tensor shape/stride violations (rank mismatch, zero extent, ...).
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Invalid neighbourhood operator (even extent, rank mismatch, ...).
-    #[error("operator error: {0}")]
     Operator(String),
 
     /// Invalid melt-matrix partition (violates the §2.4 conditions).
-    #[error("partition error: {0}")]
     Partition(String),
 
     /// Linear-algebra failures (singular matrix, non-SPD cholesky, ...).
-    #[error("linear algebra error: {0}")]
     Linalg(String),
 
     /// AOT artifact registry problems (missing manifest, bad entry, ...).
-    #[error("artifact error: {0}")]
     Artifact(String),
 
-    /// PJRT runtime failures, wrapping the `xla` crate's error.
-    #[error("runtime error: {0}")]
+    /// PJRT runtime failures (or the runtime being unavailable entirely).
     Runtime(String),
 
     /// Coordinator scheduling/aggregation failures.
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// Config / CLI parse failures.
-    #[error("config error: {0}")]
     Config(String),
 
     /// File format failures (.npy, PGM/PPM, manifest JSON).
-    #[error("format error: {0}")]
     Format(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Runtime(e.to_string())
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Operator(m) => write!(f, "operator error: {m}"),
+            Error::Partition(m) => write!(f, "partition error: {m}"),
+            Error::Linalg(m) => write!(f, "linear algebra error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Format(m) => write!(f, "format error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
     }
 }
 
@@ -77,5 +97,6 @@ mod tests {
         let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: Error = ioe.into();
         assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -13,23 +13,40 @@
 //! partitioned row-wise across parallel workers and re-aggregated exactly
 //! (paper §2.4, §3.1).
 //!
+//! The execution API is the lazy **[`Plan`](coordinator::Plan)**: a fluent
+//! builder records a stage graph over one input tensor, a planner fuses
+//! consecutive compatible stages, and the executor streams each row chunk
+//! through *all* fused stages while it is resident in a worker — one global
+//! melt and one global fold per fused group, instead of a fold→re-melt
+//! barrier per stage. The kernel surface is the open, object-safe
+//! [`RowKernel`](coordinator::RowKernel) trait (gaussian, bilateral,
+//! curvature, rank statistics, local moments are built in; user kernels
+//! plug into the same machinery), and backend selection (native Rust vs
+//! AOT-compiled Pallas via PJRT) lives behind it, so plans are
+//! backend-agnostic.
+//!
 //! ## Layer map
 //!
 //! - [`tensor`] — dense N-D tensor substrate (shapes, strides, ops, `.npy`
 //!   and PGM/PPM interchange, synthetic workload generators).
 //! - [`melt`] — the paper's contribution: quasi-grid calculus, melt/fold,
-//!   row partitioning with the §2.4 validity conditions.
-//! - [`kernels`] — native compute on melt matrices: gaussian, bilateral
-//!   (eq. 3), gaussian curvature (eq. 6/7), and the three execution
-//!   paradigms of Fig 7.
+//!   band re-melt for chunk-resident pipelines, row partitioning with the
+//!   §2.4 validity conditions.
+//! - [`kernels`] — native compute cores on melt matrices: gaussian,
+//!   bilateral (eq. 3), gaussian curvature (eq. 6/7), rank filters, and the
+//!   three execution paradigms of Fig 7.
 //! - [`stats`] — mathematical-statistics substrate: small dense linear
 //!   algebra, the multivariate gaussian of Table 2, partition-aggregable
-//!   descriptive statistics, rank statistics under partitioning.
-//! - [`coordinator`] — L3: chunk planning, worker pool scheduling,
-//!   aggregation, metrics, multi-stage pipelines.
+//!   descriptive statistics, rank statistics under partitioning — reachable
+//!   from the coordinator as plan stages.
+//! - [`coordinator`] — L3: the lazy `Plan` (builder → planner → fused
+//!   chunk-resident executor), the open `RowKernel` trait, chunk policies,
+//!   worker pool scheduling, aggregation, metrics; `Job`/`run_pipeline`
+//!   remain as spec-level shims and the unfused baseline.
 //! - [`runtime`] — PJRT: loads the AOT artifacts (`artifacts/*.hlo.txt`
 //!   lowered from the L1 Pallas kernels by `python/compile/aot.py`),
-//!   compiles them once, and executes them from the hot path.
+//!   compiles them once, and executes them from the hot path. Compiles
+//!   against a graceful stub when the `xla` bindings are not vendored.
 //! - [`config`] / [`cli`] — run configuration (TOML subset + JSON manifest
 //!   parsing) and the command-line front end.
 //! - [`bench_harness`] — measurement harness used by `cargo bench`
@@ -38,15 +55,36 @@
 //!
 //! ## Quickstart
 //!
-//! ```no_run
+//! ```
 //! use meltframe::prelude::*;
 //!
 //! // a synthetic noisy 3-D volume
-//! let vol = Tensor::<f32>::synthetic_volume(&[32, 32, 32], 42);
-//! // melt with a 3^3 operator, same-size grid, reflect boundary
+//! let vol = Tensor::<f32>::synthetic_volume(&[16, 16, 16], 42);
+//!
+//! // record a lazy three-stage pipeline — nothing executes yet, and the
+//! // final stage is a stats-layer reduction (per-row median)
+//! let plan = Plan::over(&vol)
+//!     .gaussian(&[3, 3, 3], 1.0)
+//!     .curvature(&[3, 3, 3])
+//!     .median(&[3, 3, 3]);
+//!
+//! // the planner fuses all three stages: one melt, one fold, chunks
+//! // streamed worker-resident through every stage
+//! let (out, metrics) = plan.run(&ExecOptions::native(2)).unwrap();
+//! assert_eq!(out.shape(), vol.shape());
+//! assert_eq!(metrics.melts(), 1);
+//! assert_eq!(metrics.folds(), 1);
+//! assert_eq!(metrics.stages(), 3);
+//! ```
+//!
+//! The melt/fold layer remains directly usable for one-off computations:
+//!
+//! ```
+//! use meltframe::prelude::*;
+//!
+//! let vol = Tensor::<f32>::synthetic_volume(&[8, 8, 8], 7);
 //! let op = Operator::cubic(3, 3).unwrap();
 //! let m = melt(&vol, &op, GridMode::Same, BoundaryMode::Reflect).unwrap();
-//! // gaussian broadcast over rows, folded back to the grid tensor
 //! let k = gaussian_kernel(op.window(), 1.0);
 //! let out = fold(&apply_kernel_broadcast(&m, &k), m.grid_shape()).unwrap();
 //! assert_eq!(out.shape(), vol.shape());
@@ -66,6 +104,10 @@ pub mod testing;
 
 pub mod prelude {
     //! Convenience re-exports of the public API surface.
+    pub use crate::coordinator::{
+        run_job, run_pipeline, Backend, ExecOptions, FilterKind, Job, MomentStat, Plan,
+        PlanMetrics, RowKernel, RunMetrics, Stage,
+    };
     pub use crate::error::{Error, Result};
     pub use crate::kernels::bilateral::{bilateral_adaptive, bilateral_const, BilateralParams};
     pub use crate::kernels::curvature::gaussian_curvature;
@@ -73,10 +115,11 @@ pub mod prelude {
     pub use crate::kernels::paradigm::{
         apply_kernel_broadcast, apply_kernel_elementwise, apply_kernel_vectorwise, Paradigm,
     };
+    pub use crate::kernels::rankfilter::RankKind;
     pub use crate::melt::fold::fold;
     pub use crate::melt::grid::{GridMode, QuasiGrid};
     pub use crate::melt::matrix::MeltMatrix;
-    pub use crate::melt::melt::{melt, BoundaryMode};
+    pub use crate::melt::melt::{melt, melt_band_into, BoundaryMode};
     pub use crate::melt::operator::Operator;
     pub use crate::melt::partition::RowPartition;
     pub use crate::tensor::dense::Tensor;

@@ -1,11 +1,11 @@
-//! `meltframe` — the L3 leader binary: CLI over the coordinator.
+//! `meltframe` — the L3 leader binary: CLI over the lazy Plan coordinator.
 
 use std::process::ExitCode;
 
 use meltframe::cli::{parse_args, Command, USAGE};
 use meltframe::config::spec::RunConfig;
 use meltframe::coordinator::pipeline::{run_pipeline, ExecOptions};
-use meltframe::coordinator::Job;
+use meltframe::coordinator::Plan;
 use meltframe::error::Result;
 use meltframe::runtime::artifact::ArtifactManifest;
 use meltframe::runtime::client::PjrtContext;
@@ -37,8 +37,10 @@ fn dispatch(cmd: Command) -> Result<()> {
             Ok(())
         }
         Command::Inspect { artifacts } => {
-            let ctx = PjrtContext::cpu()?;
-            println!("PJRT: {}", ctx.describe());
+            match PjrtContext::cpu() {
+                Ok(ctx) => println!("PJRT: {}", ctx.describe()),
+                Err(e) => println!("PJRT: {e}"),
+            }
             match ArtifactManifest::load(&artifacts) {
                 Ok(m) => {
                     println!("artifacts ({}, chunk_rows={}):", artifacts.display(), m.chunk_rows);
@@ -55,20 +57,38 @@ fn dispatch(cmd: Command) -> Result<()> {
             }
             Ok(())
         }
-        Command::Run { config, out } => {
+        Command::Run {
+            config,
+            out,
+            legacy,
+        } => {
             let cfg = RunConfig::load(&config)?;
             let x = cfg.input.load()?;
+            let fused = cfg.fused && !legacy;
             println!(
-                "input {:?} | {} stage(s) | {} worker(s) | backend {:?}",
+                "input {:?} | {} stage(s) | {} worker(s) | backend {:?} | {}",
                 x.shape(),
                 cfg.jobs.len(),
                 cfg.options.workers,
-                cfg.options.backend
+                cfg.options.backend,
+                if fused { "fused plan" } else { "legacy stage-by-stage" }
             );
-            let (result, metrics) = run_pipeline(&x, &cfg.jobs, &cfg.options)?;
-            for (i, m) in metrics.iter().enumerate() {
-                println!("stage {}: {}", i + 1, m.summary());
-            }
+            let result = if fused {
+                let compiled = cfg.plan(&x)?.compile(cfg.options.backend)?;
+                println!("plan: {}", compiled.describe());
+                let (result, pm) = compiled.execute(&cfg.options)?;
+                for (i, g) in pm.groups.iter().enumerate() {
+                    println!("group {}: {}", i + 1, g.summary());
+                }
+                println!("{}", pm.summary());
+                result
+            } else {
+                let (result, metrics) = run_pipeline(&x, &cfg.jobs, &cfg.options)?;
+                for (i, m) in metrics.iter().enumerate() {
+                    println!("stage {}: {}", i + 1, m.summary());
+                }
+                result
+            };
             if let Some(path) = out {
                 npy::save(&result, &path)?;
                 println!("wrote {}", path.display());
@@ -88,19 +108,38 @@ fn dispatch(cmd: Command) -> Result<()> {
             backend,
             artifacts,
         } => {
-            // Fig 6 style demonstration: 3-D gaussian over a synthetic volume
+            // Fig 6 style demonstration, plus the fused Plan on top: 3-D
+            // gaussian → curvature → median over a synthetic volume (the
+            // stats stages are native-only, so the PJRT demo runs the
+            // gaussian alone)
             let x = Tensor::synthetic_volume(&[48, 48, 48], 42);
-            let job = Job::gaussian(&[3, 3, 3], 1.0);
             let opts = if backend == "pjrt" {
                 ExecOptions::pjrt(workers, artifacts)
             } else {
                 ExecOptions::native(workers)
             };
-            println!("demo: 48^3 volume, 3^3 gaussian, {workers} worker(s), backend {backend}");
-            let (result, metrics) = run_pipeline(&x, std::slice::from_ref(&job), &opts)?;
-            println!("{}", metrics[0].summary());
+            let plan = if backend == "pjrt" {
+                println!("demo: 48^3 volume, gaussian 3^3, {workers} worker(s), backend pjrt");
+                Plan::over(&x).gaussian(&[3, 3, 3], 1.0)
+            } else {
+                println!(
+                    "demo: 48^3 volume, gaussian 3^3 → curvature 3^3 → median 3^3, \
+                     {workers} worker(s), backend native"
+                );
+                Plan::over(&x)
+                    .gaussian(&[3, 3, 3], 1.0)
+                    .curvature(&[3, 3, 3])
+                    .median(&[3, 3, 3])
+            };
+            let compiled = plan.compile(opts.backend)?;
+            println!("plan: {}", compiled.describe());
+            let (result, pm) = compiled.execute(&opts)?;
+            for (i, g) in pm.groups.iter().enumerate() {
+                println!("group {}: {}", i + 1, g.summary());
+            }
+            println!("{}", pm.summary());
             println!(
-                "result mean {:.4} (input {:.4}) — smoothing preserves the mean",
+                "result mean {:.4} (input {:.4})",
                 result.mean(),
                 x.mean()
             );

@@ -150,9 +150,112 @@ pub fn melt_into(
             out.len()
         )));
     }
-    let tables = build_tables(x.shape(), grid, op, boundary);
+    melt_core(x.data(), 0, x.shape(), op, grid, boundary, 0..rows, out)
+}
+
+/// Maximum flat-row distance between a `Same`-grid point of `shape` and any
+/// source row its `op` window can touch after (non-`Wrap`) boundary
+/// mapping — the halo height of the chunk-resident pipeline executor.
+///
+/// Boundary mapping is 1-Lipschitz per axis for `Reflect`/`Nearest` (the
+/// reflect triangle wave and the clamp both have slope ±1), and `Constant`
+/// never reads out of range, so the per-axis reach is bounded by
+/// `min(radius, extent - 1)`; flat rows are row-major over `shape`.
+pub fn flat_halo(shape: &[usize], op: &Operator) -> usize {
+    let strides = row_major_strides(shape);
+    op.radius()
+        .iter()
+        .zip(shape)
+        .zip(strides.iter())
+        .map(|((&r, &d), &s)| r.min(d - 1) * s)
+        .sum()
+}
+
+/// Re-melt a band of rows from a *value slab* instead of a full tensor —
+/// the worker-local gather of the chunk-resident pipeline executor.
+///
+/// `src` holds per-row values for flat rows `[src_start, src_start +
+/// src.len())` of a virtual tensor of `shape` (`Same` grid); this writes
+/// the melt rows of `range` into `out` (`range.len() * op.ravel_len()`
+/// values), reading only inside the slab — the slab must cover `range`
+/// extended by [`flat_halo`] (clamped to the tensor). `boundary` must not
+/// be [`BoundaryMode::Wrap`]: periodic gathers are non-local, so wrapped
+/// stages take the global melt path instead.
+pub fn melt_band_into(
+    src: &[f32],
+    src_start: usize,
+    shape: &[usize],
+    op: &Operator,
+    boundary: BoundaryMode,
+    range: std::ops::Range<usize>,
+    out: &mut [f32],
+) -> Result<()> {
+    if op.rank() != shape.len() {
+        return Err(Error::shape(format!(
+            "operator rank {} vs shape rank {}",
+            op.rank(),
+            shape.len()
+        )));
+    }
+    if matches!(boundary, BoundaryMode::Wrap) {
+        return Err(Error::Operator(
+            "melt_band_into does not support Wrap boundaries (non-local gathers)".into(),
+        ));
+    }
+    let rows: usize = shape.iter().product();
+    let cols = op.ravel_len();
+    if range.start > range.end || range.end > rows {
+        return Err(Error::shape(format!("band range {range:?} outside 0..{rows}")));
+    }
+    if out.len() != range.len() * cols {
+        return Err(Error::shape(format!(
+            "band buffer length {} != {}x{cols}",
+            out.len(),
+            range.len()
+        )));
+    }
+    let halo = flat_halo(shape, op);
+    let need_lo = range.start.saturating_sub(halo);
+    let need_hi = (range.end + halo).min(rows);
+    if src_start > need_lo || src_start + src.len() < need_hi {
+        return Err(Error::shape(format!(
+            "value slab {src_start}..{} does not cover rows {need_lo}..{need_hi}",
+            src_start + src.len()
+        )));
+    }
+    let grid = QuasiGrid::resolve(shape, op, &GridMode::Same)?;
+    melt_core(src, src_start, shape, op, &grid, boundary, range, out)
+}
+
+/// Unravel `flat` into a row-major multi-index over `shape`.
+fn unravel(mut flat: usize, shape: &[usize]) -> Vec<usize> {
+    let mut idx = vec![0usize; shape.len()];
+    for a in (0..shape.len()).rev() {
+        idx[a] = flat % shape[a];
+        flat /= shape[a];
+    }
+    idx
+}
+
+/// Shared gather core of [`melt_into`] (whole tensors) and
+/// [`melt_band_into`] (value slabs): writes the melt rows of `range`,
+/// reading `src` as the row-major values of a tensor of `input_shape`
+/// whose first element is flat index `src_offset`.
+#[allow(clippy::too_many_arguments)]
+fn melt_core(
+    src: &[f32],
+    src_offset: usize,
+    input_shape: &[usize],
+    op: &Operator,
+    grid: &QuasiGrid,
+    boundary: BoundaryMode,
+    range: std::ops::Range<usize>,
+    out: &mut [f32],
+) -> Result<()> {
+    let rank = input_shape.len();
+    let cols = op.ravel_len();
+    let tables = build_tables(input_shape, grid, op, boundary);
     let window = op.window();
-    let src = x.data();
     let fill = match boundary {
         BoundaryMode::Constant(c) => c,
         _ => 0.0,
@@ -165,7 +268,7 @@ pub fn melt_into(
     // window[rank-1] source elements (innermost stride is 1 in row-major),
     // so the hot loop is pure memcpy. Precompute per-axis interiority and
     // the source deltas of the leading-offset combinations.
-    let dims = x.shape();
+    let dims = input_shape;
     let radius = op.radius();
     let strides_in = row_major_strides(dims);
     // interior[a][g]: window fully in bounds on axis a at grid position g
@@ -195,22 +298,21 @@ pub fn melt_into(
     // odometer over grid indices; per-axis running contributions let us
     // avoid re-deriving the multi-index per row.
     let gshape = grid.out_shape().to_vec();
-    let mut gidx = vec![0usize; rank];
+    let mut gidx = unravel(range.start, &gshape);
     let mut wtab: Vec<&[i64]> = (0..rank)
-        .map(|a| &tables[a][0..window[a]])
+        .map(|a| &tables[a][gidx[a] * window[a]..(gidx[a] + 1) * window[a]])
         .collect();
-    // running centre flat index for the fast path
+    // running centre flat index for the fast path (absolute, pre-offset)
     let mut centre_flat: isize = {
         let c0 = grid.to_input(&gidx);
         (0..rank).map(|a| c0[a] * strides_in[a] as isize).sum()
     };
-    for r in 0..rows {
-        let dst = &mut out[r * cols..(r + 1) * cols];
+    for (r, dst) in range.clone().zip(out.chunks_exact_mut(cols)) {
         if (0..rank).all(|a| interior[a][gidx[a]]) {
             // fast path: contiguous runs, no boundary mapping. The run
             // length is the innermost window extent — typically 3 or 5 —
             // so fixed-width copies beat generic memcpy dispatch.
-            let base = centre_flat - radius[rank - 1] as isize;
+            let base = centre_flat - radius[rank - 1] as isize - src_offset as isize;
             match wlast {
                 3 => {
                     for (seg, &pd) in dst.chunks_exact_mut(3).zip(prefix_deltas.iter()) {
@@ -234,10 +336,10 @@ pub fn melt_into(
                 }
             }
         } else {
-            gather_row_slow(dst, src, &wtab, window, rank, fill, has_sentinel);
+            gather_row_slow(dst, src, src_offset, &wtab, window, rank, fill, has_sentinel);
         }
         // increment grid odometer and refresh per-axis table slices
-        if r + 1 < rows {
+        if r + 1 < range.end {
             for a in (0..rank).rev() {
                 gidx[a] += 1;
                 centre_flat += (grid.stride()[a] * strides_in[a]) as isize;
@@ -255,10 +357,13 @@ pub fn melt_into(
 }
 
 /// Slow-path gather for one (boundary-touching) row: odometer over window
-/// offsets accumulating per-axis table contributions.
+/// offsets accumulating per-axis table contributions. Table entries are
+/// absolute flat indices; `base` shifts them into slab coordinates.
+#[allow(clippy::too_many_arguments)]
 fn gather_row_slow(
     dst: &mut [f32],
     src: &[f32],
+    base: usize,
     wtab: &[&[i64]],
     window: &[usize],
     rank: usize,
@@ -273,7 +378,7 @@ fn gather_row_slow(
         *d = if has_sentinel && neg > 0 {
             fill
         } else {
-            src[acc as usize]
+            src[acc as usize - base]
         };
         // increment window odometer
         for a in (0..rank).rev() {
@@ -459,6 +564,96 @@ mod tests {
         let grid = QuasiGrid::resolve(&[4], &op, &GridMode::Same).unwrap();
         let mut buf = vec![0.0; 5];
         assert!(melt_into(&x, &op, &grid, BoundaryMode::Reflect, &mut buf).is_err());
+    }
+
+    #[test]
+    fn flat_halo_known_values() {
+        // radius * row-major stride, capped at extent - 1 per axis
+        let op3 = Operator::cubic(3, 2).unwrap();
+        assert_eq!(flat_halo(&[10, 12], &op3), 12 + 1);
+        let op5 = Operator::cubic(5, 3).unwrap();
+        assert_eq!(flat_halo(&[8, 8, 8], &op5), 2 * 64 + 2 * 8 + 2);
+        // window wider than the axis: reach caps at extent - 1
+        assert_eq!(flat_halo(&[2, 4], &Operator::new(&[5, 3]).unwrap()), 4 + 1);
+    }
+
+    #[test]
+    fn band_melt_matches_full_melt_property() {
+        // the chunk-resident executor's contract: gathering a band from a
+        // halo slab of values reproduces the full melt rows bit-for-bit
+        let modes = [
+            BoundaryMode::Reflect,
+            BoundaryMode::Nearest,
+            BoundaryMode::Constant(-3.25),
+        ];
+        check_property("melt_band_into == melt rows", 40, |rng: &mut SplitMix64| {
+            let rank = 1 + rng.below(3);
+            let dims: Vec<usize> = (0..rank).map(|_| 3 + rng.below(6)).collect();
+            let window: Vec<usize> = (0..rank).map(|_| 1 + 2 * rng.below(2)).collect();
+            let rows: usize = dims.iter().product();
+            let values = rng.uniform_vec(rows, -9.0, 9.0);
+            let op = Operator::new(&window).unwrap();
+            let boundary = modes[rng.below(modes.len())];
+
+            // reference: melt the values as a tensor of the grid shape
+            let x = Tensor::from_vec(&dims, values.clone()).unwrap();
+            let full = melt(&x, &op, GridMode::Same, boundary).unwrap();
+
+            // random band, gathered once from the whole value array and
+            // once from the minimal halo slab
+            let start = rng.below(rows);
+            let end = start + 1 + rng.below(rows - start);
+            let cols = op.ravel_len();
+            let mut band = vec![0.0f32; (end - start) * cols];
+            melt_band_into(&values, 0, &dims, &op, boundary, start..end, &mut band).unwrap();
+            assert_allclose(&band, &full.data()[start * cols..end * cols], 0.0, 0.0);
+
+            let halo = flat_halo(&dims, &op);
+            let lo = start.saturating_sub(halo);
+            let hi = (end + halo).min(rows);
+            let mut band2 = vec![0.0f32; (end - start) * cols];
+            melt_band_into(&values[lo..hi], lo, &dims, &op, boundary, start..end, &mut band2)
+                .unwrap();
+            assert_allclose(&band2, &band, 0.0, 0.0);
+        });
+    }
+
+    #[test]
+    fn band_melt_rejects_bad_inputs() {
+        let op = Operator::cubic(3, 1).unwrap();
+        let values = vec![1.0f32; 8];
+        let mut out = vec![0.0f32; 3 * 2];
+        // Wrap gathers are non-local
+        assert!(
+            melt_band_into(&values, 0, &[8], &op, BoundaryMode::Wrap, 0..2, &mut out).is_err()
+        );
+        // slab too short for the halo
+        assert!(melt_band_into(
+            &values[..3],
+            0,
+            &[8],
+            &op,
+            BoundaryMode::Reflect,
+            2..4,
+            &mut out
+        )
+        .is_err());
+        // wrong output length
+        let mut short = vec![0.0f32; 3];
+        assert!(melt_band_into(
+            &values,
+            0,
+            &[8],
+            &op,
+            BoundaryMode::Reflect,
+            0..2,
+            &mut short
+        )
+        .is_err());
+        // range outside the grid
+        assert!(
+            melt_band_into(&values, 0, &[8], &op, BoundaryMode::Reflect, 7..9, &mut out).is_err()
+        );
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Thin wrapper over the PJRT CPU client with device diagnostics.
 
 use crate::error::Result;
+use crate::runtime::xla_stub as xla;
 
 /// A thread-confined PJRT CPU client.
 ///
@@ -11,11 +12,18 @@ pub struct PjrtContext {
 }
 
 impl PjrtContext {
-    /// Create the CPU client (the only backend in this image).
+    /// Create the CPU client. Fails with [`crate::error::Error::Runtime`]
+    /// when the build has no PJRT bindings (see [`crate::runtime::xla_stub`]).
     pub fn cpu() -> Result<Self> {
         Ok(Self {
             client: xla::PjRtClient::cpu()?,
         })
+    }
+
+    /// Whether this build can construct a PJRT client at all — lets callers
+    /// (CLI `inspect`, benches) probe before committing to `Backend::Pjrt`.
+    pub fn available() -> bool {
+        Self::cpu().is_ok()
     }
 
     pub fn client(&self) -> &xla::PjRtClient {
@@ -38,10 +46,17 @@ mod tests {
     use super::*;
 
     #[test]
-    fn cpu_client_constructs_and_describes() {
-        let ctx = PjrtContext::cpu().unwrap();
-        let d = ctx.describe();
-        assert!(d.contains("platform="), "{d}");
-        assert!(ctx.client.device_count() >= 1);
+    fn cpu_client_constructs_or_reports_unavailable() {
+        match PjrtContext::cpu() {
+            Ok(ctx) => {
+                let d = ctx.describe();
+                assert!(d.contains("platform="), "{d}");
+                assert!(ctx.client.device_count() >= 1);
+            }
+            Err(e) => {
+                assert!(e.to_string().contains("PJRT unavailable"), "{e}");
+                assert!(!PjrtContext::available());
+            }
+        }
     }
 }

@@ -4,16 +4,25 @@
 //!
 //! Interchange is HLO *text*: jax >= 0.5 emits serialized protos with 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md). Python never runs at
-//! request time — artifacts are compiled once per [`Engine`] and reused.
+//! reassigns ids. Python never runs at request time — artifacts are compiled
+//! once per [`Engine`] and reused.
+//!
+//! **Dependency gating:** this build vendors no `xla` crate, so `client`
+//! and `executor` compile against [`xla_stub`] — the same API surface, with
+//! every entry point failing at runtime with a clear `Error::Runtime`.
+//! `Backend::Native` is unaffected; `Backend::Pjrt` degrades to an
+//! actionable error instead of a link failure. `PjrtContext::available()`
+//! lets callers probe.
 //!
 //! Threading note: `xla::PjRtClient` is `Rc`-backed (not `Send`), so an
 //! [`Engine`] is thread-confined; multi-worker PJRT execution gives each
-//! worker thread its own engine (see `coordinator::worker`).
+//! worker thread its own engine built from the leader's shared manifest
+//! (see `coordinator::worker`).
 
 pub mod artifact;
 pub mod client;
 pub mod executor;
+pub mod xla_stub;
 
 pub use artifact::{ArtifactEntry, ArtifactManifest};
 pub use executor::Engine;

@@ -1,0 +1,258 @@
+//! Integration: the lazy `Plan` path against the legacy stage-by-stage
+//! executor — every fused/streamed plan must match `run_pipeline`
+//! **bit-for-bit** across boundary modes, grid modes, worker counts and
+//! kernel kinds (including the `stats` reductions), and the fused metrics
+//! must prove the single-melt/single-fold structure.
+
+use meltframe::config::spec::RunConfig;
+use meltframe::coordinator::pipeline::{run_pipeline, ExecOptions};
+use meltframe::coordinator::{Backend, Job, Plan};
+use meltframe::melt::grid::GridMode;
+use meltframe::melt::melt::BoundaryMode;
+use meltframe::stats::descriptive::moments;
+use meltframe::tensor::dense::Tensor;
+use meltframe::testing::{assert_allclose, check_property, SplitMix64};
+
+/// A random job over `window`, spanning filters and stats reductions.
+fn random_job(rng: &mut SplitMix64, window: &[usize]) -> Job {
+    match rng.below(7) {
+        0 => Job::gaussian(window, 0.5 + rng.uniform(0.0, 2.0)),
+        1 => Job::bilateral_const(window, 1.5, 5.0 + rng.uniform(0.0, 50.0)),
+        2 => Job::bilateral_adaptive(window, 1.5, 1.0 + rng.uniform(0.0, 3.0)),
+        3 => Job::curvature(window),
+        4 => Job::median(window),
+        5 => Job::quantile(window, rng.below(101) as f64 / 100.0),
+        _ => Job::local_std(window),
+    }
+}
+
+fn plan_of<'a>(x: &'a Tensor<f32>, jobs: &[Job]) -> Plan<'a> {
+    let mut plan = Plan::over(x);
+    for j in jobs {
+        plan = plan.stage(j.to_stage().unwrap());
+    }
+    plan
+}
+
+#[test]
+fn fused_plan_matches_legacy_bit_for_bit_property() {
+    // the acceptance property: fused/streamed == fold→re-melt, exactly
+    check_property("fused plan == legacy pipeline", 25, |rng: &mut SplitMix64| {
+        let rank = 2 + rng.below(2);
+        let dims: Vec<usize> = (0..rank).map(|_| 6 + rng.below(7)).collect();
+        let x = Tensor::random(&dims, 0.0, 255.0, rng.next_u64()).unwrap();
+        let window: Vec<usize> = vec![3; rank];
+
+        let boundaries = [
+            BoundaryMode::Reflect,
+            BoundaryMode::Nearest,
+            BoundaryMode::Constant(7.5),
+        ];
+        let n_stages = 2 + rng.below(3);
+        let jobs: Vec<Job> = (0..n_stages)
+            .map(|_| {
+                let mut j = random_job(rng, &window);
+                j.boundary = boundaries[rng.below(boundaries.len())];
+                j
+            })
+            .collect();
+
+        let (legacy, _) = run_pipeline(&x, &jobs, &ExecOptions::native(1)).unwrap();
+        let workers = 1 + rng.below(4);
+        let (fused, pm) = plan_of(&x, &jobs).run(&ExecOptions::native(workers)).unwrap();
+
+        assert_allclose(fused.data(), legacy.data(), 0.0, 0.0);
+        // all stages are Same-grid, non-Wrap: the planner must fuse them
+        // into ONE group with ONE melt and ONE fold
+        assert_eq!(pm.groups.len(), 1, "{jobs:?}");
+        assert_eq!(pm.melts(), 1);
+        assert_eq!(pm.folds(), 1);
+        assert_eq!(pm.stages(), n_stages);
+    });
+}
+
+#[test]
+fn unfusable_stages_still_match_legacy_property() {
+    // Wrap boundaries and grid changes break fusion but not correctness:
+    // the planner falls back to barrier groups and the output is identical
+    check_property("mixed-fusability plan == legacy", 15, |rng: &mut SplitMix64| {
+        let dims = [7 + rng.below(6), 7 + rng.below(6)];
+        let x = Tensor::random(&dims, 0.0, 255.0, rng.next_u64()).unwrap();
+        let boundaries = [
+            BoundaryMode::Reflect,
+            BoundaryMode::Wrap,
+            BoundaryMode::Nearest,
+            BoundaryMode::Constant(-1.0),
+        ];
+        let jobs: Vec<Job> = (0..3)
+            .map(|_| {
+                let mut j = random_job(rng, &[3, 3]);
+                j.boundary = boundaries[rng.below(boundaries.len())];
+                j
+            })
+            .collect();
+        let (legacy, _) = run_pipeline(&x, &jobs, &ExecOptions::native(1)).unwrap();
+        let (out, pm) = plan_of(&x, &jobs).run(&ExecOptions::native(2)).unwrap();
+        assert_allclose(out.data(), legacy.data(), 0.0, 0.0);
+        assert_eq!(pm.stages(), 3);
+        // one melt+fold per group, however the planner split
+        assert_eq!(pm.melts(), pm.groups.len());
+        assert_eq!(pm.folds(), pm.groups.len());
+    });
+}
+
+#[test]
+fn first_stage_grid_modes_fuse_with_same_followers() {
+    // a group's FIRST stage may use any grid (it is melted globally); the
+    // followers stream over the resulting grid shape
+    let x = Tensor::random(&[13, 14], 0.0, 255.0, 5).unwrap();
+    for grid in [
+        GridMode::Same,
+        GridMode::Valid,
+        GridMode::Strided(vec![2, 2]),
+    ] {
+        let mut first = Job::gaussian(&[3, 3], 1.0);
+        first.grid = grid.clone();
+        let jobs = vec![first, Job::curvature(&[3, 3]), Job::quantile(&[3, 3], 0.5)];
+        let (legacy, _) = run_pipeline(&x, &jobs, &ExecOptions::native(1)).unwrap();
+        for workers in [1usize, 2, 3] {
+            let (out, pm) = plan_of(&x, &jobs).run(&ExecOptions::native(workers)).unwrap();
+            assert_allclose(out.data(), legacy.data(), 0.0, 0.0);
+            assert_eq!(out.shape(), legacy.shape());
+            assert_eq!(pm.groups.len(), 1, "grid {grid:?} must not break fusion");
+            assert_eq!(pm.melts(), 1);
+        }
+    }
+}
+
+#[test]
+fn stats_reduction_streams_through_fused_group() {
+    // a stats (rank) reduction as the terminal stage of a fused pipeline:
+    // previously stats were unreachable from the coordinator at all
+    let x = Tensor::random(&[11, 12], 0.0, 100.0, 42).unwrap();
+    let jobs = vec![Job::gaussian(&[3, 3], 1.0), Job::quantile(&[3, 3], 0.25)];
+    let (legacy, _) = run_pipeline(&x, &jobs, &ExecOptions::native(1)).unwrap();
+    let (out, pm) = Plan::over(&x)
+        .gaussian(&[3, 3], 1.0)
+        .quantile(&[3, 3], 0.25)
+        .run(&ExecOptions::native(3))
+        .unwrap();
+    assert_allclose(out.data(), legacy.data(), 0.0, 0.0);
+    assert_eq!(pm.groups.len(), 1);
+    assert_eq!(pm.groups[0].stages, 2);
+}
+
+#[test]
+fn output_moments_are_partition_exact() {
+    let x = Tensor::random(&[16, 16], -50.0, 50.0, 3).unwrap();
+    let (out, pm) = Plan::over(&x)
+        .gaussian(&[3, 3], 1.0)
+        .local_std(&[3, 3])
+        .run(&ExecOptions::native(4))
+        .unwrap();
+    let direct = moments(out.data());
+    assert_eq!(pm.output_moments.count, direct.count);
+    assert!((pm.output_moments.mean - direct.mean).abs() < 1e-8);
+    assert!((pm.output_moments.variance() - direct.variance()).abs() < 1e-6);
+    assert_eq!(pm.output_moments.min, direct.min);
+    assert_eq!(pm.output_moments.max, direct.max);
+}
+
+#[test]
+fn worker_count_invariance_of_fused_plans_property() {
+    // §2.4 end-to-end for the streaming executor: chunking + halos must
+    // never change results
+    check_property("fused plan invariant under workers", 10, |rng: &mut SplitMix64| {
+        let dims = [6 + rng.below(8), 6 + rng.below(8)];
+        let x = Tensor::random(&dims, 0.0, 255.0, rng.next_u64()).unwrap();
+        let jobs = vec![random_job(rng, &[3, 3]), random_job(rng, &[3, 3])];
+        let (base, _) = plan_of(&x, &jobs).run(&ExecOptions::native(1)).unwrap();
+        for workers in [2usize, 3, 5] {
+            let (out, _) = plan_of(&x, &jobs).run(&ExecOptions::native(workers)).unwrap();
+            assert_allclose(out.data(), base.data(), 0.0, 0.0);
+        }
+    });
+}
+
+#[test]
+fn custom_chunk_policies_respect_halos() {
+    // tiny fixed chunks force maximal halo overlap — results still exact
+    use meltframe::coordinator::ChunkPolicy;
+    let x = Tensor::random(&[12, 12], 0.0, 255.0, 8).unwrap();
+    let jobs = vec![
+        Job::gaussian(&[3, 3], 1.0),
+        Job::curvature(&[3, 3]),
+        Job::median(&[3, 3]),
+    ];
+    let (legacy, _) = run_pipeline(&x, &jobs, &ExecOptions::native(1)).unwrap();
+    for chunk_rows in [1usize, 5, 17, 1000] {
+        let mut opts = ExecOptions::native(3);
+        opts.chunk_policy = Some(ChunkPolicy::Fixed { chunk_rows });
+        let (out, _) = plan_of(&x, &jobs).run(&opts).unwrap();
+        assert_allclose(out.data(), legacy.data(), 0.0, 0.0);
+    }
+}
+
+#[test]
+fn config_fused_flag_drives_identical_results() {
+    let cfg = RunConfig::parse(
+        r#"
+        workers = 2
+        [input]
+        kind = "image"
+        dims = [24, 24]
+        seed = 9
+        [job.1]
+        kind = "gaussian"
+        window = [3, 3]
+        sigma = 1.0
+        [job.2]
+        kind = "median"
+        window = [3, 3]
+        "#,
+    )
+    .unwrap();
+    assert!(cfg.fused);
+    let x = cfg.input.load().unwrap();
+    let (legacy, _) = run_pipeline(&x, &cfg.jobs, &cfg.options).unwrap();
+    let compiled = cfg.plan(&x).unwrap().compile(cfg.options.backend).unwrap();
+    assert_eq!(compiled.groups().len(), 1);
+    assert!(compiled.describe().contains("fused"));
+    let (fused, pm) = compiled.execute(&cfg.options).unwrap();
+    assert_allclose(fused.data(), legacy.data(), 0.0, 0.0);
+    assert_eq!(pm.melts(), 1);
+}
+
+#[test]
+fn plan_surface_errors_cleanly() {
+    let x = Tensor::random(&[8, 8], 0.0, 1.0, 1).unwrap();
+    // empty plan
+    assert!(Plan::over(&x).run(&ExecOptions::native(1)).is_err());
+    // zero workers
+    assert!(Plan::over(&x)
+        .gaussian(&[3, 3], 1.0)
+        .run(&ExecOptions::native(0))
+        .is_err());
+    // deferred builder error
+    assert!(Plan::over(&x)
+        .gaussian(&[2, 2], 1.0)
+        .run(&ExecOptions::native(1))
+        .is_err());
+    // rank mismatch surfaces at execution
+    assert!(Plan::over(&x)
+        .gaussian(&[3, 3, 3], 1.0)
+        .run(&ExecOptions::native(1))
+        .is_err());
+    // pjrt without artifacts
+    let compiled = Plan::over(&x)
+        .gaussian(&[3, 3], 1.0)
+        .compile(Backend::Pjrt)
+        .unwrap();
+    let opts = ExecOptions {
+        workers: 1,
+        backend: Backend::Pjrt,
+        artifact_dir: None,
+        chunk_policy: None,
+    };
+    assert!(compiled.execute(&opts).is_err());
+}
