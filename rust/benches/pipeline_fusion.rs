@@ -1,20 +1,24 @@
 //! Pipeline bench: the lazy `Plan`'s fused chunk-resident executor vs the
 //! legacy per-stage fold→re-melt path, on the same three-stage workload
-//! (gaussian 3^3 → curvature 3^3 → median 3^3 over a 48^3 volume).
+//! (gaussian 3^3 → curvature 3^3 → median 3^3 over a 48^3 volume) — with
+//! the fused path measured in BOTH halo modes.
 //!
 //! What fusion removes per extra stage: one full-tensor materialization,
 //! one leader-side *serial* global melt (rows × cols gather), and one
-//! global synchronization barrier. What it adds: a few halo rows of
-//! duplicated kernel work per chunk. The halo cost is O(chunks × halo),
-//! the savings are O(rows × cols) — fused wins and the gap widens with
-//! stage count and worker count (the band re-melts parallelize; the legacy
-//! melts never did).
+//! global synchronization barrier. What recompute-mode fusion adds back: a
+//! few halo rows of duplicated kernel work per chunk — O(chunks × halo ×
+//! stages), growing with worker count. Exchange mode removes that term
+//! too: workers publish computed boundary rows to the halo board and fetch
+//! their neighbours', so `halo_recomputed_rows == 0` and the only cost is
+//! a brief neighbour wait per stage. Expectation: exchange ≥ recompute
+//! throughput at the highest worker count, with the gap widening as
+//! workers (and therefore chunk boundaries) multiply.
 //!
 //! Run: `cargo bench --bench pipeline_fusion`
 
 use meltframe::bench_harness::{black_box, Measurement, Report};
 use meltframe::coordinator::pipeline::{run_pipeline, ExecOptions};
-use meltframe::coordinator::{Job, Plan};
+use meltframe::coordinator::{HaloMode, Job, Plan};
 use meltframe::tensor::dense::Tensor;
 
 fn jobs() -> Vec<Job> {
@@ -25,7 +29,10 @@ fn jobs() -> Vec<Job> {
     ]
 }
 
-fn fused(vol: &Tensor<f32>, opts: &ExecOptions) -> (Tensor<f32>, meltframe::coordinator::PlanMetrics) {
+fn fused(
+    vol: &Tensor<f32>,
+    opts: &ExecOptions,
+) -> (Tensor<f32>, meltframe::coordinator::PlanMetrics) {
     Plan::over(vol)
         .gaussian(&[3, 3, 3], 1.0)
         .curvature(&[3, 3, 3])
@@ -37,6 +44,7 @@ fn fused(vol: &Tensor<f32>, opts: &ExecOptions) -> (Tensor<f32>, meltframe::coor
 fn main() {
     let vol = Tensor::<f32>::synthetic_volume(&[48, 48, 48], 42);
     let jobs = jobs();
+    let max_workers = 4usize;
 
     // ---- correctness + structure proof before timing ----------------------
     let opts1 = ExecOptions::native(1);
@@ -50,31 +58,81 @@ fn main() {
     assert_eq!(pm.groups.len(), 1, "all three stages must fuse");
     assert_eq!(pm.melts(), 1, "fused group must perform exactly one melt");
     assert_eq!(pm.folds(), 1, "fused group must perform exactly one fold");
+    // the exchange acceptance criteria, at the highest worker count
+    let exchange_opts = ExecOptions::native(max_workers).with_halo_mode(HaloMode::Exchange);
+    let (exchange_out, xm) = fused(&vol, &exchange_opts);
+    assert_eq!(
+        exchange_out.data(),
+        legacy_out.data(),
+        "exchange mode must match legacy bit-for-bit"
+    );
+    assert_eq!(
+        xm.halo_recomputed(),
+        0,
+        "exchange mode must recompute zero halo rows"
+    );
+    assert!(xm.halo_published() > 0 && xm.halo_received() > 0);
+    let (recompute_out, rm) = fused(
+        &vol,
+        &ExecOptions::native(max_workers).with_halo_mode(HaloMode::Recompute),
+    );
+    assert_eq!(recompute_out.data(), legacy_out.data());
     let legacy_melts: usize = legacy_metrics.iter().map(|m| m.melts).sum();
     println!(
-        "structure: legacy = {} melts / {} folds, fused = {} melt / {} fold\n",
+        "structure: legacy = {} melts / {} folds; fused = {} melt / {} fold",
         legacy_melts,
         legacy_metrics.iter().map(|m| m.folds).sum::<usize>(),
         pm.melts(),
         pm.folds()
     );
+    println!(
+        "halo @ {max_workers} workers: recompute redoes {} rows, exchange redoes {} (pub {} / recv {})\n",
+        rm.halo_recomputed(),
+        xm.halo_recomputed(),
+        xm.halo_published(),
+        xm.halo_received()
+    );
 
     // ---- timing, across worker counts -------------------------------------
-    for workers in [1usize, 2, 4] {
+    let mut last: Option<(Measurement, Measurement)> = None;
+    for workers in [1usize, 2, max_workers] {
         let opts = ExecOptions::native(workers);
+        let exc = ExecOptions::native(workers).with_halo_mode(HaloMode::Exchange);
         let mut report = Report::new(format!(
-            "Pipeline — 3 stages on 48^3, {workers} worker(s): fold→re-melt vs fused streaming"
+            "Pipeline — 3 stages on 48^3, {workers} worker(s): fold→re-melt vs fused (recompute|exchange)"
         ));
         report.push(Measurement::run("legacy run_pipeline", 1, 10, || {
             black_box(run_pipeline(&vol, &jobs, &opts).unwrap())
         }));
-        report.push(Measurement::run("fused Plan::run", 1, 10, || {
+        let rec = Measurement::run("fused Plan (halo recompute)", 1, 10, || {
             black_box(fused(&vol, &opts))
-        }));
+        });
+        let exg = Measurement::run("fused Plan (halo exchange)", 1, 10, || {
+            black_box(fused(&vol, &exc))
+        });
+        report.push(rec.clone());
+        report.push(exg.clone());
         report.print(Some("legacy run_pipeline"));
         println!();
+        if workers == max_workers {
+            last = Some((rec, exg));
+        }
     }
 
-    println!("fused streaming removes 2 intermediate tensors, 2 serial re-melts and 2");
-    println!("barriers from this pipeline; the margin grows with stages and workers.");
+    if let Some((rec, exg)) = last {
+        let (r, x) = (rec.median().as_secs_f64(), exg.median().as_secs_f64());
+        println!(
+            "@{max_workers} workers: recompute median {:.2} ms, exchange median {:.2} ms ({})",
+            r * 1e3,
+            x * 1e3,
+            if x <= r {
+                format!("exchange {:.2}x faster", r / x)
+            } else {
+                format!("exchange {:.2}x SLOWER — regression", x / r)
+            }
+        );
+    }
+    println!("\nfused streaming removes 2 intermediate tensors, 2 serial re-melts and 2");
+    println!("barriers from this pipeline; exchange mode additionally removes every");
+    println!("recomputed halo row, so its margin grows with worker count.");
 }

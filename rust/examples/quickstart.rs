@@ -77,6 +77,21 @@ fn main() -> Result<()> {
     let (legacy, _) = run_pipeline(&vol, &jobs, &ExecOptions::native(4))?;
     assert_eq!(fused.data(), legacy.data(), "fused must equal legacy bit-for-bit");
 
+    // ---- 7. halo exchange: trade boundary rows instead of recomputing -----
+    // the default fused executor recomputes each chunk's halo rows; in
+    // exchange mode neighbouring chunks publish/fetch them through the
+    // halo board — same bits, zero duplicated kernel work
+    let exchange_opts = ExecOptions::native(4).with_halo_mode(HaloMode::Exchange);
+    let (exchanged, xm) = compiled.execute(&exchange_opts)?;
+    assert_eq!(exchanged.data(), fused.data(), "halo modes must agree bit-for-bit");
+    assert_eq!(xm.halo_recomputed(), 0, "exchange recomputes no halo rows");
+    println!(
+        "halo exchange: {} rows published, {} received, {} recomputed",
+        xm.halo_published(),
+        xm.halo_received(),
+        xm.halo_recomputed()
+    );
+
     // ---- bonus: partitions are §2.4-valid by construction -----------------
     let partition = RowPartition::even(m.rows(), 4)?;
     partition.validate()?;

@@ -9,6 +9,7 @@
 
 use std::path::PathBuf;
 
+use crate::coordinator::halo::HaloMode;
 use crate::error::{Error, Result};
 
 /// Parsed command line.
@@ -20,6 +21,9 @@ pub enum Command {
         /// Force the stage-by-stage fold→re-melt baseline instead of the
         /// fused lazy `Plan` executor.
         legacy: bool,
+        /// Override the config's fused halo strategy
+        /// (`--halo-mode recompute|exchange`).
+        halo_mode: Option<HaloMode>,
     },
     Inspect {
         artifacts: PathBuf,
@@ -37,12 +41,16 @@ meltframe — melt-matrix array programming with parallel acceleration
 
 USAGE:
     meltframe run <config.toml> [--out <file.npy>] [--legacy]
+                  [--halo-mode recompute|exchange]
     meltframe inspect [--artifacts <dir>]
     meltframe demo [--workers <n>] [--backend native|pjrt] [--artifacts <dir>]
     meltframe help
 
 `run` executes the configured stages through the fused lazy Plan (one melt,
 one fold per fusable group); `--legacy` forces the stage-by-stage baseline.
+`--halo-mode` overrides the config's fused halo strategy: `recompute`
+(duplicate boundary rows locally) or `exchange` (trade them between
+neighbouring chunks through the halo board).
 ";
 
 /// Parse argv (without the program name).
@@ -57,12 +65,16 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
             let mut config = None;
             let mut out = None;
             let mut legacy = false;
+            let mut halo_mode = None;
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--out" => {
                         out = Some(PathBuf::from(expect_value(&mut it, "--out")?));
                     }
                     "--legacy" => legacy = true,
+                    "--halo-mode" => {
+                        halo_mode = Some(HaloMode::parse(expect_value(&mut it, "--halo-mode")?)?);
+                    }
                     flag if flag.starts_with("--") => {
                         return Err(Error::Config(format!("unknown flag '{flag}' for run")))
                     }
@@ -77,13 +89,16 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                 config: config.ok_or_else(|| Error::Config("run requires a config file".into()))?,
                 out,
                 legacy,
+                halo_mode,
             })
         }
         "inspect" => {
             let mut artifacts = PathBuf::from("artifacts");
             while let Some(a) = it.next() {
                 match a.as_str() {
-                    "--artifacts" => artifacts = PathBuf::from(expect_value(&mut it, "--artifacts")?),
+                    "--artifacts" => {
+                        artifacts = PathBuf::from(expect_value(&mut it, "--artifacts")?)
+                    }
                     other => return Err(Error::Config(format!("unknown argument '{other}'"))),
                 }
             }
@@ -101,7 +116,9 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                             .map_err(|_| Error::Config("--workers expects a number".into()))?;
                     }
                     "--backend" => backend = expect_value(&mut it, "--backend")?.to_string(),
-                    "--artifacts" => artifacts = PathBuf::from(expect_value(&mut it, "--artifacts")?),
+                    "--artifacts" => {
+                        artifacts = PathBuf::from(expect_value(&mut it, "--artifacts")?)
+                    }
                     other => return Err(Error::Config(format!("unknown argument '{other}'"))),
                 }
             }
@@ -145,6 +162,7 @@ mod tests {
                 config: PathBuf::from("pipeline.toml"),
                 out: Some(PathBuf::from("result.npy")),
                 legacy: false,
+                halo_mode: None,
             }
         );
         let c = parse_args(&argv("run pipeline.toml --legacy")).unwrap();
@@ -154,6 +172,17 @@ mod tests {
                 config: PathBuf::from("pipeline.toml"),
                 out: None,
                 legacy: true,
+                halo_mode: None,
+            }
+        );
+        let c = parse_args(&argv("run pipeline.toml --halo-mode exchange")).unwrap();
+        assert_eq!(
+            c,
+            Command::Run {
+                config: PathBuf::from("pipeline.toml"),
+                out: None,
+                legacy: false,
+                halo_mode: Some(HaloMode::Exchange),
             }
         );
     }
@@ -192,5 +221,7 @@ mod tests {
         assert!(parse_args(&argv("demo --backend cuda")).is_err());
         assert!(parse_args(&argv("frobnicate")).is_err());
         assert!(parse_args(&argv("run a.toml --out")).is_err());
+        assert!(parse_args(&argv("run a.toml --halo-mode")).is_err());
+        assert!(parse_args(&argv("run a.toml --halo-mode psychic")).is_err());
     }
 }

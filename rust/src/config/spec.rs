@@ -5,6 +5,7 @@
 //! workers = 4
 //! backend = "native"          # or "pjrt"
 //! artifacts = "artifacts"     # pjrt only
+//! halo_mode = "recompute"     # or "exchange" (fused halo strategy)
 //!
 //! [input]
 //! kind = "volume"             # volume | image | mask | npy
@@ -23,6 +24,7 @@
 use std::path::PathBuf;
 
 use crate::config::toml::TomlDoc;
+use crate::coordinator::halo::HaloMode;
 use crate::coordinator::job::{Backend, Job};
 use crate::coordinator::pipeline::ExecOptions;
 use crate::coordinator::plan::Plan;
@@ -99,6 +101,13 @@ impl RunConfig {
             .transpose()?
             .unwrap_or(true);
 
+        // halo_mode = "recompute" (default) | "exchange": how fused groups
+        // handle cross-chunk halo rows (see the crate-level halo docs)
+        let halo_mode = match doc.get("", "halo_mode").map(|v| v.as_str()).transpose()? {
+            None => HaloMode::Recompute,
+            Some(s) => HaloMode::parse(s)?,
+        };
+
         let input = Self::parse_input(&doc)?;
         let jobs = Self::parse_jobs(&doc)?;
         Ok(Self {
@@ -107,6 +116,7 @@ impl RunConfig {
                 backend,
                 artifact_dir,
                 chunk_policy: None,
+                halo_mode,
             },
             input,
             jobs,
@@ -258,6 +268,7 @@ mod tests {
             r#"
             workers = 2
             fused = false
+            halo_mode = "exchange"
             [input]
             kind = "image"
             dims = [16, 16]
@@ -272,6 +283,7 @@ mod tests {
         )
         .unwrap();
         assert!(!cfg.fused);
+        assert_eq!(cfg.options.halo_mode, HaloMode::Exchange);
         assert!(matches!(cfg.jobs[0].kind, FilterKind::Rank(_)));
         assert!(matches!(cfg.jobs[1].kind, FilterKind::LocalMoment(_)));
         // the plan lowering records both stages lazily
@@ -303,6 +315,7 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.jobs.len(), 1);
         assert_eq!(cfg.options.workers, 1); // default
+        assert_eq!(cfg.options.halo_mode, HaloMode::Recompute); // default
     }
 
     #[test]
@@ -340,6 +353,11 @@ mod tests {
         .is_err());
         // missing jobs
         assert!(RunConfig::parse("[input]\nkind = \"mask\"\ndims = [8, 8]").is_err());
+        // unknown halo mode
+        assert!(RunConfig::parse(
+            "halo_mode = \"telepathy\"\n[input]\nkind = \"mask\"\ndims = [8, 8]\n[job]\nkind = \"median\"\nwindow = [3, 3]"
+        )
+        .is_err());
         // even window caught at parse time
         assert!(RunConfig::parse(
             "[input]\nkind = \"mask\"\ndims = [8, 8]\n[job]\nkind = \"curvature\"\nwindow = [4, 4]"

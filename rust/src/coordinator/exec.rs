@@ -13,25 +13,41 @@
 //! legacy `run_pipeline` executed serially on the leader.
 //!
 //! Halo accounting: stage `k`'s gathers reach at most
-//! `flat_halo(grid, op_k)` rows from each output row, so a chunk `[s, e)`
-//! needs stage `k`'s output on `[s − B_k, e + B_k)` (clamped), where
-//! `B_k = Σ_{j>k} flat_halo(op_j)` is the *downstream* halo budget. Rows in
-//! the overlap are computed by more than one worker — a few halo rows per
-//! chunk, traded for the removal of the global barrier and the intermediate
-//! tensors. Bit-for-bit equality with the legacy path holds because every
-//! gather copies the same values through the same boundary mapping and
-//! every kernel is row-deterministic (§2.4 row independence).
+//! `flat_halo(grid, op_k)` rows from each output row. Fused groups handle
+//! the rows a chunk needs beyond its own interior in one of two ways,
+//! selected by [`ExecOptions::halo_mode`]:
+//!
+//! * [`HaloMode::Recompute`] — chunk `[s, e)` runs every stage over
+//!   `[s − B_k, e + B_k)` (clamped), where `B_k = Σ_{j>k} flat_halo(op_j)`
+//!   is the *downstream* halo budget. Rows in the overlap are computed by
+//!   more than one worker — duplicated kernel work, zero synchronization,
+//!   any chunk count (so work stealing stays fully general).
+//! * [`HaloMode::Exchange`] — every chunk computes each stage over its
+//!   interior only and trades boundary rows with its neighbours through a
+//!   [`HaloBoard`](crate::coordinator::halo::HaloBoard): after stage `k` it
+//!   publishes its first/last `flat_halo(op_{k+1})` rows and fetches the
+//!   rows it needs from neighbouring chunks before stage `k + 1`. Zero
+//!   duplicated kernel work ([`RunMetrics::halo_recomputed_rows`] is
+//!   exactly 0), at the cost of a brief neighbour wait per stage; requires
+//!   chunk count ≤ worker count (see `coordinator::halo` for the liveness
+//!   argument).
+//!
+//! Bit-for-bit equality with the legacy path holds in both modes because
+//! every gather copies the same values through the same boundary mapping
+//! and every kernel is row-deterministic (§2.4 row independence) — an
+//! exchanged row is the identical value its owner computed for itself.
 
 use std::ops::Range;
 use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::aggregator::{assemble, merged_moments};
+use crate::coordinator::halo::{HaloBoard, HaloMode, HaloStats};
 use crate::coordinator::job::Backend;
 use crate::coordinator::kernel::RowKernel;
 use crate::coordinator::metrics::{PlanMetrics, RunMetrics};
 use crate::coordinator::pipeline::ExecOptions;
-use crate::coordinator::plan::Stage;
+use crate::coordinator::plan::{fused_partition, Stage};
 use crate::coordinator::scheduler::{ResultBoard, WorkQueue};
 use crate::coordinator::worker::{JobResources, WorkerContext};
 use crate::error::{Error, Result};
@@ -197,6 +213,7 @@ pub(crate) fn run_single_stage(
             melts: 1,
             folds: 1,
             stages: 1,
+            ..Default::default()
         },
         moments,
     ))
@@ -255,99 +272,91 @@ pub(crate) fn run_fused_group(
         budget[k] = budget[k + 1] + halos[k + 1];
     }
 
-    // halo rows are recomputed per chunk, so the default fused partition
-    // targets chunks of >= ~8x the total halo budget to keep duplicated
-    // work a small fraction. The target is best-effort: the part count is
-    // floored at the worker count (idle workers cost more wall-clock than
-    // halo recompute) and capped at 4 parts/worker for load balancing, so
-    // small inputs trade some redundant kernel work for full utilization.
-    let partition = match opts.chunk_policy {
-        Some(p) => p.partition(rows, opts.workers)?,
-        None => {
-            let max_parts = 4 * opts.workers;
-            let halo_budget = budget[0].max(1);
-            let parts = (rows / (8 * halo_budget)).clamp(opts.workers, max_parts);
-            crate::melt::partition::RowPartition::even(rows, parts)?
-        }
-    };
+    // partition per halo mode: recompute may over-partition for stealing,
+    // exchange keeps one chunk per worker (see plan::fused_partition)
+    let partition =
+        fused_partition(rows, opts.workers, budget[0], opts.halo_mode, opts.chunk_policy)?;
     partition.validate()?;
     let queue = WorkQueue::new(&partition);
     let board = ResultBoard::new(queue.num_chunks());
+    // exchange mode: board geometry mirrors the queue's chunk ranges, one
+    // publish-once cell per (inter-stage halo, chunk) — an n-stage group
+    // exchanges across its n − 1 stage transitions
+    let halo_board = match opts.halo_mode {
+        HaloMode::Exchange => Some(HaloBoard::new(queue.ranges(), n - 1)?),
+        HaloMode::Recompute => None,
+    };
     let mut chunk_counts = vec![0usize; opts.workers];
     let barrier = Barrier::new(opts.workers + 1);
 
+    let shared = FusedShared {
+        m: &m,
+        stages,
+        kernels: &kernels,
+        ops: &ops,
+        colsv: &colsv,
+        budget: &budget,
+        halos: &halos,
+        grid_shape: &grid_shape,
+        rows,
+        queue: &queue,
+        board: &board,
+        halo: halo_board.as_ref(),
+    };
+
     let mut setup = t_setup.elapsed();
     let mut compute = Duration::ZERO;
+    let mut halo_stats = HaloStats::default();
 
     std::thread::scope(|s| -> Result<()> {
         let mut handles = Vec::with_capacity(opts.workers);
         for _ in 0..opts.workers {
-            let m = &m;
-            let queue = &queue;
-            let board = &board;
+            let shared = &shared;
             let barrier = &barrier;
-            let kernels = &kernels;
-            let colsv = &colsv;
-            let budget = &budget;
-            let ops = &ops;
-            let grid_shape = &grid_shape;
-            handles.push(s.spawn(move || -> Result<(usize, Instant, Instant)> {
+            handles.push(s.spawn(move || -> Result<(usize, Instant, Instant, HaloStats)> {
                 barrier.wait();
                 let t0 = Instant::now();
-                let mut done = 0usize;
-                // reusable per-worker scratch: current/next value slabs and
-                // the local re-melt band
-                let mut vals: Vec<f32> = Vec::new();
-                let mut next_vals: Vec<f32> = Vec::new();
-                let mut band: Vec<f32> = Vec::new();
-                while let Some((id, range)) = queue.pop() {
-                    // stage 0 over the halo-extended range, straight off
-                    // the global melt matrix
-                    let ext0 = extend(&range, budget[0], rows);
-                    let block = m.row_block(ext0.start, ext0.end)?;
-                    vals.clear();
-                    vals.resize(ext0.len(), 0.0);
-                    kernels[0].execute(block, ext0.len(), colsv[0], &mut vals)?;
-                    let mut prev_range = ext0;
-                    // remaining stages: local band re-melt from the
-                    // previous slab, then the kernel — all chunk-resident
-                    for k in 1..kernels.len() {
-                        let ext = extend(&range, budget[k], rows);
-                        band.clear();
-                        band.resize(ext.len() * colsv[k], 0.0);
-                        melt_band_into(
-                            &vals,
-                            prev_range.start,
-                            grid_shape,
-                            &ops[k],
-                            stages[k].boundary(),
-                            ext.clone(),
-                            &mut band,
-                        )?;
-                        next_vals.clear();
-                        next_vals.resize(ext.len(), 0.0);
-                        kernels[k].execute(&band, ext.len(), colsv[k], &mut next_vals)?;
-                        std::mem::swap(&mut vals, &mut next_vals);
-                        prev_range = ext;
+                // a failing worker — Err *or* panic — poisons the exchange
+                // board so blocked neighbours error out instead of stalling
+                // until the watchdog; the guard covers the unwind path
+                let guard = PoisonOnPanic(shared.halo);
+                let result = fused_worker(shared);
+                std::mem::forget(guard);
+                if result.is_err() {
+                    if let Some(hb) = shared.halo {
+                        hb.poison();
                     }
-                    debug_assert_eq!(prev_range, range);
-                    board.put(id, vals.clone())?;
-                    done += 1;
                 }
-                Ok((done, t0, Instant::now()))
+                let (done, stats) = result?;
+                Ok((done, t0, Instant::now(), stats))
             }));
         }
         barrier.wait();
         setup = t_setup.elapsed();
         let mut first_start: Option<Instant> = None;
         let mut last_end: Option<Instant> = None;
+        // join EVERY worker before failing: in exchange mode most workers
+        // exit with the board's generic "aborted" error, so propagating the
+        // first Err by worker index would mask the root cause — keep the
+        // first error that is NOT the secondary abort message.
+        let mut first_err: Option<Error> = None;
         for (w, h) in handles.into_iter().enumerate() {
-            let (done, t0, t1) = h
-                .join()
-                .map_err(|_| Error::Coordinator(format!("worker {w} panicked")))??;
-            chunk_counts[w] = done;
-            first_start = Some(first_start.map_or(t0, |f| f.min(t0)));
-            last_end = Some(last_end.map_or(t1, |l| l.max(t1)));
+            match h.join() {
+                Err(_) => keep_root_cause(
+                    Error::Coordinator(format!("worker {w} panicked")),
+                    &mut first_err,
+                ),
+                Ok(Err(e)) => keep_root_cause(e, &mut first_err),
+                Ok(Ok((done, t0, t1, stats))) => {
+                    chunk_counts[w] = done;
+                    halo_stats.add(&stats);
+                    first_start = Some(first_start.map_or(t0, |f| f.min(t0)));
+                    last_end = Some(last_end.map_or(t1, |l| l.max(t1)));
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
         }
         compute = match (first_start, last_end) {
             (Some(a), Some(b)) => b.duration_since(a),
@@ -374,9 +383,208 @@ pub(crate) fn run_fused_group(
             melts: 1,
             folds: 1,
             stages: n,
+            halo_published_rows: halo_stats.published,
+            halo_received_rows: halo_stats.received,
+            halo_recomputed_rows: halo_stats.recomputed,
         },
         moments,
     ))
+}
+
+/// Whether `e` is the halo board's *secondary* abort error — the one a
+/// waiter returns because some OTHER worker failed first.
+fn is_secondary_abort(e: &Error) -> bool {
+    matches!(e, Error::Coordinator(m) if m == crate::coordinator::halo::ABORTED_MSG)
+}
+
+/// Record a worker error, preferring a root cause over the secondary
+/// "another worker failed" abort that poisoned neighbours report.
+fn keep_root_cause(e: Error, slot: &mut Option<Error>) {
+    match slot {
+        None => *slot = Some(e),
+        Some(prev) if is_secondary_abort(prev) && !is_secondary_abort(&e) => *slot = Some(e),
+        _ => {}
+    }
+}
+
+/// Poisons the halo board if dropped during a panic unwind, so neighbours
+/// blocked on this worker's publishes fail fast instead of waiting out the
+/// board's watchdog. Forgotten on the normal exit path (`Err` poisoning is
+/// handled explicitly so the error itself is preserved).
+struct PoisonOnPanic<'a>(Option<&'a HaloBoard>);
+
+impl Drop for PoisonOnPanic<'_> {
+    fn drop(&mut self) {
+        if let Some(hb) = self.0 {
+            hb.poison();
+        }
+    }
+}
+
+/// Leader-owned state shared (by reference) with every fused worker.
+struct FusedShared<'a> {
+    m: &'a MeltMatrix,
+    stages: &'a [Stage],
+    kernels: &'a [Arc<dyn RowKernel>],
+    ops: &'a [Operator],
+    colsv: &'a [usize],
+    /// Downstream halo budgets `B_k` (recompute mode).
+    budget: &'a [usize],
+    /// Per-stage halos `flat_halo(op_k)` (exchange mode).
+    halos: &'a [usize],
+    grid_shape: &'a [usize],
+    rows: usize,
+    queue: &'a WorkQueue,
+    board: &'a ResultBoard,
+    halo: Option<&'a HaloBoard>,
+}
+
+/// One fused worker's lifetime: pop chunks until the queue drains, pushing
+/// each through every member stage chunk-resident, in the selected halo
+/// mode. Scratch slabs are reused across chunks; the finished value slab is
+/// moved (not cloned) onto the result board.
+fn fused_worker(sh: &FusedShared<'_>) -> Result<(usize, HaloStats)> {
+    let mut done = 0usize;
+    let mut stats = HaloStats::default();
+    // reusable per-worker scratch: current/next value slabs, the local
+    // re-melt band, and (exchange) the halo-extended gather slab
+    let mut vals: Vec<f32> = Vec::new();
+    let mut next_vals: Vec<f32> = Vec::new();
+    let mut band: Vec<f32> = Vec::new();
+    let mut slab: Vec<f32> = Vec::new();
+    while let Some((id, range)) = sh.queue.pop() {
+        match sh.halo {
+            None => recompute_chunk(sh, &range, &mut vals, &mut next_vals, &mut band, &mut stats)?,
+            Some(hb) => exchange_chunk(
+                sh, hb, id, &range, &mut vals, &mut next_vals, &mut band, &mut slab, &mut stats,
+            )?,
+        }
+        debug_assert_eq!(vals.len(), range.len());
+        // move the slab out; the next iteration clear()/resize()s it anyway
+        sh.board.put(id, std::mem::take(&mut vals))?;
+        done += 1;
+    }
+    Ok((done, stats))
+}
+
+/// Recompute-mode chunk: every stage runs over the chunk extended by its
+/// downstream halo budget, so all gathers resolve locally.
+fn recompute_chunk(
+    sh: &FusedShared<'_>,
+    range: &Range<usize>,
+    vals: &mut Vec<f32>,
+    next_vals: &mut Vec<f32>,
+    band: &mut Vec<f32>,
+    stats: &mut HaloStats,
+) -> Result<()> {
+    // stage 0 over the halo-extended range, straight off the global melt
+    // matrix
+    let ext0 = extend(range, sh.budget[0], sh.rows);
+    let block = sh.m.row_block(ext0.start, ext0.end)?;
+    vals.clear();
+    vals.resize(ext0.len(), 0.0);
+    sh.kernels[0].execute(block, ext0.len(), sh.colsv[0], &mut vals[..])?;
+    stats.recomputed += ext0.len() - range.len();
+    let mut prev_range = ext0;
+    // remaining stages: local band re-melt from the previous slab, then
+    // the kernel — all chunk-resident
+    for k in 1..sh.kernels.len() {
+        let ext = extend(range, sh.budget[k], sh.rows);
+        band.clear();
+        band.resize(ext.len() * sh.colsv[k], 0.0);
+        melt_band_into(
+            &vals[..],
+            prev_range.start,
+            sh.grid_shape,
+            &sh.ops[k],
+            sh.stages[k].boundary(),
+            ext.clone(),
+            &mut band[..],
+        )?;
+        next_vals.clear();
+        next_vals.resize(ext.len(), 0.0);
+        sh.kernels[k].execute(&band[..], ext.len(), sh.colsv[k], &mut next_vals[..])?;
+        std::mem::swap(vals, next_vals);
+        stats.recomputed += ext.len() - range.len();
+        prev_range = ext;
+    }
+    debug_assert_eq!(&prev_range, range);
+    Ok(())
+}
+
+/// Exchange-mode chunk: every stage runs over the chunk interior only;
+/// boundary rows are published to / fetched from the halo board between
+/// stages, so no kernel work is ever duplicated.
+#[allow(clippy::too_many_arguments)]
+fn exchange_chunk(
+    sh: &FusedShared<'_>,
+    hb: &HaloBoard,
+    id: usize,
+    range: &Range<usize>,
+    vals: &mut Vec<f32>,
+    next_vals: &mut Vec<f32>,
+    band: &mut Vec<f32>,
+    slab: &mut Vec<f32>,
+    stats: &mut HaloStats,
+) -> Result<()> {
+    let n = sh.kernels.len();
+    let (s, e) = (range.start, range.end);
+    let len = range.len();
+    // a single chunk has no neighbours to trade with
+    let trading = hb.num_chunks() > 1;
+
+    // stage 0: interior only, straight off the global melt matrix
+    let block = sh.m.row_block(s, e)?;
+    vals.clear();
+    vals.resize(len, 0.0);
+    sh.kernels[0].execute(block, len, sh.colsv[0], &mut vals[..])?;
+    if trading {
+        stats.published += hb.publish(0, id, sh.halos[1], &vals[..])?;
+    }
+
+    for k in 1..n {
+        let h = sh.halos[k];
+        let lo = s.saturating_sub(h);
+        let hi = (e + h).min(sh.rows);
+        // gather source: the interior slab itself when no neighbour rows
+        // are needed (single chunk, zero halo, or an edge-covering chunk);
+        // otherwise a scratch slab assembled from the interior plus the
+        // neighbour rows fetched off the board
+        let (gathered, src_start): (&[f32], usize) = if lo == s && hi == e {
+            (&vals[..], s)
+        } else {
+            slab.clear();
+            slab.resize(hi - lo, 0.0);
+            slab[s - lo..s - lo + len].copy_from_slice(&vals[..]);
+            if lo < s {
+                stats.received += hb.fetch_into(k - 1, lo..s, &mut slab[..s - lo])?;
+            }
+            if e < hi {
+                stats.received += hb.fetch_into(k - 1, e..hi, &mut slab[s - lo + len..])?;
+            }
+            (&slab[..], lo)
+        };
+
+        band.clear();
+        band.resize(len * sh.colsv[k], 0.0);
+        melt_band_into(
+            gathered,
+            src_start,
+            sh.grid_shape,
+            &sh.ops[k],
+            sh.stages[k].boundary(),
+            s..e,
+            &mut band[..],
+        )?;
+        next_vals.clear();
+        next_vals.resize(len, 0.0);
+        sh.kernels[k].execute(&band[..], len, sh.colsv[k], &mut next_vals[..])?;
+        std::mem::swap(vals, next_vals);
+        if trading && k + 1 < n {
+            stats.published += hb.publish(k, id, sh.halos[k + 1], &vals[..])?;
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -407,6 +615,44 @@ mod tests {
         assert_eq!(m.folds, 1);
         assert_eq!(m.stages, 3);
         assert_eq!(m.chunks_per_worker.len(), 3);
+    }
+
+    #[test]
+    fn exchange_mode_matches_recompute_with_zero_redo() {
+        let x = Tensor::random(&[12, 13], 0.0, 255.0, 33).unwrap();
+        let jobs = vec![
+            Job::gaussian(&[3, 3], 1.0),
+            Job::curvature(&[3, 3]),
+            Job::median(&[3, 3]),
+        ];
+        let stages = stages_of(&jobs);
+        let recompute = ExecOptions::native(3);
+        let exchange = ExecOptions::native(3).with_halo_mode(HaloMode::Exchange);
+        let (base, rm, _) = run_fused_group(&x, &stages, &recompute, false).unwrap();
+        let (out, xm, _) = run_fused_group(&x, &stages, &exchange, false).unwrap();
+        assert_allclose(out.data(), base.data(), 0.0, 0.0);
+        // recompute duplicates halo work and never touches the board …
+        assert!(rm.halo_recomputed_rows > 0);
+        assert_eq!(rm.halo_published_rows + rm.halo_received_rows, 0);
+        // … exchange trades rows and recomputes exactly none
+        assert_eq!(xm.halo_recomputed_rows, 0);
+        assert!(xm.halo_published_rows > 0);
+        assert!(xm.halo_received_rows > 0);
+        // a single worker has a single chunk: nothing to trade, still exact
+        let solo = ExecOptions::native(1).with_halo_mode(HaloMode::Exchange);
+        let (out1, m1, _) = run_fused_group(&x, &stages, &solo, false).unwrap();
+        assert_allclose(out1.data(), base.data(), 0.0, 0.0);
+        assert_eq!(m1.halo_published_rows + m1.halo_received_rows + m1.halo_recomputed_rows, 0);
+    }
+
+    #[test]
+    fn exchange_mode_rejects_oversubscribed_partitions() {
+        let x = Tensor::random(&[10, 10], 0.0, 1.0, 2).unwrap();
+        let jobs = vec![Job::gaussian(&[3, 3], 1.0), Job::curvature(&[3, 3])];
+        let mut opts = ExecOptions::native(2).with_halo_mode(HaloMode::Exchange);
+        opts.chunk_policy = Some(crate::coordinator::plan::ChunkPolicy::Fixed { chunk_rows: 10 });
+        let err = run_fused_group(&x, &stages_of(&jobs), &opts, false).unwrap_err();
+        assert!(err.to_string().contains("claimed concurrently"), "{err}");
     }
 
     #[test]

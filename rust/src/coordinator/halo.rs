@@ -1,0 +1,421 @@
+//! Cross-chunk halo exchange for the fused chunk-resident executor.
+//!
+//! The recompute scheme (PR 1) buys chunk residency by extending every
+//! chunk `[s, e)` to `[s − B_k, e + B_k)` at stage `k`: the halo rows are
+//! *recomputed* in both neighbouring chunks, and the duplicated kernel work
+//! grows with worker count and stage depth. This module implements the
+//! alternative named in ROADMAP: after computing stage `k` over its chunk
+//! *interior only*, a worker **publishes** the boundary rows its neighbours
+//! will gather at stage `k + 1` on a shared [`HaloBoard`], and **fetches**
+//! the few rows it needs from them — paying a brief neighbour
+//! synchronization instead of redundant compute.
+//!
+//! Liveness: a waiting chunk can only be unblocked by the worker that owns
+//! the chunk it waits on, so every chunk must be claimed concurrently. The
+//! executor therefore partitions a fused group into **at most `workers`
+//! chunks** in exchange mode (one per worker by default) and rejects
+//! coarser-grained custom policies. Within that constraint the dependency
+//! graph is the neighbour chain of the partition: no chunk can complete
+//! stage `k + 1` before its neighbours publish stage `k`, all chunks are
+//! claimed by distinct workers before any can complete, and each wait is
+//! satisfiable — so the fleet makes progress without a global barrier.
+//!
+//! Correctness: published rows are the very values the neighbour computed
+//! for its own interior, and every kernel is row-deterministic (§2.4), so
+//! exchange mode is bit-for-bit identical to both the recompute path and
+//! the legacy per-stage pipeline (property-tested in
+//! `tests/integration_halo.rs`).
+//!
+//! Coverage argument for the two published segments: a chunk `[s, e)` only
+//! ever needs stage-`k` rows within `h = flat_halo(op_{k+1})` of its own
+//! boundary, and for any other chunk `[s', e')` with `e' ≤ s` those rows
+//! satisfy `r ≥ s − h ≥ e' − h` — within `h` of that chunk's *high* end
+//! (symmetrically for chunks above). So publishing the first and last
+//! `h` interior rows of every chunk covers all cross-chunk gathers, even
+//! when chunks are narrower than the halo and a gather spans several of
+//! them.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+
+/// How the fused executor obtains the halo rows that stage `k + 1` gathers
+/// across chunk boundaries.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum HaloMode {
+    /// Each chunk recomputes its neighbours' boundary rows locally
+    /// (duplicated kernel work, no synchronization; any chunk count).
+    #[default]
+    Recompute,
+    /// Neighbouring chunks exchange computed boundary rows through a
+    /// [`HaloBoard`] (zero duplicated kernel work; requires chunk count
+    /// ≤ worker count so every chunk progresses concurrently).
+    Exchange,
+}
+
+impl HaloMode {
+    /// Parse a config / CLI spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "recompute" => Ok(HaloMode::Recompute),
+            "exchange" => Ok(HaloMode::Exchange),
+            other => Err(Error::Config(format!(
+                "unknown halo mode '{other}' (recompute|exchange)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for HaloMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            HaloMode::Recompute => "recompute",
+            HaloMode::Exchange => "exchange",
+        })
+    }
+}
+
+/// Per-worker halo accounting, summed into
+/// [`RunMetrics`](crate::coordinator::metrics::RunMetrics) by the leader.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct HaloStats {
+    /// Boundary rows published to the board (exchange mode).
+    pub published: usize,
+    /// Neighbour rows copied off the board (exchange mode).
+    pub received: usize,
+    /// Halo rows recomputed locally (recompute mode).
+    pub recomputed: usize,
+}
+
+impl HaloStats {
+    pub fn add(&mut self, other: &HaloStats) {
+        self.published += other.published;
+        self.received += other.received;
+        self.recomputed += other.recomputed;
+    }
+}
+
+/// The boundary rows one chunk published for one stage: its first and last
+/// `halo` interior rows (overlapping when the chunk is narrow).
+struct Published {
+    lo_start: usize,
+    lo: Vec<f32>,
+    hi_start: usize,
+    hi: Vec<f32>,
+}
+
+impl Published {
+    fn row(&self, r: usize) -> Option<f32> {
+        if r >= self.lo_start && r < self.lo_start + self.lo.len() {
+            Some(self.lo[r - self.lo_start])
+        } else if r >= self.hi_start && r < self.hi_start + self.hi.len() {
+            Some(self.hi[r - self.hi_start])
+        } else {
+            None
+        }
+    }
+}
+
+struct Cell {
+    slot: Mutex<Option<Published>>,
+    ready: Condvar,
+}
+
+/// The *secondary* error a waiter returns after another worker poisoned
+/// the board. The executor's join loop recognises this exact message and
+/// prefers the root-cause error from the worker that actually failed.
+pub(crate) const ABORTED_MSG: &str = "halo exchange aborted: another worker failed";
+
+/// Granularity of the poison/deadline re-check while waiting on a cell.
+const WAIT_SLICE: Duration = Duration::from_millis(100);
+/// Backstop cap on any single cell wait — converts a genuine scheduling
+/// bug into an error instead of a hung fleet. Deliberately generous: the
+/// wait clock overlaps the neighbour's *legitimate* compute time for one
+/// stage over one chunk, and failing workers are handled promptly by
+/// poisoning (on error or panic), not by this deadline.
+const WAIT_DEADLINE: Duration = Duration::from_secs(600);
+
+/// The exchange board: one publish-once cell per (stage, chunk), holding
+/// the chunk's boundary rows for that stage. Readers block (bounded) until
+/// the owning chunk publishes; a failing worker poisons the board so the
+/// whole fleet errors out instead of deadlocking.
+pub(crate) struct HaloBoard {
+    ranges: Vec<Range<usize>>,
+    cells: Vec<Cell>,
+    poisoned: AtomicBool,
+}
+
+impl HaloBoard {
+    /// Build a board over the partition's chunk interiors for `stages`
+    /// *exchanged* stages — an n-stage fused group trades rows across its
+    /// n − 1 stage transitions, so it passes `n - 1`. The ranges must be
+    /// ascending and contiguous (every partition the chunk policies emit
+    /// is).
+    pub fn new(ranges: &[Range<usize>], stages: usize) -> Result<Self> {
+        let mut cursor = None;
+        for r in ranges {
+            if r.is_empty() || cursor.is_some_and(|c| c != r.start) {
+                return Err(Error::Coordinator(format!(
+                    "halo board needs ascending contiguous chunks, got {ranges:?}"
+                )));
+            }
+            cursor = Some(r.end);
+        }
+        let cells = (0..stages * ranges.len())
+            .map(|_| Cell {
+                slot: Mutex::new(None),
+                ready: Condvar::new(),
+            })
+            .collect();
+        Ok(Self {
+            ranges: ranges.to_vec(),
+            cells,
+            poisoned: AtomicBool::new(false),
+        })
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.ranges.len()
+    }
+
+    fn cell(&self, stage: usize, chunk: usize) -> &Cell {
+        &self.cells[stage * self.ranges.len() + chunk]
+    }
+
+    /// Publish chunk `chunk`'s stage-`stage` boundary values out of its
+    /// interior slab `vals` (one value per interior row): the first and
+    /// last `halo` rows, clamped to the chunk — except that the first
+    /// chunk skips its low segment and the last its high segment (no
+    /// neighbour exists on that side to fetch them). Returns the number of
+    /// distinct rows published. Each cell accepts exactly one publish.
+    pub fn publish(&self, stage: usize, chunk: usize, halo: usize, vals: &[f32]) -> Result<usize> {
+        let r = self
+            .ranges
+            .get(chunk)
+            .ok_or_else(|| Error::Coordinator(format!("halo publish: no chunk {chunk}")))?
+            .clone();
+        if vals.len() != r.len() {
+            return Err(Error::shape(format!(
+                "halo publish: {} values for chunk {chunk} of {} rows",
+                vals.len(),
+                r.len()
+            )));
+        }
+        let cap = halo.min(r.len());
+        let k_lo = if chunk == 0 { 0 } else { cap };
+        let k_hi = if chunk + 1 == self.ranges.len() { 0 } else { cap };
+        let published = Published {
+            lo_start: r.start,
+            lo: vals[..k_lo].to_vec(),
+            hi_start: r.end - k_hi,
+            hi: vals[r.len() - k_hi..].to_vec(),
+        };
+        let cell = self.cell(stage, chunk);
+        let mut slot = cell
+            .slot
+            .lock()
+            .map_err(|_| Error::Coordinator("halo board poisoned by a worker panic".into()))?;
+        if slot.is_some() {
+            return Err(Error::Coordinator(format!(
+                "halo cell (stage {stage}, chunk {chunk}) published twice"
+            )));
+        }
+        *slot = Some(published);
+        cell.ready.notify_all();
+        Ok((k_lo + k_hi).min(r.len()))
+    }
+
+    /// Copy the stage-`stage` values of absolute rows `rows` into `dst`,
+    /// blocking until every owning chunk has published. The rows must lie
+    /// outside the caller's own chunk and within each owner's published
+    /// boundary segments. Returns the number of rows copied.
+    pub fn fetch_into(&self, stage: usize, rows: Range<usize>, dst: &mut [f32]) -> Result<usize> {
+        if dst.len() != rows.len() {
+            return Err(Error::shape(format!(
+                "halo fetch: buffer {} for {} rows",
+                dst.len(),
+                rows.len()
+            )));
+        }
+        let total = self.ranges.last().map_or(0, |r| r.end);
+        if rows.start >= rows.end || rows.end > total {
+            return Err(Error::Coordinator(format!(
+                "halo fetch: rows {rows:?} outside 0..{total}"
+            )));
+        }
+        let mut chunk = self.ranges.partition_point(|r| r.end <= rows.start);
+        let mut row = rows.start;
+        while row < rows.end {
+            let r = self.ranges[chunk].clone();
+            let upto = rows.end.min(r.end);
+            let slot = self.wait(stage, chunk)?;
+            let published = slot.as_ref().expect("wait returns a published cell");
+            for rr in row..upto {
+                dst[rr - rows.start] = published.row(rr).ok_or_else(|| {
+                    Error::Coordinator(format!(
+                        "halo row {rr} of chunk {chunk} (stage {stage}) was not published — \
+                         halo sizing bug"
+                    ))
+                })?;
+            }
+            row = upto;
+            chunk += 1;
+        }
+        Ok(rows.len())
+    }
+
+    fn wait(&self, stage: usize, chunk: usize) -> Result<MutexGuard<'_, Option<Published>>> {
+        let cell = self.cell(stage, chunk);
+        let start = Instant::now();
+        let mut slot = cell
+            .slot
+            .lock()
+            .map_err(|_| Error::Coordinator("halo board poisoned by a worker panic".into()))?;
+        while slot.is_none() {
+            if self.poisoned.load(Ordering::Acquire) {
+                return Err(Error::Coordinator(ABORTED_MSG.into()));
+            }
+            if start.elapsed() > WAIT_DEADLINE {
+                return Err(Error::Coordinator(format!(
+                    "halo wait for (stage {stage}, chunk {chunk}) exceeded {WAIT_DEADLINE:?} — \
+                     neighbour stalled or scheduling bug"
+                )));
+            }
+            let (next, _) = cell
+                .ready
+                .wait_timeout(slot, WAIT_SLICE)
+                .map_err(|_| Error::Coordinator("halo board poisoned by a worker panic".into()))?;
+            slot = next;
+        }
+        Ok(slot)
+    }
+
+    /// Mark the board failed and wake every waiter: called by a worker on
+    /// its way out with an error so blocked neighbours error out too.
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::Release);
+        for cell in &self.cells {
+            // taking the lock orders the store before any waiter re-checks
+            let _guard = cell.slot.lock();
+            cell.ready.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ranges(bounds: &[usize]) -> Vec<Range<usize>> {
+        bounds.windows(2).map(|w| w[0]..w[1]).collect()
+    }
+
+    #[test]
+    fn halo_mode_parses_and_displays() {
+        assert_eq!(HaloMode::parse("recompute").unwrap(), HaloMode::Recompute);
+        assert_eq!(HaloMode::parse("exchange").unwrap(), HaloMode::Exchange);
+        assert!(HaloMode::parse("psychic").is_err());
+        assert_eq!(HaloMode::Exchange.to_string(), "exchange");
+        assert_eq!(HaloMode::default(), HaloMode::Recompute);
+    }
+
+    #[test]
+    fn publish_then_fetch_round_trips() {
+        let b = HaloBoard::new(&ranges(&[0, 4, 8, 12]), 1).unwrap();
+        // chunk i rows hold 10+row; edge chunks publish only the segment a
+        // neighbour exists to read (2 rows), the middle chunk both (4)
+        assert_eq!(b.publish(0, 0, 2, &[10.0, 11.0, 12.0, 13.0]).unwrap(), 2);
+        assert_eq!(b.publish(0, 1, 2, &[14.0, 15.0, 16.0, 17.0]).unwrap(), 4);
+        assert_eq!(b.publish(0, 2, 2, &[18.0, 19.0, 20.0, 21.0]).unwrap(), 2);
+        // chunk 1 fetches its low halo from chunk 0's high segment
+        let mut dst = vec![0.0f32; 2];
+        assert_eq!(b.fetch_into(0, 2..4, &mut dst).unwrap(), 2);
+        assert_eq!(dst, vec![12.0, 13.0]);
+        // chunk 0 fetches its high halo from chunk 1's low segment
+        assert_eq!(b.fetch_into(0, 4..6, &mut dst).unwrap(), 2);
+        assert_eq!(dst, vec![14.0, 15.0]);
+        // chunk 2 reads chunk 1's high segment, chunk 1 reads chunk 2's low
+        assert_eq!(b.fetch_into(0, 6..8, &mut dst).unwrap(), 2);
+        assert_eq!(dst, vec![16.0, 17.0]);
+        assert_eq!(b.fetch_into(0, 8..10, &mut dst).unwrap(), 2);
+        assert_eq!(dst, vec![18.0, 19.0]);
+    }
+
+    #[test]
+    fn fetch_spans_multiple_narrow_chunks() {
+        // chunks of 1–2 rows, halo wider than any chunk: a fetch walks
+        // several owners, each fully covered by its own segments
+        let b = HaloBoard::new(&ranges(&[0, 1, 3, 4, 6]), 1).unwrap();
+        b.publish(0, 0, 5, &[0.0]).unwrap();
+        b.publish(0, 1, 5, &[1.0, 2.0]).unwrap();
+        b.publish(0, 2, 5, &[3.0]).unwrap();
+        b.publish(0, 3, 5, &[4.0, 5.0]).unwrap();
+        let mut dst = vec![0.0f32; 4];
+        b.fetch_into(0, 0..4, &mut dst).unwrap();
+        assert_eq!(dst, vec![0.0, 1.0, 2.0, 3.0]);
+        b.fetch_into(0, 2..6, &mut dst).unwrap();
+        assert_eq!(dst, vec![2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn publish_validates() {
+        let b = HaloBoard::new(&ranges(&[0, 4, 8]), 2).unwrap();
+        // wrong slab length
+        assert!(b.publish(0, 0, 1, &[1.0]).is_err());
+        // unknown chunk
+        assert!(b.publish(0, 7, 1, &[1.0; 4]).is_err());
+        // double publish
+        b.publish(1, 0, 1, &[1.0; 4]).unwrap();
+        assert!(b.publish(1, 0, 1, &[1.0; 4]).is_err());
+        // non-contiguous ranges rejected up front
+        assert!(HaloBoard::new(&[0..2, 3..4], 1).is_err());
+        assert!(HaloBoard::new(&[0..0, 0..4], 1).is_err());
+    }
+
+    #[test]
+    fn fetch_rejects_uncovered_rows() {
+        let b = HaloBoard::new(&ranges(&[0, 8, 16]), 1).unwrap();
+        b.publish(0, 0, 1, &[1.0; 8]).unwrap();
+        // row 4 is interior to chunk 0 and outside its halo-1 segments
+        let mut dst = vec![0.0f32; 1];
+        assert!(b.fetch_into(0, 4..5, &mut dst).is_err());
+        // out-of-range rows and wrong buffer sizes error immediately
+        assert!(b.fetch_into(0, 15..17, &mut dst).is_err());
+        assert!(b.fetch_into(0, 0..2, &mut dst).is_err());
+    }
+
+    #[test]
+    fn fetch_blocks_until_publish() {
+        let b = HaloBoard::new(&ranges(&[0, 2, 4]), 1).unwrap();
+        std::thread::scope(|s| {
+            let b = &b;
+            let reader = s.spawn(move || {
+                let mut dst = vec![0.0f32; 2];
+                b.fetch_into(0, 2..4, &mut dst).unwrap();
+                dst
+            });
+            std::thread::sleep(Duration::from_millis(30));
+            b.publish(0, 1, 2, &[8.0, 9.0]).unwrap();
+            assert_eq!(reader.join().unwrap(), vec![8.0, 9.0]);
+        });
+    }
+
+    #[test]
+    fn poison_wakes_blocked_readers() {
+        let b = HaloBoard::new(&ranges(&[0, 2, 4]), 1).unwrap();
+        std::thread::scope(|s| {
+            let b = &b;
+            let reader = s.spawn(move || {
+                let mut dst = vec![0.0f32; 2];
+                b.fetch_into(0, 2..4, &mut dst)
+            });
+            std::thread::sleep(Duration::from_millis(30));
+            b.poison();
+            let err = reader.join().unwrap().unwrap_err();
+            assert!(err.to_string().contains("aborted"), "{err}");
+        });
+    }
+}

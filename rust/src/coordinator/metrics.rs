@@ -31,6 +31,15 @@ pub struct RunMetrics {
     pub folds: usize,
     /// stages executed in this run (fused group size; 1 for a single job).
     pub stages: usize,
+    /// boundary rows published to the halo-exchange board
+    /// ([`HaloMode::Exchange`](crate::coordinator::HaloMode) fused runs).
+    pub halo_published_rows: usize,
+    /// neighbour rows received from the halo-exchange board.
+    pub halo_received_rows: usize,
+    /// halo rows recomputed locally
+    /// ([`HaloMode::Recompute`](crate::coordinator::HaloMode) fused runs;
+    /// exchange runs keep this at exactly 0).
+    pub halo_recomputed_rows: usize,
 }
 
 impl RunMetrics {
@@ -71,7 +80,7 @@ impl RunMetrics {
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "setup {:.2?} | compute {:.2?} | aggregate {:.2?} | {:.2e} rows/s | {} stage(s), {} melt, {} fold | workers {:?}",
             self.setup,
             self.compute,
@@ -81,7 +90,14 @@ impl RunMetrics {
             self.melts,
             self.folds,
             self.chunks_per_worker
-        )
+        );
+        if self.halo_published_rows + self.halo_received_rows + self.halo_recomputed_rows > 0 {
+            s.push_str(&format!(
+                " | halo pub {} recv {} redo {}",
+                self.halo_published_rows, self.halo_received_rows, self.halo_recomputed_rows
+            ));
+        }
+        s
     }
 }
 
@@ -118,6 +134,21 @@ impl PlanMetrics {
         self.groups.iter().map(|g| g.stages).sum()
     }
 
+    /// Total boundary rows published to halo-exchange boards.
+    pub fn halo_published(&self) -> usize {
+        self.groups.iter().map(|g| g.halo_published_rows).sum()
+    }
+
+    /// Total neighbour rows received from halo-exchange boards.
+    pub fn halo_received(&self) -> usize {
+        self.groups.iter().map(|g| g.halo_received_rows).sum()
+    }
+
+    /// Total halo rows recomputed locally (0 for pure exchange-mode plans).
+    pub fn halo_recomputed(&self) -> usize {
+        self.groups.iter().map(|g| g.halo_recomputed_rows).sum()
+    }
+
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
@@ -149,6 +180,7 @@ mod tests {
             melts: 1,
             folds: 1,
             stages: 1,
+            ..Default::default()
         };
         assert_eq!(m.total(), Duration::from_millis(115));
         assert!((m.rows_per_sec() - 10_000.0).abs() < 1.0);
@@ -156,6 +188,14 @@ mod tests {
         assert_eq!(m.imbalance(), 1.0);
         assert!(m.summary().contains("compute"));
         assert!(m.summary().contains("1 melt"));
+        // halo counters stay out of the summary until something happens
+        assert!(!m.summary().contains("halo"));
+        let h = RunMetrics {
+            halo_published_rows: 12,
+            halo_received_rows: 12,
+            ..Default::default()
+        };
+        assert!(h.summary().contains("halo pub 12 recv 12 redo 0"));
     }
 
     #[test]
@@ -186,6 +226,8 @@ mod tests {
             melts: 1,
             folds: 1,
             stages: 3,
+            halo_published_rows: 40,
+            halo_received_rows: 40,
             ..Default::default()
         };
         let g2 = RunMetrics {
@@ -193,6 +235,7 @@ mod tests {
             melts: 1,
             folds: 1,
             stages: 1,
+            halo_recomputed_rows: 9,
             ..Default::default()
         };
         let pm = PlanMetrics {
@@ -202,6 +245,9 @@ mod tests {
         assert_eq!(pm.melts(), 2);
         assert_eq!(pm.folds(), 2);
         assert_eq!(pm.stages(), 4);
+        assert_eq!(pm.halo_published(), 40);
+        assert_eq!(pm.halo_received(), 40);
+        assert_eq!(pm.halo_recomputed(), 9);
         assert_eq!(pm.total(), Duration::from_millis(15));
         assert!(pm.summary().contains("2 group(s)"));
     }

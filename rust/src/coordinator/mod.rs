@@ -10,6 +10,9 @@
 //!            and stream them through ALL member stages while resident:
 //!                stage 1: RowKernel over the global melt block
 //!                stage k: local band re-melt (halo slab) + RowKernel
+//!                halo rows: recomputed locally, or exchanged with the
+//!                neighbouring chunks via the halo board ([`halo`],
+//!                `ExecOptions::halo_mode`)
 //!                Backend::Native → kernels::* broadcast cores
 //!                Backend::Pjrt   → per-thread runtime::Engine (singleton
 //!                                  groups; manifest loaded once, on the
@@ -31,6 +34,7 @@
 
 pub mod aggregator;
 pub mod exec;
+pub mod halo;
 pub mod job;
 pub mod kernel;
 pub mod metrics;
@@ -40,6 +44,7 @@ pub mod scheduler;
 pub mod simulate;
 pub mod worker;
 
+pub use halo::HaloMode;
 pub use job::{Backend, FilterKind, Job};
 pub use kernel::{MomentStat, RowKernel};
 pub use metrics::{PlanMetrics, RunMetrics};

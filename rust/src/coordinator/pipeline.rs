@@ -13,6 +13,7 @@
 use std::path::PathBuf;
 
 use crate::coordinator::exec::run_single_stage;
+use crate::coordinator::halo::HaloMode;
 use crate::coordinator::job::{Backend, Job};
 use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::plan::ChunkPolicy;
@@ -30,6 +31,11 @@ pub struct ExecOptions {
     pub artifact_dir: Option<PathBuf>,
     /// Chunking override; defaults to the backend-appropriate policy.
     pub chunk_policy: Option<ChunkPolicy>,
+    /// How fused groups handle cross-chunk halo rows: recompute them
+    /// locally (default) or exchange them through a
+    /// [`HaloBoard`](crate::coordinator::halo) — see the crate-level "halo
+    /// accounting" docs.
+    pub halo_mode: HaloMode,
 }
 
 impl ExecOptions {
@@ -40,6 +46,7 @@ impl ExecOptions {
             backend: Backend::Native,
             artifact_dir: None,
             chunk_policy: None,
+            halo_mode: HaloMode::Recompute,
         }
     }
 
@@ -50,7 +57,14 @@ impl ExecOptions {
             backend: Backend::Pjrt,
             artifact_dir: Some(dir.into()),
             chunk_policy: None,
+            halo_mode: HaloMode::Recompute,
         }
+    }
+
+    /// Builder-style halo mode override for fused groups.
+    pub fn with_halo_mode(mut self, mode: HaloMode) -> Self {
+        self.halo_mode = mode;
+        self
     }
 
     pub(crate) fn resolve_policy(&self, pjrt_chunk_rows: usize) -> ChunkPolicy {
@@ -68,7 +82,11 @@ impl ExecOptions {
 
 /// Run one job over `x`: melt → partition → parallel execute → aggregate.
 /// Thin shim over the single-stage `Plan` executor.
-pub fn run_job(x: &Tensor<f32>, job: &Job, opts: &ExecOptions) -> Result<(Tensor<f32>, RunMetrics)> {
+pub fn run_job(
+    x: &Tensor<f32>,
+    job: &Job,
+    opts: &ExecOptions,
+) -> Result<(Tensor<f32>, RunMetrics)> {
     if opts.workers == 0 {
         return Err(Error::Coordinator("workers must be >= 1".into()));
     }
@@ -211,6 +229,7 @@ mod tests {
             backend: Backend::Pjrt,
             artifact_dir: None,
             chunk_policy: None,
+            halo_mode: HaloMode::Recompute,
         };
         assert!(run_job(&x, &Job::gaussian(&[3, 3], 1.0), &opts).is_err());
     }

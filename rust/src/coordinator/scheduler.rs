@@ -5,6 +5,12 @@
 //! bilateral's data-dependent exp() count, PJRT padding overhead on the
 //! tail chunk, OS noise). Results land on a mutex-guarded board indexed by
 //! chunk id — one short critical section per completed chunk.
+//!
+//! The fused executor's halo-exchange board
+//! ([`crate::coordinator::halo::HaloBoard`]) is built over
+//! [`WorkQueue::ranges`] so its cell geometry provably matches the chunk
+//! ids this queue dispenses: `pop()` hands out `(id, range)` pairs in index
+//! order, and exchange-mode workers publish/fetch against those same ids.
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -35,6 +41,12 @@ impl WorkQueue {
 
     pub fn num_chunks(&self) -> usize {
         self.ranges.len()
+    }
+
+    /// The chunk ranges, indexed by the ids `pop()` dispenses — the
+    /// geometry the fused executor's halo board is built over.
+    pub fn ranges(&self) -> &[Range<usize>] {
+        &self.ranges
     }
 }
 
@@ -98,6 +110,7 @@ mod tests {
         for (i, (id, r)) in seen.iter().enumerate() {
             assert_eq!(*id, i);
             assert_eq!(*r, p.ranges()[i]);
+            assert_eq!(*r, q.ranges()[*id]);
         }
         assert!(q.pop().is_none());
     }

@@ -11,7 +11,7 @@
 
 use crate::error::{Error, Result};
 use crate::melt::matrix::MeltMatrix;
-use crate::stats::rank::{quantile, select};
+use crate::stats::rank::{median_exact_with, quantile_with};
 
 /// Which order statistic to extract per melt row.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -51,18 +51,17 @@ pub fn rank_filter_into(
             return Err(Error::Operator(format!("quantile {q} outside [0, 1]")));
         }
     }
+    // one scratch buffer per block: each row costs a single copy into it
+    // and a single quickselect pass (select_adjacent_with yields both
+    // order statistics a median/quantile straddles), where the old
+    // per-pixel `select` calls copied and partitioned the window twice
+    let mut scratch: Vec<f32> = Vec::with_capacity(cols);
     for (row, o) in data.chunks_exact(cols).zip(out.iter_mut()) {
         *o = match kind {
             RankKind::Min => row.iter().copied().fold(f32::INFINITY, f32::min),
             RankKind::Max => row.iter().copied().fold(f32::NEG_INFINITY, f32::max),
-            RankKind::Median => {
-                if cols % 2 == 1 {
-                    select(row, cols / 2)
-                } else {
-                    (select(row, cols / 2 - 1) + select(row, cols / 2)) / 2.0
-                }
-            }
-            RankKind::Quantile(q) => quantile(row, q),
+            RankKind::Median => median_exact_with(&mut scratch, row),
+            RankKind::Quantile(q) => quantile_with(&mut scratch, row, q),
         };
     }
     Ok(())

@@ -89,6 +89,47 @@
 //! let out = fold(&apply_kernel_broadcast(&m, &k), m.grid_shape()).unwrap();
 //! assert_eq!(out.shape(), vol.shape());
 //! ```
+//!
+//! ## Halo accounting
+//!
+//! Inside a fused group, stage `k + 1`'s gathers reach at most
+//! `flat_halo(op_{k+1})` flat rows beyond each chunk — rows that belong to
+//! neighbouring chunks. [`ExecOptions::halo_mode`](coordinator::ExecOptions)
+//! selects how they are obtained:
+//!
+//! * [`HaloMode::Recompute`](coordinator::HaloMode) (default) — each chunk
+//!   runs every stage over itself *extended by the downstream halo budget*
+//!   `B_k = Σ_{j>k} flat_halo(op_j)`, so all gathers resolve locally. No
+//!   synchronization, any chunk count (full work stealing), but the
+//!   overlap rows are computed by more than one worker — duplicated kernel
+//!   work that grows with worker count and stage depth.
+//! * [`HaloMode::Exchange`](coordinator::HaloMode) — each chunk computes
+//!   only its interior; after stage `k` it *publishes* its boundary rows
+//!   on a cross-chunk halo board (`coordinator::halo`) and *fetches* the
+//!   few rows it needs from its neighbours before stage `k + 1`. Zero
+//!   duplicated kernel work, at the cost of a brief neighbour wait; the
+//!   chunk count is capped at the worker count so every chunk progresses
+//!   concurrently (the liveness argument lives in `coordinator::halo`).
+//!
+//! Both modes are bit-for-bit identical to each other and to the legacy
+//! per-stage pipeline. [`RunMetrics`](coordinator::RunMetrics) accounts
+//! for the traffic per group — `halo_published_rows`, `halo_received_rows`
+//! and `halo_recomputed_rows` (exactly 0 in exchange mode) — and
+//! [`PlanMetrics`](coordinator::PlanMetrics) totals them per plan. The
+//! knob is also exposed as `halo_mode = "recompute" | "exchange"` in run
+//! configs and `--halo-mode` on `meltframe run`.
+//!
+//! ```
+//! use meltframe::prelude::*;
+//!
+//! let vol = Tensor::<f32>::synthetic_volume(&[12, 12, 12], 3);
+//! let plan = Plan::over(&vol).gaussian(&[3, 3, 3], 1.0).median(&[3, 3, 3]);
+//! let opts = ExecOptions::native(2).with_halo_mode(HaloMode::Exchange);
+//! let (out, metrics) = plan.run(&opts).unwrap();
+//! assert_eq!(out.shape(), vol.shape());
+//! assert_eq!(metrics.halo_recomputed(), 0); // nothing computed twice
+//! assert!(metrics.halo_published() > 0);    // boundary rows were traded
+//! ```
 
 pub mod bench_harness;
 pub mod cli;
@@ -105,8 +146,8 @@ pub mod testing;
 pub mod prelude {
     //! Convenience re-exports of the public API surface.
     pub use crate::coordinator::{
-        run_job, run_pipeline, Backend, ExecOptions, FilterKind, Job, MomentStat, Plan,
-        PlanMetrics, RowKernel, RunMetrics, Stage,
+        run_job, run_pipeline, Backend, ExecOptions, FilterKind, HaloMode, Job, MomentStat,
+        Plan, PlanMetrics, RowKernel, RunMetrics, Stage,
     };
     pub use crate::error::{Error, Result};
     pub use crate::kernels::bilateral::{bilateral_adaptive, bilateral_const, BilateralParams};

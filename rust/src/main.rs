@@ -61,8 +61,12 @@ fn dispatch(cmd: Command) -> Result<()> {
             config,
             out,
             legacy,
+            halo_mode,
         } => {
-            let cfg = RunConfig::load(&config)?;
+            let mut cfg = RunConfig::load(&config)?;
+            if let Some(mode) = halo_mode {
+                cfg.options.halo_mode = mode;
+            }
             let x = cfg.input.load()?;
             let fused = cfg.fused && !legacy;
             println!(
@@ -71,7 +75,11 @@ fn dispatch(cmd: Command) -> Result<()> {
                 cfg.jobs.len(),
                 cfg.options.workers,
                 cfg.options.backend,
-                if fused { "fused plan" } else { "legacy stage-by-stage" }
+                if fused {
+                    format!("fused plan (halo {})", cfg.options.halo_mode)
+                } else {
+                    "legacy stage-by-stage".to_string()
+                }
             );
             let result = if fused {
                 let compiled = cfg.plan(&x)?.compile(cfg.options.backend)?;

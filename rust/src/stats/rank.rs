@@ -12,25 +12,80 @@
 use crate::testing::SplitMix64;
 
 /// Exact median via quickselect (O(n) expected); even counts average the
-/// two central order statistics.
+/// two central order statistics. Allocates a fresh scratch buffer — hot
+/// loops should hold one and call [`median_exact_with`].
 pub fn median_exact(xs: &[f32]) -> f32 {
+    median_exact_with(&mut Vec::with_capacity(xs.len()), xs)
+}
+
+/// [`median_exact`] over a caller-provided scratch buffer: one copy of
+/// `xs` and one quickselect pass total — even counts pull both central
+/// order statistics out of the same pass via [`select_adjacent_with`].
+pub fn median_exact_with(scratch: &mut Vec<f32>, xs: &[f32]) -> f32 {
     assert!(!xs.is_empty(), "median of empty slice");
     let n = xs.len();
     if n % 2 == 1 {
-        select(xs, n / 2)
+        select_with(scratch, xs, n / 2)
     } else {
-        (select(xs, n / 2 - 1) + select(xs, n / 2)) / 2.0
+        let (a, b) = select_adjacent_with(scratch, xs, n / 2 - 1);
+        (a + b) / 2.0
     }
 }
 
 /// k-th smallest (0-based) via quickselect with median-of-three pivoting.
+/// Allocates a fresh scratch buffer — hot loops should hold one and call
+/// [`select_with`].
 pub fn select(xs: &[f32], k: usize) -> f32 {
+    select_with(&mut Vec::with_capacity(xs.len()), xs, k)
+}
+
+/// [`select`] over a caller-provided scratch buffer (cleared and refilled,
+/// so a warm buffer never reallocates).
+pub fn select_with(scratch: &mut Vec<f32>, xs: &[f32], k: usize) -> f32 {
     assert!(k < xs.len());
-    let mut v = xs.to_vec();
+    scratch.clear();
+    scratch.extend_from_slice(xs);
+    partition_to(&mut scratch[..], k).0
+}
+
+/// The `k`-th and `(k + 1)`-th smallest values of `xs` (0-based) from a
+/// **single** quickselect pass over a caller-provided scratch buffer.
+/// For `k == xs.len() - 1` the pair degenerates to the maximum twice.
+///
+/// The partition invariant `v[..lo] ≤ v[lo..hi] ≤ v[hi..]` holds at every
+/// shrink, so once the k-th value is pinned the (k + 1)-th is either the
+/// same pivot (still inside the equal run) or the minimum of the elements
+/// proven ≥ it — no second quickselect, which is what makes the
+/// even-median/interpolated-quantile kernels one-pass per melt row.
+pub fn select_adjacent_with(scratch: &mut Vec<f32>, xs: &[f32], k: usize) -> (f32, f32) {
+    let n = xs.len();
+    assert!(k < n);
+    scratch.clear();
+    scratch.extend_from_slice(xs);
+    let v = &mut scratch[..];
+    let (kth, tail) = partition_to(v, k);
+    if k + 1 >= n {
+        return (kth, kth);
+    }
+    match tail {
+        None => (kth, kth),
+        Some(t) => {
+            debug_assert_eq!(t, k + 1);
+            let next = v[t..].iter().copied().fold(f32::INFINITY, f32::min);
+            (kth, next)
+        }
+    }
+}
+
+/// Quickselect core: partitions `v` in place around the `k`-th smallest
+/// value and returns it, plus the start of the suffix proven ≥ it (`None`
+/// while the `(k + 1)`-th is pinned to the same pivot value). Callers that
+/// only want the k-th value ignore the marker and pay no tail scan.
+fn partition_to(v: &mut [f32], k: usize) -> (f32, Option<usize>) {
     let (mut lo, mut hi) = (0usize, v.len());
     loop {
         if hi - lo <= 1 {
-            return v[lo];
+            break (v[lo], Some(lo + 1));
         }
         // median-of-three pivot
         let mid = lo + (hi - lo) / 2;
@@ -55,8 +110,11 @@ pub fn select(xs: &[f32], k: usize) -> f32 {
             hi = lt;
         } else if k >= gt {
             lo = gt;
+        } else if k + 1 < gt {
+            // k + 1 still lands in the equal-to-pivot run
+            break (pivot, None);
         } else {
-            return pivot;
+            break (pivot, Some(gt));
         }
     }
 }
@@ -64,12 +122,13 @@ pub fn select(xs: &[f32], k: usize) -> f32 {
 /// The biased combine: median of per-partition medians. Exposed to make the
 /// §2.4 caveat measurable (tests/benches compare it against exact).
 pub fn median_of_partition_medians(partitions: &[&[f32]]) -> f32 {
+    let mut scratch = Vec::new();
     let meds: Vec<f32> = partitions
         .iter()
         .filter(|p| !p.is_empty())
-        .map(|p| median_exact(p))
+        .map(|p| median_exact_with(&mut scratch, p))
         .collect();
-    median_exact(&meds)
+    median_exact_with(&mut scratch, &meds)
 }
 
 /// Randomized estimator: median of a uniform sample of size `sample` drawn
@@ -94,7 +153,17 @@ pub fn median_randomized(partitions: &[&[f32]], sample: usize, seed: u64) -> f32
 }
 
 /// Quantile (linear interpolation between order statistics), q in [0, 1].
+/// Allocates a fresh scratch buffer — hot loops should hold one and call
+/// [`quantile_with`].
 pub fn quantile(xs: &[f32], q: f64) -> f32 {
+    quantile_with(&mut Vec::with_capacity(xs.len()), xs, q)
+}
+
+/// [`quantile`] over a caller-provided scratch buffer. The two order
+/// statistics an interpolated quantile straddles are adjacent, so a single
+/// [`select_adjacent_with`] pass yields both — half the copies and half
+/// the quickselects of the naive `select(lo) … select(hi)` pairing.
+pub fn quantile_with(scratch: &mut Vec<f32>, xs: &[f32], q: f64) -> f32 {
     assert!(!xs.is_empty() && (0.0..=1.0).contains(&q));
     let n = xs.len();
     if n == 1 {
@@ -102,12 +171,14 @@ pub fn quantile(xs: &[f32], q: f64) -> f32 {
     }
     let pos = q * (n - 1) as f64;
     let lo = pos.floor() as usize;
-    let hi = pos.ceil() as usize;
-    if lo == hi {
-        return select(xs, lo);
-    }
     let w = (pos - lo as f64) as f32;
-    select(xs, lo) * (1.0 - w) + select(xs, hi) * w
+    if w == 0.0 {
+        // exact order statistic: skip the adjacent-value tail scan
+        select_with(scratch, xs, lo)
+    } else {
+        let (a, b) = select_adjacent_with(scratch, xs, lo);
+        a * (1.0 - w) + b * w
+    }
 }
 
 #[cfg(test)]
@@ -132,6 +203,35 @@ mod tests {
             let mut sorted = xs.clone();
             sorted.sort_by(f32::total_cmp);
             assert_eq!(select(&xs, k), sorted[k]);
+        });
+    }
+
+    #[test]
+    fn select_adjacent_matches_sorted_pairs_property() {
+        check_property("adjacent order stats == sorted pairs", 40, |rng: &mut SplitMix64| {
+            let n = 1 + rng.below(200);
+            // alternate uniform values with duplicate-heavy ones: the
+            // latter stress the equal-to-pivot run handling
+            let xs: Vec<f32> = if rng.below(2) == 0 {
+                rng.uniform_vec(n, -50.0, 50.0)
+            } else {
+                (0..n).map(|_| rng.below(8) as f32).collect()
+            };
+            let k = rng.below(n);
+            let mut sorted = xs.clone();
+            sorted.sort_by(f32::total_cmp);
+            let mut scratch = Vec::new();
+            let (a, b) = select_adjacent_with(&mut scratch, &xs, k);
+            assert_eq!(a, sorted[k]);
+            assert_eq!(b, sorted[(k + 1).min(n - 1)]);
+            // the scratch buffer is reusable back-to-back
+            assert_eq!(select_adjacent_with(&mut scratch, &xs, k), (a, b));
+            // the scan-free single-statistic path agrees
+            assert_eq!(select_with(&mut scratch, &xs, k), a);
+            // and the with-scratch entry points agree with the allocating ones
+            assert_eq!(median_exact_with(&mut scratch, &xs), median_exact(&xs));
+            let q = rng.below(101) as f64 / 100.0;
+            assert_eq!(quantile_with(&mut scratch, &xs, q), quantile(&xs, q));
         });
     }
 

@@ -1,0 +1,218 @@
+//! Integration: the halo-exchange fused executor (`HaloMode::Exchange`)
+//! against the recompute path and the legacy per-stage `run_pipeline` —
+//! **bit-for-bit**, across boundary modes × first-stage grid modes ×
+//! worker counts × stage depths, including the edge geometries that stress
+//! halo bookkeeping: chunks narrower than the halo budget, `rows <
+//! workers`, 1×N / N×1 tensors, and deep (≥5-stage) pipelines. Also pins
+//! the halo accounting invariants: exchange runs recompute exactly zero
+//! halo rows, recompute runs touch the board exactly never.
+
+use meltframe::coordinator::pipeline::{run_pipeline, ExecOptions};
+use meltframe::coordinator::{ChunkPolicy, HaloMode, Job, Plan};
+use meltframe::melt::grid::GridMode;
+use meltframe::melt::melt::BoundaryMode;
+use meltframe::tensor::dense::Tensor;
+use meltframe::testing::{assert_allclose, check_property, SplitMix64};
+
+fn plan_of<'a>(x: &'a Tensor<f32>, jobs: &[Job]) -> Plan<'a> {
+    let mut plan = Plan::over(x);
+    for j in jobs {
+        plan = plan.stage(j.to_stage().unwrap());
+    }
+    plan
+}
+
+fn recompute(workers: usize) -> ExecOptions {
+    ExecOptions::native(workers)
+}
+
+fn exchange(workers: usize) -> ExecOptions {
+    ExecOptions::native(workers).with_halo_mode(HaloMode::Exchange)
+}
+
+/// A random fusable job over `window`, spanning filters and reductions.
+fn random_job(rng: &mut SplitMix64, window: &[usize]) -> Job {
+    let mut j = match rng.below(6) {
+        0 => Job::gaussian(window, 0.5 + rng.uniform(0.0, 2.0)),
+        1 => Job::bilateral_const(window, 1.5, 5.0 + rng.uniform(0.0, 50.0)),
+        2 => Job::curvature(window),
+        3 => Job::median(window),
+        4 => Job::quantile(window, rng.below(101) as f64 / 100.0),
+        _ => Job::local_std(window),
+    };
+    let boundaries = [
+        BoundaryMode::Reflect,
+        BoundaryMode::Nearest,
+        BoundaryMode::Constant(4.25),
+    ];
+    j.boundary = boundaries[rng.below(boundaries.len())];
+    j
+}
+
+#[test]
+fn exchange_matches_recompute_and_legacy_property() {
+    // the tentpole acceptance property: all three executors agree exactly,
+    // and exchange does so without recomputing a single halo row
+    check_property("exchange == recompute == legacy", 15, |rng: &mut SplitMix64| {
+        let rank = 2 + rng.below(2);
+        let dims: Vec<usize> = (0..rank).map(|_| 6 + rng.below(7)).collect();
+        let x = Tensor::random(&dims, 0.0, 255.0, rng.next_u64()).unwrap();
+        let window: Vec<usize> = vec![3; rank];
+        let n_stages = 2 + rng.below(3);
+        let mut jobs: Vec<Job> = (0..n_stages).map(|_| random_job(rng, &window)).collect();
+        // the group's first stage may use any grid mode
+        jobs[0].grid = match rng.below(3) {
+            0 => GridMode::Same,
+            1 => GridMode::Valid,
+            _ => GridMode::Strided(vec![2; rank]),
+        };
+
+        let (legacy, _) = run_pipeline(&x, &jobs, &recompute(1)).unwrap();
+        let workers = 1 + rng.below(4);
+        let (rec, rec_pm) = plan_of(&x, &jobs).run(&recompute(workers)).unwrap();
+        let (exc, exc_pm) = plan_of(&x, &jobs).run(&exchange(workers)).unwrap();
+
+        assert_allclose(rec.data(), legacy.data(), 0.0, 0.0);
+        assert_allclose(exc.data(), legacy.data(), 0.0, 0.0);
+        // fused structure holds in both modes
+        assert_eq!(rec_pm.melts(), 1, "{jobs:?}");
+        assert_eq!(exc_pm.melts(), 1);
+        assert_eq!(exc_pm.folds(), 1);
+        // the acceptance counter: exchange recomputes NOTHING
+        assert_eq!(exc_pm.halo_recomputed(), 0);
+        // and recompute mode never touches a board
+        assert_eq!(rec_pm.halo_published() + rec_pm.halo_received(), 0);
+    });
+}
+
+#[test]
+fn edge_geometries_bit_for_bit_both_modes() {
+    // 1×N and N×1 tensors (degenerate axes cap the halo at extent − 1),
+    // tiny tensors, and rows < workers
+    let shapes: [&[usize]; 4] = [&[1, 17], &[17, 1], &[2, 3], &[7, 7]];
+    for dims in shapes {
+        let x = Tensor::random(dims, 0.0, 100.0, 7).unwrap();
+        let jobs = vec![
+            Job::gaussian(&[3, 3], 1.0),
+            Job::median(&[3, 3]),
+            Job::curvature(&[3, 3]),
+        ];
+        let (legacy, _) = run_pipeline(&x, &jobs, &recompute(1)).unwrap();
+        for workers in [1usize, 2, 3, 8] {
+            let (rec, _) = plan_of(&x, &jobs).run(&recompute(workers)).unwrap();
+            let (exc, pm) = plan_of(&x, &jobs).run(&exchange(workers)).unwrap();
+            assert_allclose(rec.data(), legacy.data(), 0.0, 0.0);
+            assert_allclose(exc.data(), legacy.data(), 0.0, 0.0);
+            assert_eq!(pm.halo_recomputed(), 0, "{dims:?} workers {workers}");
+        }
+    }
+}
+
+#[test]
+fn chunks_narrower_than_the_halo_budget() {
+    // single-row chunks under a 3-stage 3×3 pipeline: every gather spans
+    // several neighbouring chunks in both directions
+    let x = Tensor::random(&[4, 5], 0.0, 255.0, 11).unwrap(); // 20 melt rows
+    let jobs = vec![
+        Job::gaussian(&[3, 3], 1.0),
+        Job::curvature(&[3, 3]),
+        Job::quantile(&[3, 3], 0.8),
+    ];
+    let (legacy, _) = run_pipeline(&x, &jobs, &recompute(1)).unwrap();
+    for chunk_rows in [1usize, 2, 3] {
+        let mut rec_opts = recompute(20);
+        rec_opts.chunk_policy = Some(ChunkPolicy::Fixed { chunk_rows });
+        let mut exc_opts = exchange(20);
+        exc_opts.chunk_policy = Some(ChunkPolicy::Fixed { chunk_rows });
+        let (rec, _) = plan_of(&x, &jobs).run(&rec_opts).unwrap();
+        let (exc, pm) = plan_of(&x, &jobs).run(&exc_opts).unwrap();
+        assert_allclose(rec.data(), legacy.data(), 0.0, 0.0);
+        assert_allclose(exc.data(), legacy.data(), 0.0, 0.0);
+        assert_eq!(pm.halo_recomputed(), 0, "chunk_rows {chunk_rows}");
+        assert!(pm.halo_received() > 0);
+    }
+}
+
+#[test]
+fn deep_pipelines_stream_in_both_modes() {
+    // ≥5 stages: the recompute budgets telescope while exchange trades a
+    // constant-width halo per stage — both must stay exact
+    let x = Tensor::random(&[10, 11], 0.0, 255.0, 5).unwrap();
+    let jobs = vec![
+        Job::gaussian(&[3, 3], 0.8),
+        Job::bilateral_const(&[3, 3], 1.5, 25.0),
+        Job::curvature(&[3, 3]),
+        Job::median(&[3, 3]),
+        Job::local_std(&[3, 3]),
+        Job::quantile(&[3, 3], 0.3),
+    ];
+    let (legacy, _) = run_pipeline(&x, &jobs, &recompute(1)).unwrap();
+    for workers in [1usize, 3, 4] {
+        let (rec, rec_pm) = plan_of(&x, &jobs).run(&recompute(workers)).unwrap();
+        let (exc, exc_pm) = plan_of(&x, &jobs).run(&exchange(workers)).unwrap();
+        assert_allclose(rec.data(), legacy.data(), 0.0, 0.0);
+        assert_allclose(exc.data(), legacy.data(), 0.0, 0.0);
+        assert_eq!(rec_pm.stages(), 6);
+        assert_eq!(exc_pm.stages(), 6);
+        assert_eq!(exc_pm.melts(), 1);
+        assert_eq!(exc_pm.halo_recomputed(), 0);
+        if workers > 1 {
+            // 5 inter-stage halos × multiple chunks: real traffic
+            assert!(exc_pm.halo_published() > 0);
+            assert!(exc_pm.halo_received() > 0);
+            assert!(rec_pm.halo_recomputed() > 0);
+        }
+    }
+}
+
+#[test]
+fn config_halo_mode_drives_the_executor() {
+    let cfg = meltframe::config::spec::RunConfig::parse(
+        r#"
+        workers = 3
+        halo_mode = "exchange"
+        [input]
+        kind = "image"
+        dims = [16, 18]
+        seed = 21
+        [job.1]
+        kind = "gaussian"
+        window = [3, 3]
+        sigma = 1.0
+        [job.2]
+        kind = "median"
+        window = [3, 3]
+        "#,
+    )
+    .unwrap();
+    assert_eq!(cfg.options.halo_mode, HaloMode::Exchange);
+    let x = cfg.input.load().unwrap();
+    let (legacy, _) = run_pipeline(&x, &cfg.jobs, &recompute(1)).unwrap();
+    let (out, pm) = cfg
+        .plan(&x)
+        .unwrap()
+        .compile(cfg.options.backend)
+        .unwrap()
+        .execute(&cfg.options)
+        .unwrap();
+    assert_allclose(out.data(), legacy.data(), 0.0, 0.0);
+    assert_eq!(pm.halo_recomputed(), 0);
+    assert!(pm.halo_published() > 0);
+}
+
+#[test]
+fn worker_count_invariance_in_exchange_mode_property() {
+    // §2.4 end-to-end for the exchange executor: the chunk/worker geometry
+    // must never leak into the numbers
+    check_property("exchange invariant under workers", 8, |rng: &mut SplitMix64| {
+        let dims = [6 + rng.below(8), 6 + rng.below(8)];
+        let x = Tensor::random(&dims, 0.0, 255.0, rng.next_u64()).unwrap();
+        let jobs = vec![random_job(rng, &[3, 3]), random_job(rng, &[3, 3])];
+        let (base, _) = plan_of(&x, &jobs).run(&exchange(1)).unwrap();
+        for workers in [2usize, 3, 5, 9] {
+            let (out, pm) = plan_of(&x, &jobs).run(&exchange(workers)).unwrap();
+            assert_allclose(out.data(), base.data(), 0.0, 0.0);
+            assert_eq!(pm.halo_recomputed(), 0);
+        }
+    });
+}
