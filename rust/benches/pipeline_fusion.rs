@@ -8,17 +8,21 @@
 //! global synchronization barrier. What recompute-mode fusion adds back: a
 //! few halo rows of duplicated kernel work per chunk — O(chunks × halo ×
 //! stages), growing with worker count. Exchange mode removes that term
-//! too: workers publish computed boundary rows to the halo board and fetch
-//! their neighbours', so `halo_recomputed_rows == 0` and the only cost is
-//! a brief neighbour wait per stage. Expectation: exchange ≥ recompute
-//! throughput at the highest worker count, with the gap widening as
-//! workers (and therefore chunk boundaries) multiply.
+//! too: the dependency-aware stage scheduler dispenses `(chunk, stage)`
+//! tasks whose gathers are already published, workers publish each stage's
+//! boundary rows *before* computing its interior (the head start is
+//! metered as `halo_eager_lead`), and `halo_recomputed_rows == 0`. The
+//! exchange series runs both at the default partition and oversubscribed
+//! (4 chunks per worker — the configuration the pre-scheduler executor
+//! rejected outright). Expectation: exchange ≥ recompute throughput at the
+//! highest worker count, with the gap widening as workers (and therefore
+//! chunk boundaries) multiply.
 //!
 //! Run: `cargo bench --bench pipeline_fusion`
 
 use meltframe::bench_harness::{black_box, Measurement, Report};
 use meltframe::coordinator::pipeline::{run_pipeline, ExecOptions};
-use meltframe::coordinator::{HaloMode, Job, Plan};
+use meltframe::coordinator::{ChunkPolicy, HaloMode, Job, Plan};
 use meltframe::tensor::dense::Tensor;
 
 fn jobs() -> Vec<Job> {
@@ -58,8 +62,11 @@ fn main() {
     assert_eq!(pm.groups.len(), 1, "all three stages must fuse");
     assert_eq!(pm.melts(), 1, "fused group must perform exactly one melt");
     assert_eq!(pm.folds(), 1, "fused group must perform exactly one fold");
-    // the exchange acceptance criteria, at the highest worker count
-    let exchange_opts = ExecOptions::native(max_workers).with_halo_mode(HaloMode::Exchange);
+    // the exchange acceptance criteria, at the highest worker count AND
+    // oversubscribed (chunks > workers): bit-for-bit, zero recomputed
+    // rows, nonzero eager-publish lead on this 3-stage group
+    let mut exchange_opts = ExecOptions::native(max_workers).with_halo_mode(HaloMode::Exchange);
+    exchange_opts.chunk_policy = Some(ChunkPolicy::EvenPerWorker { parts_per_worker: 4 });
     let (exchange_out, xm) = fused(&vol, &exchange_opts);
     assert_eq!(
         exchange_out.data(),
@@ -72,6 +79,10 @@ fn main() {
         "exchange mode must recompute zero halo rows"
     );
     assert!(xm.halo_published() > 0 && xm.halo_received() > 0);
+    assert!(
+        xm.halo_eager_lead() > std::time::Duration::ZERO,
+        "boundary-first execution must record a head start"
+    );
     let (recompute_out, rm) = fused(
         &vol,
         &ExecOptions::native(max_workers).with_halo_mode(HaloMode::Recompute),
@@ -86,11 +97,14 @@ fn main() {
         pm.folds()
     );
     println!(
-        "halo @ {max_workers} workers: recompute redoes {} rows, exchange redoes {} (pub {} / recv {})\n",
+        "halo @ {max_workers} workers, 16 chunks: recompute redoes {} rows, exchange redoes {} \
+         (pub {} / recv {} | eager lead {:.2?} | {} stall(s))\n",
         rm.halo_recomputed(),
         xm.halo_recomputed(),
         xm.halo_published(),
-        xm.halo_received()
+        xm.halo_received(),
+        xm.halo_eager_lead(),
+        xm.sched_stalls()
     );
 
     // ---- timing, across worker counts -------------------------------------
@@ -98,6 +112,8 @@ fn main() {
     for workers in [1usize, 2, max_workers] {
         let opts = ExecOptions::native(workers);
         let exc = ExecOptions::native(workers).with_halo_mode(HaloMode::Exchange);
+        let mut exc4 = exc.clone();
+        exc4.chunk_policy = Some(ChunkPolicy::EvenPerWorker { parts_per_worker: 4 });
         let mut report = Report::new(format!(
             "Pipeline — 3 stages on 48^3, {workers} worker(s): fold→re-melt vs fused (recompute|exchange)"
         ));
@@ -112,6 +128,12 @@ fn main() {
         });
         report.push(rec.clone());
         report.push(exg.clone());
+        report.push(Measurement::run(
+            "fused Plan (halo exchange, 4 chunks/worker)",
+            1,
+            10,
+            || black_box(fused(&vol, &exc4)),
+        ));
         report.print(Some("legacy run_pipeline"));
         println!();
         if workers == max_workers {

@@ -13,6 +13,11 @@
 //! backend-swap property): identical numerics, same API.
 //!
 //! Run: `make artifacts && cargo run --release --example e2e_pipeline`
+//!
+//! Flags: `--halo-mode recompute|exchange` selects the fused-executor halo
+//! strategy for the pipeline stage (exchange also over-partitions to 4
+//! chunks per worker — the oversubscribed configuration CI smokes), and
+//! `--workers N` sets the fleet size.
 
 use std::time::Instant;
 
@@ -21,6 +26,29 @@ use meltframe::coordinator::Job;
 use meltframe::prelude::*;
 
 fn main() -> Result<()> {
+    let mut halo_mode = HaloMode::Recompute;
+    let mut workers = 4usize;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        let mut value = |flag: &str| {
+            args.next()
+                .ok_or_else(|| Error::Config(format!("{flag} expects a value")))
+        };
+        match a.as_str() {
+            "--halo-mode" => halo_mode = HaloMode::parse(&value("--halo-mode")?)?,
+            "--workers" => {
+                workers = value("--workers")?
+                    .parse()
+                    .map_err(|_| Error::Config("--workers expects a number".into()))?;
+            }
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown argument '{other}' (e2e_pipeline takes --halo-mode and --workers)"
+                )))
+            }
+        }
+    }
+
     let artifact_dir = std::path::PathBuf::from("artifacts");
     let have_artifacts = artifact_dir.join("manifest.json").exists()
         && meltframe::runtime::client::PjrtContext::available();
@@ -79,13 +107,22 @@ fn main() -> Result<()> {
     // run BOTH executors over the dataset: the legacy fold→re-melt baseline
     // and the fused lazy Plan (one melt/fold, chunk-resident streaming) —
     // identical outputs, the fused path skips every intermediate tensor.
-    println!("\n## multi-stage pipeline (bilateral_adaptive 3^3 -> curvature 3^3 -> q90 3^3)\n");
+    println!(
+        "\n## multi-stage pipeline (bilateral_adaptive 3^3 -> curvature 3^3 -> q90 3^3, \
+         halo {halo_mode}, {workers} workers)\n"
+    );
     let stages = vec![
         Job::bilateral_adaptive(&[3, 3, 3], 1.5, 2.0),
         Job::curvature(&[3, 3, 3]),
         Job::quantile(&[3, 3, 3], 0.9),
     ];
-    let opts = ExecOptions::native(4);
+    let opts = ExecOptions::native(workers);
+    let mut fused_opts = ExecOptions::native(workers).with_halo_mode(halo_mode);
+    if halo_mode == HaloMode::Exchange {
+        // oversubscribe deliberately: chunks > workers exercises the
+        // dependency-aware stage scheduler end to end
+        fused_opts.chunk_policy = Some(ChunkPolicy::EvenPerWorker { parts_per_worker: 4 });
+    }
     let t = Instant::now();
     let mut legacy_outs = Vec::new();
     for vol in &dataset {
@@ -95,16 +132,34 @@ fn main() -> Result<()> {
     let legacy_elapsed = t.elapsed();
     let t = Instant::now();
     let mut responses = Vec::new();
+    let mut eager_lead = std::time::Duration::ZERO;
     for (vol, legacy) in dataset.iter().zip(&legacy_outs) {
         let (k, pm) = Plan::over(vol)
             .bilateral_adaptive(&[3, 3, 3], 1.5, 2.0)
             .curvature(&[3, 3, 3])
             .quantile(&[3, 3, 3], 0.9)
-            .run(&opts)?;
+            .run(&fused_opts)?;
         assert_eq!(pm.melts(), 1, "three fusable stages must share one melt");
         assert_eq!(k.data(), legacy.data(), "fused must equal legacy bit-for-bit");
+        if halo_mode == HaloMode::Exchange {
+            assert_eq!(pm.halo_recomputed(), 0, "exchange must recompute zero halo rows");
+            assert!(pm.halo_published() > 0, "oversubscribed chunks must trade rows");
+            eager_lead += pm.halo_eager_lead();
+        }
         // headline analytic: cuboid vertices light up
         responses.push(k.map(|v| v.abs()).max());
+    }
+    if halo_mode == HaloMode::Exchange {
+        // the boundary-first split (and therefore a nonzero lead) only
+        // exists for chunks wider than both boundary segments combined; at
+        // very high worker counts every chunk is narrower than 2×halo and
+        // publishes whole — correct, just nothing to lead with
+        let halo = meltframe::melt::melt::flat_halo(&dims, &Operator::new(&[3, 3, 3])?);
+        let chunk_rows = dims.iter().product::<usize>() / (4 * workers);
+        if chunk_rows > 2 * halo {
+            assert!(eager_lead > std::time::Duration::ZERO, "eager publish must lead");
+        }
+        println!("exchange: 0 halo rows recomputed, eager-publish lead {eager_lead:.2?}");
     }
     println!(
         "processed {} volumes | legacy fold→re-melt {legacy_elapsed:.2?} | fused Plan {:.2?}",

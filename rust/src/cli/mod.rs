@@ -24,6 +24,9 @@ pub enum Command {
         /// Override the config's fused halo strategy
         /// (`--halo-mode recompute|exchange`).
         halo_mode: Option<HaloMode>,
+        /// Override the config's exchange-wait watchdog deadline, in
+        /// seconds (`--halo-wait-secs N`).
+        halo_wait_secs: Option<u64>,
     },
     Inspect {
         artifacts: PathBuf,
@@ -41,7 +44,7 @@ meltframe — melt-matrix array programming with parallel acceleration
 
 USAGE:
     meltframe run <config.toml> [--out <file.npy>] [--legacy]
-                  [--halo-mode recompute|exchange]
+                  [--halo-mode recompute|exchange] [--halo-wait-secs <n>]
     meltframe inspect [--artifacts <dir>]
     meltframe demo [--workers <n>] [--backend native|pjrt] [--artifacts <dir>]
     meltframe help
@@ -50,7 +53,8 @@ USAGE:
 one fold per fusable group); `--legacy` forces the stage-by-stage baseline.
 `--halo-mode` overrides the config's fused halo strategy: `recompute`
 (duplicate boundary rows locally) or `exchange` (trade them between
-neighbouring chunks through the halo board).
+neighbouring chunks through the halo board, scheduled dependency-aware).
+`--halo-wait-secs` overrides the exchange watchdog deadline (default 600).
 ";
 
 /// Parse argv (without the program name).
@@ -66,6 +70,7 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
             let mut out = None;
             let mut legacy = false;
             let mut halo_mode = None;
+            let mut halo_wait_secs = None;
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--out" => {
@@ -74,6 +79,16 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                     "--legacy" => legacy = true,
                     "--halo-mode" => {
                         halo_mode = Some(HaloMode::parse(expect_value(&mut it, "--halo-mode")?)?);
+                    }
+                    "--halo-wait-secs" => {
+                        let v = expect_value(&mut it, "--halo-wait-secs")?;
+                        let secs: u64 = v.parse().map_err(|_| {
+                            Error::Config("--halo-wait-secs expects a number of seconds".into())
+                        })?;
+                        if secs == 0 {
+                            return Err(Error::Config("--halo-wait-secs must be >= 1".into()));
+                        }
+                        halo_wait_secs = Some(secs);
                     }
                     flag if flag.starts_with("--") => {
                         return Err(Error::Config(format!("unknown flag '{flag}' for run")))
@@ -90,6 +105,7 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                 out,
                 legacy,
                 halo_mode,
+                halo_wait_secs,
             })
         }
         "inspect" => {
@@ -163,6 +179,7 @@ mod tests {
                 out: Some(PathBuf::from("result.npy")),
                 legacy: false,
                 halo_mode: None,
+                halo_wait_secs: None,
             }
         );
         let c = parse_args(&argv("run pipeline.toml --legacy")).unwrap();
@@ -173,9 +190,14 @@ mod tests {
                 out: None,
                 legacy: true,
                 halo_mode: None,
+                halo_wait_secs: None,
             }
         );
-        let c = parse_args(&argv("run pipeline.toml --halo-mode exchange")).unwrap();
+        // mixed-case mode spellings normalize, and the watchdog override
+        // parses alongside
+        let c =
+            parse_args(&argv("run pipeline.toml --halo-mode Exchange --halo-wait-secs 45"))
+                .unwrap();
         assert_eq!(
             c,
             Command::Run {
@@ -183,6 +205,7 @@ mod tests {
                 out: None,
                 legacy: false,
                 halo_mode: Some(HaloMode::Exchange),
+                halo_wait_secs: Some(45),
             }
         );
     }
@@ -223,5 +246,8 @@ mod tests {
         assert!(parse_args(&argv("run a.toml --out")).is_err());
         assert!(parse_args(&argv("run a.toml --halo-mode")).is_err());
         assert!(parse_args(&argv("run a.toml --halo-mode psychic")).is_err());
+        assert!(parse_args(&argv("run a.toml --halo-wait-secs")).is_err());
+        assert!(parse_args(&argv("run a.toml --halo-wait-secs soon")).is_err());
+        assert!(parse_args(&argv("run a.toml --halo-wait-secs 0")).is_err());
     }
 }

@@ -6,6 +6,7 @@
 //! backend = "native"          # or "pjrt"
 //! artifacts = "artifacts"     # pjrt only
 //! halo_mode = "recompute"     # or "exchange" (fused halo strategy)
+//! halo_wait_secs = 600        # exchange-wait watchdog deadline
 //!
 //! [input]
 //! kind = "volume"             # volume | image | mask | npy
@@ -107,6 +108,15 @@ impl RunConfig {
             None => HaloMode::Recompute,
             Some(s) => HaloMode::parse(s)?,
         };
+        // halo_wait_secs: watchdog deadline on any single exchange wait
+        // before the run errors out (default 600 s)
+        let halo_wait = match doc.get("", "halo_wait_secs").map(|v| v.as_usize()).transpose()? {
+            None => crate::coordinator::halo::DEFAULT_WAIT_DEADLINE,
+            Some(0) => {
+                return Err(Error::Config("halo_wait_secs must be >= 1".into()));
+            }
+            Some(secs) => std::time::Duration::from_secs(secs as u64),
+        };
 
         let input = Self::parse_input(&doc)?;
         let jobs = Self::parse_jobs(&doc)?;
@@ -117,6 +127,7 @@ impl RunConfig {
                 artifact_dir,
                 chunk_policy: None,
                 halo_mode,
+                halo_wait,
             },
             input,
             jobs,
@@ -268,7 +279,8 @@ mod tests {
             r#"
             workers = 2
             fused = false
-            halo_mode = "exchange"
+            halo_mode = "Exchange"
+            halo_wait_secs = 30
             [input]
             kind = "image"
             dims = [16, 16]
@@ -283,7 +295,9 @@ mod tests {
         )
         .unwrap();
         assert!(!cfg.fused);
+        // mixed-case spelling normalizes, and the watchdog deadline is read
         assert_eq!(cfg.options.halo_mode, HaloMode::Exchange);
+        assert_eq!(cfg.options.halo_wait, std::time::Duration::from_secs(30));
         assert!(matches!(cfg.jobs[0].kind, FilterKind::Rank(_)));
         assert!(matches!(cfg.jobs[1].kind, FilterKind::LocalMoment(_)));
         // the plan lowering records both stages lazily
@@ -316,6 +330,10 @@ mod tests {
         assert_eq!(cfg.jobs.len(), 1);
         assert_eq!(cfg.options.workers, 1); // default
         assert_eq!(cfg.options.halo_mode, HaloMode::Recompute); // default
+        assert_eq!(
+            cfg.options.halo_wait,
+            crate::coordinator::halo::DEFAULT_WAIT_DEADLINE
+        );
     }
 
     #[test]
@@ -356,6 +374,11 @@ mod tests {
         // unknown halo mode
         assert!(RunConfig::parse(
             "halo_mode = \"telepathy\"\n[input]\nkind = \"mask\"\ndims = [8, 8]\n[job]\nkind = \"median\"\nwindow = [3, 3]"
+        )
+        .is_err());
+        // zero watchdog deadline would disable the hang backstop
+        assert!(RunConfig::parse(
+            "halo_wait_secs = 0\n[input]\nkind = \"mask\"\ndims = [8, 8]\n[job]\nkind = \"median\"\nwindow = [3, 3]"
         )
         .is_err());
         // even window caught at parse time

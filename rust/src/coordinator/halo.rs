@@ -10,15 +10,18 @@
 //! the few rows it needs from them — paying a brief neighbour
 //! synchronization instead of redundant compute.
 //!
-//! Liveness: a waiting chunk can only be unblocked by the worker that owns
-//! the chunk it waits on, so every chunk must be claimed concurrently. The
-//! executor therefore partitions a fused group into **at most `workers`
-//! chunks** in exchange mode (one per worker by default) and rejects
-//! coarser-grained custom policies. Within that constraint the dependency
-//! graph is the neighbour chain of the partition: no chunk can complete
-//! stage `k + 1` before its neighbours publish stage `k`, all chunks are
-//! claimed by distinct workers before any can complete, and each wait is
-//! satisfiable — so the fleet makes progress without a global barrier.
+//! Liveness: exchange-mode workers do not block inside [`HaloBoard`] on
+//! the hot path. The dependency-aware `(chunk, stage)` scheduler
+//! ([`crate::coordinator::scheduler::StageScheduler`]) only dispatches a
+//! stage once every neighbour it gathers from has *already published* the
+//! previous stage's boundary rows, so any chunk count is live — chunks
+//! migrate between workers across stages instead of being pinned one per
+//! worker. The board's blocking [`HaloBoard::fetch_into`] wait survives as
+//! a fallback/assertion layer: if a fetch ever finds an unpublished cell,
+//! either the scheduler mis-ordered a dispatch or halo sizing is wrong,
+//! and the bounded wait (configurable via `ExecOptions::halo_wait`, config
+//! `halo_wait_secs`, CLI `--halo-wait-secs`) converts that bug into an
+//! error instead of a hung fleet.
 //!
 //! Correctness: published rows are the very values the neighbour computed
 //! for its own interior, and every kernel is row-deterministic (§2.4), so
@@ -51,15 +54,17 @@ pub enum HaloMode {
     #[default]
     Recompute,
     /// Neighbouring chunks exchange computed boundary rows through a
-    /// [`HaloBoard`] (zero duplicated kernel work; requires chunk count
-    /// ≤ worker count so every chunk progresses concurrently).
+    /// [`HaloBoard`] (zero duplicated kernel work; any chunk count — the
+    /// dependency-aware stage scheduler keeps every dispatch satisfiable).
     Exchange,
 }
 
 impl HaloMode {
-    /// Parse a config / CLI spelling.
+    /// Parse a config / CLI spelling. Case-insensitive, surrounding
+    /// whitespace ignored, so `"Exchange"`, `"EXCHANGE"` and padded TOML
+    /// values all resolve.
     pub fn parse(s: &str) -> Result<Self> {
-        match s {
+        match s.trim().to_ascii_lowercase().as_str() {
             "recompute" => Ok(HaloMode::Recompute),
             "exchange" => Ok(HaloMode::Exchange),
             other => Err(Error::Config(format!(
@@ -88,6 +93,10 @@ pub(crate) struct HaloStats {
     pub received: usize,
     /// Halo rows recomputed locally (recompute mode).
     pub recomputed: usize,
+    /// Accumulated lead the eager boundary publish buys the neighbours:
+    /// the time between a stage's boundary rows landing on the board and
+    /// that stage's interior finishing (exchange mode).
+    pub eager_lead: Duration,
 }
 
 impl HaloStats {
@@ -95,6 +104,7 @@ impl HaloStats {
         self.published += other.published;
         self.received += other.received;
         self.recomputed += other.recomputed;
+        self.eager_lead += other.eager_lead;
     }
 }
 
@@ -130,22 +140,28 @@ struct Cell {
 pub(crate) const ABORTED_MSG: &str = "halo exchange aborted: another worker failed";
 
 /// Granularity of the poison/deadline re-check while waiting on a cell.
-const WAIT_SLICE: Duration = Duration::from_millis(100);
-/// Backstop cap on any single cell wait — converts a genuine scheduling
-/// bug into an error instead of a hung fleet. Deliberately generous: the
-/// wait clock overlaps the neighbour's *legitimate* compute time for one
-/// stage over one chunk, and failing workers are handled promptly by
-/// poisoning (on error or panic), not by this deadline.
-const WAIT_DEADLINE: Duration = Duration::from_secs(600);
+pub(crate) const WAIT_SLICE: Duration = Duration::from_millis(100);
+/// Default backstop cap on any single cell/scheduler wait — converts a
+/// genuine scheduling bug into an error instead of a hung fleet.
+/// Deliberately generous: the wait clock overlaps a neighbour's
+/// *legitimate* compute time for one stage over one chunk, and failing
+/// workers are handled promptly by poisoning (on error or panic), not by
+/// this deadline. Overridable per run via `ExecOptions::halo_wait`
+/// (config key `halo_wait_secs`, CLI `--halo-wait-secs`) — tests drop it
+/// to sub-second values so the timeout path itself is testable.
+pub const DEFAULT_WAIT_DEADLINE: Duration = Duration::from_secs(600);
 
 /// The exchange board: one publish-once cell per (stage, chunk), holding
 /// the chunk's boundary rows for that stage. Readers block (bounded) until
 /// the owning chunk publishes; a failing worker poisons the board so the
-/// whole fleet errors out instead of deadlocking.
+/// whole fleet errors out instead of deadlocking. Under the dependency-
+/// aware stage scheduler the blocking wait is a fallback only: dispatched
+/// stages find their cells already published.
 pub(crate) struct HaloBoard {
     ranges: Vec<Range<usize>>,
     cells: Vec<Cell>,
     poisoned: AtomicBool,
+    deadline: Duration,
 }
 
 impl HaloBoard {
@@ -153,8 +169,8 @@ impl HaloBoard {
     /// *exchanged* stages — an n-stage fused group trades rows across its
     /// n − 1 stage transitions, so it passes `n - 1`. The ranges must be
     /// ascending and contiguous (every partition the chunk policies emit
-    /// is).
-    pub fn new(ranges: &[Range<usize>], stages: usize) -> Result<Self> {
+    /// is). `deadline` bounds any single blocking wait.
+    pub fn new(ranges: &[Range<usize>], stages: usize, deadline: Duration) -> Result<Self> {
         let mut cursor = None;
         for r in ranges {
             if r.is_empty() || cursor.is_some_and(|c| c != r.start) {
@@ -174,6 +190,7 @@ impl HaloBoard {
             ranges: ranges.to_vec(),
             cells,
             poisoned: AtomicBool::new(false),
+            deadline,
         })
     }
 
@@ -183,6 +200,19 @@ impl HaloBoard {
 
     fn cell(&self, stage: usize, chunk: usize) -> &Cell {
         &self.cells[stage * self.ranges.len() + chunk]
+    }
+
+    /// The (low, high) boundary-segment widths chunk `chunk` publishes for
+    /// a stage whose *successor* gathers `halo` rows, given the chunk's
+    /// interior length `len`: the halo clamped to the chunk, zeroed on a
+    /// side with no neighbour. The single source of truth shared by
+    /// [`Self::publish`] and the executor's boundary-first split — the
+    /// rows the split computes first are exactly the rows publish ships.
+    pub fn boundary_segments(&self, chunk: usize, halo: usize, len: usize) -> (usize, usize) {
+        let cap = halo.min(len);
+        let k_lo = if chunk == 0 { 0 } else { cap };
+        let k_hi = if chunk + 1 == self.ranges.len() { 0 } else { cap };
+        (k_lo, k_hi)
     }
 
     /// Publish chunk `chunk`'s stage-`stage` boundary values out of its
@@ -204,9 +234,7 @@ impl HaloBoard {
                 r.len()
             )));
         }
-        let cap = halo.min(r.len());
-        let k_lo = if chunk == 0 { 0 } else { cap };
-        let k_hi = if chunk + 1 == self.ranges.len() { 0 } else { cap };
+        let (k_lo, k_hi) = self.boundary_segments(chunk, halo, r.len());
         let published = Published {
             lo_start: r.start,
             lo: vals[..k_lo].to_vec(),
@@ -278,10 +306,11 @@ impl HaloBoard {
             if self.poisoned.load(Ordering::Acquire) {
                 return Err(Error::Coordinator(ABORTED_MSG.into()));
             }
-            if start.elapsed() > WAIT_DEADLINE {
+            if start.elapsed() > self.deadline {
                 return Err(Error::Coordinator(format!(
-                    "halo wait for (stage {stage}, chunk {chunk}) exceeded {WAIT_DEADLINE:?} — \
-                     neighbour stalled or scheduling bug"
+                    "halo wait for (stage {stage}, chunk {chunk}) exceeded {:?} — \
+                     neighbour stalled or scheduling bug",
+                    self.deadline
                 )));
             }
             let (next, _) = cell
@@ -313,6 +342,10 @@ mod tests {
         bounds.windows(2).map(|w| w[0]..w[1]).collect()
     }
 
+    fn board(bounds: &[usize], stages: usize) -> HaloBoard {
+        HaloBoard::new(&ranges(bounds), stages, DEFAULT_WAIT_DEADLINE).unwrap()
+    }
+
     #[test]
     fn halo_mode_parses_and_displays() {
         assert_eq!(HaloMode::parse("recompute").unwrap(), HaloMode::Recompute);
@@ -323,8 +356,32 @@ mod tests {
     }
 
     #[test]
+    fn halo_mode_parse_normalizes_case_and_whitespace() {
+        // TOML/CLI spellings users actually type: mixed case and padding
+        for s in ["Exchange", "EXCHANGE", " exchange ", "\texchange\n"] {
+            assert_eq!(HaloMode::parse(s).unwrap(), HaloMode::Exchange, "{s:?}");
+        }
+        for s in ["Recompute", "RECOMPUTE", "  recompute  "] {
+            assert_eq!(HaloMode::parse(s).unwrap(), HaloMode::Recompute, "{s:?}");
+        }
+        // normalization does not invent modes
+        assert!(HaloMode::parse("ex change").is_err());
+        assert!(HaloMode::parse("").is_err());
+    }
+
+    #[test]
+    fn halo_mode_parse_display_round_trips() {
+        for mode in [HaloMode::Recompute, HaloMode::Exchange] {
+            assert_eq!(HaloMode::parse(&mode.to_string()).unwrap(), mode);
+            // and through the normalizer's worst case
+            let shouty = mode.to_string().to_ascii_uppercase();
+            assert_eq!(HaloMode::parse(&format!("  {shouty}  ")).unwrap(), mode);
+        }
+    }
+
+    #[test]
     fn publish_then_fetch_round_trips() {
-        let b = HaloBoard::new(&ranges(&[0, 4, 8, 12]), 1).unwrap();
+        let b = board(&[0, 4, 8, 12], 1);
         // chunk i rows hold 10+row; edge chunks publish only the segment a
         // neighbour exists to read (2 rows), the middle chunk both (4)
         assert_eq!(b.publish(0, 0, 2, &[10.0, 11.0, 12.0, 13.0]).unwrap(), 2);
@@ -348,7 +405,7 @@ mod tests {
     fn fetch_spans_multiple_narrow_chunks() {
         // chunks of 1–2 rows, halo wider than any chunk: a fetch walks
         // several owners, each fully covered by its own segments
-        let b = HaloBoard::new(&ranges(&[0, 1, 3, 4, 6]), 1).unwrap();
+        let b = board(&[0, 1, 3, 4, 6], 1);
         b.publish(0, 0, 5, &[0.0]).unwrap();
         b.publish(0, 1, 5, &[1.0, 2.0]).unwrap();
         b.publish(0, 2, 5, &[3.0]).unwrap();
@@ -362,7 +419,7 @@ mod tests {
 
     #[test]
     fn publish_validates() {
-        let b = HaloBoard::new(&ranges(&[0, 4, 8]), 2).unwrap();
+        let b = board(&[0, 4, 8], 2);
         // wrong slab length
         assert!(b.publish(0, 0, 1, &[1.0]).is_err());
         // unknown chunk
@@ -371,13 +428,50 @@ mod tests {
         b.publish(1, 0, 1, &[1.0; 4]).unwrap();
         assert!(b.publish(1, 0, 1, &[1.0; 4]).is_err());
         // non-contiguous ranges rejected up front
-        assert!(HaloBoard::new(&[0..2, 3..4], 1).is_err());
-        assert!(HaloBoard::new(&[0..0, 0..4], 1).is_err());
+        assert!(HaloBoard::new(&[0..2, 3..4], 1, DEFAULT_WAIT_DEADLINE).is_err());
+        assert!(HaloBoard::new(&[0..0, 0..4], 1, DEFAULT_WAIT_DEADLINE).is_err());
+    }
+
+    #[test]
+    fn multi_stage_cells_are_independent() {
+        // a 4-stage fused group exchanges across 3 stage transitions: the
+        // same chunk publishes a fresh cell per stage, and stage ≥ 1
+        // fetches resolve against the matching stage's values only
+        let b = board(&[0, 3, 6], 3);
+        for stage in 0..3usize {
+            let base = 100.0 * stage as f32;
+            b.publish(stage, 0, 2, &[base, base + 1.0, base + 2.0]).unwrap();
+            b.publish(stage, 1, 2, &[base + 3.0, base + 4.0, base + 5.0]).unwrap();
+        }
+        let mut dst = vec![0.0f32; 2];
+        // chunk 1's low halo at stage 2 comes from chunk 0's stage-2 cell
+        b.fetch_into(2, 1..3, &mut dst).unwrap();
+        assert_eq!(dst, vec![201.0, 202.0]);
+        // and stage 1 still serves its own (older) values
+        b.fetch_into(1, 1..3, &mut dst).unwrap();
+        assert_eq!(dst, vec![101.0, 102.0]);
+        // stage-0 high fetch unaffected by later publishes
+        b.fetch_into(0, 3..5, &mut dst).unwrap();
+        assert_eq!(dst, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn wait_deadline_is_configurable_and_errors() {
+        // the timeout path was untestable under the hard-coded 600 s
+        // backstop; a sub-second deadline exercises it directly
+        let b = HaloBoard::new(&ranges(&[0, 2, 4]), 1, Duration::from_millis(150)).unwrap();
+        let t0 = Instant::now();
+        let mut dst = vec![0.0f32; 2];
+        let err = b.fetch_into(0, 2..4, &mut dst).unwrap_err();
+        assert!(err.to_string().contains("exceeded"), "{err}");
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(150), "returned early: {waited:?}");
+        assert!(waited < Duration::from_secs(30), "deadline ignored: {waited:?}");
     }
 
     #[test]
     fn fetch_rejects_uncovered_rows() {
-        let b = HaloBoard::new(&ranges(&[0, 8, 16]), 1).unwrap();
+        let b = board(&[0, 8, 16], 1);
         b.publish(0, 0, 1, &[1.0; 8]).unwrap();
         // row 4 is interior to chunk 0 and outside its halo-1 segments
         let mut dst = vec![0.0f32; 1];
@@ -389,7 +483,7 @@ mod tests {
 
     #[test]
     fn fetch_blocks_until_publish() {
-        let b = HaloBoard::new(&ranges(&[0, 2, 4]), 1).unwrap();
+        let b = board(&[0, 2, 4], 1);
         std::thread::scope(|s| {
             let b = &b;
             let reader = s.spawn(move || {
@@ -405,7 +499,7 @@ mod tests {
 
     #[test]
     fn poison_wakes_blocked_readers() {
-        let b = HaloBoard::new(&ranges(&[0, 2, 4]), 1).unwrap();
+        let b = board(&[0, 2, 4], 1);
         std::thread::scope(|s| {
             let b = &b;
             let reader = s.spawn(move || {

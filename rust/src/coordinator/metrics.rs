@@ -19,7 +19,11 @@ pub struct RunMetrics {
     pub compute: Duration,
     /// chunk reassembly + fold.
     pub aggregate: Duration,
-    /// chunks completed per worker (work-stealing balance diagnostics).
+    /// chunks completed per worker — work-stealing balance diagnostics.
+    /// In exchange-mode fused runs chunks migrate between workers across
+    /// stages, so a worker is credited with the chunks whose *final*
+    /// stage it ran (totals still sum to the chunk count); per-stage load
+    /// balance there is better read from [`RunMetrics::sched_stalls`].
     pub chunks_per_worker: Vec<usize>,
     /// total melt rows processed.
     pub rows: usize,
@@ -40,6 +44,13 @@ pub struct RunMetrics {
     /// ([`HaloMode::Recompute`](crate::coordinator::HaloMode) fused runs;
     /// exchange runs keep this at exactly 0).
     pub halo_recomputed_rows: usize,
+    /// accumulated head start the eager boundary publish gave the
+    /// neighbours: time between a stage's boundary rows landing on the
+    /// halo board and that stage's interior finishing (exchange runs).
+    pub halo_eager_lead: Duration,
+    /// times an exchange worker asked the stage scheduler for a task and
+    /// found none ready (dependency stalls — idle tail waits included).
+    pub sched_stalls: usize,
 }
 
 impl RunMetrics {
@@ -97,6 +108,12 @@ impl RunMetrics {
                 self.halo_published_rows, self.halo_received_rows, self.halo_recomputed_rows
             ));
         }
+        if self.halo_eager_lead > Duration::ZERO || self.sched_stalls > 0 {
+            s.push_str(&format!(
+                " | eager lead {:.2?}, {} stall(s)",
+                self.halo_eager_lead, self.sched_stalls
+            ));
+        }
         s
     }
 }
@@ -149,6 +166,16 @@ impl PlanMetrics {
         self.groups.iter().map(|g| g.halo_recomputed_rows).sum()
     }
 
+    /// Total eager-publish head start across exchange-mode groups.
+    pub fn halo_eager_lead(&self) -> Duration {
+        self.groups.iter().map(|g| g.halo_eager_lead).sum()
+    }
+
+    /// Total scheduler dependency stalls across exchange-mode groups.
+    pub fn sched_stalls(&self) -> usize {
+        self.groups.iter().map(|g| g.sched_stalls).sum()
+    }
+
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
@@ -196,6 +223,15 @@ mod tests {
             ..Default::default()
         };
         assert!(h.summary().contains("halo pub 12 recv 12 redo 0"));
+        // scheduler counters stay silent until they fire too
+        assert!(!h.summary().contains("eager lead"));
+        let s = RunMetrics {
+            halo_eager_lead: Duration::from_millis(3),
+            sched_stalls: 2,
+            ..Default::default()
+        };
+        assert!(s.summary().contains("eager lead"));
+        assert!(s.summary().contains("2 stall(s)"));
     }
 
     #[test]
@@ -228,6 +264,8 @@ mod tests {
             stages: 3,
             halo_published_rows: 40,
             halo_received_rows: 40,
+            halo_eager_lead: Duration::from_millis(4),
+            sched_stalls: 3,
             ..Default::default()
         };
         let g2 = RunMetrics {
@@ -236,6 +274,8 @@ mod tests {
             folds: 1,
             stages: 1,
             halo_recomputed_rows: 9,
+            halo_eager_lead: Duration::from_millis(1),
+            sched_stalls: 1,
             ..Default::default()
         };
         let pm = PlanMetrics {
@@ -248,6 +288,8 @@ mod tests {
         assert_eq!(pm.halo_published(), 40);
         assert_eq!(pm.halo_received(), 40);
         assert_eq!(pm.halo_recomputed(), 9);
+        assert_eq!(pm.halo_eager_lead(), Duration::from_millis(5));
+        assert_eq!(pm.sched_stalls(), 4);
         assert_eq!(pm.total(), Duration::from_millis(15));
         assert!(pm.summary().contains("2 group(s)"));
     }

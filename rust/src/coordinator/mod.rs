@@ -12,7 +12,9 @@
 //!                stage k: local band re-melt (halo slab) + RowKernel
 //!                halo rows: recomputed locally, or exchanged with the
 //!                neighbouring chunks via the halo board ([`halo`],
-//!                `ExecOptions::halo_mode`)
+//!                `ExecOptions::halo_mode`) under a dependency-aware
+//!                (chunk, stage) scheduler ([`scheduler`]) that publishes
+//!                boundary rows before chunk interiors finish
 //!                Backend::Native → kernels::* broadcast cores
 //!                Backend::Pjrt   → per-thread runtime::Engine (singleton
 //!                                  groups; manifest loaded once, on the

@@ -11,9 +11,10 @@
 //! stage.
 
 use std::path::PathBuf;
+use std::time::Duration;
 
 use crate::coordinator::exec::run_single_stage;
-use crate::coordinator::halo::HaloMode;
+use crate::coordinator::halo::{HaloMode, DEFAULT_WAIT_DEADLINE};
 use crate::coordinator::job::{Backend, Job};
 use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::plan::ChunkPolicy;
@@ -36,6 +37,12 @@ pub struct ExecOptions {
     /// [`HaloBoard`](crate::coordinator::halo) — see the crate-level "halo
     /// accounting" docs.
     pub halo_mode: HaloMode,
+    /// Backstop deadline on any single exchange-mode wait (halo-board cell
+    /// fetch or scheduler task wait) before the run errors out. Defaults
+    /// to 600 s — generous enough to ride out a neighbour's legitimate
+    /// compute; drop it (config `halo_wait_secs`, CLI `--halo-wait-secs`)
+    /// so a genuine scheduling bug fails fast instead of hanging CI.
+    pub halo_wait: Duration,
 }
 
 impl ExecOptions {
@@ -47,6 +54,7 @@ impl ExecOptions {
             artifact_dir: None,
             chunk_policy: None,
             halo_mode: HaloMode::Recompute,
+            halo_wait: DEFAULT_WAIT_DEADLINE,
         }
     }
 
@@ -58,12 +66,22 @@ impl ExecOptions {
             artifact_dir: Some(dir.into()),
             chunk_policy: None,
             halo_mode: HaloMode::Recompute,
+            halo_wait: DEFAULT_WAIT_DEADLINE,
         }
     }
 
     /// Builder-style halo mode override for fused groups.
     pub fn with_halo_mode(mut self, mode: HaloMode) -> Self {
         self.halo_mode = mode;
+        self
+    }
+
+    /// Builder-style override of the exchange wait deadline, floored at
+    /// 1 s — a (near-)zero deadline would turn ordinary scheduling waits
+    /// into spurious errors, which is why config (`halo_wait_secs`) and
+    /// CLI (`--halo-wait-secs`) reject 0 outright.
+    pub fn with_halo_wait(mut self, deadline: Duration) -> Self {
+        self.halo_wait = deadline.max(Duration::from_secs(1));
         self
     }
 
@@ -222,6 +240,18 @@ mod tests {
     }
 
     #[test]
+    fn halo_wait_defaults_and_overrides() {
+        let opts = ExecOptions::native(2);
+        assert_eq!(opts.halo_wait, DEFAULT_WAIT_DEADLINE);
+        let opts = opts.with_halo_wait(Duration::from_secs(45));
+        assert_eq!(opts.halo_wait, Duration::from_secs(45));
+        // the builder floors at 1 s: a zero deadline would turn ordinary
+        // scheduling waits into spurious errors
+        let opts = opts.with_halo_wait(Duration::ZERO);
+        assert_eq!(opts.halo_wait, Duration::from_secs(1));
+    }
+
+    #[test]
     fn pjrt_requires_artifact_dir() {
         let x = Tensor::zeros(&[4, 4]).unwrap();
         let opts = ExecOptions {
@@ -230,6 +260,7 @@ mod tests {
             artifact_dir: None,
             chunk_policy: None,
             halo_mode: HaloMode::Recompute,
+            halo_wait: DEFAULT_WAIT_DEADLINE,
         };
         assert!(run_job(&x, &Job::gaussian(&[3, 3], 1.0), &opts).is_err());
     }

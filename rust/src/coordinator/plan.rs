@@ -27,7 +27,6 @@ use std::ops::Range;
 use std::sync::Arc;
 
 use crate::coordinator::exec::execute_groups;
-use crate::coordinator::halo::HaloMode;
 use crate::coordinator::job::Backend;
 use crate::coordinator::kernel::{
     BilateralRowKernel, CurvatureRowKernel, GaussianRowKernel, LocalMomentKernel, MomentStat,
@@ -71,50 +70,32 @@ impl ChunkPolicy {
     }
 }
 
-/// Resolve the partition of a fused group's row space for a halo mode.
+/// Resolve the partition of a fused group's row space.
 ///
-/// Recompute mode is free to over-partition for work stealing; without an
-/// explicit policy it targets chunks of ≥ ~8× the total halo budget so the
-/// duplicated halo work stays a small fraction, floored at one chunk per
-/// worker (idle workers cost more wall-clock than halo recompute) and
-/// capped at 4 chunks per worker for load balancing.
-///
-/// Exchange mode must keep every chunk claimed concurrently for the
-/// neighbour-wait chain to progress (see [`crate::coordinator::halo`]), so
-/// it defaults to exactly one chunk per worker and rejects policies that
-/// produce more chunks than workers.
+/// Both halo modes share the same over-partitioned policy: without an
+/// explicit [`ChunkPolicy`] the heuristic targets chunks of ≥ ~8× the
+/// total halo budget so recompute mode's duplicated halo work stays a
+/// small fraction, floored at one chunk per worker (idle workers cost
+/// more wall-clock than halo overhead) and capped at 4 chunks per worker
+/// for load balancing. Exchange mode used to cap chunks at the worker
+/// count for liveness; the dependency-aware
+/// [`StageScheduler`](crate::coordinator::scheduler::StageScheduler)
+/// dispatches only gather-satisfiable `(chunk, stage)` tasks, so any
+/// chunk count is live and custom policies are always accepted.
 pub(crate) fn fused_partition(
     rows: usize,
     workers: usize,
     halo_budget: usize,
-    mode: HaloMode,
     policy: Option<ChunkPolicy>,
 ) -> Result<RowPartition> {
-    match mode {
-        HaloMode::Exchange => {
-            let partition = match policy {
-                Some(p) => p.partition(rows, workers)?,
-                None => RowPartition::even(rows, workers)?,
-            };
-            if partition.num_parts() > workers {
-                return Err(Error::Coordinator(format!(
-                    "halo exchange needs every chunk claimed concurrently: {} chunks > {} \
-                     worker(s) — use halo_mode = \"recompute\" or a coarser chunk policy",
-                    partition.num_parts(),
-                    workers
-                )));
-            }
-            Ok(partition)
+    match policy {
+        Some(p) => p.partition(rows, workers),
+        None => {
+            let max_parts = 4 * workers;
+            let halo_budget = halo_budget.max(1);
+            let parts = (rows / (8 * halo_budget)).clamp(workers, max_parts);
+            RowPartition::even(rows, parts)
         }
-        HaloMode::Recompute => match policy {
-            Some(p) => p.partition(rows, workers),
-            None => {
-                let max_parts = 4 * workers;
-                let halo_budget = halo_budget.max(1);
-                let parts = (rows / (8 * halo_budget)).clamp(workers, max_parts);
-                RowPartition::even(rows, parts)
-            }
-        },
     }
 }
 
@@ -472,22 +453,23 @@ mod tests {
     }
 
     #[test]
-    fn fused_partition_respects_halo_mode() {
-        // recompute heuristic: chunks ≥ ~8× the halo budget, floored at
-        // one per worker, capped at four per worker
-        let p = fused_partition(10_000, 4, 10, HaloMode::Recompute, None).unwrap();
+    fn fused_partition_over_partitions_for_balance() {
+        // shared heuristic (both halo modes): chunks ≥ ~8× the halo
+        // budget, floored at one per worker, capped at four per worker
+        let p = fused_partition(10_000, 4, 10, None).unwrap();
         assert_eq!(p.num_parts(), 16);
-        let p = fused_partition(100, 4, 1_000, HaloMode::Recompute, None).unwrap();
+        let p = fused_partition(100, 4, 1_000, None).unwrap();
         assert_eq!(p.num_parts(), 4);
-        // exchange default: one chunk per worker, capped at the row count
-        let p = fused_partition(100, 4, 10, HaloMode::Exchange, None).unwrap();
-        assert_eq!(p.num_parts(), 4);
-        let p = fused_partition(3, 8, 10, HaloMode::Exchange, None).unwrap();
+        // parts never exceed the row count
+        let p = fused_partition(3, 8, 10, None).unwrap();
         assert_eq!(p.num_parts(), 3);
-        // custom policies stay legal only while chunks ≤ workers
+        // custom policies are always accepted — oversubscription (chunks >
+        // workers) is legal in every halo mode now that the stage
+        // scheduler keeps exchange live at any chunk count
         let fixed = |rows| Some(ChunkPolicy::Fixed { chunk_rows: rows });
-        assert!(fused_partition(100, 2, 1, HaloMode::Exchange, fixed(10)).is_err());
-        let p = fused_partition(100, 2, 1, HaloMode::Exchange, fixed(50)).unwrap();
+        let p = fused_partition(100, 2, 1, fixed(10)).unwrap();
+        assert_eq!(p.num_parts(), 10);
+        let p = fused_partition(100, 2, 1, fixed(50)).unwrap();
         assert_eq!(p.num_parts(), 2);
     }
 

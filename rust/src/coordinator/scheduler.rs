@@ -1,4 +1,5 @@
-//! Work-stealing chunk queue + result board shared by the worker fleet.
+//! Work-stealing chunk queue, result board, and the dependency-aware
+//! `(chunk, stage)` scheduler shared by the worker fleet.
 //!
 //! The queue is a lock-free cursor over the partition's ranges: workers
 //! `pop()` until drained, which self-balances when chunk costs vary (the
@@ -11,11 +12,39 @@
 //! [`WorkQueue::ranges`] so its cell geometry provably matches the chunk
 //! ids this queue dispenses: `pop()` hands out `(id, range)` pairs in index
 //! order, and exchange-mode workers publish/fetch against those same ids.
+//!
+//! ## The stage scheduler ([`StageScheduler`])
+//!
+//! Exchange-mode fused groups no longer run chunk-at-a-time: the unit of
+//! work is one *stage* of one chunk, and a task `(c, k)` is dispatched only
+//! once every chunk whose stage-`(k − 1)` boundary rows the gather reaches
+//! has already **published** them on the halo board. Workers pull ready
+//! tasks instead of blocking inside `HaloBoard::fetch_into`, and the
+//! per-chunk value slab lives in scheduler-owned task state, so a chunk
+//! migrates freely between workers across stages — the chunk count is no
+//! longer capped at the worker count, restoring the same load-balancing
+//! over-partitioning that recompute mode enjoys.
+//!
+//! **Liveness (any chunk count, any worker count):** whenever no task is
+//! running and some chunk is unfinished, let `k*` be the minimum `progress`
+//! over unfinished chunks and `c` any chunk at `k*`. Every other chunk `d`
+//! has `progress[d] ≥ k*`, and completing task `(d, j)` always advances
+//! `published[d]` to at least `j + 1` (boundary rows are published *during*
+//! the task, and task completion subsumes them), so `published[d] ≥ k*` —
+//! exactly the dependency `(c, k*)` needs. A ready task therefore always
+//! exists, workers never deadlock, and the condvar wait in
+//! [`StageScheduler::next_task`] only rides out in-flight tasks. The wait
+//! is still bounded by the same configurable deadline as the halo board,
+//! converting any future scheduling bug into an error instead of a hang.
 
+use std::cmp::Reverse;
+use std::collections::BTreeSet;
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
+use crate::coordinator::halo::{ABORTED_MSG, WAIT_SLICE};
 use crate::error::{Error, Result};
 use crate::melt::partition::RowPartition;
 
@@ -94,6 +123,250 @@ impl ResultBoard {
     }
 }
 
+/// One dispatched unit of exchange-mode work: run `stage` over `chunk`,
+/// with the chunk's resident value slab (the previous stage's interior
+/// output; empty for stage 0) checked out of the scheduler.
+pub(crate) struct StageTask {
+    pub chunk: usize,
+    pub stage: usize,
+    pub vals: Vec<f32>,
+}
+
+struct SchedState {
+    /// Next stage each chunk must run; `== stages` means finished.
+    progress: Vec<usize>,
+    /// Count of stages whose boundary rows the chunk has made available
+    /// (eager publish mid-task, or task completion — whichever first).
+    published: Vec<usize>,
+    /// Chunk currently checked out by a worker.
+    running: Vec<bool>,
+    /// Resident per-chunk value slabs (empty while checked out / at start).
+    slots: Vec<Vec<f32>>,
+    /// Dispatchable tasks, maintained *incrementally* as publishes and
+    /// completions land (no full rescan per dispatch): `(stage,
+    /// Reverse(chunk))` so `pop_last()` yields the deepest ready stage,
+    /// ties to the lowest chunk id. Readiness is monotone — deps only
+    /// grow, and a queued chunk's `progress` cannot move until it is
+    /// dispatched — so entries never go stale.
+    ready: BTreeSet<(usize, Reverse<usize>)>,
+    /// Whether the chunk's pending stage sits in `ready`.
+    queued: Vec<bool>,
+    finished: usize,
+    /// Times a worker asked for a task and found none ready.
+    stalls: usize,
+    /// Monotone count of scheduler events (publishes/completions) — lets
+    /// idle waiters distinguish "the fleet is progressing without me" from
+    /// a genuine stall, so the watchdog only fires on the latter.
+    events: u64,
+    poisoned: bool,
+}
+
+/// Dependency-aware `(chunk, stage)` task scheduler for exchange-mode
+/// fused groups — see the module docs for the dispatch rule and liveness
+/// argument.
+pub(crate) struct StageScheduler {
+    ranges: Vec<Range<usize>>,
+    /// Per-stage gather reach in flat rows: stage `k` reads at most
+    /// `halos[k]` rows beyond the chunk interior.
+    halos: Vec<usize>,
+    stages: usize,
+    rows: usize,
+    /// Widest per-stage halo — bounds which chunks a publish/completion
+    /// can possibly unblock (overlap is symmetric, so re-checking every
+    /// chunk within `max_halo` of the event's chunk is exhaustive).
+    max_halo: usize,
+    deadline: Duration,
+    state: Mutex<SchedState>,
+    wakeup: Condvar,
+}
+
+impl StageScheduler {
+    /// Build over the partition's chunk interiors for an n-stage fused
+    /// group (`stages = n`, `halos.len() == n`). `deadline` bounds any
+    /// single idle wait in [`Self::next_task`].
+    pub fn new(ranges: &[Range<usize>], halos: &[usize], deadline: Duration) -> Self {
+        let n_chunks = ranges.len();
+        Self {
+            ranges: ranges.to_vec(),
+            halos: halos.to_vec(),
+            stages: halos.len(),
+            rows: ranges.last().map_or(0, |r| r.end),
+            max_halo: halos.iter().copied().max().unwrap_or(0),
+            deadline,
+            state: Mutex::new(SchedState {
+                progress: vec![0; n_chunks],
+                published: vec![0; n_chunks],
+                running: vec![false; n_chunks],
+                slots: vec![Vec::new(); n_chunks],
+                // stage 0 reads the global melt matrix: every chunk starts
+                // dispatchable
+                ready: (0..n_chunks).map(|c| (0, Reverse(c))).collect(),
+                queued: vec![true; n_chunks],
+                finished: 0,
+                stalls: 0,
+                events: 0,
+                poisoned: false,
+            }),
+            wakeup: Condvar::new(),
+        }
+    }
+
+    /// The chunk indices overlapping `[start − pad, end + pad)` — a
+    /// contiguous run, found by binary search over the sorted ranges.
+    fn overlapping(&self, r: &Range<usize>, pad: usize) -> Range<usize> {
+        let lo = r.start.saturating_sub(pad);
+        let hi = (r.end + pad).min(self.rows);
+        let first = self.ranges.partition_point(|rd| rd.end <= lo);
+        let last = self.ranges.partition_point(|rd| rd.start < hi);
+        first..last
+    }
+
+    /// Whether `(c, k)`'s gathers are satisfiable right now: every chunk
+    /// overlapping the halo-extended range must have published stage
+    /// `k − 1`. Stage 0 reads the global melt matrix and is always ready.
+    fn deps_met(&self, st: &SchedState, c: usize, k: usize) -> bool {
+        if k == 0 {
+            return true;
+        }
+        let h = self.halos[k];
+        if h == 0 {
+            return true;
+        }
+        self.overlapping(&self.ranges[c], h)
+            .all(|d| d == c || st.published[d] >= k)
+    }
+
+    /// Queue chunk `c`'s pending stage if it just became dispatchable.
+    /// Readiness is monotone, so this is the only place entries are added
+    /// and no entry ever has to be revalidated at pop time.
+    fn enqueue_if_ready(&self, st: &mut SchedState, c: usize) {
+        if st.queued[c] || st.running[c] {
+            return;
+        }
+        let k = st.progress[c];
+        if k >= self.stages || !self.deps_met(st, c, k) {
+            return;
+        }
+        st.queued[c] = true;
+        st.ready.insert((k, Reverse(c)));
+    }
+
+    /// Re-check every chunk a publish/completion at `c` could have
+    /// unblocked: a dependant's halo-extended range overlaps `c` exactly
+    /// when `c` extended by the same (≤ `max_halo`) reach overlaps it.
+    fn wake_neighbours(&self, st: &mut SchedState, c: usize) {
+        for d in self.overlapping(&self.ranges[c], self.max_halo) {
+            self.enqueue_if_ready(st, d);
+        }
+    }
+
+    /// Claim the next ready task, blocking while every remaining task
+    /// waits on an in-flight neighbour. Returns `Ok(None)` once all chunks
+    /// have run all stages. The wait is watchdogged: if the *whole
+    /// scheduler* sees no event (publish/completion) for the deadline, the
+    /// would-be hang becomes an error — a worker merely idling while the
+    /// rest of the fleet progresses never trips it.
+    pub fn next_task(&self) -> Result<Option<StageTask>> {
+        let mut st = self
+            .state
+            .lock()
+            .map_err(|_| Error::Coordinator("stage scheduler poisoned by a worker panic".into()))?;
+        let mut waited: Option<(Instant, u64)> = None;
+        loop {
+            if st.poisoned {
+                return Err(Error::Coordinator(ABORTED_MSG.into()));
+            }
+            if st.finished == self.ranges.len() {
+                return Ok(None);
+            }
+            // O(log chunks) dispatch off the incrementally-maintained set:
+            // deepest ready stage first (ties to the lowest chunk id), so
+            // chunks retire — and free their result slabs — early
+            if let Some((k, Reverse(c))) = st.ready.pop_last() {
+                debug_assert_eq!(st.progress[c], k);
+                st.queued[c] = false;
+                st.running[c] = true;
+                let vals = std::mem::take(&mut st.slots[c]);
+                return Ok(Some(StageTask { chunk: c, stage: k, vals }));
+            }
+            match &mut waited {
+                None => {
+                    st.stalls += 1; // one stall per dry visit, however long
+                    waited = Some((Instant::now(), st.events));
+                }
+                // fleet progressed since we started waiting: re-arm
+                Some((start, seen)) if *seen != st.events => {
+                    *start = Instant::now();
+                    *seen = st.events;
+                }
+                Some((start, _)) if start.elapsed() > self.deadline => {
+                    return Err(Error::Coordinator(format!(
+                        "stage scheduler saw no ready task and no progress for {:?} — \
+                         worker stalled or scheduling bug",
+                        self.deadline
+                    )));
+                }
+                _ => {}
+            }
+            let (next, _) = self.wakeup.wait_timeout(st, WAIT_SLICE).map_err(|_| {
+                Error::Coordinator("stage scheduler poisoned by a worker panic".into())
+            })?;
+            st = next;
+        }
+    }
+
+    /// Eager notification: `chunk` just published its stage-`stage`
+    /// boundary rows on the halo board (its interior may still be
+    /// computing). Unblocks neighbours waiting to start stage `stage + 1`.
+    pub fn mark_published(&self, chunk: usize, stage: usize) {
+        if let Ok(mut st) = self.state.lock() {
+            if st.published[chunk] < stage + 1 {
+                st.published[chunk] = stage + 1;
+                st.events += 1;
+                self.wake_neighbours(&mut st, chunk);
+                self.wakeup.notify_all();
+            }
+        }
+    }
+
+    /// Check a finished task back in: `vals` is the chunk's stage-`stage`
+    /// interior output, resident for the next stage. Completion subsumes
+    /// publication (the interior contains the boundary rows), so
+    /// `published` advances here too — this is what keeps zero-halo stages,
+    /// which never touch the board, from wedging the dependency counters.
+    pub fn complete(&self, chunk: usize, stage: usize, vals: Vec<f32>) {
+        if let Ok(mut st) = self.state.lock() {
+            st.progress[chunk] = stage + 1;
+            st.published[chunk] = st.published[chunk].max(stage + 1);
+            st.running[chunk] = false;
+            st.slots[chunk] = vals;
+            st.events += 1;
+            if stage + 1 == self.stages {
+                st.finished += 1;
+            }
+            // this publication/progress may unblock the chunk itself (its
+            // next stage) and any dependant within the halo
+            self.wake_neighbours(&mut st, chunk);
+            self.wakeup.notify_all();
+        }
+    }
+
+    /// Mark the run failed and wake every waiter (mirrors
+    /// [`HaloBoard::poison`](crate::coordinator::halo::HaloBoard)).
+    pub fn poison(&self) {
+        if let Ok(mut st) = self.state.lock() {
+            st.poisoned = true;
+        }
+        self.wakeup.notify_all();
+    }
+
+    /// Total dry `next_task` visits across the run (the tasks-ready-stall
+    /// counter surfaced as `RunMetrics::sched_stalls`).
+    pub fn stalls(&self) -> usize {
+        self.state.lock().map(|st| st.stalls).unwrap_or(0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,5 +422,118 @@ mod tests {
         assert!(b.put(0, vec![1.0]).is_err());
         assert!(b.put(5, vec![1.0]).is_err());
         assert!(b.into_chunks().is_err()); // chunk 1 missing
+    }
+
+    const DEADLINE: Duration = Duration::from_secs(600);
+
+    fn sched(bounds: &[usize], halos: &[usize]) -> StageScheduler {
+        let ranges: Vec<Range<usize>> = bounds.windows(2).map(|w| w[0]..w[1]).collect();
+        StageScheduler::new(&ranges, halos, DEADLINE)
+    }
+
+    /// Drive a scheduler to completion on one thread, recording dispatch
+    /// order and asserting every `(chunk, stage)` runs exactly once with
+    /// its dependencies already published.
+    #[test]
+    fn stage_scheduler_dispenses_every_task_dependency_safe() {
+        let (chunks, stages) = (4usize, 3usize);
+        let s = sched(&[0, 5, 10, 15, 20], &[0, 2, 2]);
+        let mut published = vec![0usize; chunks];
+        let mut seen = vec![vec![false; stages]; chunks];
+        while let Some(t) = s.next_task().unwrap() {
+            assert!(!seen[t.chunk][t.stage], "({}, {}) dispatched twice", t.chunk, t.stage);
+            seen[t.chunk][t.stage] = true;
+            if t.stage > 0 {
+                // the dispatch rule: neighbours within the halo have
+                // published the previous stage
+                for d in [t.chunk.wrapping_sub(1), t.chunk + 1] {
+                    if d < chunks {
+                        assert!(
+                            published[d] >= t.stage,
+                            "({}, {}) dispatched before chunk {d} published",
+                            t.chunk,
+                            t.stage
+                        );
+                    }
+                }
+            }
+            // half the tasks publish eagerly, half rely on complete()
+            if t.stage + 1 < stages && t.chunk % 2 == 0 {
+                s.mark_published(t.chunk, t.stage);
+            }
+            published[t.chunk] = published[t.chunk].max(t.stage + 1);
+            s.complete(t.chunk, t.stage, vec![t.chunk as f32]);
+        }
+        assert!(seen.iter().all(|c| c.iter().all(|&v| v)));
+        // drained schedulers keep answering None
+        assert!(s.next_task().unwrap().is_none());
+        assert_eq!(s.stalls(), 0);
+    }
+
+    #[test]
+    fn stage_scheduler_runs_depth_first_once_deps_allow() {
+        // 3 chunks × 2 stages, halo 1: after chunks 0 and 1 finish stage
+        // 0, chunk 0's stage 1 outranks chunk 2's stage 0
+        let s = sched(&[0, 4, 8, 12], &[0, 1]);
+        let t = s.next_task().unwrap().unwrap();
+        assert_eq!((t.chunk, t.stage), (0, 0));
+        s.complete(0, 0, vec![]);
+        let t = s.next_task().unwrap().unwrap();
+        assert_eq!((t.chunk, t.stage), (1, 0));
+        s.complete(1, 0, vec![]);
+        let t = s.next_task().unwrap().unwrap();
+        assert_eq!((t.chunk, t.stage), (0, 1), "deepest ready task wins");
+    }
+
+    #[test]
+    fn stage_scheduler_migrates_the_value_slab() {
+        let s = sched(&[0, 3, 6], &[0, 1]);
+        let t0 = s.next_task().unwrap().unwrap();
+        assert_eq!((t0.chunk, t0.stage), (0, 0));
+        assert!(t0.vals.is_empty(), "stage 0 starts with no resident slab");
+        let tb = s.next_task().unwrap().unwrap();
+        assert_eq!((tb.chunk, tb.stage), (1, 0));
+        s.complete(t0.chunk, 0, vec![7.0, 8.0, 9.0]);
+        s.complete(tb.chunk, 0, vec![1.0, 2.0, 3.0]); // unblocks both stage 1s
+        let t1 = s.next_task().unwrap().unwrap();
+        assert_eq!((t1.chunk, t1.stage), (0, 1));
+        assert_eq!(t1.vals, vec![7.0, 8.0, 9.0], "stage 1 inherits stage 0's output");
+    }
+
+    #[test]
+    fn stage_scheduler_counts_stalls_and_times_out() {
+        // chunk 0 checked out but never completed: chunk 1's stage-1
+        // dependency can never be met, so a second worker stalls and the
+        // sub-second deadline converts the would-be hang into an error
+        let ranges = vec![0..4, 4..8];
+        let s = StageScheduler::new(&ranges, &[0, 1], Duration::from_millis(150));
+        let t = s.next_task().unwrap().unwrap();
+        assert_eq!((t.chunk, t.stage), (0, 0));
+        let u = s.next_task().unwrap().unwrap();
+        assert_eq!((u.chunk, u.stage), (1, 0));
+        s.complete(1, 0, vec![]);
+        let err = s.next_task().unwrap_err();
+        assert!(err.to_string().contains("no ready task"), "{err}");
+        assert!(s.stalls() >= 1);
+    }
+
+    #[test]
+    fn stage_scheduler_poison_wakes_waiters() {
+        let ranges = vec![0..4, 4..8];
+        let s = StageScheduler::new(&ranges, &[0, 1], DEADLINE);
+        // both stage-0 tasks out; a blocked next_task must observe poison
+        let a = s.next_task().unwrap().unwrap();
+        let b = s.next_task().unwrap().unwrap();
+        assert_eq!((a.chunk, b.chunk), (0, 1));
+        std::thread::scope(|scope| {
+            let s = &s;
+            let waiter = scope.spawn(move || s.next_task());
+            std::thread::sleep(Duration::from_millis(30));
+            s.poison();
+            let err = waiter.join().unwrap().unwrap_err();
+            assert!(err.to_string().contains("aborted"), "{err}");
+        });
+        // and every later call fails fast too
+        assert!(s.next_task().is_err());
     }
 }

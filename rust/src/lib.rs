@@ -104,20 +104,27 @@
 //!   overlap rows are computed by more than one worker — duplicated kernel
 //!   work that grows with worker count and stage depth.
 //! * [`HaloMode::Exchange`](coordinator::HaloMode) — each chunk computes
-//!   only its interior; after stage `k` it *publishes* its boundary rows
-//!   on a cross-chunk halo board (`coordinator::halo`) and *fetches* the
-//!   few rows it needs from its neighbours before stage `k + 1`. Zero
-//!   duplicated kernel work, at the cost of a brief neighbour wait; the
-//!   chunk count is capped at the worker count so every chunk progresses
-//!   concurrently (the liveness argument lives in `coordinator::halo`).
+//!   only its interior; boundary rows travel between neighbours over a
+//!   cross-chunk halo board (`coordinator::halo`). Work is dispatched as
+//!   `(chunk, stage)` tasks by a dependency-aware scheduler
+//!   (`coordinator::scheduler::StageScheduler`): a stage starts only once
+//!   every chunk its gathers reach has published the previous stage, so
+//!   workers never block on the hot path, chunks migrate between workers
+//!   across stages, and **any chunk count is live** — exchange
+//!   over-partitions for load balancing exactly like recompute. Each
+//!   stage computes its two boundary segments *first* and publishes them
+//!   before the interior, handing neighbours a measured head start. Zero
+//!   duplicated kernel work.
 //!
 //! Both modes are bit-for-bit identical to each other and to the legacy
 //! per-stage pipeline. [`RunMetrics`](coordinator::RunMetrics) accounts
-//! for the traffic per group — `halo_published_rows`, `halo_received_rows`
-//! and `halo_recomputed_rows` (exactly 0 in exchange mode) — and
+//! for the traffic per group — `halo_published_rows`, `halo_received_rows`,
+//! `halo_recomputed_rows` (exactly 0 in exchange mode), the eager-publish
+//! head start `halo_eager_lead` and the scheduler's `sched_stalls` — and
 //! [`PlanMetrics`](coordinator::PlanMetrics) totals them per plan. The
-//! knob is also exposed as `halo_mode = "recompute" | "exchange"` in run
-//! configs and `--halo-mode` on `meltframe run`.
+//! knobs are also exposed as `halo_mode = "recompute" | "exchange"` and
+//! `halo_wait_secs` (the exchange watchdog deadline) in run configs, and
+//! `--halo-mode` / `--halo-wait-secs` on `meltframe run`.
 //!
 //! ```
 //! use meltframe::prelude::*;

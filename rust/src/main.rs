@@ -62,10 +62,14 @@ fn dispatch(cmd: Command) -> Result<()> {
             out,
             legacy,
             halo_mode,
+            halo_wait_secs,
         } => {
             let mut cfg = RunConfig::load(&config)?;
             if let Some(mode) = halo_mode {
                 cfg.options.halo_mode = mode;
+            }
+            if let Some(secs) = halo_wait_secs {
+                cfg.options.halo_wait = std::time::Duration::from_secs(secs);
             }
             let x = cfg.input.load()?;
             let fused = cfg.fused && !legacy;

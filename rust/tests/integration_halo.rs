@@ -3,9 +3,12 @@
 //! **bit-for-bit**, across boundary modes × first-stage grid modes ×
 //! worker counts × stage depths, including the edge geometries that stress
 //! halo bookkeeping: chunks narrower than the halo budget, `rows <
-//! workers`, 1×N / N×1 tensors, and deep (≥5-stage) pipelines. Also pins
-//! the halo accounting invariants: exchange runs recompute exactly zero
-//! halo rows, recompute runs touch the board exactly never.
+//! workers`, 1×N / N×1 tensors, deep (≥5-stage) pipelines, and —
+//! since the dependency-aware stage scheduler — **oversubscribed**
+//! partitions with more chunks than workers. Also pins the halo
+//! accounting invariants: exchange runs recompute exactly zero halo rows,
+//! recompute runs touch the board exactly never, and the eager boundary
+//! publish records a nonzero head start on multi-stage groups.
 
 use meltframe::coordinator::pipeline::{run_pipeline, ExecOptions};
 use meltframe::coordinator::{ChunkPolicy, HaloMode, Job, Plan};
@@ -163,6 +166,86 @@ fn deep_pipelines_stream_in_both_modes() {
             assert!(rec_pm.halo_recomputed() > 0);
         }
     }
+}
+
+#[test]
+fn oversubscribed_chunks_bit_for_bit_property() {
+    // chunks > workers — rejected before the stage scheduler, now the
+    // default-grade load-balancing configuration: random boundary × grid ×
+    // worker-count × parts-per-worker combinations must stay exact
+    check_property("oversubscribed exchange == legacy", 12, |rng: &mut SplitMix64| {
+        let dims = [6 + rng.below(8), 6 + rng.below(8)];
+        let x = Tensor::random(&dims, 0.0, 255.0, rng.next_u64()).unwrap();
+        let n_stages = 2 + rng.below(3);
+        let mut jobs: Vec<Job> = (0..n_stages).map(|_| random_job(rng, &[3, 3])).collect();
+        jobs[0].grid = match rng.below(3) {
+            0 => GridMode::Same,
+            1 => GridMode::Valid,
+            _ => GridMode::Strided(vec![2, 2]),
+        };
+        let (legacy, _) = run_pipeline(&x, &jobs, &recompute(1)).unwrap();
+        let workers = 1 + rng.below(3);
+        let parts_per_worker = 2 + rng.below(3); // always oversubscribed
+        let mut exc_opts = exchange(workers);
+        exc_opts.chunk_policy = Some(ChunkPolicy::EvenPerWorker { parts_per_worker });
+        let (exc, pm) = plan_of(&x, &jobs).run(&exc_opts).unwrap();
+        assert_allclose(exc.data(), legacy.data(), 0.0, 0.0);
+        assert_eq!(pm.halo_recomputed(), 0);
+        assert_eq!(pm.melts(), 1);
+        assert_eq!(pm.folds(), 1);
+    });
+}
+
+#[test]
+fn oversubscribed_chunks_narrower_than_the_halo() {
+    // the cruellest combination: 20 single-row chunks on 3 workers, so a
+    // chunk's gather spans several chunks that are NOT all resident in a
+    // worker at once — only dependency-aware dispatch keeps this live
+    let x = Tensor::random(&[4, 5], 0.0, 255.0, 19).unwrap(); // 20 melt rows
+    let jobs = vec![
+        Job::gaussian(&[3, 3], 1.0),
+        Job::curvature(&[3, 3]),
+        Job::quantile(&[3, 3], 0.8),
+    ];
+    let (legacy, _) = run_pipeline(&x, &jobs, &recompute(1)).unwrap();
+    for workers in [2usize, 3, 7] {
+        let mut opts = exchange(workers);
+        opts.chunk_policy = Some(ChunkPolicy::Fixed { chunk_rows: 1 });
+        let (exc, pm) = plan_of(&x, &jobs).run(&opts).unwrap();
+        assert_allclose(exc.data(), legacy.data(), 0.0, 0.0);
+        assert_eq!(pm.halo_recomputed(), 0, "workers {workers}");
+        assert!(pm.halo_received() > 0);
+    }
+}
+
+#[test]
+fn eager_publish_and_stall_accounting() {
+    // a ≥3-stage fused group with real boundaries: the boundary-first
+    // split must record a head start, recompute exactly nothing, and the
+    // stall counter must stay plausible (bounded by total task count)
+    let x = Tensor::random(&[24, 25], 0.0, 255.0, 8).unwrap();
+    let jobs = vec![
+        Job::gaussian(&[3, 3], 1.0),
+        Job::curvature(&[3, 3]),
+        Job::median(&[3, 3]),
+    ];
+    let (legacy, _) = run_pipeline(&x, &jobs, &recompute(1)).unwrap();
+    let mut opts = exchange(3);
+    opts.chunk_policy = Some(ChunkPolicy::EvenPerWorker { parts_per_worker: 3 });
+    let (out, pm) = plan_of(&x, &jobs).run(&opts).unwrap();
+    assert_allclose(out.data(), legacy.data(), 0.0, 0.0);
+    assert_eq!(pm.halo_recomputed(), 0);
+    assert!(pm.halo_published() > 0);
+    assert!(pm.halo_received() > 0);
+    // the acceptance counter: boundaries hit the board before interiors
+    assert!(pm.halo_eager_lead() > std::time::Duration::ZERO);
+    // 9 chunks × 3 stages = 27 tasks; a worker can stall at most once per
+    // dry visit between tasks, so the counter stays in the same ballpark
+    assert!(pm.sched_stalls() <= 27 * 3, "stalls exploded: {}", pm.sched_stalls());
+    // recompute mode never schedules or leads
+    let (_, rec_pm) = plan_of(&x, &jobs).run(&recompute(3)).unwrap();
+    assert_eq!(rec_pm.sched_stalls(), 0);
+    assert_eq!(rec_pm.halo_eager_lead(), std::time::Duration::ZERO);
 }
 
 #[test]

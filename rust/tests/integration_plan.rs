@@ -6,7 +6,7 @@
 
 use meltframe::config::spec::RunConfig;
 use meltframe::coordinator::pipeline::{run_pipeline, ExecOptions};
-use meltframe::coordinator::{Backend, HaloMode, Job, Plan};
+use meltframe::coordinator::{Backend, Job, Plan};
 use meltframe::melt::grid::GridMode;
 use meltframe::melt::melt::BoundaryMode;
 use meltframe::stats::descriptive::moments;
@@ -249,11 +249,8 @@ fn plan_surface_errors_cleanly() {
         .compile(Backend::Pjrt)
         .unwrap();
     let opts = ExecOptions {
-        workers: 1,
-        backend: Backend::Pjrt,
         artifact_dir: None,
-        chunk_policy: None,
-        halo_mode: HaloMode::Recompute,
+        ..ExecOptions::pjrt(1, "unused")
     };
     assert!(compiled.execute(&opts).is_err());
 }
