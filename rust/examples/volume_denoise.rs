@@ -1,0 +1,167 @@
+//! Volume denoising walkthrough: the 3-D workload end to end.
+//!
+//! A synthetic `(D, H, W)` volume (bright cuboid in a noisy field) is
+//! corrupted with salt-and-pepper impulses and pushed through a fused
+//! 3-D pipeline:
+//!
+//!   median 3³            — removes the impulses (sample-determined stage)
+//!   separable gaussian 3³ — three axis-factored passes [3,1,1]·[1,3,1]·
+//!                           [1,1,3] that together equal the dense 3³
+//!                           gaussian at Σw instead of Πw multiplies
+//!
+//! All four stages are `Same`-grid / `Reflect`, so the planner fuses them
+//! into ONE melt/fold group; chunks are cut with the depth-slab policy
+//! (`ChunkPolicy::Aligned { unit: H * W }`), so every chunk is a run of
+//! whole z-slabs and its halo is a stack of complete `(z, y)` lines —
+//! the 3-D geometry the halo board and stage scheduler carry.
+//!
+//! The fused result is asserted bit-for-bit against the legacy per-stage
+//! baseline, and denoising quality is reported as mean absolute error
+//! against the noise-free phantom.
+//!
+//! Run: `cargo run --release --example volume_denoise`
+//! Flags: `--dims D,H,W` (default 40,40,40), `--workers N` (default 4),
+//! `--halo-mode recompute|exchange`, `--out file.npy`.
+
+use meltframe::coordinator::pipeline::{run_pipeline, ExecOptions};
+use meltframe::coordinator::{ChunkPolicy, Job};
+use meltframe::prelude::*;
+use meltframe::testing::{assert_allclose, SplitMix64};
+
+fn main() -> Result<()> {
+    let mut dims = vec![40usize, 40, 40];
+    let mut workers = 4usize;
+    let mut halo_mode = HaloMode::Recompute;
+    let mut out_path: Option<std::path::PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        let mut value = |flag: &str| {
+            args.next()
+                .ok_or_else(|| Error::Config(format!("{flag} expects a value")))
+        };
+        match a.as_str() {
+            "--dims" => {
+                dims = value("--dims")?
+                    .split(',')
+                    .map(|s| {
+                        s.trim()
+                            .parse::<usize>()
+                            .map_err(|_| Error::Config(format!("bad extent '{s}' in --dims")))
+                    })
+                    .collect::<Result<_>>()?;
+                if dims.len() != 3 {
+                    return Err(Error::Config("--dims expects D,H,W (three extents)".into()));
+                }
+            }
+            "--workers" => {
+                workers = value("--workers")?
+                    .parse()
+                    .map_err(|_| Error::Config("--workers expects a number".into()))?;
+            }
+            "--halo-mode" => halo_mode = HaloMode::parse(&value("--halo-mode")?)?,
+            "--out" => out_path = Some(std::path::PathBuf::from(value("--out")?)),
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown argument '{other}' (volume_denoise takes --dims, --workers, \
+                     --halo-mode, --out)"
+                )))
+            }
+        }
+    }
+
+    // ---- the workload ------------------------------------------------------
+    // phantom: the noise-free cuboid the synthetic volume draws over
+    let phantom = {
+        let mut t = Tensor::zeros(&dims)?;
+        let shape = t.shape_obj().clone();
+        for (flat, idx) in shape.iter_indices().enumerate() {
+            let inside = idx
+                .iter()
+                .zip(&dims)
+                .all(|(&i, &d)| i >= d / 4 && i < d - d / 4);
+            t.data_mut()[flat] = if inside { 200.0 } else { 40.0 };
+        }
+        t
+    };
+    let mut noisy = Tensor::synthetic_volume(&dims, 7);
+    let n = noisy.len();
+    let mut rng = SplitMix64::new(11);
+    for _ in 0..n / 50 {
+        let i = rng.below(n);
+        noisy.data_mut()[i] = if rng.below(2) == 0 { 0.0 } else { 255.0 };
+    }
+    let mae = |t: &Tensor<f32>| -> f64 {
+        t.data()
+            .iter()
+            .zip(phantom.data())
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum::<f64>()
+            / n as f64
+    };
+    println!(
+        "volume {:?} | {} voxels | ~{} impulses injected | {workers} worker(s) | halo {halo_mode}",
+        dims,
+        n,
+        n / 50
+    );
+
+    // ---- legacy baseline: the same stages, fold→re-melt between each ------
+    let jobs = vec![
+        Job::median(&[3, 3, 3]),
+        Job::gaussian(&[3, 1, 1], 1.0),
+        Job::gaussian(&[1, 3, 1], 1.0),
+        Job::gaussian(&[1, 1, 3], 1.0),
+    ];
+    let (legacy, _) = run_pipeline(&noisy, &jobs, &ExecOptions::native(1))?;
+
+    // ---- the fused volume plan: depth-slab chunks, 4 per worker ------------
+    let mut opts = ExecOptions::native(workers).with_halo_mode(halo_mode);
+    opts.chunk_policy = Some(ChunkPolicy::Aligned {
+        unit: dims[1] * dims[2],
+        parts_per_worker: 4,
+    });
+    let plan = Plan::over_volume(&noisy)
+        .median(&[3, 3, 3])
+        .gaussian_separable(&[3, 3, 3], 1.0);
+    let compiled = plan.compile(Backend::Native)?;
+    println!("plan: {}", compiled.describe());
+    let (out, pm) = compiled.execute(&opts)?;
+    assert_allclose(out.data(), legacy.data(), 0.0, 0.0);
+    assert_eq!(pm.melts(), 1, "median + 3 axis passes must share one melt");
+    assert_eq!(pm.folds(), 1);
+    assert_eq!(pm.stages(), 4);
+    if halo_mode == HaloMode::Exchange {
+        assert_eq!(pm.halo_recomputed(), 0, "exchange must recompute zero halo rows");
+        // a depth-1 volume has a single slab chunk: nothing to trade, and
+        // correctly so — only multi-chunk geometries must show traffic
+        if dims[0] > 1 {
+            assert!(pm.halo_published() > 0, "slab chunks must trade boundary lines");
+        }
+        println!(
+            "exchange: pub {} recv {} redo {} | eager lead {:.2?} | {} stall(s)",
+            pm.halo_published(),
+            pm.halo_received(),
+            pm.halo_recomputed(),
+            pm.halo_eager_lead(),
+            pm.sched_stalls()
+        );
+    }
+    for (i, g) in pm.groups.iter().enumerate() {
+        println!("group {}: {}", i + 1, g.summary());
+    }
+
+    // ---- quality -----------------------------------------------------------
+    let (before, after) = (mae(&noisy), mae(&out));
+    println!("MAE vs phantom: noisy {before:.2} -> denoised {after:.2}");
+    assert!(
+        after < before,
+        "denoising must move the volume toward the phantom ({after:.2} vs {before:.2})"
+    );
+
+    if let Some(path) = out_path {
+        meltframe::tensor::npy::save(&out, &path)?;
+        println!("wrote {}", path.display());
+    }
+    println!("\nvolume_denoise OK");
+    Ok(())
+}

@@ -35,6 +35,9 @@ pub enum Command {
         workers: usize,
         backend: String,
         artifacts: PathBuf,
+        /// Workload shape: `(H, W)` image or `(D, H, W)` volume
+        /// (`--dims 256,256` / `--dims 48,48,48`).
+        dims: Vec<usize>,
     },
     Help,
 }
@@ -47,6 +50,7 @@ USAGE:
                   [--halo-mode recompute|exchange] [--halo-wait-secs <n>]
     meltframe inspect [--artifacts <dir>]
     meltframe demo [--workers <n>] [--backend native|pjrt] [--artifacts <dir>]
+                   [--dims <d,h,w>|<h,w>]
     meltframe help
 
 `run` executes the configured stages through the fused lazy Plan (one melt,
@@ -55,6 +59,9 @@ one fold per fusable group); `--legacy` forces the stage-by-stage baseline.
 (duplicate boundary rows locally) or `exchange` (trade them between
 neighbouring chunks through the halo board, scheduled dependency-aware).
 `--halo-wait-secs` overrides the exchange watchdog deadline (default 600).
+`demo --dims` picks the synthetic workload shape: three comma-separated
+extents run the (D, H, W) volume pipeline, two run the (H, W) image one
+(default 48,48,48).
 ";
 
 /// Parse argv (without the program name).
@@ -124,6 +131,7 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
             let mut workers = 4usize;
             let mut backend = "native".to_string();
             let mut artifacts = PathBuf::from("artifacts");
+            let mut dims = vec![48usize, 48, 48];
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--workers" => {
@@ -135,6 +143,24 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                     "--artifacts" => {
                         artifacts = PathBuf::from(expect_value(&mut it, "--artifacts")?)
                     }
+                    "--dims" => {
+                        dims = expect_value(&mut it, "--dims")?
+                            .split(',')
+                            .map(|s| {
+                                s.trim().parse::<usize>().map_err(|_| {
+                                    Error::Config(format!("bad extent '{s}' in --dims"))
+                                })
+                            })
+                            .collect::<Result<_>>()?;
+                        if dims.len() != 2 && dims.len() != 3 {
+                            return Err(Error::Config(
+                                "--dims expects H,W (image) or D,H,W (volume)".into(),
+                            ));
+                        }
+                        if dims.contains(&0) {
+                            return Err(Error::Config("--dims extents must be >= 1".into()));
+                        }
+                    }
                     other => return Err(Error::Config(format!("unknown argument '{other}'"))),
                 }
             }
@@ -145,6 +171,7 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                 workers,
                 backend,
                 artifacts,
+                dims,
             })
         }
         other => Err(Error::Config(format!(
@@ -224,8 +251,48 @@ mod tests {
                 workers: 2,
                 backend: "pjrt".into(),
                 artifacts: PathBuf::from("artifacts"),
+                dims: vec![48, 48, 48],
             }
         );
+    }
+
+    #[test]
+    fn demo_dims_accept_images_and_volumes() {
+        // a 2-extent --dims runs the image demo, 3 extents the volume demo
+        assert_eq!(
+            parse_args(&argv("demo --dims 128,96")).unwrap(),
+            Command::Demo {
+                workers: 4,
+                backend: "native".into(),
+                artifacts: PathBuf::from("artifacts"),
+                dims: vec![128, 96],
+            }
+        );
+        assert_eq!(
+            parse_args(&argv("demo --dims 32,48,64 --workers 3")).unwrap(),
+            Command::Demo {
+                workers: 3,
+                backend: "native".into(),
+                artifacts: PathBuf::from("artifacts"),
+                dims: vec![32, 48, 64],
+            }
+        );
+        // padded spellings parse; bad ranks/extents do not
+        assert!(parse_args(&argv("demo --dims 16, 16, 16")).is_err()); // shell-split
+        assert_eq!(
+            parse_args(&["demo".into(), "--dims".into(), "16, 16, 16".into()]).unwrap(),
+            Command::Demo {
+                workers: 4,
+                backend: "native".into(),
+                artifacts: PathBuf::from("artifacts"),
+                dims: vec![16, 16, 16],
+            }
+        );
+        assert!(parse_args(&argv("demo --dims 16")).is_err());
+        assert!(parse_args(&argv("demo --dims 1,2,3,4")).is_err());
+        assert!(parse_args(&argv("demo --dims 16,0,16")).is_err());
+        assert!(parse_args(&argv("demo --dims abc,16")).is_err());
+        assert!(parse_args(&argv("demo --dims")).is_err());
     }
 
     #[test]

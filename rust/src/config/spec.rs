@@ -157,10 +157,15 @@ impl RunConfig {
             .transpose()?
             .unwrap_or(42) as u64;
         match kind.as_str() {
-            "volume" => Ok(InputSpec::SyntheticVolume {
-                dims: doc.require("input", "dims")?.as_usize_vec()?,
-                seed,
-            }),
+            "volume" => {
+                let dims = doc.require("input", "dims")?.as_usize_vec()?;
+                if dims.len() != 3 {
+                    return Err(Error::Config(format!(
+                        "volume dims must be 3-D (D, H, W): {dims:?}"
+                    )));
+                }
+                Ok(InputSpec::SyntheticVolume { dims, seed })
+            }
             "image" => {
                 let dims = doc.require("input", "dims")?.as_usize_vec()?;
                 if dims.len() != 2 {
@@ -386,13 +391,19 @@ mod tests {
             "[input]\nkind = \"mask\"\ndims = [8, 8]\n[job]\nkind = \"curvature\"\nwindow = [4, 4]"
         )
         .is_err());
-        // 2-D volume dims
-        assert!(RunConfig::parse(
-            "[input]\nkind = \"volume\"\ndims = [8, 8]\n[job]\nkind = \"curvature\"\nwindow = [3, 3]"
-        )
-        .unwrap()
-        .input
-        .load()
-        .is_err());
+        // non-3-D volume dims caught at parse time too
+        for dims in ["[8, 8]", "[8]", "[8, 8, 8, 8]"] {
+            assert!(
+                RunConfig::parse(&format!(
+                    "[input]\nkind = \"volume\"\ndims = {dims}\n[job]\nkind = \"curvature\"\nwindow = [3, 3]"
+                ))
+                .is_err(),
+                "volume dims {dims} must be rejected"
+            );
+        }
+        // a directly constructed spec still validates at load
+        assert!(InputSpec::SyntheticVolume { dims: vec![8, 8], seed: 1 }
+            .load()
+            .is_err());
     }
 }

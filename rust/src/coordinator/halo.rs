@@ -220,8 +220,14 @@ impl HaloBoard {
     /// last `halo` rows, clamped to the chunk — except that the first
     /// chunk skips its low segment and the last its high segment (no
     /// neighbour exists on that side to fetch them). Returns the number of
-    /// distinct rows published. Each cell accepts exactly one publish.
+    /// distinct rows published. Each cell accepts exactly one publish, and
+    /// a poisoned board accepts none: once any worker has failed, the run
+    /// is aborting and late publishes fail fast instead of racing the
+    /// teardown.
     pub fn publish(&self, stage: usize, chunk: usize, halo: usize, vals: &[f32]) -> Result<usize> {
+        if self.poisoned.load(Ordering::Acquire) {
+            return Err(Error::Coordinator(ABORTED_MSG.into()));
+        }
         let r = self
             .ranges
             .get(chunk)
@@ -296,6 +302,11 @@ impl HaloBoard {
     }
 
     fn wait(&self, stage: usize, chunk: usize) -> Result<MutexGuard<'_, Option<Published>>> {
+        // a poisoned board serves nothing, published or not: the run is
+        // aborting, so every reader fails fast with the secondary error
+        if self.poisoned.load(Ordering::Acquire) {
+            return Err(Error::Coordinator(ABORTED_MSG.into()));
+        }
         let cell = self.cell(stage, chunk);
         let start = Instant::now();
         let mut slot = cell
@@ -495,6 +506,41 @@ mod tests {
             b.publish(0, 1, 2, &[8.0, 9.0]).unwrap();
             assert_eq!(reader.join().unwrap(), vec![8.0, 9.0]);
         });
+    }
+
+    #[test]
+    fn publish_after_poison_is_rejected() {
+        // once any worker failed, the run is aborting: a straggler's late
+        // publish must fail fast with the secondary abort error instead of
+        // landing rows no one will ever read
+        let b = board(&[0, 4, 8], 1);
+        b.publish(0, 0, 1, &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        // pre-poison sanity: chunk 0's high segment (row 3) is served
+        let mut dst = vec![0.0f32; 1];
+        b.fetch_into(0, 3..4, &mut dst).unwrap();
+        assert_eq!(dst, vec![4.0]);
+        b.poison();
+        let err = b.publish(0, 1, 1, &[2.0; 4]).unwrap_err();
+        assert!(err.to_string().contains("aborted"), "{err}");
+        // a poisoned board serves NOTHING: the very row that succeeded
+        // above now aborts, as does a fetch against an unpublished cell
+        let err = b.fetch_into(0, 3..4, &mut dst).unwrap_err();
+        assert!(err.to_string().contains("aborted"), "{err}");
+        assert!(b.fetch_into(0, 4..5, &mut dst).is_err());
+    }
+
+    #[test]
+    fn double_publish_is_rejected_even_for_identical_rows() {
+        // publish-once is a hard invariant: a second publish of the SAME
+        // values still errors — re-publishing would mask a scheduler bug
+        // that ran a (chunk, stage) task twice
+        let b = board(&[0, 3, 6], 2);
+        let vals = [7.0f32, 8.0, 9.0];
+        b.publish(1, 0, 1, &vals).unwrap();
+        let err = b.publish(1, 0, 1, &vals).unwrap_err();
+        assert!(err.to_string().contains("published twice"), "{err}");
+        // other cells of the same chunk stay usable
+        b.publish(0, 0, 1, &vals).unwrap();
     }
 
     #[test]

@@ -29,6 +29,29 @@
 //! as thin spec-level shims (config files parse to them), with
 //! `run_pipeline` doubling as the unfused fold→re-melt baseline.
 //!
+//! ## The 3-D halo-width rule
+//!
+//! The whole machinery is rank-general because chunks, halos and the
+//! exchange board all live in *flat melt-row* space. For a `Same`-grid
+//! `(D, H, W)` volume the flat rows are the voxels in `(z, y, x)`
+//! row-major order, so a window of per-axis radii `(r_z, r_y, r_x)`
+//! reaches
+//!
+//! ```text
+//! flat_halo = min(r_z, D−1)·H·W + min(r_y, H−1)·W + min(r_x, W−1)
+//! ```
+//!
+//! rows past a chunk boundary ([`crate::melt::melt::flat_halo`]): a chunk
+//! is a stack of `(z, y)` lines of `W` voxels, and its halo spans whole
+//! neighbouring lines in **both** the z and y directions — `r_z` full
+//! slabs plus `r_y` lines plus the `r_x` in-line tail. Exchange-mode
+//! boundary segments, recompute budgets and the scheduler's dependency
+//! reach all use this one number, which is why 3-D pipelines stream
+//! through [`halo::HaloBoard`] / [`scheduler::StageScheduler`] unchanged
+//! (property-tested in `tests/integration_volume.rs`). Cut chunks on
+//! whole-slab boundaries with [`plan::ChunkPolicy::Aligned`]`{ unit: H *
+//! W, .. }`.
+//!
 //! Setup time (melt + partition + thread spawn) is metered separately from
 //! compute time so Fig 6's "deduct the process-initialization cost"
 //! methodology can be reproduced faithfully; [`RunMetrics`] additionally

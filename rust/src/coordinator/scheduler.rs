@@ -518,6 +518,22 @@ mod tests {
     }
 
     #[test]
+    fn stage_scheduler_ignores_events_after_poison() {
+        // stragglers may still report completions/publishes while the run
+        // tears down: they must not panic, revive the queue, or mask the
+        // poison — every subsequent next_task stays an error
+        let ranges = vec![0..4, 4..8];
+        let s = StageScheduler::new(&ranges, &[0, 1], DEADLINE);
+        let t = s.next_task().unwrap().unwrap();
+        s.poison();
+        s.mark_published(t.chunk, t.stage);
+        s.complete(t.chunk, t.stage, vec![1.0; 4]);
+        let err = s.next_task().unwrap_err();
+        assert!(err.to_string().contains("aborted"), "{err}");
+        assert!(s.next_task().is_err());
+    }
+
+    #[test]
     fn stage_scheduler_poison_wakes_waiters() {
         let ranges = vec![0..4, 4..8];
         let s = StageScheduler::new(&ranges, &[0, 1], DEADLINE);

@@ -77,6 +77,34 @@
 //! assert_eq!(metrics.stages(), 3);
 //! ```
 //!
+//! ## Volumes
+//!
+//! Everything is rank-general — chunks, halos and the exchange board live
+//! in flat melt-row space — and volumes are first-class:
+//! [`Plan::over_volume`](coordinator::Plan::over_volume) validates the
+//! `(D, H, W)` shape up front,
+//! [`Plan::gaussian_separable`](coordinator::Plan::gaussian_separable)
+//! records the axis-factored gaussian chain (`[3,1,1]·[1,3,1]·[1,1,3]`,
+//! `Σw` instead of `Πw` multiplies per voxel, fused into ONE melt/fold),
+//! and [`ChunkPolicy::Aligned`](coordinator::ChunkPolicy) cuts chunks on
+//! whole z-slab boundaries so every traded halo is a stack of complete
+//! `(z, y)` lines. The 3-D halo rule — a window of radii `(r_z, r_y,
+//! r_x)` reaches `r_z·H·W + r_y·W + r_x` flat rows, clamped per axis —
+//! lives in the [`coordinator`] docs.
+//!
+//! ```
+//! use meltframe::prelude::*;
+//!
+//! let vol = Tensor::<f32>::synthetic_volume(&[12, 12, 12], 9);
+//! let plan = Plan::over_volume(&vol)
+//!     .median(&[3, 3, 3])                  // 3-D rank filter
+//!     .gaussian_separable(&[3, 3, 3], 1.0); // three fused axis passes
+//! let (out, metrics) = plan.run(&ExecOptions::native(2)).unwrap();
+//! assert_eq!(out.shape(), vol.shape());
+//! assert_eq!(metrics.melts(), 1); // median + 3 axis passes, one melt
+//! assert_eq!(metrics.stages(), 4);
+//! ```
+//!
 //! The melt/fold layer remains directly usable for one-off computations:
 //!
 //! ```

@@ -119,29 +119,39 @@ fn dispatch(cmd: Command) -> Result<()> {
             workers,
             backend,
             artifacts,
+            dims,
         } => {
-            // Fig 6 style demonstration, plus the fused Plan on top: 3-D
-            // gaussian → curvature → median over a synthetic volume (the
-            // stats stages are native-only, so the PJRT demo runs the
-            // gaussian alone)
-            let x = Tensor::synthetic_volume(&[48, 48, 48], 42);
+            // Fig 6 style demonstration, plus the fused Plan on top:
+            // gaussian → curvature → median over a synthetic (D, H, W)
+            // volume or (H, W) image per --dims (the stats stages are
+            // native-only, so the PJRT demo runs the gaussian alone)
+            let x = if dims.len() == 3 {
+                Tensor::synthetic_volume(&dims, 42)
+            } else {
+                Tensor::synthetic_image(&[dims[0], dims[1]], 42)
+            };
+            let window = vec![3usize; dims.len()];
+            let kind = if dims.len() == 3 { "volume" } else { "image" };
             let opts = if backend == "pjrt" {
                 ExecOptions::pjrt(workers, artifacts)
             } else {
                 ExecOptions::native(workers)
             };
             let plan = if backend == "pjrt" {
-                println!("demo: 48^3 volume, gaussian 3^3, {workers} worker(s), backend pjrt");
-                Plan::over(&x).gaussian(&[3, 3, 3], 1.0)
+                println!(
+                    "demo: {dims:?} {kind}, gaussian {window:?}, {workers} worker(s), \
+                     backend pjrt"
+                );
+                Plan::over(&x).gaussian(&window, 1.0)
             } else {
                 println!(
-                    "demo: 48^3 volume, gaussian 3^3 → curvature 3^3 → median 3^3, \
+                    "demo: {dims:?} {kind}, gaussian → curvature → median over {window:?}, \
                      {workers} worker(s), backend native"
                 );
                 Plan::over(&x)
-                    .gaussian(&[3, 3, 3], 1.0)
-                    .curvature(&[3, 3, 3])
-                    .median(&[3, 3, 3])
+                    .gaussian(&window, 1.0)
+                    .curvature(&window)
+                    .median(&window)
             };
             let compiled = plan.compile(opts.backend)?;
             println!("plan: {}", compiled.describe());

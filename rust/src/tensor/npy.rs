@@ -83,6 +83,15 @@ pub fn from_npy_bytes(bytes: &[u8]) -> Result<Tensor<f32>> {
             body.len()
         )));
     }
+    // an npy data section is exactly shape-volume × itemsize bytes;
+    // trailing bytes mean a corrupt header or a concatenated/truncated
+    // write, so reject instead of silently dropping them
+    if body.len() > n * 4 {
+        return Err(Error::Format(format!(
+            "npy body has {} trailing bytes after {n} f32",
+            body.len() - n * 4
+        )));
+    }
     let data: Vec<f32> = body[..n * 4]
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -161,6 +170,80 @@ mod tests {
         let mut bytes = to_npy_bytes(&t);
         bytes.truncate(bytes.len() - 4); // drop one f32
         assert!(from_npy_bytes(&bytes).is_err());
+    }
+
+    /// Forge an npy byte stream with an arbitrary header string.
+    fn forged(header: &str, body_f32: usize) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&[1u8, 0u8]);
+        out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(&vec![0u8; body_f32 * 4]);
+        out
+    }
+
+    #[test]
+    fn rejects_truncated_header() {
+        // header length field claims more bytes than the stream carries
+        let mut bytes = to_npy_bytes(&Tensor::<f32>::zeros(&[3]).unwrap());
+        let hlen = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        bytes.truncate(10 + hlen - 5);
+        let err = from_npy_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("truncated npy header"), "{err}");
+        // ... and a header that is not utf-8
+        let mut bytes = to_npy_bytes(&Tensor::<f32>::zeros(&[3]).unwrap());
+        bytes[12] = 0xFF;
+        assert!(from_npy_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_dtype_order_and_version() {
+        // fortran (column-major) order
+        let h = "{'descr': '<f4', 'fortran_order': True, 'shape': (2, 2), }\n";
+        let err = from_npy_bytes(&forged(h, 4)).unwrap_err();
+        assert!(err.to_string().contains("fortran"), "{err}");
+        // f64 dtype
+        let h = "{'descr': '<f8', 'fortran_order': False, 'shape': (4,), }\n";
+        let err = from_npy_bytes(&forged(h, 8)).unwrap_err();
+        assert!(err.to_string().contains("dtype"), "{err}");
+        // big-endian f32
+        let h = "{'descr': '>f4', 'fortran_order': False, 'shape': (4,), }\n";
+        assert!(from_npy_bytes(&forged(h, 4)).is_err());
+        // format version 2.x (u32 header length — unsupported)
+        let mut bytes = to_npy_bytes(&Tensor::<f32>::zeros(&[2]).unwrap());
+        bytes[6] = 2;
+        let err = from_npy_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn rejects_malformed_shapes() {
+        let wrap = |shape: &str| {
+            forged(
+                &format!("{{'descr': '<f4', 'fortran_order': False, 'shape': {shape}, }}\n"),
+                64,
+            )
+        };
+        // rank-0 scalar
+        assert!(from_npy_bytes(&wrap("()")).is_err());
+        // non-numeric extent
+        assert!(from_npy_bytes(&wrap("(x, 3)")).is_err());
+        // missing parens entirely
+        let h = "{'descr': '<f4', 'fortran_order': False, }\n";
+        assert!(from_npy_bytes(&forged(h, 4)).is_err());
+        // zero extent: volume 0 never matches a non-empty body
+        assert!(from_npy_bytes(&wrap("(0, 3)")).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_bytes() {
+        // a body longer than the shape volume is corruption, not padding
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let mut bytes = to_npy_bytes(&t);
+        bytes.extend_from_slice(&7.5f32.to_le_bytes());
+        let err = from_npy_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
     }
 
     #[test]

@@ -67,6 +67,44 @@ pub fn check_property(name: &str, cases: u64, mut prop: impl FnMut(&mut SplitMix
     }
 }
 
+/// The SplitMix64 output-mixing function as a standalone hash — a cheap,
+/// well-distributed 64-bit finalizer (Steele et al., 2014).
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Position-sensitive, accumulation-order-independent 64-bit digest of an
+/// f32 slice — the golden-value fingerprint used by
+/// `tests/golden_values.rs`.
+///
+/// Each element is hashed together with its index and the per-element
+/// hashes are combined by **wrapping addition**, so the digest can be
+/// accumulated over arbitrary disjoint chunks in any order (parallel
+/// workers, out-of-order folds) and still equal the serial digest — while
+/// remaining sensitive to both the values and their positions (swapping
+/// two unequal elements changes it). `-0.0` is canonicalized to `0.0` and
+/// every NaN to the one quiet-NaN pattern, so semantically equal outputs
+/// digest equally.
+pub fn value_digest(values: &[f32]) -> u64 {
+    values
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            let bits = if v == 0.0 {
+                0u32 // canonicalize -0.0
+            } else if v.is_nan() {
+                0x7FC0_0000u32
+            } else {
+                v.to_bits()
+            };
+            mix64(u64::from(bits) ^ mix64(i as u64 + 1))
+        })
+        .fold(0u64, u64::wrapping_add)
+}
+
 /// Assert two f32 slices are elementwise close (|a-b| <= atol + rtol*|b|).
 #[track_caller]
 pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
@@ -110,6 +148,50 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / xs.len() as f32;
         assert!(mean.abs() < 0.03, "mean {mean}");
         assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn value_digest_is_chunk_accumulable_property() {
+        // the digest of the whole slice equals the wrapping sum of digests
+        // computed per chunk with the right index offsets — the property
+        // that lets parallel folds fingerprint without ordering
+        check_property("digest accumulates over chunks", 20, |rng: &mut SplitMix64| {
+            let n = 1 + rng.below(200);
+            let xs = rng.uniform_vec(n, -50.0, 50.0);
+            let whole = value_digest(&xs);
+            // recompute as shifted partial digests
+            let cut = rng.below(n);
+            let head = value_digest(&xs[..cut]);
+            let tail: u64 = xs[cut..]
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| {
+                    let bits = if v == 0.0 { 0 } else { v.to_bits() };
+                    mix64(u64::from(bits) ^ mix64((cut + i) as u64 + 1))
+                })
+                .fold(0u64, u64::wrapping_add);
+            assert_eq!(whole, head.wrapping_add(tail));
+        });
+    }
+
+    #[test]
+    fn value_digest_detects_value_and_position_drift() {
+        let base = vec![1.0f32, 2.0, 3.0, 4.0];
+        let d = value_digest(&base);
+        assert_eq!(d, value_digest(&base.clone()), "deterministic");
+        // a changed value changes the digest
+        assert_ne!(d, value_digest(&[1.0, 2.0, 3.0, 4.000001]));
+        // swapping two positions changes it (position sensitivity)
+        assert_ne!(d, value_digest(&[2.0, 1.0, 3.0, 4.0]));
+        // a dropped tail changes it
+        assert_ne!(d, value_digest(&base[..3]));
+        // canonicalization: -0.0 == 0.0, NaN payloads collapse
+        assert_eq!(value_digest(&[0.0, 1.0]), value_digest(&[-0.0, 1.0]));
+        assert_eq!(
+            value_digest(&[f32::NAN]),
+            value_digest(&[f32::from_bits(0x7FC0_0001)])
+        );
+        assert_eq!(value_digest(&[]), 0);
     }
 
     #[test]

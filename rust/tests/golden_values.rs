@@ -1,0 +1,213 @@
+//! Golden-value regression suite: a checked-in digest for every built-in
+//! kernel × boundary mode × grid mode × input rank, over fixed
+//! SplitMix64-seeded inputs.
+//!
+//! The property suites pin *relationships* (fused == legacy, exchange ==
+//! recompute); this suite pins the *numbers themselves*, so a future
+//! refactor that drifts every executor identically — a changed gather
+//! order, a "harmless" reassociation in a kernel hot loop — still trips a
+//! failure instead of slipping through.
+//!
+//! Digests use [`meltframe::testing::value_digest`]: position-sensitive
+//! but accumulation-order-independent, so the fingerprint is stable
+//! however the chunks were folded. Every case is additionally executed
+//! with a multi-worker fleet and must digest identically (the §2.4
+//! worker-invariance claim, enforced on every golden case).
+//!
+//! Bless or re-bless with `UPDATE_GOLDENS=1 cargo test --test
+//! golden_values`, then commit `tests/golden/kernel_digests.tsv`. Cases
+//! missing from the file are reported (and written to a candidate file in
+//! the temp dir) without failing, so the suite bootstraps on machines
+//! that cannot regenerate the goldens; cases *present* in the file are
+//! hard assertions, and stale keys the suite no longer generates fail it.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use meltframe::coordinator::pipeline::{run_job, ExecOptions};
+use meltframe::coordinator::Job;
+use meltframe::melt::grid::GridMode;
+use meltframe::melt::melt::BoundaryMode;
+use meltframe::tensor::dense::Tensor;
+use meltframe::testing::value_digest;
+
+const GOLDEN_PATH: &str = concat!(
+    env!("CARGO_MANIFEST_DIR"),
+    "/tests/golden/kernel_digests.tsv"
+);
+
+/// Every built-in kernel spec, by stable case name.
+fn kernels(window: &[usize]) -> Vec<(&'static str, Job)> {
+    vec![
+        ("gaussian", Job::gaussian(window, 1.0)),
+        ("bilateral_const", Job::bilateral_const(window, 1.5, 25.0)),
+        ("bilateral_adaptive", Job::bilateral_adaptive(window, 1.5, 2.0)),
+        ("curvature", Job::curvature(window)),
+        ("median", Job::median(window)),
+        ("quantile_p75", Job::quantile(window, 0.75)),
+        ("minimum", Job::rank_min(window)),
+        ("maximum", Job::rank_max(window)),
+        ("local_mean", Job::local_mean(window)),
+        ("local_std", Job::local_std(window)),
+    ]
+}
+
+fn boundaries() -> Vec<(&'static str, BoundaryMode)> {
+    vec![
+        ("reflect", BoundaryMode::Reflect),
+        ("nearest", BoundaryMode::Nearest),
+        ("constant", BoundaryMode::Constant(-2.5)),
+        ("wrap", BoundaryMode::Wrap),
+    ]
+}
+
+fn grids(rank: usize) -> Vec<(&'static str, GridMode)> {
+    vec![
+        ("same", GridMode::Same),
+        ("valid", GridMode::Valid),
+        ("strided2", GridMode::Strided(vec![2; rank])),
+    ]
+}
+
+/// Compute the digest table: every case key → 16-hex digest, with the
+/// worker-invariance cross-check baked in.
+fn compute_table() -> BTreeMap<String, String> {
+    let inputs: [(&str, Vec<usize>); 2] =
+        [("2d", vec![9, 10]), ("3d", vec![5, 6, 7])];
+    let mut table = BTreeMap::new();
+    for (rank_name, dims) in inputs {
+        let rank = dims.len();
+        let x = Tensor::random(&dims, 0.0, 255.0, 0xA11CE).unwrap();
+        let window = vec![3usize; rank];
+        for (kernel_name, base_job) in kernels(&window) {
+            for (boundary_name, boundary) in boundaries() {
+                for (grid_name, grid) in grids(rank) {
+                    let mut job = base_job.clone();
+                    job.boundary = boundary;
+                    job.grid = grid.clone();
+                    let key = format!("{rank_name}/{kernel_name}/{boundary_name}/{grid_name}");
+                    let (out, _) = run_job(&x, &job, &ExecOptions::native(1))
+                        .unwrap_or_else(|e| panic!("{key}: {e}"));
+                    let digest = value_digest(out.data());
+                    // worker invariance on the exact same numbers
+                    let (multi, _) = run_job(&x, &job, &ExecOptions::native(3))
+                        .unwrap_or_else(|e| panic!("{key} (3 workers): {e}"));
+                    assert_eq!(
+                        value_digest(multi.data()),
+                        digest,
+                        "{key}: digest changed with worker count"
+                    );
+                    table.insert(key, format!("{digest:016x}"));
+                }
+            }
+        }
+    }
+    table
+}
+
+fn parse_goldens(text: &str) -> BTreeMap<String, String> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .filter_map(|l| {
+            let (key, digest) = l.split_once('\t')?;
+            Some((key.trim().to_string(), digest.trim().to_string()))
+        })
+        .collect()
+}
+
+fn render(table: &BTreeMap<String, String>) -> String {
+    let mut out = String::from(
+        "# Golden output digests — see tests/golden_values.rs for the\n\
+         # blessing procedure (UPDATE_GOLDENS=1 cargo test --test golden_values).\n",
+    );
+    for (k, v) in table {
+        let _ = writeln!(out, "{k}\t{v}");
+    }
+    out
+}
+
+#[test]
+fn kernel_digests_match_goldens() {
+    let computed = compute_table();
+    assert_eq!(
+        computed.len(),
+        2 * 10 * 4 * 3,
+        "case enumeration drifted — update the expected count deliberately"
+    );
+
+    if std::env::var("UPDATE_GOLDENS").is_ok() {
+        std::fs::write(GOLDEN_PATH, render(&computed)).unwrap();
+        eprintln!("golden_values: blessed {} cases into {GOLDEN_PATH}", computed.len());
+        return;
+    }
+
+    let stored = parse_goldens(&std::fs::read_to_string(GOLDEN_PATH).unwrap_or_default());
+    // stale stored keys mean a kernel/mode was renamed or removed without
+    // re-blessing — that is exactly the silent drift this suite exists for
+    let stale: Vec<&String> =
+        stored.keys().filter(|k| !computed.contains_key(*k)).collect();
+    assert!(
+        stale.is_empty(),
+        "golden file has keys the suite no longer generates: {stale:?} — \
+         re-bless with UPDATE_GOLDENS=1"
+    );
+
+    let mut missing = Vec::new();
+    for (key, digest) in &computed {
+        match stored.get(key) {
+            Some(want) => assert_eq!(
+                digest, want,
+                "{key}: output drifted from the blessed golden — if intentional, \
+                 re-bless with UPDATE_GOLDENS=1 cargo test --test golden_values"
+            ),
+            None => missing.push(key.clone()),
+        }
+    }
+    if !missing.is_empty() {
+        // bootstrap mode: no failure, but make the candidate easy to bless
+        let candidate = std::env::temp_dir().join("meltframe_golden_candidate.tsv");
+        std::fs::write(&candidate, render(&computed)).ok();
+        eprintln!(
+            "golden_values: {} of {} cases not blessed yet ({} verified); candidate \
+             table written to {} — bless with UPDATE_GOLDENS=1 cargo test --test \
+             golden_values",
+            missing.len(),
+            computed.len(),
+            computed.len() - missing.len(),
+            candidate.display()
+        );
+    }
+}
+
+#[test]
+fn golden_digests_cover_fused_paths_too() {
+    // the stored goldens are recorded off the single-stage barrier path;
+    // this pins the fused executors to the same numbers for a fusable
+    // subset (Same grid, non-Wrap), in both halo modes
+    use meltframe::coordinator::{HaloMode, Plan};
+    let x = Tensor::random(&[5, 6, 7], 0.0, 255.0, 0xA11CE).unwrap();
+    for (name, job) in kernels(&[3, 3, 3]) {
+        let stage = job.to_stage().unwrap();
+        let (single, _) = run_job(&x, &job, &ExecOptions::native(1)).unwrap();
+        // two copies of the stage → a genuinely fused 2-stage group
+        let (rec, _) = Plan::over(&x)
+            .stage(stage.clone())
+            .stage(stage.clone())
+            .run(&ExecOptions::native(3))
+            .unwrap();
+        let (exc, _) = Plan::over(&x)
+            .stage(stage.clone())
+            .stage(stage)
+            .run(&ExecOptions::native(3).with_halo_mode(HaloMode::Exchange))
+            .unwrap();
+        assert_eq!(
+            value_digest(rec.data()),
+            value_digest(exc.data()),
+            "{name}: halo modes disagree"
+        );
+        // and the double-stage plans agree with the two-pass barrier run
+        let (two_pass, _) = run_job(&single, &job, &ExecOptions::native(1)).unwrap();
+        assert_eq!(value_digest(rec.data()), value_digest(two_pass.data()), "{name}");
+    }
+}

@@ -1,0 +1,219 @@
+//! Fault injection: a worker that dies mid-stage must take the whole
+//! fleet down *cleanly* — poisoning the halo-exchange board AND the stage
+//! scheduler so every blocked peer unblocks with an error instead of
+//! deadlocking until the watchdog — and the error the caller sees must be
+//! the root cause (the panic / injected failure), not the secondary
+//! "another worker failed" abort the poisoned peers report.
+//!
+//! Faults are injected through the open [`RowKernel`] trait: a kernel
+//! that panics (or errors) after N calls is staged into an otherwise
+//! ordinary fused pipeline, so the failure lands in the middle of real
+//! exchange traffic — after some boundary rows are published, before
+//! others. Runs use a short (1 s, the floor) `halo_wait` so that even if
+//! poison propagation regressed, the suite fails in seconds, not minutes;
+//! the sub-second watchdog paths themselves are unit-tested in
+//! `coordinator::halo` and `coordinator::scheduler`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use meltframe::coordinator::{ExecOptions, HaloMode, Plan, RowKernel, Stage};
+use meltframe::error::{Error, Result};
+use meltframe::tensor::dense::Tensor;
+use meltframe::testing::assert_allclose;
+
+/// Copies each row's centre value; panics on the `threshold`-th call.
+#[derive(Debug)]
+struct PanicAfter {
+    calls: AtomicUsize,
+    threshold: usize,
+}
+
+impl PanicAfter {
+    fn stage(threshold: usize) -> Stage {
+        let k = PanicAfter {
+            calls: AtomicUsize::new(0),
+            threshold,
+        };
+        Stage::new(Arc::new(k), &[3, 3]).unwrap()
+    }
+}
+
+impl RowKernel for PanicAfter {
+    fn name(&self) -> &str {
+        "panic_bomb"
+    }
+
+    fn execute(&self, block: &[f32], _rows: usize, cols: usize, out: &mut [f32]) -> Result<()> {
+        if self.calls.fetch_add(1, Ordering::SeqCst) >= self.threshold {
+            panic!("injected fault: kernel panicked mid-stage");
+        }
+        for (row, o) in block.chunks_exact(cols).zip(out.iter_mut()) {
+            *o = row[cols / 2];
+        }
+        Ok(())
+    }
+}
+
+/// Same, but fails with an `Err` instead of unwinding.
+#[derive(Debug)]
+struct ErrAfter {
+    calls: AtomicUsize,
+    threshold: usize,
+}
+
+impl ErrAfter {
+    fn stage(threshold: usize) -> Stage {
+        let k = ErrAfter {
+            calls: AtomicUsize::new(0),
+            threshold,
+        };
+        Stage::new(Arc::new(k), &[3, 3]).unwrap()
+    }
+}
+
+impl RowKernel for ErrAfter {
+    fn name(&self) -> &str {
+        "err_bomb"
+    }
+
+    fn execute(&self, block: &[f32], _rows: usize, cols: usize, out: &mut [f32]) -> Result<()> {
+        if self.calls.fetch_add(1, Ordering::SeqCst) >= self.threshold {
+            return Err(Error::Coordinator("injected failure: kernel error".into()));
+        }
+        for (row, o) in block.chunks_exact(cols).zip(out.iter_mut()) {
+            *o = row[cols / 2];
+        }
+        Ok(())
+    }
+}
+
+fn exchange(workers: usize) -> ExecOptions {
+    ExecOptions::native(workers)
+        .with_halo_mode(HaloMode::Exchange)
+        .with_halo_wait(Duration::from_secs(1))
+}
+
+/// A fused 3-stage plan with `bomb` spliced in at `position` (0..3).
+fn bombed_plan(x: &Tensor<f32>, bomb: Stage, position: usize) -> Plan<'_> {
+    let mut plan = Plan::over(x);
+    for slot in 0..3 {
+        plan = if slot == position {
+            plan.stage(bomb.clone())
+        } else {
+            plan.gaussian(&[3, 3], 1.0)
+        };
+    }
+    plan
+}
+
+#[test]
+fn panicking_worker_poisons_exchange_and_unblocks_peers() {
+    // the bomb detonates at every pipeline position and several depths
+    // into the run: after some publishes, before others. Every variant
+    // must error out promptly with the root cause — never deadlock, never
+    // the secondary abort message.
+    // thresholds stay below the bomb stage's minimum call count (one call
+    // per chunk at the last position, ~3 chunks), so it always detonates
+    let x = Tensor::random(&[24, 25], 0.0, 255.0, 3).unwrap();
+    for position in 0..3usize {
+        for threshold in [0usize, 2] {
+            let t0 = Instant::now();
+            let err = bombed_plan(&x, PanicAfter::stage(threshold), position)
+                .run(&exchange(3))
+                .unwrap_err();
+            let elapsed = t0.elapsed();
+            assert!(
+                err.to_string().contains("panicked"),
+                "position {position}, threshold {threshold}: root cause lost: {err}"
+            );
+            assert!(
+                !err.to_string().contains("another worker failed"),
+                "secondary abort masked the panic: {err}"
+            );
+            assert!(
+                elapsed < Duration::from_secs(30),
+                "position {position}, threshold {threshold}: fleet hung for {elapsed:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn erroring_worker_reports_root_cause_in_exchange_mode() {
+    let x = Tensor::random(&[20, 21], 0.0, 255.0, 5).unwrap();
+    for position in 0..3usize {
+        let t0 = Instant::now();
+        let err = bombed_plan(&x, ErrAfter::stage(1), position)
+            .run(&exchange(3))
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("injected failure"),
+            "position {position}: root cause lost: {err}"
+        );
+        assert!(t0.elapsed() < Duration::from_secs(30));
+    }
+}
+
+#[test]
+fn recompute_mode_fails_cleanly_too() {
+    // no board to poison, but the panic must still surface as an error
+    // (not a process abort) and name the worker
+    let x = Tensor::random(&[16, 17], 0.0, 255.0, 7).unwrap();
+    let err = bombed_plan(&x, PanicAfter::stage(1), 1)
+        .run(&ExecOptions::native(3))
+        .unwrap_err();
+    assert!(err.to_string().contains("panicked"), "{err}");
+    let err = bombed_plan(&x, ErrAfter::stage(1), 2)
+        .run(&ExecOptions::native(3))
+        .unwrap_err();
+    assert!(err.to_string().contains("injected failure"), "{err}");
+}
+
+#[test]
+fn singleton_barrier_path_survives_a_panicking_kernel() {
+    // a one-stage plan takes the classic melt → partition → execute → fold
+    // path; worker panics are caught at join and reported
+    let x = Tensor::random(&[12, 12], 0.0, 255.0, 9).unwrap();
+    let err = Plan::over(&x)
+        .stage(PanicAfter::stage(0))
+        .run(&ExecOptions::native(2))
+        .unwrap_err();
+    assert!(err.to_string().contains("panicked"), "{err}");
+}
+
+#[test]
+fn failed_runs_leave_no_residue() {
+    // boards and schedulers are per-run: after a poisoned run, a fresh
+    // plan over the same tensor must succeed and match the single-worker
+    // reference exactly
+    let x = Tensor::random(&[18, 19], 0.0, 255.0, 11).unwrap();
+    let _ = bombed_plan(&x, PanicAfter::stage(2), 1)
+        .run(&exchange(3))
+        .unwrap_err();
+    let jobs_plan = |x: &Tensor<f32>| {
+        Plan::over(x)
+            .gaussian(&[3, 3], 1.0)
+            .median(&[3, 3])
+            .curvature(&[3, 3])
+    };
+    let (base, _) = jobs_plan(&x).run(&ExecOptions::native(1)).unwrap();
+    let (out, pm) = jobs_plan(&x).run(&exchange(3)).unwrap();
+    assert_allclose(out.data(), base.data(), 0.0, 0.0);
+    assert_eq!(pm.halo_recomputed(), 0);
+}
+
+#[test]
+fn threshold_zero_bomb_never_publishes_anything() {
+    // detonating on the very first call: peers are blocked on publishes
+    // that will never come — only poison (not the watchdog) can unblock
+    // them inside the 1 s deadline budget
+    let x = Tensor::random(&[30, 31], 0.0, 255.0, 13).unwrap();
+    let t0 = Instant::now();
+    let err = bombed_plan(&x, PanicAfter::stage(0), 0)
+        .run(&exchange(4))
+        .unwrap_err();
+    assert!(err.to_string().contains("panicked"), "{err}");
+    assert!(t0.elapsed() < Duration::from_secs(30));
+}

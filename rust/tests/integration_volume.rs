@@ -1,0 +1,332 @@
+//! Integration: volumetric (3-D) workloads end to end — the acceptance
+//! suite for first-class volume support.
+//!
+//! Pins, property-tested over shape × boundary × workers:
+//!
+//! * a 3-D pipeline is **bit-for-bit** identical across the legacy
+//!   per-stage executor, the fused recompute executor, and the fused
+//!   halo-exchange executor (including depth-slab `Aligned` chunking,
+//!   where every traded halo is a stack of whole `(z, y)` lines);
+//! * depth-separable kernels (window `[1, h, w]`) equal the per-slice 2-D
+//!   reference **bit-for-bit** — the volume's melt rows are exactly the
+//!   slice images' melt rows;
+//! * a `D = 1` volume degenerates to the 2-D path (bit-for-bit for
+//!   `[1, 3, 3]` windows; to float tolerance for full `[3, 3, 3]`
+//!   windows, whose reflected z-neighbours triplicate each slice value);
+//! * the separable gaussian chain equals the dense N-D gaussian within
+//!   float tolerance for every per-axis boundary mode.
+
+use meltframe::config::spec::RunConfig;
+use meltframe::coordinator::pipeline::{run_pipeline, ExecOptions};
+use meltframe::coordinator::{Backend, ChunkPolicy, HaloMode, Job, Plan};
+use meltframe::melt::grid::GridMode;
+use meltframe::melt::melt::BoundaryMode;
+use meltframe::tensor::dense::Tensor;
+use meltframe::testing::{assert_allclose, check_property, SplitMix64};
+
+fn plan_of<'a>(x: &'a Tensor<f32>, jobs: &[Job]) -> Plan<'a> {
+    let mut plan = Plan::over(x);
+    for j in jobs {
+        plan = plan.stage(j.to_stage().unwrap());
+    }
+    plan
+}
+
+fn exchange(workers: usize) -> ExecOptions {
+    ExecOptions::native(workers).with_halo_mode(HaloMode::Exchange)
+}
+
+/// A random fusable 3-D job over `window`.
+fn random_job(rng: &mut SplitMix64, window: &[usize]) -> Job {
+    let mut j = match rng.below(6) {
+        0 => Job::gaussian(window, 0.5 + rng.uniform(0.0, 2.0)),
+        1 => Job::bilateral_const(window, 1.5, 5.0 + rng.uniform(0.0, 50.0)),
+        2 => Job::curvature(window),
+        3 => Job::median(window),
+        4 => Job::quantile(window, rng.below(101) as f64 / 100.0),
+        _ => Job::local_std(window),
+    };
+    let boundaries = [
+        BoundaryMode::Reflect,
+        BoundaryMode::Nearest,
+        BoundaryMode::Constant(3.5),
+    ];
+    j.boundary = boundaries[rng.below(boundaries.len())];
+    j
+}
+
+/// A random job whose per-row output depends only on the raveled window
+/// values (not the window's rank), so a `[1, h, w]` volume stage is
+/// row-identical to the `[h, w]` image stage. Curvature is excluded: its
+/// stencil contraction is rank-structural (a 3×3 Hessian on volumes).
+fn slice_separable_job(rng: &mut SplitMix64, window: &[usize]) -> Job {
+    let mut j = match rng.below(6) {
+        0 => Job::gaussian(window, 0.5 + rng.uniform(0.0, 2.0)),
+        1 => Job::bilateral_const(window, 1.5, 5.0 + rng.uniform(0.0, 50.0)),
+        2 => Job::median(window),
+        3 => Job::quantile(window, rng.below(101) as f64 / 100.0),
+        4 => Job::local_mean(window),
+        _ => Job::rank_max(window),
+    };
+    let boundaries = [
+        BoundaryMode::Reflect,
+        BoundaryMode::Nearest,
+        BoundaryMode::Constant(-1.25),
+        BoundaryMode::Wrap,
+    ];
+    j.boundary = boundaries[rng.below(boundaries.len())];
+    j
+}
+
+/// The same job spec with a different window (for 3-D/2-D pairs).
+fn with_window(j: &Job, window: &[usize]) -> Job {
+    let mut out = j.clone();
+    out.window = window.to_vec();
+    out
+}
+
+#[test]
+fn volume_pipeline_three_executors_bit_for_bit_property() {
+    // the tentpole acceptance property: legacy == fused-recompute ==
+    // fused-exchange on rank-3 inputs, exactly, with exchange recomputing
+    // zero halo rows — D = 1 volumes included
+    check_property("3-D legacy == recompute == exchange", 10, |rng: &mut SplitMix64| {
+        let dims = [1 + rng.below(6), 4 + rng.below(5), 4 + rng.below(5)];
+        let x = Tensor::random(&dims, 0.0, 255.0, rng.next_u64()).unwrap();
+        let n_stages = 2 + rng.below(2);
+        let mut jobs: Vec<Job> =
+            (0..n_stages).map(|_| random_job(rng, &[3, 3, 3])).collect();
+        jobs[0].grid = match rng.below(3) {
+            0 => GridMode::Same,
+            1 => GridMode::Valid,
+            _ => GridMode::Strided(vec![1 + rng.below(2), 2, 2]),
+        };
+        if jobs[0].grid == GridMode::Valid && dims.iter().any(|&d| d < 3) {
+            return; // Valid mode legitimately rejects sub-window axes
+        }
+
+        let (legacy, _) = run_pipeline(&x, &jobs, &ExecOptions::native(1)).unwrap();
+        let workers = 1 + rng.below(4);
+        let (rec, rec_pm) = plan_of(&x, &jobs).run(&ExecOptions::native(workers)).unwrap();
+        let mut exc_opts = exchange(workers);
+        if rng.below(2) == 0 {
+            // depth-slab chunks: whole z-slabs, oversubscribed
+            exc_opts.chunk_policy = Some(ChunkPolicy::Aligned {
+                unit: dims[1] * dims[2],
+                parts_per_worker: 1 + rng.below(3),
+            });
+        }
+        let (exc, exc_pm) = plan_of(&x, &jobs).run(&exc_opts).unwrap();
+
+        assert_allclose(rec.data(), legacy.data(), 0.0, 0.0);
+        assert_allclose(exc.data(), legacy.data(), 0.0, 0.0);
+        assert_eq!(rec_pm.melts(), 1, "{jobs:?}");
+        assert_eq!(exc_pm.melts(), 1);
+        assert_eq!(exc_pm.halo_recomputed(), 0);
+    });
+}
+
+#[test]
+fn depth_separable_kernels_match_per_slice_2d_reference_property() {
+    // a [1, h, w] window never crosses slices, and its ravel order equals
+    // the 2-D [h, w] ravel — so every slice of the 3-D output must be
+    // bit-for-bit the 2-D pipeline run on that slice alone
+    check_property("[1,h,w] volume == per-slice 2-D", 10, |rng: &mut SplitMix64| {
+        let (d, h, w) = (1 + rng.below(4), 4 + rng.below(5), 4 + rng.below(5));
+        let x = Tensor::random(&[d, h, w], 0.0, 255.0, rng.next_u64()).unwrap();
+        let n_stages = 1 + rng.below(3);
+        let jobs3: Vec<Job> = (0..n_stages)
+            .map(|_| slice_separable_job(rng, &[1, 3, 3]))
+            .collect();
+        let jobs2: Vec<Job> = jobs3.iter().map(|j| with_window(j, &[3, 3])).collect();
+
+        // per-slice 2-D reference, stacked back into a volume
+        let mut want = Vec::with_capacity(d * h * w);
+        for z in 0..d {
+            let slice =
+                Tensor::from_vec(&[h, w], x.data()[z * h * w..(z + 1) * h * w].to_vec())
+                    .unwrap();
+            let (out2, _) = run_pipeline(&slice, &jobs2, &ExecOptions::native(1)).unwrap();
+            want.extend_from_slice(out2.data());
+        }
+
+        // all three executors against the stacked reference
+        let (legacy, _) = run_pipeline(&x, &jobs3, &ExecOptions::native(1)).unwrap();
+        assert_allclose(legacy.data(), &want, 0.0, 0.0);
+        let workers = 1 + rng.below(3);
+        let (rec, _) = plan_of(&x, &jobs3).run(&ExecOptions::native(workers)).unwrap();
+        let (exc, pm) = plan_of(&x, &jobs3).run(&exchange(workers)).unwrap();
+        assert_allclose(rec.data(), &want, 0.0, 0.0);
+        assert_allclose(exc.data(), &want, 0.0, 0.0);
+        assert_eq!(pm.halo_recomputed(), 0);
+    });
+}
+
+#[test]
+fn depth_one_volume_degenerates_to_2d_path() {
+    let (h, w) = (9usize, 10usize);
+    let img = Tensor::random(&[h, w], 0.0, 255.0, 31).unwrap();
+    let vol = Tensor::from_vec(&[1, h, w], img.data().to_vec()).unwrap();
+
+    // [1, 3, 3] windows: bit-for-bit with the 2-D pipeline
+    let jobs2 = vec![Job::gaussian(&[3, 3], 1.0), Job::median(&[3, 3])];
+    let jobs3 = vec![Job::gaussian(&[1, 3, 3], 1.0), Job::median(&[1, 3, 3])];
+    let (flat, _) = run_pipeline(&img, &jobs2, &ExecOptions::native(1)).unwrap();
+    for workers in [1usize, 2, 3] {
+        let (out, _) = plan_of(&vol, &jobs3).run(&ExecOptions::native(workers)).unwrap();
+        assert_allclose(out.data(), flat.data(), 0.0, 0.0);
+        let (out, pm) = plan_of(&vol, &jobs3).run(&exchange(workers)).unwrap();
+        assert_allclose(out.data(), flat.data(), 0.0, 0.0);
+        assert_eq!(pm.halo_recomputed(), 0);
+    }
+
+    // full [3, 3, 3] windows on D = 1: reflect maps every z-offset onto
+    // the single slice. The median of the triplicated neighbourhood is the
+    // 2-D median exactly; the gaussian renormalizes over z and matches the
+    // 2-D kernel to float tolerance.
+    let (med3, _) = plan_of(&vol, &[Job::median(&[3, 3, 3])])
+        .run(&ExecOptions::native(2))
+        .unwrap();
+    let (med2, _) = run_pipeline(&img, &[Job::median(&[3, 3])], &ExecOptions::native(1)).unwrap();
+    assert_allclose(med3.data(), med2.data(), 0.0, 0.0);
+    let (g3, _) = plan_of(&vol, &[Job::gaussian(&[3, 3, 3], 1.0)])
+        .run(&ExecOptions::native(2))
+        .unwrap();
+    let (g2, _) =
+        run_pipeline(&img, &[Job::gaussian(&[3, 3], 1.0)], &ExecOptions::native(1)).unwrap();
+    assert_allclose(g3.data(), g2.data(), 1e-5, 1e-3);
+}
+
+#[test]
+fn separable_gaussian_matches_dense_property() {
+    // the axis-factored chain equals the dense N-D gaussian for every
+    // per-axis boundary mode (each 1-D kernel is normalized), to float
+    // tolerance — and fuses into a single melt/fold group when streamable
+    check_property("separable gaussian == dense", 10, |rng: &mut SplitMix64| {
+        let rank = 2 + rng.below(2);
+        let dims: Vec<usize> = (0..rank).map(|_| 4 + rng.below(6)).collect();
+        let x = Tensor::random(&dims, 0.0, 255.0, rng.next_u64()).unwrap();
+        let window: Vec<usize> = (0..rank).map(|_| 3 + 2 * rng.below(2)).collect();
+        let sigma = 0.6 + rng.uniform(0.0, 1.5);
+        let boundaries = [
+            BoundaryMode::Reflect,
+            BoundaryMode::Nearest,
+            BoundaryMode::Constant(12.5),
+            BoundaryMode::Wrap,
+        ];
+        let b = boundaries[rng.below(boundaries.len())];
+        let workers = 1 + rng.below(3);
+
+        let (dense, _) = Plan::over(&x)
+            .gaussian(&window, sigma)
+            .boundary(b)
+            .run(&ExecOptions::native(workers))
+            .unwrap();
+        let mut plan = Plan::over(&x);
+        for a in 0..rank {
+            let mut axis_w = vec![1usize; rank];
+            axis_w[a] = window[a];
+            plan = plan.gaussian(&axis_w, sigma).boundary(b);
+        }
+        let (sep, pm) = plan.run(&ExecOptions::native(workers)).unwrap();
+        assert_allclose(sep.data(), dense.data(), 1e-4, 1e-2);
+        if !matches!(b, BoundaryMode::Wrap) {
+            // streamable chain: one melt, one fold however many axes
+            assert_eq!(pm.melts(), 1);
+            assert_eq!(pm.folds(), 1);
+        }
+        assert_eq!(pm.stages(), rank);
+    });
+
+    // and the builder spelling agrees with the hand-built chain (Reflect)
+    let vol = Tensor::random(&[6, 7, 8], 0.0, 255.0, 4).unwrap();
+    let (a, pm) = Plan::over_volume(&vol)
+        .gaussian_separable(&[3, 3, 3], 1.1)
+        .run(&ExecOptions::native(2))
+        .unwrap();
+    let (b, _) = Plan::over(&vol)
+        .gaussian(&[3, 1, 1], 1.1)
+        .gaussian(&[1, 3, 1], 1.1)
+        .gaussian(&[1, 1, 3], 1.1)
+        .run(&ExecOptions::native(1))
+        .unwrap();
+    assert_allclose(a.data(), b.data(), 0.0, 0.0);
+    assert_eq!(pm.melts(), 1);
+    assert_eq!(pm.stages(), 3);
+}
+
+#[test]
+fn depth_slab_chunks_trade_whole_lines() {
+    // Aligned{unit: H*W} chunks on exchange mode: 8 slabs on 3 workers,
+    // every halo a stack of complete (z, y) lines — exact, zero redo
+    let dims = [8usize, 6, 7];
+    let x = Tensor::random(&dims, 0.0, 255.0, 17).unwrap();
+    let jobs = vec![
+        Job::median(&[3, 3, 3]),
+        Job::gaussian(&[3, 3, 3], 1.0),
+        Job::local_std(&[3, 3, 3]),
+    ];
+    let (legacy, _) = run_pipeline(&x, &jobs, &ExecOptions::native(1)).unwrap();
+    for parts_per_worker in [1usize, 3] {
+        let mut opts = exchange(3);
+        opts.chunk_policy = Some(ChunkPolicy::Aligned {
+            unit: dims[1] * dims[2],
+            parts_per_worker,
+        });
+        let (out, pm) = plan_of(&x, &jobs).run(&opts).unwrap();
+        assert_allclose(out.data(), legacy.data(), 0.0, 0.0);
+        assert_eq!(pm.halo_recomputed(), 0);
+        if parts_per_worker > 1 {
+            assert!(pm.halo_received() > 0, "slab neighbours must trade rows");
+        }
+    }
+}
+
+#[test]
+fn over_volume_rejects_non_volumes() {
+    let img = Tensor::random(&[8, 8], 0.0, 1.0, 1).unwrap();
+    let err = Plan::over_volume(&img)
+        .median(&[3, 3, 3])
+        .run(&ExecOptions::native(1))
+        .unwrap_err();
+    assert!(err.to_string().contains("rank-3"), "{err}");
+}
+
+#[test]
+fn volume_config_drives_3d_pipeline_end_to_end() {
+    let cfg = RunConfig::parse(
+        r#"
+        workers = 3
+        halo_mode = "exchange"
+        [input]
+        kind = "volume"
+        dims = [8, 9, 10]
+        seed = 5
+        [job.1]
+        kind = "median"
+        window = [3, 3, 3]
+        [job.2]
+        kind = "gaussian"
+        window = [3, 3, 3]
+        sigma = 1.0
+        "#,
+    )
+    .unwrap();
+    let x = cfg.input.load().unwrap();
+    assert_eq!(x.shape(), &[8, 9, 10]);
+    let (legacy, _) = run_pipeline(&x, &cfg.jobs, &ExecOptions::native(1)).unwrap();
+    let (out, pm) = cfg
+        .plan(&x)
+        .unwrap()
+        .compile(Backend::Native)
+        .unwrap()
+        .execute(&cfg.options)
+        .unwrap();
+    assert_allclose(out.data(), legacy.data(), 0.0, 0.0);
+    assert_eq!(pm.halo_recomputed(), 0);
+    // 2-D dims for a volume input are rejected at parse time now
+    assert!(RunConfig::parse(
+        "[input]\nkind = \"volume\"\ndims = [8, 8]\n[job]\nkind = \"median\"\nwindow = [3, 3, 3]"
+    )
+    .is_err());
+}
