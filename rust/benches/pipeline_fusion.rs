@@ -18,11 +18,23 @@
 //! highest worker count, with the gap widening as workers (and therefore
 //! chunk boundaries) multiply.
 //!
-//! Run: `cargo bench --bench pipeline_fusion`
+//! A tiled-vs-materialized section times the cache-resident tile streamer
+//! against an explicit global-melt-matrix gather of the same stage and
+//! reports the footprint gap (`rows·cols·4` materialized bytes vs the
+//! per-worker band peak), and every series plus the halo/gather metric
+//! totals land in machine-readable `BENCH_fusion.json` (uploaded as a CI
+//! artifact, so the perf trajectory is tracked run over run).
+//!
+//! Run: `cargo bench --bench pipeline_fusion`. Set `BENCH_QUICK=1` (CI)
+//! for a smaller volume and fewer repetitions.
 
-use meltframe::bench_harness::{black_box, Measurement, Report};
+use meltframe::bench_harness::{black_box, JsonReport, Measurement, Report};
 use meltframe::coordinator::pipeline::{run_pipeline, ExecOptions};
 use meltframe::coordinator::{ChunkPolicy, HaloMode, Job, Plan};
+use meltframe::melt::fold::fold;
+use meltframe::melt::grid::GridMode;
+use meltframe::melt::melt::{melt, BoundaryMode};
+use meltframe::melt::operator::Operator;
 use meltframe::tensor::dense::Tensor;
 
 fn jobs() -> Vec<Job> {
@@ -46,9 +58,14 @@ fn fused(
 }
 
 fn main() {
-    let vol = Tensor::<f32>::synthetic_volume(&[48, 48, 48], 42);
+    // BENCH_QUICK: smaller volume + fewer reps, for CI artifact runs
+    let quick = std::env::var_os("BENCH_QUICK").is_some();
+    let dim = if quick { 32usize } else { 48 };
+    let reps = if quick { 5usize } else { 10 };
+    let vol = Tensor::<f32>::synthetic_volume(&[dim, dim, dim], 42);
     let jobs = jobs();
     let max_workers = 4usize;
+    let mut json = JsonReport::new(format!("pipeline_fusion {dim}^3"));
 
     // ---- correctness + structure proof before timing ----------------------
     let opts1 = ExecOptions::native(1);
@@ -79,10 +96,15 @@ fn main() {
         "exchange mode must recompute zero halo rows"
     );
     assert!(xm.halo_published() > 0 && xm.halo_received() > 0);
-    assert!(
-        xm.halo_eager_lead() > std::time::Duration::ZERO,
-        "boundary-first execution must record a head start"
-    );
+    // at the quick size the 16 chunks are narrower than twice the 3-D halo
+    // (2.1k vs 2k rows), so every boundary segment covers its whole chunk
+    // and the eager interior-overlap path legitimately never runs
+    if !quick {
+        assert!(
+            xm.halo_eager_lead() > std::time::Duration::ZERO,
+            "boundary-first execution must record a head start"
+        );
+    }
     let (recompute_out, rm) = fused(
         &vol,
         &ExecOptions::native(max_workers).with_halo_mode(HaloMode::Recompute),
@@ -98,7 +120,7 @@ fn main() {
     );
     println!(
         "halo @ {max_workers} workers, 16 chunks: recompute redoes {} rows, exchange redoes {} \
-         (pub {} / recv {} | eager lead {:.2?} | {} stall(s))\n",
+         (pub {} / recv {} | eager lead {:.2?} | {} stall(s))",
         rm.halo_recomputed(),
         xm.halo_recomputed(),
         xm.halo_published(),
@@ -106,6 +128,25 @@ fn main() {
         xm.halo_eager_lead(),
         xm.sched_stalls()
     );
+    // the tentpole's scratch accounting: no native run materializes a
+    // melt matrix, and the whole fleet's gather scratch is bounded by
+    // workers x the per-worker band peak
+    assert_eq!(pm.melt_matrix_bytes(), 0, "native runs must not materialize");
+    assert_eq!(xm.melt_matrix_bytes(), 0);
+    assert!(xm.gather_rows() > 0 && xm.peak_band_bytes() > 0);
+    println!(
+        "gather @ {max_workers} workers: exchange gathered {} rows in {:.2?}, band peak {} B/worker\n",
+        xm.gather_rows(),
+        xm.gather_time(),
+        xm.peak_band_bytes()
+    );
+    json.metric("exchange_halo_published_rows", xm.halo_published() as f64);
+    json.metric("exchange_halo_received_rows", xm.halo_received() as f64);
+    json.metric("recompute_halo_recomputed_rows", rm.halo_recomputed() as f64);
+    json.metric("exchange_gather_rows", xm.gather_rows() as f64);
+    json.metric("recompute_gather_rows", rm.gather_rows() as f64);
+    json.metric("exchange_peak_band_bytes", xm.peak_band_bytes() as f64);
+    json.metric("exchange_sched_stalls", xm.sched_stalls() as f64);
 
     // ---- timing, across worker counts -------------------------------------
     let mut last: Option<(Measurement, Measurement)> = None;
@@ -115,31 +156,93 @@ fn main() {
         let mut exc4 = exc.clone();
         exc4.chunk_policy = Some(ChunkPolicy::EvenPerWorker { parts_per_worker: 4 });
         let mut report = Report::new(format!(
-            "Pipeline — 3 stages on 48^3, {workers} worker(s): fold→re-melt vs fused (recompute|exchange)"
+            "Pipeline — 3 stages on {dim}^3, {workers} worker(s): fold→re-melt vs fused (recompute|exchange)"
         ));
-        report.push(Measurement::run("legacy run_pipeline", 1, 10, || {
+        let legacy = Measurement::run("legacy run_pipeline", 1, reps, || {
             black_box(run_pipeline(&vol, &jobs, &opts).unwrap())
-        }));
-        let rec = Measurement::run("fused Plan (halo recompute)", 1, 10, || {
+        });
+        json.series(format!("legacy run_pipeline @{workers}w"), &legacy);
+        report.push(legacy);
+        let rec = Measurement::run("fused Plan (halo recompute)", 1, reps, || {
             black_box(fused(&vol, &opts))
         });
-        let exg = Measurement::run("fused Plan (halo exchange)", 1, 10, || {
+        let exg = Measurement::run("fused Plan (halo exchange)", 1, reps, || {
             black_box(fused(&vol, &exc))
         });
+        json.series(format!("fused recompute @{workers}w"), &rec);
+        json.series(format!("fused exchange @{workers}w"), &exg);
         report.push(rec.clone());
         report.push(exg.clone());
-        report.push(Measurement::run(
+        let exg4 = Measurement::run(
             "fused Plan (halo exchange, 4 chunks/worker)",
             1,
-            10,
+            reps,
             || black_box(fused(&vol, &exc4)),
-        ));
+        );
+        json.series(format!("fused exchange 4cpw @{workers}w"), &exg4);
+        report.push(exg4);
         report.print(Some("legacy run_pipeline"));
         println!();
         if workers == max_workers {
             last = Some((rec, exg));
         }
     }
+
+    // ---- tiled gather vs materialized melt matrix -------------------------
+    // one gaussian stage, two gather strategies: the executor's
+    // cache-resident tile streamer (leader-free, O(tile * cols) scratch per
+    // worker) vs an explicit global melt matrix (the pre-tiling execution
+    // model: a serial rows * cols gather feeding the kernel). Same maths,
+    // same result — the difference is pure memory traffic.
+    let gauss = Job::gaussian(&[3, 3, 3], 1.0);
+    let op = Operator::cubic(3, 3).unwrap();
+    let (_, tm1) = meltframe::coordinator::run_job(&vol, &gauss, &ExecOptions::native(1)).unwrap();
+    let materialized_bytes = tm1.rows * tm1.cols * 4;
+    let mut report = Report::new(format!(
+        "Gather strategy — gaussian 3^3 on {dim}^3: materialized melt matrix vs tile-streamed"
+    ));
+    let mat = Measurement::run("materialized melt matrix (serial gather)", 1, reps, || {
+        let m = melt(&vol, &op, GridMode::Same, BoundaryMode::Reflect).unwrap();
+        let vals = meltframe::kernels::paradigm::apply_kernel_broadcast(
+            &m,
+            &meltframe::kernels::gaussian::gaussian_kernel(&[3, 3, 3], 1.0),
+        );
+        black_box(fold(&vals, m.grid_shape()).unwrap())
+    });
+    let tiled1 = Measurement::run("tile-streamed run_job (1 worker)", 1, reps, || {
+        black_box(meltframe::coordinator::run_job(&vol, &gauss, &ExecOptions::native(1)).unwrap())
+    });
+    let tiledn = Measurement::run(
+        format!("tile-streamed run_job ({max_workers} workers)"),
+        1,
+        reps,
+        || {
+            black_box(
+                meltframe::coordinator::run_job(&vol, &gauss, &ExecOptions::native(max_workers))
+                    .unwrap(),
+            )
+        },
+    );
+    json.series("materialized melt matrix", &mat);
+    json.series("tile-streamed @1w", &tiled1);
+    json.series(format!("tile-streamed @{max_workers}w"), &tiledn);
+    report.push(mat);
+    report.push(tiled1);
+    report.push(tiledn);
+    report.print(Some("materialized melt matrix (serial gather)"));
+    println!(
+        "footprint: materialized gather scratch {} B vs tiled band peak {} B/worker \
+         ({}x smaller)\n",
+        materialized_bytes,
+        tm1.peak_band_bytes,
+        if tm1.peak_band_bytes > 0 {
+            materialized_bytes / tm1.peak_band_bytes
+        } else {
+            0
+        }
+    );
+    json.metric("materialized_melt_bytes", materialized_bytes as f64);
+    json.metric("tiled_peak_band_bytes", tm1.peak_band_bytes as f64);
 
     // ---- separable gaussian on the volume ---------------------------------
     // the axis-factored chain ([5,1,1]·[1,5,1]·[1,1,5], fused into one
@@ -158,19 +261,23 @@ fn main() {
     assert_eq!(sep_pm.melts(), 1, "the separable chain must fuse into one melt");
     assert_eq!(sep_pm.stages(), 3);
     let mut report = Report::new(format!(
-        "Separable gaussian — 5^3 on 48^3, {max_workers} worker(s): dense window vs axis-factored chain"
+        "Separable gaussian — 5^3 on {dim}^3, {max_workers} worker(s): dense window vs axis-factored chain"
     ));
-    report.push(Measurement::run("dense gaussian 5^3", 1, 10, || {
+    let dense = Measurement::run("dense gaussian 5^3", 1, reps, || {
         black_box(Plan::over(&vol).gaussian(&[5, 5, 5], 1.2).run(&opts).unwrap())
-    }));
-    report.push(Measurement::run("separable gaussian 5+5+5 (fused)", 1, 10, || {
+    });
+    let sep = Measurement::run("separable gaussian 5+5+5 (fused)", 1, reps, || {
         black_box(
             Plan::over_volume(&vol)
                 .gaussian_separable(&[5, 5, 5], 1.2)
                 .run(&opts)
                 .unwrap(),
         )
-    }));
+    });
+    json.series("dense gaussian 5^3", &dense);
+    json.series("separable gaussian 5+5+5", &sep);
+    report.push(dense);
+    report.push(sep);
     report.print(Some("dense gaussian 5^3"));
     println!();
 
@@ -188,6 +295,14 @@ fn main() {
         );
     }
     println!("\nfused streaming removes 2 intermediate tensors, 2 serial re-melts and 2");
-    println!("barriers from this pipeline; exchange mode additionally removes every");
-    println!("recomputed halo row, so its margin grows with worker count.");
+    println!("barriers from this pipeline; the tile streamer removes the materialized");
+    println!("melt matrix and the leader's serial melt everywhere; exchange mode");
+    println!("additionally removes every recomputed halo row, so its margin grows");
+    println!("with worker count.");
+
+    // machine-readable trajectory for CI (uploaded as a workflow artifact)
+    match json.write("BENCH_fusion.json") {
+        Ok(()) => println!("\nwrote BENCH_fusion.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_fusion.json: {e}"),
+    }
 }

@@ -5,7 +5,9 @@
 //! (default 20, like the paper), explicit warmup, robust statistics
 //! (median/IQR alongside mean/sd), and per-repetition samples kept so
 //! benches can print beeswarm-style raw columns. Results render as a
-//! markdown table and machine-readable CSV lines prefixed `CSV,`.
+//! markdown table and machine-readable CSV lines prefixed `CSV,` — and,
+//! via [`JsonReport`], as a hand-rolled JSON document (serde is not
+//! vendored either) so CI can archive the perf trajectory as an artifact.
 
 use std::time::{Duration, Instant};
 
@@ -161,6 +163,103 @@ impl Report {
     }
 }
 
+/// Machine-readable bench output: per-series timing (ns/op median, mean,
+/// min, repetition count) plus free-form numeric metric totals (halo and
+/// gather counters, footprint bytes, …), serialized as a small JSON
+/// document by hand — the vendored crate set has no serde. Benches build
+/// one per run and [`JsonReport::write`] it next to the crate (CI uploads
+/// the file as a workflow artifact, e.g. `BENCH_fusion.json`).
+pub struct JsonReport {
+    name: String,
+    series: Vec<(String, Measurement)>,
+    metrics: Vec<(String, f64)>,
+}
+
+/// Escape a string for a JSON string literal.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render an f64 as JSON: finite values print plainly, non-finite ones
+/// (which JSON cannot represent) become null.
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+impl JsonReport {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            series: Vec::new(),
+            metrics: Vec::new(),
+        }
+    }
+
+    /// Record one timed series under `label` (labels should be unique;
+    /// later duplicates simply appear twice in the array).
+    pub fn series(&mut self, label: impl Into<String>, m: &Measurement) {
+        self.series.push((label.into(), m.clone()));
+    }
+
+    /// Record one named metric total (counters, bytes, ratios).
+    pub fn metric(&mut self, key: impl Into<String>, value: f64) {
+        self.metrics.push((key.into(), value));
+    }
+
+    /// The JSON document text.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"name\": \"{}\",\n", json_escape(&self.name)));
+        s.push_str("  \"series\": [\n");
+        for (i, (label, m)) in self.series.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"label\": \"{}\", \"reps\": {}, \"ns_per_op_median\": {}, \
+                 \"ns_per_op_mean\": {}, \"ns_per_op_min\": {}}}{}\n",
+                json_escape(label),
+                m.samples.len(),
+                json_num(m.median().as_nanos() as f64),
+                json_num(m.mean().as_nanos() as f64),
+                json_num(m.min().as_nanos() as f64),
+                if i + 1 < self.series.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"metrics\": {\n");
+        for (i, (key, value)) in self.metrics.iter().enumerate() {
+            s.push_str(&format!(
+                "    \"{}\": {}{}\n",
+                json_escape(key),
+                json_num(*value),
+                if i + 1 < self.metrics.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  }\n}\n");
+        s
+    }
+
+    /// Write the document to `path`.
+    pub fn write(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.render())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,5 +314,58 @@ mod tests {
         assert_eq!(black_box(42), 42);
         let v = black_box(vec![1, 2, 3]);
         assert_eq!(v.len(), 3);
+    }
+
+    #[test]
+    fn json_report_renders_valid_structure() {
+        let mut j = JsonReport::new("bench \"x\"");
+        j.series(
+            "legacy\n",
+            &Measurement {
+                label: "legacy".into(),
+                samples: vec![Duration::from_millis(10), Duration::from_millis(20)],
+            },
+        );
+        j.series(
+            "tiled",
+            &Measurement {
+                label: "tiled".into(),
+                samples: vec![Duration::from_millis(5)],
+            },
+        );
+        j.metric("gather_rows", 1234.0);
+        j.metric("speedup", f64::INFINITY); // non-finite -> null
+        let doc = j.render();
+        // escaping
+        assert!(doc.contains("\"bench \\\"x\\\"\""), "{doc}");
+        assert!(doc.contains("legacy\\n"), "{doc}");
+        // medians in ns
+        assert!(doc.contains("\"ns_per_op_median\": 15000000"), "{doc}");
+        assert!(doc.contains("\"reps\": 2"), "{doc}");
+        assert!(doc.contains("\"gather_rows\": 1234"), "{doc}");
+        assert!(doc.contains("\"speedup\": null"), "{doc}");
+        // exactly one comma between the two series, none after the last
+        assert_eq!(doc.matches("},\n").count(), 1, "{doc}");
+        // crude balance check of the hand-rolled document
+        assert_eq!(doc.matches('{').count(), doc.matches('}').count(), "{doc}");
+        assert_eq!(doc.matches('[').count(), doc.matches(']').count(), "{doc}");
+    }
+
+    #[test]
+    fn json_report_round_trips_through_a_file() {
+        let mut j = JsonReport::new("file test");
+        j.metric("answer", 42.0);
+        let path = std::env::temp_dir().join(format!(
+            "meltframe_bench_json_{}_{}.json",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        j.write(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, j.render());
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -27,6 +27,9 @@ pub enum Command {
         /// Override the config's exchange-wait watchdog deadline, in
         /// seconds (`--halo-wait-secs N`).
         halo_wait_secs: Option<u64>,
+        /// Override the config's native gather→kernel tile height
+        /// (`--tile-rows N`).
+        tile_rows: Option<usize>,
     },
     Inspect {
         artifacts: PathBuf,
@@ -48,6 +51,7 @@ meltframe — melt-matrix array programming with parallel acceleration
 USAGE:
     meltframe run <config.toml> [--out <file.npy>] [--legacy]
                   [--halo-mode recompute|exchange] [--halo-wait-secs <n>]
+                  [--tile-rows <n>]
     meltframe inspect [--artifacts <dir>]
     meltframe demo [--workers <n>] [--backend native|pjrt] [--artifacts <dir>]
                    [--dims <d,h,w>|<h,w>]
@@ -59,6 +63,8 @@ one fold per fusable group); `--legacy` forces the stage-by-stage baseline.
 (duplicate boundary rows locally) or `exchange` (trade them between
 neighbouring chunks through the halo board, scheduled dependency-aware).
 `--halo-wait-secs` overrides the exchange watchdog deadline (default 600).
+`--tile-rows` overrides the native gather→kernel tile height (default 256;
+purely a cache-footprint knob — results are bit-for-bit identical).
 `demo --dims` picks the synthetic workload shape: three comma-separated
 extents run the (D, H, W) volume pipeline, two run the (H, W) image one
 (default 48,48,48).
@@ -78,6 +84,7 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
             let mut legacy = false;
             let mut halo_mode = None;
             let mut halo_wait_secs = None;
+            let mut tile_rows = None;
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--out" => {
@@ -97,6 +104,16 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                         }
                         halo_wait_secs = Some(secs);
                     }
+                    "--tile-rows" => {
+                        let v = expect_value(&mut it, "--tile-rows")?;
+                        let n: usize = v.parse().map_err(|_| {
+                            Error::Config("--tile-rows expects a number of rows".into())
+                        })?;
+                        if n == 0 {
+                            return Err(Error::Config("--tile-rows must be >= 1".into()));
+                        }
+                        tile_rows = Some(n);
+                    }
                     flag if flag.starts_with("--") => {
                         return Err(Error::Config(format!("unknown flag '{flag}' for run")))
                     }
@@ -113,6 +130,7 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                 legacy,
                 halo_mode,
                 halo_wait_secs,
+                tile_rows,
             })
         }
         "inspect" => {
@@ -207,6 +225,7 @@ mod tests {
                 legacy: false,
                 halo_mode: None,
                 halo_wait_secs: None,
+                tile_rows: None,
             }
         );
         let c = parse_args(&argv("run pipeline.toml --legacy")).unwrap();
@@ -218,13 +237,15 @@ mod tests {
                 legacy: true,
                 halo_mode: None,
                 halo_wait_secs: None,
+                tile_rows: None,
             }
         );
-        // mixed-case mode spellings normalize, and the watchdog override
-        // parses alongside
-        let c =
-            parse_args(&argv("run pipeline.toml --halo-mode Exchange --halo-wait-secs 45"))
-                .unwrap();
+        // mixed-case mode spellings normalize, and the watchdog and tile
+        // overrides parse alongside
+        let c = parse_args(&argv(
+            "run pipeline.toml --halo-mode Exchange --halo-wait-secs 45 --tile-rows 128",
+        ))
+        .unwrap();
         assert_eq!(
             c,
             Command::Run {
@@ -233,6 +254,7 @@ mod tests {
                 legacy: false,
                 halo_mode: Some(HaloMode::Exchange),
                 halo_wait_secs: Some(45),
+                tile_rows: Some(128),
             }
         );
     }
@@ -316,5 +338,8 @@ mod tests {
         assert!(parse_args(&argv("run a.toml --halo-wait-secs")).is_err());
         assert!(parse_args(&argv("run a.toml --halo-wait-secs soon")).is_err());
         assert!(parse_args(&argv("run a.toml --halo-wait-secs 0")).is_err());
+        assert!(parse_args(&argv("run a.toml --tile-rows")).is_err());
+        assert!(parse_args(&argv("run a.toml --tile-rows many")).is_err());
+        assert!(parse_args(&argv("run a.toml --tile-rows 0")).is_err());
     }
 }

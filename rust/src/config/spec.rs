@@ -7,6 +7,7 @@
 //! artifacts = "artifacts"     # pjrt only
 //! halo_mode = "recompute"     # or "exchange" (fused halo strategy)
 //! halo_wait_secs = 600        # exchange-wait watchdog deadline
+//! tile_rows = 256             # native gather→kernel tile height
 //!
 //! [input]
 //! kind = "volume"             # volume | image | mask | npy
@@ -117,6 +118,15 @@ impl RunConfig {
             }
             Some(secs) => std::time::Duration::from_secs(secs as u64),
         };
+        // tile_rows: native gather→kernel tile height (results invariant;
+        // purely a cache-footprint knob). Zero would spin the tile loop.
+        let tile_rows = match doc.get("", "tile_rows").map(|v| v.as_usize()).transpose()? {
+            None => crate::coordinator::pipeline::DEFAULT_TILE_ROWS,
+            Some(0) => {
+                return Err(Error::Config("tile_rows must be >= 1".into()));
+            }
+            Some(n) => n,
+        };
 
         let input = Self::parse_input(&doc)?;
         let jobs = Self::parse_jobs(&doc)?;
@@ -128,6 +138,7 @@ impl RunConfig {
                 chunk_policy: None,
                 halo_mode,
                 halo_wait,
+                tile_rows,
             },
             input,
             jobs,
@@ -286,6 +297,7 @@ mod tests {
             fused = false
             halo_mode = "Exchange"
             halo_wait_secs = 30
+            tile_rows = 128
             [input]
             kind = "image"
             dims = [16, 16]
@@ -303,6 +315,7 @@ mod tests {
         // mixed-case spelling normalizes, and the watchdog deadline is read
         assert_eq!(cfg.options.halo_mode, HaloMode::Exchange);
         assert_eq!(cfg.options.halo_wait, std::time::Duration::from_secs(30));
+        assert_eq!(cfg.options.tile_rows, 128);
         assert!(matches!(cfg.jobs[0].kind, FilterKind::Rank(_)));
         assert!(matches!(cfg.jobs[1].kind, FilterKind::LocalMoment(_)));
         // the plan lowering records both stages lazily
@@ -338,6 +351,10 @@ mod tests {
         assert_eq!(
             cfg.options.halo_wait,
             crate::coordinator::halo::DEFAULT_WAIT_DEADLINE
+        );
+        assert_eq!(
+            cfg.options.tile_rows,
+            crate::coordinator::pipeline::DEFAULT_TILE_ROWS
         );
     }
 
@@ -384,6 +401,11 @@ mod tests {
         // zero watchdog deadline would disable the hang backstop
         assert!(RunConfig::parse(
             "halo_wait_secs = 0\n[input]\nkind = \"mask\"\ndims = [8, 8]\n[job]\nkind = \"median\"\nwindow = [3, 3]"
+        )
+        .is_err());
+        // zero tile height would spin the tile loop
+        assert!(RunConfig::parse(
+            "tile_rows = 0\n[input]\nkind = \"mask\"\ndims = [8, 8]\n[job]\nkind = \"median\"\nwindow = [3, 3]"
         )
         .is_err());
         // even window caught at parse time

@@ -1,16 +1,36 @@
 //! The plan executor: Fig 2 at runtime, for lazy stage graphs.
 //!
-//! Singleton groups run the classic barrier path (global melt → partition →
-//! parallel execute → fold), on either backend. Fused groups run the
-//! chunk-resident streaming path: ONE global melt feeds stage 1, then each
-//! worker pushes its chunk through *all* remaining stages while the
-//! intermediate values are resident — stage `k ≥ 2` re-melts locally from a
-//! halo-extended value slab of stage `k − 1` (see
-//! [`crate::melt::melt::melt_band_into`]) instead of waiting for a global
-//! fold → re-melt barrier. The result: a fused n-stage group performs
-//! exactly one global melt and one global fold, never materializes an
-//! intermediate full tensor, and parallelizes the re-melt gathers that the
-//! legacy `run_pipeline` executed serially on the leader.
+//! ## Tile-streamed, leader-free gathers (native backend)
+//!
+//! The native hot loop never materializes a melt matrix and has no serial
+//! leader melt phase. The leader precomputes one [`RowGather`] per stage
+//! (the per-axis boundary tables — cheap, `O(Σ extent·window)`); every
+//! worker then gathers its **own** rows straight from the shared input
+//! tensor, in cache-sized tiles of [`ExecOptions::tile_rows`] rows: melt
+//! `tile × cols` values into a reusable per-worker band buffer, run the
+//! stage's [`RowKernel`] over them, advance. Peak gather scratch drops
+//! from `O(rows · cols)` (a window-size× blow-up of the input — 9× for
+//! 3×3, 27× for 3×3×3) to `O(workers · tile · cols)`, band writes and
+//! kernel reads stay in L2, and the melt — previously a single-threaded
+//! leader phase that Amdahl-capped every scaling figure — runs inside the
+//! workers' parallel compute window ([`RunMetrics::gather`],
+//! [`RunMetrics::gather_rows`], [`RunMetrics::peak_band_bytes`] meter it;
+//! [`RunMetrics::melt_matrix_bytes`] is exactly 0 on this path). The PJRT
+//! backend still materializes row blocks — its fixed-shape artifacts
+//! consume whole chunks — and reports the materialized bytes.
+//!
+//! Singleton groups run the classic barrier path (tiled gather→kernel per
+//! chunk → fold on native; global melt → partition → execute → fold on
+//! PJRT). Fused groups run the chunk-resident streaming path: stage 1
+//! gathers from the input tensor, then each worker pushes its chunk
+//! through *all* remaining stages while the intermediate values are
+//! resident — stage `k ≥ 2` re-melts locally from a halo-extended value
+//! slab of stage `k − 1` (see [`crate::melt::melt::melt_band_into`])
+//! instead of waiting for a global fold → re-melt barrier, tile by tile
+//! through the same band buffer. The result: a fused n-stage group
+//! performs exactly one *logical* melt pass and one global fold, never
+//! materializes an intermediate full tensor, and runs every gather in
+//! parallel.
 //!
 //! Halo accounting: stage `k`'s gathers reach at most
 //! `flat_halo(grid, op_k)` rows from each output row. Fused groups handle
@@ -58,9 +78,9 @@ use crate::coordinator::plan::{fused_partition, Stage};
 use crate::coordinator::scheduler::{ResultBoard, StageScheduler, StageTask, WorkQueue};
 use crate::coordinator::worker::{JobResources, WorkerContext};
 use crate::error::{Error, Result};
-use crate::melt::grid::QuasiGrid;
+use crate::melt::grid::{GridMode, QuasiGrid};
 use crate::melt::matrix::MeltMatrix;
-use crate::melt::melt::{flat_halo, melt_band_into, melt_into, uninit_buffer};
+use crate::melt::melt::{flat_halo, melt_into, reuse_uninit, uninit_buffer, RowGather};
 use crate::melt::operator::Operator;
 use crate::stats::descriptive::Moments;
 use crate::tensor::dense::Tensor;
@@ -68,6 +88,49 @@ use crate::tensor::dense::Tensor;
 /// Clamp `range` extended by `budget` rows on both sides to `[0, rows)`.
 fn extend(range: &Range<usize>, budget: usize, rows: usize) -> Range<usize> {
     range.start.saturating_sub(budget)..(range.end + budget).min(rows)
+}
+
+/// The gather→kernel tile loop shared by every native execution path:
+/// stream rows `range` from `src` (the values of the virtual input tensor
+/// from flat element `src_start` — the whole tensor for stage 0, a halo
+/// slab for later fused stages) through `g` and `kernel` in `tile`-row
+/// slices, writing one value per row into `out` (whose first element is
+/// row `out_start`). `band` is the worker's reusable tile buffer — the
+/// only melt storage this path ever allocates, metered via
+/// `stats.peak_band_bytes`; both it and the touched `out` slice are fully
+/// overwritten before any read (gathers cover every cell, kernels write
+/// every row), so the uninit reuse is sound (§Perf iteration 4).
+#[allow(clippy::too_many_arguments)]
+fn run_tiled(
+    g: &RowGather,
+    src: &[f32],
+    src_start: usize,
+    kernel: &dyn RowKernel,
+    tile: usize,
+    range: Range<usize>,
+    out_start: usize,
+    out: &mut [f32],
+    band: &mut Vec<f32>,
+    stats: &mut HaloStats,
+) -> Result<()> {
+    let cols = g.cols();
+    let tile = tile.max(1);
+    let mut t = range.start;
+    while t < range.end {
+        let te = (t + tile).min(range.end);
+        let n = te - t;
+        reuse_uninit(band, n * cols);
+        let t_gather = Instant::now();
+        g.gather_rows(src, src_start, t..te, &mut band[..])?;
+        stats.gather_time += t_gather.elapsed();
+        stats.gather_rows += n;
+        kernel.execute(&band[..], n, cols, &mut out[t - out_start..te - out_start])?;
+        t = te;
+    }
+    stats.peak_band_bytes = stats
+        .peak_band_bytes
+        .max(band.capacity() * std::mem::size_of::<f32>());
+    Ok(())
 }
 
 /// Execute a planned stage graph group by group, feeding each group's
@@ -112,9 +175,13 @@ pub(crate) fn execute_groups(
     ))
 }
 
-/// The barrier path: one stage, melt → partition → parallel execute →
-/// fold, on either backend. Also the body of the legacy `run_job` shim.
-/// `collect_moments` merges per-chunk output statistics (the §2.4
+/// The barrier path: one stage, gather → execute → fold, on either
+/// backend. Native workers tile-stream their chunks straight from the
+/// input tensor (no global melt matrix, no serial leader melt — every
+/// boundary mode works, `Wrap` included, because workers read the shared
+/// tensor); PJRT materializes the melt matrix on the leader, as its
+/// fixed-shape artifacts require. Also the body of the legacy `run_job`
+/// shim. `collect_moments` merges per-chunk output statistics (the §2.4
 /// aggregation path) — skipped when the caller discards them, and always
 /// outside the timed aggregation window.
 pub(crate) fn run_single_stage(
@@ -130,14 +197,37 @@ pub(crate) fn run_single_stage(
     let res = JobResources::prepare(stage, opts.backend, opts.artifact_dir.as_ref())?;
     let op = stage.operator()?;
     let grid = QuasiGrid::resolve(x.shape(), &op, stage.grid())?;
-
-    // melt (leader-side; row-decoupled by construction); uninitialized
-    // buffer is sound — melt_into writes every element (§Perf iteration 4)
     let rows = grid.rows();
     let cols = op.ravel_len();
-    let mut data = uninit_buffer(rows * cols);
-    melt_into(x, &op, &grid, stage.boundary(), &mut data)?;
-    let m = MeltMatrix::new(data, rows, cols, grid.out_shape().to_vec(), op.window().to_vec())?;
+    let grid_shape = grid.out_shape().to_vec();
+
+    // gather plan vs materialized matrix, by backend: native precomputes
+    // the boundary tables once (cheap) and lets every worker gather its
+    // own tiles; PJRT must materialize — its artifacts consume whole
+    // fixed-height row blocks — and that leader-side melt is metered
+    let mut leader_gather = Duration::ZERO;
+    let (gather, m): (Option<RowGather>, Option<MeltMatrix>) = match opts.backend {
+        Backend::Native => (
+            Some(RowGather::new(x.shape(), &op, &grid, stage.boundary())?),
+            None,
+        ),
+        Backend::Pjrt => {
+            let t_melt = Instant::now();
+            let mut data = uninit_buffer(rows * cols);
+            melt_into(x, &op, &grid, stage.boundary(), &mut data)?;
+            leader_gather = t_melt.elapsed();
+            (
+                None,
+                Some(MeltMatrix::new(
+                    data,
+                    rows,
+                    cols,
+                    grid_shape.clone(),
+                    op.window().to_vec(),
+                )?),
+            )
+        }
+    };
 
     // partition per policy; PJRT needs the manifest's fixed chunk height —
     // read from the resources loaded once above, not from disk again
@@ -152,19 +242,23 @@ pub(crate) fn run_single_stage(
     // only after every worker finished its (PJRT) engine build.
     let barrier = Barrier::new(opts.workers + 1);
     let backend = opts.backend;
+    let tile = opts.tile_rows.max(1);
 
     let mut setup = t_setup.elapsed();
     let mut compute = Duration::ZERO;
+    let mut worker_stats = HaloStats::default();
 
     std::thread::scope(|s| -> Result<()> {
         let mut handles = Vec::with_capacity(opts.workers);
         for _ in 0..opts.workers {
             let res = &res;
-            let m = &m;
+            let gather = gather.as_ref();
+            let m = m.as_ref();
+            let x = &x;
             let queue = &queue;
             let board = &board;
             let barrier = &barrier;
-            handles.push(s.spawn(move || -> Result<(usize, Instant, Instant)> {
+            handles.push(s.spawn(move || -> Result<(usize, Instant, Instant, HaloStats)> {
                 // engine build + artifact compile = setup, not compute
                 let ctx = WorkerContext::build(res, backend);
                 barrier.wait();
@@ -174,13 +268,41 @@ pub(crate) fn run_single_stage(
                 // would under-measure the parallel phase.
                 let t0 = Instant::now();
                 let mut done = 0usize;
-                while let Some((id, range)) = queue.pop() {
-                    let block = m.row_block(range.start, range.end)?;
-                    let out = ctx.execute(res, block, range.len())?;
-                    board.put(id, out)?;
-                    done += 1;
+                let mut stats = HaloStats::default();
+                match &ctx {
+                    WorkerContext::Native => {
+                        let g = gather.expect("native path builds a RowGather");
+                        let mut band: Vec<f32> = Vec::new();
+                        while let Some((id, range)) = queue.pop() {
+                            // fully overwritten tile by tile before the move
+                            let mut out = uninit_buffer(range.len());
+                            run_tiled(
+                                g,
+                                x.data(),
+                                0,
+                                res.kernel.as_ref(),
+                                tile,
+                                range.clone(),
+                                range.start,
+                                &mut out[..],
+                                &mut band,
+                                &mut stats,
+                            )?;
+                            board.put(id, out)?;
+                            done += 1;
+                        }
+                    }
+                    pjrt => {
+                        let m = m.expect("pjrt path materializes the melt matrix");
+                        while let Some((id, range)) = queue.pop() {
+                            let block = m.row_block(range.start, range.end)?;
+                            let out = pjrt.execute(res, block, range.len())?;
+                            board.put(id, out)?;
+                            done += 1;
+                        }
+                    }
                 }
-                Ok((done, t0, Instant::now()))
+                Ok((done, t0, Instant::now(), stats))
             }));
         }
         barrier.wait();
@@ -188,10 +310,11 @@ pub(crate) fn run_single_stage(
         let mut first_start: Option<Instant> = None;
         let mut last_end: Option<Instant> = None;
         for (w, h) in handles.into_iter().enumerate() {
-            let (done, t0, t1) = h
+            let (done, t0, t1, stats) = h
                 .join()
                 .map_err(|_| Error::Coordinator(format!("worker {w} panicked")))??;
             chunk_counts[w] = done;
+            worker_stats.add(&stats);
             first_start = Some(first_start.map_or(t0, |f| f.min(t0)));
             last_end = Some(last_end.map_or(t1, |l| l.max(t1)));
         }
@@ -204,9 +327,16 @@ pub(crate) fn run_single_stage(
 
     let t_agg = Instant::now();
     let chunks = board.into_chunks()?;
-    let out = assemble(&chunks, &partition, m.grid_shape())?;
+    let out = assemble(&chunks, &partition, &grid_shape)?;
     let aggregate = t_agg.elapsed();
     let moments = collect_moments.then(|| merged_moments(&chunks));
+
+    // PJRT's melt happened serially on the leader; report it in the
+    // gather phase totals so both backends' melt traffic is comparable
+    let (gather_rows, gather_time) = match opts.backend {
+        Backend::Native => (worker_stats.gather_rows, worker_stats.gather_time),
+        Backend::Pjrt => (rows, leader_gather),
+    };
 
     Ok((
         out,
@@ -220,14 +350,20 @@ pub(crate) fn run_single_stage(
             melts: 1,
             folds: 1,
             stages: 1,
+            gather_rows,
+            peak_band_bytes: worker_stats.peak_band_bytes,
+            melt_matrix_bytes: m.as_ref().map_or(0, |m| m.data().len() * 4),
+            gather: gather_time,
             ..Default::default()
         },
         moments,
     ))
 }
 
-/// The streaming path: one global melt, then every chunk flows through all
-/// member stages inside its worker, re-melting locally from halo slabs.
+/// The streaming path: every chunk flows through all member stages inside
+/// its worker — stage 0 tile-gathered straight from the shared input
+/// tensor (one *logical* melt pass, no materialized matrix, no serial
+/// leader phase), later stages re-melting locally from halo slabs.
 pub(crate) fn run_fused_group(
     x: &Tensor<f32>,
     stages: &[Stage],
@@ -266,10 +402,18 @@ pub(crate) fn run_fused_group(
     let rows = grid.rows();
     let cols0 = colsv[0];
 
-    // ONE global melt for the whole group
-    let mut data = uninit_buffer(rows * cols0);
-    melt_into(x, &ops[0], &grid, stages[0].boundary(), &mut data)?;
-    let m = MeltMatrix::new(data, rows, cols0, grid_shape.clone(), ops[0].window().to_vec())?;
+    // one leader-built RowGather per stage — the whole melt
+    // precomputation for the group, and the only leader-side gather work:
+    // stage 0 reads the shared input tensor under the group's grid (any
+    // boundary, Wrap included), stage k ≥ 1 re-melts Same-grid value
+    // slabs of the grid shape. Workers gather their own tiles through
+    // these shared plans; no melt matrix is ever materialized.
+    let mut gathers: Vec<RowGather> = Vec::with_capacity(n);
+    gathers.push(RowGather::new(x.shape(), &ops[0], &grid, stages[0].boundary())?);
+    for k in 1..n {
+        let sg = QuasiGrid::resolve(&grid_shape, &ops[k], &GridMode::Same)?;
+        gathers.push(RowGather::new(&grid_shape, &ops[k], &sg, stages[k].boundary())?);
+    }
 
     // downstream halo budgets: stage k's output must cover the chunk
     // extended by the halos of every later stage
@@ -301,15 +445,14 @@ pub(crate) fn run_fused_group(
     let barrier = Barrier::new(opts.workers + 1);
 
     let shared = FusedShared {
-        m: &m,
-        stages,
+        src: x.data(),
+        gathers: &gathers,
         kernels: &kernels,
-        ops: &ops,
         colsv: &colsv,
         budget: &budget,
         halos: &halos,
-        grid_shape: &grid_shape,
         rows,
+        tile: opts.tile_rows.max(1),
         queue: &queue,
         board: &board,
         halo: halo_board.as_ref(),
@@ -399,6 +542,10 @@ pub(crate) fn run_fused_group(
             halo_recomputed_rows: halo_stats.recomputed,
             halo_eager_lead: halo_stats.eager_lead,
             sched_stalls: stage_sched.as_ref().map_or(0, |s| s.stalls()),
+            gather_rows: halo_stats.gather_rows,
+            peak_band_bytes: halo_stats.peak_band_bytes,
+            melt_matrix_bytes: 0,
+            gather: halo_stats.gather_time,
         },
         moments,
     ))
@@ -435,17 +582,20 @@ impl Drop for PoisonOnPanic<'_> {
 
 /// Leader-owned state shared (by reference) with every fused worker.
 struct FusedShared<'a> {
-    m: &'a MeltMatrix,
-    stages: &'a [Stage],
+    /// The input tensor's values — stage 0's gather source.
+    src: &'a [f32],
+    /// One precomputed gather per stage: `gathers[0]` reads the input
+    /// tensor, `gathers[k ≥ 1]` re-melt value slabs of the grid shape.
+    gathers: &'a [RowGather],
     kernels: &'a [Arc<dyn RowKernel>],
-    ops: &'a [Operator],
     colsv: &'a [usize],
     /// Downstream halo budgets `B_k` (recompute mode).
     budget: &'a [usize],
     /// Per-stage halos `flat_halo(op_k)` (exchange mode).
     halos: &'a [usize],
-    grid_shape: &'a [usize],
     rows: usize,
+    /// Gather→kernel tile height (`ExecOptions::tile_rows`).
+    tile: usize,
     queue: &'a WorkQueue,
     board: &'a ResultBoard,
     halo: Option<&'a HaloBoard>,
@@ -531,7 +681,8 @@ fn exchange_worker(
 }
 
 /// Recompute-mode chunk: every stage runs over the chunk extended by its
-/// downstream halo budget, so all gathers resolve locally.
+/// downstream halo budget, so all gathers resolve locally — tile-streamed
+/// through the worker's reused `band` buffer at every stage.
 fn recompute_chunk(
     sh: &FusedShared<'_>,
     range: &Range<usize>,
@@ -540,33 +691,41 @@ fn recompute_chunk(
     band: &mut Vec<f32>,
     stats: &mut HaloStats,
 ) -> Result<()> {
-    // stage 0 over the halo-extended range, straight off the global melt
-    // matrix
+    // stage 0 over the halo-extended range, gathered tile by tile
+    // straight from the shared input tensor
     let ext0 = extend(range, sh.budget[0], sh.rows);
-    let block = sh.m.row_block(ext0.start, ext0.end)?;
-    vals.clear();
-    vals.resize(ext0.len(), 0.0);
-    sh.kernels[0].execute(block, ext0.len(), sh.colsv[0], &mut vals[..])?;
+    reuse_uninit(vals, ext0.len());
+    run_tiled(
+        &sh.gathers[0],
+        sh.src,
+        0,
+        sh.kernels[0].as_ref(),
+        sh.tile,
+        ext0.clone(),
+        ext0.start,
+        &mut vals[..],
+        band,
+        stats,
+    )?;
     stats.recomputed += ext0.len() - range.len();
     let mut prev_range = ext0;
     // remaining stages: local band re-melt from the previous slab, then
-    // the kernel — all chunk-resident
+    // the kernel — all chunk-resident, all tiled
     for k in 1..sh.kernels.len() {
         let ext = extend(range, sh.budget[k], sh.rows);
-        band.clear();
-        band.resize(ext.len() * sh.colsv[k], 0.0);
-        melt_band_into(
+        reuse_uninit(next_vals, ext.len());
+        run_tiled(
+            &sh.gathers[k],
             &vals[..],
             prev_range.start,
-            sh.grid_shape,
-            &sh.ops[k],
-            sh.stages[k].boundary(),
+            sh.kernels[k].as_ref(),
+            sh.tile,
             ext.clone(),
-            &mut band[..],
+            ext.start,
+            &mut next_vals[..],
+            band,
+            stats,
         )?;
-        next_vals.clear();
-        next_vals.resize(ext.len(), 0.0);
-        sh.kernels[k].execute(&band[..], ext.len(), sh.colsv[k], &mut next_vals[..])?;
         std::mem::swap(vals, next_vals);
         stats.recomputed += ext.len() - range.len();
         prev_range = ext;
@@ -577,8 +736,10 @@ fn recompute_chunk(
 
 /// Run stage `k` over the sub-range `rows_sub` of a chunk starting at
 /// `chunk_start`, writing into the matching slice of `out` (one value per
-/// row). Stage 0 reads the global melt matrix directly; later stages
+/// row). Stage 0 gathers from the shared input tensor; later stages
 /// re-melt a local band from `gathered = (source slab, its first row)`.
+/// Both go through the tile streamer.
+#[allow(clippy::too_many_arguments)]
 fn run_stage_rows(
     sh: &FusedShared<'_>,
     k: usize,
@@ -587,32 +748,24 @@ fn run_stage_rows(
     chunk_start: usize,
     band: &mut Vec<f32>,
     out: &mut [f32],
+    stats: &mut HaloStats,
 ) -> Result<()> {
     if rows_sub.is_empty() {
         return Ok(());
     }
-    let cols = sh.colsv[k];
-    let seg = &mut out[rows_sub.start - chunk_start..rows_sub.end - chunk_start];
-    match gathered {
-        None => {
-            let block = sh.m.row_block(rows_sub.start, rows_sub.end)?;
-            sh.kernels[k].execute(block, rows_sub.len(), cols, seg)
-        }
-        Some((src, src_start)) => {
-            band.clear();
-            band.resize(rows_sub.len() * cols, 0.0);
-            melt_band_into(
-                src,
-                src_start,
-                sh.grid_shape,
-                &sh.ops[k],
-                sh.stages[k].boundary(),
-                rows_sub.clone(),
-                &mut band[..],
-            )?;
-            sh.kernels[k].execute(&band[..], rows_sub.len(), cols, seg)
-        }
-    }
+    let (src, src_start) = gathered.unwrap_or((sh.src, 0));
+    run_tiled(
+        &sh.gathers[k],
+        src,
+        src_start,
+        sh.kernels[k].as_ref(),
+        sh.tile,
+        rows_sub,
+        chunk_start,
+        out,
+        band,
+        stats,
+    )
 }
 
 /// Exchange-mode stage task: run stage `stage` over chunk `id`'s interior
@@ -640,7 +793,7 @@ fn exchange_stage(
     // a single chunk has no neighbours to trade with
     let trading = hb.num_chunks() > 1;
 
-    // gather source for this stage: stage 0 reads the melt matrix; stage
+    // gather source for this stage: stage 0 reads the input tensor; stage
     // k ≥ 1 reads the resident stage-(k−1) slab, extended by neighbour
     // rows fetched off the board when the halo reaches past the interior
     let gathered: Option<(&[f32], usize)> = if stage == 0 {
@@ -652,8 +805,10 @@ fn exchange_stage(
         if lo == s && hi == e {
             Some((&vals[..], s))
         } else {
-            slab.clear();
-            slab.resize(hi - lo, 0.0);
+            // fully overwritten: interior copied, both halo segments
+            // fetched — so the zero-fill of resize() is skipped (§Perf
+            // iteration 4)
+            reuse_uninit(slab, hi - lo);
             slab[s - lo..s - lo + len].copy_from_slice(&vals[..]);
             if lo < s {
                 stats.received += hb.fetch_into(stage - 1, lo..s, &mut slab[..s - lo])?;
@@ -665,8 +820,10 @@ fn exchange_stage(
         }
     };
 
-    next_vals.clear();
-    next_vals.resize(len, 0.0);
+    // every element is written before it is read: the boundary segments
+    // by the boundary-first passes (all that publish() copies), the
+    // interior by its own pass before the swap hands the slab onward
+    reuse_uninit(next_vals, len);
 
     // the rows a neighbour will gather from this stage: the first/last
     // `flat_halo(op_{stage+1})` interior rows, with the board itself
@@ -682,21 +839,30 @@ fn exchange_stage(
 
     if !publishing {
         // nothing to publish (last stage, zero halo, or single chunk)
-        run_stage_rows(sh, stage, gathered, s..e, s, band, &mut next_vals[..])?;
+        run_stage_rows(sh, stage, gathered, s..e, s, band, &mut next_vals[..], stats)?;
     } else if k_lo + k_hi >= len {
         // narrow chunk: the boundary segments cover the whole interior
-        run_stage_rows(sh, stage, gathered, s..e, s, band, &mut next_vals[..])?;
+        run_stage_rows(sh, stage, gathered, s..e, s, band, &mut next_vals[..], stats)?;
         stats.published += hb.publish(stage, id, sh.halos[stage + 1], &next_vals[..])?;
         sched.mark_published(id, stage);
     } else {
         // boundary first: compute and publish the two segments before the
         // interior so the neighbours' next stage can start immediately
-        run_stage_rows(sh, stage, gathered, s..s + k_lo, s, band, &mut next_vals[..])?;
-        run_stage_rows(sh, stage, gathered, e - k_hi..e, s, band, &mut next_vals[..])?;
+        run_stage_rows(sh, stage, gathered, s..s + k_lo, s, band, &mut next_vals[..], stats)?;
+        run_stage_rows(sh, stage, gathered, e - k_hi..e, s, band, &mut next_vals[..], stats)?;
         stats.published += hb.publish(stage, id, sh.halos[stage + 1], &next_vals[..])?;
         sched.mark_published(id, stage);
         let t_pub = Instant::now();
-        run_stage_rows(sh, stage, gathered, s + k_lo..e - k_hi, s, band, &mut next_vals[..])?;
+        run_stage_rows(
+            sh,
+            stage,
+            gathered,
+            s + k_lo..e - k_hi,
+            s,
+            band,
+            &mut next_vals[..],
+            stats,
+        )?;
         // the head start the neighbours got over waiting for this interior
         stats.eager_lead += t_pub.elapsed();
     }
@@ -732,6 +898,42 @@ mod tests {
         assert_eq!(m.folds, 1);
         assert_eq!(m.stages, 3);
         assert_eq!(m.chunks_per_worker.len(), 3);
+        // the scratch-accounting claim: native fused runs gather tiles,
+        // never a global melt matrix
+        assert_eq!(m.melt_matrix_bytes, 0);
+        assert!(m.gather_rows >= m.rows * 3, "every stage gathers every row");
+        assert!(m.peak_band_bytes > 0);
+    }
+
+    #[test]
+    fn tile_height_never_changes_fused_results() {
+        // tile = 1, a tile straddling every chunk edge, and tile > rows
+        // are all bit-for-bit identical, in both halo modes
+        let x = Tensor::random(&[11, 9], 0.0, 255.0, 77).unwrap();
+        let jobs = vec![
+            Job::gaussian(&[3, 3], 1.0),
+            Job::curvature(&[3, 3]),
+            Job::median(&[3, 3]),
+        ];
+        let stages = stages_of(&jobs);
+        let (base, bm, _) =
+            run_fused_group(&x, &stages, &ExecOptions::native(2), false).unwrap();
+        assert_eq!(bm.melt_matrix_bytes, 0);
+        for tile in [1usize, 7, 1_000_000] {
+            for mode in [HaloMode::Recompute, HaloMode::Exchange] {
+                let opts = ExecOptions::native(3).with_halo_mode(mode).with_tile_rows(tile);
+                let (out, m, _) = run_fused_group(&x, &stages, &opts, false).unwrap();
+                assert_allclose(out.data(), base.data(), 0.0, 0.0);
+                assert_eq!(m.melt_matrix_bytes, 0);
+                // a 1-row tile bounds the band by cols; a huge one by the
+                // largest gathered span — both stay far below rows * cols
+                if tile == 1 {
+                    // all windows are 3x3 (9 cols); 2x slack for the
+                    // allocator's amortized capacity rounding
+                    assert!(m.peak_band_bytes <= 2 * 9 * 4, "{}", m.peak_band_bytes);
+                }
+            }
+        }
     }
 
     #[test]

@@ -83,7 +83,7 @@ impl std::fmt::Display for HaloMode {
     }
 }
 
-/// Per-worker halo accounting, summed into
+/// Per-worker halo + gather accounting, summed into
 /// [`RunMetrics`](crate::coordinator::metrics::RunMetrics) by the leader.
 #[derive(Clone, Copy, Debug, Default)]
 pub(crate) struct HaloStats {
@@ -97,6 +97,12 @@ pub(crate) struct HaloStats {
     /// the time between a stage's boundary rows landing on the board and
     /// that stage's interior finishing (exchange mode).
     pub eager_lead: Duration,
+    /// Melt rows this worker gathered through the tile streamer.
+    pub gather_rows: usize,
+    /// Peak bytes of this worker's reusable gather tile buffer.
+    pub peak_band_bytes: usize,
+    /// Time this worker spent inside tile gathers (the parallelized melt).
+    pub gather_time: Duration,
 }
 
 impl HaloStats {
@@ -105,6 +111,11 @@ impl HaloStats {
         self.received += other.received;
         self.recomputed += other.recomputed;
         self.eager_lead += other.eager_lead;
+        self.gather_rows += other.gather_rows;
+        // the fleet's scratch footprint is workers × the per-worker peak,
+        // so the merged figure keeps the max, not the sum
+        self.peak_band_bytes = self.peak_band_bytes.max(other.peak_band_bytes);
+        self.gather_time += other.gather_time;
     }
 }
 

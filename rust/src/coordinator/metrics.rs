@@ -51,6 +51,24 @@ pub struct RunMetrics {
     /// times an exchange worker asked the stage scheduler for a task and
     /// found none ready (dependency stalls — idle tail waits included).
     pub sched_stalls: usize,
+    /// melt rows gathered through the tile streamer, summed over workers.
+    /// Halo-extended rows count each time they are gathered, so recompute
+    /// mode reports more than `rows * stages`; the ratio to it is the
+    /// gather amplification factor.
+    pub gather_rows: usize,
+    /// peak bytes of any single worker's reusable gather tile buffer —
+    /// the whole scratch footprint of the native melt phase is bounded by
+    /// `workers * peak_band_bytes` (vs `rows * cols * 4` materialized).
+    pub peak_band_bytes: usize,
+    /// bytes of globally materialized melt matrix: exactly 0 on the
+    /// native tile-streamed path; `rows * cols * 4` when PJRT
+    /// materializes for its fixed-shape artifacts.
+    pub melt_matrix_bytes: usize,
+    /// accumulated time inside tile gathers — the melt phase, now running
+    /// *inside* the workers' compute window instead of serially on the
+    /// leader (summed across workers; PJRT reports its leader-side melt
+    /// here, which also sits inside `setup`).
+    pub gather: Duration,
 }
 
 impl RunMetrics {
@@ -114,6 +132,15 @@ impl RunMetrics {
                 self.halo_eager_lead, self.sched_stalls
             ));
         }
+        if self.gather_rows > 0 {
+            s.push_str(&format!(
+                " | gather {} rows in {:.2?}, band peak {} B",
+                self.gather_rows, self.gather, self.peak_band_bytes
+            ));
+        }
+        if self.melt_matrix_bytes > 0 {
+            s.push_str(&format!(" | melt matrix {} B", self.melt_matrix_bytes));
+        }
         s
     }
 }
@@ -176,6 +203,27 @@ impl PlanMetrics {
         self.groups.iter().map(|g| g.sched_stalls).sum()
     }
 
+    /// Total melt rows gathered through the tile streamer.
+    pub fn gather_rows(&self) -> usize {
+        self.groups.iter().map(|g| g.gather_rows).sum()
+    }
+
+    /// Peak single-worker gather tile buffer across all groups.
+    pub fn peak_band_bytes(&self) -> usize {
+        self.groups.iter().map(|g| g.peak_band_bytes).max().unwrap_or(0)
+    }
+
+    /// Total globally materialized melt-matrix bytes (0 for all-native
+    /// plans — the scratch-accounting assertion of the tiled executor).
+    pub fn melt_matrix_bytes(&self) -> usize {
+        self.groups.iter().map(|g| g.melt_matrix_bytes).sum()
+    }
+
+    /// Total time inside tile gathers across all groups and workers.
+    pub fn gather_time(&self) -> Duration {
+        self.groups.iter().map(|g| g.gather).sum()
+    }
+
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
@@ -235,6 +283,31 @@ mod tests {
     }
 
     #[test]
+    fn gather_counters_surface_in_summary() {
+        // quiet until the tile streamer runs …
+        let m = RunMetrics::default();
+        assert!(!m.summary().contains("gather"));
+        assert!(!m.summary().contains("melt matrix"));
+        // … then the traffic and the scratch peak are visible
+        let g = RunMetrics {
+            gather_rows: 1234,
+            peak_band_bytes: 9216,
+            gather: Duration::from_millis(7),
+            ..Default::default()
+        };
+        let s = g.summary();
+        assert!(s.contains("gather 1234 rows"), "{s}");
+        assert!(s.contains("band peak 9216 B"), "{s}");
+        assert!(!s.contains("melt matrix"), "{s}");
+        // a PJRT materialization is called out separately
+        let p = RunMetrics {
+            melt_matrix_bytes: 4096,
+            ..Default::default()
+        };
+        assert!(p.summary().contains("melt matrix 4096 B"));
+    }
+
+    #[test]
     fn degenerate_cases() {
         let m = RunMetrics::default();
         assert!(m.rows_per_sec().is_infinite());
@@ -266,6 +339,9 @@ mod tests {
             halo_received_rows: 40,
             halo_eager_lead: Duration::from_millis(4),
             sched_stalls: 3,
+            gather_rows: 300,
+            peak_band_bytes: 4096,
+            gather: Duration::from_millis(2),
             ..Default::default()
         };
         let g2 = RunMetrics {
@@ -276,6 +352,10 @@ mod tests {
             halo_recomputed_rows: 9,
             halo_eager_lead: Duration::from_millis(1),
             sched_stalls: 1,
+            gather_rows: 100,
+            peak_band_bytes: 1024,
+            gather: Duration::from_millis(1),
+            melt_matrix_bytes: 2048,
             ..Default::default()
         };
         let pm = PlanMetrics {
@@ -290,6 +370,10 @@ mod tests {
         assert_eq!(pm.halo_recomputed(), 9);
         assert_eq!(pm.halo_eager_lead(), Duration::from_millis(5));
         assert_eq!(pm.sched_stalls(), 4);
+        assert_eq!(pm.gather_rows(), 400);
+        assert_eq!(pm.peak_band_bytes(), 4096); // max, not sum
+        assert_eq!(pm.melt_matrix_bytes(), 2048);
+        assert_eq!(pm.gather_time(), Duration::from_millis(3));
         assert_eq!(pm.total(), Duration::from_millis(15));
         assert!(pm.summary().contains("2 group(s)"));
     }

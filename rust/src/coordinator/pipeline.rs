@@ -43,7 +43,23 @@ pub struct ExecOptions {
     /// compute; drop it (config `halo_wait_secs`, CLI `--halo-wait-secs`)
     /// so a genuine scheduling bug fails fast instead of hanging CI.
     pub halo_wait: Duration,
+    /// Rows per gather→kernel tile on the native backend: each worker
+    /// melts at most this many rows into its reusable band buffer before
+    /// running the stage kernel over them, so band writes and kernel reads
+    /// stay cache-resident and per-worker scratch is `O(tile_rows · cols)`
+    /// instead of `O(rows · cols)` globally. Output is bit-for-bit
+    /// invariant under this knob (kernels are row-independent, §2.4).
+    /// Defaults to [`DEFAULT_TILE_ROWS`]; floored at 1 (config
+    /// `tile_rows`, CLI `--tile-rows`). PJRT ignores it — fixed-shape
+    /// artifacts consume whole materialized row blocks.
+    pub tile_rows: usize,
 }
+
+/// Default gather→kernel tile height: a few hundred rows keeps the band
+/// (`tile · cols · 4` bytes — 9 KiB for a 3×3 window, 27 KiB for 3×3×3)
+/// and the output slice comfortably inside L2 while amortizing per-tile
+/// loop overhead.
+pub const DEFAULT_TILE_ROWS: usize = 256;
 
 impl ExecOptions {
     /// Native backend with `workers` threads.
@@ -55,6 +71,7 @@ impl ExecOptions {
             chunk_policy: None,
             halo_mode: HaloMode::Recompute,
             halo_wait: DEFAULT_WAIT_DEADLINE,
+            tile_rows: DEFAULT_TILE_ROWS,
         }
     }
 
@@ -67,7 +84,16 @@ impl ExecOptions {
             chunk_policy: None,
             halo_mode: HaloMode::Recompute,
             halo_wait: DEFAULT_WAIT_DEADLINE,
+            tile_rows: DEFAULT_TILE_ROWS,
         }
+    }
+
+    /// Builder-style override of the native gather→kernel tile height,
+    /// floored at 1. Purely a performance/footprint knob: results are
+    /// bit-for-bit identical for every value.
+    pub fn with_tile_rows(mut self, tile_rows: usize) -> Self {
+        self.tile_rows = tile_rows.max(1);
+        self
     }
 
     /// Builder-style halo mode override for fused groups.
@@ -261,7 +287,37 @@ mod tests {
             chunk_policy: None,
             halo_mode: HaloMode::Recompute,
             halo_wait: DEFAULT_WAIT_DEADLINE,
+            tile_rows: DEFAULT_TILE_ROWS,
         };
         assert!(run_job(&x, &Job::gaussian(&[3, 3], 1.0), &opts).is_err());
+    }
+
+    #[test]
+    fn tile_rows_defaults_and_floors() {
+        let opts = ExecOptions::native(2);
+        assert_eq!(opts.tile_rows, DEFAULT_TILE_ROWS);
+        let opts = opts.with_tile_rows(64);
+        assert_eq!(opts.tile_rows, 64);
+        // a zero tile would make the tile loop spin; the builder floors it
+        assert_eq!(opts.with_tile_rows(0).tile_rows, 1);
+    }
+
+    #[test]
+    fn tile_rows_never_changes_results_property() {
+        // the tentpole's correctness claim at the run_job surface: output
+        // is invariant under the tile height, including degenerate tiles
+        check_property("output invariant under tile_rows", 8, |rng: &mut SplitMix64| {
+            let dims = [5 + rng.below(8), 5 + rng.below(8)];
+            let x = Tensor::random(&dims, 0.0, 255.0, rng.next_u64()).unwrap();
+            let job = Job::median(&[3, 3]);
+            let (base, _) = run_job(&x, &job, &ExecOptions::native(2)).unwrap();
+            for tile in [1usize, 7, 100_000] {
+                let opts = ExecOptions::native(2).with_tile_rows(tile);
+                let (out, m) = run_job(&x, &job, &opts).unwrap();
+                assert_allclose(out.data(), base.data(), 0.0, 0.0);
+                assert_eq!(m.melt_matrix_bytes, 0, "native runs never materialize");
+                assert!(m.gather_rows >= m.rows);
+            }
+        });
     }
 }

@@ -1,9 +1,15 @@
 //! Worker-side chunk execution: one melt row block in, one result vector
 //! out, on either backend, for any [`RowKernel`].
 //!
-//! All stage-level precomputation (gaussian kernel vector, bilateral
-//! spatial component) happens once at kernel construction on the leader;
-//! the worker hot loop is pure compute. The PJRT `ArtifactManifest` is
+//! On the native backend the executor no longer ships materialized melt
+//! blocks at all — workers tile-stream their own gathers through a shared
+//! [`RowGather`](crate::melt::melt::RowGather) plan (see
+//! `coordinator::exec`), and [`WorkerContext::Native`] exists for the
+//! barrier/setup symmetry with PJRT plus the direct [`execute_native`]
+//! path used by the makespan simulator. All stage-level precomputation
+//! (gaussian kernel vector, bilateral spatial component, gather tables)
+//! happens once on the leader; the worker hot loop is pure compute. The
+//! PJRT `ArtifactManifest` is
 //! likewise loaded and verified exactly once on the leader, into
 //! [`JobResources`], and shared read-only with every worker — previously
 //! the leader *and* each worker re-read `manifest.json` from disk. On the

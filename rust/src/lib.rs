@@ -154,6 +154,40 @@
 //! `halo_wait_secs` (the exchange watchdog deadline) in run configs, and
 //! `--halo-mode` / `--halo-wait-secs` on `meltframe run`.
 //!
+//! ## Memory traffic
+//!
+//! A materialized melt matrix is a window-size× blow-up of the input —
+//! `rows · cols · 4` bytes, 9× for a 3×3 window, 27× for 3×3×3 — and
+//! building it serially on the leader Amdahl-caps every scaling figure.
+//! The native executor therefore never materializes it: the leader
+//! precomputes one [`RowGather`](melt::melt::RowGather) per stage (cheap
+//! per-axis boundary tables), and each worker gathers its own rows
+//! straight from the shared input tensor in cache-sized tiles of
+//! [`ExecOptions::tile_rows`](coordinator::ExecOptions) rows (default
+//! 256), running the stage kernel over each tile while it is hot. Peak
+//! gather scratch:
+//!
+//! ```text
+//! materialized:   rows · cols · 4 bytes          (global, leader-built)
+//! tile-streamed:  workers · tile_rows · cols · 4 (per-worker band, reused)
+//! ```
+//!
+//! For a 256³ volume under a 3×3×3 window that is ~1.8 GB materialized vs
+//! ~27 KB per worker tiled. `tile_rows` is purely a performance knob —
+//! outputs are bit-for-bit invariant under it (kernels are
+//! row-independent, §2.4) — settable per run (`tile_rows` in configs,
+//! `--tile-rows` on the CLI). [`RunMetrics`](coordinator::RunMetrics)
+//! meters the traffic: `gather_rows` (tile-gathered melt rows),
+//! `peak_band_bytes` (largest per-worker band), `gather` (time inside
+//! gathers, now part of the parallel compute window) and
+//! `melt_matrix_bytes` — exactly 0 on every native run, which the test
+//! suite asserts. The PJRT backend still materializes melt blocks (its
+//! AOT artifacts have fixed shapes) and reports the bytes honestly;
+//! one-off materialization remains available via [`melt`](melt::melt::melt)
+//! and row-range gathers via
+//! [`melt_rows_into`](melt::melt::melt_rows_into), which supports every
+//! boundary mode including `Wrap` because the whole tensor is readable.
+//!
 //! ```
 //! use meltframe::prelude::*;
 //!
@@ -195,7 +229,7 @@ pub mod prelude {
     pub use crate::melt::fold::fold;
     pub use crate::melt::grid::{GridMode, QuasiGrid};
     pub use crate::melt::matrix::MeltMatrix;
-    pub use crate::melt::melt::{melt, melt_band_into, BoundaryMode};
+    pub use crate::melt::melt::{melt, melt_band_into, melt_rows_into, BoundaryMode, RowGather};
     pub use crate::melt::operator::Operator;
     pub use crate::melt::partition::RowPartition;
     pub use crate::tensor::dense::Tensor;

@@ -63,6 +63,7 @@ fn dispatch(cmd: Command) -> Result<()> {
             legacy,
             halo_mode,
             halo_wait_secs,
+            tile_rows,
         } => {
             let mut cfg = RunConfig::load(&config)?;
             if let Some(mode) = halo_mode {
@@ -70,6 +71,9 @@ fn dispatch(cmd: Command) -> Result<()> {
             }
             if let Some(secs) = halo_wait_secs {
                 cfg.options.halo_wait = std::time::Duration::from_secs(secs);
+            }
+            if let Some(tile) = tile_rows {
+                cfg.options.tile_rows = tile;
             }
             let x = cfg.input.load()?;
             let fused = cfg.fused && !legacy;

@@ -8,6 +8,15 @@
 //! no division, no per-element boundary branching on the hot path (boundary
 //! handling is amortized into the tables). `Constant` mode, whose
 //! out-of-range cells have no source index, uses a sentinel-checking path.
+//!
+//! All of that per-(shape, operator, grid, boundary) precomputation lives
+//! in [`RowGather`], built once and reused for any number of row-range
+//! gathers — the tile-streamed executor builds one per stage and calls
+//! [`RowGather::gather_rows`] per cache-sized tile, so no global melt
+//! matrix is ever materialized on the native backend. [`melt_into`],
+//! [`melt_rows_into`] and [`melt_band_into`] are thin wrappers for one-off
+//! use. Odometer scratch (the window index vector of the boundary path)
+//! is allocated once per gather call, never per row.
 
 use crate::error::{Error, Result};
 use crate::melt::grid::{GridMode, QuasiGrid};
@@ -110,6 +119,23 @@ pub(crate) fn uninit_buffer(n: usize) -> Vec<f32> {
     v
 }
 
+/// Re-point a reused scratch vector at `n` elements without the zero-fill
+/// `resize(n, 0.0)` would pay: the executor's tile buffers and value slabs
+/// are fully overwritten (`gather_rows` covers every melt cell, every
+/// `RowKernel` writes one value per row) before any element is read, so
+/// the memset is a pure write pass over memory about to be rewritten —
+/// same safety argument as [`uninit_buffer`] (§Perf iteration 4).
+pub(crate) fn reuse_uninit(v: &mut Vec<f32>, n: usize) {
+    v.clear();
+    v.reserve(n);
+    // SAFETY: capacity >= n after reserve; f32 has no invalid bit
+    // patterns; the caller overwrites all n elements before reading.
+    #[allow(clippy::uninit_vec)]
+    unsafe {
+        v.set_len(n);
+    }
+}
+
 /// Melt `x` under operator `op` on the quasi-grid of `mode`, allocating the
 /// output matrix.
 pub fn melt(
@@ -127,7 +153,7 @@ pub fn melt(
 }
 
 /// Melt into a caller-provided buffer of exactly `grid.rows() * op.ravel_len()`
-/// elements — the allocation-free path the coordinator hot loop uses.
+/// elements — the allocation-free path for one-shot global melts.
 pub fn melt_into(
     x: &Tensor<f32>,
     op: &Operator,
@@ -135,22 +161,38 @@ pub fn melt_into(
     boundary: BoundaryMode,
     out: &mut [f32],
 ) -> Result<()> {
-    let rank = x.rank();
-    if op.rank() != rank {
+    let g = RowGather::new(x.shape(), op, grid, boundary)?;
+    if out.len() != g.rows() * g.cols() {
         return Err(Error::shape(format!(
-            "operator rank {} vs tensor rank {rank}",
-            op.rank()
+            "melt_into buffer length {} != {}x{}",
+            out.len(),
+            g.rows(),
+            g.cols()
         )));
     }
-    let rows = grid.rows();
-    let cols = op.ravel_len();
-    if out.len() != rows * cols {
-        return Err(Error::shape(format!(
-            "melt_into buffer length {} != {rows}x{cols}",
-            out.len()
-        )));
-    }
-    melt_core(x.data(), 0, x.shape(), op, grid, boundary, 0..rows, out)
+    g.gather_rows(x.data(), 0, 0..g.rows(), out)
+}
+
+/// Melt only grid rows `range` directly from the input tensor into `out`
+/// (`range.len() * op.ravel_len()` values) — the row-range gather the
+/// tile-streamed executor is built on. Every boundary mode is supported,
+/// **including [`BoundaryMode::Wrap`]**: the whole tensor is readable, so
+/// even non-local periodic gathers resolve (unlike [`melt_band_into`],
+/// whose source is a partial value slab).
+///
+/// One-shot convenience over [`RowGather`]; callers gathering many ranges
+/// of the same geometry should build the `RowGather` once and call
+/// [`RowGather::gather_rows`] per range to amortize the table
+/// precomputation.
+pub fn melt_rows_into(
+    x: &Tensor<f32>,
+    op: &Operator,
+    grid: &QuasiGrid,
+    boundary: BoundaryMode,
+    range: std::ops::Range<usize>,
+    out: &mut [f32],
+) -> Result<()> {
+    RowGather::new(x.shape(), op, grid, boundary)?.gather_rows(x.data(), 0, range, out)
 }
 
 /// Maximum flat-row distance between a `Same`-grid point of `shape` and any
@@ -190,41 +232,13 @@ pub fn melt_band_into(
     range: std::ops::Range<usize>,
     out: &mut [f32],
 ) -> Result<()> {
-    if op.rank() != shape.len() {
-        return Err(Error::shape(format!(
-            "operator rank {} vs shape rank {}",
-            op.rank(),
-            shape.len()
-        )));
-    }
     if matches!(boundary, BoundaryMode::Wrap) {
         return Err(Error::Operator(
             "melt_band_into does not support Wrap boundaries (non-local gathers)".into(),
         ));
     }
-    let rows: usize = shape.iter().product();
-    let cols = op.ravel_len();
-    if range.start > range.end || range.end > rows {
-        return Err(Error::shape(format!("band range {range:?} outside 0..{rows}")));
-    }
-    if out.len() != range.len() * cols {
-        return Err(Error::shape(format!(
-            "band buffer length {} != {}x{cols}",
-            out.len(),
-            range.len()
-        )));
-    }
-    let halo = flat_halo(shape, op);
-    let need_lo = range.start.saturating_sub(halo);
-    let need_hi = (range.end + halo).min(rows);
-    if src_start > need_lo || src_start + src.len() < need_hi {
-        return Err(Error::shape(format!(
-            "value slab {src_start}..{} does not cover rows {need_lo}..{need_hi}",
-            src_start + src.len()
-        )));
-    }
     let grid = QuasiGrid::resolve(shape, op, &GridMode::Same)?;
-    melt_core(src, src_start, shape, op, &grid, boundary, range, out)
+    RowGather::new(shape, op, &grid, boundary)?.gather_rows(src, src_start, range, out)
 }
 
 /// Unravel `flat` into a row-major multi-index over `shape`.
@@ -237,128 +251,272 @@ fn unravel(mut flat: usize, shape: &[usize]) -> Vec<usize> {
     idx
 }
 
-/// Shared gather core of [`melt_into`] (whole tensors) and
-/// [`melt_band_into`] (value slabs): writes the melt rows of `range`,
-/// reading `src` as the row-major values of a tensor of `input_shape`
-/// whose first element is flat index `src_offset`.
-#[allow(clippy::too_many_arguments)]
-fn melt_core(
-    src: &[f32],
-    src_offset: usize,
-    input_shape: &[usize],
-    op: &Operator,
-    grid: &QuasiGrid,
-    boundary: BoundaryMode,
-    range: std::ops::Range<usize>,
-    out: &mut [f32],
-) -> Result<()> {
-    let rank = input_shape.len();
-    let cols = op.ravel_len();
-    let tables = build_tables(input_shape, grid, op, boundary);
-    let window = op.window();
-    let fill = match boundary {
-        BoundaryMode::Constant(c) => c,
-        _ => 0.0,
-    };
-    let has_sentinel = matches!(boundary, BoundaryMode::Constant(_));
+/// Precomputed gather geometry for one `(input shape, operator, quasi-grid,
+/// boundary)` tuple: the per-axis contribution tables, interior masks and
+/// leading-offset deltas the hot loop needs, built **once** and reused for
+/// any number of row-range gathers. This is what makes the tile-streamed
+/// executor leader-free: every worker holds a shared reference to the
+/// stage's `RowGather` and melts its own cache-sized tiles straight from
+/// the source values — no global melt matrix, no serial leader phase, no
+/// per-tile table rebuild.
+///
+/// A gather call reads `src` as the row-major values of the virtual input
+/// tensor, starting at flat element `src_offset`. Two source regimes are
+/// accepted:
+///
+/// * the **whole input** (`src_offset == 0`, full length) — any grid mode
+///   and any boundary, including the non-local `Wrap`;
+/// * a **partial value slab** — only for unit (`Same`-equivalent) grids
+///   with non-`Wrap` boundaries, where the gather reach is bounded by
+///   [`flat_halo`]; the slab must cover the requested range extended by
+///   that halo (clamped to the tensor), as in [`melt_band_into`].
+#[derive(Clone, Debug)]
+pub struct RowGather {
+    /// `tables[a][g * window[a] + w]`: stride-scaled mapped source index
+    /// contribution, or -1 for Constant out-of-range.
+    tables: Vec<Vec<i64>>,
+    /// `interior[a][g]`: window fully in bounds on axis `a` at position `g`.
+    interior: Vec<Vec<bool>>,
+    /// Source deltas of every leading-axis window-offset combination.
+    prefix_deltas: Vec<isize>,
+    window: Vec<usize>,
+    radius: Vec<usize>,
+    gshape: Vec<usize>,
+    grid: QuasiGrid,
+    strides_in: Vec<usize>,
+    input_numel: usize,
+    rows: usize,
+    cols: usize,
+    fill: f32,
+    has_sentinel: bool,
+    /// Partial slabs are sound: unit grid (out shape == input shape,
+    /// stride 1, origin 0) and a local (non-`Wrap`) boundary.
+    slab_ok: bool,
+    /// Flat-row gather reach for the slab-coverage check.
+    halo: usize,
+}
 
-    // ---- interior fast path precomputation --------------------------------
-    // A grid point whose whole window stays in bounds needs no boundary
-    // mapping: its row is prod(window[..rank-1]) *contiguous* runs of
-    // window[rank-1] source elements (innermost stride is 1 in row-major),
-    // so the hot loop is pure memcpy. Precompute per-axis interiority and
-    // the source deltas of the leading-offset combinations.
-    let dims = input_shape;
-    let radius = op.radius();
-    let strides_in = row_major_strides(dims);
-    // interior[a][g]: window fully in bounds on axis a at grid position g
-    let interior: Vec<Vec<bool>> = (0..rank)
-        .map(|a| {
-            (0..grid.out_shape()[a])
-                .map(|g| {
-                    let c = grid.to_input(&unit_idx(a, g, rank))[a];
-                    c >= radius[a] as isize && c + (radius[a] as isize) < dims[a] as isize
-                })
-                .collect()
+impl RowGather {
+    /// Precompute the gather for `input_shape` under `op`/`grid`/`boundary`.
+    pub fn new(
+        input_shape: &[usize],
+        op: &Operator,
+        grid: &QuasiGrid,
+        boundary: BoundaryMode,
+    ) -> Result<Self> {
+        let rank = input_shape.len();
+        if op.rank() != rank {
+            return Err(Error::shape(format!(
+                "operator rank {} vs tensor rank {rank}",
+                op.rank()
+            )));
+        }
+        let tables = build_tables(input_shape, grid, op, boundary);
+        let radius = op.radius();
+        let window = op.window().to_vec();
+        let strides_in = row_major_strides(input_shape);
+        let interior: Vec<Vec<bool>> = (0..rank)
+            .map(|a| {
+                (0..grid.out_shape()[a])
+                    .map(|g| {
+                        let c = grid.to_input(&unit_idx(a, g, rank))[a];
+                        c >= radius[a] as isize
+                            && c + (radius[a] as isize) < input_shape[a] as isize
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut prefix_deltas: Vec<isize> = vec![0];
+        for a in 0..rank - 1 {
+            let mut next = Vec::with_capacity(prefix_deltas.len() * window[a]);
+            for &d in &prefix_deltas {
+                for k in 0..window[a] {
+                    next.push(d + (k as isize - radius[a] as isize) * strides_in[a] as isize);
+                }
+            }
+            prefix_deltas = next;
+        }
+        let wrap = matches!(boundary, BoundaryMode::Wrap);
+        let unit_grid = grid.out_shape() == input_shape
+            && grid.stride().iter().all(|&s| s == 1)
+            && grid.to_input(&vec![0; rank]).iter().all(|&c| c == 0);
+        Ok(Self {
+            interior,
+            prefix_deltas,
+            radius,
+            gshape: grid.out_shape().to_vec(),
+            grid: grid.clone(),
+            strides_in,
+            input_numel: input_shape.iter().product(),
+            rows: grid.rows(),
+            cols: op.ravel_len(),
+            fill: match boundary {
+                BoundaryMode::Constant(c) => c,
+                _ => 0.0,
+            },
+            has_sentinel: matches!(boundary, BoundaryMode::Constant(_)),
+            slab_ok: unit_grid && !wrap,
+            halo: flat_halo(input_shape, op),
+            tables,
+            window,
         })
-        .collect();
-    // source deltas for every combination of leading-axis window offsets
-    let wlast = window[rank - 1];
-    let mut prefix_deltas: Vec<isize> = vec![0];
-    for a in 0..rank - 1 {
-        let mut next = Vec::with_capacity(prefix_deltas.len() * window[a]);
-        for &d in &prefix_deltas {
-            for k in 0..window[a] {
-                next.push(d + (k as isize - radius[a] as isize) * strides_in[a] as isize);
-            }
-        }
-        prefix_deltas = next;
     }
 
-    // odometer over grid indices; per-axis running contributions let us
-    // avoid re-deriving the multi-index per row.
-    let gshape = grid.out_shape().to_vec();
-    let mut gidx = unravel(range.start, &gshape);
-    let mut wtab: Vec<&[i64]> = (0..rank)
-        .map(|a| &tables[a][gidx[a] * window[a]..(gidx[a] + 1) * window[a]])
-        .collect();
-    // running centre flat index for the fast path (absolute, pre-offset)
-    let mut centre_flat: isize = {
-        let c0 = grid.to_input(&gidx);
-        (0..rank).map(|a| c0[a] * strides_in[a] as isize).sum()
-    };
-    for (r, dst) in range.clone().zip(out.chunks_exact_mut(cols)) {
-        if (0..rank).all(|a| interior[a][gidx[a]]) {
-            // fast path: contiguous runs, no boundary mapping. The run
-            // length is the innermost window extent — typically 3 or 5 —
-            // so fixed-width copies beat generic memcpy dispatch.
-            let base = centre_flat - radius[rank - 1] as isize - src_offset as isize;
-            match wlast {
-                3 => {
-                    for (seg, &pd) in dst.chunks_exact_mut(3).zip(prefix_deltas.iter()) {
-                        let s = (base + pd) as usize;
-                        let run: [f32; 3] = src[s..s + 3].try_into().unwrap();
-                        seg.copy_from_slice(&run);
-                    }
-                }
-                5 => {
-                    for (seg, &pd) in dst.chunks_exact_mut(5).zip(prefix_deltas.iter()) {
-                        let s = (base + pd) as usize;
-                        let run: [f32; 5] = src[s..s + 5].try_into().unwrap();
-                        seg.copy_from_slice(&run);
-                    }
-                }
-                _ => {
-                    for (seg, &pd) in dst.chunks_exact_mut(wlast).zip(prefix_deltas.iter()) {
-                        let s = (base + pd) as usize;
-                        seg.copy_from_slice(&src[s..s + wlast]);
-                    }
-                }
-            }
-        } else {
-            gather_row_slow(dst, src, src_offset, &wtab, window, rank, fill, has_sentinel);
+    /// Total grid rows of this gather.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Melt columns (the operator's ravel length).
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Gather melt rows `range` from `src` (values of the virtual input
+    /// tensor from flat element `src_offset`) into `out`
+    /// (`range.len() * cols` values). Validates the range, the output
+    /// length, and — for partial slabs — the halo coverage.
+    pub fn gather_rows(
+        &self,
+        src: &[f32],
+        src_offset: usize,
+        range: std::ops::Range<usize>,
+        out: &mut [f32],
+    ) -> Result<()> {
+        if range.start > range.end || range.end > self.rows {
+            return Err(Error::shape(format!(
+                "gather range {range:?} outside 0..{}",
+                self.rows
+            )));
         }
-        // increment grid odometer and refresh per-axis table slices
-        if r + 1 < range.end {
-            for a in (0..rank).rev() {
-                gidx[a] += 1;
-                centre_flat += (grid.stride()[a] * strides_in[a]) as isize;
-                if gidx[a] < gshape[a] {
-                    wtab[a] = &tables[a][gidx[a] * window[a]..(gidx[a] + 1) * window[a]];
-                    break;
+        if out.len() != range.len() * self.cols {
+            return Err(Error::shape(format!(
+                "gather buffer length {} != {}x{}",
+                out.len(),
+                range.len(),
+                self.cols
+            )));
+        }
+        let full = src_offset == 0 && src.len() == self.input_numel;
+        if !full {
+            if !self.slab_ok {
+                return Err(Error::Operator(
+                    "partial value slabs require a unit grid and a non-Wrap boundary \
+                     (non-local or re-indexed gathers need the whole input)"
+                        .into(),
+                ));
+            }
+            let need_lo = range.start.saturating_sub(self.halo);
+            let need_hi = (range.end + self.halo).min(self.rows);
+            if src_offset > need_lo || src_offset + src.len() < need_hi {
+                return Err(Error::shape(format!(
+                    "value slab {src_offset}..{} does not cover rows {need_lo}..{need_hi}",
+                    src_offset + src.len()
+                )));
+            }
+        }
+        self.gather_unchecked(src, src_offset, range, out);
+        Ok(())
+    }
+
+    /// The validated hot loop: interior rows take the contiguous-run fast
+    /// path, boundary rows the table-odometer slow path. All odometer
+    /// scratch (`gidx`, `wtab`, the window index vector) is allocated once
+    /// per call — never per row.
+    fn gather_unchecked(
+        &self,
+        src: &[f32],
+        src_offset: usize,
+        range: std::ops::Range<usize>,
+        out: &mut [f32],
+    ) {
+        let rank = self.gshape.len();
+        let cols = self.cols;
+        let window = &self.window;
+        let wlast = window[rank - 1];
+        // odometer over grid indices; per-axis running contributions let
+        // us avoid re-deriving the multi-index per row
+        let mut gidx = unravel(range.start, &self.gshape);
+        let mut wtab: Vec<&[i64]> = (0..rank)
+            .map(|a| &self.tables[a][gidx[a] * window[a]..(gidx[a] + 1) * window[a]])
+            .collect();
+        // window-offset odometer of the slow path, hoisted out of the row
+        // loop: a full cycle of `cols` increments returns it to all-zeros,
+        // so it needs no per-row reset either
+        let mut widx = vec![0usize; rank];
+        // running centre flat index for the fast path (absolute, pre-offset)
+        let mut centre_flat: isize = {
+            let c0 = self.grid.to_input(&gidx);
+            (0..rank).map(|a| c0[a] * self.strides_in[a] as isize).sum()
+        };
+        for (r, dst) in range.clone().zip(out.chunks_exact_mut(cols)) {
+            if (0..rank).all(|a| self.interior[a][gidx[a]]) {
+                // fast path: contiguous runs, no boundary mapping. The run
+                // length is the innermost window extent — typically 3 or 5
+                // — so fixed-width copies beat generic memcpy dispatch.
+                let base = centre_flat - self.radius[rank - 1] as isize - src_offset as isize;
+                match wlast {
+                    3 => {
+                        for (seg, &pd) in dst.chunks_exact_mut(3).zip(self.prefix_deltas.iter()) {
+                            let s = (base + pd) as usize;
+                            let run: [f32; 3] = src[s..s + 3].try_into().unwrap();
+                            seg.copy_from_slice(&run);
+                        }
+                    }
+                    5 => {
+                        for (seg, &pd) in dst.chunks_exact_mut(5).zip(self.prefix_deltas.iter()) {
+                            let s = (base + pd) as usize;
+                            let run: [f32; 5] = src[s..s + 5].try_into().unwrap();
+                            seg.copy_from_slice(&run);
+                        }
+                    }
+                    _ => {
+                        for (seg, &pd) in dst.chunks_exact_mut(wlast).zip(self.prefix_deltas.iter())
+                        {
+                            let s = (base + pd) as usize;
+                            seg.copy_from_slice(&src[s..s + wlast]);
+                        }
+                    }
                 }
-                gidx[a] = 0;
-                centre_flat -= (gshape[a] * grid.stride()[a] * strides_in[a]) as isize;
-                wtab[a] = &tables[a][0..window[a]];
+            } else {
+                debug_assert!(widx.iter().all(|&w| w == 0));
+                gather_row_slow(
+                    dst,
+                    src,
+                    src_offset,
+                    &wtab,
+                    window,
+                    rank,
+                    self.fill,
+                    self.has_sentinel,
+                    &mut widx,
+                );
+            }
+            // increment grid odometer and refresh per-axis table slices
+            if r + 1 < range.end {
+                for a in (0..rank).rev() {
+                    gidx[a] += 1;
+                    centre_flat += (self.grid.stride()[a] * self.strides_in[a]) as isize;
+                    if gidx[a] < self.gshape[a] {
+                        wtab[a] = &self.tables[a][gidx[a] * window[a]..(gidx[a] + 1) * window[a]];
+                        break;
+                    }
+                    gidx[a] = 0;
+                    centre_flat -=
+                        (self.gshape[a] * self.grid.stride()[a] * self.strides_in[a]) as isize;
+                    wtab[a] = &self.tables[a][0..window[a]];
+                }
             }
         }
     }
-    Ok(())
 }
 
 /// Slow-path gather for one (boundary-touching) row: odometer over window
 /// offsets accumulating per-axis table contributions. Table entries are
-/// absolute flat indices; `base` shifts them into slab coordinates.
+/// absolute flat indices; `base` shifts them into slab coordinates. The
+/// caller provides the window index vector `widx` (all zeros on entry; the
+/// full `cols`-increment cycle returns it to all zeros on exit) so the
+/// scratch is allocated once per gather call, not once per row.
 #[allow(clippy::too_many_arguments)]
 fn gather_row_slow(
     dst: &mut [f32],
@@ -369,8 +527,8 @@ fn gather_row_slow(
     rank: usize,
     fill: f32,
     has_sentinel: bool,
+    widx: &mut [usize],
 ) {
-    let mut widx = vec![0usize; rank];
     // sentinel entries contribute 0 to acc and 1 to neg
     let mut acc: i64 = wtab.iter().map(|t| t[0].max(0)).sum();
     let mut neg = wtab.iter().filter(|t| t[0] < 0).count();
@@ -654,6 +812,105 @@ mod tests {
         assert!(
             melt_band_into(&values, 0, &[8], &op, BoundaryMode::Reflect, 7..9, &mut out).is_err()
         );
+    }
+
+    #[test]
+    fn melt_rows_into_matches_full_melt_all_modes_property() {
+        // the tile-streamed executor's contract: gathering any row range
+        // directly from the input tensor — Wrap included, since the whole
+        // tensor is readable — reproduces the full melt rows bit-for-bit
+        let modes = [
+            BoundaryMode::Reflect,
+            BoundaryMode::Nearest,
+            BoundaryMode::Wrap,
+            BoundaryMode::Constant(4.25),
+        ];
+        check_property("melt_rows_into == melt rows", 40, |rng: &mut SplitMix64| {
+            let rank = 1 + rng.below(3);
+            let dims: Vec<usize> = (0..rank).map(|_| 3 + rng.below(6)).collect();
+            let window: Vec<usize> = (0..rank).map(|_| 1 + 2 * rng.below(2)).collect();
+            let n: usize = dims.iter().product();
+            let x = Tensor::from_vec(&dims, rng.uniform_vec(n, -9.0, 9.0)).unwrap();
+            let op = Operator::new(&window).unwrap();
+            let boundary = modes[rng.below(modes.len())];
+            let gm = match rng.below(3) {
+                0 => GridMode::Same,
+                1 => GridMode::Valid,
+                _ => GridMode::Strided((0..rank).map(|_| 1 + rng.below(2)).collect()),
+            };
+            let grid = match QuasiGrid::resolve(&dims, &op, &gm) {
+                Ok(g) => g,
+                Err(_) => return,
+            };
+            let full = melt(&x, &op, gm, boundary).unwrap();
+            let rows = grid.rows();
+            let cols = op.ravel_len();
+            let start = rng.below(rows);
+            let end = start + 1 + rng.below(rows - start);
+            let mut band = vec![0.0f32; (end - start) * cols];
+            melt_rows_into(&x, &op, &grid, boundary, start..end, &mut band).unwrap();
+            assert_allclose(&band, &full.data()[start * cols..end * cols], 0.0, 0.0);
+        });
+    }
+
+    #[test]
+    fn row_gather_reuses_across_tiles() {
+        // one RowGather, many disjoint tile gathers: together they must
+        // equal the one-shot melt — the executor's tile loop in miniature
+        let x = Tensor::random(&[9, 7], -5.0, 5.0, 17).unwrap();
+        let op = Operator::cubic(3, 2).unwrap();
+        let grid = QuasiGrid::resolve(x.shape(), &op, &GridMode::Same).unwrap();
+        let g = RowGather::new(x.shape(), &op, &grid, BoundaryMode::Wrap).unwrap();
+        assert_eq!(g.rows(), 63);
+        assert_eq!(g.cols(), 9);
+        let full = melt(&x, &op, GridMode::Same, BoundaryMode::Wrap).unwrap();
+        let mut tiled = vec![0.0f32; 63 * 9];
+        for tile in [1usize, 4, 17, 100] {
+            tiled.iter_mut().for_each(|v| *v = f32::NAN);
+            let mut t = 0;
+            while t < 63 {
+                let te = (t + tile).min(63);
+                g.gather_rows(x.data(), 0, t..te, &mut tiled[t * 9..te * 9]).unwrap();
+                t = te;
+            }
+            assert_allclose(&tiled, full.data(), 0.0, 0.0);
+        }
+    }
+
+    #[test]
+    fn row_gather_validates_inputs() {
+        let x = Tensor::full(&[6], 1.0).unwrap();
+        let op = Operator::new(&[3]).unwrap();
+        let grid = QuasiGrid::resolve(&[6], &op, &GridMode::Same).unwrap();
+        let g = RowGather::new(&[6], &op, &grid, BoundaryMode::Reflect).unwrap();
+        let mut out = vec![0.0f32; 6];
+        // range outside the grid / wrong buffer length
+        assert!(g.gather_rows(x.data(), 0, 5..7, &mut out).is_err());
+        assert!(g.gather_rows(x.data(), 0, 0..1, &mut out).is_err());
+        // partial slabs must cover the halo
+        assert!(g.gather_rows(&x.data()[..2], 0, 2..4, &mut out).is_err());
+        // Wrap gathers reject partial slabs outright (non-local)
+        let gw = RowGather::new(&[6], &op, &grid, BoundaryMode::Wrap).unwrap();
+        assert!(gw.gather_rows(&x.data()[..5], 0, 0..2, &mut out).is_err());
+        // Strided grids re-index, so partial slabs are rejected there too
+        let sg = QuasiGrid::resolve(&[6], &op, &GridMode::Strided(vec![2])).unwrap();
+        let gs = RowGather::new(&[6], &op, &sg, BoundaryMode::Reflect).unwrap();
+        let mut out3 = vec![0.0f32; 3 * 3];
+        assert!(gs.gather_rows(&x.data()[..5], 0, 0..3, &mut out3).is_err());
+        assert!(gs.gather_rows(x.data(), 0, 0..3, &mut out3).is_ok());
+        // rank mismatch at construction
+        assert!(RowGather::new(&[6, 6], &op, &grid, BoundaryMode::Reflect).is_err());
+    }
+
+    #[test]
+    fn reuse_uninit_tracks_len() {
+        let mut v = vec![1.0f32; 4];
+        reuse_uninit(&mut v, 9);
+        assert_eq!(v.len(), 9);
+        v.iter_mut().for_each(|x| *x = 2.0);
+        assert!(v.iter().all(|&x| x == 2.0));
+        reuse_uninit(&mut v, 2);
+        assert_eq!(v.len(), 2);
     }
 
     #[test]

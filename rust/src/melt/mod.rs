@@ -28,6 +28,6 @@ pub mod partition;
 pub use fold::fold;
 pub use grid::{GridMode, QuasiGrid};
 pub use matrix::MeltMatrix;
-pub use melt::{flat_halo, melt, melt_band_into, melt_into, BoundaryMode};
+pub use melt::{flat_halo, melt, melt_band_into, melt_into, melt_rows_into, BoundaryMode, RowGather};
 pub use operator::Operator;
 pub use partition::RowPartition;
