@@ -258,11 +258,62 @@ impl JsonReport {
     pub fn write(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
         std::fs::write(path, self.render())
     }
+
+    /// The same document as [`JsonReport::render`] on a single line, no
+    /// interior newlines — the shape the serve daemon's line-delimited
+    /// protocol embeds in its responses.
+    pub fn render_line(&self) -> String {
+        let mut s = String::new();
+        s.push('{');
+        s.push_str(&format!("\"name\": \"{}\", ", json_escape(&self.name)));
+        s.push_str("\"series\": [");
+        for (i, (label, m)) in self.series.iter().enumerate() {
+            s.push_str(&format!(
+                "{{\"label\": \"{}\", \"reps\": {}, \"ns_per_op_median\": {}, \
+                 \"ns_per_op_mean\": {}, \"ns_per_op_min\": {}}}{}",
+                json_escape(label),
+                m.samples.len(),
+                json_num(m.median().as_nanos() as f64),
+                json_num(m.mean().as_nanos() as f64),
+                json_num(m.min().as_nanos() as f64),
+                if i + 1 < self.series.len() { ", " } else { "" }
+            ));
+        }
+        s.push_str("], \"metrics\": {");
+        for (i, (key, value)) in self.metrics.iter().enumerate() {
+            s.push_str(&format!(
+                "\"{}\": {}{}",
+                json_escape(key),
+                json_num(*value),
+                if i + 1 < self.metrics.len() { ", " } else { "" }
+            ));
+        }
+        s.push_str("}}");
+        s
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn render_line_is_single_line_and_parses() {
+        let mut j = JsonReport::new("serve \"smoke\"");
+        j.series("run", &Measurement::run("run", 1, 1, || 1 + 1));
+        j.metric("stages", 3.0);
+        j.metric("plan_cache_hits", 1.0);
+        let line = j.render_line();
+        assert!(!line.contains('\n'), "must embed in a line protocol");
+        let v = crate::config::json::JsonValue::parse(&line).unwrap();
+        let obj = v.as_object().unwrap();
+        assert!(obj.contains_key("name"));
+        assert!(obj.contains_key("series"));
+        assert_eq!(
+            v.field("metrics").unwrap().field("stages").unwrap().as_f64().unwrap(),
+            3.0
+        );
+    }
 
     #[test]
     fn measurement_collects_samples() {

@@ -4,6 +4,8 @@
 //!   run <config.toml> [--out out.npy]      run a configured pipeline
 //!   inspect [--artifacts DIR]              list artifacts + PJRT platform
 //!   demo [--workers N] [--backend B]       built-in Fig 6 style demo run
+//!   serve --socket PATH                    persistent serving daemon
+//!   submit --socket PATH --json LINE       client for a running daemon
 //!
 //! `parse_args` is pure (testable); `main.rs` wires it to the process.
 
@@ -34,6 +36,38 @@ pub enum Command {
     Inspect {
         artifacts: PathBuf,
     },
+    /// Start the serving daemon on a Unix-domain socket.
+    Serve {
+        socket: PathBuf,
+        /// Pool threads (`--workers N`, default 4).
+        workers: usize,
+        /// Pending-job admission depth (`--queue-depth N`, default 16).
+        queue_depth: usize,
+        /// Plan-cache capacity in entries (`--cache-capacity N`, default 32).
+        cache_capacity: usize,
+        /// Daemon-default fused halo strategy (`--halo-mode`).
+        halo_mode: Option<HaloMode>,
+        /// Exchange-wait watchdog deadline override (`--halo-wait-secs N`).
+        halo_wait_secs: Option<u64>,
+        /// Native gather→kernel tile height override (`--tile-rows N`).
+        tile_rows: Option<usize>,
+    },
+    /// Submit one protocol line to a daemon (or run it in-process).
+    Submit {
+        /// Daemon socket (`--socket PATH`); required unless `--oneshot`.
+        socket: Option<PathBuf>,
+        /// Request line inline (`--json LINE`).
+        json: Option<String>,
+        /// Request line from a file (`--request-file PATH`).
+        request_file: Option<PathBuf>,
+        /// Execute in-process on a fresh one-shot executor instead of a
+        /// daemon — the bit-for-bit reference for the served path.
+        oneshot: bool,
+        /// Workers for `--oneshot` (default 4).
+        workers: usize,
+        /// Send `{"op": "shutdown"}` (`--shutdown`).
+        shutdown: bool,
+    },
     Demo {
         workers: usize,
         backend: String,
@@ -55,6 +89,11 @@ USAGE:
     meltframe inspect [--artifacts <dir>]
     meltframe demo [--workers <n>] [--backend native|pjrt] [--artifacts <dir>]
                    [--dims <d,h,w>|<h,w>]
+    meltframe serve --socket <path> [--workers <n>] [--queue-depth <n>]
+                    [--cache-capacity <n>] [--halo-mode recompute|exchange]
+                    [--halo-wait-secs <n>] [--tile-rows <n>]
+    meltframe submit (--socket <path> | --oneshot [--workers <n>])
+                     (--json <line> | --request-file <path> | --shutdown)
     meltframe help
 
 `run` executes the configured stages through the fused lazy Plan (one melt,
@@ -68,6 +107,13 @@ purely a cache-footprint knob — results are bit-for-bit identical).
 `demo --dims` picks the synthetic workload shape: three comma-separated
 extents run the (D, H, W) volume pipeline, two run the (H, W) image one
 (default 48,48,48).
+`serve` starts a persistent daemon: a long-lived worker pool and an LRU
+plan cache behind a line-delimited JSON protocol on a Unix-domain socket,
+with bounded-queue admission control. `submit` is the matching client:
+`--json`/`--request-file` send one job request line and print the response
+line (digest + metrics); `--shutdown` drains and stops the daemon;
+`--oneshot` executes the same request in-process instead — the bit-for-bit
+reference for the served path.
 ";
 
 /// Parse argv (without the program name).
@@ -192,10 +238,123 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                 dims,
             })
         }
+        "serve" => {
+            let mut socket = None;
+            let mut workers = 4usize;
+            let mut queue_depth = 16usize;
+            let mut cache_capacity = 32usize;
+            let mut halo_mode = None;
+            let mut halo_wait_secs = None;
+            let mut tile_rows = None;
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--socket" => {
+                        socket = Some(PathBuf::from(expect_value(&mut it, "--socket")?));
+                    }
+                    "--workers" => workers = positive_usize(&mut it, "--workers")?,
+                    "--queue-depth" => queue_depth = positive_usize(&mut it, "--queue-depth")?,
+                    "--cache-capacity" => {
+                        cache_capacity = positive_usize(&mut it, "--cache-capacity")?
+                    }
+                    "--halo-mode" => {
+                        halo_mode = Some(HaloMode::parse(expect_value(&mut it, "--halo-mode")?)?);
+                    }
+                    "--halo-wait-secs" => {
+                        let v = expect_value(&mut it, "--halo-wait-secs")?;
+                        let secs: u64 = v.parse().map_err(|_| {
+                            Error::Config("--halo-wait-secs expects a number of seconds".into())
+                        })?;
+                        if secs == 0 {
+                            return Err(Error::Config("--halo-wait-secs must be >= 1".into()));
+                        }
+                        halo_wait_secs = Some(secs);
+                    }
+                    "--tile-rows" => tile_rows = Some(positive_usize(&mut it, "--tile-rows")?),
+                    other => {
+                        return Err(Error::Config(format!("unknown argument '{other}' for serve")))
+                    }
+                }
+            }
+            Ok(Command::Serve {
+                socket: socket
+                    .ok_or_else(|| Error::Config("serve requires --socket <path>".into()))?,
+                workers,
+                queue_depth,
+                cache_capacity,
+                halo_mode,
+                halo_wait_secs,
+                tile_rows,
+            })
+        }
+        "submit" => {
+            let mut socket = None;
+            let mut json = None;
+            let mut request_file = None;
+            let mut oneshot = false;
+            let mut workers = 4usize;
+            let mut shutdown = false;
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--socket" => {
+                        socket = Some(PathBuf::from(expect_value(&mut it, "--socket")?));
+                    }
+                    "--json" => json = Some(expect_value(&mut it, "--json")?.to_string()),
+                    "--request-file" => {
+                        request_file =
+                            Some(PathBuf::from(expect_value(&mut it, "--request-file")?));
+                    }
+                    "--oneshot" => oneshot = true,
+                    "--workers" => workers = positive_usize(&mut it, "--workers")?,
+                    "--shutdown" => shutdown = true,
+                    other => {
+                        return Err(Error::Config(format!(
+                            "unknown argument '{other}' for submit"
+                        )))
+                    }
+                }
+            }
+            let payloads = usize::from(json.is_some())
+                + usize::from(request_file.is_some())
+                + usize::from(shutdown);
+            if payloads != 1 {
+                return Err(Error::Config(
+                    "submit takes exactly one of --json, --request-file, --shutdown".into(),
+                ));
+            }
+            if oneshot && shutdown {
+                return Err(Error::Config("--oneshot has no daemon to --shutdown".into()));
+            }
+            if oneshot == socket.is_some() {
+                return Err(Error::Config(
+                    "submit needs --socket <path>, or --oneshot to run in-process".into(),
+                ));
+            }
+            Ok(Command::Submit {
+                socket,
+                json,
+                request_file,
+                oneshot,
+                workers,
+                shutdown,
+            })
+        }
         other => Err(Error::Config(format!(
             "unknown command '{other}'\n{USAGE}"
         ))),
     }
+}
+
+/// A flag value that must parse as an integer >= 1 (0 would spin loops,
+/// dead pools, or uncacheable caches — refuse at the CLI boundary).
+fn positive_usize(it: &mut std::slice::Iter<'_, String>, flag: &str) -> Result<usize> {
+    let v = expect_value(it, flag)?;
+    let n: usize = v
+        .parse()
+        .map_err(|_| Error::Config(format!("{flag} expects a number")))?;
+    if n == 0 {
+        return Err(Error::Config(format!("{flag} must be >= 1")));
+    }
+    Ok(n)
 }
 
 fn expect_value<'a>(
@@ -315,6 +474,98 @@ mod tests {
         assert!(parse_args(&argv("demo --dims 16,0,16")).is_err());
         assert!(parse_args(&argv("demo --dims abc,16")).is_err());
         assert!(parse_args(&argv("demo --dims")).is_err());
+    }
+
+    #[test]
+    fn parses_serve() {
+        assert_eq!(
+            parse_args(&argv("serve --socket /tmp/mf.sock")).unwrap(),
+            Command::Serve {
+                socket: PathBuf::from("/tmp/mf.sock"),
+                workers: 4,
+                queue_depth: 16,
+                cache_capacity: 32,
+                halo_mode: None,
+                halo_wait_secs: None,
+                tile_rows: None,
+            }
+        );
+        assert_eq!(
+            parse_args(&argv(
+                "serve --socket mf.sock --workers 3 --queue-depth 8 --cache-capacity 5 \
+                 --halo-mode exchange --halo-wait-secs 30 --tile-rows 64"
+            ))
+            .unwrap(),
+            Command::Serve {
+                socket: PathBuf::from("mf.sock"),
+                workers: 3,
+                queue_depth: 8,
+                cache_capacity: 5,
+                halo_mode: Some(HaloMode::Exchange),
+                halo_wait_secs: Some(30),
+                tile_rows: Some(64),
+            }
+        );
+    }
+
+    #[test]
+    fn parses_submit() {
+        let args: Vec<String> = ["submit", "--socket", "mf.sock", "--json", "{\"id\": \"j1\"}"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(
+            parse_args(&args).unwrap(),
+            Command::Submit {
+                socket: Some(PathBuf::from("mf.sock")),
+                json: Some("{\"id\": \"j1\"}".into()),
+                request_file: None,
+                oneshot: false,
+                workers: 4,
+                shutdown: false,
+            }
+        );
+        assert_eq!(
+            parse_args(&argv("submit --oneshot --workers 2 --request-file req.json")).unwrap(),
+            Command::Submit {
+                socket: None,
+                json: None,
+                request_file: Some(PathBuf::from("req.json")),
+                oneshot: true,
+                workers: 2,
+                shutdown: false,
+            }
+        );
+        assert_eq!(
+            parse_args(&argv("submit --socket mf.sock --shutdown")).unwrap(),
+            Command::Submit {
+                socket: Some(PathBuf::from("mf.sock")),
+                json: None,
+                request_file: None,
+                oneshot: false,
+                workers: 4,
+                shutdown: true,
+            }
+        );
+    }
+
+    #[test]
+    fn serve_and_submit_reject_malformed() {
+        // zero values would spin loops / dead pools — refused like
+        // `run --tile-rows 0`
+        assert!(parse_args(&argv("serve --socket s --workers 0")).is_err());
+        assert!(parse_args(&argv("serve --socket s --queue-depth 0")).is_err());
+        assert!(parse_args(&argv("serve --socket s --cache-capacity 0")).is_err());
+        assert!(parse_args(&argv("serve --socket s --tile-rows 0")).is_err());
+        assert!(parse_args(&argv("serve --socket s --halo-wait-secs 0")).is_err());
+        assert!(parse_args(&argv("serve")).is_err()); // socket required
+        assert!(parse_args(&argv("serve --socket s --bogus")).is_err());
+        assert!(parse_args(&argv("submit --socket s")).is_err()); // no payload
+        assert!(parse_args(&argv("submit --socket s --shutdown --json x")).is_err());
+        assert!(parse_args(&argv("submit --json x")).is_err()); // no socket, no oneshot
+        assert!(parse_args(&argv("submit --oneshot --socket s --json x")).is_err());
+        assert!(parse_args(&argv("submit --oneshot --shutdown")).is_err());
+        assert!(parse_args(&argv("submit --oneshot --json x --workers 0")).is_err());
     }
 
     #[test]

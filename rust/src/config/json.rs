@@ -63,6 +63,14 @@ impl JsonValue {
         }
     }
 
+    /// Any JSON number as f64 (kernel parameters: sigma, q, …).
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            JsonValue::Number(n) => Ok(*n),
+            other => Err(Error::Format(format!("expected number, got {other:?}"))),
+        }
+    }
+
     /// Field lookup on an object.
     pub fn field(&self, key: &str) -> Result<&JsonValue> {
         self.as_object()?

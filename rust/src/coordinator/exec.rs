@@ -82,12 +82,127 @@ use crate::melt::grid::{GridMode, QuasiGrid};
 use crate::melt::matrix::MeltMatrix;
 use crate::melt::melt::{flat_halo, melt_into, reuse_uninit, uninit_buffer, RowGather};
 use crate::melt::operator::Operator;
+use crate::serve::cache::{CacheDelta, CachedGroupPlan, PlanCache};
+use crate::serve::pool::WorkerPool;
 use crate::stats::descriptive::Moments;
 use crate::tensor::dense::Tensor;
 
 /// Clamp `range` extended by `budget` rows on both sides to `[0, rows)`.
 fn extend(range: &Range<usize>, budget: usize, rows: usize) -> Range<usize> {
     range.start.saturating_sub(budget)..(range.end + budget).min(rows)
+}
+
+/// Where a run's workers come from: a fresh `thread::scope` fleet spawned
+/// for this run (the one-shot default), or a long-lived
+/// [`WorkerPool`](crate::serve::pool::WorkerPool) owned by a serving
+/// [`Executor`](crate::serve::Executor). Both have identical semantics —
+/// `workers` tasks that may borrow the caller's stack, a leader closure on
+/// the calling thread, panic mapped to `Err("worker {w} panicked")` — so
+/// every execution path below is fleet-agnostic.
+#[derive(Clone, Copy)]
+pub(crate) enum Fleet<'p> {
+    /// Spawn (and join) a scoped thread per worker, per run.
+    Scoped,
+    /// Dispatch onto a persistent pool (must have >= `workers` threads).
+    Pool(&'p WorkerPool),
+}
+
+/// Run `workers` instances of `work` on the fleet plus `leader` on the
+/// calling thread; block until all finish. One `Result` per worker, in
+/// index order.
+fn run_fleet<T, F, L>(fleet: Fleet<'_>, workers: usize, work: F, leader: L) -> Vec<Result<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+    L: FnOnce(),
+{
+    match fleet {
+        Fleet::Pool(pool) => {
+            if workers > pool.size() {
+                // a barrier across more tasks than pool threads would
+                // deadlock — refuse before enqueueing anything
+                return (0..workers)
+                    .map(|_| {
+                        Err(Error::Coordinator(format!(
+                            "run needs {workers} workers but the pool has {}",
+                            pool.size()
+                        )))
+                    })
+                    .collect();
+            }
+            pool.run_scoped(workers, work, leader)
+        }
+        Fleet::Scoped => std::thread::scope(|s| {
+            let work = &work;
+            let handles: Vec<_> = (0..workers).map(|w| s.spawn(move || work(w))).collect();
+            leader();
+            handles
+                .into_iter()
+                .enumerate()
+                .map(|(w, h)| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(Error::Coordinator(format!("worker {w} panicked"))))
+                })
+                .collect()
+        }),
+    }
+}
+
+/// Build (or fetch from `cache`) the data-independent plan of one native
+/// group: resolved grid, per-stage `RowGather` tables, halos and budgets.
+/// The build runs outside any cache lock; on a hit nothing is built and
+/// the returned [`CacheDelta`] says so.
+pub(crate) fn group_plan(
+    input_shape: &[usize],
+    stages: &[Stage],
+    opts: &ExecOptions,
+    cache: Option<&PlanCache>,
+) -> Result<(Arc<CachedGroupPlan>, CacheDelta)> {
+    let build = || -> Result<CachedGroupPlan> {
+        let n = stages.len();
+        let ops: Vec<Operator> = stages.iter().map(|s| s.operator()).collect::<Result<_>>()?;
+        let colsv: Vec<usize> = ops.iter().map(|o| o.ravel_len()).collect();
+        // the first stage's quasi-grid defines the group's row space;
+        // later stages are Same-mode over it (planner invariant)
+        let grid = QuasiGrid::resolve(input_shape, &ops[0], stages[0].grid())?;
+        let grid_shape = grid.out_shape().to_vec();
+        let rows = grid.rows();
+        let mut gathers: Vec<RowGather> = Vec::with_capacity(n);
+        gathers.push(RowGather::new(input_shape, &ops[0], &grid, stages[0].boundary())?);
+        for k in 1..n {
+            let sg = QuasiGrid::resolve(&grid_shape, &ops[k], &GridMode::Same)?;
+            gathers.push(RowGather::new(&grid_shape, &ops[k], &sg, stages[k].boundary())?);
+        }
+        // downstream halo budgets: stage k's output must cover the chunk
+        // extended by the halos of every later stage
+        let halos: Vec<usize> = ops.iter().map(|o| flat_halo(&grid_shape, o)).collect();
+        let mut budget = vec![0usize; n];
+        for k in (0..n.saturating_sub(1)).rev() {
+            budget[k] = budget[k + 1] + halos[k + 1];
+        }
+        Ok(CachedGroupPlan {
+            gathers,
+            grid_shape,
+            rows,
+            colsv,
+            halos,
+            budget,
+        })
+    };
+    match cache {
+        Some(c) => c.get_or_build(&PlanCache::key_for(input_shape, stages, opts), build),
+        None => {
+            let plan = build()?;
+            let built = plan.stages();
+            Ok((
+                Arc::new(plan),
+                CacheDelta {
+                    built,
+                    ..Default::default()
+                },
+            ))
+        }
+    }
 }
 
 /// The gather→kernel tile loop shared by every native execution path:
@@ -134,12 +249,30 @@ fn run_tiled(
 }
 
 /// Execute a planned stage graph group by group, feeding each group's
-/// output tensor to the next.
+/// output tensor to the next (one-shot: fresh scoped fleet, no cache).
+/// Production callers go through [`execute_groups_with`] (via
+/// `CompiledPlan::execute_on`); this shim keeps unit tests on the
+/// one-shot signature.
+#[cfg(test)]
 pub(crate) fn execute_groups(
     x: &Tensor<f32>,
     stages: &[Stage],
     groups: &[Range<usize>],
     opts: &ExecOptions,
+) -> Result<(Tensor<f32>, PlanMetrics)> {
+    execute_groups_with(x, stages, groups, opts, Fleet::Scoped, None)
+}
+
+/// [`execute_groups`] with an explicit worker fleet and optional plan
+/// cache — the entry point the serving [`Executor`](crate::serve::Executor)
+/// uses to reuse threads and `RowGather` tables across jobs.
+pub(crate) fn execute_groups_with(
+    x: &Tensor<f32>,
+    stages: &[Stage],
+    groups: &[Range<usize>],
+    opts: &ExecOptions,
+    fleet: Fleet<'_>,
+    cache: Option<&PlanCache>,
 ) -> Result<(Tensor<f32>, PlanMetrics)> {
     if opts.workers == 0 {
         return Err(Error::Coordinator("workers must be >= 1".into()));
@@ -156,9 +289,9 @@ pub(crate) fn execute_groups(
         let last = gi + 1 == groups.len();
         let input = cur.as_ref().unwrap_or(x);
         let (next, m, mom) = if g.len() == 1 {
-            run_single_stage(input, &stages[g.start], opts, last)?
+            run_single_stage_with(input, &stages[g.start], opts, last, fleet, cache)?
         } else {
-            run_fused_group(input, &stages[g.clone()], opts, last)?
+            run_fused_group_with(input, &stages[g.clone()], opts, last, fleet, cache)?
         };
         metrics.push(m);
         if let Some(mom) = mom {
@@ -190,44 +323,66 @@ pub(crate) fn run_single_stage(
     opts: &ExecOptions,
     collect_moments: bool,
 ) -> Result<(Tensor<f32>, RunMetrics, Option<Moments>)> {
+    run_single_stage_with(x, stage, opts, collect_moments, Fleet::Scoped, None)
+}
+
+/// [`run_single_stage`] with an explicit fleet and optional plan cache.
+pub(crate) fn run_single_stage_with(
+    x: &Tensor<f32>,
+    stage: &Stage,
+    opts: &ExecOptions,
+    collect_moments: bool,
+    fleet: Fleet<'_>,
+    cache: Option<&PlanCache>,
+) -> Result<(Tensor<f32>, RunMetrics, Option<Moments>)> {
     if opts.workers == 0 {
         return Err(Error::Coordinator("workers must be >= 1".into()));
     }
     let t_setup = Instant::now();
     let res = JobResources::prepare(stage, opts.backend, opts.artifact_dir.as_ref())?;
-    let op = stage.operator()?;
-    let grid = QuasiGrid::resolve(x.shape(), &op, stage.grid())?;
-    let rows = grid.rows();
-    let cols = op.ravel_len();
-    let grid_shape = grid.out_shape().to_vec();
 
-    // gather plan vs materialized matrix, by backend: native precomputes
-    // the boundary tables once (cheap) and lets every worker gather its
-    // own tiles; PJRT must materialize — its artifacts consume whole
-    // fixed-height row blocks — and that leader-side melt is metered
+    // gather plan vs materialized matrix, by backend: native fetches (or
+    // precomputes — cheap boundary tables) the cached group plan and lets
+    // every worker gather its own tiles; PJRT must materialize — its
+    // artifacts consume whole fixed-height row blocks — and that
+    // leader-side melt is metered and never cached
     let mut leader_gather = Duration::ZERO;
-    let (gather, m): (Option<RowGather>, Option<MeltMatrix>) = match opts.backend {
-        Backend::Native => (
-            Some(RowGather::new(x.shape(), &op, &grid, stage.boundary())?),
-            None,
-        ),
+    let plan: Option<Arc<CachedGroupPlan>>;
+    let delta: CacheDelta;
+    let m: Option<MeltMatrix>;
+    let (rows, cols, grid_shape): (usize, usize, Vec<usize>);
+    match opts.backend {
+        Backend::Native => {
+            let (p, d) = group_plan(x.shape(), std::slice::from_ref(stage), opts, cache)?;
+            rows = p.rows;
+            cols = p.colsv[0];
+            grid_shape = p.grid_shape.clone();
+            plan = Some(p);
+            delta = d;
+            m = None;
+        }
         Backend::Pjrt => {
+            let op = stage.operator()?;
+            let grid = QuasiGrid::resolve(x.shape(), &op, stage.grid())?;
+            rows = grid.rows();
+            cols = op.ravel_len();
+            grid_shape = grid.out_shape().to_vec();
             let t_melt = Instant::now();
             let mut data = uninit_buffer(rows * cols);
             melt_into(x, &op, &grid, stage.boundary(), &mut data)?;
             leader_gather = t_melt.elapsed();
-            (
-                None,
-                Some(MeltMatrix::new(
-                    data,
-                    rows,
-                    cols,
-                    grid_shape.clone(),
-                    op.window().to_vec(),
-                )?),
-            )
+            m = Some(MeltMatrix::new(
+                data,
+                rows,
+                cols,
+                grid_shape.clone(),
+                op.window().to_vec(),
+            )?);
+            plan = None;
+            delta = CacheDelta::default();
         }
-    };
+    }
+    let gather = plan.as_ref().map(|p| &p.gathers[0]);
 
     // partition per policy; PJRT needs the manifest's fixed chunk height —
     // read from the resources loaded once above, not from disk again
@@ -245,85 +400,71 @@ pub(crate) fn run_single_stage(
     let tile = opts.tile_rows.max(1);
 
     let mut setup = t_setup.elapsed();
-    let mut compute = Duration::ZERO;
     let mut worker_stats = HaloStats::default();
 
-    std::thread::scope(|s| -> Result<()> {
-        let mut handles = Vec::with_capacity(opts.workers);
-        for _ in 0..opts.workers {
-            let res = &res;
-            let gather = gather.as_ref();
-            let m = m.as_ref();
-            let x = &x;
-            let queue = &queue;
-            let board = &board;
-            let barrier = &barrier;
-            handles.push(s.spawn(move || -> Result<(usize, Instant, Instant, HaloStats)> {
-                // engine build + artifact compile = setup, not compute
-                let ctx = WorkerContext::build(res, backend);
-                barrier.wait();
-                let ctx = ctx?;
-                // workers self-report their compute window: the leader may
-                // be descheduled at barrier release, so leader-side clocks
-                // would under-measure the parallel phase.
-                let t0 = Instant::now();
-                let mut done = 0usize;
-                let mut stats = HaloStats::default();
-                match &ctx {
-                    WorkerContext::Native => {
-                        let g = gather.expect("native path builds a RowGather");
-                        let mut band: Vec<f32> = Vec::new();
-                        while let Some((id, range)) = queue.pop() {
-                            // fully overwritten tile by tile before the move
-                            let mut out = uninit_buffer(range.len());
-                            run_tiled(
-                                g,
-                                x.data(),
-                                0,
-                                res.kernel.as_ref(),
-                                tile,
-                                range.clone(),
-                                range.start,
-                                &mut out[..],
-                                &mut band,
-                                &mut stats,
-                            )?;
-                            board.put(id, out)?;
-                            done += 1;
-                        }
-                    }
-                    pjrt => {
-                        let m = m.expect("pjrt path materializes the melt matrix");
-                        while let Some((id, range)) = queue.pop() {
-                            let block = m.row_block(range.start, range.end)?;
-                            let out = pjrt.execute(res, block, range.len())?;
-                            board.put(id, out)?;
-                            done += 1;
-                        }
-                    }
+    let work = |_w: usize| -> Result<(usize, Instant, Instant, HaloStats)> {
+        // engine build + artifact compile = setup, not compute
+        let ctx = WorkerContext::build(&res, backend);
+        barrier.wait();
+        let ctx = ctx?;
+        // workers self-report their compute window: the leader may
+        // be descheduled at barrier release, so leader-side clocks
+        // would under-measure the parallel phase.
+        let t0 = Instant::now();
+        let mut done = 0usize;
+        let mut stats = HaloStats::default();
+        match &ctx {
+            WorkerContext::Native => {
+                let g = gather.expect("native path builds a RowGather");
+                let mut band: Vec<f32> = Vec::new();
+                while let Some((id, range)) = queue.pop() {
+                    // fully overwritten tile by tile before the move
+                    let mut out = uninit_buffer(range.len());
+                    run_tiled(
+                        g,
+                        x.data(),
+                        0,
+                        res.kernel.as_ref(),
+                        tile,
+                        range.clone(),
+                        range.start,
+                        &mut out[..],
+                        &mut band,
+                        &mut stats,
+                    )?;
+                    board.put(id, out)?;
+                    done += 1;
                 }
-                Ok((done, t0, Instant::now(), stats))
-            }));
+            }
+            pjrt => {
+                let m = m.as_ref().expect("pjrt path materializes the melt matrix");
+                while let Some((id, range)) = queue.pop() {
+                    let block = m.row_block(range.start, range.end)?;
+                    let out = pjrt.execute(&res, block, range.len())?;
+                    board.put(id, out)?;
+                    done += 1;
+                }
+            }
         }
+        Ok((done, t0, Instant::now(), stats))
+    };
+    let results = run_fleet(fleet, opts.workers, work, || {
         barrier.wait();
         setup = t_setup.elapsed();
-        let mut first_start: Option<Instant> = None;
-        let mut last_end: Option<Instant> = None;
-        for (w, h) in handles.into_iter().enumerate() {
-            let (done, t0, t1, stats) = h
-                .join()
-                .map_err(|_| Error::Coordinator(format!("worker {w} panicked")))??;
-            chunk_counts[w] = done;
-            worker_stats.add(&stats);
-            first_start = Some(first_start.map_or(t0, |f| f.min(t0)));
-            last_end = Some(last_end.map_or(t1, |l| l.max(t1)));
-        }
-        compute = match (first_start, last_end) {
-            (Some(a), Some(b)) => b.duration_since(a),
-            _ => Duration::ZERO,
-        };
-        Ok(())
-    })?;
+    });
+    let mut first_start: Option<Instant> = None;
+    let mut last_end: Option<Instant> = None;
+    for (w, r) in results.into_iter().enumerate() {
+        let (done, t0, t1, stats) = r?;
+        chunk_counts[w] = done;
+        worker_stats.add(&stats);
+        first_start = Some(first_start.map_or(t0, |f| f.min(t0)));
+        last_end = Some(last_end.map_or(t1, |l| l.max(t1)));
+    }
+    let compute = match (first_start, last_end) {
+        (Some(a), Some(b)) => b.duration_since(a),
+        _ => Duration::ZERO,
+    };
 
     let t_agg = Instant::now();
     let chunks = board.into_chunks()?;
@@ -354,21 +495,39 @@ pub(crate) fn run_single_stage(
             peak_band_bytes: worker_stats.peak_band_bytes,
             melt_matrix_bytes: m.as_ref().map_or(0, |m| m.data().len() * 4),
             gather: gather_time,
+            plan_cache_hits: delta.hits,
+            plan_cache_misses: delta.misses,
+            plan_cache_evictions: delta.evictions,
+            gathers_built: delta.built,
             ..Default::default()
         },
         moments,
     ))
 }
 
-/// The streaming path: every chunk flows through all member stages inside
-/// its worker — stage 0 tile-gathered straight from the shared input
-/// tensor (one *logical* melt pass, no materialized matrix, no serial
-/// leader phase), later stages re-melting locally from halo slabs.
+/// One-shot shim over [`run_fused_group_with`] for unit tests.
+#[cfg(test)]
 pub(crate) fn run_fused_group(
     x: &Tensor<f32>,
     stages: &[Stage],
     opts: &ExecOptions,
     collect_moments: bool,
+) -> Result<(Tensor<f32>, RunMetrics, Option<Moments>)> {
+    run_fused_group_with(x, stages, opts, collect_moments, Fleet::Scoped, None)
+}
+
+/// The streaming path: every chunk flows through all member stages inside
+/// its worker — stage 0 tile-gathered straight from the shared input
+/// tensor (one *logical* melt pass, no materialized matrix, no serial
+/// leader phase), later stages re-melting locally from halo slabs — on an
+/// explicit fleet, with an optional serving plan cache.
+pub(crate) fn run_fused_group_with(
+    x: &Tensor<f32>,
+    stages: &[Stage],
+    opts: &ExecOptions,
+    collect_moments: bool,
+    fleet: Fleet<'_>,
+    cache: Option<&PlanCache>,
 ) -> Result<(Tensor<f32>, RunMetrics, Option<Moments>)> {
     if stages.len() < 2 {
         return Err(Error::Coordinator("fused groups need at least 2 stages".into()));
@@ -391,42 +550,24 @@ pub(crate) fn run_fused_group(
 
     let t_setup = Instant::now();
     let n = stages.len();
-    let ops: Vec<Operator> = stages.iter().map(|s| s.operator()).collect::<Result<_>>()?;
     let kernels: Vec<Arc<dyn RowKernel>> = stages.iter().map(|s| s.kernel().clone()).collect();
-    let colsv: Vec<usize> = ops.iter().map(|o| o.ravel_len()).collect();
 
-    // the first stage's quasi-grid defines the group's row space; later
-    // stages are Same-mode over it (planner invariant checked above)
-    let grid = QuasiGrid::resolve(x.shape(), &ops[0], stages[0].grid())?;
-    let grid_shape = grid.out_shape().to_vec();
-    let rows = grid.rows();
-    let cols0 = colsv[0];
-
-    // one leader-built RowGather per stage — the whole melt
-    // precomputation for the group, and the only leader-side gather work:
-    // stage 0 reads the shared input tensor under the group's grid (any
-    // boundary, Wrap included), stage k ≥ 1 re-melts Same-grid value
-    // slabs of the grid shape. Workers gather their own tiles through
-    // these shared plans; no melt matrix is ever materialized.
-    let mut gathers: Vec<RowGather> = Vec::with_capacity(n);
-    gathers.push(RowGather::new(x.shape(), &ops[0], &grid, stages[0].boundary())?);
-    for k in 1..n {
-        let sg = QuasiGrid::resolve(&grid_shape, &ops[k], &GridMode::Same)?;
-        gathers.push(RowGather::new(&grid_shape, &ops[k], &sg, stages[k].boundary())?);
-    }
-
-    // downstream halo budgets: stage k's output must cover the chunk
-    // extended by the halos of every later stage
-    let halos: Vec<usize> = ops.iter().map(|o| flat_halo(&grid_shape, o)).collect();
-    let mut budget = vec![0usize; n];
-    for k in (0..n - 1).rev() {
-        budget[k] = budget[k + 1] + halos[k + 1];
-    }
+    // the group's whole data-independent plan — resolved grid, one
+    // `RowGather` per stage (stage 0 reads the shared input tensor under
+    // the group's grid, any boundary, Wrap included; stage k ≥ 1 re-melts
+    // Same-grid value slabs of the grid shape), per-stage halos and
+    // downstream budgets — fetched from the serving plan cache or built
+    // once by the leader (cheap boundary tables). Workers gather their
+    // own tiles through the shared plan; no melt matrix is materialized.
+    let (plan, delta) = group_plan(x.shape(), stages, opts, cache)?;
+    let grid_shape = plan.grid_shape.clone();
+    let rows = plan.rows;
+    let cols0 = plan.colsv[0];
 
     // both halo modes share the over-partitioned policy (≥ 1, ≤ 4 chunks
     // per worker): the stage scheduler keeps exchange live at any chunk
     // count, so it load-balances exactly like recompute
-    let partition = fused_partition(rows, opts.workers, budget[0], opts.chunk_policy)?;
+    let partition = fused_partition(rows, opts.workers, plan.budget[0], opts.chunk_policy)?;
     partition.validate()?;
     let queue = WorkQueue::new(&partition);
     let board = ResultBoard::new(queue.num_chunks());
@@ -437,7 +578,7 @@ pub(crate) fn run_fused_group(
     let (halo_board, stage_sched) = match opts.halo_mode {
         HaloMode::Exchange => (
             Some(HaloBoard::new(queue.ranges(), n - 1, opts.halo_wait)?),
-            Some(StageScheduler::new(queue.ranges(), &halos, opts.halo_wait)),
+            Some(StageScheduler::new(queue.ranges(), &plan.halos, opts.halo_wait)),
         ),
         HaloMode::Recompute => (None, None),
     };
@@ -446,11 +587,11 @@ pub(crate) fn run_fused_group(
 
     let shared = FusedShared {
         src: x.data(),
-        gathers: &gathers,
+        gathers: &plan.gathers,
         kernels: &kernels,
-        colsv: &colsv,
-        budget: &budget,
-        halos: &halos,
+        colsv: &plan.colsv,
+        budget: &plan.budget,
+        halos: &plan.halos,
         rows,
         tile: opts.tile_rows.max(1),
         queue: &queue,
@@ -460,64 +601,55 @@ pub(crate) fn run_fused_group(
     };
 
     let mut setup = t_setup.elapsed();
-    let mut compute = Duration::ZERO;
     let mut halo_stats = HaloStats::default();
 
-    std::thread::scope(|s| -> Result<()> {
-        let mut handles = Vec::with_capacity(opts.workers);
-        for _ in 0..opts.workers {
-            let shared = &shared;
-            let barrier = &barrier;
-            handles.push(s.spawn(move || -> Result<(usize, Instant, Instant, HaloStats)> {
-                barrier.wait();
-                let t0 = Instant::now();
-                // a failing worker — Err *or* panic — poisons the exchange
-                // board AND the stage scheduler so blocked neighbours error
-                // out instead of stalling until the watchdog; the guard
-                // covers the unwind path
-                let guard = PoisonOnPanic(shared);
-                let result = fused_worker(shared);
-                std::mem::forget(guard);
-                if result.is_err() {
-                    shared.poison_exchange();
-                }
-                let (done, stats) = result?;
-                Ok((done, t0, Instant::now(), stats))
-            }));
+    let work = |_w: usize| -> Result<(usize, Instant, Instant, HaloStats)> {
+        barrier.wait();
+        let t0 = Instant::now();
+        // a failing worker — Err *or* panic — poisons the exchange
+        // board AND the stage scheduler so blocked neighbours error
+        // out instead of stalling until the watchdog; the guard
+        // covers the unwind path (which a pooled fleet catches, so a
+        // poisoned job never kills a pool thread)
+        let guard = PoisonOnPanic(&shared);
+        let result = fused_worker(&shared);
+        std::mem::forget(guard);
+        if result.is_err() {
+            shared.poison_exchange();
         }
+        let (done, stats) = result?;
+        Ok((done, t0, Instant::now(), stats))
+    };
+    let results = run_fleet(fleet, opts.workers, work, || {
         barrier.wait();
         setup = t_setup.elapsed();
-        let mut first_start: Option<Instant> = None;
-        let mut last_end: Option<Instant> = None;
-        // join EVERY worker before failing: in exchange mode most workers
-        // exit with the board's generic "aborted" error, so propagating the
-        // first Err by worker index would mask the root cause — keep the
-        // first error that is NOT the secondary abort message.
-        let mut first_err: Option<Error> = None;
-        for (w, h) in handles.into_iter().enumerate() {
-            match h.join() {
-                Err(_) => keep_root_cause(
-                    Error::Coordinator(format!("worker {w} panicked")),
-                    &mut first_err,
-                ),
-                Ok(Err(e)) => keep_root_cause(e, &mut first_err),
-                Ok(Ok((done, t0, t1, stats))) => {
-                    chunk_counts[w] = done;
-                    halo_stats.add(&stats);
-                    first_start = Some(first_start.map_or(t0, |f| f.min(t0)));
-                    last_end = Some(last_end.map_or(t1, |l| l.max(t1)));
-                }
+    });
+    let mut first_start: Option<Instant> = None;
+    let mut last_end: Option<Instant> = None;
+    // inspect EVERY worker before failing: in exchange mode most workers
+    // exit with the board's generic "aborted" error, so propagating the
+    // first Err by worker index would mask the root cause — keep the
+    // first error that is NOT the secondary abort message (worker panics
+    // arrive here already mapped to `Err("worker {w} panicked")`).
+    let mut first_err: Option<Error> = None;
+    for (w, r) in results.into_iter().enumerate() {
+        match r {
+            Err(e) => keep_root_cause(e, &mut first_err),
+            Ok((done, t0, t1, stats)) => {
+                chunk_counts[w] = done;
+                halo_stats.add(&stats);
+                first_start = Some(first_start.map_or(t0, |f| f.min(t0)));
+                last_end = Some(last_end.map_or(t1, |l| l.max(t1)));
             }
         }
-        if let Some(e) = first_err {
-            return Err(e);
-        }
-        compute = match (first_start, last_end) {
-            (Some(a), Some(b)) => b.duration_since(a),
-            _ => Duration::ZERO,
-        };
-        Ok(())
-    })?;
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let compute = match (first_start, last_end) {
+        (Some(a), Some(b)) => b.duration_since(a),
+        _ => Duration::ZERO,
+    };
 
     let t_agg = Instant::now();
     let chunks = board.into_chunks()?;
@@ -546,6 +678,10 @@ pub(crate) fn run_fused_group(
             peak_band_bytes: halo_stats.peak_band_bytes,
             melt_matrix_bytes: 0,
             gather: halo_stats.gather_time,
+            plan_cache_hits: delta.hits,
+            plan_cache_misses: delta.misses,
+            plan_cache_evictions: delta.evictions,
+            gathers_built: delta.built,
         },
         moments,
     ))

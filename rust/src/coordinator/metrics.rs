@@ -69,6 +69,19 @@ pub struct RunMetrics {
     /// leader (summed across workers; PJRT reports its leader-side melt
     /// here, which also sits inside `setup`).
     pub gather: Duration,
+    /// plan-cache hits this run charged against the serving
+    /// [`PlanCache`](crate::serve::PlanCache) (0 on uncached one-shot
+    /// runs): a hit means every `RowGather` table of the group was reused.
+    pub plan_cache_hits: usize,
+    /// plan-cache misses this run charged against the serving cache.
+    pub plan_cache_misses: usize,
+    /// plan-cache entries evicted (LRU order) while inserting this run's
+    /// freshly built plan.
+    pub plan_cache_evictions: usize,
+    /// `RowGather` tables constructed from scratch for this run — 0 when
+    /// the whole group came out of the plan cache, one per stage when it
+    /// missed (and always one per native stage on uncached runs).
+    pub gathers_built: usize,
 }
 
 impl RunMetrics {
@@ -140,6 +153,15 @@ impl RunMetrics {
         }
         if self.melt_matrix_bytes > 0 {
             s.push_str(&format!(" | melt matrix {} B", self.melt_matrix_bytes));
+        }
+        if self.plan_cache_hits + self.plan_cache_misses > 0 {
+            s.push_str(&format!(
+                " | plan cache {} hit(s) {} miss(es) {} evicted, {} gather(s) built",
+                self.plan_cache_hits,
+                self.plan_cache_misses,
+                self.plan_cache_evictions,
+                self.gathers_built
+            ));
         }
         s
     }
@@ -224,6 +246,27 @@ impl PlanMetrics {
         self.groups.iter().map(|g| g.gather).sum()
     }
 
+    /// Total plan-cache hits across all groups.
+    pub fn plan_cache_hits(&self) -> usize {
+        self.groups.iter().map(|g| g.plan_cache_hits).sum()
+    }
+
+    /// Total plan-cache misses across all groups.
+    pub fn plan_cache_misses(&self) -> usize {
+        self.groups.iter().map(|g| g.plan_cache_misses).sum()
+    }
+
+    /// Total plan-cache LRU evictions triggered by this plan's inserts.
+    pub fn plan_cache_evictions(&self) -> usize {
+        self.groups.iter().map(|g| g.plan_cache_evictions).sum()
+    }
+
+    /// Total `RowGather` tables built from scratch across all groups —
+    /// the "repeat traffic melts nothing" assertion reads 0 here.
+    pub fn gathers_built(&self) -> usize {
+        self.groups.iter().map(|g| g.gathers_built).sum()
+    }
+
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
@@ -305,6 +348,53 @@ mod tests {
             ..Default::default()
         };
         assert!(p.summary().contains("melt matrix 4096 B"));
+    }
+
+    #[test]
+    fn cache_counters_surface_in_summary() {
+        // silent on uncached one-shot runs …
+        let m = RunMetrics::default();
+        assert!(!m.summary().contains("plan cache"));
+        // … a served hit reports reuse with zero builds
+        let hit = RunMetrics {
+            plan_cache_hits: 1,
+            ..Default::default()
+        };
+        let s = hit.summary();
+        assert!(s.contains("plan cache 1 hit(s) 0 miss(es)"), "{s}");
+        assert!(s.contains("0 gather(s) built"), "{s}");
+        // … a miss that evicted reports the build and the eviction
+        let miss = RunMetrics {
+            plan_cache_misses: 1,
+            plan_cache_evictions: 1,
+            gathers_built: 3,
+            ..Default::default()
+        };
+        let s = miss.summary();
+        assert!(s.contains("1 miss(es) 1 evicted"), "{s}");
+        assert!(s.contains("3 gather(s) built"), "{s}");
+    }
+
+    #[test]
+    fn plan_metrics_total_cache_counters() {
+        let g1 = RunMetrics {
+            plan_cache_misses: 1,
+            gathers_built: 3,
+            ..Default::default()
+        };
+        let g2 = RunMetrics {
+            plan_cache_hits: 1,
+            plan_cache_evictions: 2,
+            ..Default::default()
+        };
+        let pm = PlanMetrics {
+            groups: vec![g1, g2],
+            output_moments: Moments::new(),
+        };
+        assert_eq!(pm.plan_cache_hits(), 1);
+        assert_eq!(pm.plan_cache_misses(), 1);
+        assert_eq!(pm.plan_cache_evictions(), 2);
+        assert_eq!(pm.gathers_built(), 3);
     }
 
     #[test]

@@ -26,7 +26,7 @@
 use std::ops::Range;
 use std::sync::Arc;
 
-use crate::coordinator::exec::execute_groups;
+use crate::coordinator::exec::{execute_groups_with, Fleet};
 use crate::coordinator::job::Backend;
 use crate::coordinator::kernel::{
     BilateralRowKernel, CurvatureRowKernel, GaussianRowKernel, LocalMomentKernel, MomentStat,
@@ -474,6 +474,19 @@ impl CompiledPlan<'_> {
     /// while resident in a worker. The options' backend must match the one
     /// the plan was compiled for (fusion groups are backend-dependent).
     pub fn execute(&self, opts: &ExecOptions) -> Result<(Tensor<f32>, PlanMetrics)> {
+        self.execute_on(opts, Fleet::Scoped, None)
+    }
+
+    /// [`CompiledPlan::execute`] on an explicit worker fleet with an
+    /// optional plan cache — the serving entry point
+    /// ([`Executor`](crate::serve::Executor) reuses its pool and
+    /// `RowGather` tables across jobs through this).
+    pub(crate) fn execute_on(
+        &self,
+        opts: &ExecOptions,
+        fleet: Fleet<'_>,
+        cache: Option<&crate::serve::cache::PlanCache>,
+    ) -> Result<(Tensor<f32>, PlanMetrics)> {
         if opts.backend != self.backend {
             return Err(Error::Coordinator(format!(
                 "plan compiled for {:?} but executed with {:?} options — recompile with \
@@ -481,7 +494,7 @@ impl CompiledPlan<'_> {
                 self.backend, opts.backend, opts.backend
             )));
         }
-        execute_groups(self.input, &self.stages, &self.groups, opts)
+        execute_groups_with(self.input, &self.stages, &self.groups, opts, fleet, cache)
     }
 }
 

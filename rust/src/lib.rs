@@ -47,6 +47,9 @@
 //!   lowered from the L1 Pallas kernels by `python/compile/aot.py`),
 //!   compiles them once, and executes them from the hot path. Compiles
 //!   against a graceful stub when the `xla` bindings are not vendored.
+//! - [`serve`] — serving subsystem: a persistent daemon (long-lived worker
+//!   pool, LRU plan cache, bounded job queue, Unix-socket line protocol)
+//!   behind `meltframe serve` / `meltframe submit`.
 //! - [`config`] / [`cli`] — run configuration (TOML subset + JSON manifest
 //!   parsing) and the command-line front end.
 //! - [`bench_harness`] — measurement harness used by `cargo bench`
@@ -199,6 +202,54 @@
 //! assert_eq!(metrics.halo_recomputed(), 0); // nothing computed twice
 //! assert!(metrics.halo_published() > 0);    // boundary rows were traded
 //! ```
+//!
+//! The footprint model above covers one run. A serving executor adds one
+//! term: cache-resident plan memory. Each cached plan holds its group's
+//! `RowGather` tables — per-axis index tables plus interior masks, about
+//! `Σ_axes (extent · window · 8 + extent · window)` bytes per stage,
+//! reported exactly by `RowGather::table_bytes` and totalled in
+//! [`CacheStats::resident_bytes`](serve::CacheStats) — bounded by the
+//! cache capacity (default 32 entries, LRU-evicted).
+//!
+//! ## Serving
+//!
+//! The [`serve`] subsystem amortizes those fixed costs across requests.
+//! `meltframe serve` starts a daemon: a persistent
+//! [`Executor`](serve::Executor) owning a long-lived worker pool and an
+//! LRU [`PlanCache`](serve::PlanCache), fronted by a bounded FIFO job
+//! queue (admission control: a full queue rejects immediately rather
+//! than buffering unboundedly) and a line-delimited JSON protocol over a
+//! Unix-domain socket. `meltframe submit` is the matching client.
+//!
+//! **Cache key contract.** Plans are pure functions of
+//! `(input shape, per-stage kernel-name/window/grid/boundary, halo_mode,
+//! tile_rows)` — melt geometry never depends on data values (§2.4), so
+//! serving results are bit-for-bit identical to one-shot runs and repeat
+//! submissions build zero new `RowGather` tables (`RunMetrics` reports
+//! `plan_cache_hits` / `plan_cache_misses` / `plan_cache_evictions` /
+//! `gathers_built` per run). Kernel *parameters* (σ, q) are deliberately
+//! not in the key; changing any keyed field is cache-busting and misses.
+//!
+//! **Fault isolation.** A job that panics or errors mid-kernel (e.g. the
+//! fault-injection layer's detonating kernels) fails only its own
+//! request: pool threads catch the unwind, the run lock recovers from
+//! poisoning, and the cache holds only data-independent tables — later
+//! jobs on the same daemon are unaffected.
+//!
+//! ```
+//! use meltframe::prelude::*;
+//! use meltframe::serve::Executor;
+//!
+//! let img = Tensor::<f32>::synthetic_image(&[32, 32], 5);
+//! let exec = Executor::persistent(ExecOptions::native(2), 16);
+//! let pipeline = |x: &Tensor<f32>| Plan::over(x).gaussian(&[3, 3], 1.0).median(&[3, 3]);
+//! let (first, m1) = exec.run(pipeline(&img)).unwrap();
+//! let (second, m2) = exec.run(pipeline(&img)).unwrap();
+//! assert_eq!(first.data(), second.data());   // bit-for-bit
+//! assert_eq!(m1.plan_cache_misses(), 1);     // first build
+//! assert_eq!(m2.plan_cache_hits(), 1);       // served from cache
+//! assert_eq!(m2.gathers_built(), 0);         // no new tables
+//! ```
 
 pub mod bench_harness;
 pub mod cli;
@@ -208,6 +259,7 @@ pub mod error;
 pub mod kernels;
 pub mod melt;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod tensor;
 pub mod testing;

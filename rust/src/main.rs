@@ -9,6 +9,9 @@ use meltframe::coordinator::Plan;
 use meltframe::error::Result;
 use meltframe::runtime::artifact::ArtifactManifest;
 use meltframe::runtime::client::PjrtContext;
+use meltframe::serve::daemon::{serve, ServeOptions};
+use meltframe::serve::executor::Executor;
+use meltframe::serve::protocol::{execute_request, parse_request, Request};
 use meltframe::tensor::dense::Tensor;
 use meltframe::tensor::npy;
 
@@ -169,6 +172,70 @@ fn dispatch(cmd: Command) -> Result<()> {
                 result.mean(),
                 x.mean()
             );
+            Ok(())
+        }
+        Command::Serve {
+            socket,
+            workers,
+            queue_depth,
+            cache_capacity,
+            halo_mode,
+            halo_wait_secs,
+            tile_rows,
+        } => {
+            let mut exec = ExecOptions::native(workers);
+            if let Some(mode) = halo_mode {
+                exec.halo_mode = mode;
+            }
+            if let Some(secs) = halo_wait_secs {
+                exec.halo_wait = std::time::Duration::from_secs(secs);
+            }
+            if let Some(tile) = tile_rows {
+                exec.tile_rows = tile;
+            }
+            let mut opts = ServeOptions::new(socket, exec);
+            opts.queue_depth = queue_depth;
+            opts.cache_capacity = cache_capacity;
+            serve(opts)
+        }
+        Command::Submit {
+            socket,
+            json,
+            request_file,
+            oneshot,
+            workers,
+            shutdown,
+        } => {
+            let line = if shutdown {
+                "{\"op\": \"shutdown\"}".to_string()
+            } else if let Some(json) = json {
+                json
+            } else {
+                // parse_args guarantees exactly one payload source
+                let path = request_file.expect("submit payload");
+                std::fs::read_to_string(path)?.trim().to_string()
+            };
+            if oneshot {
+                // in-process reference path: same protocol, fresh executor
+                let req = match parse_request(&line)? {
+                    Request::Run(req) => req,
+                    other => {
+                        return Err(meltframe::error::Error::Config(format!(
+                            "--oneshot only executes job requests, got {other:?}"
+                        )))
+                    }
+                };
+                let exec = Executor::one_shot(ExecOptions::native(workers));
+                println!("{}", execute_request(&req, &exec));
+                return Ok(());
+            }
+            use std::io::{BufRead, BufReader, Write};
+            let socket = socket.expect("submit socket"); // parse_args guarantees
+            let mut stream = std::os::unix::net::UnixStream::connect(&socket)?;
+            writeln!(stream, "{line}")?;
+            let mut response = String::new();
+            BufReader::new(stream).read_line(&mut response)?;
+            print!("{response}");
             Ok(())
         }
     }

@@ -372,6 +372,16 @@ impl RowGather {
         self.cols
     }
 
+    /// Resident footprint of the precomputed tables — what a plan cache
+    /// pays to keep this gather warm (per-axis index tables, interior
+    /// masks, and the leading-axis prefix deltas; the struct's scalar
+    /// fields are noise by comparison).
+    pub fn table_bytes(&self) -> usize {
+        let tables: usize = self.tables.iter().map(|t| t.len() * 8).sum();
+        let interior: usize = self.interior.iter().map(|m| m.len()).sum();
+        tables + interior + self.prefix_deltas.len() * std::mem::size_of::<isize>()
+    }
+
     /// Gather melt rows `range` from `src` (values of the virtual input
     /// tensor from flat element `src_offset`) into `out`
     /// (`range.len() * cols` values). Validates the range, the output

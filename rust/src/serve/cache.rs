@@ -1,0 +1,322 @@
+//! LRU cache of planner output: resolved grids and `RowGather` tables.
+//!
+//! The paper's space-completeness decomposition makes this sound: a melt
+//! plan is a pure function of `(shape, op-chain, grid, boundary)` — never
+//! of the data — so a cached [`CachedGroupPlan`] replayed against new
+//! tensors of the same key is bit-for-bit identical to building from
+//! scratch (§2.4; pinned by `tests/integration_serve.rs`).
+//!
+//! ## Key contract
+//!
+//! [`PlanCache::key_for`] canonicalizes, per fusion group: the input
+//! shape, each stage's kernel *name*, window, grid mode, and boundary
+//! mode, plus the run's `halo_mode` and `tile_rows`. Kernel *parameters*
+//! (a gaussian's sigma, a quantile's q) are deliberately excluded — the
+//! gather tables are value-independent and the kernel object itself is
+//! supplied fresh by each request — while the kernel name is included as
+//! a conservative op-chain identity. `halo_mode`/`tile_rows` do not
+//! change the tables either, but they are part of the serving contract's
+//! key (a client changing them gets a fresh entry, keeping observed
+//! metrics per-configuration honest). Worker count is *not* in the key: a
+//! plan is valid for any fleet size. Changing any keyed field therefore
+//! busts the cache; resubmitting an identical spec hits it.
+
+use std::sync::Mutex;
+
+use crate::coordinator::pipeline::ExecOptions;
+use crate::coordinator::plan::Stage;
+use crate::error::Result;
+use crate::melt::melt::RowGather;
+
+/// The reusable, data-independent product of planning one fusion group:
+/// everything `coordinator::exec` derives from the stage specs before the
+/// first worker touches a value.
+#[derive(Debug)]
+pub struct CachedGroupPlan {
+    /// One precomputed gather per stage (stage 0 reads the input tensor,
+    /// stages `k ≥ 1` re-melt Same-grid value slabs).
+    pub(crate) gathers: Vec<RowGather>,
+    /// The group's output grid shape.
+    pub(crate) grid_shape: Vec<usize>,
+    /// Total melt rows.
+    pub(crate) rows: usize,
+    /// Per-stage melt columns (window ravel lengths).
+    pub(crate) colsv: Vec<usize>,
+    /// Per-stage flat halos (exchange mode).
+    pub(crate) halos: Vec<usize>,
+    /// Downstream halo budgets (recompute mode).
+    pub(crate) budget: Vec<usize>,
+}
+
+impl CachedGroupPlan {
+    /// Stages covered by this plan.
+    pub fn stages(&self) -> usize {
+        self.gathers.len()
+    }
+
+    /// Cache-resident bytes of the precomputed gather tables — the cost
+    /// of keeping this plan warm (see the footprint model in `lib.rs`).
+    pub fn bytes(&self) -> usize {
+        self.gathers.iter().map(|g| g.table_bytes()).sum()
+    }
+}
+
+#[derive(Default)]
+struct CacheInner {
+    /// `(key, plan)` in LRU order — least recently used first, most
+    /// recently used last.
+    entries: Vec<(String, std::sync::Arc<CachedGroupPlan>)>,
+    hits: usize,
+    misses: usize,
+    evictions: usize,
+}
+
+/// What one lookup did to the cache — folded into the run's
+/// [`RunMetrics`](crate::coordinator::RunMetrics) cache counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheDelta {
+    pub hits: usize,
+    pub misses: usize,
+    pub evictions: usize,
+    /// `RowGather` tables built from scratch by this lookup.
+    pub built: usize,
+}
+
+/// Point-in-time cache statistics for the daemon's `stats` endpoint.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: usize,
+    pub misses: usize,
+    pub evictions: usize,
+    pub entries: usize,
+    /// Total gather-table bytes resident across all entries.
+    pub resident_bytes: usize,
+}
+
+/// A bounded, thread-safe LRU cache of [`CachedGroupPlan`]s.
+pub struct PlanCache {
+    inner: Mutex<CacheInner>,
+    capacity: usize,
+}
+
+impl PlanCache {
+    /// Cache holding at most `capacity` plans (floored at 1).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(CacheInner::default()),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Maximum entry count.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Canonical cache key for one fusion group — see the module-level key
+    /// contract.
+    pub fn key_for(shape: &[usize], stages: &[Stage], opts: &ExecOptions) -> String {
+        use std::fmt::Write;
+        let mut key = format!("shape{shape:?}");
+        for s in stages {
+            let _ = write!(
+                key,
+                "|{}:{:?}:{:?}:{:?}",
+                s.kernel().name(),
+                s.window(),
+                s.grid(),
+                s.boundary()
+            );
+        }
+        let _ = write!(key, "|halo={}|tile={}", opts.halo_mode, opts.tile_rows.max(1));
+        key
+    }
+
+    /// Look up `key`; on a miss, run `build` (outside the cache lock — a
+    /// slow build never blocks other requests' hits) and insert the
+    /// result, evicting the least recently used entry when over capacity.
+    /// Returns the plan plus what the lookup did.
+    pub fn get_or_build(
+        &self,
+        key: &str,
+        build: impl FnOnce() -> Result<CachedGroupPlan>,
+    ) -> Result<(std::sync::Arc<CachedGroupPlan>, CacheDelta)> {
+        {
+            let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+            if let Some(pos) = inner.entries.iter().position(|(k, _)| k == key) {
+                // touch: move to the MRU end
+                let entry = inner.entries.remove(pos);
+                let plan = std::sync::Arc::clone(&entry.1);
+                inner.entries.push(entry);
+                inner.hits += 1;
+                return Ok((
+                    plan,
+                    CacheDelta {
+                        hits: 1,
+                        ..Default::default()
+                    },
+                ));
+            }
+        }
+        let plan = std::sync::Arc::new(build()?);
+        let built = plan.stages();
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        // a racing request may have inserted the same key while we built;
+        // keeping both copies would double-count residency, so last write
+        // wins and the earlier entry is dropped without an eviction tick
+        inner.entries.retain(|(k, _)| k != key);
+        inner.entries.push((key.to_string(), std::sync::Arc::clone(&plan)));
+        inner.misses += 1;
+        let mut evictions = 0usize;
+        while inner.entries.len() > self.capacity {
+            inner.entries.remove(0);
+            evictions += 1;
+        }
+        inner.evictions += evictions;
+        Ok((
+            plan,
+            CacheDelta {
+                misses: 1,
+                evictions,
+                built,
+                ..Default::default()
+            },
+        ))
+    }
+
+    /// Current entry count.
+    pub fn len(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .entries
+            .len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Keys in LRU order (least recently used first) — the eviction order.
+    pub fn lru_keys(&self) -> Vec<String> {
+        self.inner
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .entries
+            .iter()
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
+    /// Point-in-time statistics.
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        CacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            entries: inner.entries.len(),
+            resident_bytes: inner.entries.iter().map(|(_, p)| p.bytes()).sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check_property, SplitMix64};
+
+    fn tiny_plan() -> CachedGroupPlan {
+        CachedGroupPlan {
+            gathers: Vec::new(),
+            grid_shape: vec![1],
+            rows: 1,
+            colsv: vec![1],
+            halos: vec![0],
+            budget: vec![0],
+        }
+    }
+
+    #[test]
+    fn hit_miss_and_counters() {
+        let cache = PlanCache::new(4);
+        let (_, d) = cache.get_or_build("a", || Ok(tiny_plan())).unwrap();
+        assert_eq!((d.hits, d.misses, d.built), (0, 1, 1));
+        let (_, d) = cache.get_or_build("a", || panic!("hit must not rebuild")).unwrap();
+        assert_eq!((d.hits, d.misses, d.built), (1, 0, 0));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions, s.entries), (1, 1, 0, 1));
+    }
+
+    #[test]
+    fn build_errors_do_not_poison_or_insert() {
+        let cache = PlanCache::new(2);
+        let err = cache
+            .get_or_build("bad", || Err(crate::error::Error::Coordinator("boom".into())))
+            .unwrap_err();
+        assert!(err.to_string().contains("boom"));
+        assert!(cache.is_empty());
+        // the cache still works after the failed build
+        cache.get_or_build("good", || Ok(tiny_plan())).unwrap();
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn capacity_evicts_least_recently_used() {
+        let cache = PlanCache::new(2);
+        cache.get_or_build("a", || Ok(tiny_plan())).unwrap();
+        cache.get_or_build("b", || Ok(tiny_plan())).unwrap();
+        // touch "a" so "b" becomes LRU
+        cache.get_or_build("a", || panic!("hit")).unwrap();
+        let (_, d) = cache.get_or_build("c", || Ok(tiny_plan())).unwrap();
+        assert_eq!(d.evictions, 1);
+        assert_eq!(cache.lru_keys(), vec!["a".to_string(), "c".to_string()]);
+        // "b" was evicted: looking it up again misses
+        let (_, d) = cache.get_or_build("b", || Ok(tiny_plan())).unwrap();
+        assert_eq!(d.misses, 1);
+    }
+
+    #[test]
+    fn zero_capacity_floors_at_one() {
+        let cache = PlanCache::new(0);
+        assert_eq!(cache.capacity(), 1);
+        cache.get_or_build("a", || Ok(tiny_plan())).unwrap();
+        let (_, d) = cache.get_or_build("b", || Ok(tiny_plan())).unwrap();
+        assert_eq!(d.evictions, 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn lru_eviction_order_property() {
+        // model check: drive a random access sequence against a reference
+        // list-based LRU; the cache's eviction order (lru_keys) and every
+        // hit/miss must match the model at each step
+        check_property("LRU eviction order", 40, |rng: &mut SplitMix64| {
+            let capacity = 1 + rng.below(5);
+            let universe = 2 + rng.below(8);
+            let cache = PlanCache::new(capacity);
+            let mut model: Vec<String> = Vec::new(); // LRU first
+            for _ in 0..60 {
+                let key = format!("k{}", rng.below(universe));
+                let expect_hit = model.contains(&key);
+                let (_, d) = cache.get_or_build(&key, || Ok(tiny_plan())).unwrap();
+                if expect_hit {
+                    assert_eq!((d.hits, d.misses), (1, 0), "key {key}");
+                    model.retain(|k| k != &key);
+                    model.push(key);
+                } else {
+                    assert_eq!((d.hits, d.misses), (0, 1), "key {key}");
+                    model.push(key);
+                    let mut evicted = 0;
+                    while model.len() > capacity {
+                        model.remove(0);
+                        evicted += 1;
+                    }
+                    assert_eq!(d.evictions, evicted, "eviction count diverged");
+                }
+                assert_eq!(cache.lru_keys(), model, "LRU order diverged");
+            }
+        });
+    }
+}

@@ -1,0 +1,213 @@
+//! The serving daemon: Unix-domain socket front end over one
+//! [`Executor`].
+//!
+//! Lifecycle: `serve` binds the socket (unlinking a stale file first),
+//! spawns one persistent [`Executor`] (pool + plan cache) and one
+//! dispatcher thread, then accepts connections. Each connection gets a
+//! reader thread speaking the line protocol ([`protocol`]): job requests
+//! are admitted into a bounded [`JobQueue`] (admission control — a full
+//! queue rejects immediately with an error line instead of buffering
+//! unboundedly) and executed in FIFO order by the dispatcher; the
+//! connection thread blocks on the job's response slot, so each
+//! connection sees strict request→response order while separate
+//! connections proceed concurrently. `{"op": "shutdown"}` stops
+//! admissions, drains already-admitted jobs, acknowledges, and unblocks
+//! the accept loop; `serve` returns once the dispatcher has drained.
+//!
+//! [`protocol`]: crate::serve::protocol
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::coordinator::pipeline::ExecOptions;
+use crate::error::Result;
+use crate::serve::executor::{Executor, DEFAULT_CACHE_CAPACITY};
+use crate::serve::protocol::{error_response, execute_request, parse_request, JobRequest, Request};
+use crate::serve::queue::JobQueue;
+
+/// Default pending-job admission depth.
+pub const DEFAULT_QUEUE_DEPTH: usize = 16;
+
+/// Daemon configuration.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Unix-domain socket path to bind.
+    pub socket: PathBuf,
+    /// Default execution options; `exec.workers` sizes the pool.
+    pub exec: ExecOptions,
+    /// Pending-job admission depth (floored at 1).
+    pub queue_depth: usize,
+    /// Plan-cache capacity in entries (floored at 1).
+    pub cache_capacity: usize,
+}
+
+impl ServeOptions {
+    /// Defaults around `exec` at `socket`.
+    pub fn new(socket: impl Into<PathBuf>, exec: ExecOptions) -> Self {
+        Self {
+            socket: socket.into(),
+            exec,
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+            cache_capacity: DEFAULT_CACHE_CAPACITY,
+        }
+    }
+}
+
+/// One-shot rendezvous for a job's response line.
+struct ResponseSlot {
+    line: Mutex<Option<String>>,
+    ready: Condvar,
+}
+
+impl ResponseSlot {
+    fn new() -> Self {
+        Self {
+            line: Mutex::new(None),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn fill(&self, line: String) {
+        let mut slot = self.line.lock().unwrap_or_else(|p| p.into_inner());
+        *slot = Some(line);
+        drop(slot);
+        self.ready.notify_all();
+    }
+
+    fn wait(&self) -> String {
+        let mut slot = self.line.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if let Some(line) = slot.take() {
+                return line;
+            }
+            slot = self.ready.wait(slot).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+struct QueuedJob {
+    req: JobRequest,
+    slot: Arc<ResponseSlot>,
+}
+
+/// Run the daemon until a `shutdown` request. Blocks the calling thread.
+pub fn serve(opts: ServeOptions) -> Result<()> {
+    // a stale socket file from a crashed daemon would fail the bind
+    let _ = std::fs::remove_file(&opts.socket);
+    let listener = UnixListener::bind(&opts.socket)?;
+
+    let exec = Arc::new(Executor::persistent(opts.exec.clone(), opts.cache_capacity));
+    let queue: Arc<JobQueue<QueuedJob>> = Arc::new(JobQueue::new(opts.queue_depth));
+    let shutdown = Arc::new(AtomicBool::new(false));
+
+    let dispatcher = {
+        let exec = Arc::clone(&exec);
+        let queue = Arc::clone(&queue);
+        std::thread::Builder::new()
+            .name("meltframe-dispatch".into())
+            .spawn(move || {
+                while let Some(job) = queue.pop() {
+                    job.slot.fill(execute_request(&job.req, &exec));
+                }
+            })
+            .expect("spawn dispatcher thread")
+    };
+
+    println!(
+        "meltframe serve: listening on {} ({} workers, queue depth {}, cache {} plans)",
+        opts.socket.display(),
+        exec.options().workers,
+        queue.depth(),
+        opts.cache_capacity
+    );
+
+    for stream in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let exec = Arc::clone(&exec);
+        let queue = Arc::clone(&queue);
+        let shutdown = Arc::clone(&shutdown);
+        let socket = opts.socket.clone();
+        // detached: a connection lingering past shutdown only ever sees
+        // "queue closed" rejections and its own stream
+        let _ = std::thread::Builder::new()
+            .name("meltframe-conn".into())
+            .spawn(move || handle_connection(stream, &exec, &queue, &shutdown, &socket));
+    }
+
+    queue.close();
+    let _ = dispatcher.join();
+    let _ = std::fs::remove_file(&opts.socket);
+    Ok(())
+}
+
+fn handle_connection(
+    stream: UnixStream,
+    exec: &Executor,
+    queue: &JobQueue<QueuedJob>,
+    shutdown: &AtomicBool,
+    socket: &Path,
+) {
+    let reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match parse_request(&line) {
+            Err(e) => error_response("", &e.to_string()),
+            Ok(Request::Ping) => "{\"ok\": true, \"pong\": true}".to_string(),
+            Ok(Request::Stats) => stats_response(exec, queue),
+            Ok(Request::Shutdown) => {
+                shutdown.store(true, Ordering::SeqCst);
+                queue.close();
+                let _ = writeln!(writer, "{{\"ok\": true, \"shutdown\": true}}");
+                // unblock the accept loop so `serve` can observe the flag
+                let _ = UnixStream::connect(socket);
+                return;
+            }
+            Ok(Request::Run(req)) => {
+                let id = req.id.clone();
+                let slot = Arc::new(ResponseSlot::new());
+                match queue.push(QueuedJob {
+                    req: *req,
+                    slot: Arc::clone(&slot),
+                }) {
+                    // admission control: rejected jobs answer immediately
+                    Err(e) => error_response(&id, &e.to_string()),
+                    Ok(()) => slot.wait(),
+                }
+            }
+        };
+        if writeln!(writer, "{response}").is_err() {
+            break;
+        }
+    }
+}
+
+fn stats_response(exec: &Executor, queue: &JobQueue<QueuedJob>) -> String {
+    let c = exec.cache_stats();
+    let q = queue.stats();
+    format!(
+        "{{\"ok\": true, \"cache\": {{\"hits\": {}, \"misses\": {}, \"evictions\": {}, \
+         \"entries\": {}, \"resident_bytes\": {}}}, \
+         \"queue\": {{\"depth\": {}, \"queued\": {}, \"accepted\": {}, \"rejected\": {}}}}}",
+        c.hits, c.misses, c.evictions, c.entries, c.resident_bytes,
+        q.depth, q.queued, q.accepted, q.rejected
+    )
+}

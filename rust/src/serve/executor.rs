@@ -1,0 +1,209 @@
+//! The reusable [`Executor`] handle: worker lifetime and plan cache
+//! decoupled from any single `run()`.
+//!
+//! A one-shot `Plan::run` spawns a scoped fleet, builds every `RowGather`
+//! table, executes, and tears it all down. An `Executor` owns those
+//! resources instead: a [`WorkerPool`](crate::serve::pool::WorkerPool)
+//! spawned once (persistent mode) and a [`PlanCache`] that survives across
+//! jobs, so repeat traffic pays neither thread spawn nor plan
+//! construction. Results are bit-for-bit identical to one-shot runs —
+//! cached plans are pure functions of their key (§2.4 data independence) —
+//! and a job that panics or errors fails alone: the pool threads catch the
+//! unwind and the cache holds only data-independent tables, so both stay
+//! healthy for the next job (pinned by `tests/integration_serve.rs`).
+//!
+//! Jobs on one executor are serialized by an internal run lock: the
+//! executor's fleet runs one barrier-coordinated job at a time (two
+//! interleaved jobs on one fixed pool would deadlock each other's
+//! barriers), which is exactly the FIFO dispatch order the serving
+//! [`daemon`](crate::serve::daemon) wants.
+
+use std::sync::Mutex;
+
+use crate::coordinator::exec::Fleet;
+use crate::coordinator::metrics::PlanMetrics;
+use crate::coordinator::pipeline::ExecOptions;
+use crate::coordinator::plan::Plan;
+use crate::error::{Error, Result};
+use crate::serve::cache::{CacheStats, PlanCache};
+use crate::serve::pool::WorkerPool;
+use crate::tensor::dense::Tensor;
+
+/// Default plan-cache capacity (entries) for executors that don't choose.
+pub const DEFAULT_CACHE_CAPACITY: usize = 32;
+
+/// A reusable execution handle owning worker lifetime and plan cache.
+pub struct Executor {
+    opts: ExecOptions,
+    /// `Some` in persistent mode; `None` falls back to a scoped fleet per
+    /// run (threads are not reused, but the plan cache still is).
+    pool: Option<WorkerPool>,
+    cache: PlanCache,
+    run_lock: Mutex<()>,
+}
+
+impl Executor {
+    /// An executor without a persistent pool: each run spawns a scoped
+    /// fleet (exactly like `Plan::run`), but plans are still cached —
+    /// useful for batch drivers that repeat a spec, and as the
+    /// bit-for-bit reference for the served path.
+    pub fn one_shot(opts: ExecOptions) -> Self {
+        Self {
+            opts,
+            pool: None,
+            cache: PlanCache::new(DEFAULT_CACHE_CAPACITY),
+            run_lock: Mutex::new(()),
+        }
+    }
+
+    /// A serving executor: spawns `opts.workers` pool threads now and
+    /// reuses them for every job, with a plan cache of `cache_capacity`
+    /// entries (floored at 1).
+    pub fn persistent(opts: ExecOptions, cache_capacity: usize) -> Self {
+        let pool = WorkerPool::new(opts.workers.max(1));
+        Self {
+            opts,
+            pool: Some(pool),
+            cache: PlanCache::new(cache_capacity),
+            run_lock: Mutex::new(()),
+        }
+    }
+
+    /// The executor's default run options.
+    pub fn options(&self) -> &ExecOptions {
+        &self.opts
+    }
+
+    /// Whether this executor owns a persistent pool.
+    pub fn is_persistent(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// Plan-cache statistics snapshot.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Run `plan` with the executor's default options.
+    pub fn run(&self, plan: Plan<'_>) -> Result<(Tensor<f32>, PlanMetrics)> {
+        self.run_with(plan, &self.opts)
+    }
+
+    /// Run `plan` with per-job options. `opts.workers` must equal the
+    /// pool size in persistent mode (a barrier across more tasks than
+    /// pool threads cannot be satisfied); everything else — halo mode,
+    /// tile height, backend — may vary per job and participates in the
+    /// plan-cache key where the contract says so.
+    pub fn run_with(
+        &self,
+        plan: Plan<'_>,
+        opts: &ExecOptions,
+    ) -> Result<(Tensor<f32>, PlanMetrics)> {
+        if let Some(pool) = &self.pool {
+            if opts.workers != pool.size() {
+                return Err(Error::Coordinator(format!(
+                    "serving executor owns a {}-thread pool; jobs must use workers = {} (got {})",
+                    pool.size(),
+                    pool.size(),
+                    opts.workers
+                )));
+            }
+        }
+        // one barrier-coordinated job at a time on the shared fleet; a
+        // poisoned predecessor must not poison this lock either
+        let _running = self.run_lock.lock().unwrap_or_else(|p| p.into_inner());
+        let fleet = match &self.pool {
+            Some(pool) => Fleet::Pool(pool),
+            None => Fleet::Scoped,
+        };
+        plan.compile(opts.backend)?.execute_on(opts, fleet, Some(&self.cache))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::Job;
+    use crate::testing::assert_allclose;
+
+    fn pipeline(x: &Tensor<f32>) -> Plan<'_> {
+        Plan::over(x)
+            .gaussian(&[3, 3], 1.0)
+            .curvature(&[3, 3])
+            .median(&[3, 3])
+    }
+
+    #[test]
+    fn persistent_matches_one_shot_bit_for_bit() {
+        let x = Tensor::random(&[20, 21], 0.0, 255.0, 17).unwrap();
+        let opts = ExecOptions::native(3);
+        let (reference, _) = pipeline(&x).run(&opts).unwrap();
+        let exec = Executor::persistent(opts, 8);
+        let (served, _) = exec.run(pipeline(&x)).unwrap();
+        assert_allclose(served.data(), reference.data(), 0.0, 0.0);
+    }
+
+    #[test]
+    fn repeat_jobs_hit_the_cache_and_build_nothing() {
+        let x = Tensor::random(&[16, 17], 0.0, 255.0, 23).unwrap();
+        let exec = Executor::persistent(ExecOptions::native(2), 8);
+        let (_, first) = exec.run(pipeline(&x)).unwrap();
+        assert_eq!(first.plan_cache_misses(), 1);
+        assert!(first.gathers_built() >= 3, "one gather per stage");
+        let (_, second) = exec.run(pipeline(&x)).unwrap();
+        assert_eq!(second.plan_cache_hits(), 1);
+        assert_eq!(second.plan_cache_misses(), 0);
+        assert_eq!(second.gathers_built(), 0, "repeat traffic melts nothing");
+        let stats = exec.cache_stats();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+        assert!(stats.resident_bytes > 0);
+    }
+
+    #[test]
+    fn unfused_jobs_also_cache_per_group() {
+        // legacy per-stage driver: each stage is its own group/key
+        let x = Tensor::random(&[12, 12], 0.0, 255.0, 29).unwrap();
+        let exec = Executor::one_shot(ExecOptions::native(2));
+        let jobs = [Job::gaussian(&[3, 3], 1.0), Job::median(&[3, 3])];
+        for pass in 0..2 {
+            let mut metrics = Vec::new();
+            let mut cur = x.clone();
+            for j in &jobs {
+                let stage = j.to_stage().unwrap();
+                let plan = Plan::over(&cur).stage(stage);
+                let (out, pm) = exec.run(plan).unwrap();
+                metrics.push(pm);
+                cur = out;
+            }
+            let built: usize = metrics.iter().map(|m| m.gathers_built()).sum();
+            if pass == 0 {
+                assert_eq!(built, 2);
+            } else {
+                assert_eq!(built, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn worker_count_mismatch_is_rejected() {
+        let x = Tensor::random(&[10, 10], 0.0, 1.0, 31).unwrap();
+        let exec = Executor::persistent(ExecOptions::native(2), 4);
+        let mut opts = exec.options().clone();
+        opts.workers = 3;
+        let err = exec.run_with(pipeline(&x), &opts).unwrap_err();
+        assert!(err.to_string().contains("workers"), "{err}");
+    }
+
+    #[test]
+    fn failed_job_leaves_pool_and_cache_healthy() {
+        let x = Tensor::random(&[14, 15], 0.0, 255.0, 37).unwrap();
+        let exec = Executor::persistent(ExecOptions::native(2), 8);
+        // a plan whose builder defers an error: run fails, nothing breaks
+        let bad = Plan::over(&x).gaussian(&[0, 0], 1.0);
+        assert!(exec.run(bad).is_err());
+        let (out, pm) = exec.run(pipeline(&x)).unwrap();
+        let (reference, _) = pipeline(&x).run(&ExecOptions::native(1)).unwrap();
+        assert_allclose(out.data(), reference.data(), 0.0, 0.0);
+        assert_eq!(pm.plan_cache_misses(), 1);
+    }
+}

@@ -1,0 +1,35 @@
+//! Serving subsystem: a persistent daemon over the lazy `Plan` executor.
+//!
+//! One-shot `meltframe run` pays three fixed costs on every invocation:
+//! process start, worker-thread spawn, and planner output — the
+//! `RowGather` tables that §2.4's data independence makes a pure function
+//! of `(shape, op-chain, grid, boundary)`, never of the data. This module
+//! keeps all three warm across requests:
+//!
+//! - [`pool::WorkerPool`] — a long-lived fleet decoupled from any single
+//!   run; jobs borrow the threads through the same scoped-closure shape
+//!   the one-shot executor uses, so execution is bit-for-bit identical.
+//! - [`cache::PlanCache`] — an LRU of planner output keyed by
+//!   `(shape, op-chain, grid, boundary, halo_mode, tile_rows)` with
+//!   hit/miss/evict counters surfaced through `RunMetrics`.
+//! - [`executor::Executor`] — the reusable handle owning both, with
+//!   one-job-at-a-time dispatch (a shared barrier fleet cannot interleave
+//!   jobs) and fault isolation: a poisoned job fails alone.
+//! - [`queue::JobQueue`] — bounded FIFO admission control for the daemon.
+//! - [`protocol`] / [`daemon`] — the line-delimited JSON request protocol
+//!   and the Unix-domain-socket front end (`meltframe serve` /
+//!   `meltframe submit`).
+
+pub mod cache;
+pub mod daemon;
+pub mod executor;
+pub mod pool;
+pub mod protocol;
+pub mod queue;
+
+pub use cache::{CacheStats, PlanCache};
+pub use daemon::{serve, ServeOptions, DEFAULT_QUEUE_DEPTH};
+pub use executor::{Executor, DEFAULT_CACHE_CAPACITY};
+pub use pool::WorkerPool;
+pub use protocol::{execute_request, parse_request, JobRequest, Request};
+pub use queue::{JobQueue, QueueStats};

@@ -1,0 +1,249 @@
+//! Long-lived worker pool: OS threads spawned once, reused by every job.
+//!
+//! The one-shot executor pays a `thread::scope` spawn per run — fine for
+//! batch, measurable overhead under serving traffic. [`WorkerPool`] keeps
+//! `threads` workers parked on a condvar and hands each run a borrowed
+//! fleet through [`WorkerPool::run_scoped`], which has the same blocking
+//! contract as `thread::scope`: it does not return until every task it
+//! enqueued has finished, so tasks may safely borrow from the caller's
+//! stack (see the safety argument on `run_scoped`).
+//!
+//! Panic containment: every task body runs under `catch_unwind`, so a
+//! poisoned job (PR 4 fault-injection kernels) reports `Err("worker {w}
+//! panicked")` through its own result slot and the pool thread survives to
+//! serve the next job — the property `tests/integration_serve.rs` pins.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+
+type Task = Box<dyn FnOnce() + Send>;
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Task>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A fixed-size pool of reusable worker threads.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` workers (floored at 1). They idle until tasks
+    /// arrive and live until the pool is dropped.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("meltframe-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { shared, handles }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.handles.len()
+    }
+
+    fn enqueue(&self, task: Task) {
+        let mut q = self
+            .shared
+            .queue
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        q.push_back(task);
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Run `tasks` instances of `work` (passed their index `0..tasks`) on
+    /// the pool plus `leader` on the calling thread, then block until every
+    /// task has finished. Returns one `Result` per task, in index order; a
+    /// panicking task yields `Err("worker {w} panicked")` and leaves its
+    /// pool thread healthy.
+    ///
+    /// Mirrors the `thread::scope` fleet in `coordinator::exec`: `work`
+    /// may borrow anything on the caller's stack.
+    pub fn run_scoped<T, F, L>(&self, tasks: usize, work: F, leader: L) -> Vec<Result<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> Result<T> + Sync,
+        L: FnOnce(),
+    {
+        struct Latch<T> {
+            slots: Mutex<(Vec<Option<Result<T>>>, usize)>,
+            done: Condvar,
+        }
+        let latch = Latch::<T> {
+            slots: Mutex::new(((0..tasks).map(|_| None).collect(), 0)),
+            done: Condvar::new(),
+        };
+        let latch = &latch;
+        let work = &work;
+        for w in 0..tasks {
+            let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let result = catch_unwind(AssertUnwindSafe(|| work(w)))
+                    .unwrap_or_else(|_| Err(Error::Coordinator(format!("worker {w} panicked"))));
+                let mut guard = latch.slots.lock().unwrap_or_else(|p| p.into_inner());
+                guard.0[w] = Some(result);
+                guard.1 += 1;
+                if guard.1 == tasks {
+                    latch.done.notify_all();
+                }
+            });
+            // SAFETY: the closure borrows `latch` and `work` from this
+            // stack frame, but this function does not return until the
+            // completion latch below has counted every task — exactly the
+            // guarantee `thread::scope` provides — so the 'static lifetime
+            // the queue requires is never actually exercised past the
+            // borrows' real extent. No task outlives this call.
+            let task: Task = unsafe { std::mem::transmute(task) };
+            self.enqueue(task);
+        }
+        leader();
+        let mut guard = latch.slots.lock().unwrap_or_else(|p| p.into_inner());
+        while guard.1 < tasks {
+            guard = latch
+                .done
+                .wait(guard)
+                .unwrap_or_else(|p| p.into_inner());
+        }
+        std::mem::take(&mut guard.0)
+            .into_iter()
+            .map(|slot| slot.expect("latch counted a task whose slot is empty"))
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap_or_else(|p| p.into_inner());
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap_or_else(|p| p.into_inner());
+            }
+        };
+        // tasks arrive pre-wrapped in catch_unwind by run_scoped; the
+        // extra guard here keeps a raw `submit`-style task from ever
+        // killing the thread either
+        let _ = catch_unwind(AssertUnwindSafe(task));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn pool_floors_at_one_thread() {
+        assert_eq!(WorkerPool::new(0).size(), 1);
+        assert_eq!(WorkerPool::new(3).size(), 3);
+    }
+
+    #[test]
+    fn run_scoped_sees_stack_borrows_and_orders_results() {
+        let pool = WorkerPool::new(4);
+        let base = 100usize; // stack-local, borrowed by every task
+        let results = pool.run_scoped(8, |w| Ok(base + w), || {});
+        let got: Vec<usize> = results.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(got, (100..108).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_scoped_runs_leader_on_calling_thread() {
+        let pool = WorkerPool::new(2);
+        let caller = std::thread::current().id();
+        let mut leader_thread = None;
+        pool.run_scoped(
+            2,
+            |_| Ok(()),
+            || leader_thread = Some(std::thread::current().id()),
+        );
+        assert_eq!(leader_thread, Some(caller));
+    }
+
+    #[test]
+    fn panicking_task_reports_error_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let results = pool.run_scoped(
+            3,
+            |w| {
+                if w == 1 {
+                    panic!("injected pool panic");
+                }
+                Ok(w)
+            },
+            || {},
+        );
+        assert_eq!(results[0].as_ref().unwrap(), &0);
+        assert!(results[1]
+            .as_ref()
+            .unwrap_err()
+            .to_string()
+            .contains("worker 1 panicked"));
+        assert_eq!(results[2].as_ref().unwrap(), &2);
+        // the same threads still serve the next job
+        let again = pool.run_scoped(2, |w| Ok(w * 10), || {});
+        assert!(again.into_iter().all(|r| r.is_ok()));
+    }
+
+    #[test]
+    fn sequential_jobs_reuse_the_same_threads() {
+        let pool = WorkerPool::new(2);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..5 {
+            let results = pool.run_scoped(
+                2,
+                |_| {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                    Ok(())
+                },
+                || {},
+            );
+            assert_eq!(results.len(), 2);
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn more_tasks_than_threads_complete() {
+        let pool = WorkerPool::new(1);
+        let results = pool.run_scoped(6, Ok, || {});
+        let got: Vec<usize> = results.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4, 5]);
+    }
+}

@@ -1,0 +1,439 @@
+//! Line-delimited JSON request protocol for the serving daemon.
+//!
+//! Each request is one line of JSON; each response is one line of JSON.
+//! A job request names an input spec and an ordered job list (the same
+//! catalogue `meltframe run` configs use), plus optional per-job
+//! overrides for the knobs that participate in the plan-cache key
+//! (`halo_mode`, `tile_rows`). Control requests select on `"op"`:
+//!
+//! ```json
+//! {"id": "j1", "input": {"kind": "image", "dims": [64, 64], "seed": 7},
+//!  "jobs": [{"kind": "gaussian", "window": [3, 3], "sigma": 1.0}]}
+//! {"op": "ping"}
+//! {"op": "stats"}
+//! {"op": "shutdown"}
+//! ```
+//!
+//! Responses carry `"ok"` plus either a result digest (fowler–noll–vo
+//! over the output bits, so bit-for-bit equality with one-shot runs is
+//! checkable from outside the process), the output shape, and a metrics
+//! object in the `BENCH_*.json` schema — or an `"error"` string. A
+//! request may also carry a `"fault"` spec that splices a detonating
+//! kernel into the pipeline (the fault-injection layer's pattern), used
+//! by the smoke tests to prove a poisoned job fails alone.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::bench_harness::JsonReport;
+use crate::config::json::JsonValue;
+use crate::config::spec::InputSpec;
+use crate::coordinator::halo::HaloMode;
+use crate::coordinator::job::Job;
+use crate::coordinator::kernel::RowKernel;
+use crate::coordinator::plan::{Plan, Stage};
+use crate::error::{Error, Result};
+use crate::serve::executor::Executor;
+use crate::testing::value_digest;
+
+/// One parsed request line.
+#[derive(Debug)]
+pub enum Request {
+    /// Execute a job pipeline and stream back digest + metrics.
+    Run(Box<JobRequest>),
+    /// Liveness probe.
+    Ping,
+    /// Cache + queue statistics snapshot.
+    Stats,
+    /// Drain pending jobs, then stop the daemon.
+    Shutdown,
+}
+
+/// How an injected fault detonates (mirrors the fault-injection tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultMode {
+    /// The kernel returns `Err` mid-stage.
+    Error,
+    /// The kernel panics mid-stage.
+    Panic,
+}
+
+/// A detonating-kernel spec spliced after the requested jobs.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSpec {
+    pub mode: FaultMode,
+    /// Kernel calls before detonation (0 = first call).
+    pub after: usize,
+}
+
+/// A fully parsed job request.
+#[derive(Debug)]
+pub struct JobRequest {
+    pub id: String,
+    pub input: InputSpec,
+    pub jobs: Vec<Job>,
+    /// Override the daemon's halo mode for this job (cache-key relevant).
+    pub halo_mode: Option<HaloMode>,
+    /// Override the native tile height for this job (cache-key relevant).
+    pub tile_rows: Option<usize>,
+    pub fault: Option<FaultSpec>,
+}
+
+fn opt<'a>(v: &'a JsonValue, key: &str) -> Option<&'a JsonValue> {
+    v.as_object().ok().and_then(|m| m.get(key))
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let v = JsonValue::parse(line)?;
+    if let Some(op) = opt(&v, "op") {
+        return match op.as_str()? {
+            "ping" => Ok(Request::Ping),
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            "run" => Ok(Request::Run(Box::new(parse_job_request(&v)?))),
+            other => Err(Error::Format(format!(
+                "unknown op '{other}' (run|ping|stats|shutdown)"
+            ))),
+        };
+    }
+    // no "op" ⇒ a bare job request
+    Ok(Request::Run(Box::new(parse_job_request(&v)?)))
+}
+
+fn parse_job_request(v: &JsonValue) -> Result<JobRequest> {
+    let id = v.field("id")?.as_str()?.to_string();
+    let input = parse_input(v.field("input")?)?;
+    let jobs = v
+        .field("jobs")?
+        .as_array()?
+        .iter()
+        .map(parse_job)
+        .collect::<Result<Vec<_>>>()?;
+    if jobs.is_empty() {
+        return Err(Error::Format("request has an empty job list".into()));
+    }
+    let halo_mode = opt(v, "halo_mode")
+        .map(|h| HaloMode::parse(h.as_str()?))
+        .transpose()?;
+    let tile_rows = match opt(v, "tile_rows").map(|t| t.as_usize()).transpose()? {
+        Some(0) => return Err(Error::Format("tile_rows must be >= 1".into())),
+        other => other,
+    };
+    let fault = opt(v, "fault").map(parse_fault).transpose()?;
+    Ok(JobRequest {
+        id,
+        input,
+        jobs,
+        halo_mode,
+        tile_rows,
+        fault,
+    })
+}
+
+fn parse_input(v: &JsonValue) -> Result<InputSpec> {
+    let kind = v.field("kind")?.as_str()?;
+    let seed = opt(v, "seed").map(|s| s.as_usize()).transpose()?.unwrap_or(42) as u64;
+    match kind {
+        "volume" => Ok(InputSpec::SyntheticVolume {
+            dims: v.field("dims")?.as_usize_vec()?,
+            seed,
+        }),
+        "image" => {
+            let dims = v.field("dims")?.as_usize_vec()?;
+            if dims.len() != 2 {
+                return Err(Error::Format(format!("image dims must be 2-D: {dims:?}")));
+            }
+            Ok(InputSpec::SyntheticImage {
+                dims: [dims[0], dims[1]],
+                seed,
+            })
+        }
+        "mask" => {
+            let dims = v.field("dims")?.as_usize_vec()?;
+            if dims.len() != 2 {
+                return Err(Error::Format(format!("mask dims must be 2-D: {dims:?}")));
+            }
+            Ok(InputSpec::SegmentationMask {
+                dims: [dims[0], dims[1]],
+            })
+        }
+        "npy" => Ok(InputSpec::Npy {
+            path: v.field("path")?.as_str()?.into(),
+        }),
+        other => Err(Error::Format(format!(
+            "unknown input kind '{other}' (volume|image|mask|npy)"
+        ))),
+    }
+}
+
+fn parse_job(v: &JsonValue) -> Result<Job> {
+    let kind = v.field("kind")?.as_str()?;
+    let window = v.field("window")?.as_usize_vec()?;
+    let getf = |key: &str| -> Result<f32> { Ok(v.field(key)?.as_f64()? as f32) };
+    let job = match kind {
+        "gaussian" => Job::gaussian(&window, getf("sigma")?),
+        "bilateral_const" => Job::bilateral_const(&window, getf("sigma_d")?, getf("sigma_r")?),
+        "bilateral_adaptive" => Job::bilateral_adaptive(&window, getf("sigma_d")?, getf("floor")?),
+        "curvature" => Job::curvature(&window),
+        "median" => Job::median(&window),
+        "quantile" => Job::quantile(&window, v.field("q")?.as_f64()?),
+        "minimum" => Job::rank_min(&window),
+        "maximum" => Job::rank_max(&window),
+        "local_mean" => Job::local_mean(&window),
+        "local_std" => Job::local_std(&window),
+        other => {
+            return Err(Error::Format(format!(
+                "unknown job kind '{other}' (gaussian|bilateral_const|bilateral_adaptive|\
+                 curvature|median|quantile|minimum|maximum|local_mean|local_std)"
+            )))
+        }
+    };
+    job.operator()?; // validate at parse time, like the config path
+    Ok(job)
+}
+
+fn parse_fault(v: &JsonValue) -> Result<FaultSpec> {
+    let mode = match v.field("mode")?.as_str()? {
+        "error" => FaultMode::Error,
+        "panic" => FaultMode::Panic,
+        other => {
+            return Err(Error::Format(format!(
+                "unknown fault mode '{other}' (error|panic)"
+            )))
+        }
+    };
+    Ok(FaultSpec {
+        mode,
+        after: opt(v, "after").map(|a| a.as_usize()).transpose()?.unwrap_or(0),
+    })
+}
+
+/// A kernel that behaves as identity (window all-ones) until its call
+/// counter reaches the threshold, then detonates — the fault-injection
+/// layer's pattern, reachable over the wire for smoke tests.
+#[derive(Debug)]
+struct FaultyKernel {
+    spec: FaultSpec,
+    calls: AtomicUsize,
+}
+
+impl RowKernel for FaultyKernel {
+    fn name(&self) -> &str {
+        "injected-fault"
+    }
+
+    fn execute(&self, block: &[f32], rows: usize, cols: usize, out: &mut [f32]) -> Result<()> {
+        if self.calls.fetch_add(1, Ordering::SeqCst) >= self.spec.after {
+            match self.spec.mode {
+                FaultMode::Panic => panic!("injected fault: kernel panicked mid-stage"),
+                FaultMode::Error => {
+                    return Err(Error::Coordinator("injected failure: kernel error".into()))
+                }
+            }
+        }
+        for r in 0..rows {
+            out[r] = block[r * cols + cols / 2];
+        }
+        Ok(())
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// The failure response line for request `id`.
+pub fn error_response(id: &str, error: &str) -> String {
+    format!(
+        "{{\"id\": \"{}\", \"ok\": false, \"error\": \"{}\"}}",
+        json_escape(id),
+        json_escape(error)
+    )
+}
+
+/// Execute a parsed job request on `exec` and render the response line.
+/// Never panics and never errors — every failure becomes an `"ok": false`
+/// line scoped to this request, leaving the executor healthy.
+pub fn execute_request(req: &JobRequest, exec: &Executor) -> String {
+    match run_request(req, exec) {
+        Ok(line) => line,
+        Err(e) => error_response(&req.id, &e.to_string()),
+    }
+}
+
+fn run_request(req: &JobRequest, exec: &Executor) -> Result<String> {
+    let x = req.input.load()?;
+    let mut plan = Plan::over(&x);
+    for job in &req.jobs {
+        plan = plan.stage(job.to_stage()?);
+    }
+    if let Some(fault) = req.fault {
+        let rank = x.shape().len();
+        let kernel = FaultyKernel {
+            spec: fault,
+            calls: AtomicUsize::new(0),
+        };
+        plan = plan.stage(Stage::new(std::sync::Arc::new(kernel), &vec![1; rank])?);
+    }
+
+    let mut opts = exec.options().clone();
+    if let Some(mode) = req.halo_mode {
+        opts.halo_mode = mode;
+    }
+    if let Some(tile) = req.tile_rows {
+        opts.tile_rows = tile;
+    }
+    let (out, pm) = exec.run_with(plan, &opts)?;
+
+    let mut report = JsonReport::new(format!("serve:{}", req.id));
+    report.metric("stages", pm.stages() as f64);
+    report.metric("melts", pm.melts() as f64);
+    report.metric("folds", pm.folds() as f64);
+    report.metric("total_secs", pm.total().as_secs_f64());
+    report.metric("gather_rows", pm.gather_rows() as f64);
+    report.metric("plan_cache_hits", pm.plan_cache_hits() as f64);
+    report.metric("plan_cache_misses", pm.plan_cache_misses() as f64);
+    report.metric("plan_cache_evictions", pm.plan_cache_evictions() as f64);
+    report.metric("gathers_built", pm.gathers_built() as f64);
+
+    let shape = out
+        .shape()
+        .iter()
+        .map(|d| d.to_string())
+        .collect::<Vec<_>>()
+        .join(", ");
+    Ok(format!(
+        "{{\"id\": \"{}\", \"ok\": true, \"digest\": \"{:016x}\", \"shape\": [{}], \
+         \"metrics\": {}}}",
+        json_escape(&req.id),
+        value_digest(out.data()),
+        shape,
+        report.render_line()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::ExecOptions;
+
+    const JOB: &str = r#"{"id": "j1",
+        "input": {"kind": "image", "dims": [20, 21], "seed": 7},
+        "jobs": [{"kind": "gaussian", "window": [3, 3], "sigma": 1.0},
+                 {"kind": "median", "window": [3, 3]}]}"#;
+
+    #[test]
+    fn parses_job_request() {
+        let req = match parse_request(JOB).unwrap() {
+            Request::Run(r) => r,
+            other => panic!("expected run, got {other:?}"),
+        };
+        assert_eq!(req.id, "j1");
+        assert_eq!(req.jobs.len(), 2);
+        assert!(matches!(req.input, InputSpec::SyntheticImage { .. }));
+        assert!(req.halo_mode.is_none() && req.tile_rows.is_none() && req.fault.is_none());
+    }
+
+    #[test]
+    fn parses_ops_and_overrides() {
+        assert!(matches!(parse_request(r#"{"op": "ping"}"#).unwrap(), Request::Ping));
+        assert!(matches!(parse_request(r#"{"op": "stats"}"#).unwrap(), Request::Stats));
+        assert!(matches!(
+            parse_request(r#"{"op": "shutdown"}"#).unwrap(),
+            Request::Shutdown
+        ));
+        let line = JOB.replace(
+            "\"id\": \"j1\",",
+            "\"id\": \"j1\", \"halo_mode\": \"exchange\", \"tile_rows\": 64, \
+             \"fault\": {\"mode\": \"panic\", \"after\": 2},",
+        );
+        let req = match parse_request(&line).unwrap() {
+            Request::Run(r) => r,
+            other => panic!("expected run, got {other:?}"),
+        };
+        assert_eq!(req.halo_mode, Some(HaloMode::Exchange));
+        assert_eq!(req.tile_rows, Some(64));
+        let fault = req.fault.unwrap();
+        assert_eq!((fault.mode, fault.after), (FaultMode::Panic, 2));
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        // tile_rows = 0 would spin the tile loop — refuse at parse time
+        let zero_tile = JOB.replace("\"id\": \"j1\",", "\"id\": \"j1\", \"tile_rows\": 0,");
+        assert!(parse_request(&zero_tile)
+            .unwrap_err()
+            .to_string()
+            .contains("tile_rows"));
+        assert!(parse_request(r#"{"op": "dance"}"#).is_err());
+        let empty_jobs = r#"{"id": "x", "input": {"kind": "image", "dims": [8, 8]}, "jobs": []}"#;
+        assert!(parse_request(empty_jobs).is_err());
+        assert!(parse_request("not json").is_err());
+        // invalid kernel params are caught at parse time, like configs
+        let bad_sigma = JOB.replace("\"sigma\": 1.0", "\"sigma\": -1.0");
+        assert!(parse_request(&bad_sigma).is_err());
+    }
+
+    #[test]
+    fn execute_matches_one_shot_digest() {
+        let req = match parse_request(JOB).unwrap() {
+            Request::Run(r) => r,
+            other => panic!("expected run, got {other:?}"),
+        };
+        let exec = Executor::one_shot(ExecOptions::native(2));
+        let line = execute_request(&req, &exec);
+        let v = JsonValue::parse(&line).unwrap();
+        assert_eq!(v.field("ok").unwrap(), &JsonValue::Bool(true));
+
+        // reference: the same pipeline straight through Plan::run
+        let x = req.input.load().unwrap();
+        let (reference, _) = crate::coordinator::plan::Plan::over(&x)
+            .gaussian(&[3, 3], 1.0)
+            .median(&[3, 3])
+            .run(&ExecOptions::native(2))
+            .unwrap();
+        let expected = format!("{:016x}", value_digest(reference.data()));
+        assert_eq!(v.field("digest").unwrap().as_str().unwrap(), expected);
+        assert_eq!(v.field("shape").unwrap().as_usize_vec().unwrap(), vec![20, 21]);
+        let counters = v.field("metrics").unwrap().field("metrics").unwrap();
+        assert!(counters.field("stages").unwrap().as_f64().unwrap() >= 2.0);
+    }
+
+    #[test]
+    fn faulted_request_fails_alone() {
+        let line = JOB.replace(
+            "\"id\": \"j1\",",
+            "\"id\": \"boom\", \"fault\": {\"mode\": \"error\", \"after\": 0},",
+        );
+        let req = match parse_request(&line).unwrap() {
+            Request::Run(r) => r,
+            other => panic!("expected run, got {other:?}"),
+        };
+        let exec = Executor::persistent(ExecOptions::native(2), 8);
+        let bad = execute_request(&req, &exec);
+        let v = JsonValue::parse(&bad).unwrap();
+        assert_eq!(v.field("ok").unwrap(), &JsonValue::Bool(false));
+        assert!(v.field("error").unwrap().as_str().unwrap().contains("injected"));
+
+        // the pool survives: a healthy request on the same executor succeeds
+        let good = match parse_request(JOB).unwrap() {
+            Request::Run(r) => r,
+            other => panic!("expected run, got {other:?}"),
+        };
+        let ok = execute_request(&good, &exec);
+        let v = JsonValue::parse(&ok).unwrap();
+        assert_eq!(v.field("ok").unwrap(), &JsonValue::Bool(true));
+    }
+}

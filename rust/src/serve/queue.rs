@@ -1,0 +1,188 @@
+//! Bounded FIFO job queue with admission control.
+//!
+//! The daemon accepts requests on connection threads and executes them on
+//! a single dispatcher (jobs on one pool are serialized anyway — see
+//! [`Executor`](crate::serve::Executor)). [`JobQueue`] is the hand-off:
+//! bounded depth, reject-with-error when full (the client gets an
+//! immediate admission error instead of unbounded buffering), FIFO pop on
+//! the dispatcher side, and a close signal that drains cleanly — already
+//! admitted jobs still run, new pushes are refused.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use crate::error::{Error, Result};
+
+struct QueueInner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    accepted: u64,
+    rejected: u64,
+}
+
+/// Admission statistics for the daemon's `stats` endpoint.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueueStats {
+    pub depth: usize,
+    pub queued: usize,
+    pub accepted: u64,
+    pub rejected: u64,
+}
+
+/// A bounded multi-producer single-consumer FIFO queue.
+pub struct JobQueue<T> {
+    inner: Mutex<QueueInner<T>>,
+    ready: Condvar,
+    depth: usize,
+}
+
+impl<T> JobQueue<T> {
+    /// Queue admitting at most `depth` pending jobs (floored at 1).
+    pub fn new(depth: usize) -> Self {
+        Self {
+            inner: Mutex::new(QueueInner {
+                items: VecDeque::new(),
+                closed: false,
+                accepted: 0,
+                rejected: 0,
+            }),
+            ready: Condvar::new(),
+            depth: depth.max(1),
+        }
+    }
+
+    /// Maximum pending depth.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Admit `item`, or reject immediately: `Err` when the queue already
+    /// holds `depth` pending jobs (admission control) or has been closed.
+    pub fn push(&self, item: T) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        if inner.closed {
+            return Err(Error::Coordinator("job queue closed (daemon shutting down)".into()));
+        }
+        if inner.items.len() >= self.depth {
+            inner.rejected += 1;
+            return Err(Error::Coordinator(format!(
+                "job queue full (depth {}) — resubmit later",
+                self.depth
+            )));
+        }
+        inner.items.push_back(item);
+        inner.accepted += 1;
+        drop(inner);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Block for the next job in FIFO order. `None` once the queue is
+    /// closed *and* drained — already admitted jobs are still delivered.
+    pub fn pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.ready.wait(inner).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Refuse new admissions; pending jobs still drain through `pop`.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        inner.closed = true;
+        drop(inner);
+        self.ready.notify_all();
+    }
+
+    /// Currently pending jobs.
+    pub fn len(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .items
+            .len()
+    }
+
+    /// Whether nothing is pending.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Point-in-time admission statistics.
+    pub fn stats(&self) -> QueueStats {
+        let inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        QueueStats {
+            depth: self.depth,
+            queued: inner.items.len(),
+            accepted: inner.accepted,
+            rejected: inner.rejected,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_and_depth_floor() {
+        let q = JobQueue::new(0);
+        assert_eq!(q.depth(), 1);
+        let q = JobQueue::new(3);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.push(3).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn admission_control_rejects_when_full() {
+        let q = JobQueue::new(2);
+        q.push("a").unwrap();
+        q.push("b").unwrap();
+        let err = q.push("c").unwrap_err();
+        assert!(err.to_string().contains("full (depth 2)"), "{err}");
+        // a pop frees a slot; admission resumes
+        assert_eq!(q.pop(), Some("a"));
+        q.push("c").unwrap();
+        let s = q.stats();
+        assert_eq!((s.accepted, s.rejected, s.queued), (3, 1, 2));
+    }
+
+    #[test]
+    fn close_drains_pending_then_ends() {
+        let q = JobQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert!(q.push(3).unwrap_err().to_string().contains("closed"));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_blocks_until_push_or_close() {
+        let q = Arc::new(JobQueue::new(2));
+        let qc = Arc::clone(&q);
+        let consumer = std::thread::spawn(move || {
+            let first = qc.pop();
+            let second = qc.pop();
+            (first, second)
+        });
+        q.push(42).unwrap();
+        q.close();
+        let (first, second) = consumer.join().unwrap();
+        assert_eq!(first, Some(42));
+        assert_eq!(second, None);
+    }
+}

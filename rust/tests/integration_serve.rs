@@ -1,0 +1,217 @@
+//! Integration tests for the serving subsystem: a real daemon on a real
+//! Unix-domain socket, exercised by concurrent clients and compared
+//! bit-for-bit against the one-shot execution path.
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use meltframe::config::json::JsonValue;
+use meltframe::coordinator::pipeline::ExecOptions;
+use meltframe::serve::daemon::{serve, ServeOptions};
+use meltframe::serve::executor::Executor;
+use meltframe::serve::protocol::{execute_request, parse_request, Request};
+
+fn sock_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("meltframe-{tag}-{}.sock", std::process::id()))
+}
+
+/// Start an in-process daemon and wait until its socket accepts.
+fn start_daemon(tag: &str, workers: usize) -> (PathBuf, JoinHandle<()>) {
+    let path = sock_path(tag);
+    let opts = ServeOptions {
+        socket: path.clone(),
+        exec: ExecOptions::native(workers),
+        queue_depth: 8,
+        cache_capacity: 8,
+    };
+    let handle = std::thread::spawn(move || serve(opts).expect("daemon runs"));
+    for _ in 0..500 {
+        if path.exists() && UnixStream::connect(&path).is_ok() {
+            return (path, handle);
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("daemon did not come up on {}", path.display());
+}
+
+/// One request line over one connection; returns the response line.
+fn submit(path: &Path, line: &str) -> String {
+    let mut stream = UnixStream::connect(path).expect("connect");
+    writeln!(stream, "{line}").expect("send");
+    let mut response = String::new();
+    BufReader::new(stream).read_line(&mut response).expect("recv");
+    response
+}
+
+fn shutdown_and_join(path: &Path, handle: JoinHandle<()>) {
+    let ack = submit(path, "{\"op\": \"shutdown\"}");
+    let v = JsonValue::parse(&ack).unwrap();
+    assert_eq!(v.field("shutdown").unwrap(), &JsonValue::Bool(true));
+    handle.join().expect("daemon exits cleanly");
+    assert!(!path.exists(), "socket unlinked on shutdown");
+}
+
+fn job_line(id: &str, seed: usize, extra: &str) -> String {
+    format!(
+        "{{\"id\": \"{id}\", {extra}\
+         \"input\": {{\"kind\": \"image\", \"dims\": [24, 25], \"seed\": {seed}}}, \
+         \"jobs\": [{{\"kind\": \"gaussian\", \"window\": [3, 3], \"sigma\": 1.0}}, \
+                    {{\"kind\": \"curvature\", \"window\": [3, 3]}}, \
+                    {{\"kind\": \"median\", \"window\": [3, 3]}}]}}"
+    )
+}
+
+fn digest_of(response: &str) -> String {
+    let v = JsonValue::parse(response).unwrap();
+    assert_eq!(
+        v.field("ok").unwrap(),
+        &JsonValue::Bool(true),
+        "expected success: {response}"
+    );
+    v.field("digest").unwrap().as_str().unwrap().to_string()
+}
+
+fn counter(response: &str, key: &str) -> f64 {
+    JsonValue::parse(response)
+        .unwrap()
+        .field("metrics")
+        .unwrap()
+        .field("metrics")
+        .unwrap()
+        .field(key)
+        .unwrap()
+        .as_f64()
+        .unwrap()
+}
+
+/// The one-shot reference response for a request line (fresh executor,
+/// no daemon) — the digests served over the socket must match these
+/// bit-for-bit.
+fn one_shot_reference(line: &str, workers: usize) -> String {
+    let req = match parse_request(line).unwrap() {
+        Request::Run(req) => req,
+        other => panic!("expected a job request, got {other:?}"),
+    };
+    execute_request(&req, &Executor::one_shot(ExecOptions::native(workers)))
+}
+
+#[test]
+fn concurrent_jobs_match_sequential_one_shot_bit_for_bit() {
+    let (path, handle) = start_daemon("concurrent", 2);
+    let lines: Vec<String> = (0..3).map(|i| job_line(&format!("j{i}"), i + 1, "")).collect();
+    // sequential one-shot references, one fresh executor each
+    let expected: Vec<String> = lines
+        .iter()
+        .map(|l| digest_of(&one_shot_reference(l, 2)))
+        .collect();
+
+    // the same three jobs, concurrently, through one daemon
+    let clients: Vec<_> = lines
+        .iter()
+        .map(|l| {
+            let (path, line) = (path.clone(), l.clone());
+            std::thread::spawn(move || submit(&path, &line))
+        })
+        .collect();
+    for (client, want) in clients.into_iter().zip(&expected) {
+        let response = client.join().unwrap();
+        assert_eq!(&digest_of(&response), want, "served digest differs from one-shot");
+    }
+    shutdown_and_join(&path, handle);
+}
+
+#[test]
+fn repeat_submissions_hit_the_cache_and_build_nothing() {
+    let (path, handle) = start_daemon("cache", 2);
+    let line = job_line("warm", 7, "");
+
+    let first = submit(&path, &line);
+    assert_eq!(counter(&first, "plan_cache_misses"), 1.0);
+    assert!(counter(&first, "gathers_built") >= 3.0, "one gather per stage");
+
+    let second = submit(&path, &line);
+    assert_eq!(counter(&second, "plan_cache_hits"), 1.0);
+    assert_eq!(counter(&second, "plan_cache_misses"), 0.0);
+    assert_eq!(counter(&second, "gathers_built"), 0.0, "repeat traffic melts nothing");
+    assert_eq!(digest_of(&first), digest_of(&second));
+
+    // cache-busting: overriding a keyed knob misses again, but the
+    // result is still bit-for-bit identical (tile_rows and halo_mode
+    // never change values)
+    for extra in ["\"tile_rows\": 64, ", "\"halo_mode\": \"exchange\", "] {
+        let busted = submit(&path, &job_line("warm", 7, extra));
+        assert_eq!(counter(&busted, "plan_cache_hits"), 0.0, "{extra}");
+        assert_eq!(counter(&busted, "plan_cache_misses"), 1.0, "{extra}");
+        assert_eq!(digest_of(&busted), digest_of(&first), "{extra}");
+    }
+
+    // the daemon's stats endpoint totals the same counters
+    let stats = submit(&path, "{\"op\": \"stats\"}");
+    let v = JsonValue::parse(&stats).unwrap();
+    let cache = v.field("cache").unwrap();
+    assert_eq!(cache.field("hits").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(cache.field("misses").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(v.field("queue").unwrap().field("accepted").unwrap().as_usize().unwrap(), 4);
+
+    shutdown_and_join(&path, handle);
+}
+
+#[test]
+fn poisoned_job_fails_alone_and_pool_stays_healthy() {
+    let (path, handle) = start_daemon("faults", 2);
+    let reference = digest_of(&one_shot_reference(&job_line("ok", 3, ""), 2));
+
+    for (i, mode) in ["error", "panic"].iter().enumerate() {
+        let bomb = job_line(
+            &format!("boom-{mode}"),
+            3,
+            &format!("\"fault\": {{\"mode\": \"{mode}\", \"after\": {i}}}, "),
+        );
+        let response = submit(&path, &bomb);
+        let v = JsonValue::parse(&response).unwrap();
+        assert_eq!(
+            v.field("ok").unwrap(),
+            &JsonValue::Bool(false),
+            "poisoned job must fail: {response}"
+        );
+        assert!(!v.field("error").unwrap().as_str().unwrap().is_empty());
+
+        // the next job on the same pool succeeds, bit-for-bit
+        let healthy = submit(&path, &job_line("ok", 3, ""));
+        assert_eq!(digest_of(&healthy), reference, "pool poisoned by {mode} fault");
+    }
+    shutdown_and_join(&path, handle);
+}
+
+#[test]
+fn protocol_level_errors_answer_without_killing_the_connection() {
+    let (path, handle) = start_daemon("errors", 2);
+
+    // several lines over ONE connection: a parse error, a zero tile_rows,
+    // then a healthy job — each answered in order
+    let mut stream = UnixStream::connect(&path).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut read = |stream: &mut UnixStream, line: &str| -> String {
+        writeln!(stream, "{line}").unwrap();
+        let mut response = String::new();
+        reader.read_line(&mut response).unwrap();
+        response
+    };
+
+    let bad = read(&mut stream, "this is not json");
+    assert!(bad.contains("\"ok\": false"), "{bad}");
+    let zero = read(&mut stream, &job_line("z", 1, "\"tile_rows\": 0, "));
+    assert!(zero.contains("tile_rows"), "{zero}");
+    let ping = read(&mut stream, "{\"op\": \"ping\"}");
+    assert!(ping.contains("pong"), "{ping}");
+    let healthy = read(&mut stream, &job_line("fine", 5, ""));
+    assert_eq!(
+        digest_of(&healthy),
+        digest_of(&one_shot_reference(&job_line("fine", 5, ""), 2))
+    );
+
+    shutdown_and_join(&path, handle);
+}

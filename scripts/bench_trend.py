@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Bench trend gate: diff a fresh BENCH_fusion.json against the previous
+run's artifact and warn (fail-soft) on median regressions.
+
+Usage:
+    bench_trend.py OLD.json NEW.json [--threshold 0.10]
+
+Compares ``ns_per_op_median`` per series label shared by both files.
+A series whose median regressed by more than the threshold emits a GitHub
+``::warning`` annotation; the script always exits 0 — the gate informs,
+it does not block (quick-mode CI benches on shared runners are too noisy
+to hard-fail on).  A missing OLD file (first run, expired artifact) is
+reported and skipped.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+
+def medians(path):
+    doc = json.loads(Path(path).read_text())
+    out = {}
+    for series in doc.get("series", []):
+        label = series.get("label")
+        median = series.get("ns_per_op_median")
+        if label is not None and isinstance(median, (int, float)):
+            out[label] = float(median)
+    return out
+
+
+def main(argv):
+    args = [a for a in argv if not a.startswith("--")]
+    threshold = 0.10
+    for flag in argv:
+        if flag.startswith("--threshold"):
+            threshold = float(flag.split("=", 1)[1] if "=" in flag else argv[argv.index(flag) + 1])
+    if len(args) < 2:
+        print("usage: bench_trend.py OLD.json NEW.json [--threshold 0.10]")
+        return 0
+    old_path, new_path = args[0], args[1]
+
+    if not Path(old_path).exists():
+        print(f"bench trend: no previous bench at {old_path} (first run or expired artifact) — skipping")
+        return 0
+    if not Path(new_path).exists():
+        print(f"::warning ::bench trend: fresh bench {new_path} missing — nothing to compare")
+        return 0
+
+    try:
+        old, new = medians(old_path), medians(new_path)
+    except (json.JSONDecodeError, OSError) as e:
+        print(f"::warning ::bench trend: unreadable bench JSON ({e}) — skipping")
+        return 0
+
+    shared = sorted(set(old) & set(new))
+    if not shared:
+        print("bench trend: no shared series between runs — skipping")
+        return 0
+
+    regressions = 0
+    for label in shared:
+        before, after = old[label], new[label]
+        if before <= 0:
+            continue
+        delta = (after - before) / before
+        marker = ""
+        if delta > threshold:
+            regressions += 1
+            marker = "  <-- REGRESSION"
+            print(
+                f"::warning ::bench trend: '{label}' median regressed "
+                f"{delta * 100:.1f}% ({before:.0f} -> {after:.0f} ns/op, threshold {threshold * 100:.0f}%)"
+            )
+        print(f"  {label:<40} {before:>12.0f} -> {after:>12.0f} ns/op  ({delta * 100:+6.1f}%){marker}")
+
+    dropped = sorted(set(old) - set(new))
+    if dropped:
+        print(f"bench trend: series no longer present: {', '.join(dropped)}")
+    print(
+        f"bench trend: {len(shared)} series compared, {regressions} regression(s) "
+        f"over {threshold * 100:.0f}% (fail-soft: exit 0)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

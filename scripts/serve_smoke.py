@@ -1,0 +1,153 @@
+#!/usr/bin/env python3
+"""End-to-end smoke test for `meltframe serve` / `meltframe submit`.
+
+Usage:
+    serve_smoke.py path/to/meltframe
+
+Starts a daemon on a temp socket, fires three concurrent socket jobs
+(one with an injected fault), checks the healthy digests against
+`submit --oneshot` references (bit-for-bit), verifies the faulted job
+failed alone, then shuts the daemon down cleanly.  Exits non-zero on any
+mismatch — this is a hard gate, unlike the bench trend warning.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+
+
+def job_request(job_id, seed, fault=None):
+    req = {
+        "id": job_id,
+        "input": {"kind": "image", "dims": [32, 33], "seed": seed},
+        "jobs": [
+            {"kind": "gaussian", "window": [3, 3], "sigma": 1.0},
+            {"kind": "curvature", "window": [3, 3]},
+            {"kind": "median", "window": [3, 3]},
+        ],
+    }
+    if fault:
+        req["fault"] = fault
+    return json.dumps(req)
+
+
+def submit(binary, args):
+    proc = subprocess.run(
+        [binary, "submit", *args], capture_output=True, text=True, timeout=120
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(f"submit {args} failed: {proc.stderr.strip()}")
+    return json.loads(proc.stdout.strip())
+
+
+def main():
+    if len(sys.argv) != 2:
+        print("usage: serve_smoke.py path/to/meltframe")
+        return 2
+    binary = os.path.abspath(sys.argv[1])
+    socket = os.path.join(tempfile.mkdtemp(prefix="meltframe-smoke-"), "serve.sock")
+
+    daemon = subprocess.Popen(
+        [binary, "serve", "--socket", socket, "--workers", "2", "--queue-depth", "8"],
+        stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT,
+        text=True,
+    )
+    try:
+        for _ in range(200):
+            if os.path.exists(socket):
+                break
+            if daemon.poll() is not None:
+                print(f"FAIL: daemon exited early:\n{daemon.stdout.read()}")
+                return 1
+            time.sleep(0.05)
+        else:
+            print("FAIL: daemon socket never appeared")
+            return 1
+
+        jobs = {
+            "a": job_request("a", 1),
+            "b": job_request("b", 2),
+            "boom": job_request("boom", 3, fault={"mode": "error", "after": 0}),
+        }
+
+        # oneshot references for the healthy jobs (fresh process each —
+        # the bit-for-bit baseline the served digests must reproduce)
+        references = {
+            job_id: submit(binary, ["--oneshot", "--workers", "2", "--json", jobs[job_id]])
+            for job_id in ("a", "b")
+        }
+
+        # three concurrent socket clients, one of them poisoned
+        responses, errors = {}, []
+
+        def client(job_id):
+            try:
+                responses[job_id] = submit(binary, ["--socket", socket, "--json", jobs[job_id]])
+            except Exception as e:  # noqa: BLE001 — smoke harness collects all failures
+                errors.append(f"{job_id}: {e}")
+
+        threads = [threading.Thread(target=client, args=(j,)) for j in jobs]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=180)
+        if errors:
+            print("FAIL: client errors: " + "; ".join(errors))
+            return 1
+
+        failures = 0
+        for job_id in ("a", "b"):
+            served, ref = responses[job_id], references[job_id]
+            if not served.get("ok"):
+                print(f"FAIL: healthy job '{job_id}' errored: {served}")
+                failures += 1
+            elif served.get("digest") != ref.get("digest"):
+                print(
+                    f"FAIL: job '{job_id}' served digest {served.get('digest')} != "
+                    f"one-shot {ref.get('digest')} (must be bit-for-bit)"
+                )
+                failures += 1
+            else:
+                print(f"ok: job '{job_id}' digest {served['digest']} matches one-shot")
+        boom = responses["boom"]
+        if boom.get("ok"):
+            print(f"FAIL: poisoned job unexpectedly succeeded: {boom}")
+            failures += 1
+        elif "injected" not in boom.get("error", ""):
+            print(f"FAIL: poisoned job failed for the wrong reason: {boom}")
+            failures += 1
+        else:
+            print(f"ok: poisoned job failed alone ({boom['error']})")
+
+        ack = submit(binary, ["--socket", socket, "--shutdown"])
+        if not ack.get("shutdown"):
+            print(f"FAIL: shutdown not acknowledged: {ack}")
+            failures += 1
+        daemon.wait(timeout=60)
+        if daemon.returncode != 0:
+            print(f"FAIL: daemon exited {daemon.returncode}")
+            failures += 1
+        else:
+            print("ok: daemon shut down cleanly")
+        if os.path.exists(socket):
+            print("FAIL: socket file not unlinked on shutdown")
+            failures += 1
+
+        if failures:
+            print(f"serve smoke: {failures} failure(s)")
+            return 1
+        print("serve smoke: all checks passed")
+        return 0
+    finally:
+        if daemon.poll() is None:
+            daemon.kill()
+            daemon.wait()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
