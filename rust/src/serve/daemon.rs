@@ -1,7 +1,9 @@
 //! The serving daemon: Unix-domain socket front end over one
 //! [`Executor`].
 //!
-//! Lifecycle: `serve` binds the socket (unlinking a stale file first),
+//! Lifecycle: `serve` binds the socket (probing it first — a path served
+//! by a live daemon is an error, only a stale file from a crashed daemon
+//! is unlinked),
 //! spawns one persistent [`Executor`] (pool + plan cache) and one
 //! dispatcher thread, then accepts connections. Each connection gets a
 //! reader thread speaking the line protocol ([`protocol`]): job requests
@@ -18,12 +20,14 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use crate::coordinator::pipeline::ExecOptions;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::serve::executor::{Executor, DEFAULT_CACHE_CAPACITY};
 use crate::serve::protocol::{error_response, execute_request, parse_request, JobRequest, Request};
 use crate::serve::queue::JobQueue;
@@ -95,8 +99,20 @@ struct QueuedJob {
 
 /// Run the daemon until a `shutdown` request. Blocks the calling thread.
 pub fn serve(opts: ServeOptions) -> Result<()> {
-    // a stale socket file from a crashed daemon would fail the bind
-    let _ = std::fs::remove_file(&opts.socket);
+    // A stale socket file from a crashed daemon would fail the bind, but
+    // unlinking unconditionally would silently steal the path from a LIVE
+    // daemon (which keeps running, unreachable). Probe first: only clear
+    // the file if nothing answers a connect.
+    if opts.socket.exists() {
+        if UnixStream::connect(&opts.socket).is_ok() {
+            return Err(Error::Coordinator(format!(
+                "socket {} is already served by a live daemon (shut it down first, \
+                 or pick another --socket)",
+                opts.socket.display()
+            )));
+        }
+        let _ = std::fs::remove_file(&opts.socket);
+    }
     let listener = UnixListener::bind(&opts.socket)?;
 
     let exec = Arc::new(Executor::persistent(opts.exec.clone(), opts.cache_capacity));
@@ -110,7 +126,22 @@ pub fn serve(opts: ServeOptions) -> Result<()> {
             .name("meltframe-dispatch".into())
             .spawn(move || {
                 while let Some(job) = queue.pop() {
-                    job.slot.fill(execute_request(&job.req, &exec));
+                    // Worker-side panics are already caught by the pool,
+                    // but a panic on the leader/planning side of a run
+                    // (plan building, partition validation, aggregation)
+                    // would otherwise kill the dispatcher and strand every
+                    // admitted job in slot.wait() forever. Contain it: the
+                    // job answers with an error line, the dispatcher lives
+                    // on to drain the queue.
+                    let response =
+                        catch_unwind(AssertUnwindSafe(|| execute_request(&job.req, &exec)))
+                            .unwrap_or_else(|_| {
+                                error_response(
+                                    &job.req.id,
+                                    "internal error: job panicked during planning/dispatch",
+                                )
+                            });
+                    job.slot.fill(response);
                 }
             })
             .expect("spawn dispatcher thread")
@@ -126,6 +157,12 @@ pub fn serve(opts: ServeOptions) -> Result<()> {
 
     for stream in listener.incoming() {
         if shutdown.load(Ordering::SeqCst) {
+            // A real client racing the shutdown gets an answer instead of
+            // a silently dropped connection (the wake-up self-connect from
+            // the shutdown handler just ignores the line).
+            if let Ok(mut s) = stream {
+                let _ = writeln!(s, "{}", error_response("", "daemon shutting down"));
+            }
             break;
         }
         let stream = match stream {
@@ -177,8 +214,17 @@ fn handle_connection(
                 shutdown.store(true, Ordering::SeqCst);
                 queue.close();
                 let _ = writeln!(writer, "{{\"ok\": true, \"shutdown\": true}}");
-                // unblock the accept loop so `serve` can observe the flag
-                let _ = UnixStream::connect(socket);
+                // Unblock the accept loop so `serve` can observe the flag.
+                // The connect must actually land — otherwise the accept
+                // loop stays blocked despite the flag — so retry briefly;
+                // if every attempt fails the next real connection (which
+                // gets a "shutting down" line) completes the hand-off.
+                for _ in 0..5 {
+                    if UnixStream::connect(socket).is_ok() {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
                 return;
             }
             Ok(Request::Run(req)) => {

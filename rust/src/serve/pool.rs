@@ -4,9 +4,10 @@
 //! batch, measurable overhead under serving traffic. [`WorkerPool`] keeps
 //! `threads` workers parked on a condvar and hands each run a borrowed
 //! fleet through [`WorkerPool::run_scoped`], which has the same blocking
-//! contract as `thread::scope`: it does not return until every task it
-//! enqueued has finished, so tasks may safely borrow from the caller's
-//! stack (see the safety argument on `run_scoped`).
+//! contract as `thread::scope`: control cannot leave it — by return *or*
+//! by unwind (a panicking leader closure) — until every task it enqueued
+//! has finished, so tasks may safely borrow from the caller's stack (see
+//! the safety argument on `run_scoped`).
 //!
 //! Panic containment: every task body runs under `catch_unwind`, so a
 //! poisoned job (PR 4 fault-injection kernels) reports `Err("worker {w}
@@ -91,12 +92,35 @@ impl WorkerPool {
             slots: Mutex<(Vec<Option<Result<T>>>, usize)>,
             done: Condvar,
         }
+        impl<T> Latch<T> {
+            fn wait_for(&self, count: usize) -> std::sync::MutexGuard<'_, (Vec<Option<Result<T>>>, usize)> {
+                let mut guard = self.slots.lock().unwrap_or_else(|p| p.into_inner());
+                while guard.1 < count {
+                    guard = self.done.wait(guard).unwrap_or_else(|p| p.into_inner());
+                }
+                guard
+            }
+        }
+        // Blocks in `drop` until every enqueued task has completed, so
+        // leaving this frame by ANY path — return or unwind (a panicking
+        // `leader`) — waits for the pool threads first. This is the same
+        // join-in-drop-guard discipline `thread::scope` uses.
+        struct WaitGuard<'a, T> {
+            latch: &'a Latch<T>,
+            enqueued: usize,
+        }
+        impl<T> Drop for WaitGuard<'_, T> {
+            fn drop(&mut self) {
+                drop(self.latch.wait_for(self.enqueued));
+            }
+        }
         let latch = Latch::<T> {
             slots: Mutex::new(((0..tasks).map(|_| None).collect(), 0)),
             done: Condvar::new(),
         };
         let latch = &latch;
         let work = &work;
+        let mut wait = WaitGuard { latch, enqueued: 0 };
         for w in 0..tasks {
             let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
                 let result = catch_unwind(AssertUnwindSafe(|| work(w)))
@@ -109,22 +133,22 @@ impl WorkerPool {
                 }
             });
             // SAFETY: the closure borrows `latch` and `work` from this
-            // stack frame, but this function does not return until the
-            // completion latch below has counted every task — exactly the
-            // guarantee `thread::scope` provides — so the 'static lifetime
-            // the queue requires is never actually exercised past the
-            // borrows' real extent. No task outlives this call.
+            // stack frame, and control cannot leave this frame — by return
+            // OR by unwind — until the completion latch has counted every
+            // enqueued task: `wait` (whose `enqueued` is bumped below,
+            // after the hand-off) blocks in its destructor, which runs
+            // even when `leader()` panics, exactly the guarantee
+            // `thread::scope` provides via its join-in-drop guard. So the
+            // 'static lifetime the queue requires is never exercised past
+            // the borrows' real extent: no task outlives this call.
             let task: Task = unsafe { std::mem::transmute(task) };
             self.enqueue(task);
+            wait.enqueued += 1;
         }
         leader();
-        let mut guard = latch.slots.lock().unwrap_or_else(|p| p.into_inner());
-        while guard.1 < tasks {
-            guard = latch
-                .done
-                .wait(guard)
-                .unwrap_or_else(|p| p.into_inner());
-        }
+        // normal path: same wait the unwind path gets from the guard
+        drop(wait);
+        let mut guard = latch.wait_for(tasks);
         std::mem::take(&mut guard.0)
             .into_iter()
             .map(|slot| slot.expect("latch counted a task whose slot is empty"))
@@ -219,6 +243,32 @@ mod tests {
         // the same threads still serve the next job
         let again = pool.run_scoped(2, |w| Ok(w * 10), || {});
         assert!(again.into_iter().all(|r| r.is_ok()));
+    }
+
+    #[test]
+    fn panicking_leader_still_waits_for_tasks_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        // stack-local, borrowed by every task: if run_scoped unwound past
+        // the latch wait this would be a use-after-free under the tasks
+        let finished = AtomicUsize::new(0);
+        let unwound = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_scoped(
+                4,
+                |_| {
+                    std::thread::sleep(std::time::Duration::from_millis(30));
+                    finished.fetch_add(1, Ordering::SeqCst);
+                    Ok(())
+                },
+                || panic!("injected leader panic"),
+            )
+        }));
+        assert!(unwound.is_err());
+        // the drop guard held the frame open until every task completed
+        assert_eq!(finished.load(Ordering::SeqCst), 4);
+        // and the pool threads are still healthy for the next job
+        let again = pool.run_scoped(2, |w| Ok(w * 7), || {});
+        let got: Vec<usize> = again.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(got, vec![0, 7]);
     }
 
     #[test]

@@ -61,6 +61,9 @@ impl<T> JobQueue<T> {
     pub fn push(&self, item: T) -> Result<()> {
         let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
         if inner.closed {
+            // counts as a refusal just like the full-queue path, so
+            // QueueStats::rejected covers shutdown-window rejections too
+            inner.rejected += 1;
             return Err(Error::Coordinator("job queue closed (daemon shutting down)".into()));
         }
         if inner.items.len() >= self.depth {
@@ -165,6 +168,8 @@ mod tests {
         q.push(2).unwrap();
         q.close();
         assert!(q.push(3).unwrap_err().to_string().contains("closed"));
+        // the closed refusal counts in `rejected` like the full-queue path
+        assert_eq!(q.stats().rejected, 1);
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), None);

@@ -3,7 +3,7 @@
 //! bit-for-bit against the one-shot execution path.
 
 use std::io::{BufRead, BufReader, Write};
-use std::os::unix::net::UnixStream;
+use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -183,6 +183,39 @@ fn poisoned_job_fails_alone_and_pool_stays_healthy() {
         let healthy = submit(&path, &job_line("ok", 3, ""));
         assert_eq!(digest_of(&healthy), reference, "pool poisoned by {mode} fault");
     }
+    shutdown_and_join(&path, handle);
+}
+
+#[test]
+fn serve_refuses_to_steal_a_live_daemons_socket() {
+    let (path, handle) = start_daemon("steal", 1);
+    // a second daemon on the same path must error out, not silently
+    // unlink the live daemon's socket
+    let err = serve(ServeOptions {
+        socket: path.clone(),
+        exec: ExecOptions::native(1),
+        queue_depth: 2,
+        cache_capacity: 2,
+    })
+    .unwrap_err();
+    assert!(err.to_string().contains("live daemon"), "{err}");
+    // the first daemon is untouched and still answers
+    let ping = submit(&path, "{\"op\": \"ping\"}");
+    assert!(ping.contains("pong"), "{ping}");
+    shutdown_and_join(&path, handle);
+}
+
+#[test]
+fn serve_clears_a_stale_socket_file() {
+    // a crashed daemon leaves the file behind with nothing accepting on
+    // it; serve must treat that as stale and bind anyway
+    let path = sock_path("stale");
+    let _ = std::fs::remove_file(&path);
+    drop(UnixListener::bind(&path).expect("plant stale socket"));
+    assert!(path.exists(), "stale socket file left behind");
+    let (path, handle) = start_daemon("stale", 1);
+    let ping = submit(&path, "{\"op\": \"ping\"}");
+    assert!(ping.contains("pong"), "{ping}");
     shutdown_and_join(&path, handle);
 }
 
