@@ -97,6 +97,9 @@ impl Measurement {
 /// Defeat constant folding without the unstable `std::hint::black_box`
 /// semantics question — a volatile read through a pointer.
 pub fn black_box<T>(x: T) -> T {
+    // SAFETY: `&x` is a valid, aligned pointer to a live `T` for the
+    // whole read; the original is forgotten (not dropped) after being
+    // copied out, so no double-drop and no use-after-move.
     unsafe {
         let y = std::ptr::read_volatile(&x);
         std::mem::forget(x);

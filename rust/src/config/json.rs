@@ -224,19 +224,49 @@ impl<'a> Parser<'a> {
                         Some(b't') => out.push('\t'),
                         Some(b'r') => out.push('\r'),
                         Some(b'u') => {
-                            // \uXXXX basic-plane escapes
-                            if self.pos + 4 >= self.bytes.len() {
-                                return Err(Error::Format("truncated \\u escape".into()));
-                            }
-                            let hex = std::str::from_utf8(&self.bytes[self.pos + 1..self.pos + 5])
-                                .map_err(|_| Error::Format("bad \\u escape".into()))?;
-                            let code = u32::from_str_radix(hex, 16)
-                                .map_err(|_| Error::Format("bad \\u escape".into()))?;
-                            out.push(
-                                char::from_u32(code)
+                            // \uXXXX escapes. Code units in the surrogate
+                            // range are not scalar values: a high surrogate
+                            // must pair with a following \uDC00-\uDFFF
+                            // escape (RFC 8259 §7) and decode to one
+                            // supplementary-plane character; anything lone
+                            // is rejected rather than smuggled into the
+                            // String as a replacement or mangled char.
+                            let code = self.hex4()?;
+                            let ch = match code {
+                                0xD800..=0xDBFF => {
+                                    if self.bytes.get(self.pos + 1) != Some(&b'\\')
+                                        || self.bytes.get(self.pos + 2) != Some(&b'u')
+                                    {
+                                        return Err(Error::Format(format!(
+                                            "lone high surrogate \\u{code:04X}: a non-BMP \
+                                             character needs a \\uDC00-\\uDFFF escape \
+                                             immediately after"
+                                        )));
+                                    }
+                                    self.pos += 2; // step onto the pair's 'u'
+                                    let low = self.hex4()?;
+                                    if !(0xDC00..=0xDFFF).contains(&low) {
+                                        return Err(Error::Format(format!(
+                                            "high surrogate \\u{code:04X} followed by \
+                                             \\u{low:04X}, expected \\uDC00-\\uDFFF"
+                                        )));
+                                    }
+                                    let scalar =
+                                        0x1_0000 + ((code - 0xD800) << 10) + (low - 0xDC00);
+                                    char::from_u32(scalar).ok_or_else(|| {
+                                        Error::Format("invalid codepoint".into())
+                                    })?
+                                }
+                                0xDC00..=0xDFFF => {
+                                    return Err(Error::Format(format!(
+                                        "lone low surrogate \\u{code:04X}: expected a leading \
+                                         \\uD800-\\uDBFF escape before it"
+                                    )))
+                                }
+                                _ => char::from_u32(code)
                                     .ok_or_else(|| Error::Format("invalid codepoint".into()))?,
-                            );
-                            self.pos += 4;
+                            };
+                            out.push(ch);
                         }
                         other => {
                             return Err(Error::Format(format!(
@@ -257,6 +287,21 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Read the four hex digits of a `\uXXXX` escape. On entry `pos` is at
+    /// the `u`; on exit it is at the last hex digit (the caller's shared
+    /// `pos += 1` then steps past it).
+    fn hex4(&mut self) -> Result<u32> {
+        if self.pos + 4 >= self.bytes.len() {
+            return Err(Error::Format("truncated \\u escape".into()));
+        }
+        let hex = std::str::from_utf8(&self.bytes[self.pos + 1..self.pos + 5])
+            .map_err(|_| Error::Format("bad \\u escape".into()))?;
+        let code = u32::from_str_radix(hex, 16)
+            .map_err(|_| Error::Format("bad \\u escape".into()))?;
+        self.pos += 4;
+        Ok(code)
     }
 
     fn number(&mut self) -> Result<JsonValue> {
@@ -348,5 +393,40 @@ mod tests {
             .as_usize()
             .unwrap();
         assert_eq!(inner, 1);
+    }
+
+    #[test]
+    fn decodes_utf16_surrogate_pairs() {
+        let v = JsonValue::parse(r#""\uD83D\uDE00""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{1F600}");
+        // pair mid-string, BMP escapes before and after
+        let v = JsonValue::parse(r#""a\u00E9\uD834\uDD1Eb""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\u{e9}\u{1D11E}b");
+    }
+
+    #[test]
+    fn rejects_lone_surrogates_with_clear_errors() {
+        let high = JsonValue::parse(r#""\uD83D""#).unwrap_err().to_string();
+        assert!(high.contains("lone high surrogate"), "{high}");
+        let low = JsonValue::parse(r#""\uDE00""#).unwrap_err().to_string();
+        assert!(low.contains("lone low surrogate"), "{low}");
+        // high surrogate followed by a non-surrogate escape
+        let bad = JsonValue::parse(r#""\uD83D\u0041""#).unwrap_err().to_string();
+        assert!(bad.contains("expected \\uDC00-\\uDFFF"), "{bad}");
+        // high surrogate followed by a literal char, not an escape
+        let trail = JsonValue::parse(r#""\uD83Dx""#).unwrap_err().to_string();
+        assert!(trail.contains("lone high surrogate"), "{trail}");
+    }
+
+    #[test]
+    fn raw_non_bmp_chars_pass_through() {
+        let v = JsonValue::parse("\"melt \u{1F600} frame\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "melt \u{1F600} frame");
+    }
+
+    #[test]
+    fn bmp_escapes_still_decode() {
+        let v = JsonValue::parse(r#""\u0041\u00E9\u6F22""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "A\u{e9}\u{6f22}");
     }
 }

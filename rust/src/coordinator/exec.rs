@@ -65,7 +65,7 @@
 //! exchanged row is the identical value its owner computed for itself.
 
 use std::ops::Range;
-use std::sync::{Arc, Barrier};
+use crate::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::aggregator::{assemble, merged_moments};

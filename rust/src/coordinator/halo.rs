@@ -39,8 +39,8 @@
 //! them.
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Condvar, Mutex, MutexGuard};
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::{Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
@@ -148,10 +148,10 @@ struct Cell {
 /// The *secondary* error a waiter returns after another worker poisoned
 /// the board. The executor's join loop recognises this exact message and
 /// prefers the root-cause error from the worker that actually failed.
-pub(crate) const ABORTED_MSG: &str = "halo exchange aborted: another worker failed";
+pub const ABORTED_MSG: &str = "halo exchange aborted: another worker failed";
 
 /// Granularity of the poison/deadline re-check while waiting on a cell.
-pub(crate) const WAIT_SLICE: Duration = Duration::from_millis(100);
+pub const WAIT_SLICE: Duration = Duration::from_millis(100);
 /// Default backstop cap on any single cell/scheduler wait — converts a
 /// genuine scheduling bug into an error instead of a hung fleet.
 /// Deliberately generous: the wait clock overlaps a neighbour's
@@ -168,7 +168,7 @@ pub const DEFAULT_WAIT_DEADLINE: Duration = Duration::from_secs(600);
 /// whole fleet errors out instead of deadlocking. Under the dependency-
 /// aware stage scheduler the blocking wait is a fallback only: dispatched
 /// stages find their cells already published.
-pub(crate) struct HaloBoard {
+pub struct HaloBoard {
     ranges: Vec<Range<usize>>,
     cells: Vec<Cell>,
     poisoned: AtomicBool,

@@ -40,8 +40,8 @@
 use std::cmp::Reverse;
 use std::collections::BTreeSet;
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::halo::{ABORTED_MSG, WAIT_SLICE};
@@ -126,7 +126,7 @@ impl ResultBoard {
 /// One dispatched unit of exchange-mode work: run `stage` over `chunk`,
 /// with the chunk's resident value slab (the previous stage's interior
 /// output; empty for stage 0) checked out of the scheduler.
-pub(crate) struct StageTask {
+pub struct StageTask {
     pub chunk: usize,
     pub stage: usize,
     pub vals: Vec<f32>,
@@ -164,7 +164,7 @@ struct SchedState {
 /// Dependency-aware `(chunk, stage)` task scheduler for exchange-mode
 /// fused groups — see the module docs for the dispatch rule and liveness
 /// argument.
-pub(crate) struct StageScheduler {
+pub struct StageScheduler {
     ranges: Vec<Range<usize>>,
     /// Per-stage gather reach in flat rows: stage `k` reads at most
     /// `halos[k]` rows beyond the chunk interior.

@@ -250,6 +250,41 @@
 //! assert_eq!(m2.plan_cache_hits(), 1);       // served from cache
 //! assert_eq!(m2.gathers_built(), 0);         // no new tables
 //! ```
+//!
+//! ## Correctness & analysis
+//!
+//! The concurrency surface — [`coordinator::halo::HaloBoard`],
+//! [`coordinator::scheduler::StageScheduler`],
+//! [`serve::WorkerPool`], [`serve::JobQueue`], the daemon's dispatcher
+//! hand-off — is hand-rolled Mutex/Condvar protocol code, and it is
+//! machine-checked rather than only hand-audited:
+//!
+//! * **Deterministic model checking.** Every concurrency module imports
+//!   its primitives from the [`sync`] facade. Default builds get pure
+//!   `std::sync` re-exports (zero overhead); `cargo test --features
+//!   model --test model_concurrency` swaps in a cooperative
+//!   deterministic-interleaving scheduler (`sync::model`, a
+//!   "shuttle-lite") that drives each protocol through hundreds to
+//!   thousands of seeded-random and bounded-exhaustive schedules,
+//!   detecting deadlocks, lost wakeups, livelocks and cross-schedule
+//!   invariant violations. Failing schedules are reproducible from the
+//!   seed or DFS prefix embedded in the failure message.
+//! * **Miri.** The `unsafe`-bearing modules (`melt` gather buffers,
+//!   `serve::pool`'s scoped-task transmute, `bench_harness`) run under
+//!   Miri in CI: `cargo +nightly miri test -p meltframe <filters>`.
+//! * **ThreadSanitizer.** The concurrency integration tests run under
+//!   `-Zsanitizer=thread` on nightly (see `.github/workflows/ci.yml`).
+//! * **Unsafe-audit lint gate.** `python3 scripts/lint_unsafe.py` (a
+//!   hard CI step) enforces: every `unsafe` block is annotated with a
+//!   `// SAFETY:` comment, concurrency modules never import
+//!   `std::sync::{Mutex, Condvar}` directly (which would hide them from
+//!   the model checker), and `serve/` request paths contain no
+//!   `unwrap()`/`expect()` outside tests and an explicit allowlist.
+//!   The compiler enforces `unsafe_op_in_unsafe_fn` and clippy's
+//!   `undocumented_unsafe_blocks` at deny level (see `Cargo.toml`
+//!   `[lints]`).
+
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod bench_harness;
 pub mod cli;
@@ -261,6 +296,7 @@ pub mod melt;
 pub mod runtime;
 pub mod serve;
 pub mod stats;
+pub mod sync;
 pub mod tensor;
 pub mod testing;
 

@@ -110,9 +110,9 @@ fn unit_idx(a: usize, g: usize, rank: usize) -> Vec<usize> {
 /// over the buffer (§Perf iteration 4).
 pub(crate) fn uninit_buffer(n: usize) -> Vec<f32> {
     let mut v = Vec::with_capacity(n);
+    #[allow(clippy::uninit_vec)]
     // SAFETY: f32 has no drop glue and no invalid bit patterns; every
     // element is overwritten by melt_into before any read.
-    #[allow(clippy::uninit_vec)]
     unsafe {
         v.set_len(n);
     }
@@ -128,9 +128,9 @@ pub(crate) fn uninit_buffer(n: usize) -> Vec<f32> {
 pub(crate) fn reuse_uninit(v: &mut Vec<f32>, n: usize) {
     v.clear();
     v.reserve(n);
+    #[allow(clippy::uninit_vec)]
     // SAFETY: capacity >= n after reserve; f32 has no invalid bit
     // patterns; the caller overwrites all n elements before reading.
-    #[allow(clippy::uninit_vec)]
     unsafe {
         v.set_len(n);
     }

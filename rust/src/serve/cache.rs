@@ -21,7 +21,7 @@
 //! plan is valid for any fleet size. Changing any keyed field therefore
 //! busts the cache; resubmitting an identical spec hits it.
 
-use std::sync::Mutex;
+use crate::sync::Mutex;
 
 use crate::coordinator::pipeline::ExecOptions;
 use crate::coordinator::plan::Stage;

@@ -22,8 +22,6 @@ use std::io::{BufRead, BufReader, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::coordinator::pipeline::ExecOptions;
@@ -31,6 +29,8 @@ use crate::error::{Error, Result};
 use crate::serve::executor::{Executor, DEFAULT_CACHE_CAPACITY};
 use crate::serve::protocol::{error_response, execute_request, parse_request, JobRequest, Request};
 use crate::serve::queue::JobQueue;
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::{thread, Arc, Condvar, Mutex};
 
 /// Default pending-job admission depth.
 pub const DEFAULT_QUEUE_DEPTH: usize = 16;
@@ -61,27 +61,36 @@ impl ServeOptions {
 }
 
 /// One-shot rendezvous for a job's response line.
-struct ResponseSlot {
+///
+/// Public so `tests/model_concurrency.rs` can drive the dispatcher ↔
+/// connection hand-off protocol under the model scheduler.
+pub struct ResponseSlot {
     line: Mutex<Option<String>>,
     ready: Condvar,
 }
 
+impl Default for ResponseSlot {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl ResponseSlot {
-    fn new() -> Self {
+    pub fn new() -> Self {
         Self {
             line: Mutex::new(None),
             ready: Condvar::new(),
         }
     }
 
-    fn fill(&self, line: String) {
+    pub fn fill(&self, line: String) {
         let mut slot = self.line.lock().unwrap_or_else(|p| p.into_inner());
         *slot = Some(line);
         drop(slot);
         self.ready.notify_all();
     }
 
-    fn wait(&self) -> String {
+    pub fn wait(&self) -> String {
         let mut slot = self.line.lock().unwrap_or_else(|p| p.into_inner());
         loop {
             if let Some(line) = slot.take() {
@@ -122,7 +131,7 @@ pub fn serve(opts: ServeOptions) -> Result<()> {
     let dispatcher = {
         let exec = Arc::clone(&exec);
         let queue = Arc::clone(&queue);
-        std::thread::Builder::new()
+        thread::Builder::new()
             .name("meltframe-dispatch".into())
             .spawn(move || {
                 while let Some(job) = queue.pop() {
@@ -175,7 +184,7 @@ pub fn serve(opts: ServeOptions) -> Result<()> {
         let socket = opts.socket.clone();
         // detached: a connection lingering past shutdown only ever sees
         // "queue closed" rejections and its own stream
-        let _ = std::thread::Builder::new()
+        let _ = thread::Builder::new()
             .name("meltframe-conn".into())
             .spawn(move || handle_connection(stream, &exec, &queue, &shutdown, &socket));
     }
@@ -223,7 +232,7 @@ fn handle_connection(
                     if UnixStream::connect(socket).is_ok() {
                         break;
                     }
-                    std::thread::sleep(Duration::from_millis(10));
+                    thread::sleep(Duration::from_millis(10));
                 }
                 return;
             }

@@ -18,7 +18,7 @@
 //! barriers), which is exactly the FIFO dispatch order the serving
 //! [`daemon`](crate::serve::daemon) wants.
 
-use std::sync::Mutex;
+use crate::sync::Mutex;
 
 use crate::coordinator::exec::Fleet;
 use crate::coordinator::metrics::PlanMetrics;

@@ -28,7 +28,7 @@ pub mod protocol;
 pub mod queue;
 
 pub use cache::{CacheStats, PlanCache};
-pub use daemon::{serve, ServeOptions, DEFAULT_QUEUE_DEPTH};
+pub use daemon::{serve, ResponseSlot, ServeOptions, DEFAULT_QUEUE_DEPTH};
 pub use executor::{Executor, DEFAULT_CACHE_CAPACITY};
 pub use pool::WorkerPool;
 pub use protocol::{execute_request, parse_request, JobRequest, Request};

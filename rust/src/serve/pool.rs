@@ -16,11 +16,11 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
 
 use crate::error::{Error, Result};
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::thread::JoinHandle;
+use crate::sync::{thread, Arc, Condvar, Mutex};
 
 type Task = Box<dyn FnOnce() + Send>;
 
@@ -49,7 +49,7 @@ impl WorkerPool {
         let handles = (0..threads)
             .map(|i| {
                 let shared = Arc::clone(&shared);
-                std::thread::Builder::new()
+                thread::Builder::new()
                     .name(format!("meltframe-pool-{i}"))
                     .spawn(move || worker_loop(&shared))
                     .expect("spawn pool worker")
@@ -93,7 +93,7 @@ impl WorkerPool {
             done: Condvar,
         }
         impl<T> Latch<T> {
-            fn wait_for(&self, count: usize) -> std::sync::MutexGuard<'_, (Vec<Option<Result<T>>>, usize)> {
+            fn wait_for(&self, count: usize) -> crate::sync::MutexGuard<'_, (Vec<Option<Result<T>>>, usize)> {
                 let mut guard = self.slots.lock().unwrap_or_else(|p| p.into_inner());
                 while guard.1 < count {
                     guard = self.done.wait(guard).unwrap_or_else(|p| p.into_inner());

@@ -22,7 +22,7 @@
 //! kernel into the pipeline (the fault-injection layer's pattern), used
 //! by the smoke tests to prove a poisoned job fails alone.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::bench_harness::JsonReport;
 use crate::config::json::JsonValue;

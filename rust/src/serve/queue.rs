@@ -9,7 +9,8 @@
 //! admitted jobs still run, new pushes are refused.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+
+use crate::sync::{Condvar, Mutex};
 
 use crate::error::{Error, Result};
 

@@ -1,0 +1,1369 @@
+//! Deterministic-interleaving model checker behind the [`crate::sync`]
+//! facade (a "shuttle-lite").
+//!
+//! # How it works
+//!
+//! [`explore`] runs a closure many times. Each run spawns **real OS
+//! threads**, but a per-run token scheduler serializes them: only the
+//! thread holding the token executes, and every instrumented operation —
+//! lock acquire/release, condvar wait/notify, barrier, atomic access,
+//! spawn, join, sleep — is a *yield point* where the scheduler picks
+//! which thread runs next. The sequence of picks is either drawn from a
+//! seeded [`SplitMix64`] stream (random exploration) or replayed from a
+//! choice prefix (bounded exhaustive DFS), so a failing schedule is
+//! reproducible bit-for-bit from its seed or prefix.
+//!
+//! Detected failures:
+//! - **deadlock** — no thread is runnable and none is in a timed wait;
+//! - **lost wakeup** — the only way to make progress is to deliver a
+//!   `wait_timeout` timeout (with [`Config::fail_on_timeout_wakeup`],
+//!   the default, this fails immediately: a correct protocol notifies
+//!   its waiters and never leans on the watchdog timeout);
+//! - **livelock** — timeout deliveries or choice points exceed their
+//!   budgets;
+//! - **panic** — any model thread (or the root closure) panics with a
+//!   real panic (scheduler-initiated [`ModelAbort`] teardowns are not
+//!   failures).
+//!
+//! # Soundness layering
+//!
+//! Every model primitive wraps the *real* `std::sync` primitive for its
+//! data (`Mutex<T>` holds a `std::sync::Mutex<T>`; the model-level state
+//! only decides *scheduling*). Even if the scheduler were buggy, user
+//! data stays behind a genuine lock — a checker bug cannot corrupt the
+//! checked program, and std's poisoning semantics carry over unchanged.
+//!
+//! Outside an active [`explore`] run (no scheduler in thread-local
+//! context) every type falls back to plain `std::sync` behaviour, so the
+//! whole test suite still passes under `--features model`.
+
+use std::any::Any;
+use std::cell::RefCell;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashSet;
+use std::hash::{Hash, Hasher};
+use std::ops::{Deref, DerefMut};
+use std::panic::{catch_unwind, panic_any, AssertUnwindSafe};
+use std::sync::{
+    Arc, Barrier as StdBarrier, Condvar as StdCondvar, LockResult, Mutex as StdMutex,
+    MutexGuard as StdMutexGuard, Once, PoisonError,
+};
+use std::time::Duration;
+
+use crate::testing::SplitMix64;
+
+/// `SchedState::current` value meaning "no thread holds the token".
+const NO_THREAD: usize = usize::MAX;
+
+/// Panic payload used to unwind model threads when a run has already
+/// failed. Never reported as a failure itself.
+struct ModelAbort;
+
+fn is_model_abort(payload: &(dyn Any + Send)) -> bool {
+    payload.downcast_ref::<ModelAbort>().is_some()
+}
+
+fn payload_text(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-thread context
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+struct Ctx {
+    sched: Arc<Sched>,
+    tid: usize,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = RefCell::new(None);
+}
+
+fn cur_ctx() -> Option<Ctx> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+fn set_ctx(ctx: Option<Ctx>) {
+    CTX.with(|c| *c.borrow_mut() = ctx);
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum BlockKind {
+    Mutex,
+    Cond { timed: bool },
+    Barrier,
+    Join(usize),
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Status {
+    Runnable,
+    Blocked(BlockKind),
+    Finished,
+}
+
+struct ThreadRec {
+    status: Status,
+    name: String,
+}
+
+/// One recorded branch point: `chosen` out of `options` (> 1) candidates.
+#[derive(Clone, Copy, Debug, Hash)]
+struct Choice {
+    options: usize,
+    chosen: usize,
+}
+
+enum Mode {
+    Random(SplitMix64),
+    Replay { prefix: Vec<usize>, cursor: usize },
+}
+
+struct SchedState {
+    threads: Vec<ThreadRec>,
+    /// tid holding the execution token, or `NO_THREAD`.
+    current: usize,
+    mode: Mode,
+    trace: Vec<Choice>,
+    steps: usize,
+    timeout_wakeups: usize,
+    failure: Option<String>,
+    handles: Vec<Option<std::thread::JoinHandle<()>>>,
+}
+
+struct Sched {
+    state: StdMutex<SchedState>,
+    cv: StdCondvar,
+    cfg: Config,
+}
+
+impl Sched {
+    fn new(cfg: Config, mode: Mode) -> Self {
+        Self {
+            state: StdMutex::new(SchedState {
+                threads: Vec::new(),
+                current: NO_THREAD,
+                mode,
+                trace: Vec::new(),
+                steps: 0,
+                timeout_wakeups: 0,
+                failure: None,
+                handles: Vec::new(),
+            }),
+            cv: StdCondvar::new(),
+            cfg,
+        }
+    }
+
+    fn lock_state(&self) -> StdMutexGuard<'_, SchedState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn register(&self, name: String) -> usize {
+        let mut st = self.lock_state();
+        let tid = st.threads.len();
+        st.threads.push(ThreadRec {
+            status: Status::Runnable,
+            name,
+        });
+        st.handles.push(None);
+        if tid == 0 {
+            st.current = 0;
+        }
+        tid
+    }
+
+    fn store_handle(&self, tid: usize, h: std::thread::JoinHandle<()>) {
+        self.lock_state().handles[tid] = Some(h);
+    }
+
+    fn take_handles(&self) -> Vec<std::thread::JoinHandle<()>> {
+        self.lock_state()
+            .handles
+            .iter_mut()
+            .filter_map(|h| h.take())
+            .collect()
+    }
+
+    fn failed(&self) -> bool {
+        self.lock_state().failure.is_some()
+    }
+
+    fn fail_locked(st: &mut SchedState, msg: String) {
+        if st.failure.is_none() {
+            st.failure = Some(msg);
+        }
+        st.current = NO_THREAD;
+    }
+
+    fn record_panic(&self, tid: usize, msg: String) {
+        let mut st = self.lock_state();
+        let name = st.threads[tid].name.clone();
+        Self::fail_locked(&mut st, format!("thread '{name}' panicked: {msg}"));
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Tear down the calling thread of a failed run. Unwinds with
+    /// [`ModelAbort`] — unless the thread is *already* unwinding and
+    /// stuck in a blocking wait, in which case there is no way to both
+    /// make progress and stay alive (the peers it waits on are being
+    /// aborted); print the failure and abort the process loudly rather
+    /// than hang CI or trip an undiagnosable double panic.
+    fn abort_thread(&self, msg: Option<String>) -> ! {
+        if std::thread::panicking() {
+            eprintln!(
+                "meltframe model checker: fatal: run failed while a thread was unwinding \
+                 through a blocking wait: {}",
+                msg.unwrap_or_else(|| "<no message>".into())
+            );
+            std::process::abort();
+        }
+        panic_any(ModelAbort)
+    }
+
+    /// Block until this thread holds the execution token (thread start).
+    fn acquire_token(&self, tid: usize) {
+        let mut st = self.lock_state();
+        loop {
+            if st.failure.is_some() {
+                drop(st);
+                panic_any(ModelAbort);
+            }
+            if st.current == tid {
+                return;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Non-blocking schedule point: hand the token to a scheduler-chosen
+    /// runnable thread (possibly ourselves) and wait to get it back.
+    /// During an unwind of a failed run this degrades to a no-op — the
+    /// caller can safely keep unwinding without the token.
+    fn yield_point(&self, tid: usize) {
+        let mut st = self.lock_state();
+        if st.failure.is_some() {
+            drop(st);
+            if std::thread::panicking() {
+                return;
+            }
+            panic_any(ModelAbort);
+        }
+        self.pick_next(&mut st);
+        loop {
+            if st.failure.is_some() {
+                drop(st);
+                if std::thread::panicking() {
+                    return;
+                }
+                panic_any(ModelAbort);
+            }
+            if st.current == tid {
+                return;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Blocking schedule point: mark this thread blocked on `kind`, give
+    /// the token away, and return once a peer has made us runnable and
+    /// the scheduler picked us again. Diverges if the run fails.
+    fn block(&self, tid: usize, kind: BlockKind) {
+        let mut st = self.lock_state();
+        if st.failure.is_some() {
+            let msg = st.failure.clone();
+            drop(st);
+            self.abort_thread(msg);
+        }
+        st.threads[tid].status = Status::Blocked(kind);
+        self.pick_next(&mut st);
+        loop {
+            if st.failure.is_some() {
+                let msg = st.failure.clone();
+                drop(st);
+                self.abort_thread(msg);
+            }
+            if st.current == tid {
+                return;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Wake a blocked thread (it still runs only when picked).
+    fn make_runnable(&self, tid: usize) {
+        let mut st = self.lock_state();
+        if matches!(st.threads[tid].status, Status::Blocked(_)) {
+            st.threads[tid].status = Status::Runnable;
+        }
+    }
+
+    /// Mark `tid` finished, wake its joiners, pass the token on.
+    fn finish(&self, tid: usize) {
+        let mut st = self.lock_state();
+        st.threads[tid].status = Status::Finished;
+        for i in 0..st.threads.len() {
+            if let Status::Blocked(BlockKind::Join(target)) = st.threads[i].status {
+                if target == tid {
+                    st.threads[i].status = Status::Runnable;
+                }
+            }
+        }
+        if st.failure.is_none() {
+            self.pick_next(&mut st);
+        } else {
+            st.current = NO_THREAD;
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Wait (model-level) for `target` to finish.
+    fn join_wait(&self, me: usize, target: usize) {
+        self.yield_point(me);
+        loop {
+            {
+                let st = self.lock_state();
+                if st.failure.is_some() {
+                    drop(st);
+                    if std::thread::panicking() {
+                        // joining an already-aborting thread while
+                        // unwinding: the real join in `explore` reaps it
+                        return;
+                    }
+                    panic_any(ModelAbort);
+                }
+                if matches!(st.threads[target].status, Status::Finished) {
+                    return;
+                }
+            }
+            self.block(me, BlockKind::Join(target));
+        }
+    }
+
+    /// Record a branch point with `n` candidates and return the pick.
+    fn choose(&self, st: &mut SchedState, n: usize) -> usize {
+        st.steps += 1;
+        if st.steps > self.cfg.max_steps {
+            Self::fail_locked(
+                st,
+                format!(
+                    "schedule budget exceeded ({} choice points) — livelock?",
+                    self.cfg.max_steps
+                ),
+            );
+            self.cv.notify_all();
+            return 0;
+        }
+        if n <= 1 {
+            return 0;
+        }
+        let pick = match &mut st.mode {
+            Mode::Random(rng) => rng.below(n),
+            Mode::Replay { prefix, cursor } => {
+                let p = if *cursor < prefix.len() {
+                    prefix[*cursor].min(n - 1)
+                } else {
+                    0
+                };
+                *cursor += 1;
+                p
+            }
+        };
+        st.trace.push(Choice {
+            options: n,
+            chosen: pick,
+        });
+        pick
+    }
+
+    /// Branch point driven from outside the scheduler lock (e.g. which
+    /// condvar waiter `notify_one` wakes).
+    fn choose_among(&self, n: usize) -> usize {
+        if n <= 1 {
+            return 0;
+        }
+        let mut st = self.lock_state();
+        if st.failure.is_some() {
+            return 0;
+        }
+        self.choose(&mut st, n)
+    }
+
+    /// Core scheduling decision: hand the token to a runnable thread, or
+    /// deliver a timeout, or declare deadlock.
+    fn pick_next(&self, st: &mut SchedState) {
+        if st.failure.is_some() {
+            st.current = NO_THREAD;
+            self.cv.notify_all();
+            return;
+        }
+        let runnable: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| matches!(t.status, Status::Runnable))
+            .map(|(i, _)| i)
+            .collect();
+        if !runnable.is_empty() {
+            let idx = self.choose(st, runnable.len());
+            st.current = runnable[idx];
+            self.cv.notify_all();
+            return;
+        }
+        if st
+            .threads
+            .iter()
+            .all(|t| matches!(t.status, Status::Finished))
+        {
+            st.current = NO_THREAD;
+            self.cv.notify_all();
+            return;
+        }
+        let timed: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| {
+                matches!(t.status, Status::Blocked(BlockKind::Cond { timed: true }))
+            })
+            .map(|(i, _)| i)
+            .collect();
+        if timed.is_empty() {
+            let dump = Self::dump(st);
+            Self::fail_locked(
+                st,
+                format!("deadlock: no runnable thread and no timed waiter\n{dump}"),
+            );
+            self.cv.notify_all();
+            return;
+        }
+        // The only possible progress is waking a wait_timeout waiter by
+        // timeout — i.e. somebody missed a notify.
+        st.timeout_wakeups += 1;
+        if self.cfg.fail_on_timeout_wakeup {
+            let dump = Self::dump(st);
+            Self::fail_locked(
+                st,
+                format!(
+                    "lost wakeup: progress is only possible by delivering a wait_timeout \
+                     timeout\n{dump}"
+                ),
+            );
+            self.cv.notify_all();
+            return;
+        }
+        if st.timeout_wakeups > self.cfg.max_timeout_wakeups {
+            Self::fail_locked(
+                st,
+                format!(
+                    "livelock: exceeded {} timeout wakeups without other progress",
+                    self.cfg.max_timeout_wakeups
+                ),
+            );
+            self.cv.notify_all();
+            return;
+        }
+        let idx = self.choose(st, timed.len());
+        let t = timed[idx];
+        st.threads[t].status = Status::Runnable;
+        st.current = t;
+        self.cv.notify_all();
+    }
+
+    fn dump(st: &SchedState) -> String {
+        st.threads
+            .iter()
+            .enumerate()
+            .map(|(i, t)| format!("  [{i}] {}: {:?}", t.name, t.status))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    fn outcome(&self) -> (Vec<Choice>, Option<String>, usize) {
+        let st = self.lock_state();
+        (st.trace.clone(), st.failure.clone(), st.timeout_wakeups)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mutex
+// ---------------------------------------------------------------------------
+
+struct MState {
+    held: bool,
+    waiters: Vec<usize>,
+}
+
+/// Model-aware mutex. Data always lives behind a real `std::sync::Mutex`
+/// (see module docs on soundness layering); the model state only decides
+/// who gets scheduled.
+pub struct Mutex<T> {
+    inner: StdMutex<T>,
+    mstate: StdMutex<MState>,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(value: T) -> Self {
+        Self {
+            inner: StdMutex::new(value),
+            mstate: StdMutex::new(MState {
+                held: false,
+                waiters: Vec::new(),
+            }),
+        }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match cur_ctx() {
+            Some(ctx) => self.lock_model(&ctx),
+            None => self.lock_plain(),
+        }
+    }
+
+    /// Plain acquisition on the real lock; used outside a model run and
+    /// as the escape hatch while unwinding out of a failed run.
+    fn lock_plain(&self) -> LockResult<MutexGuard<'_, T>> {
+        wrap_guard(self, self.inner.lock(), false)
+    }
+
+    fn lock_model(&self, ctx: &Ctx) -> LockResult<MutexGuard<'_, T>> {
+        if ctx.sched.failed() && std::thread::panicking() {
+            // failed-run teardown: model bookkeeping is moot, the real
+            // lock below keeps data sound and other unwinders release it
+            return self.lock_plain();
+        }
+        ctx.sched.yield_point(ctx.tid);
+        self.raw_acquire(ctx);
+        wrap_guard(self, self.inner.lock(), true)
+    }
+
+    /// Model-level acquisition loop (diverges if the run fails mid-wait).
+    fn raw_acquire(&self, ctx: &Ctx) {
+        loop {
+            let mut ms = self.mstate.lock().unwrap_or_else(|p| p.into_inner());
+            if !ms.held {
+                ms.held = true;
+                return;
+            }
+            ms.waiters.push(ctx.tid);
+            drop(ms);
+            ctx.sched.block(ctx.tid, BlockKind::Mutex);
+        }
+    }
+
+    /// Model-level release: every waiter re-contends (mirrors the real
+    /// world, where any waiter may win the lock next).
+    fn model_release(&self, ctx: &Ctx) {
+        let mut ms = self.mstate.lock().unwrap_or_else(|p| p.into_inner());
+        ms.held = false;
+        let waiters: Vec<usize> = ms.waiters.drain(..).collect();
+        drop(ms);
+        for w in waiters {
+            ctx.sched.make_runnable(w);
+        }
+    }
+}
+
+fn wrap_guard<'a, T>(
+    lock: &'a Mutex<T>,
+    res: LockResult<StdMutexGuard<'a, T>>,
+    model: bool,
+) -> LockResult<MutexGuard<'a, T>> {
+    match res {
+        Ok(g) => Ok(MutexGuard {
+            lock,
+            inner: Some(g),
+            model,
+        }),
+        Err(p) => Err(PoisonError::new(MutexGuard {
+            lock,
+            inner: Some(p.into_inner()),
+            model,
+        })),
+    }
+}
+
+/// Guard over the real `std::sync::MutexGuard`, plus model bookkeeping.
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+    inner: Option<StdMutexGuard<'a, T>>,
+    /// whether the model-level `held` flag is ours to clear
+    model: bool,
+}
+
+impl<'a, T> MutexGuard<'a, T> {
+    /// Condvar-wait hand-off: release the real lock *and* the model
+    /// state, but without a schedule point — the release-and-block pair
+    /// in [`Condvar::wait_model`] must be atomic with respect to the
+    /// scheduler, exactly like a real condvar's release-and-sleep.
+    fn dismantle(mut self) -> (&'a Mutex<T>, bool) {
+        let lock = self.lock;
+        let model = self.model;
+        let _ = self.inner.take();
+        if model {
+            if let Some(ctx) = cur_ctx() {
+                lock.model_release(&ctx);
+            }
+        }
+        std::mem::forget(self);
+        (lock, model)
+    }
+
+    /// Fallback-wait hand-off: surrender the raw std guard (no model
+    /// bookkeeping; only used when no scheduler is active).
+    fn into_raw(mut self) -> (&'a Mutex<T>, StdMutexGuard<'a, T>, bool) {
+        let lock = self.lock;
+        let model = self.model;
+        let inner = self
+            .inner
+            .take()
+            .expect("guard invariant: inner std guard present until drop/dismantle");
+        std::mem::forget(self);
+        (lock, inner, model)
+    }
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner
+            .as_ref()
+            .expect("guard invariant: inner std guard present until drop/dismantle")
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner
+            .as_mut()
+            .expect("guard invariant: inner std guard present until drop/dismantle")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // release the real lock first: even mid-unwind, data is consistent
+        let _ = self.inner.take();
+        if self.model {
+            if let Some(ctx) = cur_ctx() {
+                self.lock.model_release(&ctx);
+                // unlock is a schedule point — but not while unwinding,
+                // where we must not risk a second panic out of a Drop
+                if !std::thread::panicking() {
+                    ctx.sched.yield_point(ctx.tid);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Condvar
+// ---------------------------------------------------------------------------
+
+/// Result of a `wait_timeout`. Mirrors `std::sync::WaitTimeoutResult`,
+/// which has no public constructor the model could use.
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
+/// Model-aware condition variable.
+///
+/// Under the scheduler, waiters park in the model (the real `Condvar` is
+/// untouched) and `timed_out` is true iff the waiter was woken by the
+/// scheduler delivering a timeout rather than by a notify — detected by
+/// the waiter still sitting in the waiter list when it resumes.
+pub struct Condvar {
+    std: StdCondvar,
+    waiters: StdMutex<Vec<usize>>,
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Condvar {
+    pub fn new() -> Self {
+        Self {
+            std: StdCondvar::new(),
+            waiters: StdMutex::new(Vec::new()),
+        }
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let (res, _timed_out) = match cur_ctx() {
+            Some(ctx) => self.wait_model(&ctx, guard, false),
+            None => self.wait_plain(guard, None),
+        };
+        res
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        let (res, timed_out) = match cur_ctx() {
+            Some(ctx) => self.wait_model(&ctx, guard, true),
+            None => self.wait_plain(guard, Some(dur)),
+        };
+        match res {
+            Ok(g) => Ok((g, WaitTimeoutResult(timed_out))),
+            Err(p) => Err(PoisonError::new((p.into_inner(), WaitTimeoutResult(timed_out)))),
+        }
+    }
+
+    fn wait_model<'a, T>(
+        &self,
+        ctx: &Ctx,
+        guard: MutexGuard<'a, T>,
+        timed: bool,
+    ) -> (LockResult<MutexGuard<'a, T>>, bool) {
+        if ctx.sched.failed() && std::thread::panicking() {
+            // An unwinding thread in a failed run cannot wait on peers
+            // that are themselves being torn down; there is no schedule
+            // that satisfies its predicate. Fail loudly (see abort_thread).
+            let msg = ctx.sched.lock_state().failure.clone();
+            ctx.sched.abort_thread(msg);
+        }
+        let (lock, was_model) = guard.dismantle();
+        if !was_model {
+            // guard came from the plain fallback; nothing model-level to
+            // wait on — reacquire and let the caller re-check its predicate
+            return (lock.lock_plain(), true);
+        }
+        self.waiters
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(ctx.tid);
+        ctx.sched.block(ctx.tid, BlockKind::Cond { timed });
+        let timed_out = {
+            let mut w = self.waiters.lock().unwrap_or_else(|p| p.into_inner());
+            match w.iter().position(|&t| t == ctx.tid) {
+                // still registered: nobody notified us — the scheduler
+                // delivered a timeout
+                Some(i) => {
+                    w.remove(i);
+                    true
+                }
+                None => false,
+            }
+        };
+        ctx.sched.yield_point(ctx.tid);
+        lock.raw_acquire(ctx);
+        (wrap_guard(lock, lock.inner.lock(), true), timed_out)
+    }
+
+    fn wait_plain<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        timeout: Option<Duration>,
+    ) -> (LockResult<MutexGuard<'a, T>>, bool) {
+        let (lock, inner, model) = guard.into_raw();
+        match timeout {
+            None => match self.std.wait(inner) {
+                Ok(g) => (Ok(rebuild_guard(lock, g, model)), false),
+                Err(p) => (
+                    Err(PoisonError::new(rebuild_guard(lock, p.into_inner(), model))),
+                    false,
+                ),
+            },
+            Some(dur) => match self.std.wait_timeout(inner, dur) {
+                Ok((g, r)) => (Ok(rebuild_guard(lock, g, model)), r.timed_out()),
+                Err(p) => {
+                    let (g, r) = p.into_inner();
+                    (
+                        Err(PoisonError::new(rebuild_guard(lock, g, model))),
+                        r.timed_out(),
+                    )
+                }
+            },
+        }
+    }
+
+    pub fn notify_one(&self) {
+        match cur_ctx() {
+            Some(ctx) => {
+                let woken = {
+                    let mut w = self.waiters.lock().unwrap_or_else(|p| p.into_inner());
+                    if w.is_empty() {
+                        None
+                    } else {
+                        // which waiter a notify wakes is itself a branch
+                        // point real condvars leave unspecified
+                        let i = ctx.sched.choose_among(w.len());
+                        Some(w.remove(i))
+                    }
+                };
+                if let Some(t) = woken {
+                    ctx.sched.make_runnable(t);
+                }
+                if !std::thread::panicking() {
+                    ctx.sched.yield_point(ctx.tid);
+                }
+            }
+            None => self.std.notify_one(),
+        }
+    }
+
+    pub fn notify_all(&self) {
+        match cur_ctx() {
+            Some(ctx) => {
+                let woken: Vec<usize> = self
+                    .waiters
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner())
+                    .drain(..)
+                    .collect();
+                for t in woken {
+                    ctx.sched.make_runnable(t);
+                }
+                if !std::thread::panicking() {
+                    ctx.sched.yield_point(ctx.tid);
+                }
+            }
+            None => self.std.notify_all(),
+        }
+    }
+}
+
+fn rebuild_guard<'a, T>(
+    lock: &'a Mutex<T>,
+    inner: StdMutexGuard<'a, T>,
+    model: bool,
+) -> MutexGuard<'a, T> {
+    MutexGuard {
+        lock,
+        inner: Some(inner),
+        model,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Barrier
+// ---------------------------------------------------------------------------
+
+/// Result of a `Barrier::wait`. Mirrors `std::sync::BarrierWaitResult`,
+/// which has no public constructor the model could use.
+pub struct BarrierWaitResult(bool);
+
+impl BarrierWaitResult {
+    pub fn is_leader(&self) -> bool {
+        self.0
+    }
+}
+
+/// Model-aware barrier.
+pub struct Barrier {
+    std: StdBarrier,
+    n: usize,
+    arrived: StdMutex<Vec<usize>>,
+}
+
+impl Barrier {
+    pub fn new(n: usize) -> Self {
+        Self {
+            std: StdBarrier::new(n),
+            n: n.max(1),
+            arrived: StdMutex::new(Vec::new()),
+        }
+    }
+
+    pub fn wait(&self) -> BarrierWaitResult {
+        match cur_ctx() {
+            None => BarrierWaitResult(self.std.wait().is_leader()),
+            Some(ctx) => {
+                ctx.sched.yield_point(ctx.tid);
+                let mut a = self.arrived.lock().unwrap_or_else(|p| p.into_inner());
+                a.push(ctx.tid);
+                if a.len() >= self.n {
+                    let others: Vec<usize> =
+                        a.drain(..).filter(|&t| t != ctx.tid).collect();
+                    drop(a);
+                    for t in others {
+                        ctx.sched.make_runnable(t);
+                    }
+                    ctx.sched.yield_point(ctx.tid);
+                    BarrierWaitResult(true)
+                } else {
+                    drop(a);
+                    ctx.sched.block(ctx.tid, BlockKind::Barrier);
+                    BarrierWaitResult(false)
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Atomics
+// ---------------------------------------------------------------------------
+
+/// Model-aware atomics: every access is a schedule point; the value
+/// itself lives in a real std atomic.
+pub mod atomic {
+    pub use std::sync::atomic::Ordering;
+    use std::sync::atomic::{AtomicBool as StdAtomicBool, AtomicUsize as StdAtomicUsize};
+
+    fn interleave() {
+        if let Some(ctx) = super::cur_ctx() {
+            // yield_point degrades to a no-op when the run has failed and
+            // this thread is unwinding, so atomics stay safe in teardown
+            ctx.sched.yield_point(ctx.tid);
+        }
+    }
+
+    pub struct AtomicBool(StdAtomicBool);
+
+    impl AtomicBool {
+        pub const fn new(v: bool) -> Self {
+            Self(StdAtomicBool::new(v))
+        }
+        pub fn load(&self, order: Ordering) -> bool {
+            interleave();
+            self.0.load(order)
+        }
+        pub fn store(&self, v: bool, order: Ordering) {
+            interleave();
+            self.0.store(v, order);
+        }
+        pub fn swap(&self, v: bool, order: Ordering) -> bool {
+            interleave();
+            self.0.swap(v, order)
+        }
+    }
+
+    pub struct AtomicUsize(StdAtomicUsize);
+
+    impl AtomicUsize {
+        pub const fn new(v: usize) -> Self {
+            Self(StdAtomicUsize::new(v))
+        }
+        pub fn load(&self, order: Ordering) -> usize {
+            interleave();
+            self.0.load(order)
+        }
+        pub fn store(&self, v: usize, order: Ordering) {
+            interleave();
+            self.0.store(v, order);
+        }
+        pub fn swap(&self, v: usize, order: Ordering) -> usize {
+            interleave();
+            self.0.swap(v, order)
+        }
+        pub fn fetch_add(&self, v: usize, order: Ordering) -> usize {
+            interleave();
+            self.0.fetch_add(v, order)
+        }
+        pub fn fetch_sub(&self, v: usize, order: Ordering) -> usize {
+            interleave();
+            self.0.fetch_sub(v, order)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threads
+// ---------------------------------------------------------------------------
+
+/// Model-aware thread spawning. Inside a run, spawned threads register
+/// with the scheduler and execute only when they hold the token; outside
+/// a run this delegates to `std::thread`.
+pub mod thread {
+    pub use std::thread::{current, panicking, Result, ThreadId};
+
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::{Arc, Mutex as StdMutex};
+
+    pub struct Builder {
+        name: Option<String>,
+    }
+
+    impl Default for Builder {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    impl Builder {
+        pub fn new() -> Self {
+            Self { name: None }
+        }
+
+        pub fn name(mut self, name: String) -> Self {
+            self.name = Some(name);
+            self
+        }
+
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            match super::cur_ctx() {
+                None => {
+                    let mut b = std::thread::Builder::new();
+                    if let Some(n) = self.name {
+                        b = b.name(n);
+                    }
+                    Ok(JoinHandle(Imp::Std(b.spawn(f)?)))
+                }
+                Some(ctx) => Ok(spawn_model(&ctx, self.name, f)),
+            }
+        }
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        Builder::new().spawn(f).expect("failed to spawn thread")
+    }
+
+    /// Under the model, time does not pass: a sleep is just a schedule
+    /// point (protocols must not depend on wall-clock delays).
+    pub fn sleep(dur: std::time::Duration) {
+        match super::cur_ctx() {
+            Some(ctx) => {
+                if !(ctx.sched.failed() && std::thread::panicking()) {
+                    ctx.sched.yield_point(ctx.tid);
+                }
+            }
+            None => std::thread::sleep(dur),
+        }
+    }
+
+    enum Imp<T> {
+        Std(std::thread::JoinHandle<T>),
+        Model {
+            sched: Arc<super::Sched>,
+            tid: usize,
+            slot: Arc<StdMutex<Option<Result<T>>>>,
+        },
+    }
+
+    pub struct JoinHandle<T>(Imp<T>);
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> Result<T> {
+            match self.0 {
+                Imp::Std(h) => h.join(),
+                Imp::Model { sched, tid, slot } => {
+                    if let Some(ctx) = super::cur_ctx() {
+                        sched.join_wait(ctx.tid, tid);
+                    }
+                    loop {
+                        if let Some(r) =
+                            slot.lock().unwrap_or_else(|p| p.into_inner()).take()
+                        {
+                            return r;
+                        }
+                        // only reachable when joining from outside the
+                        // run (the wrapper always fills the slot before
+                        // finishing) — poll briefly rather than hang
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                }
+            }
+        }
+    }
+
+    fn spawn_model<F, T>(ctx: &super::Ctx, name: Option<String>, f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let display = name.clone().unwrap_or_else(|| "model-thread".into());
+        let sched = Arc::clone(&ctx.sched);
+        let tid = sched.register(display);
+        let slot: Arc<StdMutex<Option<Result<T>>>> = Arc::new(StdMutex::new(None));
+        let (sched2, slot2) = (Arc::clone(&sched), Arc::clone(&slot));
+        let mut b = std::thread::Builder::new();
+        if let Some(n) = name {
+            b = b.name(n);
+        }
+        let handle = b
+            .spawn(move || {
+                super::set_ctx(Some(super::Ctx {
+                    sched: Arc::clone(&sched2),
+                    tid,
+                }));
+                let out = catch_unwind(AssertUnwindSafe(|| {
+                    sched2.acquire_token(tid);
+                    f()
+                }));
+                if let Err(p) = &out {
+                    if !super::is_model_abort(p.as_ref()) {
+                        sched2.record_panic(tid, super::payload_text(p.as_ref()));
+                    }
+                }
+                *slot2.lock().unwrap_or_else(|p| p.into_inner()) = Some(out);
+                sched2.finish(tid);
+                super::set_ctx(None);
+            })
+            .expect("failed to spawn model checker thread");
+        sched.store_handle(tid, handle);
+        // registration is a branch point: the child may run first, or not
+        sched.yield_point(ctx.tid);
+        JoinHandle(Imp::Model { sched, tid, slot })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exploration harness
+// ---------------------------------------------------------------------------
+
+/// Exploration parameters. Build with [`Config::random`] or
+/// [`Config::exhaustive`].
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// random-mode runs
+    pub runs: usize,
+    /// seed for the per-run schedule RNG stream
+    pub seed: u64,
+    /// depth-first replay enumeration instead of random sampling
+    pub exhaustive: bool,
+    /// run budget for exhaustive mode
+    pub max_runs: usize,
+    /// per-run branch-point budget (livelock backstop)
+    pub max_steps: usize,
+    /// treat any timeout delivery as a lost wakeup (default: true)
+    pub fail_on_timeout_wakeup: bool,
+    /// per-run timeout-delivery budget when deliveries are allowed
+    pub max_timeout_wakeups: usize,
+}
+
+impl Config {
+    /// Seeded pseudo-random exploration over `runs` schedules.
+    pub fn random(runs: usize, seed: u64) -> Self {
+        Self {
+            runs,
+            seed,
+            exhaustive: false,
+            max_runs: runs,
+            max_steps: 50_000,
+            fail_on_timeout_wakeup: true,
+            max_timeout_wakeups: 64,
+        }
+    }
+
+    /// Bounded exhaustive DFS over at most `max_runs` schedules; the
+    /// report's `complete` flag says whether the tree was exhausted.
+    pub fn exhaustive(max_runs: usize) -> Self {
+        Self {
+            runs: 0,
+            seed: 0,
+            exhaustive: true,
+            max_runs,
+            max_steps: 50_000,
+            fail_on_timeout_wakeup: true,
+            max_timeout_wakeups: 64,
+        }
+    }
+
+    /// Permit up to `max` timeout deliveries per run instead of failing
+    /// on the first (for protocols that legitimately poll).
+    pub fn allow_timeout_wakeups(mut self, max: usize) -> Self {
+        self.fail_on_timeout_wakeup = false;
+        self.max_timeout_wakeups = max;
+        self
+    }
+}
+
+/// What [`explore`] found.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// schedules actually executed
+    pub runs: usize,
+    /// distinct choice traces seen (hash-deduplicated)
+    pub distinct_schedules: usize,
+    /// total timeout deliveries across all runs
+    pub timeout_wakeups: usize,
+    /// failure descriptions (exploration stops at the first)
+    pub failures: Vec<String>,
+    /// exhaustive mode: the whole schedule tree fit in the budget
+    pub complete: bool,
+}
+
+impl Report {
+    pub fn failed(&self) -> bool {
+        !self.failures.is_empty()
+    }
+
+    /// Panic (failing the surrounding test) if any schedule failed.
+    pub fn assert_ok(&self) {
+        assert!(
+            self.failures.is_empty(),
+            "model checker found failures after {} runs ({} distinct schedules):\n{}",
+            self.runs,
+            self.distinct_schedules,
+            self.failures.join("\n---\n")
+        );
+    }
+
+    /// Panic unless a failure was found (for seeded-bug tests proving
+    /// the checker catches real defects). Returns the failure text.
+    pub fn assert_failed(&self) -> &str {
+        assert!(
+            !self.failures.is_empty(),
+            "expected the model checker to find a failure, but {} runs \
+             ({} distinct schedules) all passed",
+            self.runs,
+            self.distinct_schedules
+        );
+        &self.failures[0]
+    }
+}
+
+/// Run `f` under the model scheduler across many schedules.
+///
+/// `f` must set up all shared state itself each call (each run is an
+/// independent universe). Random mode samples `cfg.runs` schedules from
+/// `cfg.seed`; exhaustive mode enumerates the schedule tree depth-first
+/// until done or `cfg.max_runs`. Exploration stops at the first failing
+/// schedule, whose seed/prefix is embedded in the failure message.
+pub fn explore<F: Fn()>(cfg: Config, f: F) -> Report {
+    install_panic_hook();
+    let mut report = Report {
+        runs: 0,
+        distinct_schedules: 0,
+        timeout_wakeups: 0,
+        failures: Vec::new(),
+        complete: false,
+    };
+    let mut seen: HashSet<u64> = HashSet::new();
+    if cfg.exhaustive {
+        let mut prefix = Some(Vec::new());
+        while let Some(p) = prefix.take() {
+            if report.runs >= cfg.max_runs {
+                break;
+            }
+            let (trace, failure, tw) = run_once(
+                &cfg,
+                Mode::Replay {
+                    prefix: p.clone(),
+                    cursor: 0,
+                },
+                &f,
+            );
+            report.runs += 1;
+            report.timeout_wakeups += tw;
+            seen.insert(trace_hash(&trace));
+            if let Some(msg) = failure {
+                report
+                    .failures
+                    .push(format!("run {} (dfs prefix {:?}): {}", report.runs, p, msg));
+                break;
+            }
+            prefix = next_prefix(&trace);
+            if prefix.is_none() {
+                report.complete = true;
+            }
+        }
+    } else {
+        let mut seeds = SplitMix64::new(cfg.seed);
+        for run in 0..cfg.runs {
+            let run_seed = seeds.next_u64();
+            let (trace, failure, tw) =
+                run_once(&cfg, Mode::Random(SplitMix64::new(run_seed)), &f);
+            report.runs += 1;
+            report.timeout_wakeups += tw;
+            seen.insert(trace_hash(&trace));
+            if let Some(msg) = failure {
+                report
+                    .failures
+                    .push(format!("run {run} (schedule seed {run_seed:#x}): {msg}"));
+                break;
+            }
+        }
+    }
+    report.distinct_schedules = seen.len();
+    report
+}
+
+fn run_once<F: Fn()>(cfg: &Config, mode: Mode, f: &F) -> (Vec<Choice>, Option<String>, usize) {
+    let sched = Arc::new(Sched::new(cfg.clone(), mode));
+    let root = sched.register("root".into());
+    debug_assert_eq!(root, 0);
+    set_ctx(Some(Ctx {
+        sched: Arc::clone(&sched),
+        tid: root,
+    }));
+    let out = catch_unwind(AssertUnwindSafe(|| f()));
+    if let Err(p) = &out {
+        if !is_model_abort(p.as_ref()) {
+            sched.record_panic(root, payload_text(p.as_ref()));
+        }
+    }
+    sched.finish(root);
+    set_ctx(None);
+    // reap every real thread the run spawned; on failure they unwind via
+    // ModelAbort, on success they have all finished already
+    for h in sched.take_handles() {
+        let _ = h.join();
+    }
+    sched.outcome()
+}
+
+/// Depth-first successor of a completed run's choice trace: bump the
+/// deepest branch point that still has an unexplored sibling, drop the
+/// suffix. `None` once the whole tree has been visited.
+fn next_prefix(trace: &[Choice]) -> Option<Vec<usize>> {
+    for i in (0..trace.len()).rev() {
+        if trace[i].chosen + 1 < trace[i].options {
+            let mut p: Vec<usize> = trace[..i].iter().map(|c| c.chosen).collect();
+            p.push(trace[i].chosen + 1);
+            return Some(p);
+        }
+    }
+    None
+}
+
+fn trace_hash(trace: &[Choice]) -> u64 {
+    let mut h = DefaultHasher::new();
+    for c in trace {
+        (c.options, c.chosen).hash(&mut h);
+    }
+    h.finish()
+}
+
+/// Suppress panic output from model threads (aborts and seeded-bug
+/// panics are expected and would flood test logs); panics outside a
+/// model context keep the default behaviour.
+fn install_panic_hook() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let in_model = CTX.with(|c| c.borrow().is_some());
+            if !in_model {
+                prev(info);
+            }
+        }));
+    });
+}

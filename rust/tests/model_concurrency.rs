@@ -1,0 +1,503 @@
+//! Model-checked concurrency protocols (`--features model`).
+//!
+//! Every test drives a real synchronization protocol — not a mock — as
+//! compiled against the `crate::sync` facade, through hundreds to
+//! thousands of deterministic schedules chosen by the model scheduler in
+//! `meltframe::sync::model`. Failures (deadlock, lost wakeup, livelock,
+//! violated assertion on *any* schedule) carry the seed or DFS prefix
+//! that reproduces them.
+//!
+//! Run with:
+//!
+//! ```text
+//! cargo test --features model --test model_concurrency
+//! ```
+//!
+//! The `seeded_bug_*` tests keep the checker honest: each injects a
+//! classic concurrency defect (lost wakeup, lock-order deadlock, and the
+//! unguarded-unwind bug that PR 6's `WaitGuard` fix closed) and asserts
+//! the checker *finds* it.
+
+#![cfg(feature = "model")]
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Duration;
+
+use meltframe::coordinator::halo::{HaloBoard, ABORTED_MSG, DEFAULT_WAIT_DEADLINE};
+use meltframe::coordinator::scheduler::StageScheduler;
+use meltframe::serve::{JobQueue, ResponseSlot, WorkerPool};
+use meltframe::sync::atomic::{AtomicUsize, Ordering};
+use meltframe::sync::model::{explore, Config, Report};
+use meltframe::sync::{thread, Arc, Condvar, Mutex};
+
+/// Schedule-count floor each protocol must clear (acceptance criterion).
+const MIN_SCHEDULES: usize = 500;
+
+fn assert_coverage(report: &Report) {
+    assert!(
+        report.distinct_schedules >= MIN_SCHEDULES,
+        "expected >= {MIN_SCHEDULES} distinct schedules, explored {} over {} runs",
+        report.distinct_schedules,
+        report.runs
+    );
+}
+
+// ---------------------------------------------------------------------------
+// HaloBoard
+// ---------------------------------------------------------------------------
+
+#[test]
+fn model_halo_publish_then_fetch_is_live_and_exact() {
+    let report = explore(Config::random(800, 0x11a1_0b0a), || {
+        let board =
+            Arc::new(HaloBoard::new(&[0..2, 2..4], 1, DEFAULT_WAIT_DEADLINE).unwrap());
+        let b1 = Arc::clone(&board);
+        let t1 = thread::spawn(move || b1.publish(0, 0, 1, &[1.0, 2.0]).unwrap());
+        let b2 = Arc::clone(&board);
+        let t2 = thread::spawn(move || b2.publish(0, 1, 1, &[3.0, 4.0]).unwrap());
+        // fetch chunk 1's lower boundary row while the publishers race
+        let mut dst = [0.0f32];
+        board.fetch_into(0, 2..3, &mut dst).unwrap();
+        assert_eq!(dst[0], 3.0);
+        t1.join().unwrap();
+        t2.join().unwrap();
+    });
+    report.assert_ok();
+    assert_coverage(&report);
+    assert_eq!(report.timeout_wakeups, 0, "halo waiters must never need the watchdog");
+}
+
+#[test]
+fn model_halo_publish_once_is_exclusive() {
+    let report = explore(Config::random(800, 0x0ce_5eed), || {
+        let board =
+            Arc::new(HaloBoard::new(&[0..2, 2..4], 1, DEFAULT_WAIT_DEADLINE).unwrap());
+        let b1 = Arc::clone(&board);
+        let t1 = thread::spawn(move || b1.publish(0, 0, 1, &[1.0, 2.0]).is_ok());
+        let b2 = Arc::clone(&board);
+        let t2 = thread::spawn(move || b2.publish(0, 0, 1, &[9.0, 9.0]).is_ok());
+        let first = t1.join().unwrap();
+        let second = t2.join().unwrap();
+        assert!(
+            first ^ second,
+            "exactly one racing publish must win (got {first} / {second})"
+        );
+    });
+    report.assert_ok();
+    assert_coverage(&report);
+}
+
+#[test]
+fn model_halo_poison_unblocks_waiters_and_rejects_publish() {
+    let report = explore(Config::random(800, 0xdead_beef), || {
+        let board =
+            Arc::new(HaloBoard::new(&[0..2, 2..4], 1, DEFAULT_WAIT_DEADLINE).unwrap());
+        let bw = Arc::clone(&board);
+        let waiter = thread::spawn(move || {
+            // chunk 1 never publishes: this blocks until poison, on every
+            // schedule, and must come back as the aborted error
+            let mut dst = [0.0f32];
+            bw.fetch_into(0, 2..3, &mut dst).unwrap_err()
+        });
+        let bp = Arc::clone(&board);
+        let poisoner = thread::spawn(move || bp.poison());
+        let err = waiter.join().unwrap();
+        assert!(err.to_string().contains(ABORTED_MSG), "{err}");
+        poisoner.join().unwrap();
+        // the board stays closed: publish after poison is rejected
+        let err = board.publish(0, 0, 1, &[1.0, 2.0]).unwrap_err();
+        assert!(err.to_string().contains(ABORTED_MSG), "{err}");
+    });
+    report.assert_ok();
+    assert_coverage(&report);
+}
+
+// ---------------------------------------------------------------------------
+// StageScheduler
+// ---------------------------------------------------------------------------
+
+fn scheduler_fleet(chunks: usize, workers: usize) -> usize {
+    // ranges 0..2, 2..4, ... with 2-stage halos [1, 1]
+    let ranges: Vec<std::ops::Range<usize>> = (0..chunks).map(|c| c * 2..c * 2 + 2).collect();
+    let sched = Arc::new(StageScheduler::new(&ranges, &[1, 1], DEFAULT_WAIT_DEADLINE));
+    let handles: Vec<_> = (0..workers)
+        .map(|_| {
+            let s = Arc::clone(&sched);
+            thread::spawn(move || {
+                let mut done = 0usize;
+                while let Some(task) = s.next_task().unwrap() {
+                    // eager boundary publish, then task completion — the
+                    // same order exec.rs uses
+                    s.mark_published(task.chunk, task.stage);
+                    s.complete(task.chunk, task.stage, vec![0.0; 2]);
+                    done += 1;
+                }
+                done
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).sum()
+}
+
+#[test]
+fn model_stage_scheduler_is_deadlock_free() {
+    let report = explore(Config::random(800, 0x5c4e_d01e), || {
+        let total = scheduler_fleet(3, 2);
+        assert_eq!(total, 3 * 2, "every (chunk, stage) task runs exactly once");
+    });
+    report.assert_ok();
+    assert_coverage(&report);
+    assert_eq!(report.timeout_wakeups, 0, "idle workers must be woken by events, not the watchdog");
+}
+
+#[test]
+fn model_stage_scheduler_arbitrary_chunk_worker_counts() {
+    for (chunks, workers) in [(1, 1), (1, 3), (2, 2), (4, 3)] {
+        let report = explore(Config::random(200, 0x1000 + (chunks * 16 + workers) as u64), || {
+            let total = scheduler_fleet(chunks, workers);
+            assert_eq!(total, chunks * 2);
+        });
+        report.assert_ok();
+        assert!(
+            !report.failed() && report.runs == 200,
+            "({chunks} chunks, {workers} workers) must survive all schedules"
+        );
+    }
+}
+
+#[test]
+fn model_stage_scheduler_poison_propagates() {
+    let report = explore(Config::random(800, 0xba11_ad00), || {
+        let sched = Arc::new(StageScheduler::new(&[0..2, 2..4], &[1, 1], DEFAULT_WAIT_DEADLINE));
+        let sp = Arc::clone(&sched);
+        let failer = thread::spawn(move || {
+            // claim a task and die without completing it (a panicking
+            // kernel's exit path calls poison)
+            if sp.next_task().unwrap().is_some() {
+                sp.poison();
+            }
+        });
+        let sw = Arc::clone(&sched);
+        let worker = thread::spawn(move || loop {
+            match sw.next_task() {
+                Ok(Some(task)) => {
+                    sw.mark_published(task.chunk, task.stage);
+                    sw.complete(task.chunk, task.stage, vec![0.0; 2]);
+                }
+                Ok(None) => return Ok(()),
+                Err(e) => return Err(e),
+            }
+        });
+        // liveness is the point: the honest worker must terminate on every
+        // schedule — either it finished the work or it sees the abort
+        match worker.join().unwrap() {
+            Ok(()) => {}
+            Err(e) => assert!(e.to_string().contains(ABORTED_MSG), "{e}"),
+        }
+        failer.join().unwrap();
+    });
+    report.assert_ok();
+    assert_coverage(&report);
+}
+
+// ---------------------------------------------------------------------------
+// JobQueue
+// ---------------------------------------------------------------------------
+
+#[test]
+fn model_jobqueue_close_then_drain_no_lost_no_dup() {
+    let report = explore(Config::random(800, 0x9_0b5), || {
+        let q = Arc::new(JobQueue::new(4));
+        let producers: Vec<_> = (0..2usize)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                thread::spawn(move || {
+                    let mut accepted = Vec::new();
+                    for j in 0..2 {
+                        let id = p * 10 + j;
+                        if q.push(id).is_ok() {
+                            accepted.push(id);
+                        }
+                    }
+                    accepted
+                })
+            })
+            .collect();
+        let qc = Arc::clone(&q);
+        let closer = thread::spawn(move || qc.close());
+        // single consumer (the daemon dispatcher role): drain to None
+        let mut got = Vec::new();
+        while let Some(id) = q.pop() {
+            got.push(id);
+        }
+        let mut accepted: Vec<usize> =
+            producers.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        closer.join().unwrap();
+        // exactly the accepted jobs are delivered — none lost, none twice
+        got.sort_unstable();
+        accepted.sort_unstable();
+        assert_eq!(got, accepted);
+        let stats = q.stats();
+        assert_eq!(stats.accepted as usize, got.len());
+        assert_eq!(stats.queued, 0);
+    });
+    report.assert_ok();
+    assert_coverage(&report);
+}
+
+#[test]
+fn model_jobqueue_close_while_push_accounts_every_job() {
+    let report = explore(Config::random(800, 0xc105_ed), || {
+        let q = Arc::new(JobQueue::new(2));
+        let qp = Arc::clone(&q);
+        let pusher = thread::spawn(move || {
+            let mut outcomes = (0usize, 0usize); // (accepted, rejected)
+            for id in 0..3 {
+                match qp.push(id) {
+                    Ok(()) => outcomes.0 += 1,
+                    Err(e) => {
+                        let msg = e.to_string();
+                        assert!(
+                            msg.contains("closed") || msg.contains("full"),
+                            "rejection must say why: {msg}"
+                        );
+                        outcomes.1 += 1;
+                    }
+                }
+            }
+            outcomes
+        });
+        let qc = Arc::clone(&q);
+        let closer = thread::spawn(move || qc.close());
+        let mut delivered = 0usize;
+        while q.pop().is_some() {
+            delivered += 1;
+        }
+        let (accepted, rejected) = pusher.join().unwrap();
+        closer.join().unwrap();
+        assert_eq!(accepted + rejected, 3, "every push resolves exactly once");
+        assert_eq!(delivered, accepted, "admitted jobs all drain, none duplicate");
+        let stats = q.stats();
+        assert_eq!((stats.accepted as usize, stats.rejected as usize), (accepted, rejected));
+    });
+    report.assert_ok();
+    assert_coverage(&report);
+}
+
+// ---------------------------------------------------------------------------
+// Daemon lifecycle: dispatcher ⇄ connection hand-off under shutdown
+// ---------------------------------------------------------------------------
+
+#[test]
+fn model_daemon_handoff_answers_admitted_jobs_across_shutdown() {
+    let report = explore(Config::random(800, 0xd43_3053), || {
+        // The serve() wiring minus the sockets: clients admit jobs into
+        // the bounded queue and block on a ResponseSlot; one dispatcher
+        // drains; shutdown closes the queue concurrently with admission.
+        let queue: Arc<JobQueue<(usize, Arc<ResponseSlot>)>> = Arc::new(JobQueue::new(2));
+        let qd = Arc::clone(&queue);
+        let dispatcher = thread::spawn(move || {
+            let mut served = 0usize;
+            while let Some((id, slot)) = qd.pop() {
+                slot.fill(format!("r{id}"));
+                served += 1;
+            }
+            served
+        });
+        let clients: Vec<_> = (0..2)
+            .map(|id| {
+                let q = Arc::clone(&queue);
+                thread::spawn(move || {
+                    let slot = Arc::new(ResponseSlot::new());
+                    match q.push((id, Arc::clone(&slot))) {
+                        // admitted ⇒ the daemon owes exactly this answer,
+                        // even if shutdown landed right after admission
+                        Ok(()) => {
+                            assert_eq!(slot.wait(), format!("r{id}"));
+                            true
+                        }
+                        // rejected ⇒ answered immediately, never waits
+                        Err(_) => false,
+                    }
+                })
+            })
+            .collect();
+        let qs = Arc::clone(&queue);
+        let shutdown = thread::spawn(move || qs.close());
+        let admitted = clients
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .filter(|&ok| ok)
+            .count();
+        shutdown.join().unwrap();
+        let served = dispatcher.join().unwrap();
+        assert_eq!(served, admitted, "dispatcher answers exactly the admitted jobs");
+    });
+    report.assert_ok();
+    assert_coverage(&report);
+}
+
+#[test]
+fn model_response_slot_exhaustive_dfs() {
+    // Small enough to enumerate the whole schedule tree: one filler, one
+    // waiter. `complete` proves the DFS exhausted it; runs ==
+    // distinct_schedules proves replay determinism (no leaf visited twice).
+    let report = explore(Config::exhaustive(50_000), || {
+        let slot = Arc::new(ResponseSlot::new());
+        let s2 = Arc::clone(&slot);
+        let filler = thread::spawn(move || s2.fill("done".into()));
+        assert_eq!(slot.wait(), "done");
+        filler.join().unwrap();
+    });
+    report.assert_ok();
+    assert!(
+        report.complete,
+        "DFS should exhaust the ResponseSlot tree within budget (ran {})",
+        report.runs
+    );
+    assert_eq!(
+        report.runs, report.distinct_schedules,
+        "deterministic replay must never revisit a schedule"
+    );
+    assert!(report.runs >= 2, "fill-first and wait-first orders both exist");
+}
+
+// ---------------------------------------------------------------------------
+// WorkerPool
+// ---------------------------------------------------------------------------
+
+#[test]
+fn model_worker_pool_run_scoped_completes_in_order() {
+    let report = explore(Config::random(600, 0x9001_f00d), || {
+        let pool = WorkerPool::new(2);
+        let results = pool.run_scoped(3, |w| Ok(w * 2), || {});
+        let got: Vec<usize> = results.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(got, vec![0, 2, 4]);
+    });
+    report.assert_ok();
+    assert_coverage(&report);
+}
+
+/// Regression pin for the PR 6 `WaitGuard` soundness fix: a panicking
+/// leader must not let `run_scoped` unwind until every enqueued task has
+/// completed (the tasks borrow the caller's stack). The model drives the
+/// unwind itself through adversarial schedules — with the guard reverted
+/// this fails (see `seeded_bug_unguarded_unwind_loses_tasks` for the
+/// checker catching exactly that defect when injected).
+#[test]
+fn model_worker_pool_waitguard_blocks_panicking_leader() {
+    let report = explore(Config::random(600, 0x6a4d_ed), || {
+        let pool = WorkerPool::new(2);
+        let finished = Arc::new(AtomicUsize::new(0));
+        let fc = Arc::clone(&finished);
+        let unwound = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_scoped(
+                3,
+                |_| {
+                    fc.fetch_add(1, Ordering::SeqCst);
+                    Ok(())
+                },
+                || panic!("injected leader panic"),
+            )
+        }));
+        assert!(unwound.is_err());
+        // the WaitGuard held the frame open through the unwind: every
+        // task observed alive stack state and ran to completion
+        assert_eq!(finished.load(Ordering::SeqCst), 3);
+        // and the pool survives for the next job on the same threads
+        let again = pool.run_scoped(2, |w| Ok(w), || {});
+        assert!(again.into_iter().all(|r| r.is_ok()));
+    });
+    report.assert_ok();
+    assert_coverage(&report);
+}
+
+// ---------------------------------------------------------------------------
+// Seeded bugs: the checker must FIND these
+// ---------------------------------------------------------------------------
+
+/// The WaitGuard-revert equivalent: a leader that unwinds without
+/// joining its outstanding tasks. On schedules where a task has not yet
+/// run when the leader's caller resumes, the completion invariant is
+/// violated — the model must surface it.
+#[test]
+fn seeded_bug_unguarded_unwind_loses_tasks() {
+    let report = explore(Config::random(400, 0xbad_c0de), || {
+        let finished = Arc::new(AtomicUsize::new(0));
+        let unwound = catch_unwind(AssertUnwindSafe(|| {
+            for _ in 0..3 {
+                let fc = Arc::clone(&finished);
+                // BUG (injected): handles dropped, nothing ties the
+                // unwind to task completion — no WaitGuard
+                let _ = thread::spawn(move || {
+                    fc.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            panic!("injected leader panic");
+        }));
+        assert!(unwound.is_err());
+        assert_eq!(
+            finished.load(Ordering::SeqCst),
+            3,
+            "leader unwound before its tasks completed"
+        );
+    });
+    let failure = report.assert_failed();
+    assert!(
+        failure.contains("leader unwound before its tasks completed"),
+        "wrong failure: {failure}"
+    );
+}
+
+/// Classic lost wakeup: check the flag, release the lock, re-lock and
+/// wait without re-checking. On schedules where the setter's notify
+/// lands in the gap, only the watchdog timeout can make progress — the
+/// checker must flag it.
+#[test]
+fn seeded_bug_lost_wakeup_detected() {
+    let report = explore(Config::random(400, 0x105_7a3e), || {
+        let flag = Arc::new(Mutex::new(false));
+        let cv = Arc::new(Condvar::new());
+        let (f2, c2) = (Arc::clone(&flag), Arc::clone(&cv));
+        let setter = thread::spawn(move || {
+            *f2.lock().unwrap_or_else(|p| p.into_inner()) = true;
+            c2.notify_one();
+        });
+        let ready = *flag.lock().unwrap_or_else(|p| p.into_inner());
+        if !ready {
+            // BUG (injected): the gap between the check above and this
+            // re-lock loses the notify; correct code re-checks the
+            // predicate under the same critical section it waits in
+            let guard = flag.lock().unwrap_or_else(|p| p.into_inner());
+            let _ = cv.wait_timeout(guard, Duration::from_millis(100));
+        }
+        setter.join().unwrap();
+    });
+    let failure = report.assert_failed();
+    assert!(failure.contains("lost wakeup"), "wrong failure: {failure}");
+}
+
+/// Classic AB/BA lock-order inversion. Some schedule interleaves the two
+/// first acquisitions — the checker must report the deadlock with both
+/// threads' states.
+#[test]
+fn seeded_bug_lock_order_deadlock_detected() {
+    let report = explore(Config::random(400, 0xab_ba), || {
+        let a = Arc::new(Mutex::new(0u32));
+        let b = Arc::new(Mutex::new(0u32));
+        let (a1, b1) = (Arc::clone(&a), Arc::clone(&b));
+        let t1 = thread::spawn(move || {
+            let _ga = a1.lock().unwrap_or_else(|p| p.into_inner());
+            let _gb = b1.lock().unwrap_or_else(|p| p.into_inner());
+        });
+        let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+        let t2 = thread::spawn(move || {
+            let _gb = b2.lock().unwrap_or_else(|p| p.into_inner());
+            let _ga = a2.lock().unwrap_or_else(|p| p.into_inner());
+        });
+        let _ = t1.join();
+        let _ = t2.join();
+    });
+    let failure = report.assert_failed();
+    assert!(failure.contains("deadlock"), "wrong failure: {failure}");
+}

@@ -1,0 +1,12 @@
+// Known-good fixture for `lint_unsafe.py --self-test`: the same unsafe
+// block as undocumented_unsafe.rs, carrying the adjacent justification
+// the gate requires (including a multi-line comment block and an
+// attribute above the comment). NOT part of the cargo build.
+
+#[allow(dead_code)]
+fn read_first(v: &[u8]) -> u8 {
+    assert!(!v.is_empty());
+    // SAFETY: the assert above guarantees `v` has at least one element,
+    // so `as_ptr()` points to a valid, initialized `u8`.
+    unsafe { *v.as_ptr() }
+}

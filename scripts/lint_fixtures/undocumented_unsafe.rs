@@ -1,0 +1,7 @@
+// Known-bad fixture for `lint_unsafe.py --self-test`: an `unsafe` block
+// with no `// SAFETY:` justification. NOT part of the cargo build — this
+// file exists so CI proves the gate actually fails on what it gates.
+
+fn read_first(v: &[u8]) -> u8 {
+    unsafe { *v.as_ptr() }
+}

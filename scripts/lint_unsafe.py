@@ -1,0 +1,243 @@
+#!/usr/bin/env python3
+"""Source-textual audit gate for unsafe code and concurrency hygiene.
+
+Hard CI gate (exit 1 on any violation). Three rules over `rust/`:
+
+1. **undocumented-unsafe** — every `unsafe` keyword in code must be
+   directly preceded by a `// SAFETY:` comment (a block of consecutive
+   `//` lines immediately above it, at least one carrying `SAFETY:`).
+   This is the same adjacency `clippy::undocumented_unsafe_blocks`
+   enforces (denied in Cargo.toml); running it textually as well keeps
+   the gate alive for cfg'd-out code, macro bodies and toolchains where
+   the lint is unavailable.
+
+2. **std-sync-import** — the modules migrated to the `crate::sync`
+   facade must not import `std::sync::Mutex` / `std::sync::Condvar`
+   directly: a bare std primitive is invisible to the model checker, so
+   a schedule involving it silently loses coverage. (`sync/mod.rs` and
+   `sync/model.rs` are the facade itself and are exempt by omission.)
+
+3. **serve-unwrap** — no `.unwrap()` / `.expect(` in non-test `serve/`
+   code outside the explicit allowlist below. The serving daemon is the
+   long-lived, user-facing surface: a stray unwrap is a remote panic.
+   Allowlisted entries are invariant-backed by construction and each
+   records its justification here.
+
+Test code (everything at or below the first `#[cfg(test)]` line — the
+repo convention keeps test modules at the bottom of the file) is exempt
+from rules 2 and 3; rule 1 applies everywhere.
+
+Self-check: `lint_unsafe.py --self-test` runs the rules against
+`scripts/lint_fixtures/` and known-bad snippets, asserting the gate
+actually fails on an uncommented unsafe block. CI runs the self-test
+first, then the tree scan.
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+# Modules routed through the crate::sync facade (rule 2). Paths are
+# relative to the repo root.
+FACADE_MODULES = [
+    "rust/src/coordinator/exec.rs",
+    "rust/src/coordinator/halo.rs",
+    "rust/src/coordinator/scheduler.rs",
+    "rust/src/serve/cache.rs",
+    "rust/src/serve/daemon.rs",
+    "rust/src/serve/executor.rs",
+    "rust/src/serve/pool.rs",
+    "rust/src/serve/protocol.rs",
+    "rust/src/serve/queue.rs",
+]
+
+# (path, line snippet, justification) — rule 3 exemptions. A snippet
+# match is required so the exemption dies with the code it covers.
+SERVE_UNWRAP_ALLOWLIST = [
+    (
+        "rust/src/serve/pool.rs",
+        'expect("spawn pool worker")',
+        "pool construction: failing to spawn the fleet is unrecoverable "
+        "and happens before any request is accepted",
+    ),
+    (
+        "rust/src/serve/pool.rs",
+        'expect("latch counted a task whose slot is empty")',
+        "latch invariant: slots[w] is filled before the counter that "
+        "wait_for() observes is bumped, under the same mutex",
+    ),
+    (
+        "rust/src/serve/daemon.rs",
+        'expect("spawn dispatcher thread")',
+        "daemon startup: no dispatcher means no daemon; fails before the "
+        "socket accepts clients",
+    ),
+]
+
+CFG_TEST_RE = re.compile(r"^\s*#\[cfg\(test\)\]")
+UNSAFE_RE = re.compile(r"\bunsafe\b")
+STD_SYNC_RE = re.compile(r"std::sync::(?:\{[^}]*\b(?:Mutex|Condvar)\b|(?:Mutex|Condvar)\b)")
+UNWRAP_RE = re.compile(r"\.unwrap\(\)|\.expect\(")
+
+
+def strip_strings(line: str) -> str:
+    """Crudely blank out string literals so e.g. an error message that
+    mentions "unsafe" does not trip rule 1."""
+    return re.sub(r'"(?:[^"\\]|\\.)*"', '""', line)
+
+
+def first_test_line(lines: list[str]) -> int:
+    for i, line in enumerate(lines):
+        if CFG_TEST_RE.match(line):
+            return i
+    return len(lines)
+
+
+def check_undocumented_unsafe(rel: str, lines: list[str]) -> list[str]:
+    out = []
+    for i, line in enumerate(lines):
+        stripped = line.strip()
+        if stripped.startswith(("//", "#!", "#[")):
+            continue
+        if not UNSAFE_RE.search(strip_strings(line)):
+            continue
+        # walk the block of consecutive comment lines directly above
+        j = i - 1
+        documented = False
+        while j >= 0 and lines[j].strip().startswith("//"):
+            if "SAFETY:" in lines[j]:
+                documented = True
+                break
+            j -= 1
+        if not documented:
+            out.append(
+                f"{rel}:{i + 1}: [undocumented-unsafe] `unsafe` without a "
+                f"`// SAFETY:` comment directly above"
+            )
+    return out
+
+
+def check_std_sync_imports(rel: str, lines: list[str]) -> list[str]:
+    out = []
+    for i, line in enumerate(lines[: first_test_line(lines)]):
+        if line.strip().startswith("//"):
+            continue
+        if STD_SYNC_RE.search(strip_strings(line)):
+            out.append(
+                f"{rel}:{i + 1}: [std-sync-import] facade module uses "
+                f"std::sync::Mutex/Condvar directly; import from crate::sync "
+                f"so the model checker can see it"
+            )
+    return out
+
+
+def check_serve_unwrap(rel: str, lines: list[str]) -> list[str]:
+    out = []
+    allowed = [snip for path, snip, _why in SERVE_UNWRAP_ALLOWLIST if path == rel]
+    for i, line in enumerate(lines[: first_test_line(lines)]):
+        if line.strip().startswith("//"):
+            continue
+        if not UNWRAP_RE.search(strip_strings(line)):
+            continue
+        if any(snip in line for snip in allowed):
+            continue
+        out.append(
+            f"{rel}:{i + 1}: [serve-unwrap] unwrap()/expect() in serving "
+            f"code; return an Error or add an allowlist entry with a "
+            f"justification in scripts/lint_unsafe.py"
+        )
+    return out
+
+
+def scan(root: Path) -> list[str]:
+    violations = []
+    for path in sorted((root / "rust").rglob("*.rs")):
+        if "target" in path.parts:
+            continue
+        rel = path.relative_to(root).as_posix()
+        lines = path.read_text(encoding="utf-8").splitlines()
+        violations += check_undocumented_unsafe(rel, lines)
+        if rel in FACADE_MODULES:
+            violations += check_std_sync_imports(rel, lines)
+        if rel.startswith("rust/src/serve/"):
+            violations += check_serve_unwrap(rel, lines)
+    # stale-allowlist check: every exemption must still match a line
+    for path, snip, _why in SERVE_UNWRAP_ALLOWLIST:
+        f = root / path
+        if not f.exists() or snip not in f.read_text(encoding="utf-8"):
+            violations.append(
+                f"{path}: [stale-allowlist] allowlist entry {snip!r} no "
+                f"longer matches any line; remove it from lint_unsafe.py"
+            )
+    return violations
+
+
+def self_test(root: Path) -> int:
+    fixtures = root / "scripts" / "lint_fixtures"
+    failures = []
+
+    bad = (fixtures / "undocumented_unsafe.rs").read_text(encoding="utf-8").splitlines()
+    v = check_undocumented_unsafe("fixture/bad", bad)
+    if not v:
+        failures.append("gate did NOT fail on the uncommented-unsafe fixture")
+
+    good = (fixtures / "documented_unsafe.rs").read_text(encoding="utf-8").splitlines()
+    v = check_undocumented_unsafe("fixture/good", good)
+    if v:
+        failures.append(f"gate false-positived on the documented fixture: {v}")
+
+    v = check_std_sync_imports(
+        "fixture/facade", ["use std::sync::{Condvar, Mutex};"]
+    )
+    if not v:
+        failures.append("gate did NOT flag a direct std::sync::Mutex import")
+
+    v = check_std_sync_imports("fixture/facade", ["use crate::sync::{Condvar, Mutex};"])
+    if v:
+        failures.append(f"gate false-positived on a facade import: {v}")
+
+    v = check_serve_unwrap("fixture/serve", ["    let x = cfg.lookup().unwrap();"])
+    if not v:
+        failures.append("gate did NOT flag an unwrap in serving code")
+
+    v = check_serve_unwrap(
+        "fixture/serve", ["    let x = cfg.lookup().unwrap_or_else(|_| fallback());"]
+    )
+    if v:
+        failures.append(f"gate false-positived on unwrap_or_else: {v}")
+
+    for msg in failures:
+        print(f"self-test: {msg}", file=sys.stderr)
+    print(
+        "lint_unsafe self-test: "
+        + ("FAILED" if failures else "ok (bad fixture rejected, good fixture passed)")
+    )
+    return 1 if failures else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=Path, default=Path(__file__).resolve().parent.parent)
+    ap.add_argument(
+        "--self-test",
+        action="store_true",
+        help="verify the gate catches the known-bad fixtures, then exit",
+    )
+    args = ap.parse_args()
+    if args.self_test:
+        return self_test(args.root)
+    violations = scan(args.root)
+    for v in violations:
+        print(v, file=sys.stderr)
+    if violations:
+        print(f"lint_unsafe: {len(violations)} violation(s)", file=sys.stderr)
+        return 1
+    print("lint_unsafe: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
