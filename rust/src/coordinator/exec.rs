@@ -65,7 +65,7 @@
 //! exchanged row is the identical value its owner computed for itself.
 
 use std::ops::Range;
-use crate::sync::{Arc, Barrier};
+use crate::sync::{Arc, Barrier, NamedBarrier};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::aggregator::{assemble, merged_moments};
@@ -395,7 +395,7 @@ pub(crate) fn run_single_stage_with(
     let mut chunk_counts = vec![0usize; opts.workers];
     // +1: the leader also waits on the barrier to timestamp compute start
     // only after every worker finished its (PJRT) engine build.
-    let barrier = Barrier::new(opts.workers + 1);
+    let barrier = Barrier::new_named("exec.fleet.barrier", opts.workers + 1);
     let backend = opts.backend;
     let tile = opts.tile_rows.max(1);
 
@@ -583,7 +583,7 @@ pub(crate) fn run_fused_group_with(
         HaloMode::Recompute => (None, None),
     };
     let mut chunk_counts = vec![0usize; opts.workers];
-    let barrier = Barrier::new(opts.workers + 1);
+    let barrier = Barrier::new_named("exec.fleet.barrier", opts.workers + 1);
 
     let shared = FusedShared {
         src: x.data(),

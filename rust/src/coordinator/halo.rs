@@ -40,7 +40,7 @@
 
 use std::ops::Range;
 use crate::sync::atomic::{AtomicBool, Ordering};
-use crate::sync::{Condvar, Mutex, MutexGuard};
+use crate::sync::{Condvar, Mutex, MutexGuard, NamedCondvar, NamedMutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
@@ -193,8 +193,8 @@ impl HaloBoard {
         }
         let cells = (0..stages * ranges.len())
             .map(|_| Cell {
-                slot: Mutex::new(None),
-                ready: Condvar::new(),
+                slot: Mutex::new_named("halo.cell", None),
+                ready: Condvar::new_named("halo.cell.ready"),
             })
             .collect();
         Ok(Self {

@@ -41,7 +41,7 @@ use std::cmp::Reverse;
 use std::collections::BTreeSet;
 use std::ops::Range;
 use crate::sync::atomic::{AtomicUsize, Ordering};
-use crate::sync::{Condvar, Mutex};
+use crate::sync::{Condvar, Mutex, NamedCondvar, NamedMutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::halo::{ABORTED_MSG, WAIT_SLICE};
@@ -87,7 +87,7 @@ pub struct ResultBoard {
 impl ResultBoard {
     pub fn new(num_chunks: usize) -> Self {
         Self {
-            slots: Mutex::new(vec![None; num_chunks]),
+            slots: Mutex::new_named("coord.results", vec![None; num_chunks]),
         }
     }
 
@@ -193,7 +193,7 @@ impl StageScheduler {
             rows: ranges.last().map_or(0, |r| r.end),
             max_halo: halos.iter().copied().max().unwrap_or(0),
             deadline,
-            state: Mutex::new(SchedState {
+            state: Mutex::new_named("sched.state", SchedState {
                 progress: vec![0; n_chunks],
                 published: vec![0; n_chunks],
                 running: vec![false; n_chunks],
@@ -207,7 +207,7 @@ impl StageScheduler {
                 events: 0,
                 poisoned: false,
             }),
-            wakeup: Condvar::new(),
+            wakeup: Condvar::new_named("sched.wakeup"),
         }
     }
 

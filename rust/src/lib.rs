@@ -269,6 +269,17 @@
 //!   detecting deadlocks, lost wakeups, livelocks and cross-schedule
 //!   invariant violations. Failing schedules are reproducible from the
 //!   seed or DFS prefix embedded in the failure message.
+//! * **Lock-order discipline (lockdep).** The facade's third
+//!   personality: `--features lockdep` wraps `std::sync` in
+//!   order-checked types. Every lock carries a static class
+//!   (`Mutex::new_named`), the runtime maintains per-thread held-class
+//!   stacks plus a global class-order graph, and the first *possible*
+//!   ordering cycle panics with both acquisition sites — no deadlock
+//!   required. Condvar waits while doubly-locked and guards leaked
+//!   across `WorkerPool` job boundaries (`sync::checkpoint`) are
+//!   flagged too. The documented global order lives in the [`sync`]
+//!   module docs; `cargo test --features lockdep` runs the full suite
+//!   plus the seeded-inversion tests in `tests/lockdep_discipline.rs`.
 //! * **Miri.** The `unsafe`-bearing modules (`melt` gather buffers,
 //!   `serve::pool`'s scoped-task transmute, `bench_harness`) run under
 //!   Miri in CI: `cargo +nightly miri test -p meltframe <filters>`.
@@ -278,11 +289,18 @@
 //!   hard CI step) enforces: every `unsafe` block is annotated with a
 //!   `// SAFETY:` comment, concurrency modules never import
 //!   `std::sync::{Mutex, Condvar}` directly (which would hide them from
-//!   the model checker), and `serve/` request paths contain no
-//!   `unwrap()`/`expect()` outside tests and an explicit allowlist.
-//!   The compiler enforces `unsafe_op_in_unsafe_fn` and clippy's
-//!   `undocumented_unsafe_blocks` at deny level (see `Cargo.toml`
-//!   `[lints]`).
+//!   the model checker), and `serve/` + `coordinator/` request paths
+//!   contain no `unwrap()`/`expect()` outside tests and an explicit,
+//!   staleness-checked allowlist. The compiler enforces
+//!   `unsafe_op_in_unsafe_fn` and clippy's
+//!   `undocumented_unsafe_blocks`, `mutex_atomic` and `redundant_clone`
+//!   at deny level (see `Cargo.toml` `[lints]`).
+//! * **Static lock lint.** `python3 scripts/lint_locks.py` (hard CI
+//!   step, self-tested against known-bad fixtures first) forbids
+//!   anonymous facade locks, checks every class name against its
+//!   committed registry (including gate-vs-plain constructor kind) and
+//!   fails on cycles in the textually-extracted static lock-order
+//!   graph — a zero-toolchain floor under the runtime lockdep checker.
 
 #![deny(unsafe_op_in_unsafe_fn)]
 

@@ -21,7 +21,7 @@
 //! plan is valid for any fleet size. Changing any keyed field therefore
 //! busts the cache; resubmitting an identical spec hits it.
 
-use crate::sync::Mutex;
+use crate::sync::{Mutex, NamedMutex};
 
 use crate::coordinator::pipeline::ExecOptions;
 use crate::coordinator::plan::Stage;
@@ -103,7 +103,7 @@ impl PlanCache {
     /// Cache holding at most `capacity` plans (floored at 1).
     pub fn new(capacity: usize) -> Self {
         Self {
-            inner: Mutex::new(CacheInner::default()),
+            inner: Mutex::new_named("serve.cache.plans", CacheInner::default()),
             capacity: capacity.max(1),
         }
     }

@@ -30,7 +30,7 @@ use crate::serve::executor::{Executor, DEFAULT_CACHE_CAPACITY};
 use crate::serve::protocol::{error_response, execute_request, parse_request, JobRequest, Request};
 use crate::serve::queue::JobQueue;
 use crate::sync::atomic::{AtomicBool, Ordering};
-use crate::sync::{thread, Arc, Condvar, Mutex};
+use crate::sync::{thread, Arc, Condvar, Mutex, NamedCondvar, NamedMutex};
 
 /// Default pending-job admission depth.
 pub const DEFAULT_QUEUE_DEPTH: usize = 16;
@@ -78,8 +78,8 @@ impl Default for ResponseSlot {
 impl ResponseSlot {
     pub fn new() -> Self {
         Self {
-            line: Mutex::new(None),
-            ready: Condvar::new(),
+            line: Mutex::new_named("serve.response.line", None),
+            ready: Condvar::new_named("serve.response.ready"),
         }
     }
 

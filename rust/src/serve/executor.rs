@@ -18,7 +18,7 @@
 //! barriers), which is exactly the FIFO dispatch order the serving
 //! [`daemon`](crate::serve::daemon) wants.
 
-use crate::sync::Mutex;
+use crate::sync::{Mutex, NamedMutex};
 
 use crate::coordinator::exec::Fleet;
 use crate::coordinator::metrics::PlanMetrics;
@@ -52,7 +52,10 @@ impl Executor {
             opts,
             pool: None,
             cache: PlanCache::new(DEFAULT_CACHE_CAPACITY),
-            run_lock: Mutex::new(()),
+            // gate class: held by the run leader across the whole
+            // barrier-coordinated job (including condvar/barrier waits) —
+            // see the global lock order in crate::sync
+            run_lock: Mutex::new_gate("serve.exec.run", ()),
         }
     }
 
@@ -65,7 +68,10 @@ impl Executor {
             opts,
             pool: Some(pool),
             cache: PlanCache::new(cache_capacity),
-            run_lock: Mutex::new(()),
+            // gate class: held by the run leader across the whole
+            // barrier-coordinated job (including condvar/barrier waits) —
+            // see the global lock order in crate::sync
+            run_lock: Mutex::new_gate("serve.exec.run", ()),
         }
     }
 

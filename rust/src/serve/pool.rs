@@ -20,7 +20,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use crate::error::{Error, Result};
 use crate::sync::atomic::{AtomicBool, Ordering};
 use crate::sync::thread::JoinHandle;
-use crate::sync::{thread, Arc, Condvar, Mutex};
+use crate::sync::{thread, Arc, Condvar, Mutex, NamedCondvar, NamedMutex};
 
 type Task = Box<dyn FnOnce() + Send>;
 
@@ -42,8 +42,8 @@ impl WorkerPool {
     pub fn new(threads: usize) -> Self {
         let threads = threads.max(1);
         let shared = Arc::new(PoolShared {
-            queue: Mutex::new(VecDeque::new()),
-            available: Condvar::new(),
+            queue: Mutex::new_named("serve.pool.queue", VecDeque::new()),
+            available: Condvar::new_named("serve.pool.available"),
             shutdown: AtomicBool::new(false),
         });
         let handles = (0..threads)
@@ -115,8 +115,8 @@ impl WorkerPool {
             }
         }
         let latch = Latch::<T> {
-            slots: Mutex::new(((0..tasks).map(|_| None).collect(), 0)),
-            done: Condvar::new(),
+            slots: Mutex::new_named("serve.pool.latch", ((0..tasks).map(|_| None).collect(), 0)),
+            done: Condvar::new_named("serve.pool.latch.done"),
         };
         let latch = &latch;
         let work = &work;
@@ -184,6 +184,10 @@ fn worker_loop(shared: &PoolShared) {
         // extra guard here keeps a raw `submit`-style task from ever
         // killing the thread either
         let _ = catch_unwind(AssertUnwindSafe(task));
+        // a task that leaked a facade guard past its own body would wedge
+        // every later job contending on it; under lockdep this names the
+        // leaked class and its acquisition site (no-op otherwise)
+        crate::sync::checkpoint("WorkerPool task boundary");
     }
 }
 

@@ -10,7 +10,7 @@
 
 use std::collections::VecDeque;
 
-use crate::sync::{Condvar, Mutex};
+use crate::sync::{Condvar, Mutex, NamedCondvar, NamedMutex};
 
 use crate::error::{Error, Result};
 
@@ -41,13 +41,13 @@ impl<T> JobQueue<T> {
     /// Queue admitting at most `depth` pending jobs (floored at 1).
     pub fn new(depth: usize) -> Self {
         Self {
-            inner: Mutex::new(QueueInner {
+            inner: Mutex::new_named("serve.queue.jobs", QueueInner {
                 items: VecDeque::new(),
                 closed: false,
                 accepted: 0,
                 rejected: 0,
             }),
-            ready: Condvar::new(),
+            ready: Condvar::new_named("serve.queue.ready"),
             depth: depth.max(1),
         }
     }

@@ -1,0 +1,788 @@
+//! Runtime lock-order checker ("lockdep"): the third personality of the
+//! [`crate::sync`] facade, enabled by `--features lockdep`.
+//!
+//! ## What it checks
+//!
+//! Every [`Mutex`], [`Condvar`] and [`Barrier`] is constructed with a
+//! static **lock class** (`Mutex::new_named("halo.cell", v)`). The
+//! runtime maintains
+//!
+//! * a **per-thread held-lock stack** — which classes this thread holds
+//!   right now, and the source location of each acquisition, and
+//! * a **global class-order graph** — a directed edge `A → B` is
+//!   recorded the first time any thread acquires a `B` lock while
+//!   holding an `A` lock, together with both acquisition sites.
+//!
+//! The first acquisition that would close a **cycle** in that graph
+//! panics with a report naming every edge on the cycle and the source
+//! locations that created it — *even if the deadlock never manifests*.
+//! This is the lockdep property: an AB/BA inversion is flagged the first
+//! time the two orders have ever been observed, on any run, under any
+//! schedule, rather than on the astronomically unlucky schedule where
+//! the two threads actually interleave into a deadlock.
+//!
+//! Additional disciplines enforced at runtime:
+//!
+//! * **Same-class nesting** — acquiring a lock of class `C` while
+//!   already holding a `C` lock is flagged immediately: two instances of
+//!   one class have no defined order, so cross-thread AB/BA between
+//!   instances could never be ruled out.
+//! * **Condvar waits while double-locked** — `Condvar::wait`/
+//!   `wait_timeout` release only the mutex they are handed; waiting
+//!   while holding *another* facade lock blocks that lock for the whole
+//!   sleep and is a classic deadlock shape. Flagged unless every other
+//!   held lock is a **gate** (below).
+//! * **Barrier waits while holding a lock** — same shape, same rule.
+//! * **Guards held across `WorkerPool` job boundaries** — the pool's
+//!   worker loop calls [`checkpoint`] after every task; a task that
+//!   leaked a facade guard past its own body (stashed or forgotten) is
+//!   flagged with the class and acquisition site of every leaked guard.
+//!
+//! ## Gates
+//!
+//! A class constructed with `Mutex::new_gate` is a **job-serialization
+//! gate**: a coarse outermost lock (meltframe has exactly one,
+//! `serve.exec.run`) that is *designed* to be held across an entire
+//! barrier-coordinated run, including the leader's condvar and barrier
+//! waits. Gates are exempt from the two wait checks only; they
+//! participate in the order graph like any other class, so a gate
+//! acquired *under* a leaf lock still closes a cycle and panics.
+//!
+//! ## Failure mode and teardown
+//!
+//! Violations panic in the acquiring thread with a formatted report; the
+//! offending edge is **not** inserted into the graph, so the recorded
+//! graph stays acyclic by construction and
+//! [`find_cycle`] doubles as a self-check (the clean-run test in
+//! `rust/tests/lockdep_discipline.rs` asserts it returns `None` over the
+//! real protocols). Test code catches the panic with `catch_unwind`;
+//! guards dropped during the unwind pop their held-stack entries like
+//! any other drop.
+//!
+//! The checker's own bookkeeping uses raw `std::sync` primitives (one
+//! leaf mutex around the graph, a thread-local stack) and is therefore
+//! invisible to itself; it is only ever locked with the caller's facade
+//! locks *already* held and released before control returns, so it can
+//! introduce no ordering of its own.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::mem::ManuallyDrop;
+use std::panic::Location;
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::{
+    Barrier as StdBarrier, BarrierWaitResult, Condvar as StdCondvar, LockResult,
+    Mutex as StdMutex, MutexGuard as StdMutexGuard, OnceLock, PoisonError, WaitTimeoutResult,
+};
+use std::time::Duration;
+
+/// Index into the global class table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct ClassId(usize);
+
+struct ClassInfo {
+    name: &'static str,
+    gate: bool,
+}
+
+/// First-observation record for one order-graph edge `from → to`.
+struct EdgeSites {
+    /// Where the already-held `from` lock was acquired.
+    held_at: &'static Location<'static>,
+    /// Where the `to` lock was acquired while `from` was held.
+    acquired_at: &'static Location<'static>,
+}
+
+#[derive(Default)]
+struct Graph {
+    classes: Vec<ClassInfo>,
+    by_name: HashMap<&'static str, ClassId>,
+    edges: HashMap<(ClassId, ClassId), EdgeSites>,
+    adj: HashMap<ClassId, Vec<ClassId>>,
+}
+
+impl Graph {
+    fn intern(&mut self, name: &'static str, gate: bool) -> ClassId {
+        if let Some(&id) = self.by_name.get(name) {
+            assert!(
+                self.classes[id.0].gate == gate,
+                "lockdep: class {name:?} declared both as a gate and as a regular class — \
+                 a class has exactly one role"
+            );
+            return id;
+        }
+        let id = ClassId(self.classes.len());
+        self.classes.push(ClassInfo { name, gate });
+        self.by_name.insert(name, id);
+        id
+    }
+
+    /// Shortest path `from → … → to` over recorded edges, if any.
+    fn path(&self, from: ClassId, to: ClassId) -> Option<Vec<ClassId>> {
+        let mut parent: HashMap<ClassId, ClassId> = HashMap::new();
+        let mut queue = std::collections::VecDeque::from([from]);
+        while let Some(c) = queue.pop_front() {
+            if c == to {
+                let mut path = vec![to];
+                while *path.last().expect("path starts non-empty") != from {
+                    path.push(parent[path.last().expect("path starts non-empty")]);
+                }
+                path.reverse();
+                return Some(path);
+            }
+            for &n in self.adj.get(&c).into_iter().flatten() {
+                if n != from && !parent.contains_key(&n) {
+                    parent.insert(n, c);
+                    queue.push_back(n);
+                }
+            }
+        }
+        None
+    }
+}
+
+fn graph() -> &'static StdMutex<Graph> {
+    static GRAPH: OnceLock<StdMutex<Graph>> = OnceLock::new();
+    GRAPH.get_or_init(|| StdMutex::new(Graph::default()))
+}
+
+fn with_graph<R>(f: impl FnOnce(&mut Graph) -> R) -> R {
+    // the checker must keep working while unwinding out of a previous
+    // violation panic, so a poisoned graph mutex is recovered, not
+    // propagated
+    f(&mut graph().lock().unwrap_or_else(|p| p.into_inner()))
+}
+
+fn register(name: &'static str, gate: bool) -> ClassId {
+    with_graph(|g| g.intern(name, gate))
+}
+
+/// One entry of the per-thread held-lock stack.
+struct Held {
+    class: ClassId,
+    /// Unique per-guard token: guards may be dropped out of stack order,
+    /// so release removes by token, not by popping.
+    token: u64,
+    site: &'static Location<'static>,
+}
+
+thread_local! {
+    static HELD: RefCell<Vec<Held>> = const { RefCell::new(Vec::new()) };
+}
+
+static NEXT_TOKEN: AtomicU64 = AtomicU64::new(1);
+
+/// Validate acquiring `class` at `site` against every lock the current
+/// thread holds, recording new order edges. Panics on same-class nesting
+/// or on the first edge that would close a cycle; the offending edge is
+/// not recorded.
+fn check_order(class: ClassId, site: &'static Location<'static>) {
+    let report = HELD.with(|h| {
+        let held = h.borrow();
+        if held.is_empty() {
+            return None;
+        }
+        with_graph(|g| {
+            for e in held.iter() {
+                if e.class == class {
+                    return Some(format!(
+                        "lockdep: same-class nesting on {name:?}\n  \
+                         already held since {held_at}\n  \
+                         acquired again at {site}\n\
+                         two locks of one class have no defined order; give the inner \
+                         lock its own class or restructure to drop the outer guard first",
+                        name = g.classes[class.0].name,
+                        held_at = e.site,
+                    ));
+                }
+                if g.edges.contains_key(&(e.class, class)) {
+                    continue;
+                }
+                if let Some(path) = g.path(class, e.class) {
+                    return Some(render_cycle(g, e, class, site, &path));
+                }
+                g.edges.insert(
+                    (e.class, class),
+                    EdgeSites {
+                        held_at: e.site,
+                        acquired_at: site,
+                    },
+                );
+                g.adj.entry(e.class).or_default().push(class);
+            }
+            None
+        })
+    });
+    if let Some(report) = report {
+        panic!("{report}");
+    }
+}
+
+/// Format the cycle report for a new edge `held.class → class` that
+/// closes the existing path `class → … → held.class`.
+fn render_cycle(
+    g: &Graph,
+    held: &Held,
+    class: ClassId,
+    site: &'static Location<'static>,
+    path: &[ClassId],
+) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(out, "lockdep: lock-order cycle detected");
+    let _ = writeln!(
+        out,
+        "  new dependency {:?} -> {:?}:",
+        g.classes[held.class.0].name, g.classes[class.0].name
+    );
+    let _ = writeln!(
+        out,
+        "    {:?} held since {held_at}\n    {:?} acquired at {site}",
+        g.classes[held.class.0].name,
+        g.classes[class.0].name,
+        held_at = held.site,
+    );
+    let _ = writeln!(out, "  conflicts with the previously observed order:");
+    for w in path.windows(2) {
+        let sites = &g.edges[&(w[0], w[1])];
+        let _ = writeln!(
+            out,
+            "    {:?} -> {:?}  ({:?} held since {}, {:?} acquired at {})",
+            g.classes[w[0].0].name,
+            g.classes[w[1].0].name,
+            g.classes[w[0].0].name,
+            sites.held_at,
+            g.classes[w[1].0].name,
+            sites.acquired_at,
+        );
+    }
+    let _ = write!(
+        out,
+        "the cycle is flagged on first observation; no deadlock need have occurred yet"
+    );
+    out
+}
+
+fn push_held(class: ClassId, site: &'static Location<'static>) -> u64 {
+    let token = NEXT_TOKEN.fetch_add(1, AtomicOrdering::Relaxed);
+    HELD.with(|h| h.borrow_mut().push(Held { class, token, site }));
+    token
+}
+
+fn release_held(token: u64) {
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        if let Some(pos) = held.iter().rposition(|e| e.token == token) {
+            held.remove(pos);
+        }
+    });
+}
+
+/// Panic if the current thread holds any facade lock whose class fails
+/// `keep` (gates are skipped when `allow_gates`); `what` names the
+/// violated discipline in the report.
+fn check_none_held(what: &str, context: String, allow_gates: bool) {
+    let report = HELD.with(|h| {
+        let held = h.borrow();
+        let offending: Vec<String> = with_graph(|g| {
+            held.iter()
+                .filter(|e| !(allow_gates && g.classes[e.class.0].gate))
+                .map(|e| format!("    {:?} held since {}", g.classes[e.class.0].name, e.site))
+                .collect()
+        });
+        if offending.is_empty() {
+            None
+        } else {
+            Some(format!(
+                "lockdep: {what}\n  {context}\n  while holding:\n{}",
+                offending.join("\n")
+            ))
+        }
+    });
+    if let Some(report) = report {
+        panic!("{report}");
+    }
+}
+
+/// Job-boundary assertion: panics if the calling thread still holds any
+/// facade lock. Wired into `WorkerPool`'s worker loop after every task,
+/// so a job that leaks a guard (stashes or forgets it) is flagged with
+/// the leaked class and its acquisition site instead of silently
+/// wedging every later job that contends on it.
+pub fn checkpoint(label: &'static str) {
+    check_none_held(
+        "lock guard held across a job boundary",
+        format!("at checkpoint {label:?}"),
+        false,
+    );
+}
+
+/// Classes registered so far, as `(name, is_gate)`.
+pub fn classes() -> Vec<(&'static str, bool)> {
+    with_graph(|g| g.classes.iter().map(|c| (c.name, c.gate)).collect())
+}
+
+/// The observed order edges, as `(held class, acquired class)` pairs.
+pub fn order_edges() -> Vec<(&'static str, &'static str)> {
+    with_graph(|g| {
+        g.edges
+            .keys()
+            .map(|&(a, b)| (g.classes[a.0].name, g.classes[b.0].name))
+            .collect()
+    })
+}
+
+/// Search the recorded order graph, restricted to classes accepted by
+/// `filter`, for a cycle; returns the class names along one if found.
+/// Violating edges are never inserted, so this returns `None` unless the
+/// checker itself is broken — the clean-run discipline test asserts
+/// exactly that over the real protocols' classes.
+pub fn find_cycle(filter: impl Fn(&str) -> bool) -> Option<Vec<&'static str>> {
+    with_graph(|g| {
+        let keep: Vec<bool> = g.classes.iter().map(|c| filter(c.name)).collect();
+        // iterative DFS with tri-state marks over the filtered subgraph
+        #[derive(Clone, Copy, PartialEq)]
+        enum Mark {
+            New,
+            Open,
+            Done,
+        }
+        let mut marks = vec![Mark::New; g.classes.len()];
+        for start in 0..g.classes.len() {
+            if !keep[start] || marks[start] != Mark::New {
+                continue;
+            }
+            let mut stack = vec![(ClassId(start), 0usize)];
+            marks[start] = Mark::Open;
+            while !stack.is_empty() {
+                // advance the top frame's successor cursor to the next
+                // kept neighbour, then release the frame borrow before
+                // mutating the stack
+                let (c, next) = {
+                    let frame = stack.last_mut().expect("stack checked non-empty");
+                    let c = frame.0;
+                    let succs = g.adj.get(&c).map(Vec::as_slice).unwrap_or(&[]);
+                    let mut found = None;
+                    while frame.1 < succs.len() {
+                        let n = succs[frame.1];
+                        frame.1 += 1;
+                        if keep[n.0] {
+                            found = Some(n);
+                            break;
+                        }
+                    }
+                    (c, found)
+                };
+                match next {
+                    Some(n) if marks[n.0] == Mark::Open => {
+                        // cycle: unwind the stack back to n
+                        let mut names: Vec<&'static str> = stack
+                            .iter()
+                            .skip_while(|(s, _)| *s != n)
+                            .map(|(s, _)| g.classes[s.0].name)
+                            .collect();
+                        names.push(g.classes[n.0].name);
+                        return Some(names);
+                    }
+                    Some(n) if marks[n.0] == Mark::New => {
+                        marks[n.0] = Mark::Open;
+                        stack.push((n, 0));
+                    }
+                    Some(_) => {} // Done: skip
+                    None => {
+                        marks[c.0] = Mark::Done;
+                        stack.pop();
+                    }
+                }
+            }
+        }
+        None
+    })
+}
+
+/// Classes of the locks the current thread holds, outermost first.
+pub fn held_classes() -> Vec<&'static str> {
+    HELD.with(|h| {
+        let held = h.borrow();
+        with_graph(|g| held.iter().map(|e| g.classes[e.class.0].name).collect())
+    })
+}
+
+/// Fallback class for locks built through the plain `new` constructors:
+/// one class per construction site, so unmigrated code is still checked
+/// (the static lint separately forbids anonymous construction in
+/// facade-governed modules).
+fn anon_class(kind: &str, site: &'static Location<'static>) -> ClassId {
+    let name = format!("anon.{kind}@{}:{}", site.file(), site.line());
+    with_graph(|g| {
+        if let Some(&id) = g.by_name.get(name.as_str()) {
+            return id;
+        }
+        let leaked: &'static str = Box::leak(name.into_boxed_str());
+        g.intern(leaked, false)
+    })
+}
+
+/// Class-checked mutex: `std::sync::Mutex` plus a lock class consulted
+/// on every acquisition. See the module docs for the rules.
+pub struct Mutex<T> {
+    inner: StdMutex<T>,
+    class: ClassId,
+}
+
+impl<T> Mutex<T> {
+    /// Anonymous construction: a per-call-site fallback class.
+    #[track_caller]
+    pub fn new(value: T) -> Self {
+        Self {
+            inner: StdMutex::new(value),
+            class: anon_class("mutex", Location::caller()),
+        }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+
+    #[track_caller]
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        let site = Location::caller();
+        // order is validated BEFORE blocking on the std lock: the
+        // inverted acquisition that would deadlock is exactly the one
+        // that never returns from lock()
+        check_order(self.class, site);
+        match self.inner.lock() {
+            Ok(inner) => Ok(self.wrap(inner, site)),
+            Err(poisoned) => Err(PoisonError::new(self.wrap(poisoned.into_inner(), site))),
+        }
+    }
+
+    fn wrap<'a>(
+        &'a self,
+        inner: StdMutexGuard<'a, T>,
+        site: &'static Location<'static>,
+    ) -> MutexGuard<'a, T> {
+        let token = push_held(self.class, site);
+        MutexGuard {
+            lock: self,
+            inner: ManuallyDrop::new(inner),
+            token,
+        }
+    }
+}
+
+impl<T> crate::sync::NamedMutex<T> for Mutex<T> {
+    /// A mutex of lock class `class`. Instances sharing a class share
+    /// order-graph edges (and may never nest within each other).
+    fn new_named(class: &'static str, value: T) -> Self {
+        Self {
+            inner: StdMutex::new(value),
+            class: register(class, false),
+        }
+    }
+
+    /// A job-serialization **gate** of class `class`: exempt from the
+    /// condvar/barrier wait-while-holding checks (it is designed to be
+    /// held across a whole coordinated run), but a full participant in
+    /// the order graph.
+    fn new_gate(class: &'static str, value: T) -> Self {
+        Self {
+            inner: StdMutex::new(value),
+            class: register(class, true),
+        }
+    }
+}
+
+/// Guard over the real `std::sync::MutexGuard` plus the held-stack
+/// token it pops on drop.
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+    inner: ManuallyDrop<StdMutexGuard<'a, T>>,
+    token: u64,
+}
+
+impl<'a, T> MutexGuard<'a, T> {
+    /// Condvar hand-off: surrender the std guard without running this
+    /// guard's drop (the held-stack entry is released by the caller
+    /// around the actual wait).
+    fn dismantle(self) -> (&'a Mutex<T>, StdMutexGuard<'a, T>, u64) {
+        let mut this = ManuallyDrop::new(self);
+        // SAFETY: `this` is ManuallyDrop, so our Drop (which would both
+        // pop the held entry and drop `inner`) never runs; the inner
+        // guard is taken exactly once here and `this` is never touched
+        // again.
+        let inner = unsafe { ManuallyDrop::take(&mut this.inner) };
+        (this.lock, inner, this.token)
+    }
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        release_held(self.token);
+        // SAFETY: drop is the one place the inner guard is released on
+        // the normal path; `dismantle` is the only other consumer and it
+        // suppresses this Drop entirely via ManuallyDrop.
+        unsafe { ManuallyDrop::drop(&mut self.inner) };
+    }
+}
+
+/// Class-checked condition variable: delegates to `std::sync::Condvar`,
+/// flagging waits entered while the thread holds any second (non-gate)
+/// facade lock.
+pub struct Condvar {
+    inner: StdCondvar,
+    class: &'static str,
+}
+
+impl Condvar {
+    /// Anonymous construction (reported as `anon.condvar@file:line`).
+    #[track_caller]
+    pub fn new() -> Self {
+        let site = Location::caller();
+        let name = format!("anon.condvar@{}:{}", site.file(), site.line());
+        Self {
+            inner: StdCondvar::new(),
+            class: Box::leak(name.into_boxed_str()),
+        }
+    }
+
+    #[track_caller]
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let site = Location::caller();
+        self.check_wait(&guard, site);
+        let (lock, std_guard, token) = guard.dismantle();
+        release_held(token);
+        match self.inner.wait(std_guard) {
+            Ok(inner) => Ok(lock.wrap(inner, site)),
+            Err(poisoned) => Err(PoisonError::new(lock.wrap(poisoned.into_inner(), site))),
+        }
+    }
+
+    #[track_caller]
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        let site = Location::caller();
+        self.check_wait(&guard, site);
+        let (lock, std_guard, token) = guard.dismantle();
+        release_held(token);
+        match self.inner.wait_timeout(std_guard, dur) {
+            Ok((inner, timeout)) => Ok((lock.wrap(inner, site), timeout)),
+            Err(poisoned) => {
+                let (inner, timeout) = poisoned.into_inner();
+                Err(PoisonError::new((lock.wrap(inner, site), timeout)))
+            }
+        }
+    }
+
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+
+    /// The wait releases only `guard`'s mutex: holding any second
+    /// non-gate lock across the sleep blocks that lock for as long as
+    /// the wakeup takes — flag it before sleeping.
+    fn check_wait<T>(&self, guard: &MutexGuard<'_, T>, site: &'static Location<'static>) {
+        let waited = with_graph(|g| g.classes[guard.lock.class.0].name);
+        let report = HELD.with(|h| {
+            let held = h.borrow();
+            let offending: Vec<String> = with_graph(|g| {
+                held.iter()
+                    .filter(|e| e.token != guard.token && !g.classes[e.class.0].gate)
+                    .map(|e| {
+                        format!("    {:?} held since {}", g.classes[e.class.0].name, e.site)
+                    })
+                    .collect()
+            });
+            if offending.is_empty() {
+                None
+            } else {
+                Some(format!(
+                    "lockdep: condvar wait while holding a second lock\n  \
+                     waiting on condvar {:?} (releases only mutex {:?}) at {site}\n  \
+                     while holding:\n{}",
+                    self.class,
+                    waited,
+                    offending.join("\n")
+                ))
+            }
+        });
+        if let Some(report) = report {
+            panic!("{report}");
+        }
+    }
+}
+
+impl crate::sync::NamedCondvar for Condvar {
+    /// A condvar of class `class` (used in violation reports; condvars
+    /// do not participate in the order graph).
+    fn new_named(class: &'static str) -> Self {
+        Self {
+            inner: StdCondvar::new(),
+            class,
+        }
+    }
+}
+
+impl Default for Condvar {
+    #[track_caller]
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Class-checked barrier: delegates to `std::sync::Barrier`, flagging
+/// waits entered while holding any non-gate facade lock (a barrier wait
+/// blocks until the whole fleet arrives — holding a lock across it
+/// starves every contender for the full rendezvous).
+pub struct Barrier {
+    inner: StdBarrier,
+    class: &'static str,
+}
+
+impl Barrier {
+    /// Anonymous construction (reported as `anon.barrier@file:line`).
+    #[track_caller]
+    pub fn new(n: usize) -> Self {
+        let site = Location::caller();
+        let name = format!("anon.barrier@{}:{}", site.file(), site.line());
+        Self {
+            inner: StdBarrier::new(n),
+            class: Box::leak(name.into_boxed_str()),
+        }
+    }
+
+    #[track_caller]
+    pub fn wait(&self) -> BarrierWaitResult {
+        check_none_held(
+            "barrier wait while holding a lock",
+            format!(
+                "waiting on barrier {:?} at {}",
+                self.class,
+                Location::caller()
+            ),
+            true,
+        );
+        self.inner.wait()
+    }
+}
+
+impl crate::sync::NamedBarrier for Barrier {
+    /// A barrier of class `class` (used in violation reports).
+    fn new_named(class: &'static str, n: usize) -> Self {
+        Self {
+            inner: StdBarrier::new(n),
+            class,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sync::{NamedCondvar, NamedMutex};
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    // Unit tests here exercise the bookkeeping primitives; the
+    // discipline itself (seeded AB/BA, condvar double-lock, clean-run
+    // acyclicity over the real protocols) is pinned end-to-end in
+    // rust/tests/lockdep_discipline.rs.
+
+    #[test]
+    fn guards_push_and_pop_the_held_stack() {
+        let m = Mutex::new_named("unit.held.a", 1);
+        assert!(!held_classes().contains(&"unit.held.a"));
+        let g = m.lock().unwrap();
+        assert!(held_classes().contains(&"unit.held.a"));
+        drop(g);
+        assert!(!held_classes().contains(&"unit.held.a"));
+    }
+
+    #[test]
+    fn out_of_order_guard_drops_release_correctly() {
+        let a = Mutex::new_named("unit.ooo.a", 1);
+        let b = Mutex::new_named("unit.ooo.b", 2);
+        let ga = a.lock().unwrap();
+        let gb = b.lock().unwrap();
+        // drop the OUTER guard first: release is by token, not by pop
+        drop(ga);
+        assert_eq!(held_classes(), vec!["unit.ooo.b"]);
+        drop(gb);
+        assert!(held_classes().is_empty());
+    }
+
+    #[test]
+    fn consistent_nesting_records_edges_without_panicking() {
+        let a = Mutex::new_named("unit.edge.a", ());
+        let b = Mutex::new_named("unit.edge.b", ());
+        for _ in 0..2 {
+            let _ga = a.lock().unwrap();
+            let _gb = b.lock().unwrap();
+        }
+        assert!(order_edges().contains(&("unit.edge.a", "unit.edge.b")));
+        assert!(find_cycle(|c| c.starts_with("unit.edge.")).is_none());
+    }
+
+    #[test]
+    fn inversion_panics_and_edge_is_not_recorded() {
+        let a = Mutex::new_named("unit.inv.a", ());
+        let b = Mutex::new_named("unit.inv.b", ());
+        {
+            let _ga = a.lock().unwrap();
+            let _gb = b.lock().unwrap();
+        }
+        let flagged = catch_unwind(AssertUnwindSafe(|| {
+            let _gb = b.lock().unwrap();
+            let _ga = a.lock().unwrap();
+        }));
+        let msg = format!("{:?}", flagged.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("lock-order cycle"), "{msg}");
+        // the violating edge was rejected: the graph stays acyclic
+        assert!(!order_edges().contains(&("unit.inv.b", "unit.inv.a")));
+        assert!(find_cycle(|c| c.starts_with("unit.inv.")).is_none());
+    }
+
+    #[test]
+    fn gate_wait_exemption_applies_to_gates_only() {
+        let gate = Mutex::new_gate("unit.gate.run", ());
+        let m = Mutex::new_named("unit.gate.inner", ());
+        let cv = Condvar::new_named("unit.gate.cv");
+        let _g = gate.lock().unwrap();
+        let guard = m.lock().unwrap();
+        // waiting under the gate alone is allowed (times out quickly)
+        let (guard, _) = cv.wait_timeout(guard, Duration::from_millis(5)).unwrap();
+        drop(guard);
+        assert!(classes().contains(&("unit.gate.run", true)));
+    }
+
+    #[test]
+    fn anonymous_locks_get_per_site_classes() {
+        let m = Mutex::new(0);
+        let g = m.lock().unwrap();
+        let names = held_classes();
+        assert!(
+            names.iter().any(|n| n.starts_with("anon.mutex@")),
+            "{names:?}"
+        );
+        drop(g);
+    }
+}

@@ -1,48 +1,106 @@
 //! Synchronization facade: the one import path for every concurrency
 //! primitive the coordinator and serving subsystems use.
 //!
-//! In a **normal build** this module is nothing but re-exports of
-//! `std::sync` (and `std::thread` for the worker-pool spawn path): zero
-//! wrappers, zero overhead, the exact types the standard library hands
-//! out. `cargo build` with default features compiles every `Mutex`,
-//! `Condvar`, `Barrier` and atomic in the tree to the same machine code
-//! as before the facade existed.
+//! The facade has **three personalities**, selected by feature flag:
 //!
-//! With the **`model` feature** enabled, the same names resolve to the
-//! instrumented types in [`model`]: a cooperative deterministic-
-//! interleaving model checker ("shuttle-lite"). Every lock acquire,
-//! condvar wait/notify, atomic access and thread spawn becomes a yield
-//! point at which a per-run scheduler — seeded pseudo-random or bounded
-//! exhaustive DFS — picks which thread runs next, so
-//! `rust/tests/model_concurrency.rs` can drive the `HaloBoard`,
-//! `StageScheduler`, `JobQueue` and `WorkerPool` protocols through
-//! hundreds-to-thousands of distinct schedules and detect deadlocks
-//! (all threads blocked, none runnable) and lost wakeups (progress
-//! possible only through a timeout nobody should need). Outside an
-//! active [`model::explore`] run the instrumented types fall back to
-//! plain `std::sync` behaviour, so the rest of the test suite still
-//! passes under `--features model`.
+//! * **default** — nothing but re-exports of `std::sync` (and
+//!   `std::thread` for the worker-pool spawn path): zero wrappers, zero
+//!   overhead, the exact types the standard library hands out. The named
+//!   constructors below compile to plain `Mutex::new` — the class name
+//!   is discarded at compile time — so `cargo build` with default
+//!   features produces the same machine code as before the facade
+//!   existed.
 //!
-//! **Module contract** (enforced by `scripts/lint_unsafe.py`, a hard CI
-//! gate): the concurrency modules — `coordinator::{halo, scheduler,
-//! exec}` and everything under `serve` — import `Mutex`/`Condvar` (and
-//! friends) from here, never from `std::sync` directly. A primitive that
-//! bypasses the facade is invisible to the model checker, which silently
-//! shrinks the verified surface.
+//! * **`model`** — the same names resolve to the instrumented types in
+//!   [`model`]: a cooperative deterministic-interleaving model checker
+//!   ("shuttle-lite"). Every lock acquire, condvar wait/notify, atomic
+//!   access and thread spawn becomes a yield point at which a per-run
+//!   scheduler — seeded pseudo-random or bounded exhaustive DFS — picks
+//!   which thread runs next, so `rust/tests/model_concurrency.rs` can
+//!   drive the `HaloBoard`, `StageScheduler`, `JobQueue` and
+//!   `WorkerPool` protocols through hundreds-to-thousands of distinct
+//!   schedules and detect deadlocks (all threads blocked, none runnable)
+//!   and lost wakeups. It explores interleavings of *scripted
+//!   scenarios*: coverage is exactly the schedules of the protocols the
+//!   test file drives.
+//!
+//! * **`lockdep`** — the same names resolve to the class-checked types
+//!   in [`lockdep`]: a runtime lock-*order* checker. Every primitive is
+//!   constructed with a static lock class; per-thread held stacks and a
+//!   global class-order graph flag a *potential* AB/BA deadlock the
+//!   first time the two orders are ever observed — on any run, under
+//!   any schedule, even if the deadlock never manifests — plus condvar/
+//!   barrier waits while double-locked and guards leaked across
+//!   `WorkerPool` job boundaries. Unlike `model`, it checks whatever
+//!   actually runs: the integration suite, the serve smoke, production
+//!   traffic. Run the model checker when changing a protocol's logic;
+//!   run lockdep (CI runs the whole default suite plus the serve smoke
+//!   under it) to police lock ordering on every path anything exercises.
+//!
+//! `model` and `lockdep` are mutually exclusive (enforced below): each
+//! replaces the facade types wholesale.
+//!
+//! ## Global lock order
+//!
+//! Classes are ordered by the documented hierarchy below; the lockdep
+//! personality proves at runtime that no execution violates it, and
+//! `scripts/lint_locks.py` proves statically that no site is born
+//! outside it (every construction must use a registered class name, and
+//! textually nested scopes must be acyclic).
+//!
+//! ```text
+//! serve.exec.run (gate)                 executor: serializes whole runs
+//!   ├─> serve.cache.plans               plan-cache map
+//!   ├─> serve.pool.queue                worker-pool task queue
+//!   └─> serve.pool.latch                per-run completion latch
+//! (leaves — never held while acquiring another facade lock)
+//!   halo.cell, coord.results, sched.state, sched.wakeup,
+//!   serve.response.line, serve.queue.jobs, exec.fleet.barrier
+//! ```
+//!
+//! `serve.exec.run` is the single **gate** class: it is designed to be
+//! held by the run leader across an entire barrier-coordinated job,
+//! including condvar and barrier waits, and is therefore exempt from the
+//! wait-while-holding checks (only — it participates in the order graph
+//! like any other class). Everything else is a leaf: acquire, touch the
+//! guarded state, release. New subsystems must either slot under the
+//! gate or stay leaves; anything else extends this diagram first.
+//!
+//! ## Module contract
+//!
+//! Enforced by `scripts/lint_unsafe.py` and `scripts/lint_locks.py`,
+//! both hard CI gates: the concurrency modules — `coordinator::{halo,
+//! scheduler, exec}` and everything under `serve` — import
+//! `Mutex`/`Condvar` (and friends) from here, never from `std::sync`
+//! directly, and construct them through the named-class constructors
+//! ([`NamedMutex`], [`NamedCondvar`], [`NamedBarrier`]) with a class
+//! name registered in `lint_locks.py`. A primitive that bypasses the
+//! facade is invisible to both checkers, which silently shrinks the
+//! verified surface; an anonymous one is invisible to the order
+//! discipline.
+
+#[cfg(all(feature = "model", feature = "lockdep"))]
+compile_error!(
+    "features `model` and `lockdep` are mutually exclusive: each replaces the \
+     sync facade types wholesale (run the two suites as separate builds)"
+);
 
 #[cfg(feature = "model")]
 pub mod model;
 
-#[cfg(not(feature = "model"))]
+#[cfg(all(feature = "lockdep", not(feature = "model")))]
+pub mod lockdep;
+
+#[cfg(not(any(feature = "model", feature = "lockdep")))]
 pub use std::sync::{
     Arc, Barrier, BarrierWaitResult, Condvar, LockResult, Mutex, MutexGuard, PoisonError,
     WaitTimeoutResult,
 };
 
-#[cfg(not(feature = "model"))]
+#[cfg(not(any(feature = "model", feature = "lockdep")))]
 pub use std::sync::atomic;
 
-#[cfg(not(feature = "model"))]
+#[cfg(not(any(feature = "model", feature = "lockdep")))]
 pub use std::thread;
 
 #[cfg(feature = "model")]
@@ -52,3 +110,114 @@ pub use model::{
 
 #[cfg(feature = "model")]
 pub use std::sync::{Arc, LockResult, PoisonError};
+
+#[cfg(all(feature = "lockdep", not(feature = "model")))]
+pub use lockdep::{checkpoint, Barrier, Condvar, Mutex, MutexGuard};
+
+#[cfg(all(feature = "lockdep", not(feature = "model")))]
+pub use std::sync::{
+    atomic, Arc, BarrierWaitResult, LockResult, PoisonError, WaitTimeoutResult,
+};
+
+#[cfg(all(feature = "lockdep", not(feature = "model")))]
+pub use std::thread;
+
+/// Job-boundary assertion point. Under `lockdep` this panics if the
+/// calling thread still holds any facade lock (a guard leaked across a
+/// `WorkerPool` task boundary); in the other personalities it is a
+/// no-op that compiles away.
+#[cfg(not(all(feature = "lockdep", not(feature = "model"))))]
+#[inline(always)]
+pub fn checkpoint(_label: &'static str) {}
+
+/// Named-class mutex construction: `Mutex::new_named("halo.cell", v)`
+/// at every facade-governed site (the anonymous `Mutex::new` is
+/// forbidden there by `scripts/lint_locks.py`).
+///
+/// Under the default and `model` personalities the class name is
+/// discarded at compile time — `new_named` is `Mutex::new` with an
+/// ignored argument, inlined to nothing extra. Under `lockdep` the name
+/// becomes the lock class consulted on every acquisition.
+pub trait NamedMutex<T>: Sized {
+    /// A mutex of lock class `class` (see the global lock order above).
+    fn new_named(class: &'static str, value: T) -> Self;
+
+    /// A job-serialization **gate** of class `class`: exempt from
+    /// lockdep's wait-while-holding checks (it is designed to be held
+    /// across a whole coordinated run) but a full participant in the
+    /// order graph. meltframe has exactly one: `serve.exec.run`.
+    fn new_gate(class: &'static str, value: T) -> Self;
+}
+
+/// Named-class condvar construction; the class names the condvar in
+/// lockdep violation reports (condvars do not join the order graph).
+pub trait NamedCondvar: Sized {
+    fn new_named(class: &'static str) -> Self;
+}
+
+/// Named-class barrier construction; the class names the barrier in
+/// lockdep violation reports.
+pub trait NamedBarrier: Sized {
+    fn new_named(class: &'static str, n: usize) -> Self;
+}
+
+#[cfg(not(any(feature = "model", feature = "lockdep")))]
+impl<T> NamedMutex<T> for Mutex<T> {
+    #[inline(always)]
+    fn new_named(_class: &'static str, value: T) -> Self {
+        Mutex::new(value)
+    }
+
+    #[inline(always)]
+    fn new_gate(_class: &'static str, value: T) -> Self {
+        Mutex::new(value)
+    }
+}
+
+#[cfg(not(any(feature = "model", feature = "lockdep")))]
+impl NamedCondvar for Condvar {
+    #[inline(always)]
+    fn new_named(_class: &'static str) -> Self {
+        Condvar::new()
+    }
+}
+
+#[cfg(not(any(feature = "model", feature = "lockdep")))]
+impl NamedBarrier for Barrier {
+    #[inline(always)]
+    fn new_named(_class: &'static str, n: usize) -> Self {
+        Barrier::new(n)
+    }
+}
+
+// Under the model checker the class name is likewise discarded: lock
+// *ordering* is lockdep's job; the model scheduler needs only the yield
+// points the instrumented types already provide.
+#[cfg(feature = "model")]
+impl<T> NamedMutex<T> for Mutex<T> {
+    #[inline(always)]
+    fn new_named(_class: &'static str, value: T) -> Self {
+        Mutex::new(value)
+    }
+
+    #[inline(always)]
+    fn new_gate(_class: &'static str, value: T) -> Self {
+        Mutex::new(value)
+    }
+}
+
+#[cfg(feature = "model")]
+impl NamedCondvar for Condvar {
+    #[inline(always)]
+    fn new_named(_class: &'static str) -> Self {
+        Condvar::new()
+    }
+}
+
+#[cfg(feature = "model")]
+impl NamedBarrier for Barrier {
+    #[inline(always)]
+    fn new_named(_class: &'static str, n: usize) -> Self {
+        Barrier::new(n)
+    }
+}

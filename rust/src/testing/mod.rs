@@ -177,8 +177,9 @@ mod tests {
     #[test]
     fn value_digest_detects_value_and_position_drift() {
         let base = vec![1.0f32, 2.0, 3.0, 4.0];
+        let copy = base.clone();
         let d = value_digest(&base);
-        assert_eq!(d, value_digest(&base.clone()), "deterministic");
+        assert_eq!(d, value_digest(&copy), "deterministic");
         // a changed value changes the digest
         assert_ne!(d, value_digest(&[1.0, 2.0, 3.0, 4.000001]));
         // swapping two positions changes it (position sensitivity)

@@ -1,0 +1,277 @@
+//! Lock-order discipline under the lockdep facade (`--features lockdep`).
+//!
+//! Two kinds of test keep the checker honest in both directions:
+//!
+//! * **Seeded bugs** — classic ordering defects that never actually
+//!   deadlock in the test (the acquisitions are sequential), yet lockdep
+//!   must flag on *first observation*: an AB/BA inversion, a condvar
+//!   wait entered while double-locked, same-class nesting, and a guard
+//!   leaked across a `WorkerPool`-style job boundary.
+//! * **Clean runs** — the real protocols (persistent executor over the
+//!   fused exchange pipeline, plan-cache hit path, job queue, response
+//!   slot, worker pool) executed end to end, asserting the recorded
+//!   class-order graph is cycle-free and contains exactly the documented
+//!   hierarchy (`serve.exec.run` gate over its three children).
+//!
+//! Run with:
+//!
+//! ```text
+//! cargo test --features lockdep --test lockdep_discipline
+//! ```
+//!
+//! Test-local lock classes are prefixed `test.` so the clean-run
+//! assertions can scope the graph to production classes only; violating
+//! edges are never recorded, so the seeded tests cannot poison the
+//! clean-run ones whatever order the harness runs them in.
+
+#![cfg(feature = "lockdep")]
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Duration;
+
+use meltframe::config::json::JsonValue;
+use meltframe::coordinator::halo::HaloMode;
+use meltframe::coordinator::pipeline::ExecOptions;
+use meltframe::serve::protocol::{execute_request, parse_request, Request};
+use meltframe::serve::{Executor, JobQueue, ResponseSlot, WorkerPool};
+use meltframe::sync::lockdep;
+use meltframe::sync::{checkpoint, Arc, Condvar, Mutex, NamedCondvar, NamedMutex};
+
+/// The panic payload lockdep raises is a formatted `String`.
+fn violation_message(result: std::thread::Result<()>) -> String {
+    let payload = result.expect_err("lockdep should have flagged a violation");
+    match payload.downcast_ref::<String>() {
+        Some(s) => s.clone(),
+        None => panic!("violation payload was not the lockdep report string"),
+    }
+}
+
+#[test]
+fn seeded_ab_ba_inversion_is_flagged_without_deadlocking() {
+    let a = Arc::new(Mutex::new_named("test.inv.a", ()));
+    let b = Arc::new(Mutex::new_named("test.inv.b", ()));
+
+    // Thread 1 establishes a -> b and exits before thread 2 starts: the
+    // inverted orders are never concurrent, so no real deadlock is even
+    // possible — exactly the case schedule-based checking cannot see and
+    // first-observation order checking must.
+    {
+        let (a, b) = (Arc::clone(&a), Arc::clone(&b));
+        std::thread::spawn(move || {
+            let _ga = a.lock().unwrap();
+            let _gb = b.lock().unwrap();
+        })
+        .join()
+        .expect("establishing a -> b violates nothing");
+    }
+
+    let msg = violation_message(catch_unwind(AssertUnwindSafe(|| {
+        let _gb = b.lock().unwrap();
+        let _ga = a.lock().unwrap(); // closes the cycle: flagged here
+    })));
+    assert!(msg.contains("lock-order cycle"), "unexpected report: {msg}");
+    assert!(
+        msg.contains("test.inv.a") && msg.contains("test.inv.b"),
+        "report must name both classes: {msg}"
+    );
+    // both acquisition sites — the held lock's and the closing one's —
+    // point into this file
+    assert!(
+        msg.matches("lockdep_discipline.rs").count() >= 2,
+        "report must carry both acquisition sites: {msg}"
+    );
+
+    // the violating edge was rejected, so the recorded graph stays
+    // acyclic even after the flag
+    assert!(lockdep::find_cycle(|c| c.starts_with("test.inv.")).is_none());
+}
+
+#[test]
+fn seeded_condvar_wait_while_double_locked_is_flagged() {
+    let outer = Mutex::new_named("test.cv.outer", ());
+    let inner = Mutex::new_named("test.cv.inner", ());
+    let cv = Condvar::new_named("test.cv.ready");
+
+    let msg = violation_message(catch_unwind(AssertUnwindSafe(|| {
+        let _outer = outer.lock().unwrap();
+        let guard = inner.lock().unwrap();
+        // the wait would release only `inner`, parking the thread while
+        // `outer` stays locked for the whole sleep
+        let _ = cv.wait_timeout(guard, Duration::from_millis(1));
+    })));
+    assert!(
+        msg.contains("condvar wait while holding a second lock"),
+        "unexpected report: {msg}"
+    );
+    assert!(
+        msg.contains("test.cv.outer") && msg.contains("test.cv.ready"),
+        "report must name the held class and the condvar: {msg}"
+    );
+}
+
+#[test]
+fn seeded_same_class_nesting_is_flagged() {
+    // two instances of one class: no order between them can ever be
+    // defined, so nesting is flagged immediately
+    let first = Mutex::new_named("test.same", 1);
+    let second = Mutex::new_named("test.same", 2);
+
+    let msg = violation_message(catch_unwind(AssertUnwindSafe(|| {
+        let _g1 = first.lock().unwrap();
+        let _g2 = second.lock().unwrap();
+    })));
+    assert!(msg.contains("same-class nesting"), "unexpected report: {msg}");
+    assert!(msg.contains("test.same"), "report must name the class: {msg}");
+}
+
+#[test]
+fn seeded_guard_leak_across_job_boundary_is_flagged() {
+    // the same assertion WorkerPool's worker loop runs after every task
+    // (tests get their own harness thread, so the leaked entry cannot
+    // bleed into other tests)
+    let m = Mutex::new_named("test.leak", ());
+    std::mem::forget(m.lock().unwrap());
+
+    let msg = violation_message(catch_unwind(AssertUnwindSafe(|| {
+        checkpoint("test job boundary");
+    })));
+    assert!(
+        msg.contains("lock guard held across a job boundary"),
+        "unexpected report: {msg}"
+    );
+    assert!(msg.contains("test.leak"), "report must name the class: {msg}");
+}
+
+#[test]
+fn clean_boundary_checkpoint_passes() {
+    let m = Mutex::new_named("test.clean.boundary", ());
+    drop(m.lock().unwrap());
+    checkpoint("test job boundary"); // held stack is empty: must not panic
+}
+
+fn job_line(id: &str, seed: usize) -> String {
+    format!(
+        "{{\"id\": \"{id}\", \
+         \"input\": {{\"kind\": \"image\", \"dims\": [24, 25], \"seed\": {seed}}}, \
+         \"jobs\": [{{\"kind\": \"gaussian\", \"window\": [3, 3], \"sigma\": 1.0}}, \
+                    {{\"kind\": \"curvature\", \"window\": [3, 3]}}, \
+                    {{\"kind\": \"median\", \"window\": [3, 3]}}]}}"
+    )
+}
+
+/// Execute one job line and return its result digest.
+fn run_job(line: &str, exec: &Executor) -> String {
+    let req = match parse_request(line).expect("well-formed job line") {
+        Request::Run(req) => req,
+        other => panic!("expected a job request, got {other:?}"),
+    };
+    let response = execute_request(&req, exec);
+    let v = JsonValue::parse(&response).expect("well-formed response");
+    assert_eq!(
+        v.field("ok").expect("ok field"),
+        &JsonValue::Bool(true),
+        "job failed under lockdep: {response}"
+    );
+    v.field("digest")
+        .expect("digest field")
+        .as_str()
+        .expect("digest is a string")
+        .to_string()
+}
+
+/// The real protocols, end to end, under the lock-order checker: a
+/// persistent executor (pool + plan cache + run-lock gate) drives the
+/// fused exchange pipeline twice (miss, then cache hit), the daemon's
+/// hand-off primitives are exercised cross-thread, and the recorded
+/// order graph must be exactly the documented hierarchy — cycle-free,
+/// with `serve.exec.run` the only non-leaf.
+#[test]
+fn clean_run_real_protocols_record_an_acyclic_documented_order() {
+    // oversubscribed fleet (more chunks than workers) in exchange mode:
+    // halo cells, stage scheduler and fleet barrier all participate
+    let opts = ExecOptions::native(3)
+        .with_tile_rows(4)
+        .with_halo_mode(HaloMode::Exchange);
+    let exec = Executor::persistent(opts, 4);
+    let first = run_job(&job_line("cold", 11), &exec);
+    let second = run_job(&job_line("warm", 11), &exec); // plan-cache hit path
+    assert_eq!(first, second, "cache-hit digest must be bit-for-bit");
+
+    // daemon hand-off primitives, cross-thread
+    let queue: Arc<JobQueue<usize>> = Arc::new(JobQueue::new(4));
+    let slot = Arc::new(ResponseSlot::new());
+    let consumer = {
+        let (queue, slot) = (Arc::clone(&queue), Arc::clone(&slot));
+        std::thread::spawn(move || {
+            while let Some(job) = queue.pop() {
+                slot.fill(format!("job {job} done"));
+            }
+        })
+    };
+    queue.push(1).expect("admit");
+    assert_eq!(slot.wait(), "job 1 done");
+    queue.close();
+    consumer.join().expect("consumer exits");
+
+    // a bare pool job on top (run_scoped latch + queue + checkpoint)
+    let pool = WorkerPool::new(2);
+    let results = pool.run_scoped(4, Ok, || {});
+    assert_eq!(results.len(), 4);
+    drop(pool);
+
+    let production = |class: &str| !class.starts_with("test.") && !class.starts_with("unit.");
+    assert_eq!(
+        lockdep::find_cycle(production),
+        None,
+        "real protocols recorded a lock-order cycle"
+    );
+
+    let classes = lockdep::classes();
+    for expected in [
+        "halo.cell",
+        "sched.state",
+        "serve.cache.plans",
+        "serve.pool.queue",
+        "serve.pool.latch",
+        "serve.queue.jobs",
+        "serve.response.line",
+    ] {
+        assert!(
+            classes.iter().any(|&(name, _)| name == expected),
+            "class {expected:?} never registered — a construction site lost its name"
+        );
+    }
+    assert!(
+        classes.contains(&("serve.exec.run", true)),
+        "the run lock must be registered as a gate"
+    );
+    assert!(
+        !classes.iter().any(|&(name, _)| name.starts_with("anon.")),
+        "an anonymous facade lock slipped into a real protocol: {classes:?}"
+    );
+
+    // the documented hierarchy: the gate over its children…
+    let edges = lockdep::order_edges();
+    for (from, to) in [
+        ("serve.exec.run", "serve.cache.plans"),
+        ("serve.exec.run", "serve.pool.queue"),
+        ("serve.exec.run", "serve.pool.latch"),
+    ] {
+        assert!(
+            edges.contains(&(from, to)),
+            "documented edge {from} -> {to} was never observed; edges: {edges:?}"
+        );
+    }
+    // …and every production edge starts at the gate: everything else is
+    // a leaf, exactly as the facade docs promise
+    for &(from, to) in &edges {
+        if production(from) && production(to) {
+            assert_eq!(
+                from, "serve.exec.run",
+                "undocumented nesting {from} -> {to}: update the global lock \
+                 order in sync/mod.rs (and lint_locks.py) deliberately or fix \
+                 the nesting"
+            );
+        }
+    }
+}

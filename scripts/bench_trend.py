@@ -1,19 +1,31 @@
 #!/usr/bin/env python3
 """Bench trend gate: diff a fresh BENCH_fusion.json against the previous
-run's artifact and warn (fail-soft) on median regressions.
+run's artifact and warn (fail-soft) on median regressions — or, in
+``--history`` mode, render the longer-window trajectory over a directory
+of archived artifacts.
 
 Usage:
     bench_trend.py OLD.json NEW.json [--threshold 0.10]
+    bench_trend.py --history DIR [--out FILE] [--threshold 0.10]
 
-Compares ``ns_per_op_median`` per series label shared by both files.
-A series whose median regressed by more than the threshold emits a GitHub
-``::warning`` annotation; the script always exits 0 — the gate informs,
-it does not block (quick-mode CI benches on shared runners are too noisy
-to hard-fail on).  A missing OLD file (first run, expired artifact) is
-reported and skipped.
+Two-file mode compares ``ns_per_op_median`` per series label shared by
+both files.  A series whose median regressed by more than the threshold
+emits a GitHub ``::warning`` annotation; the script always exits 0 — the
+gate informs, it does not block (quick-mode CI benches on shared runners
+are too noisy to hard-fail on).  A missing OLD file (first run, expired
+artifact) is reported and skipped.
+
+History mode scans DIR recursively for ``BENCH_fusion.json`` files (CI
+downloads each archived artifact into its own subdirectory, named by run
+number), orders them naturally by path, and emits one markdown table:
+one row per series, one column per archived run, plus a first->last
+delta column.  The table is printed and, with ``--out``, written to a
+file for upload as the trend-report artifact.  Same fail-soft contract:
+run-over-window regressions annotate, nothing blocks.
 """
 
 import json
+import re
 import sys
 from pathlib import Path
 
@@ -29,16 +41,112 @@ def medians(path):
     return out
 
 
-def main(argv):
-    args = [a for a in argv if not a.startswith("--")]
-    threshold = 0.10
-    for flag in argv:
-        if flag.startswith("--threshold"):
-            threshold = float(flag.split("=", 1)[1] if "=" in flag else argv[argv.index(flag) + 1])
-    if len(args) < 2:
-        print("usage: bench_trend.py OLD.json NEW.json [--threshold 0.10]")
+def natural_key(path):
+    """Sort "run-9" before "run-10": split digit runs and compare them
+    numerically (tagged tuples keep int/str comparisons well-defined)."""
+    return [(1, int(t)) if t.isdigit() else (0, t) for t in re.split(r"(\d+)", path.as_posix())]
+
+
+def history_report(history_dir, out_path, threshold):
+    """Longer-window trend: one markdown table over every archived
+    BENCH_fusion.json under `history_dir` (ordered naturally by path, so
+    per-run subdirectories named by run number read oldest -> newest).
+    Fail-soft like the two-file mode: always exits 0."""
+    root = Path(history_dir)
+    if not root.is_dir():
+        print(f"bench trend: history dir {history_dir} missing — skipping")
         return 0
-    old_path, new_path = args[0], args[1]
+
+    runs = []  # (column label, {series label: median ns/op})
+    for f in sorted(root.rglob("BENCH_fusion.json"), key=natural_key):
+        column = f.parent.name if f.parent != root else f.stem
+        try:
+            runs.append((column, medians(f)))
+        except (json.JSONDecodeError, OSError) as e:
+            print(f"::warning ::bench trend: unreadable {f} ({e}) — column dropped")
+    if not runs:
+        print(f"bench trend: no BENCH_fusion.json under {history_dir} — skipping")
+        return 0
+
+    labels = sorted(set().union(*(set(m) for _, m in runs)))
+    lines = [
+        f"# Bench trend: {len(runs)} archived run(s), {len(labels)} series",
+        "",
+        "Median ns/op per series across the retained artifact window",
+        "(oldest column first; `—` marks a run where the series was absent).",
+        "",
+        "| series | " + " | ".join(col for col, _ in runs) + " | Δ first→last |",
+        "|---" * (len(runs) + 2) + "|",
+    ]
+    regressions = 0
+    for label in labels:
+        values = [m.get(label) for _, m in runs]
+        present = [v for v in values if v is not None]
+        if len(present) >= 2 and present[0] > 0:
+            delta = (present[-1] - present[0]) / present[0]
+            delta_cell = f"{delta * 100:+.1f}%"
+            if delta > threshold:
+                regressions += 1
+                delta_cell += " ⚠"
+                print(
+                    f"::warning ::bench trend: '{label}' drifted {delta * 100:.1f}% "
+                    f"across the window ({present[0]:.0f} -> {present[-1]:.0f} ns/op, "
+                    f"threshold {threshold * 100:.0f}%)"
+                )
+        else:
+            delta_cell = "—"
+        cells = ["—" if v is None else f"{v:.0f}" for v in values]
+        lines.append(f"| {label} | " + " | ".join(cells) + f" | {delta_cell} |")
+    lines.append("")
+    lines.append(
+        f"{regressions} series drifted more than {threshold * 100:.0f}% first→last "
+        f"(fail-soft: informational only)."
+    )
+
+    report = "\n".join(lines)
+    print(report)
+    if out_path:
+        Path(out_path).write_text(report + "\n")
+        print(f"bench trend: report written to {out_path}")
+    return 0
+
+
+def main(argv):
+    threshold = 0.10
+    history = None
+    out = None
+    positional = []
+    i = 0
+    while i < len(argv):
+        arg = argv[i]
+        for name in ("--threshold", "--history", "--out"):
+            if arg == name or arg.startswith(name + "="):
+                if "=" in arg:
+                    value = arg.split("=", 1)[1]
+                else:
+                    i += 1
+                    value = argv[i]
+                if name == "--threshold":
+                    threshold = float(value)
+                elif name == "--history":
+                    history = value
+                else:
+                    out = value
+                break
+        else:
+            positional.append(arg)
+        i += 1
+
+    if history is not None:
+        return history_report(history, out, threshold)
+
+    if len(positional) < 2:
+        print(
+            "usage: bench_trend.py OLD.json NEW.json [--threshold 0.10]\n"
+            "       bench_trend.py --history DIR [--out FILE] [--threshold 0.10]"
+        )
+        return 0
+    old_path, new_path = positional[0], positional[1]
 
     if not Path(old_path).exists():
         print(f"bench trend: no previous bench at {old_path} (first run or expired artifact) — skipping")

@@ -1,0 +1,12 @@
+//! Known-bad fixture for lint_locks.py's self-test: anonymous lock
+//! construction in facade-governed code. Both sites below must be
+//! flagged by the anonymous-lock rule. Not compiled — scanned textually.
+
+use crate::sync::{Condvar, Mutex};
+
+fn build_anonymous() -> (Mutex<u32>, Condvar) {
+    // neither carries a lock class: invisible to the order discipline
+    let m = Mutex::new(0);
+    let c = Condvar::new();
+    (m, c)
+}

@@ -1,0 +1,28 @@
+//! Known-bad fixture for lint_locks.py's self-test: two functions nest
+//! the same pair of lock classes in opposite orders. The static order
+//! graph gets both fix.a -> fix.b and fix.b -> fix.a, and the cycle
+//! check must fail. Not compiled — scanned textually.
+
+use crate::sync::{Mutex, NamedMutex};
+
+struct Fixture {
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+}
+
+fn build() -> Fixture {
+    Fixture {
+        a: Mutex::new_named("fix.a", 0),
+        b: Mutex::new_named("fix.b", 0),
+    }
+}
+
+fn forward(s: &Fixture) {
+    let _ga = s.a.lock().unwrap();
+    let _gb = s.b.lock().unwrap();
+}
+
+fn backward(s: &Fixture) {
+    let _gb = s.b.lock().unwrap();
+    let _ga = s.a.lock().unwrap();
+}

@@ -1,0 +1,42 @@
+//! Known-good fixture for lint_locks.py's self-test: every primitive is
+//! constructed through a named class from the fixture registry, and the
+//! two mutexes nest in one consistent order (a over b), so the static
+//! order graph gets the edge fix.a -> fix.b and stays acyclic.
+//! Not compiled — scanned textually.
+
+use crate::sync::{Condvar, Mutex, NamedCondvar, NamedMutex};
+
+struct Fixture {
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+    gate: Mutex<()>,
+    ready: Condvar,
+}
+
+fn build() -> Fixture {
+    Fixture {
+        a: Mutex::new_named("fix.a", 0),
+        b: Mutex::new_named("fix.b", 0),
+        gate: Mutex::new_gate("fix.gate", ()),
+        ready: Condvar::new_named("fix.ready"),
+    }
+}
+
+fn ordered(s: &Fixture) {
+    let ga = s.a.lock().unwrap();
+    {
+        let gb = s.b.lock().unwrap();
+        drop(gb);
+    }
+    drop(ga);
+}
+
+fn sequential_not_nested(s: &Fixture) {
+    {
+        let gb = s.b.lock().unwrap();
+        drop(gb);
+    }
+    // a brace apart from the b scope above: no b -> a edge, no cycle
+    let ga = s.a.lock().unwrap();
+    drop(ga);
+}

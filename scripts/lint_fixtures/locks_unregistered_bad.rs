@@ -1,0 +1,14 @@
+//! Known-bad fixture for lint_locks.py's self-test: a class name absent
+//! from the registry, and a registered gate class constructed with the
+//! plain named constructor. Both must be flagged by the lock-registry
+//! rule. Not compiled — scanned textually.
+
+use crate::sync::{Mutex, NamedMutex};
+
+fn build_rogue() -> (Mutex<u32>, Mutex<()>) {
+    // "fixture.rogue" is in no registry
+    let rogue = Mutex::new_named("fixture.rogue", 0);
+    // "fix.gate" is registered as a gate: new_named is a mismatch
+    let demoted = Mutex::new_named("fix.gate", ());
+    (rogue, demoted)
+}

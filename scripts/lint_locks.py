@@ -1,0 +1,430 @@
+#!/usr/bin/env python3
+"""Static lock-discipline lint: no lock is born outside the order.
+
+Hard CI gate (exit 1 on any violation), the static half of the lockdep
+story (`rust/src/sync/lockdep.rs` is the runtime half). Three rules over
+the facade-governed modules:
+
+1. **anonymous-lock** — `Mutex::new` / `Condvar::new` / `Barrier::new`
+   (and `::default()`) are forbidden in non-test facade-module code:
+   every primitive must be constructed through the named-class
+   constructors (`Mutex::new_named`, `Mutex::new_gate`,
+   `Condvar::new_named`, `Barrier::new_named`) so the lockdep
+   personality can class it and this lint can order it.
+
+2. **lock-registry** — every class name used at a construction site must
+   be registered in `REGISTRY` below, with the matching primitive kind
+   and gate-ness; a registered class no construction uses is stale and
+   fails too. The registry is the single reviewable list of every lock
+   in the system — adding a lock means adding a line here, in a diff a
+   reviewer sees next to the documented order in `rust/src/sync/mod.rs`.
+
+3. **static-order** — textually nested lock scopes (a `.lock()` that
+   occurs inside the brace scope of an earlier guard, same file) are
+   extracted into a conservative class-order graph; a cycle in that
+   graph, or a textual nesting of two locks of one class, fails the
+   gate. This catches an inverted pair at review time, before any test
+   runs; the runtime checker covers the cross-function and cross-file
+   nestings this textual pass cannot see.
+
+Test code (at or below the first `#[cfg(test)]` line — repo convention
+keeps test modules at the bottom) is exempt from all three rules.
+
+Self-check: `lint_locks.py --self-test` runs the rules against
+`scripts/lint_fixtures/locks_*.rs` with a fixture registry, asserting
+the gate fails on the anonymous, unregistered and cyclic fixtures and
+passes the well-ordered one. CI runs the self-test first, then the tree
+scan.
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+# Modules routed through the crate::sync facade — the scan scope. Kept in
+# lockstep with scripts/lint_unsafe.py's FACADE_MODULES.
+FACADE_MODULES = [
+    "rust/src/coordinator/exec.rs",
+    "rust/src/coordinator/halo.rs",
+    "rust/src/coordinator/scheduler.rs",
+    "rust/src/serve/cache.rs",
+    "rust/src/serve/daemon.rs",
+    "rust/src/serve/executor.rs",
+    "rust/src/serve/pool.rs",
+    "rust/src/serve/protocol.rs",
+    "rust/src/serve/queue.rs",
+]
+
+# Every lock class in the system: name -> (kind, is_gate). The runtime
+# mirror lives in the construction sites themselves; the documented
+# global order lives in rust/src/sync/mod.rs. A class used but not
+# listed here fails; a class listed but never used fails (stale).
+REGISTRY = {
+    # coordinator
+    "halo.cell": ("mutex", False),
+    "halo.cell.ready": ("condvar", False),
+    "coord.results": ("mutex", False),
+    "sched.state": ("mutex", False),
+    "sched.wakeup": ("condvar", False),
+    "exec.fleet.barrier": ("barrier", False),
+    # serving
+    "serve.exec.run": ("mutex", True),  # the one gate: see sync/mod.rs
+    "serve.cache.plans": ("mutex", False),
+    "serve.pool.queue": ("mutex", False),
+    "serve.pool.available": ("condvar", False),
+    "serve.pool.latch": ("mutex", False),
+    "serve.pool.latch.done": ("condvar", False),
+    "serve.queue.jobs": ("mutex", False),
+    "serve.queue.ready": ("condvar", False),
+    "serve.response.line": ("mutex", False),
+    "serve.response.ready": ("condvar", False),
+}
+
+CFG_TEST_RE = re.compile(r"^\s*#\[cfg\(test\)\]")
+MOD_TESTS_RE = re.compile(r"^\s*(?:pub\s+)?mod\s+\w*test")
+ANON_RE = re.compile(r"\b(Mutex|Condvar|Barrier)::(?:new|default)\(")
+NAMED_RE = re.compile(
+    r"\b(Mutex|Condvar|Barrier)::(new_named|new_gate)\(\s*\"([^\"]+)\""
+)
+DECL_RE = re.compile(r"(\w+)\s*[:=]\s*(?:crate::sync::)?Mutex::new_(?:named|gate)\(\s*\"([^\"]+)\"")
+LOCK_RE = re.compile(r"(\w+)\s*\.\s*lock\(\)")
+
+
+def first_test_line(lines: list[str]) -> int:
+    """Start of the file's test *module* (`#[cfg(test)]` directly above a
+    `mod …test…` line) — everything below is exempt. A lone `#[cfg(test)]`
+    on a mid-file helper fn does not end the scanned region."""
+    for i, line in enumerate(lines):
+        if CFG_TEST_RE.match(line) and i + 1 < len(lines) and MOD_TESTS_RE.match(lines[i + 1]):
+            return i
+    return len(lines)
+
+
+def blank_noncode(text: str) -> str:
+    """Replace the contents of string literals and comments with spaces
+    (newlines preserved) so brace counting and pattern scans never see
+    them. Handles `//` comments, `/* */` comments, string escapes, and
+    char literals — while leaving lifetimes (`'a`) alone."""
+    out = list(text)
+    i, n = 0, len(text)
+    while i < n:
+        c = text[i]
+        nxt = text[i + 1] if i + 1 < n else ""
+        if c == "/" and nxt == "/":
+            while i < n and text[i] != "\n":
+                out[i] = " "
+                i += 1
+        elif c == "/" and nxt == "*":
+            out[i] = out[i + 1] = " "
+            i += 2
+            while i < n and not (text[i] == "*" and i + 1 < n and text[i + 1] == "/"):
+                if text[i] != "\n":
+                    out[i] = " "
+                i += 1
+            if i < n:
+                out[i] = out[i + 1] = " "
+                i += 2
+        elif c == '"':
+            i += 1
+            while i < n and text[i] != '"':
+                if text[i] == "\\" and i + 1 < n:
+                    if text[i] != "\n":
+                        out[i] = " "
+                    i += 1
+                if text[i] != "\n":
+                    out[i] = " "
+                i += 1
+            i += 1
+        elif c == "'":
+            # char literal only when it closes as one ('x' or '\n');
+            # otherwise it's a lifetime and is left untouched
+            m = re.match(r"'(\\.|[^'\\])'", text[i:])
+            if m:
+                for j in range(i + 1, i + len(m.group(0)) - 1):
+                    if text[j] != "\n":
+                        out[j] = " "
+                i += len(m.group(0))
+            else:
+                i += 1
+        else:
+            i += 1
+    return "".join(out)
+
+
+def check_anonymous(rel: str, lines: list[str]) -> list[str]:
+    out = []
+    blanked = blank_noncode("\n".join(lines[: first_test_line(lines)])).splitlines()
+    for i, line in enumerate(blanked):
+        m = ANON_RE.search(line)
+        if m:
+            out.append(
+                f"{rel}:{i + 1}: [anonymous-lock] {m.group(0)}...) in a "
+                f"facade-governed module; construct through "
+                f"{m.group(1)}::new_named(\"<class>\", ...) with a class "
+                f"registered in scripts/lint_locks.py"
+            )
+    return out
+
+
+KIND_BY_TYPE = {"Mutex": "mutex", "Condvar": "condvar", "Barrier": "barrier"}
+
+
+def check_registry(
+    rel: str, lines: list[str], registry: dict[str, tuple[str, bool]]
+) -> tuple[list[str], set[str]]:
+    """Validate every named construction site against the registry.
+    Returns (violations, class names seen) — the caller runs the stale
+    check over the union of seen names."""
+    out, seen = [], set()
+    blanked = blank_noncode("\n".join(lines[: first_test_line(lines)]))
+    # the blanking erases string contents, so re-scan the raw text for
+    # construction sites and use the blanked text only to skip comments
+    raw = "\n".join(lines[: first_test_line(lines)])
+    for m in NAMED_RE.finditer(raw):
+        line_no = raw.count("\n", 0, m.start()) + 1
+        # skip sites that live inside comments/strings in the blanked text
+        if "::" not in blanked[m.start() : m.end()]:
+            continue
+        type_name, ctor, cls = m.groups()
+        seen.add(cls)
+        entry = registry.get(cls)
+        if entry is None:
+            out.append(
+                f"{rel}:{line_no}: [lock-registry] class {cls!r} is not in "
+                f"the registry; add it to scripts/lint_locks.py (and the "
+                f"documented order in rust/src/sync/mod.rs if it nests)"
+            )
+            continue
+        kind, gate = entry
+        if KIND_BY_TYPE[type_name] != kind:
+            out.append(
+                f"{rel}:{line_no}: [lock-registry] class {cls!r} is "
+                f"registered as a {kind} but constructed as a "
+                f"{KIND_BY_TYPE[type_name]}"
+            )
+        if (ctor == "new_gate") != gate:
+            want = "new_gate" if gate else "new_named"
+            out.append(
+                f"{rel}:{line_no}: [lock-registry] class {cls!r} must be "
+                f"constructed with {want} to match its registry entry "
+                f"(gate classes and regular classes are disjoint)"
+            )
+    return out, seen
+
+
+def extract_order_edges(
+    rel: str, lines: list[str]
+) -> tuple[list[str], dict[tuple[str, str], str]]:
+    """Conservative static order edges from textually nested lock scopes.
+
+    A guard's scope runs from its `.lock()` to the close of the
+    enclosing brace block; any `.lock()` of a mapped receiver inside
+    that span adds an edge. Same-class textual nesting is a violation
+    outright. Receivers are mapped to classes by the `new_named`
+    declarations in the same file; cross-function and cross-file
+    nesting is invisible here — the runtime checker covers it.
+    """
+    raw = "\n".join(lines[: first_test_line(lines)])
+    blanked = blank_noncode(raw)
+    var_class: dict[str, str] = {}
+    for m in DECL_RE.finditer(raw):
+        var_class[m.group(1)] = m.group(2)
+
+    # brace depth at every char of the blanked text
+    depth = [0] * (len(blanked) + 1)
+    d = 0
+    for i, c in enumerate(blanked):
+        if c == "{":
+            d += 1
+        elif c == "}":
+            d -= 1
+        depth[i + 1] = d
+
+    sites = []  # (pos, scope_end, class, line_no)
+    for m in LOCK_RE.finditer(blanked):
+        cls = var_class.get(m.group(1))
+        if cls is None:
+            continue
+        d_here = depth[m.start()]
+        end = len(blanked)
+        for j in range(m.end(), len(blanked)):
+            if depth[j + 1] < d_here:
+                end = j
+                break
+        line_no = blanked.count("\n", 0, m.start()) + 1
+        sites.append((m.start(), end, cls, line_no))
+
+    violations: list[str] = []
+    edges: dict[tuple[str, str], str] = {}
+    for pos, end, cls, line_no in sites:
+        for pos2, _end2, cls2, line2 in sites:
+            if not pos < pos2 <= end:
+                continue
+            if cls == cls2:
+                violations.append(
+                    f"{rel}:{line2}: [static-order] lock of class {cls!r} "
+                    f"taken inside the scope of another {cls!r} guard "
+                    f"(opened at line {line_no}): two locks of one class "
+                    f"have no defined order"
+                )
+            else:
+                edges.setdefault((cls, cls2), f"{rel}:{line_no}->{line2}")
+    return violations, edges
+
+
+def find_cycle(edges: dict[tuple[str, str], str]) -> list[str] | None:
+    adj: dict[str, list[str]] = {}
+    for a, b in edges:
+        adj.setdefault(a, []).append(b)
+    WHITE, GREY, BLACK = 0, 1, 2
+    color = {n: WHITE for pair in edges for n in pair}
+    for start in sorted(color):
+        if color[start] != WHITE:
+            continue
+        stack = [(start, iter(adj.get(start, [])))]
+        color[start] = GREY
+        path = [start]
+        while stack:
+            node, it = stack[-1]
+            advanced = False
+            for nxt in it:
+                if color[nxt] == GREY:
+                    return path[path.index(nxt) :] + [nxt]
+                if color[nxt] == WHITE:
+                    color[nxt] = GREY
+                    path.append(nxt)
+                    stack.append((nxt, iter(adj.get(nxt, []))))
+                    advanced = True
+                    break
+            if not advanced:
+                color[node] = BLACK
+                path.pop()
+                stack.pop()
+    return None
+
+
+def scan(root: Path, modules: list[str], registry: dict[str, tuple[str, bool]]) -> list[str]:
+    violations: list[str] = []
+    seen_classes: set[str] = set()
+    all_edges: dict[tuple[str, str], str] = {}
+    for rel in modules:
+        path = root / rel
+        if not path.exists():
+            violations.append(f"{rel}: [lock-lint] facade module missing from tree")
+            continue
+        lines = path.read_text(encoding="utf-8").splitlines()
+        violations += check_anonymous(rel, lines)
+        reg_violations, seen = check_registry(rel, lines, registry)
+        violations += reg_violations
+        seen_classes |= seen
+        order_violations, edges = extract_order_edges(rel, lines)
+        violations += order_violations
+        all_edges.update(edges)
+    for cls in sorted(set(registry) - seen_classes):
+        violations.append(
+            f"scripts/lint_locks.py: [lock-registry] class {cls!r} is "
+            f"registered but no construction site uses it; remove the "
+            f"stale entry"
+        )
+    cycle = find_cycle(all_edges)
+    if cycle:
+        arcs = " -> ".join(cycle)
+        sites = "; ".join(
+            all_edges[(a, b)] for a, b in zip(cycle, cycle[1:]) if (a, b) in all_edges
+        )
+        violations.append(
+            f"[static-order] textual lock-order cycle: {arcs} (sites: {sites})"
+        )
+    return violations
+
+
+def self_test(root: Path) -> int:
+    fixtures = root / "scripts" / "lint_fixtures"
+    fixture_registry = {
+        "fix.a": ("mutex", False),
+        "fix.b": ("mutex", False),
+        "fix.gate": ("mutex", True),
+        "fix.ready": ("condvar", False),
+    }
+    failures: list[str] = []
+
+    def lines_of(name: str) -> list[str]:
+        return (fixtures / name).read_text(encoding="utf-8").splitlines()
+
+    good = lines_of("locks_good.rs")
+    v = check_anonymous("fixture/good", good)
+    if v:
+        failures.append(f"anonymous check false-positived on the good fixture: {v}")
+    v, seen = check_registry("fixture/good", good, fixture_registry)
+    if v:
+        failures.append(f"registry check false-positived on the good fixture: {v}")
+    if seen != set(fixture_registry):
+        failures.append(f"good fixture should use every fixture class, saw {seen}")
+    v, edges = extract_order_edges("fixture/good", good)
+    if v:
+        failures.append(f"order check false-positived on the good fixture: {v}")
+    if ("fix.a", "fix.b") not in edges:
+        failures.append(f"good fixture's a->b nesting was not extracted: {edges}")
+    if find_cycle(edges):
+        failures.append("good fixture's consistent order reported a cycle")
+
+    bad = lines_of("locks_anonymous_bad.rs")
+    v = check_anonymous("fixture/anonymous", bad)
+    if len(v) < 2:
+        failures.append(
+            f"gate did NOT flag both anonymous constructions (got {len(v)}): {v}"
+        )
+
+    bad = lines_of("locks_unregistered_bad.rs")
+    v, _seen = check_registry("fixture/unregistered", bad, fixture_registry)
+    if not any("fixture.rogue" in msg for msg in v):
+        failures.append(f"gate did NOT flag the unregistered class: {v}")
+    if not any("new_gate" in msg for msg in v):
+        failures.append(f"gate did NOT flag the gate/named mismatch: {v}")
+
+    bad = lines_of("locks_cycle_bad.rs")
+    v, edges = extract_order_edges("fixture/cycle", bad)
+    cycle = find_cycle(edges)
+    if not cycle:
+        failures.append(f"gate did NOT find the seeded a/b order cycle (edges: {edges})")
+
+    # the committed registry itself must be internally coherent
+    for cls, (kind, gate) in REGISTRY.items():
+        if gate and kind != "mutex":
+            failures.append(f"registry: gate class {cls!r} must be a mutex")
+
+    for msg in failures:
+        print(f"self-test: {msg}", file=sys.stderr)
+    print(
+        "lint_locks self-test: "
+        + ("FAILED" if failures else "ok (bad fixtures rejected, good fixture passed)")
+    )
+    return 1 if failures else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=Path, default=Path(__file__).resolve().parent.parent)
+    ap.add_argument(
+        "--self-test",
+        action="store_true",
+        help="verify the gate catches the known-bad fixtures, then exit",
+    )
+    args = ap.parse_args()
+    if args.self_test:
+        return self_test(args.root)
+    violations = scan(args.root, FACADE_MODULES, REGISTRY)
+    for v in violations:
+        print(v, file=sys.stderr)
+    if violations:
+        print(f"lint_locks: {len(violations)} violation(s)", file=sys.stderr)
+        return 1
+    print("lint_locks: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,15 +17,19 @@ Hard CI gate (exit 1 on any violation). Three rules over `rust/`:
    a schedule involving it silently loses coverage. (`sync/mod.rs` and
    `sync/model.rs` are the facade itself and are exempt by omission.)
 
-3. **serve-unwrap** — no `.unwrap()` / `.expect(` in non-test `serve/`
-   code outside the explicit allowlist below. The serving daemon is the
-   long-lived, user-facing surface: a stray unwrap is a remote panic.
+3. **unwrap-audit** — no `.unwrap()` / `.expect(` in non-test `serve/`
+   or `coordinator/` code outside the explicit allowlist below. The
+   serving daemon is the long-lived, user-facing surface (a stray unwrap
+   is a remote panic) and the coordinator runs under it, so a
+   coordinator panic is the same remote panic one stack frame lower.
    Allowlisted entries are invariant-backed by construction and each
    records its justification here.
 
-Test code (everything at or below the first `#[cfg(test)]` line — the
-repo convention keeps test modules at the bottom of the file) is exempt
-from rules 2 and 3; rule 1 applies everywhere.
+Test code (everything at or below the `#[cfg(test)]` line that opens the
+file's `mod tests` block — the repo convention keeps test modules at the
+bottom of the file) is exempt from rules 2 and 3; rule 1 applies
+everywhere, including mid-file `#[cfg(test)]` helper fns, which stay
+inside the scanned region.
 
 Self-check: `lint_unsafe.py --self-test` runs the rules against
 `scripts/lint_fixtures/` and known-bad snippets, asserting the gate
@@ -54,9 +58,12 @@ FACADE_MODULES = [
     "rust/src/serve/queue.rs",
 ]
 
+# Scopes rule 3 audits (path prefixes relative to the repo root).
+UNWRAP_SCOPES = ("rust/src/serve/", "rust/src/coordinator/")
+
 # (path, line snippet, justification) — rule 3 exemptions. A snippet
 # match is required so the exemption dies with the code it covers.
-SERVE_UNWRAP_ALLOWLIST = [
+UNWRAP_ALLOWLIST = [
     (
         "rust/src/serve/pool.rs",
         'expect("spawn pool worker")',
@@ -75,9 +82,40 @@ SERVE_UNWRAP_ALLOWLIST = [
         "daemon startup: no dispatcher means no daemon; fails before the "
         "socket accepts clients",
     ),
+    (
+        "rust/src/coordinator/exec.rs",
+        'expect("at least one group executed")',
+        "group-loop invariant: compile() rejects empty plans, so the "
+        "group loop always assigns cur at least once",
+    ),
+    (
+        "rust/src/coordinator/exec.rs",
+        'expect("native path builds a RowGather")',
+        "backend invariant: the setup match that builds `gather` and the "
+        "dispatch match that consumes it branch on the same Backend value",
+    ),
+    (
+        "rust/src/coordinator/exec.rs",
+        'expect("pjrt path materializes the melt matrix")',
+        "backend invariant: the PJRT arm of the setup match always "
+        "materializes the melt matrix the PJRT dispatch arm reads",
+    ),
+    (
+        "rust/src/coordinator/halo.rs",
+        'expect("wait returns a published cell")',
+        "wait() only returns a guard after observing slot.is_some() under "
+        "the cell mutex, and no consumer ever takes the value back out",
+    ),
+    (
+        "rust/src/coordinator/simulate.rs",
+        'expect("workers >= 1")',
+        "min_by_key over `loads`, which is constructed with `workers` "
+        "elements after the workers == 0 guard above returned Err",
+    ),
 ]
 
 CFG_TEST_RE = re.compile(r"^\s*#\[cfg\(test\)\]")
+MOD_TESTS_RE = re.compile(r"^\s*(?:pub\s+)?mod\s+\w*test")
 UNSAFE_RE = re.compile(r"\bunsafe\b")
 STD_SYNC_RE = re.compile(r"std::sync::(?:\{[^}]*\b(?:Mutex|Condvar)\b|(?:Mutex|Condvar)\b)")
 UNWRAP_RE = re.compile(r"\.unwrap\(\)|\.expect\(")
@@ -90,8 +128,12 @@ def strip_strings(line: str) -> str:
 
 
 def first_test_line(lines: list[str]) -> int:
+    """Start of the file's test *module* (`#[cfg(test)]` directly above a
+    `mod …test…` line). A lone `#[cfg(test)]` on a mid-file helper fn
+    does not end the scanned region (kept in lockstep with
+    scripts/lint_locks.py)."""
     for i, line in enumerate(lines):
-        if CFG_TEST_RE.match(line):
+        if CFG_TEST_RE.match(line) and i + 1 < len(lines) and MOD_TESTS_RE.match(lines[i + 1]):
             return i
     return len(lines)
 
@@ -134,9 +176,9 @@ def check_std_sync_imports(rel: str, lines: list[str]) -> list[str]:
     return out
 
 
-def check_serve_unwrap(rel: str, lines: list[str]) -> list[str]:
+def check_unwrap(rel: str, lines: list[str]) -> list[str]:
     out = []
-    allowed = [snip for path, snip, _why in SERVE_UNWRAP_ALLOWLIST if path == rel]
+    allowed = [snip for path, snip, _why in UNWRAP_ALLOWLIST if path == rel]
     for i, line in enumerate(lines[: first_test_line(lines)]):
         if line.strip().startswith("//"):
             continue
@@ -145,9 +187,10 @@ def check_serve_unwrap(rel: str, lines: list[str]) -> list[str]:
         if any(snip in line for snip in allowed):
             continue
         out.append(
-            f"{rel}:{i + 1}: [serve-unwrap] unwrap()/expect() in serving "
-            f"code; return an Error or add an allowlist entry with a "
-            f"justification in scripts/lint_unsafe.py"
+            f"{rel}:{i + 1}: [unwrap-audit] unwrap()/expect() in "
+            f"serving/coordinator code; return an Error or add an "
+            f"allowlist entry with a justification in "
+            f"scripts/lint_unsafe.py"
         )
     return out
 
@@ -162,10 +205,10 @@ def scan(root: Path) -> list[str]:
         violations += check_undocumented_unsafe(rel, lines)
         if rel in FACADE_MODULES:
             violations += check_std_sync_imports(rel, lines)
-        if rel.startswith("rust/src/serve/"):
-            violations += check_serve_unwrap(rel, lines)
+        if rel.startswith(UNWRAP_SCOPES):
+            violations += check_unwrap(rel, lines)
     # stale-allowlist check: every exemption must still match a line
-    for path, snip, _why in SERVE_UNWRAP_ALLOWLIST:
+    for path, snip, _why in UNWRAP_ALLOWLIST:
         f = root / path
         if not f.exists() or snip not in f.read_text(encoding="utf-8"):
             violations.append(
@@ -199,15 +242,29 @@ def self_test(root: Path) -> int:
     if v:
         failures.append(f"gate false-positived on a facade import: {v}")
 
-    v = check_serve_unwrap("fixture/serve", ["    let x = cfg.lookup().unwrap();"])
+    v = check_unwrap("fixture/serve", ["    let x = cfg.lookup().unwrap();"])
     if not v:
         failures.append("gate did NOT flag an unwrap in serving code")
 
-    v = check_serve_unwrap(
+    v = check_unwrap("fixture/coordinator", ["    let x = plan.first().expect(\"non-empty\");"])
+    if not v:
+        failures.append("gate did NOT flag an expect in coordinator code")
+
+    v = check_unwrap(
         "fixture/serve", ["    let x = cfg.lookup().unwrap_or_else(|_| fallback());"]
     )
     if v:
         failures.append(f"gate false-positived on unwrap_or_else: {v}")
+
+    # a mid-file #[cfg(test)] helper must NOT end the scanned region
+    trailing_unwrap = [
+        "#[cfg(test)]",
+        "fn helper() {}",
+        "    let x = cfg.lookup().unwrap();",
+    ]
+    v = check_unwrap("fixture/serve", trailing_unwrap)
+    if not v:
+        failures.append("a mid-file #[cfg(test)] helper fn ended the scanned region")
 
     for msg in failures:
         print(f"self-test: {msg}", file=sys.stderr)
