@@ -18,6 +18,12 @@
 //! highest worker count, with the gap widening as workers (and therefore
 //! chunk boundaries) multiply.
 //!
+//! A serve-batching section stacks 8 cache-key-identical jobs along a
+//! leading batch axis (the daemon's cross-request batch collector does
+//! this over the wire) and times the single stacked fold against the same
+//! jobs run back to back on one persistent executor, after asserting the
+//! batch is bit-for-bit identical member by member.
+//!
 //! A tiled-vs-materialized section times the cache-resident tile streamer
 //! against an explicit global-melt-matrix gather of the same stage and
 //! reports the footprint gap (`rows·cols·4` materialized bytes vs the
@@ -243,6 +249,72 @@ fn main() {
     );
     json.metric("materialized_melt_bytes", materialized_bytes as f64);
     json.metric("tiled_peak_band_bytes", tm1.peak_band_bytes as f64);
+
+    // ---- cross-request batching: one stacked fold vs N singleton runs -----
+    // the serving daemon's batch collector stacks N cache-key-identical
+    // requests along a leading batch axis and folds them as ONE plan; this
+    // times that against the same N jobs run back to back on the same
+    // persistent executor (what an unbatched daemon would do), after
+    // proving the batch is bit-for-bit identical member by member
+    let n_jobs = 8usize;
+    let img_dim = if quick { 64usize } else { 96 };
+    let imgs: Vec<Tensor<f32>> = (0..n_jobs)
+        .map(|i| Tensor::random(&[img_dim, img_dim], 0.0, 255.0, 1000 + i as u64).unwrap())
+        .collect();
+    let jobs_2d = [
+        Job::gaussian(&[3, 3], 1.0),
+        Job::curvature(&[3, 3]),
+        Job::median(&[3, 3]),
+    ];
+    let stages: Vec<_> = jobs_2d.iter().map(|j| j.to_stage().unwrap()).collect();
+    let serve_opts = ExecOptions::native(max_workers);
+    let exec = meltframe::serve::Executor::persistent(serve_opts.clone(), 8);
+    let singleton_plan = |img: &Tensor<f32>| {
+        Plan::over(img)
+            .gaussian(&[3, 3], 1.0)
+            .curvature(&[3, 3])
+            .median(&[3, 3])
+    };
+    let (batched_out, bpm) = exec.run_batch(&imgs, &stages).unwrap();
+    assert_eq!(bpm.batched_jobs(), n_jobs);
+    assert_eq!(bpm.folds(), 1, "one fused fold for the whole batch");
+    for (out, img) in batched_out.iter().zip(&imgs) {
+        let (reference, _) = singleton_plan(img).run(&serve_opts).unwrap();
+        assert_eq!(
+            out.data(),
+            reference.data(),
+            "batch member must match its standalone run bit-for-bit"
+        );
+    }
+    let mut report = Report::new(format!(
+        "Serve batching — {n_jobs} × gaussian→curvature→median on {img_dim}^2, \
+         {max_workers} worker(s): sequential singletons vs one stacked fold"
+    ));
+    let seq = Measurement::run(
+        format!("{n_jobs} sequential singleton jobs"),
+        1,
+        reps,
+        || {
+            for img in &imgs {
+                black_box(exec.run(singleton_plan(img)).unwrap());
+            }
+        },
+    );
+    let bat = Measurement::run(format!("{n_jobs} jobs, one batched fold"), 1, reps, || {
+        black_box(exec.run_batch(&imgs, &stages).unwrap())
+    });
+    json.series(format!("serve sequential {n_jobs} jobs"), &seq);
+    json.series(format!("serve batched {n_jobs} jobs"), &bat);
+    report.push(seq.clone());
+    report.push(bat.clone());
+    let baseline = format!("{n_jobs} sequential singleton jobs");
+    report.print(Some(baseline.as_str()));
+    println!(
+        "batching folds {n_jobs} plan lookups, melts and barriers into one of each \
+         (sequential median {:.2} ms vs batched {:.2} ms)\n",
+        seq.median().as_secs_f64() * 1e3,
+        bat.median().as_secs_f64() * 1e3
+    );
 
     // ---- separable gaussian on the volume ---------------------------------
     // the axis-factored chain ([5,1,1]·[1,5,1]·[1,1,5], fused into one

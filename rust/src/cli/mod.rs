@@ -51,6 +51,14 @@ pub enum Command {
         halo_wait_secs: Option<u64>,
         /// Native gather→kernel tile height override (`--tile-rows N`).
         tile_rows: Option<usize>,
+        /// Cross-request batch-collection window in milliseconds
+        /// (`--batch-window-ms N`, default 2; 0 disables batching).
+        batch_window_ms: u64,
+        /// Max jobs folded into one batch (`--max-batch N`, default 8).
+        max_batch: usize,
+        /// Executor shards splitting the worker budget
+        /// (`--executors N`, default 1).
+        executors: usize,
     },
     /// Submit one protocol line to a daemon (or run it in-process).
     Submit {
@@ -92,6 +100,7 @@ USAGE:
     meltframe serve --socket <path> [--workers <n>] [--queue-depth <n>]
                     [--cache-capacity <n>] [--halo-mode recompute|exchange]
                     [--halo-wait-secs <n>] [--tile-rows <n>]
+                    [--batch-window-ms <n>] [--max-batch <n>] [--executors <n>]
     meltframe submit (--socket <path> | --oneshot [--workers <n>])
                      (--json <line> | --request-file <path> | --shutdown)
     meltframe help
@@ -109,7 +118,14 @@ extents run the (D, H, W) volume pipeline, two run the (H, W) image one
 (default 48,48,48).
 `serve` starts a persistent daemon: a long-lived worker pool and an LRU
 plan cache behind a line-delimited JSON protocol on a Unix-domain socket,
-with bounded-queue admission control. `submit` is the matching client:
+with bounded-queue admission control. Admitted jobs whose shape, op-chain,
+grid, boundary, halo mode, and tile height all match are folded into one
+batched run (one plan lookup, one fused fold for the whole group, answers
+split per request): `--batch-window-ms` bounds how long the collector
+lingers for batchmates (0 turns batching off), `--max-batch` caps the
+group size, and `--executors` shards the worker budget into independent
+executors so unrelated batches run concurrently. `submit` is the matching
+client:
 `--json`/`--request-file` send one job request line and print the response
 line (digest + metrics); `--shutdown` drains and stops the daemon;
 `--oneshot` executes the same request in-process instead — the bit-for-bit
@@ -246,6 +262,9 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
             let mut halo_mode = None;
             let mut halo_wait_secs = None;
             let mut tile_rows = None;
+            let mut batch_window_ms = 2u64;
+            let mut max_batch = 8usize;
+            let mut executors = 1usize;
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--socket" => {
@@ -253,6 +272,17 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                     }
                     "--workers" => workers = positive_usize(&mut it, "--workers")?,
                     "--queue-depth" => queue_depth = positive_usize(&mut it, "--queue-depth")?,
+                    // NOT positive_usize: 0 is meaningful (batching off)
+                    "--batch-window-ms" => {
+                        let v = expect_value(&mut it, "--batch-window-ms")?;
+                        batch_window_ms = v.parse().map_err(|_| {
+                            Error::Config(
+                                "--batch-window-ms expects a number of milliseconds".into(),
+                            )
+                        })?;
+                    }
+                    "--max-batch" => max_batch = positive_usize(&mut it, "--max-batch")?,
+                    "--executors" => executors = positive_usize(&mut it, "--executors")?,
                     "--cache-capacity" => {
                         cache_capacity = positive_usize(&mut it, "--cache-capacity")?
                     }
@@ -284,6 +314,9 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                 halo_mode,
                 halo_wait_secs,
                 tile_rows,
+                batch_window_ms,
+                max_batch,
+                executors,
             })
         }
         "submit" => {
@@ -488,12 +521,16 @@ mod tests {
                 halo_mode: None,
                 halo_wait_secs: None,
                 tile_rows: None,
+                batch_window_ms: 2,
+                max_batch: 8,
+                executors: 1,
             }
         );
         assert_eq!(
             parse_args(&argv(
                 "serve --socket mf.sock --workers 3 --queue-depth 8 --cache-capacity 5 \
-                 --halo-mode exchange --halo-wait-secs 30 --tile-rows 64"
+                 --halo-mode exchange --halo-wait-secs 30 --tile-rows 64 \
+                 --batch-window-ms 0 --max-batch 4 --executors 2"
             ))
             .unwrap(),
             Command::Serve {
@@ -504,8 +541,15 @@ mod tests {
                 halo_mode: Some(HaloMode::Exchange),
                 halo_wait_secs: Some(30),
                 tile_rows: Some(64),
+                batch_window_ms: 0,
+                max_batch: 4,
+                executors: 2,
             }
         );
+        // 0 is "batching off" for the window, but nonsense for the others
+        assert!(parse_args(&argv("serve --socket mf.sock --max-batch 0")).is_err());
+        assert!(parse_args(&argv("serve --socket mf.sock --executors 0")).is_err());
+        assert!(parse_args(&argv("serve --socket mf.sock --batch-window-ms abc")).is_err());
     }
 
     #[test]

@@ -74,7 +74,7 @@ use crate::coordinator::job::Backend;
 use crate::coordinator::kernel::RowKernel;
 use crate::coordinator::metrics::{PlanMetrics, RunMetrics};
 use crate::coordinator::pipeline::ExecOptions;
-use crate::coordinator::plan::{fused_partition, Stage};
+use crate::coordinator::plan::{fused_partition, plan_groups, Stage};
 use crate::coordinator::scheduler::{ResultBoard, StageScheduler, StageTask, WorkQueue};
 use crate::coordinator::worker::{JobResources, WorkerContext};
 use crate::error::{Error, Result};
@@ -306,6 +306,102 @@ pub(crate) fn execute_groups_with(
             output_moments: out_moments,
         },
     ))
+}
+
+/// Lift `s` onto a leading batch axis: prepend a unit window extent (and,
+/// for strided grids, a unit stride) so the same kernel runs over a
+/// `[N, …shape]` stack of same-shape inputs. The kernel `Arc` is shared,
+/// not rebuilt — row kernels see only `cols = ravel_len`, which a unit
+/// axis leaves unchanged, and the ravel order of the original window is
+/// preserved. A unit extent has zero halo on that axis under **every**
+/// boundary mode (the only offset is 0), so no gather ever reads across a
+/// batch-member boundary: each slice of the stacked run is bit-for-bit
+/// the tensor its own standalone run would produce.
+pub(crate) fn lift_stage(s: &Stage) -> Result<Stage> {
+    let mut w = Vec::with_capacity(s.window().len() + 1);
+    w.push(1);
+    w.extend_from_slice(s.window());
+    let grid = match s.grid() {
+        GridMode::Strided(v) => {
+            let mut sv = Vec::with_capacity(v.len() + 1);
+            sv.push(1);
+            sv.extend_from_slice(v);
+            GridMode::Strided(sv)
+        }
+        g => g.clone(),
+    };
+    Ok(Stage::new(Arc::clone(s.kernel()), &w)?
+        .with_grid(grid)
+        .with_boundary(s.boundary()))
+}
+
+/// The cross-request batching entry point: stack `inputs` (all the same
+/// shape) along a fresh leading batch axis, lift every stage with
+/// [`lift_stage`], run the whole stack through [`execute_groups_with`] —
+/// one plan lookup, one melt and one fold per fused group for the entire
+/// batch — and split the output back into one tensor per input. Each
+/// group's [`RunMetrics::batched_jobs`] records the batch size. Note the
+/// plan cache keys on the *stacked* shape, so batches of different sizes
+/// occupy distinct cache entries.
+pub(crate) fn execute_batch_with(
+    inputs: &[Tensor<f32>],
+    stages: &[Stage],
+    opts: &ExecOptions,
+    fleet: Fleet<'_>,
+    cache: Option<&PlanCache>,
+) -> Result<(Vec<Tensor<f32>>, PlanMetrics)> {
+    let n = inputs.len();
+    if n == 0 {
+        return Err(Error::Coordinator("empty batch".into()));
+    }
+    let shape = inputs[0].shape().to_vec();
+    for t in &inputs[1..] {
+        if t.shape() != shape {
+            return Err(Error::Coordinator(format!(
+                "batched inputs must share one shape: {:?} vs {:?}",
+                shape,
+                t.shape()
+            )));
+        }
+    }
+    let per_in = inputs[0].data().len();
+    let mut data = Vec::with_capacity(n * per_in);
+    for t in inputs {
+        data.extend_from_slice(t.data());
+    }
+    let mut stacked_shape = Vec::with_capacity(shape.len() + 1);
+    stacked_shape.push(n);
+    stacked_shape.extend_from_slice(&shape);
+    let x = Tensor::from_vec(&stacked_shape, data)?;
+
+    let lifted: Vec<Stage> = stages.iter().map(lift_stage).collect::<Result<_>>()?;
+    // lifting preserves grid mode and boundary, so the lifted chain fuses
+    // into exactly the groups the unlifted chain would
+    let groups = plan_groups(&lifted, opts.backend);
+    let (out, mut metrics) = execute_groups_with(&x, &lifted, &groups, opts, fleet, cache)?;
+    for g in &mut metrics.groups {
+        g.batched_jobs = n;
+    }
+
+    // the unit window extent and unit stride keep the batch axis at N
+    // through every grid mode; anything else is a planner bug
+    if out.shape().first() != Some(&n) {
+        return Err(Error::Coordinator(format!(
+            "batched output lost its batch axis: shape {:?} for a batch of {n}",
+            out.shape()
+        )));
+    }
+    let member_shape: Vec<usize> = out.shape()[1..].to_vec();
+    let per_out: usize = member_shape.iter().product();
+    let data = out.into_vec();
+    let mut outs = Vec::with_capacity(n);
+    for i in 0..n {
+        outs.push(Tensor::from_vec(
+            &member_shape,
+            data[i * per_out..(i + 1) * per_out].to_vec(),
+        )?);
+    }
+    Ok((outs, metrics))
 }
 
 /// The barrier path: one stage, gather → execute → fold, on either
@@ -682,6 +778,7 @@ pub(crate) fn run_fused_group_with(
             plan_cache_misses: delta.misses,
             plan_cache_evictions: delta.evictions,
             gathers_built: delta.built,
+            batched_jobs: 0,
         },
         moments,
     ))
@@ -1140,6 +1237,91 @@ mod tests {
         assert!(run_fused_group(&x, &stages_of(&jobs), &opts, true).is_err());
         // zero workers
         assert!(run_fused_group(&x, &stages_of(&jobs), &ExecOptions::native(0), true).is_err());
+    }
+
+    #[test]
+    fn batched_execution_matches_singletons_bit_for_bit() {
+        let jobs = vec![
+            Job::gaussian(&[3, 3], 1.0),
+            Job::curvature(&[3, 3]),
+            Job::median(&[3, 3]),
+        ];
+        let stages = stages_of(&jobs);
+        let inputs: Vec<Tensor<f32>> = (0..4)
+            .map(|s| Tensor::random(&[12, 13], 0.0, 255.0, 100 + s).unwrap())
+            .collect();
+        let opts = ExecOptions::native(3);
+        let (outs, pm) =
+            execute_batch_with(&inputs, &stages, &opts, Fleet::Scoped, None).unwrap();
+        assert_eq!(outs.len(), 4);
+        // the whole batch is one fused group: one melt, one fold, size 4
+        assert_eq!(pm.melts(), 1);
+        assert_eq!(pm.folds(), 1);
+        assert_eq!(pm.batched_jobs(), 4);
+        for (out, x) in outs.iter().zip(&inputs) {
+            let (solo, _, _) =
+                run_fused_group(x, &stages, &ExecOptions::native(2), false).unwrap();
+            assert_eq!(out.shape(), solo.shape());
+            assert_allclose(out.data(), solo.data(), 0.0, 0.0);
+        }
+    }
+
+    #[test]
+    fn batched_execution_is_exact_across_grids_and_boundaries() {
+        use crate::melt::grid::GridMode;
+        use crate::melt::melt::BoundaryMode;
+        // Valid grid shrinks the member shape; Wrap would read across the
+        // batch seam if the lifted axis ever had a nonzero halo
+        for (grid, boundary) in [
+            (GridMode::Valid, BoundaryMode::Reflect),
+            (GridMode::Same, BoundaryMode::Wrap),
+            (GridMode::Strided(vec![2, 3]), BoundaryMode::Nearest),
+        ] {
+            let mut job = Job::median(&[3, 3]);
+            job.grid = grid;
+            job.boundary = boundary;
+            let stages = stages_of(std::slice::from_ref(&job));
+            let inputs: Vec<Tensor<f32>> = (0..3)
+                .map(|s| Tensor::random(&[10, 11], -4.0, 9.0, 7 + s).unwrap())
+                .collect();
+            let opts = ExecOptions::native(2);
+            let (outs, pm) =
+                execute_batch_with(&inputs, &stages, &opts, Fleet::Scoped, None).unwrap();
+            assert_eq!(pm.batched_jobs(), 3);
+            for (out, x) in outs.iter().zip(&inputs) {
+                let (solo, _, _) =
+                    run_single_stage(x, &stages[0], &ExecOptions::native(1), false).unwrap();
+                assert_eq!(out.shape(), solo.shape());
+                assert_allclose(out.data(), solo.data(), 0.0, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_execution_rejects_bad_batches() {
+        let stages = stages_of(&[Job::median(&[3, 3])]);
+        let opts = ExecOptions::native(1);
+        // empty batch
+        assert!(execute_batch_with(&[], &stages, &opts, Fleet::Scoped, None).is_err());
+        // mismatched member shapes
+        let a = Tensor::random(&[8, 8], 0.0, 1.0, 1).unwrap();
+        let b = Tensor::random(&[8, 9], 0.0, 1.0, 2).unwrap();
+        assert!(execute_batch_with(&[a, b], &stages, &opts, Fleet::Scoped, None).is_err());
+    }
+
+    #[test]
+    fn lift_stage_shares_the_kernel_and_prepends_unit_axes() {
+        let mut job = Job::gaussian(&[3, 5], 1.0);
+        job.grid = crate::melt::grid::GridMode::Strided(vec![2, 2]);
+        let s = job.to_stage().unwrap();
+        let l = lift_stage(&s).unwrap();
+        assert_eq!(l.window(), &[1, 3, 5]);
+        assert_eq!(
+            l.grid(),
+            &crate::melt::grid::GridMode::Strided(vec![1, 2, 2])
+        );
+        assert_eq!(l.boundary(), s.boundary());
+        assert!(Arc::ptr_eq(s.kernel(), l.kernel()));
     }
 
     #[test]

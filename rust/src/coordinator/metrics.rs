@@ -82,6 +82,10 @@ pub struct RunMetrics {
     /// the whole group came out of the plan cache, one per stage when it
     /// missed (and always one per native stage on uncached runs).
     pub gathers_built: usize,
+    /// Jobs co-executed through this run's leading batch axis (the serving
+    /// daemon's cross-request batching): N when N same-shape requests were
+    /// stacked and folded together, 0 for an ordinary unbatched run.
+    pub batched_jobs: usize,
 }
 
 impl RunMetrics {
@@ -162,6 +166,9 @@ impl RunMetrics {
                 self.plan_cache_evictions,
                 self.gathers_built
             ));
+        }
+        if self.batched_jobs > 0 {
+            s.push_str(&format!(" | batch of {} job(s)", self.batched_jobs));
         }
         s
     }
@@ -265,6 +272,14 @@ impl PlanMetrics {
     /// the "repeat traffic melts nothing" assertion reads 0 here.
     pub fn gathers_built(&self) -> usize {
         self.groups.iter().map(|g| g.gathers_built).sum()
+    }
+
+    /// Jobs co-executed through the leading batch axis: every group of a
+    /// batched plan carries the same batch size, so this is a max (not a
+    /// sum, which would multiply-count one batch across its groups). 0 for
+    /// unbatched plans.
+    pub fn batched_jobs(&self) -> usize {
+        self.groups.iter().map(|g| g.batched_jobs).max().unwrap_or(0)
     }
 
     /// One-line human summary.
@@ -395,6 +410,39 @@ mod tests {
         assert_eq!(pm.plan_cache_misses(), 1);
         assert_eq!(pm.plan_cache_evictions(), 2);
         assert_eq!(pm.gathers_built(), 3);
+    }
+
+    #[test]
+    fn batch_counter_surfaces_in_summary_and_totals_as_max() {
+        // unbatched runs stay silent …
+        let m = RunMetrics::default();
+        assert!(!m.summary().contains("batch"));
+        // … a batched run reports its size
+        let b = RunMetrics {
+            batched_jobs: 4,
+            ..Default::default()
+        };
+        assert!(b.summary().contains("batch of 4 job(s)"));
+        // every group of one batched plan carries the same size: max, not sum
+        let pm = PlanMetrics {
+            groups: vec![
+                RunMetrics {
+                    batched_jobs: 4,
+                    ..Default::default()
+                },
+                RunMetrics {
+                    batched_jobs: 4,
+                    ..Default::default()
+                },
+            ],
+            output_moments: Moments::new(),
+        };
+        assert_eq!(pm.batched_jobs(), 4);
+        let empty = PlanMetrics {
+            groups: vec![],
+            output_moments: Moments::new(),
+        };
+        assert_eq!(empty.batched_jobs(), 0);
     }
 
     #[test]

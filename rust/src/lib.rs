@@ -214,12 +214,33 @@
 //! ## Serving
 //!
 //! The [`serve`] subsystem amortizes those fixed costs across requests.
-//! `meltframe serve` starts a daemon: a persistent
-//! [`Executor`](serve::Executor) owning a long-lived worker pool and an
-//! LRU [`PlanCache`](serve::PlanCache), fronted by a bounded FIFO job
-//! queue (admission control: a full queue rejects immediately rather
-//! than buffering unboundedly) and a line-delimited JSON protocol over a
-//! Unix-domain socket. `meltframe submit` is the matching client.
+//! `meltframe serve` starts a daemon: `--executors N` persistent
+//! [`Executor`](serve::Executor) shards (each owning its slice of the
+//! worker budget, its own LRU [`PlanCache`](serve::PlanCache), and one
+//! dispatcher thread), fronted by a bounded job queue (admission
+//! control: a full queue rejects immediately rather than buffering
+//! unboundedly) with per-client round-robin **fairness lanes** — a
+//! request's optional `"client"` tag picks its lane; untagged requests
+//! share a per-connection lane — and a line-delimited JSON protocol over
+//! a Unix-domain socket (request lines are capped at 16 MiB; oversized
+//! lines are answered with an error). `meltframe submit` is the
+//! matching client.
+//!
+//! **Cross-request batching.** A dispatcher that pops a job sweeps the
+//! queue (lingering up to `--batch-window-ms`, `0` = off) for up to
+//! `--max-batch − 1` mates sharing its *batch key* — input shape, full
+//! op-chain including kernel parameters, grid, boundary, halo mode,
+//! tile height; stricter than the plan-cache key because co-batched
+//! jobs share one kernel instance. The batch runs as one stacked fold:
+//! inputs concatenated along a leading batch axis whose unit window
+//! extent guarantees zero cross-member halo under every boundary mode,
+//! one plan lookup, one melt, one fold, outputs split per request —
+//! each bit-for-bit identical to its standalone run. A batch that
+//! errors or panics falls back to singletons so a faulting member fails
+//! alone. Each response's `batched_jobs` metric carries its group size,
+//! and `{"op": "stats"}` reports a `batching` block (`window_ms`,
+//! `max_batch`, `batches`, `batched_jobs`) plus a per-shard `executors`
+//! array (`workers`, `jobs`, `batches`, `batched_jobs`).
 //!
 //! **Cache key contract.** Plans are pure functions of
 //! `(input shape, per-stage kernel-name/window/grid/boundary, halo_mode,

@@ -182,6 +182,9 @@ fn dispatch(cmd: Command) -> Result<()> {
             halo_mode,
             halo_wait_secs,
             tile_rows,
+            batch_window_ms,
+            max_batch,
+            executors,
         } => {
             let mut exec = ExecOptions::native(workers);
             if let Some(mode) = halo_mode {
@@ -196,6 +199,9 @@ fn dispatch(cmd: Command) -> Result<()> {
             let mut opts = ServeOptions::new(socket, exec);
             opts.queue_depth = queue_depth;
             opts.cache_capacity = cache_capacity;
+            opts.batch_window_ms = batch_window_ms;
+            opts.max_batch = max_batch;
+            opts.executors = executors;
             serve(opts)
         }
         Command::Submit {

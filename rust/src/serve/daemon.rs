@@ -1,51 +1,92 @@
-//! The serving daemon: Unix-domain socket front end over one
-//! [`Executor`].
+//! The serving daemon: Unix-domain socket front end over a sharded set
+//! of [`Executor`]s with cross-request batching.
 //!
 //! Lifecycle: `serve` binds the socket (probing it first — a path served
 //! by a live daemon is an error, only a stale file from a crashed daemon
-//! is unlinked),
-//! spawns one persistent [`Executor`] (pool + plan cache) and one
-//! dispatcher thread, then accepts connections. Each connection gets a
-//! reader thread speaking the line protocol ([`protocol`]): job requests
-//! are admitted into a bounded [`JobQueue`] (admission control — a full
-//! queue rejects immediately with an error line instead of buffering
-//! unboundedly) and executed in FIFO order by the dispatcher; the
+//! is unlinked), spawns `--executors` persistent [`Executor`] shards
+//! (each owning its slice of the worker budget plus its own plan cache)
+//! and one dispatcher thread per shard, then accepts connections. Each
+//! connection gets a reader thread speaking the line protocol
+//! ([`protocol`]) with a bounded per-line read (an oversized request
+//! answers with an error instead of growing the buffer without bound):
+//! job requests are admitted into a bounded [`JobQueue`] (admission
+//! control — a full queue rejects immediately with an error line instead
+//! of buffering unboundedly) on a per-client fairness lane, and the
 //! connection thread blocks on the job's response slot, so each
 //! connection sees strict request→response order while separate
-//! connections proceed concurrently. `{"op": "shutdown"}` stops
-//! admissions, drains already-admitted jobs, acknowledges, and unblocks
-//! the accept loop; `serve` returns once the dispatcher has drained.
+//! connections proceed concurrently.
+//!
+//! Dispatch is a **batch collector** per shard: after popping a job, the
+//! dispatcher sweeps the queue for up to `--max-batch − 1` mates sharing
+//! the job's [batch key](crate::serve::protocol::JobRequest::batch_key),
+//! lingering at most `--batch-window-ms` for stragglers, and executes
+//! the whole group as ONE stacked fold — one plan lookup, one melt and
+//! one fold for the entire batch — then answers every member's slot
+//! individually. Faulted requests carry no batch key and always run
+//! alone; a batch that errors or panics falls back to singletons so one
+//! bad member cannot poison its batchmates (see
+//! [`execute_batch`](crate::serve::protocol::execute_batch)). With
+//! multiple shards, independent batches run concurrently.
+//!
+//! `{"op": "shutdown"}` stops admissions, drains already-admitted jobs,
+//! acknowledges, and unblocks the accept loop; `serve` returns once
+//! every dispatcher has drained.
 //!
 //! [`protocol`]: crate::serve::protocol
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 use std::time::Duration;
 
 use crate::coordinator::pipeline::ExecOptions;
 use crate::error::{Error, Result};
 use crate::serve::executor::{Executor, DEFAULT_CACHE_CAPACITY};
-use crate::serve::protocol::{error_response, execute_request, parse_request, JobRequest, Request};
+use crate::serve::protocol::{
+    client_lane, error_response, execute_batch, execute_request, parse_request, JobRequest,
+    Request,
+};
 use crate::serve::queue::JobQueue;
-use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use crate::sync::{thread, Arc, Condvar, Mutex, NamedCondvar, NamedMutex};
 
 /// Default pending-job admission depth.
 pub const DEFAULT_QUEUE_DEPTH: usize = 16;
+
+/// Default batch-collection window in milliseconds (0 disables batching).
+pub const DEFAULT_BATCH_WINDOW_MS: u64 = 2;
+
+/// Default cap on jobs folded into one batch.
+pub const DEFAULT_MAX_BATCH: usize = 8;
+
+/// Default executor shard count.
+pub const DEFAULT_EXECUTORS: usize = 1;
+
+/// Longest request line the daemon will read before answering with an
+/// error and dropping the connection (a newline-less byte stream must
+/// not grow the line buffer without bound).
+pub const MAX_REQUEST_BYTES: u64 = 16 * 1024 * 1024;
 
 /// Daemon configuration.
 #[derive(Clone, Debug)]
 pub struct ServeOptions {
     /// Unix-domain socket path to bind.
     pub socket: PathBuf,
-    /// Default execution options; `exec.workers` sizes the pool.
+    /// Default execution options; `exec.workers` is the TOTAL worker
+    /// budget, split across the executor shards.
     pub exec: ExecOptions,
     /// Pending-job admission depth (floored at 1).
     pub queue_depth: usize,
-    /// Plan-cache capacity in entries (floored at 1).
+    /// Plan-cache capacity in entries, per shard (floored at 1).
     pub cache_capacity: usize,
+    /// Batch-collection window in milliseconds; 0 turns batching off.
+    pub batch_window_ms: u64,
+    /// Max jobs folded into one batch (values < 2 turn batching off).
+    pub max_batch: usize,
+    /// Executor shards (floored at 1, capped at `exec.workers` so every
+    /// shard owns at least one worker thread).
+    pub executors: usize,
 }
 
 impl ServeOptions {
@@ -56,6 +97,9 @@ impl ServeOptions {
             exec,
             queue_depth: DEFAULT_QUEUE_DEPTH,
             cache_capacity: DEFAULT_CACHE_CAPACITY,
+            batch_window_ms: DEFAULT_BATCH_WINDOW_MS,
+            max_batch: DEFAULT_MAX_BATCH,
+            executors: DEFAULT_EXECUTORS,
         }
     }
 }
@@ -104,6 +148,49 @@ impl ResponseSlot {
 struct QueuedJob {
     req: JobRequest,
     slot: Arc<ResponseSlot>,
+    /// Precomputed co-batching key (`None` ⇒ never co-batch).
+    batch_key: Option<String>,
+}
+
+/// One executor shard plus its dispatch counters (all atomics — no new
+/// lock classes).
+struct ExecutorShard {
+    exec: Executor,
+    /// Jobs this shard executed (batched or not).
+    jobs: AtomicUsize,
+    /// Batches of size ≥ 2 this shard folded.
+    batches: AtomicUsize,
+    /// Jobs answered through those batches.
+    batched_jobs: AtomicUsize,
+}
+
+/// Everything the connection and dispatcher threads share.
+struct DaemonState {
+    shards: Vec<ExecutorShard>,
+    queue: JobQueue<QueuedJob>,
+    shutdown: AtomicBool,
+    socket: PathBuf,
+    /// Batch-collection window (zero ⇒ batching off).
+    window: Duration,
+    max_batch: usize,
+    /// Fairness-lane ids for untagged connections.
+    next_lane: AtomicUsize,
+}
+
+impl DaemonState {
+    fn batching(&self) -> bool {
+        !self.window.is_zero() && self.max_batch >= 2
+    }
+}
+
+/// Split `total` workers across `shards` executor shards: every shard
+/// gets at least one, earlier shards absorb the remainder.
+fn shard_workers(total: usize, shards: usize) -> Vec<usize> {
+    let total = total.max(1);
+    let shards = shards.max(1).min(total);
+    let per = total / shards;
+    let rem = total % shards;
+    (0..shards).map(|i| per + usize::from(i < rem)).collect()
 }
 
 /// Run the daemon until a `shutdown` request. Blocks the calling thread.
@@ -124,48 +211,53 @@ pub fn serve(opts: ServeOptions) -> Result<()> {
     }
     let listener = UnixListener::bind(&opts.socket)?;
 
-    let exec = Arc::new(Executor::persistent(opts.exec.clone(), opts.cache_capacity));
-    let queue: Arc<JobQueue<QueuedJob>> = Arc::new(JobQueue::new(opts.queue_depth));
-    let shutdown = Arc::new(AtomicBool::new(false));
+    let shards: Vec<ExecutorShard> = shard_workers(opts.exec.workers, opts.executors)
+        .into_iter()
+        .map(|workers| {
+            let mut exec_opts = opts.exec.clone();
+            exec_opts.workers = workers;
+            ExecutorShard {
+                exec: Executor::persistent(exec_opts, opts.cache_capacity),
+                jobs: AtomicUsize::new(0),
+                batches: AtomicUsize::new(0),
+                batched_jobs: AtomicUsize::new(0),
+            }
+        })
+        .collect();
+    let state = Arc::new(DaemonState {
+        shards,
+        queue: JobQueue::new(opts.queue_depth),
+        shutdown: AtomicBool::new(false),
+        socket: opts.socket.clone(),
+        window: Duration::from_millis(opts.batch_window_ms),
+        max_batch: opts.max_batch,
+        next_lane: AtomicUsize::new(1),
+    });
 
-    let dispatcher = {
-        let exec = Arc::clone(&exec);
-        let queue = Arc::clone(&queue);
-        thread::Builder::new()
-            .name("meltframe-dispatch".into())
-            .spawn(move || {
-                while let Some(job) = queue.pop() {
-                    // Worker-side panics are already caught by the pool,
-                    // but a panic on the leader/planning side of a run
-                    // (plan building, partition validation, aggregation)
-                    // would otherwise kill the dispatcher and strand every
-                    // admitted job in slot.wait() forever. Contain it: the
-                    // job answers with an error line, the dispatcher lives
-                    // on to drain the queue.
-                    let response =
-                        catch_unwind(AssertUnwindSafe(|| execute_request(&job.req, &exec)))
-                            .unwrap_or_else(|_| {
-                                error_response(
-                                    &job.req.id,
-                                    "internal error: job panicked during planning/dispatch",
-                                )
-                            });
-                    job.slot.fill(response);
-                }
-            })
-            .expect("spawn dispatcher thread")
-    };
+    let dispatchers: Vec<_> = (0..state.shards.len())
+        .map(|i| {
+            let state = Arc::clone(&state);
+            thread::Builder::new()
+                .name(format!("meltframe-exec-{i}"))
+                .spawn(move || dispatch_loop(&state, i))
+                .expect("spawn dispatcher thread")
+        })
+        .collect();
 
     println!(
-        "meltframe serve: listening on {} ({} workers, queue depth {}, cache {} plans)",
+        "meltframe serve: listening on {} ({} workers × {} executor(s), queue depth {}, \
+         cache {} plans, batch window {} ms, max batch {})",
         opts.socket.display(),
-        exec.options().workers,
-        queue.depth(),
-        opts.cache_capacity
+        opts.exec.workers,
+        state.shards.len(),
+        state.queue.depth(),
+        opts.cache_capacity,
+        opts.batch_window_ms,
+        opts.max_batch
     );
 
     for stream in listener.incoming() {
-        if shutdown.load(Ordering::SeqCst) {
+        if state.shutdown.load(Ordering::SeqCst) {
             // A real client racing the shutdown gets an answer instead of
             // a silently dropped connection (the wake-up self-connect from
             // the shutdown handler just ignores the line).
@@ -178,50 +270,125 @@ pub fn serve(opts: ServeOptions) -> Result<()> {
             Ok(s) => s,
             Err(_) => continue,
         };
-        let exec = Arc::clone(&exec);
-        let queue = Arc::clone(&queue);
-        let shutdown = Arc::clone(&shutdown);
-        let socket = opts.socket.clone();
+        let state = Arc::clone(&state);
         // detached: a connection lingering past shutdown only ever sees
         // "queue closed" rejections and its own stream
         let _ = thread::Builder::new()
             .name("meltframe-conn".into())
-            .spawn(move || handle_connection(stream, &exec, &queue, &shutdown, &socket));
+            .spawn(move || handle_connection(stream, &state));
     }
 
-    queue.close();
-    let _ = dispatcher.join();
+    state.queue.close();
+    for d in dispatchers {
+        let _ = d.join();
+    }
     let _ = std::fs::remove_file(&opts.socket);
     Ok(())
 }
 
-fn handle_connection(
-    stream: UnixStream,
-    exec: &Executor,
-    queue: &JobQueue<QueuedJob>,
-    shutdown: &AtomicBool,
-    socket: &Path,
-) {
-    let reader = match stream.try_clone() {
+/// One shard's dispatcher: pop a job, sweep the queue for batchmates
+/// (same batch key, bounded count, bounded wait), execute the group as
+/// one stacked fold — or the lone job as a singleton — and answer every
+/// member's response slot.
+fn dispatch_loop(state: &DaemonState, shard_idx: usize) {
+    let shard = &state.shards[shard_idx];
+    while let Some(job) = state.queue.pop() {
+        let mut batch = vec![job];
+        if state.batching() {
+            if let Some(key) = batch[0].batch_key.clone() {
+                batch.extend(state.queue.pop_matching(
+                    |j| j.batch_key.as_deref() == Some(key.as_str()),
+                    state.max_batch - 1,
+                    state.window,
+                ));
+            }
+        }
+        shard.jobs.fetch_add(batch.len(), Ordering::SeqCst);
+        if batch.len() >= 2 {
+            shard.batches.fetch_add(1, Ordering::SeqCst);
+            shard.batched_jobs.fetch_add(batch.len(), Ordering::SeqCst);
+        }
+        // Worker-side panics are already caught by the pool, but a panic
+        // on the leader/planning side of a run (plan building, partition
+        // validation, aggregation) would otherwise kill the dispatcher
+        // and strand every admitted job in slot.wait() forever. Contain
+        // it: the jobs answer with error lines, the dispatcher lives on
+        // to drain the queue. (execute_batch has its own internal
+        // singleton fallback for batched failures.)
+        let mut responses = catch_unwind(AssertUnwindSafe(|| {
+            if batch.len() == 1 {
+                vec![execute_request(&batch[0].req, &shard.exec)]
+            } else {
+                let reqs: Vec<&JobRequest> = batch.iter().map(|j| &j.req).collect();
+                execute_batch(&reqs, &shard.exec)
+            }
+        }))
+        .unwrap_or_else(|_| {
+            batch
+                .iter()
+                .map(|j| {
+                    error_response(
+                        &j.req.id,
+                        "internal error: job panicked during planning/dispatch",
+                    )
+                })
+                .collect()
+        });
+        // every admitted job MUST be answered or its connection blocks
+        // forever; pad defensively if a response path ever short-counts
+        while responses.len() < batch.len() {
+            responses.push(error_response(
+                &batch[responses.len()].req.id,
+                "internal error: missing batch response",
+            ));
+        }
+        for (j, response) in batch.iter().zip(responses) {
+            j.slot.fill(response);
+        }
+    }
+}
+
+fn handle_connection(stream: UnixStream, state: &DaemonState) {
+    let mut reader = match stream.try_clone() {
         Ok(s) => BufReader::new(s),
         Err(_) => return,
     };
     let mut writer = stream;
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
+    // untagged requests on this connection share one fairness lane
+    let conn_lane = state.next_lane.fetch_add(1, Ordering::SeqCst) as u64;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        // bounded read: at most MAX_REQUEST_BYTES + 1 bytes land in the
+        // line buffer however long the sender's line really is
+        let n = match (&mut reader).take(MAX_REQUEST_BYTES + 1).read_line(&mut line) {
+            Ok(0) => break, // EOF
+            Ok(n) => n,
             Err(_) => break,
         };
+        if n as u64 > MAX_REQUEST_BYTES && !line.ends_with('\n') {
+            // the line is longer than the cap and we cannot resync to its
+            // end without buffering it: answer, then drop the connection
+            let _ = writeln!(
+                writer,
+                "{}",
+                error_response(
+                    "",
+                    &format!("request line exceeds {MAX_REQUEST_BYTES} bytes")
+                )
+            );
+            break;
+        }
         if line.trim().is_empty() {
             continue;
         }
         let response = match parse_request(&line) {
             Err(e) => error_response("", &e.to_string()),
             Ok(Request::Ping) => "{\"ok\": true, \"pong\": true}".to_string(),
-            Ok(Request::Stats) => stats_response(exec, queue),
+            Ok(Request::Stats) => stats_response(state),
             Ok(Request::Shutdown) => {
-                shutdown.store(true, Ordering::SeqCst);
-                queue.close();
+                state.shutdown.store(true, Ordering::SeqCst);
+                state.queue.close();
                 let _ = writeln!(writer, "{{\"ok\": true, \"shutdown\": true}}");
                 // Unblock the accept loop so `serve` can observe the flag.
                 // The connect must actually land — otherwise the accept
@@ -229,7 +396,7 @@ fn handle_connection(
                 // if every attempt fails the next real connection (which
                 // gets a "shutting down" line) completes the hand-off.
                 for _ in 0..5 {
-                    if UnixStream::connect(socket).is_ok() {
+                    if UnixStream::connect(&state.socket).is_ok() {
                         break;
                     }
                     thread::sleep(Duration::from_millis(10));
@@ -239,9 +406,15 @@ fn handle_connection(
             Ok(Request::Run(req)) => {
                 let id = req.id.clone();
                 let slot = Arc::new(ResponseSlot::new());
-                match queue.push(QueuedJob {
+                // tagged requests share a lane across connections; the
+                // batch key is computed once, against shard 0's options
+                // (halo mode and tile height are identical across shards)
+                let lane = req.client.as_deref().map(client_lane).unwrap_or(conn_lane);
+                let batch_key = req.batch_key(state.shards[0].exec.options());
+                match state.queue.push_from(lane, QueuedJob {
                     req: *req,
                     slot: Arc::clone(&slot),
+                    batch_key,
                 }) {
                     // admission control: rejected jobs answer immediately
                     Err(e) => error_response(&id, &e.to_string()),
@@ -255,14 +428,49 @@ fn handle_connection(
     }
 }
 
-fn stats_response(exec: &Executor, queue: &JobQueue<QueuedJob>) -> String {
-    let c = exec.cache_stats();
-    let q = queue.stats();
+fn stats_response(state: &DaemonState) -> String {
+    // cache stats are summed across the shards' independent plan caches
+    let (mut hits, mut misses, mut evictions, mut entries, mut resident) = (0, 0, 0, 0, 0);
+    let mut executors = String::new();
+    let (mut batches, mut batched_jobs) = (0, 0);
+    for (i, s) in state.shards.iter().enumerate() {
+        let c = s.exec.cache_stats();
+        hits += c.hits;
+        misses += c.misses;
+        evictions += c.evictions;
+        entries += c.entries;
+        resident += c.resident_bytes;
+        let (j, b, bj) = (
+            s.jobs.load(Ordering::SeqCst),
+            s.batches.load(Ordering::SeqCst),
+            s.batched_jobs.load(Ordering::SeqCst),
+        );
+        batches += b;
+        batched_jobs += bj;
+        if i > 0 {
+            executors.push_str(", ");
+        }
+        executors.push_str(&format!(
+            "{{\"workers\": {}, \"jobs\": {}, \"batches\": {}, \"batched_jobs\": {}}}",
+            s.exec.options().workers,
+            j,
+            b,
+            bj
+        ));
+    }
+    let q = state.queue.stats();
     format!(
-        "{{\"ok\": true, \"cache\": {{\"hits\": {}, \"misses\": {}, \"evictions\": {}, \
-         \"entries\": {}, \"resident_bytes\": {}}}, \
-         \"queue\": {{\"depth\": {}, \"queued\": {}, \"accepted\": {}, \"rejected\": {}}}}}",
-        c.hits, c.misses, c.evictions, c.entries, c.resident_bytes,
-        q.depth, q.queued, q.accepted, q.rejected
+        "{{\"ok\": true, \"cache\": {{\"hits\": {hits}, \"misses\": {misses}, \
+         \"evictions\": {evictions}, \"entries\": {entries}, \"resident_bytes\": {resident}}}, \
+         \"queue\": {{\"depth\": {}, \"queued\": {}, \"accepted\": {}, \"rejected\": {}}}, \
+         \"batching\": {{\"window_ms\": {}, \"max_batch\": {}, \"batches\": {batches}, \
+         \"batched_jobs\": {batched_jobs}}}, \
+         \"executors\": [{executors}]}}",
+        q.depth,
+        q.queued,
+        q.accepted,
+        q.rejected,
+        state.window.as_millis(),
+        state.max_batch
     )
 }

@@ -13,17 +13,18 @@
 //! healthy for the next job (pinned by `tests/integration_serve.rs`).
 //!
 //! Jobs on one executor are serialized by an internal run lock: the
-//! executor's fleet runs one barrier-coordinated job at a time (two
-//! interleaved jobs on one fixed pool would deadlock each other's
-//! barriers), which is exactly the FIFO dispatch order the serving
-//! [`daemon`](crate::serve::daemon) wants.
+//! executor's fleet runs one barrier-coordinated job (or batched fold —
+//! see [`Executor::run_batch`]) at a time, because two interleaved jobs
+//! on one fixed pool would deadlock each other's barriers. The serving
+//! [`daemon`](crate::serve::daemon) gets concurrency *across* executors:
+//! each of its shards owns one, with its own dispatcher and cache.
 
 use crate::sync::{Mutex, NamedMutex};
 
-use crate::coordinator::exec::Fleet;
+use crate::coordinator::exec::{execute_batch_with, Fleet};
 use crate::coordinator::metrics::PlanMetrics;
 use crate::coordinator::pipeline::ExecOptions;
-use crate::coordinator::plan::Plan;
+use crate::coordinator::plan::{Plan, Stage};
 use crate::error::{Error, Result};
 use crate::serve::cache::{CacheStats, PlanCache};
 use crate::serve::pool::WorkerPool;
@@ -105,6 +106,42 @@ impl Executor {
         plan: Plan<'_>,
         opts: &ExecOptions,
     ) -> Result<(Tensor<f32>, PlanMetrics)> {
+        self.check_workers(opts)?;
+        // one barrier-coordinated job at a time on the shared fleet; a
+        // poisoned predecessor must not poison this lock either
+        let _running = self.run_lock.lock().unwrap_or_else(|p| p.into_inner());
+        plan.compile(opts.backend)?.execute_on(opts, self.fleet(), Some(&self.cache))
+    }
+
+    /// Run one batched fold over `inputs` (all the same shape) through
+    /// `stages`, with the executor's default options.
+    pub fn run_batch(
+        &self,
+        inputs: &[Tensor<f32>],
+        stages: &[Stage],
+    ) -> Result<(Vec<Tensor<f32>>, PlanMetrics)> {
+        self.run_batch_with(inputs, stages, &self.opts)
+    }
+
+    /// [`Executor::run_batch`] with per-batch options (same worker-count
+    /// contract as [`Executor::run_with`]). The inputs are stacked along
+    /// a leading batch axis and the whole batch executes as one plan —
+    /// one plan-cache lookup, one melt and one fold per fused group,
+    /// `batched_jobs` set on every group's metrics — then the stacked
+    /// output is split back into one tensor per input, each bit-for-bit
+    /// identical to its own standalone run.
+    pub fn run_batch_with(
+        &self,
+        inputs: &[Tensor<f32>],
+        stages: &[Stage],
+        opts: &ExecOptions,
+    ) -> Result<(Vec<Tensor<f32>>, PlanMetrics)> {
+        self.check_workers(opts)?;
+        let _running = self.run_lock.lock().unwrap_or_else(|p| p.into_inner());
+        execute_batch_with(inputs, stages, opts, self.fleet(), Some(&self.cache))
+    }
+
+    fn check_workers(&self, opts: &ExecOptions) -> Result<()> {
         if let Some(pool) = &self.pool {
             if opts.workers != pool.size() {
                 return Err(Error::Coordinator(format!(
@@ -115,14 +152,14 @@ impl Executor {
                 )));
             }
         }
-        // one barrier-coordinated job at a time on the shared fleet; a
-        // poisoned predecessor must not poison this lock either
-        let _running = self.run_lock.lock().unwrap_or_else(|p| p.into_inner());
-        let fleet = match &self.pool {
+        Ok(())
+    }
+
+    fn fleet(&self) -> Fleet<'_> {
+        match &self.pool {
             Some(pool) => Fleet::Pool(pool),
             None => Fleet::Scoped,
-        };
-        plan.compile(opts.backend)?.execute_on(opts, fleet, Some(&self.cache))
+        }
     }
 }
 
@@ -188,6 +225,37 @@ mod tests {
                 assert_eq!(built, 0);
             }
         }
+    }
+
+    #[test]
+    fn batched_runs_match_singletons_and_cache_like_any_plan() {
+        let stages: Vec<Stage> = [
+            Job::gaussian(&[3, 3], 1.0),
+            Job::curvature(&[3, 3]),
+            Job::median(&[3, 3]),
+        ]
+        .iter()
+        .map(|j| j.to_stage().unwrap())
+        .collect();
+        let inputs: Vec<Tensor<f32>> = (0..3)
+            .map(|s| Tensor::random(&[18, 19], 0.0, 255.0, 40 + s).unwrap())
+            .collect();
+        let exec = Executor::persistent(ExecOptions::native(2), 8);
+        let (outs, pm) = exec.run_batch(&inputs, &stages).unwrap();
+        // one plan lookup (a miss on the cold cache), one fused fold for
+        // the whole batch
+        assert_eq!(pm.melts(), 1);
+        assert_eq!(pm.folds(), 1);
+        assert_eq!(pm.batched_jobs(), 3);
+        assert_eq!(pm.plan_cache_misses(), 1);
+        for (out, x) in outs.iter().zip(&inputs) {
+            let (reference, _) = pipeline(x).run(&ExecOptions::native(1)).unwrap();
+            assert_allclose(out.data(), reference.data(), 0.0, 0.0);
+        }
+        // a second batch of the same shape and size reuses the plan
+        let (_, again) = exec.run_batch(&inputs, &stages).unwrap();
+        assert_eq!(again.plan_cache_hits(), 1);
+        assert_eq!(again.gathers_built(), 0);
     }
 
     #[test]

@@ -15,10 +15,22 @@
 //! - [`executor::Executor`] — the reusable handle owning both, with
 //!   one-job-at-a-time dispatch (a shared barrier fleet cannot interleave
 //!   jobs) and fault isolation: a poisoned job fails alone.
-//! - [`queue::JobQueue`] — bounded FIFO admission control for the daemon.
+//! - [`queue::JobQueue`] — bounded admission control with per-client
+//!   round-robin fairness lanes and a predicate sweep
+//!   ([`queue::JobQueue::pop_matching`]) used by the batch collector.
 //! - [`protocol`] / [`daemon`] — the line-delimited JSON request protocol
 //!   and the Unix-domain-socket front end (`meltframe serve` /
 //!   `meltframe submit`).
+//!
+//! On top of those, the daemon folds **cross-request batches**: admitted
+//! jobs that share a batch key (shape, op-chain, parameters, grid,
+//! boundary, halo mode, tile height) are stacked along a leading batch
+//! axis and executed as ONE fused run — one plan lookup, one melt, one
+//! fold for the whole group — then split and answered individually,
+//! each member bit-for-bit identical to its own standalone run
+//! ([`protocol::execute_batch`]). `--executors N` shards the worker
+//! budget into N independent executor/dispatcher pairs so unrelated
+//! batches run concurrently.
 
 pub mod cache;
 pub mod daemon;
@@ -28,8 +40,11 @@ pub mod protocol;
 pub mod queue;
 
 pub use cache::{CacheStats, PlanCache};
-pub use daemon::{serve, ResponseSlot, ServeOptions, DEFAULT_QUEUE_DEPTH};
+pub use daemon::{
+    serve, ResponseSlot, ServeOptions, DEFAULT_BATCH_WINDOW_MS, DEFAULT_EXECUTORS,
+    DEFAULT_MAX_BATCH, DEFAULT_QUEUE_DEPTH,
+};
 pub use executor::{Executor, DEFAULT_CACHE_CAPACITY};
 pub use pool::WorkerPool;
-pub use protocol::{execute_request, parse_request, JobRequest, Request};
+pub use protocol::{execute_batch, execute_request, parse_request, JobRequest, Request};
 pub use queue::{JobQueue, QueueStats};

@@ -76,6 +76,55 @@ pub struct JobRequest {
     /// Override the native tile height for this job (cache-key relevant).
     pub tile_rows: Option<usize>,
     pub fault: Option<FaultSpec>,
+    /// Client tag for the queue's per-client fairness lanes: requests
+    /// sharing a tag share one round-robin lane. Absent ⇒ the daemon
+    /// assigns a per-connection lane.
+    pub client: Option<String>,
+}
+
+impl JobRequest {
+    /// Input shape, when it is knowable without touching the filesystem
+    /// (`None` for `npy` inputs — those never co-batch).
+    fn input_dims(&self) -> Option<Vec<usize>> {
+        match &self.input {
+            InputSpec::SyntheticVolume { dims, .. } => Some(dims.clone()),
+            InputSpec::SyntheticImage { dims, .. } => Some(dims.to_vec()),
+            InputSpec::SegmentationMask { dims } => Some(dims.to_vec()),
+            InputSpec::Npy { .. } => None,
+        }
+    }
+
+    /// The co-batching key: requests may share one stacked fold only when
+    /// these match. Deliberately **stricter** than the plan-cache key —
+    /// the cache keys on kernel *names* (a gaussian σ=1 and σ=2 share a
+    /// `RowGather` plan), but co-batched requests share one kernel
+    /// instance, so the full job serialization (kind, params, window,
+    /// grid, boundary) participates here, alongside the input shape and
+    /// the resolved halo-mode/tile-height overrides. `None` means "never
+    /// co-batch": faulted requests (their detonating kernel must fail
+    /// alone) and file-backed inputs.
+    pub fn batch_key(&self, opts: &crate::coordinator::pipeline::ExecOptions) -> Option<String> {
+        if self.fault.is_some() {
+            return None;
+        }
+        let dims = self.input_dims()?;
+        let halo = self.halo_mode.unwrap_or(opts.halo_mode);
+        let tile = self.tile_rows.unwrap_or(opts.tile_rows).max(1);
+        Some(format!(
+            "dims{:?}|jobs{:?}|halo={:?}|tile={}",
+            dims, self.jobs, halo, tile
+        ))
+    }
+}
+
+/// FNV-1a over a client tag: the fairness-lane id for tagged requests.
+pub(crate) fn client_lane(tag: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in tag.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
 }
 
 fn opt<'a>(v: &'a JsonValue, key: &str) -> Option<&'a JsonValue> {
@@ -120,6 +169,9 @@ fn parse_job_request(v: &JsonValue) -> Result<JobRequest> {
         other => other,
     };
     let fault = opt(v, "fault").map(parse_fault).transpose()?;
+    let client = opt(v, "client")
+        .map(|c| c.as_str().map(str::to_string))
+        .transpose()?;
     Ok(JobRequest {
         id,
         input,
@@ -127,6 +179,7 @@ fn parse_job_request(v: &JsonValue) -> Result<JobRequest> {
         halo_mode,
         tile_rows,
         fault,
+        client,
     })
 }
 
@@ -296,7 +349,18 @@ fn run_request(req: &JobRequest, exec: &Executor) -> Result<String> {
         opts.tile_rows = tile;
     }
     let (out, pm) = exec.run_with(plan, &opts)?;
+    Ok(render_ok(req, &out, &pm))
+}
 
+/// Render the success line for `req`: digest, shape, and the metrics
+/// object shared between singleton and batched execution (a batched
+/// response reports the whole batch's plan counters, so `batched_jobs`
+/// says how many requests amortized them).
+fn render_ok(
+    req: &JobRequest,
+    out: &crate::tensor::dense::Tensor<f32>,
+    pm: &crate::coordinator::metrics::PlanMetrics,
+) -> String {
     let mut report = JsonReport::new(format!("serve:{}", req.id));
     report.metric("stages", pm.stages() as f64);
     report.metric("melts", pm.melts() as f64);
@@ -307,6 +371,7 @@ fn run_request(req: &JobRequest, exec: &Executor) -> Result<String> {
     report.metric("plan_cache_misses", pm.plan_cache_misses() as f64);
     report.metric("plan_cache_evictions", pm.plan_cache_evictions() as f64);
     report.metric("gathers_built", pm.gathers_built() as f64);
+    report.metric("batched_jobs", pm.batched_jobs() as f64);
 
     let shape = out
         .shape()
@@ -314,14 +379,67 @@ fn run_request(req: &JobRequest, exec: &Executor) -> Result<String> {
         .map(|d| d.to_string())
         .collect::<Vec<_>>()
         .join(", ");
-    Ok(format!(
+    format!(
         "{{\"id\": \"{}\", \"ok\": true, \"digest\": \"{:016x}\", \"shape\": [{}], \
          \"metrics\": {}}}",
         json_escape(&req.id),
         value_digest(out.data()),
         shape,
         report.render_line()
-    ))
+    )
+}
+
+/// Execute a batch of co-batchable requests as ONE stacked fold and
+/// render one response line per member, in order. Falls back to
+/// per-member [`execute_request`] singletons — each of which fails or
+/// succeeds alone — whenever the batch cannot or should not run stacked:
+/// fewer than 2 members, any member without a batch key or with a key
+/// mismatch (collector bug), or a batched run that errors or panics.
+/// Like `execute_request`, never panics and never errors.
+pub fn execute_batch(reqs: &[&JobRequest], exec: &Executor) -> Vec<String> {
+    let singletons = |reqs: &[&JobRequest]| -> Vec<String> {
+        reqs.iter().map(|r| execute_request(r, exec)).collect()
+    };
+    if reqs.len() < 2 {
+        return singletons(reqs);
+    }
+    let key0 = reqs[0].batch_key(exec.options());
+    if key0.is_none() || reqs.iter().any(|r| r.batch_key(exec.options()) != key0) {
+        return singletons(reqs);
+    }
+    let batched = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_batch(reqs, exec)));
+    match batched {
+        Ok(Ok(lines)) => lines,
+        // a faulting batch fails over to singletons: every member re-runs
+        // alone, so only the actually-broken one answers with an error
+        // and the pool and cache stay healthy
+        _ => singletons(reqs),
+    }
+}
+
+fn run_batch(reqs: &[&JobRequest], exec: &Executor) -> Result<Vec<String>> {
+    let inputs = reqs
+        .iter()
+        .map(|r| r.input.load())
+        .collect::<Result<Vec<_>>>()?;
+    let stages = reqs[0]
+        .jobs
+        .iter()
+        .map(|j| j.to_stage())
+        .collect::<Result<Vec<_>>>()?;
+    let mut opts = exec.options().clone();
+    if let Some(mode) = reqs[0].halo_mode {
+        opts.halo_mode = mode;
+    }
+    if let Some(tile) = reqs[0].tile_rows {
+        opts.tile_rows = tile;
+    }
+    let (outs, pm) = exec.run_batch_with(&inputs, &stages, &opts)?;
+    Ok(reqs
+        .iter()
+        .zip(&outs)
+        .map(|(r, out)| render_ok(r, out, &pm))
+        .collect())
 }
 
 #[cfg(test)]
@@ -409,6 +527,128 @@ mod tests {
         assert_eq!(v.field("shape").unwrap().as_usize_vec().unwrap(), vec![20, 21]);
         let counters = v.field("metrics").unwrap().field("metrics").unwrap();
         assert!(counters.field("stages").unwrap().as_f64().unwrap() >= 2.0);
+    }
+
+    fn parse_run(line: &str) -> JobRequest {
+        match parse_request(line).unwrap() {
+            Request::Run(r) => *r,
+            other => panic!("expected run, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn client_tag_parses_and_hashes_stably() {
+        let req = parse_run(JOB);
+        assert!(req.client.is_none());
+        let line = JOB.replace("\"id\": \"j1\",", "\"id\": \"j1\", \"client\": \"tenant-a\",");
+        let req = parse_run(&line);
+        assert_eq!(req.client.as_deref(), Some("tenant-a"));
+        assert_eq!(client_lane("tenant-a"), client_lane("tenant-a"));
+        assert_ne!(client_lane("tenant-a"), client_lane("tenant-b"));
+    }
+
+    #[test]
+    fn batch_keys_gate_co_batching() {
+        let opts = ExecOptions::native(2);
+        let a = parse_run(JOB);
+        // a different id and a different seed still co-batch: only the
+        // shape and the op chain matter, not the data
+        let b = parse_run(
+            &JOB.replace("\"id\": \"j1\"", "\"id\": \"j2\"")
+                .replace("\"seed\": 7", "\"seed\": 8"),
+        );
+        assert_eq!(a.batch_key(&opts), b.batch_key(&opts));
+        assert!(a.batch_key(&opts).is_some());
+        // same plan-cache key (kernel *name*), different σ — the batch
+        // key is stricter and keeps them apart
+        let hot = parse_run(&JOB.replace("\"sigma\": 1.0", "\"sigma\": 2.0"));
+        assert_ne!(a.batch_key(&opts), hot.batch_key(&opts));
+        // shape differences separate batches
+        let big = parse_run(&JOB.replace("[20, 21]", "[22, 21]"));
+        assert_ne!(a.batch_key(&opts), big.batch_key(&opts));
+        // faulted requests never co-batch (the detonator must fail alone)
+        let boom = parse_run(&JOB.replace(
+            "\"id\": \"j1\",",
+            "\"id\": \"boom\", \"fault\": {\"mode\": \"error\", \"after\": 0},",
+        ));
+        assert!(boom.batch_key(&opts).is_none());
+        // a halo-mode override resolves against the daemon default: the
+        // overridden request only matches executors already in that mode
+        let ex = parse_run(&JOB.replace(
+            "\"id\": \"j1\",",
+            "\"id\": \"j1\", \"halo_mode\": \"exchange\",",
+        ));
+        assert_ne!(a.batch_key(&opts), ex.batch_key(&opts));
+        let mut exopts = opts.clone();
+        exopts.halo_mode = HaloMode::Exchange;
+        assert_eq!(a.batch_key(&exopts), ex.batch_key(&exopts));
+    }
+
+    #[test]
+    fn batched_responses_match_singletons_digest_for_digest() {
+        let exec = Executor::persistent(ExecOptions::native(2), 8);
+        let reqs: Vec<JobRequest> = (0..3)
+            .map(|i| {
+                parse_run(
+                    &JOB.replace("\"id\": \"j1\"", &format!("\"id\": \"b{i}\""))
+                        .replace("\"seed\": 7", &format!("\"seed\": {}", 7 + i)),
+                )
+            })
+            .collect();
+        let refs: Vec<&JobRequest> = reqs.iter().collect();
+        let lines = execute_batch(&refs, &exec);
+        assert_eq!(lines.len(), 3);
+        let solo = Executor::one_shot(ExecOptions::native(2));
+        for (line, req) in lines.iter().zip(&reqs) {
+            let v = JsonValue::parse(line).unwrap();
+            assert_eq!(v.field("ok").unwrap(), &JsonValue::Bool(true));
+            assert_eq!(v.field("id").unwrap().as_str().unwrap(), req.id);
+            // bit-for-bit what this request's own singleton run digests
+            let sv = JsonValue::parse(&execute_request(req, &solo)).unwrap();
+            assert_eq!(
+                v.field("digest").unwrap().as_str().unwrap(),
+                sv.field("digest").unwrap().as_str().unwrap()
+            );
+            // the whole batch ran as one fold with one plan lookup
+            let counters = v.field("metrics").unwrap().field("metrics").unwrap();
+            assert_eq!(counters.field("batched_jobs").unwrap().as_f64().unwrap(), 3.0);
+            assert_eq!(counters.field("folds").unwrap().as_f64().unwrap(), 1.0);
+            assert_eq!(
+                counters.field("plan_cache_hits").unwrap().as_f64().unwrap()
+                    + counters.field("plan_cache_misses").unwrap().as_f64().unwrap(),
+                1.0
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_batch_falls_back_to_singletons_and_fault_fails_alone() {
+        // hand execute_batch a list a correct collector would never form
+        // (a faulty member has no batch key): it must fall back to
+        // singletons, poisoning only the faulty response
+        let exec = Executor::persistent(ExecOptions::native(2), 8);
+        let good = parse_run(&JOB.replace("\"id\": \"j1\"", "\"id\": \"g1\""));
+        let boom = parse_run(&JOB.replace(
+            "\"id\": \"j1\",",
+            "\"id\": \"boom\", \"fault\": {\"mode\": \"panic\", \"after\": 0},",
+        ));
+        let good2 = parse_run(&JOB.replace("\"id\": \"j1\"", "\"id\": \"g2\""));
+        let lines = execute_batch(&[&good, &boom, &good2], &exec);
+        let oks: Vec<bool> = lines
+            .iter()
+            .map(|l| {
+                JsonValue::parse(l).unwrap().field("ok").unwrap() == &JsonValue::Bool(true)
+            })
+            .collect();
+        assert_eq!(oks, [true, false, true]);
+        // singleton fallbacks report no batching
+        let v = JsonValue::parse(&lines[0]).unwrap();
+        let counters = v.field("metrics").unwrap().field("metrics").unwrap();
+        assert_eq!(counters.field("batched_jobs").unwrap().as_f64().unwrap(), 0.0);
+        // and the pool survives for the next job
+        let after = execute_request(&good, &exec);
+        let v = JsonValue::parse(&after).unwrap();
+        assert_eq!(v.field("ok").unwrap(), &JsonValue::Bool(true));
     }
 
     #[test]

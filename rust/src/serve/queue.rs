@@ -1,21 +1,38 @@
-//! Bounded FIFO job queue with admission control.
+//! Bounded job queue with admission control and per-client fairness.
 //!
 //! The daemon accepts requests on connection threads and executes them on
-//! a single dispatcher (jobs on one pool are serialized anyway — see
+//! one or more dispatcher threads (see
 //! [`Executor`](crate::serve::Executor)). [`JobQueue`] is the hand-off:
 //! bounded depth, reject-with-error when full (the client gets an
-//! immediate admission error instead of unbounded buffering), FIFO pop on
-//! the dispatcher side, and a close signal that drains cleanly — already
-//! admitted jobs still run, new pushes are refused.
+//! immediate admission error instead of unbounded buffering), and a close
+//! signal that drains cleanly — already admitted jobs still run, new
+//! pushes are refused.
+//!
+//! Internally the queue keeps one FIFO *lane per client* and serves lanes
+//! round-robin: [`JobQueue::pop`] takes the front lane's oldest item and
+//! rotates that lane to the back, so a chatty client's backlog cannot
+//! starve the others — each pending client advances once per round.
+//! [`JobQueue::push`] is the single-lane legacy shape (client 0), which
+//! degenerates to plain FIFO. [`JobQueue::pop_matching`] is the batch
+//! collector's side door: it removes every pending item matching a
+//! predicate (up to a cap), optionally lingering inside a bounded window
+//! for more mates, and leaves non-matching items untouched in their
+//! lanes.
 
 use std::collections::VecDeque;
+use std::time::{Duration, Instant};
 
 use crate::sync::{Condvar, Mutex, NamedCondvar, NamedMutex};
 
 use crate::error::{Error, Result};
 
 struct QueueInner<T> {
-    items: VecDeque<T>,
+    /// One FIFO lane per client id, in round-robin service order. Lanes
+    /// are created on first push and dropped when emptied — an invariant
+    /// the pop paths maintain is that no lane is ever empty.
+    lanes: VecDeque<(u64, VecDeque<T>)>,
+    /// Total items across all lanes (the admission-control figure).
+    queued: usize,
     closed: bool,
     accepted: u64,
     rejected: u64,
@@ -30,7 +47,8 @@ pub struct QueueStats {
     pub rejected: u64,
 }
 
-/// A bounded multi-producer single-consumer FIFO queue.
+/// A bounded multi-producer multi-consumer queue with per-client
+/// round-robin fairness.
 pub struct JobQueue<T> {
     inner: Mutex<QueueInner<T>>,
     ready: Condvar,
@@ -42,7 +60,8 @@ impl<T> JobQueue<T> {
     pub fn new(depth: usize) -> Self {
         Self {
             inner: Mutex::new_named("serve.queue.jobs", QueueInner {
-                items: VecDeque::new(),
+                lanes: VecDeque::new(),
+                queued: 0,
                 closed: false,
                 accepted: 0,
                 rejected: 0,
@@ -57,9 +76,16 @@ impl<T> JobQueue<T> {
         self.depth
     }
 
-    /// Admit `item`, or reject immediately: `Err` when the queue already
-    /// holds `depth` pending jobs (admission control) or has been closed.
+    /// Admit `item` on client 0's lane — the legacy single-lane shape,
+    /// plain FIFO when nobody uses [`JobQueue::push_from`].
     pub fn push(&self, item: T) -> Result<()> {
+        self.push_from(0, item)
+    }
+
+    /// Admit `item` on `client`'s lane, or reject immediately: `Err` when
+    /// the queue already holds `depth` pending jobs across all lanes
+    /// (admission control) or has been closed.
+    pub fn push_from(&self, client: u64, item: T) -> Result<()> {
         let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
         if inner.closed {
             // counts as a refusal just like the full-queue path, so
@@ -67,32 +93,127 @@ impl<T> JobQueue<T> {
             inner.rejected += 1;
             return Err(Error::Coordinator("job queue closed (daemon shutting down)".into()));
         }
-        if inner.items.len() >= self.depth {
+        if inner.queued >= self.depth {
             inner.rejected += 1;
             return Err(Error::Coordinator(format!(
                 "job queue full (depth {}) — resubmit later",
                 self.depth
             )));
         }
-        inner.items.push_back(item);
+        match inner.lanes.iter_mut().find(|(c, _)| *c == client) {
+            Some((_, lane)) => lane.push_back(item),
+            None => inner.lanes.push_back((client, VecDeque::from([item]))),
+        }
+        inner.queued += 1;
         inner.accepted += 1;
         drop(inner);
-        self.ready.notify_one();
+        // the waiter set is heterogeneous — plain `pop` dispatchers and
+        // `pop_matching` batch collectors with predicates — so a
+        // notify_one could wake a collector the new item doesn't match
+        // and strand it; wake everyone and let the predicates sort it out
+        self.ready.notify_all();
         Ok(())
     }
 
-    /// Block for the next job in FIFO order. `None` once the queue is
-    /// closed *and* drained — already admitted jobs are still delivered.
+    /// Block for the next job, round-robin across client lanes (FIFO
+    /// within each lane). `None` once the queue is closed *and* drained —
+    /// already admitted jobs are still delivered.
     pub fn pop(&self) -> Option<T> {
         let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
         loop {
-            if let Some(item) = inner.items.pop_front() {
-                return Some(item);
+            if let Some((client, mut lane)) = inner.lanes.pop_front() {
+                if let Some(item) = lane.pop_front() {
+                    inner.queued -= 1;
+                    if !lane.is_empty() {
+                        // the serviced client goes to the back of the round
+                        inner.lanes.push_back((client, lane));
+                    }
+                    return Some(item);
+                }
+                // an empty lane violates the construction invariant; drop
+                // it and retry rather than panic a dispatcher
+                continue;
             }
             if inner.closed {
                 return None;
             }
             inner = self.ready.wait(inner).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Remove up to `max` pending items satisfying `matches`, from any
+    /// position in any lane (lane order, oldest first within a lane). If
+    /// fewer than `max` match immediately and `window` is nonzero, linger
+    /// up to `window` for more mates, returning early once `max` are in
+    /// hand or the queue closes. A zero `window` makes this a single
+    /// non-blocking sweep. Never blocks on an *empty* result beyond the
+    /// window; non-matching items are left untouched.
+    pub fn pop_matching<F>(&self, matches: F, max: usize, window: Duration) -> Vec<T>
+    where
+        F: Fn(&T) -> bool,
+    {
+        let mut out = Vec::new();
+        if max == 0 {
+            return out;
+        }
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        Self::drain_matching(&mut inner, &matches, max, &mut out);
+        if out.len() >= max || window.is_zero() {
+            return out;
+        }
+        let deadline = Instant::now() + window;
+        while out.len() < max && !inner.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, res) = self
+                .ready
+                .wait_timeout(inner, deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
+            inner = guard;
+            Self::drain_matching(&mut inner, &matches, max, &mut out);
+            if res.timed_out() {
+                // a timed-out wakeup is final (after the sweep above):
+                // looping on the clock here could spin unboundedly under
+                // the model checker, whose timeout deliveries do not
+                // advance real time
+                break;
+            }
+        }
+        out
+    }
+
+    /// One locked sweep of every lane, moving items matching `matches`
+    /// into `out` (up to `max` total) and dropping lanes it empties.
+    fn drain_matching<F>(inner: &mut QueueInner<T>, matches: &F, max: usize, out: &mut Vec<T>)
+    where
+        F: Fn(&T) -> bool,
+    {
+        let mut li = 0;
+        while li < inner.lanes.len() && out.len() < max {
+            let lane = &mut inner.lanes[li].1;
+            let mut i = 0;
+            while i < lane.len() && out.len() < max {
+                if matches(&lane[i]) {
+                    match lane.remove(i) {
+                        Some(item) => {
+                            out.push(item);
+                            inner.queued -= 1;
+                        }
+                        // unreachable (i < lane.len()), but stepping past
+                        // beats panicking the collector
+                        None => i += 1,
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            if lane.is_empty() {
+                inner.lanes.remove(li);
+            } else {
+                li += 1;
+            }
         }
     }
 
@@ -104,13 +225,9 @@ impl<T> JobQueue<T> {
         self.ready.notify_all();
     }
 
-    /// Currently pending jobs.
+    /// Currently pending jobs across all lanes.
     pub fn len(&self) -> usize {
-        self.inner
-            .lock()
-            .unwrap_or_else(|p| p.into_inner())
-            .items
-            .len()
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).queued
     }
 
     /// Whether nothing is pending.
@@ -123,7 +240,7 @@ impl<T> JobQueue<T> {
         let inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
         QueueStats {
             depth: self.depth,
-            queued: inner.items.len(),
+            queued: inner.queued,
             accepted: inner.accepted,
             rejected: inner.rejected,
         }
@@ -190,5 +307,78 @@ mod tests {
         let (first, second) = consumer.join().unwrap();
         assert_eq!(first, Some(42));
         assert_eq!(second, None);
+    }
+
+    #[test]
+    fn round_robin_interleaves_clients() {
+        // client 1 floods; clients 2 and 3 each get served on the first
+        // round anyway, then 1's backlog drains
+        let q = JobQueue::new(8);
+        q.push_from(1, "a1").unwrap();
+        q.push_from(1, "a2").unwrap();
+        q.push_from(1, "a3").unwrap();
+        q.push_from(2, "b1").unwrap();
+        q.push_from(3, "c1").unwrap();
+        let order: Vec<_> = (0..5).map(|_| q.pop().unwrap()).collect();
+        assert_eq!(order, ["a1", "b1", "c1", "a2", "a3"]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_matching_sweeps_without_blocking_on_zero_window() {
+        let q = JobQueue::new(8);
+        for i in 1..=5 {
+            q.push_from(i % 2, i).unwrap();
+        }
+        // odd items match, capped at 2, no lingering
+        let got = q.pop_matching(|i| i % 2 == 1, 2, Duration::ZERO);
+        assert_eq!(got, [1, 3]);
+        // the rest are untouched and still pop in round-robin order
+        assert_eq!(q.len(), 3);
+        let rest: Vec<_> = (0..3).map(|_| q.pop().unwrap()).collect();
+        assert_eq!(rest, [5, 2, 4]);
+    }
+
+    #[test]
+    fn pop_matching_returns_all_matches_under_cap() {
+        let q = JobQueue::new(8);
+        q.push(10).unwrap();
+        q.push(11).unwrap();
+        let got = q.pop_matching(|_| true, 8, Duration::ZERO);
+        assert_eq!(got, [10, 11]);
+        assert!(q.is_empty());
+        // an empty queue yields an empty sweep, not a block
+        assert!(q.pop_matching(|_| true, 8, Duration::ZERO).is_empty());
+        // max == 0 is a no-op even with items pending
+        q.push(1).unwrap();
+        assert!(q.pop_matching(|_| true, 0, Duration::from_secs(5)).is_empty());
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn pop_matching_wakes_for_late_mates_and_fills_the_cap() {
+        let q = Arc::new(JobQueue::new(8));
+        let qc = Arc::clone(&q);
+        let collector = std::thread::spawn(move || {
+            // generous window: returns the moment the cap is reached
+            qc.pop_matching(|i| *i < 100, 2, Duration::from_secs(30))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let got = collector.join().unwrap();
+        assert_eq!(got, [1, 2]);
+    }
+
+    #[test]
+    fn pop_matching_stops_lingering_on_close() {
+        let q = JobQueue::new(8);
+        q.push(7).unwrap();
+        q.close();
+        // closed queue: collect what is there, never wait out the window
+        let t0 = Instant::now();
+        let got = q.pop_matching(|_| true, 5, Duration::from_secs(30));
+        assert_eq!(got, [7]);
+        assert!(t0.elapsed() < Duration::from_secs(5));
     }
 }

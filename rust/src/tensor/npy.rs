@@ -14,7 +14,12 @@ use crate::tensor::dense::Tensor;
 const MAGIC: &[u8; 6] = b"\x93NUMPY";
 
 /// Serialize a tensor to `.npy` bytes.
-pub fn to_npy_bytes(t: &Tensor<f32>) -> Vec<u8> {
+///
+/// Errors with [`Error::Format`] if the padded header exceeds the u16
+/// length field of format 1.0 (a shape tuple tens of thousands of
+/// characters long); truncating the length silently would make the
+/// writer emit bytes its own reader misparses.
+pub fn to_npy_bytes(t: &Tensor<f32>) -> Result<Vec<u8>> {
     let shape_str = match t.shape().len() {
         1 => format!("({},)", t.shape()[0]),
         _ => format!(
@@ -35,21 +40,29 @@ pub fn to_npy_bytes(t: &Tensor<f32>) -> Vec<u8> {
     header.push_str(&" ".repeat(pad));
     header.push('\n');
 
+    let hlen = u16::try_from(header.len()).map_err(|_| {
+        Error::Format(format!(
+            "npy header is {} bytes; format 1.0 caps it at {} (shape rank too high)",
+            header.len(),
+            u16::MAX
+        ))
+    })?;
+
     let mut out = Vec::with_capacity(10 + header.len() + t.len() * 4);
     out.extend_from_slice(MAGIC);
     out.extend_from_slice(&[1u8, 0u8]); // version 1.0
-    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(&hlen.to_le_bytes());
     out.extend_from_slice(header.as_bytes());
     for &v in t.data() {
         out.extend_from_slice(&v.to_le_bytes());
     }
-    out
+    Ok(out)
 }
 
 /// Write a tensor to a `.npy` file.
 pub fn save(t: &Tensor<f32>, path: impl AsRef<Path>) -> Result<()> {
     let mut f = std::fs::File::create(path)?;
-    f.write_all(&to_npy_bytes(t))?;
+    f.write_all(&to_npy_bytes(t)?)?;
     Ok(())
 }
 
@@ -141,14 +154,14 @@ mod tests {
     #[test]
     fn round_trip_2d() {
         let t = Tensor::from_vec(&[3, 4], (0..12).map(|i| i as f32 * 0.5).collect()).unwrap();
-        let back = from_npy_bytes(&to_npy_bytes(&t)).unwrap();
+        let back = from_npy_bytes(&to_npy_bytes(&t).unwrap()).unwrap();
         assert_eq!(back, t);
     }
 
     #[test]
     fn round_trip_1d_trailing_comma() {
         let t = Tensor::from_vec(&[5], vec![1.0, -2.0, 3.5, 0.0, 9.0]).unwrap();
-        let bytes = to_npy_bytes(&t);
+        let bytes = to_npy_bytes(&t).unwrap();
         // 1-D shapes serialize with the python tuple trailing comma
         let header = String::from_utf8_lossy(&bytes[10..]).to_string();
         assert!(header.contains("(5,)"));
@@ -158,7 +171,7 @@ mod tests {
     #[test]
     fn header_alignment_is_64() {
         let t = Tensor::<f32>::zeros(&[7, 7, 7]).unwrap();
-        let bytes = to_npy_bytes(&t);
+        let bytes = to_npy_bytes(&t).unwrap();
         let hlen = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
         assert_eq!((10 + hlen) % 64, 0);
     }
@@ -167,7 +180,7 @@ mod tests {
     fn rejects_garbage() {
         assert!(from_npy_bytes(b"not npy at all").is_err());
         let t = Tensor::<f32>::zeros(&[2, 2]).unwrap();
-        let mut bytes = to_npy_bytes(&t);
+        let mut bytes = to_npy_bytes(&t).unwrap();
         bytes.truncate(bytes.len() - 4); // drop one f32
         assert!(from_npy_bytes(&bytes).is_err());
     }
@@ -186,13 +199,13 @@ mod tests {
     #[test]
     fn rejects_truncated_header() {
         // header length field claims more bytes than the stream carries
-        let mut bytes = to_npy_bytes(&Tensor::<f32>::zeros(&[3]).unwrap());
+        let mut bytes = to_npy_bytes(&Tensor::<f32>::zeros(&[3]).unwrap()).unwrap();
         let hlen = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
         bytes.truncate(10 + hlen - 5);
         let err = from_npy_bytes(&bytes).unwrap_err();
         assert!(err.to_string().contains("truncated npy header"), "{err}");
         // ... and a header that is not utf-8
-        let mut bytes = to_npy_bytes(&Tensor::<f32>::zeros(&[3]).unwrap());
+        let mut bytes = to_npy_bytes(&Tensor::<f32>::zeros(&[3]).unwrap()).unwrap();
         bytes[12] = 0xFF;
         assert!(from_npy_bytes(&bytes).is_err());
     }
@@ -211,7 +224,7 @@ mod tests {
         let h = "{'descr': '>f4', 'fortran_order': False, 'shape': (4,), }\n";
         assert!(from_npy_bytes(&forged(h, 4)).is_err());
         // format version 2.x (u32 header length — unsupported)
-        let mut bytes = to_npy_bytes(&Tensor::<f32>::zeros(&[2]).unwrap());
+        let mut bytes = to_npy_bytes(&Tensor::<f32>::zeros(&[2]).unwrap()).unwrap();
         bytes[6] = 2;
         let err = from_npy_bytes(&bytes).unwrap_err();
         assert!(err.to_string().contains("version"), "{err}");
@@ -240,10 +253,35 @@ mod tests {
     fn rejects_trailing_bytes() {
         // a body longer than the shape volume is corruption, not padding
         let t = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
-        let mut bytes = to_npy_bytes(&t);
+        let mut bytes = to_npy_bytes(&t).unwrap();
         bytes.extend_from_slice(&7.5f32.to_le_bytes());
         let err = from_npy_bytes(&bytes).unwrap_err();
         assert!(err.to_string().contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn oversized_header_errors_instead_of_truncating() {
+        // A shape tuple of ~22k unit extents pads the header past the
+        // u16 length field of format 1.0. The old writer emitted
+        // `header.len() as u16` — a silently wrapped length whose stream
+        // the reader then misparses; now it must refuse to serialize.
+        let dims = vec![1usize; 22_000];
+        let t = Tensor::from_vec(&dims, vec![1.0]).unwrap();
+        let err = to_npy_bytes(&t).unwrap_err();
+        assert!(matches!(err, Error::Format(_)), "{err}");
+        assert!(err.to_string().contains("npy header"), "{err}");
+        // a forged stream mimicking the old truncated-length output is
+        // rejected by the reader rather than misparsed
+        let mut huge = String::from("{'descr': '<f4', 'fortran_order': False, 'shape': (");
+        huge.push_str(&vec!["1"; 22_000].join(", "));
+        huge.push_str("), }\n");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&[1u8, 0u8]);
+        bytes.extend_from_slice(&(huge.len() as u16).to_le_bytes()); // wraps
+        bytes.extend_from_slice(huge.as_bytes());
+        bytes.extend_from_slice(&1.0f32.to_le_bytes());
+        assert!(from_npy_bytes(&bytes).is_err());
     }
 
     #[test]
@@ -263,7 +301,7 @@ mod tests {
             let dims: Vec<usize> = (0..rank).map(|_| 1 + rng.below(6)).collect();
             let n: usize = dims.iter().product();
             let t = Tensor::from_vec(&dims, rng.uniform_vec(n, -100.0, 100.0)).unwrap();
-            let back = from_npy_bytes(&to_npy_bytes(&t)).unwrap();
+            let back = from_npy_bytes(&to_npy_bytes(&t).unwrap()).unwrap();
             assert_eq!(back, t);
         });
     }

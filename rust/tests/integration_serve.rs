@@ -18,15 +18,43 @@ fn sock_path(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!("meltframe-{tag}-{}.sock", std::process::id()))
 }
 
-/// Start an in-process daemon and wait until its socket accepts.
+/// Start an in-process daemon (batching OFF — the legacy singleton path)
+/// and wait until its socket accepts.
 fn start_daemon(tag: &str, workers: usize) -> (PathBuf, JoinHandle<()>) {
-    let path = sock_path(tag);
     let opts = ServeOptions {
-        socket: path.clone(),
+        socket: sock_path(tag),
         exec: ExecOptions::native(workers),
         queue_depth: 8,
         cache_capacity: 8,
+        batch_window_ms: 0,
+        max_batch: 8,
+        executors: 1,
     };
+    spawn_daemon(opts)
+}
+
+/// Start a daemon with cross-request batching enabled.
+fn start_batching_daemon(
+    tag: &str,
+    workers: usize,
+    window_ms: u64,
+    max_batch: usize,
+    executors: usize,
+) -> (PathBuf, JoinHandle<()>) {
+    let opts = ServeOptions {
+        socket: sock_path(tag),
+        exec: ExecOptions::native(workers),
+        queue_depth: 16,
+        cache_capacity: 8,
+        batch_window_ms: window_ms,
+        max_batch,
+        executors,
+    };
+    spawn_daemon(opts)
+}
+
+fn spawn_daemon(opts: ServeOptions) -> (PathBuf, JoinHandle<()>) {
+    let path = opts.socket.clone();
     let handle = std::thread::spawn(move || serve(opts).expect("daemon runs"));
     for _ in 0..500 {
         if path.exists() && UnixStream::connect(&path).is_ok() {
@@ -196,6 +224,9 @@ fn serve_refuses_to_steal_a_live_daemons_socket() {
         exec: ExecOptions::native(1),
         queue_depth: 2,
         cache_capacity: 2,
+        batch_window_ms: 0,
+        max_batch: 8,
+        executors: 1,
     })
     .unwrap_err();
     assert!(err.to_string().contains("live daemon"), "{err}");
@@ -246,5 +277,188 @@ fn protocol_level_errors_answer_without_killing_the_connection() {
         digest_of(&one_shot_reference(&job_line("fine", 5, ""), 2))
     );
 
+    shutdown_and_join(&path, handle);
+}
+
+#[test]
+fn oversized_request_line_answers_with_an_error() {
+    let (path, handle) = start_daemon("oversized", 1);
+    let mut stream = UnixStream::connect(&path).unwrap();
+    // one byte past the cap, never terminated by a newline: the daemon
+    // must answer with an error instead of buffering without bound
+    let chunk = vec![b'x'; 1 << 20];
+    let mut sent = 0u64;
+    let limit = meltframe::serve::daemon::MAX_REQUEST_BYTES + 1;
+    while sent < limit {
+        let n = (limit - sent).min(chunk.len() as u64) as usize;
+        stream.write_all(&chunk[..n]).unwrap();
+        sent += n as u64;
+    }
+    let mut response = String::new();
+    BufReader::new(stream.try_clone().unwrap())
+        .read_line(&mut response)
+        .unwrap();
+    assert!(response.contains("\"ok\": false"), "{response}");
+    assert!(response.contains("exceeds"), "{response}");
+    // the oversized sender's connection is dropped, but the daemon lives
+    let ping = submit(&path, "{\"op\": \"ping\"}");
+    assert!(ping.contains("pong"), "{ping}");
+    shutdown_and_join(&path, handle);
+}
+
+/// Tentpole equivalence: N concurrent cache-key-identical requests fold
+/// as ONE batch — one plan lookup, one fused fold — and every response
+/// is bit-for-bit identical to its own sequential one-shot run.
+#[test]
+fn batched_requests_match_one_shot_and_fold_once() {
+    // generous window so slow CI cannot split the batch: the collector
+    // stops as soon as max_batch is reached, so the window is not a
+    // latency floor here
+    let (path, handle) = start_batching_daemon("batch", 2, 10_000, 4, 1);
+    let lines: Vec<String> = (0..4).map(|i| job_line(&format!("b{i}"), 11 + i, "")).collect();
+    let expected: Vec<String> = lines
+        .iter()
+        .map(|l| digest_of(&one_shot_reference(l, 2)))
+        .collect();
+
+    let clients: Vec<_> = lines
+        .iter()
+        .map(|l| {
+            let (path, line) = (path.clone(), l.clone());
+            std::thread::spawn(move || submit(&path, &line))
+        })
+        .collect();
+    for (client, want) in clients.into_iter().zip(&expected) {
+        let response = client.join().unwrap();
+        assert_eq!(&digest_of(&response), want, "batched digest differs from one-shot");
+        // every member reports the shared batched run's metrics
+        assert_eq!(counter(&response, "batched_jobs"), 4.0, "{response}");
+        assert_eq!(counter(&response, "folds"), 1.0, "{response}");
+        assert_eq!(
+            counter(&response, "plan_cache_hits") + counter(&response, "plan_cache_misses"),
+            1.0,
+            "one plan lookup for the whole batch: {response}"
+        );
+    }
+
+    // the daemon's own counters agree: one batch of four, one cache miss
+    let stats = submit(&path, "{\"op\": \"stats\"}");
+    let v = JsonValue::parse(&stats).unwrap();
+    let batching = v.field("batching").unwrap();
+    assert_eq!(batching.field("batches").unwrap().as_usize().unwrap(), 1, "{stats}");
+    assert_eq!(batching.field("batched_jobs").unwrap().as_usize().unwrap(), 4, "{stats}");
+    let cache = v.field("cache").unwrap();
+    assert_eq!(cache.field("misses").unwrap().as_usize().unwrap(), 1, "{stats}");
+    assert_eq!(cache.field("hits").unwrap().as_usize().unwrap(), 0, "{stats}");
+    shutdown_and_join(&path, handle);
+}
+
+#[test]
+fn mismatched_cache_keys_never_co_batch() {
+    // short window: each of the two keys has no mate, so every pop
+    // lingers one window then runs alone
+    let (path, handle) = start_batching_daemon("nomix", 2, 50, 4, 1);
+    let sharp = job_line("sharp", 9, "");
+    // same shape and op-chain but a different gaussian sigma: the plan
+    // cache would happily share a plan (it keys on kernel names), but
+    // co-batching would run both through ONE kernel instance — the batch
+    // key must keep them apart
+    let soft = sharp.replace("\"sigma\": 1.0", "\"sigma\": 2.0");
+    let clients: Vec<_> = [sharp.clone(), soft.clone()]
+        .into_iter()
+        .map(|line| {
+            let path = path.clone();
+            std::thread::spawn(move || submit(&path, &line))
+        })
+        .collect();
+    let responses: Vec<String> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+    for (response, line) in responses.iter().zip([&sharp, &soft]) {
+        assert_eq!(digest_of(response), digest_of(&one_shot_reference(line, 2)));
+        assert_eq!(counter(response, "batched_jobs"), 0.0, "must not co-batch: {response}");
+    }
+    assert_ne!(digest_of(&responses[0]), digest_of(&responses[1]), "sigmas differ");
+    let stats = submit(&path, "{\"op\": \"stats\"}");
+    let batches = JsonValue::parse(&stats)
+        .unwrap()
+        .field("batching")
+        .unwrap()
+        .field("batches")
+        .unwrap()
+        .as_usize()
+        .unwrap();
+    assert_eq!(batches, 0, "{stats}");
+    shutdown_and_join(&path, handle);
+}
+
+#[test]
+fn faulting_job_fails_alone_while_batchmates_answer() {
+    let (path, handle) = start_batching_daemon("batchfault", 2, 300, 4, 1);
+    let good: Vec<String> = (0..2).map(|i| job_line(&format!("g{i}"), 21 + i, "")).collect();
+    let references: Vec<String> = good
+        .iter()
+        .map(|l| digest_of(&one_shot_reference(l, 2)))
+        .collect();
+    // a faulted request carries no batch key and always runs alone
+    let boom = job_line("boom", 21, "\"fault\": {\"mode\": \"panic\", \"after\": 0}, ");
+
+    let mut clients: Vec<_> = good
+        .iter()
+        .map(|l| {
+            let (path, line) = (path.clone(), l.clone());
+            std::thread::spawn(move || submit(&path, &line))
+        })
+        .collect();
+    clients.push({
+        let (path, line) = (path.clone(), boom.clone());
+        std::thread::spawn(move || submit(&path, &line))
+    });
+    let responses: Vec<String> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+    for (response, want) in responses[..2].iter().zip(&references) {
+        assert_eq!(&digest_of(response), want, "good job corrupted by faulty neighbour");
+    }
+    let v = JsonValue::parse(&responses[2]).unwrap();
+    assert_eq!(v.field("ok").unwrap(), &JsonValue::Bool(false), "{}", responses[2]);
+    // and the pool is still healthy afterwards
+    let healthy = submit(&path, &good[0]);
+    assert_eq!(digest_of(&healthy), references[0]);
+    shutdown_and_join(&path, handle);
+}
+
+#[test]
+fn sharded_executors_serve_concurrent_clients_correctly() {
+    // 2 executors × 2 workers, batching on, mixed client tags saturating
+    // the queue: every response must still be bit-for-bit right
+    let (path, handle) = start_batching_daemon("shards", 4, 20, 2, 2);
+    let lines: Vec<String> = (0..6)
+        .map(|i| {
+            let tag = if i % 2 == 0 { "hog" } else { "mouse" };
+            job_line(&format!("s{i}"), 31 + i, &format!("\"client\": \"{tag}\", "))
+        })
+        .collect();
+    let expected: Vec<String> = lines
+        .iter()
+        .map(|l| digest_of(&one_shot_reference(l, 2)))
+        .collect();
+    let clients: Vec<_> = lines
+        .iter()
+        .map(|l| {
+            let (path, line) = (path.clone(), l.clone());
+            std::thread::spawn(move || submit(&path, &line))
+        })
+        .collect();
+    for (client, want) in clients.into_iter().zip(&expected) {
+        assert_eq!(&digest_of(&client.join().unwrap()), want);
+    }
+    // stats reports one entry per executor shard, worker budget split
+    let stats = submit(&path, "{\"op\": \"stats\"}");
+    let v = JsonValue::parse(&stats).unwrap();
+    let shards = v.field("executors").unwrap().as_array().unwrap();
+    assert_eq!(shards.len(), 2, "{stats}");
+    let mut jobs = 0;
+    for s in shards {
+        assert_eq!(s.field("workers").unwrap().as_usize().unwrap(), 2, "{stats}");
+        jobs += s.field("jobs").unwrap().as_usize().unwrap();
+    }
+    assert_eq!(jobs, 6, "every job accounted to a shard: {stats}");
     shutdown_and_join(&path, handle);
 }

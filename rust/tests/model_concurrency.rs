@@ -284,6 +284,109 @@ fn model_jobqueue_close_while_push_accounts_every_job() {
     assert_coverage(&report);
 }
 
+#[test]
+fn model_lanes_no_loss_no_dup_across_clients() {
+    let report = explore(Config::random(800, 0xfa13_1a4e), || {
+        let q = Arc::new(JobQueue::new(8));
+        let producers: Vec<_> = (0..3usize)
+            .map(|c| {
+                let q = Arc::clone(&q);
+                thread::spawn(move || {
+                    for j in 0..2 {
+                        q.push_from(c as u64, c * 10 + j).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut got = Vec::new();
+        while let Some(j) = q.pop() {
+            got.push(j);
+        }
+        // round-robin reorders across lanes but must lose and duplicate
+        // nothing, however the three clients' pushes interleave
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 10, 11, 20, 21]);
+    });
+    report.assert_ok();
+    assert_coverage(&report);
+}
+
+// ---------------------------------------------------------------------------
+// Batch collector: pop_matching hand-offs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn model_collector_fills_cap_from_live_pushes() {
+    let report = explore(Config::random(800, 0xba7c_4e11), || {
+        let q = Arc::new(JobQueue::new(8));
+        // one stray non-matching job proves the sweep is selective
+        q.push_from(9, 100).unwrap();
+        let producers: Vec<_> = (0..2usize)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                thread::spawn(move || q.push_from(p as u64, p + 1).unwrap())
+            })
+            .collect();
+        // the daemon's batch collector: both mates arrive on every
+        // schedule, so the cap is reached and the (far-off) window is
+        // never needed — pushes must NOTIFY the predicate waiter
+        let mut got = q.pop_matching(|&j| j < 100, 2, Duration::from_secs(3600));
+        for p in producers {
+            p.join().unwrap();
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2]);
+        assert_eq!(q.pop(), Some(100), "stray job left for the dispatcher");
+    });
+    report.assert_ok();
+    assert_coverage(&report);
+    assert_eq!(
+        report.timeout_wakeups, 0,
+        "collector must be notify-driven when its mates arrive"
+    );
+}
+
+#[test]
+fn model_collector_close_unblocks_without_timeout() {
+    let report = explore(Config::random(800, 0xc011_c105), || {
+        let q: Arc<JobQueue<usize>> = Arc::new(JobQueue::new(4));
+        let qc = Arc::clone(&q);
+        let closer = thread::spawn(move || qc.close());
+        // no mate ever arrives; close must wake the collector on every
+        // schedule (a lingering collector would strand daemon shutdown)
+        let got = q.pop_matching(|_| true, 3, Duration::from_secs(3600));
+        assert!(got.is_empty(), "nothing was ever queued: {got:?}");
+        closer.join().unwrap();
+    });
+    report.assert_ok();
+    assert_coverage(&report);
+    assert_eq!(report.timeout_wakeups, 0, "close must notify, not lean on the window");
+}
+
+#[test]
+fn model_collector_window_expiry_is_final() {
+    // Here the timeout IS the protocol: nothing ever matches, so the only
+    // progress is delivering the window expiry — allowed explicitly, and
+    // ONE delivery per run must suffice (the post-timeout sweep is final;
+    // re-arming the wait would spin the watchdog forever).
+    let report = explore(Config::random(200, 0x71e0_0f1e).allow_timeout_wakeups(2), || {
+        let q: Arc<JobQueue<usize>> = Arc::new(JobQueue::new(4));
+        q.push_from(1, 7).unwrap(); // different key: never matches
+        let got = q.pop_matching(|&j| j == 99, 1, Duration::from_millis(5));
+        assert!(got.is_empty(), "{got:?}");
+        assert_eq!(q.pop(), Some(7), "non-matching job left for the dispatcher");
+    });
+    report.assert_ok();
+    assert!(
+        report.timeout_wakeups >= 1,
+        "the expiry path must actually exercise the timeout"
+    );
+}
+
 // ---------------------------------------------------------------------------
 // Daemon lifecycle: dispatcher ⇄ connection hand-off under shutdown
 // ---------------------------------------------------------------------------

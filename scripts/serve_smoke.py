@@ -4,11 +4,19 @@
 Usage:
     serve_smoke.py path/to/meltframe
 
-Starts a daemon on a temp socket, fires three concurrent socket jobs
-(one with an injected fault), checks the healthy digests against
-`submit --oneshot` references (bit-for-bit), verifies the faulted job
-failed alone, then shuts the daemon down cleanly.  Exits non-zero on any
-mismatch — this is a hard gate, unlike the bench trend warning.
+Phase 1 (batching off): starts a daemon on a temp socket, fires three
+concurrent socket jobs (one with an injected fault), checks the healthy
+digests against `submit --oneshot` references (bit-for-bit), verifies
+the faulted job failed alone, then shuts the daemon down cleanly.
+
+Phase 2 (batching on): starts a second daemon with a batch collector and
+two executor shards, fires four cache-key-identical concurrent jobs,
+checks every digest against its own one-shot reference, and asserts the
+daemon's stats counters prove at least one cross-request batch actually
+folded.
+
+Exits non-zero on any mismatch — this is a hard gate, unlike the bench
+trend warning.
 """
 
 import json
@@ -44,109 +52,197 @@ def submit(binary, args):
     return json.loads(proc.stdout.strip())
 
 
-def main():
-    if len(sys.argv) != 2:
-        print("usage: serve_smoke.py path/to/meltframe")
-        return 2
-    binary = os.path.abspath(sys.argv[1])
-    socket = os.path.join(tempfile.mkdtemp(prefix="meltframe-smoke-"), "serve.sock")
-
+def start_daemon(binary, socket, extra_args):
     daemon = subprocess.Popen(
-        [binary, "serve", "--socket", socket, "--workers", "2", "--queue-depth", "8"],
+        [binary, "serve", "--socket", socket, *extra_args],
         stdout=subprocess.PIPE,
         stderr=subprocess.STDOUT,
         text=True,
     )
-    try:
-        for _ in range(200):
-            if os.path.exists(socket):
-                break
-            if daemon.poll() is not None:
-                print(f"FAIL: daemon exited early:\n{daemon.stdout.read()}")
-                return 1
-            time.sleep(0.05)
-        else:
-            print("FAIL: daemon socket never appeared")
-            return 1
+    for _ in range(200):
+        if os.path.exists(socket):
+            return daemon, None
+        if daemon.poll() is not None:
+            return daemon, f"daemon exited early:\n{daemon.stdout.read()}"
+        time.sleep(0.05)
+    return daemon, "daemon socket never appeared"
 
+
+def run_clients(binary, socket, jobs):
+    """Submit every job concurrently; returns (responses, errors)."""
+    responses, errors = {}, []
+
+    def client(job_id):
+        try:
+            responses[job_id] = submit(
+                binary, ["--socket", socket, "--json", jobs[job_id]]
+            )
+        except Exception as e:  # noqa: BLE001 — smoke harness collects all failures
+            errors.append(f"{job_id}: {e}")
+
+    threads = [threading.Thread(target=client, args=(j,)) for j in jobs]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=180)
+    return responses, errors
+
+
+def shutdown_daemon(binary, socket, daemon):
+    """Shut the daemon down; returns a list of failure messages."""
+    failures = []
+    ack = submit(binary, ["--socket", socket, "--shutdown"])
+    if not ack.get("shutdown"):
+        failures.append(f"shutdown not acknowledged: {ack}")
+    daemon.wait(timeout=60)
+    if daemon.returncode != 0:
+        failures.append(f"daemon exited {daemon.returncode}")
+    if os.path.exists(socket):
+        failures.append("socket file not unlinked on shutdown")
+    return failures
+
+
+def check_digest(responses, references, job_id):
+    served, ref = responses[job_id], references[job_id]
+    if not served.get("ok"):
+        return f"healthy job '{job_id}' errored: {served}"
+    if served.get("digest") != ref.get("digest"):
+        return (
+            f"job '{job_id}' served digest {served.get('digest')} != "
+            f"one-shot {ref.get('digest')} (must be bit-for-bit)"
+        )
+    print(f"ok: job '{job_id}' digest {served['digest']} matches one-shot")
+    return None
+
+
+def phase_singletons(binary, tmpdir):
+    """Batching off: fault isolation + digest equivalence."""
+    socket = os.path.join(tmpdir, "serve.sock")
+    daemon, err = start_daemon(
+        binary,
+        socket,
+        ["--workers", "2", "--queue-depth", "8", "--batch-window-ms", "0"],
+    )
+    try:
+        if err:
+            return [err]
         jobs = {
             "a": job_request("a", 1),
             "b": job_request("b", 2),
             "boom": job_request("boom", 3, fault={"mode": "error", "after": 0}),
         }
-
         # oneshot references for the healthy jobs (fresh process each —
         # the bit-for-bit baseline the served digests must reproduce)
         references = {
             job_id: submit(binary, ["--oneshot", "--workers", "2", "--json", jobs[job_id]])
             for job_id in ("a", "b")
         }
-
-        # three concurrent socket clients, one of them poisoned
-        responses, errors = {}, []
-
-        def client(job_id):
-            try:
-                responses[job_id] = submit(binary, ["--socket", socket, "--json", jobs[job_id]])
-            except Exception as e:  # noqa: BLE001 — smoke harness collects all failures
-                errors.append(f"{job_id}: {e}")
-
-        threads = [threading.Thread(target=client, args=(j,)) for j in jobs]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join(timeout=180)
+        responses, errors = run_clients(binary, socket, jobs)
         if errors:
-            print("FAIL: client errors: " + "; ".join(errors))
-            return 1
+            return ["client errors: " + "; ".join(errors)]
 
-        failures = 0
+        failures = []
         for job_id in ("a", "b"):
-            served, ref = responses[job_id], references[job_id]
-            if not served.get("ok"):
-                print(f"FAIL: healthy job '{job_id}' errored: {served}")
-                failures += 1
-            elif served.get("digest") != ref.get("digest"):
-                print(
-                    f"FAIL: job '{job_id}' served digest {served.get('digest')} != "
-                    f"one-shot {ref.get('digest')} (must be bit-for-bit)"
-                )
-                failures += 1
-            else:
-                print(f"ok: job '{job_id}' digest {served['digest']} matches one-shot")
+            msg = check_digest(responses, references, job_id)
+            if msg:
+                failures.append(msg)
         boom = responses["boom"]
         if boom.get("ok"):
-            print(f"FAIL: poisoned job unexpectedly succeeded: {boom}")
-            failures += 1
+            failures.append(f"poisoned job unexpectedly succeeded: {boom}")
         elif "injected" not in boom.get("error", ""):
-            print(f"FAIL: poisoned job failed for the wrong reason: {boom}")
-            failures += 1
+            failures.append(f"poisoned job failed for the wrong reason: {boom}")
         else:
             print(f"ok: poisoned job failed alone ({boom['error']})")
 
-        ack = submit(binary, ["--socket", socket, "--shutdown"])
-        if not ack.get("shutdown"):
-            print(f"FAIL: shutdown not acknowledged: {ack}")
-            failures += 1
-        daemon.wait(timeout=60)
-        if daemon.returncode != 0:
-            print(f"FAIL: daemon exited {daemon.returncode}")
-            failures += 1
-        else:
-            print("ok: daemon shut down cleanly")
-        if os.path.exists(socket):
-            print("FAIL: socket file not unlinked on shutdown")
-            failures += 1
-
-        if failures:
-            print(f"serve smoke: {failures} failure(s)")
-            return 1
-        print("serve smoke: all checks passed")
-        return 0
+        failures.extend(shutdown_daemon(binary, socket, daemon))
+        if not failures:
+            print("ok: singleton daemon shut down cleanly")
+        return failures
     finally:
         if daemon.poll() is None:
             daemon.kill()
             daemon.wait()
+
+
+def phase_batching(binary, tmpdir):
+    """Batching on: equivalence under co-batching + batch counters."""
+    socket = os.path.join(tmpdir, "batch.sock")
+    daemon, err = start_daemon(
+        binary,
+        socket,
+        [
+            "--workers", "4",
+            "--executors", "2",
+            "--batch-window-ms", "5000",
+            "--max-batch", "4",
+        ],
+    )
+    try:
+        if err:
+            return [err]
+        # four cache-key-identical jobs (seeds differ — data never keys)
+        jobs = {f"b{i}": job_request(f"b{i}", 10 + i) for i in range(4)}
+        references = {
+            job_id: submit(binary, ["--oneshot", "--workers", "2", "--json", line])
+            for job_id, line in jobs.items()
+        }
+        responses, errors = run_clients(binary, socket, jobs)
+        if errors:
+            return ["client errors: " + "; ".join(errors)]
+
+        failures = []
+        for job_id in jobs:
+            msg = check_digest(responses, references, job_id)
+            if msg:
+                failures.append(msg)
+
+        stats = submit(binary, ["--socket", socket, "--json", '{"op": "stats"}'])
+        batching = stats.get("batching", {})
+        batches = batching.get("batches", 0)
+        batched_jobs = batching.get("batched_jobs", 0)
+        if batches < 1 or batched_jobs < 2:
+            failures.append(
+                f"no cross-request batch folded (batches={batches}, "
+                f"batched_jobs={batched_jobs}): {stats}"
+            )
+        else:
+            print(
+                f"ok: daemon folded {batched_jobs} jobs into {batches} batch(es)"
+            )
+        shards = stats.get("executors", [])
+        if len(shards) != 2:
+            failures.append(f"expected 2 executor shards in stats: {stats}")
+        elif sum(s.get("jobs", 0) for s in shards) != 4:
+            failures.append(f"shard job counts do not sum to 4: {stats}")
+        else:
+            print("ok: stats report both executor shards, all jobs accounted")
+
+        failures.extend(shutdown_daemon(binary, socket, daemon))
+        if not failures:
+            print("ok: batching daemon shut down cleanly")
+        return failures
+    finally:
+        if daemon.poll() is None:
+            daemon.kill()
+            daemon.wait()
+
+
+def main():
+    if len(sys.argv) != 2:
+        print("usage: serve_smoke.py path/to/meltframe")
+        return 2
+    binary = os.path.abspath(sys.argv[1])
+    tmpdir = tempfile.mkdtemp(prefix="meltframe-smoke-")
+
+    failures = phase_singletons(binary, tmpdir)
+    failures += phase_batching(binary, tmpdir)
+    for msg in failures:
+        print(f"FAIL: {msg}")
+    if failures:
+        print(f"serve smoke: {len(failures)} failure(s)")
+        return 1
+    print("serve smoke: all checks passed")
+    return 0
 
 
 if __name__ == "__main__":
