@@ -41,6 +41,7 @@ use meltframe::melt::fold::fold;
 use meltframe::melt::grid::GridMode;
 use meltframe::melt::melt::{melt, BoundaryMode};
 use meltframe::melt::operator::Operator;
+use meltframe::simd::SimdMode;
 use meltframe::tensor::dense::Tensor;
 
 fn jobs() -> Vec<Job> {
@@ -351,6 +352,81 @@ fn main() {
     report.push(dense);
     report.push(sep);
     report.print(Some("dense gaussian 5^3"));
+    println!();
+
+    // ---- scalar vs lane-parallel row kernels ------------------------------
+    // the same dense gaussian with the SIMD row kernels pinned off vs pinned
+    // on: each lane computes one output element in the exact scalar
+    // operation order, so the outputs are bit-for-bit identical and the
+    // whole delta is per-core arithmetic throughput
+    let scalar_opts = ExecOptions::native(max_workers).with_simd(SimdMode::ForceScalar);
+    let simd_opts = ExecOptions::native(max_workers).with_simd(SimdMode::ForceSimd);
+    let (scalar_out, spm) = Plan::over(&vol)
+        .gaussian(&[5, 5, 5], 1.2)
+        .run(&scalar_opts)
+        .unwrap();
+    let (simd_out, vpm) = Plan::over(&vol)
+        .gaussian(&[5, 5, 5], 1.2)
+        .run(&simd_opts)
+        .unwrap();
+    assert_eq!(
+        simd_out.data(),
+        scalar_out.data(),
+        "lane-parallel kernels must match scalar bit-for-bit"
+    );
+    assert_eq!(spm.simd_rows(), 0, "pinned-scalar run must count zero lane rows");
+    assert!(vpm.simd_rows() > 0, "pinned-simd run must route rows through lanes");
+    assert_eq!(
+        vpm.simd_rows() + vpm.scalar_rows(),
+        vpm.gather_rows(),
+        "lane + remainder rows must partition the gathered rows"
+    );
+    let mut report = Report::new(format!(
+        "Row kernels — dense gaussian 5^3 on {dim}^3, {max_workers} worker(s): \
+         scalar vs lane-parallel (bit-for-bit identical)"
+    ));
+    let scl = Measurement::run("gaussian 5^3 scalar rows", 1, reps, || {
+        black_box(
+            Plan::over(&vol)
+                .gaussian(&[5, 5, 5], 1.2)
+                .run(&scalar_opts)
+                .unwrap(),
+        )
+    });
+    let lan = Measurement::run("gaussian 5^3 simd rows", 1, reps, || {
+        black_box(
+            Plan::over(&vol)
+                .gaussian(&[5, 5, 5], 1.2)
+                .run(&simd_opts)
+                .unwrap(),
+        )
+    });
+    json.series("gaussian 5^3 scalar rows", &scl);
+    json.series("gaussian 5^3 simd rows", &lan);
+    report.push(scl.clone());
+    report.push(lan.clone());
+    report.print(Some("gaussian 5^3 scalar rows"));
+    let ratio = scl.median().as_secs_f64() / lan.median().as_secs_f64();
+    println!(
+        "simd rows {} / scalar remainder {} (lanes {}); scalar median {:.2} ms vs \
+         simd median {:.2} ms — {ratio:.2}x",
+        vpm.simd_rows(),
+        vpm.scalar_rows(),
+        vpm.simd_lanes(),
+        scl.median().as_secs_f64() * 1e3,
+        lan.median().as_secs_f64() * 1e3,
+    );
+    json.metric("simd_speedup_gaussian", ratio);
+    json.metric("simd_rows_gaussian", vpm.simd_rows() as f64);
+    json.metric("simd_scalar_remainder_rows_gaussian", vpm.scalar_rows() as f64);
+    // fail-soft: a shared CI runner can flatten the gap, so flag loudly
+    // instead of failing the whole bench binary
+    if ratio < 1.5 {
+        eprintln!(
+            "WARNING: simd speedup {ratio:.2}x below the 1.5x target — \
+             lane kernels may have regressed (or the runner is throttled)"
+        );
+    }
     println!();
 
     if let Some((rec, exg)) = last {

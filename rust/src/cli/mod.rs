@@ -32,6 +32,9 @@ pub enum Command {
         /// Override the config's native gather→kernel tile height
         /// (`--tile-rows N`).
         tile_rows: Option<usize>,
+        /// Pin the lane-parallel row kernels off (`--no-simd`) — results
+        /// are bit-for-bit identical either way; this is a perf/debug knob.
+        no_simd: bool,
     },
     Inspect {
         artifacts: PathBuf,
@@ -59,6 +62,9 @@ pub enum Command {
         /// Executor shards splitting the worker budget
         /// (`--executors N`, default 1).
         executors: usize,
+        /// Pin the lane-parallel row kernels off for every served job
+        /// (`--no-simd`).
+        no_simd: bool,
     },
     /// Submit one protocol line to a daemon (or run it in-process).
     Submit {
@@ -93,13 +99,13 @@ meltframe — melt-matrix array programming with parallel acceleration
 USAGE:
     meltframe run <config.toml> [--out <file.npy>] [--legacy]
                   [--halo-mode recompute|exchange] [--halo-wait-secs <n>]
-                  [--tile-rows <n>]
+                  [--tile-rows <n>] [--no-simd]
     meltframe inspect [--artifacts <dir>]
     meltframe demo [--workers <n>] [--backend native|pjrt] [--artifacts <dir>]
                    [--dims <d,h,w>|<h,w>]
     meltframe serve --socket <path> [--workers <n>] [--queue-depth <n>]
                     [--cache-capacity <n>] [--halo-mode recompute|exchange]
-                    [--halo-wait-secs <n>] [--tile-rows <n>]
+                    [--halo-wait-secs <n>] [--tile-rows <n>] [--no-simd]
                     [--batch-window-ms <n>] [--max-batch <n>] [--executors <n>]
     meltframe submit (--socket <path> | --oneshot [--workers <n>])
                      (--json <line> | --request-file <path> | --shutdown)
@@ -113,6 +119,9 @@ neighbouring chunks through the halo board, scheduled dependency-aware).
 `--halo-wait-secs` overrides the exchange watchdog deadline (default 600).
 `--tile-rows` overrides the native gather→kernel tile height (default 256;
 purely a cache-footprint knob — results are bit-for-bit identical).
+`--no-simd` pins the lane-parallel row kernels off (equivalent to
+`simd = \"scalar\"` in the config or MELTFRAME_SIMD=scalar); outputs are
+bit-for-bit identical with it on or off.
 `demo --dims` picks the synthetic workload shape: three comma-separated
 extents run the (D, H, W) volume pipeline, two run the (H, W) image one
 (default 48,48,48).
@@ -147,6 +156,7 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
             let mut halo_mode = None;
             let mut halo_wait_secs = None;
             let mut tile_rows = None;
+            let mut no_simd = false;
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--out" => {
@@ -176,6 +186,7 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                         }
                         tile_rows = Some(n);
                     }
+                    "--no-simd" => no_simd = true,
                     flag if flag.starts_with("--") => {
                         return Err(Error::Config(format!("unknown flag '{flag}' for run")))
                     }
@@ -193,6 +204,7 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                 halo_mode,
                 halo_wait_secs,
                 tile_rows,
+                no_simd,
             })
         }
         "inspect" => {
@@ -265,6 +277,7 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
             let mut batch_window_ms = 2u64;
             let mut max_batch = 8usize;
             let mut executors = 1usize;
+            let mut no_simd = false;
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--socket" => {
@@ -300,6 +313,7 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                         halo_wait_secs = Some(secs);
                     }
                     "--tile-rows" => tile_rows = Some(positive_usize(&mut it, "--tile-rows")?),
+                    "--no-simd" => no_simd = true,
                     other => {
                         return Err(Error::Config(format!("unknown argument '{other}' for serve")))
                     }
@@ -317,6 +331,7 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                 batch_window_ms,
                 max_batch,
                 executors,
+                no_simd,
             })
         }
         "submit" => {
@@ -418,6 +433,7 @@ mod tests {
                 halo_mode: None,
                 halo_wait_secs: None,
                 tile_rows: None,
+                no_simd: false,
             }
         );
         let c = parse_args(&argv("run pipeline.toml --legacy")).unwrap();
@@ -430,12 +446,13 @@ mod tests {
                 halo_mode: None,
                 halo_wait_secs: None,
                 tile_rows: None,
+                no_simd: false,
             }
         );
-        // mixed-case mode spellings normalize, and the watchdog and tile
-        // overrides parse alongside
+        // mixed-case mode spellings normalize, and the watchdog, tile, and
+        // simd overrides parse alongside
         let c = parse_args(&argv(
-            "run pipeline.toml --halo-mode Exchange --halo-wait-secs 45 --tile-rows 128",
+            "run pipeline.toml --halo-mode Exchange --halo-wait-secs 45 --tile-rows 128 --no-simd",
         ))
         .unwrap();
         assert_eq!(
@@ -447,6 +464,7 @@ mod tests {
                 halo_mode: Some(HaloMode::Exchange),
                 halo_wait_secs: Some(45),
                 tile_rows: Some(128),
+                no_simd: true,
             }
         );
     }
@@ -524,13 +542,14 @@ mod tests {
                 batch_window_ms: 2,
                 max_batch: 8,
                 executors: 1,
+                no_simd: false,
             }
         );
         assert_eq!(
             parse_args(&argv(
                 "serve --socket mf.sock --workers 3 --queue-depth 8 --cache-capacity 5 \
                  --halo-mode exchange --halo-wait-secs 30 --tile-rows 64 \
-                 --batch-window-ms 0 --max-batch 4 --executors 2"
+                 --batch-window-ms 0 --max-batch 4 --executors 2 --no-simd"
             ))
             .unwrap(),
             Command::Serve {
@@ -544,6 +563,7 @@ mod tests {
                 batch_window_ms: 0,
                 max_batch: 4,
                 executors: 2,
+                no_simd: true,
             }
         );
         // 0 is "batching off" for the window, but nonsense for the others

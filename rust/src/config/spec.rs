@@ -8,6 +8,7 @@
 //! halo_mode = "recompute"     # or "exchange" (fused halo strategy)
 //! halo_wait_secs = 600        # exchange-wait watchdog deadline
 //! tile_rows = 256             # native gather→kernel tile height
+//! simd = "auto"               # auto | scalar | simd (results identical)
 //!
 //! [input]
 //! kind = "volume"             # volume | image | mask | npy
@@ -127,6 +128,14 @@ impl RunConfig {
             }
             Some(n) => n,
         };
+        // simd = "auto" (default) | "scalar" | "simd": SIMD lane policy of
+        // the native kernels (results bit-for-bit invariant under all
+        // three). When the key is absent the MELTFRAME_SIMD env var, if
+        // set, supplies the process default.
+        let simd = match doc.get("", "simd").map(|v| v.as_str()).transpose()? {
+            None => crate::simd::SimdMode::env_default(),
+            Some(s) => crate::simd::SimdMode::parse(s)?,
+        };
 
         let input = Self::parse_input(&doc)?;
         let jobs = Self::parse_jobs(&doc)?;
@@ -139,6 +148,7 @@ impl RunConfig {
                 halo_mode,
                 halo_wait,
                 tile_rows,
+                simd,
             },
             input,
             jobs,
@@ -298,6 +308,7 @@ mod tests {
             halo_mode = "Exchange"
             halo_wait_secs = 30
             tile_rows = 128
+            simd = "scalar"
             [input]
             kind = "image"
             dims = [16, 16]
@@ -316,6 +327,7 @@ mod tests {
         assert_eq!(cfg.options.halo_mode, HaloMode::Exchange);
         assert_eq!(cfg.options.halo_wait, std::time::Duration::from_secs(30));
         assert_eq!(cfg.options.tile_rows, 128);
+        assert_eq!(cfg.options.simd, crate::simd::SimdMode::ForceScalar);
         assert!(matches!(cfg.jobs[0].kind, FilterKind::Rank(_)));
         assert!(matches!(cfg.jobs[1].kind, FilterKind::LocalMoment(_)));
         // the plan lowering records both stages lazily
@@ -406,6 +418,11 @@ mod tests {
         // zero tile height would spin the tile loop
         assert!(RunConfig::parse(
             "tile_rows = 0\n[input]\nkind = \"mask\"\ndims = [8, 8]\n[job]\nkind = \"median\"\nwindow = [3, 3]"
+        )
+        .is_err());
+        // unknown simd policy rejected at parse time
+        assert!(RunConfig::parse(
+            "simd = \"warp\"\n[input]\nkind = \"mask\"\ndims = [8, 8]\n[job]\nkind = \"median\"\nwindow = [3, 3]"
         )
         .is_err());
         // even window caught at parse time

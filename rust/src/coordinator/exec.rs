@@ -240,6 +240,12 @@ fn run_tiled(
         stats.gather_time += t_gather.elapsed();
         stats.gather_rows += n;
         kernel.execute(&band[..], n, cols, &mut out[t - out_start..te - out_start])?;
+        let (lane, scalar) = crate::simd::take_counters();
+        stats.simd_rows += lane;
+        stats.scalar_rows += scalar;
+        if lane > 0 {
+            stats.simd_lanes = stats.simd_lanes.max(crate::simd::LANES);
+        }
         t = te;
     }
     stats.peak_band_bytes = stats
@@ -502,6 +508,9 @@ pub(crate) fn run_single_stage_with(
         // engine build + artifact compile = setup, not compute
         let ctx = WorkerContext::build(&res, backend);
         barrier.wait();
+        // pin the job's SIMD mode on this (possibly pooled, reused) thread
+        // and clear any counter residue from a previous job
+        crate::simd::enter_job(opts.simd);
         let ctx = ctx?;
         // workers self-report their compute window: the leader may
         // be descheduled at barrier release, so leader-side clocks
@@ -591,6 +600,9 @@ pub(crate) fn run_single_stage_with(
             peak_band_bytes: worker_stats.peak_band_bytes,
             melt_matrix_bytes: m.as_ref().map_or(0, |m| m.data().len() * 4),
             gather: gather_time,
+            simd_rows: worker_stats.simd_rows,
+            scalar_rows: worker_stats.scalar_rows,
+            simd_lanes: worker_stats.simd_lanes,
             plan_cache_hits: delta.hits,
             plan_cache_misses: delta.misses,
             plan_cache_evictions: delta.evictions,
@@ -701,6 +713,9 @@ pub(crate) fn run_fused_group_with(
 
     let work = |_w: usize| -> Result<(usize, Instant, Instant, HaloStats)> {
         barrier.wait();
+        // pin the job's SIMD mode on this (possibly pooled, reused) thread
+        // and clear any counter residue from a previous job
+        crate::simd::enter_job(opts.simd);
         let t0 = Instant::now();
         // a failing worker — Err *or* panic — poisons the exchange
         // board AND the stage scheduler so blocked neighbours error
@@ -774,6 +789,9 @@ pub(crate) fn run_fused_group_with(
             peak_band_bytes: halo_stats.peak_band_bytes,
             melt_matrix_bytes: 0,
             gather: halo_stats.gather_time,
+            simd_rows: halo_stats.simd_rows,
+            scalar_rows: halo_stats.scalar_rows,
+            simd_lanes: halo_stats.simd_lanes,
             plan_cache_hits: delta.hits,
             plan_cache_misses: delta.misses,
             plan_cache_evictions: delta.evictions,

@@ -103,6 +103,13 @@ pub(crate) struct HaloStats {
     pub peak_band_bytes: usize,
     /// Time this worker spent inside tile gathers (the parallelized melt).
     pub gather_time: Duration,
+    /// Kernel rows computed on the lane-parallel SIMD path.
+    pub simd_rows: usize,
+    /// Kernel rows computed on the scalar path (remainders, pinned-scalar
+    /// runs, and kernels with no lane form).
+    pub scalar_rows: usize,
+    /// Lane width of the SIMD path when any lane rows ran (else 0).
+    pub simd_lanes: usize,
 }
 
 impl HaloStats {
@@ -116,6 +123,11 @@ impl HaloStats {
         // so the merged figure keeps the max, not the sum
         self.peak_band_bytes = self.peak_band_bytes.max(other.peak_band_bytes);
         self.gather_time += other.gather_time;
+        self.simd_rows += other.simd_rows;
+        self.scalar_rows += other.scalar_rows;
+        // one lane width per build; merged as max so a scalar-only worker
+        // never erases the width reported by a vectorized one
+        self.simd_lanes = self.simd_lanes.max(other.simd_lanes);
     }
 }
 

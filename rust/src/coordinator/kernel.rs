@@ -30,7 +30,7 @@ use crate::kernels::paradigm::apply_kernel_broadcast_into;
 use crate::kernels::rankfilter::{rank_filter_into, RankKind};
 use crate::melt::operator::Operator;
 use crate::runtime::executor::ExtraInputs;
-use crate::stats::descriptive::moments;
+use crate::simd::LANES;
 
 /// One row-wise computation over a melt block. Object-safe: plans hold
 /// `Arc<dyn RowKernel>`, so the kernel set is open — implement this trait
@@ -290,15 +290,104 @@ impl RowKernel for LocalMomentKernel {
 
     fn execute(&self, block: &[f32], rows: usize, cols: usize, out: &mut [f32]) -> Result<()> {
         check_block(block, rows, cols, out)?;
-        for (row, o) in block.chunks_exact(cols).zip(out.iter_mut()) {
-            let m = moments(row);
-            *o = match self.stat {
-                MomentStat::Mean => m.mean as f32,
-                MomentStat::Std => m.std() as f32,
-                MomentStat::Variance => m.variance() as f32,
-            };
+        // Runs only the Welford recurrences the requested statistic needs
+        // (Mean: just the mean update; Std/Var: mean + m2, no min/max
+        // bookkeeping). The mean/m2 recurrences never read min/max, so the
+        // trimmed passes are bit-identical to the full
+        // `stats::descriptive::moments` accumulator — pinned by a test.
+        // LANES rows at a time take the lane path, each lane running the
+        // same f64 recurrence in the same element order.
+        let lane_rows = if crate::simd::lanes_enabled() {
+            (rows / LANES) * LANES
+        } else {
+            0
+        };
+        for g in 0..lane_rows / LANES {
+            let base = g * LANES;
+            moment_rows_lane(
+                &block[base * cols..(base + LANES) * cols],
+                cols,
+                self.stat,
+                &mut out[base..base + LANES],
+            );
         }
+        for r in lane_rows..rows {
+            let row = &block[r * cols..(r + 1) * cols];
+            out[r] = moment_row(row, self.stat);
+        }
+        crate::simd::note_lane_rows(lane_rows);
+        crate::simd::note_scalar_rows(rows - lane_rows);
         Ok(())
+    }
+}
+
+/// One row's moment via the trimmed Welford pass: the scalar reference
+/// order every lane in [`moment_rows_lane`] replicates exactly.
+#[inline(always)]
+fn moment_row(row: &[f32], stat: MomentStat) -> f32 {
+    let mut mean = 0.0f64;
+    if stat == MomentStat::Mean {
+        for (j, &x) in row.iter().enumerate() {
+            let x = x as f64;
+            let d = x - mean;
+            mean += d / (j + 1) as f64;
+        }
+        return mean as f32;
+    }
+    let mut m2 = 0.0f64;
+    for (j, &x) in row.iter().enumerate() {
+        let x = x as f64;
+        let d = x - mean;
+        mean += d / (j + 1) as f64;
+        m2 += d * (x - mean);
+    }
+    if row.is_empty() {
+        return f32::NAN;
+    }
+    let var = m2 / row.len() as f64;
+    match stat {
+        MomentStat::Variance => var as f32,
+        _ => var.sqrt() as f32,
+    }
+}
+
+/// Trimmed Welford over exactly `LANES` rows: lane `l` runs the scalar
+/// recurrence of [`moment_row`] on row `l`, element order preserved.
+#[inline(always)]
+fn moment_rows_lane(block: &[f32], cols: usize, stat: MomentStat, out: &mut [f32]) {
+    let mut mean = [0.0f64; LANES];
+    let mut m2 = [0.0f64; LANES];
+    if stat == MomentStat::Mean {
+        for j in 0..cols {
+            for l in 0..LANES {
+                let x = block[l * cols + j] as f64;
+                let d = x - mean[l];
+                mean[l] += d / (j + 1) as f64;
+            }
+        }
+        for l in 0..LANES {
+            out[l] = mean[l] as f32;
+        }
+        return;
+    }
+    for j in 0..cols {
+        for l in 0..LANES {
+            let x = block[l * cols + j] as f64;
+            let d = x - mean[l];
+            mean[l] += d / (j + 1) as f64;
+            m2[l] += d * (x - mean[l]);
+        }
+    }
+    for l in 0..LANES {
+        if cols == 0 {
+            out[l] = f32::NAN;
+            continue;
+        }
+        let var = m2[l] / cols as f64;
+        out[l] = match stat {
+            MomentStat::Variance => var as f32,
+            _ => var.sqrt() as f32,
+        };
     }
 }
 
@@ -308,6 +397,7 @@ mod tests {
     use crate::kernels::rankfilter::rank_filter;
     use crate::melt::grid::GridMode;
     use crate::melt::melt::{melt, BoundaryMode};
+    use crate::stats::descriptive::moments;
     use crate::tensor::dense::Tensor;
     use crate::testing::assert_allclose;
 
@@ -360,6 +450,56 @@ mod tests {
             assert!((mean[r] - mm.mean as f32).abs() < 1e-4);
             assert!((std[r] - mm.std() as f32).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn trimmed_moment_passes_match_full_accumulator_bitwise() {
+        // the stat-specific single/dual-recurrence passes must reproduce
+        // the full Moments accumulator bit-for-bit — the trimming only
+        // removes state the surviving recurrences never read
+        use crate::testing::{check_property, SplitMix64};
+        check_property("trimmed vs full moments bits", 30, |rng: &mut SplitMix64| {
+            let cols = 1 + rng.below(40);
+            let row: Vec<f32> = (0..cols).map(|_| rng.normal() * 50.0).collect();
+            let m = moments(&row);
+            let pairs = [
+                (MomentStat::Mean, m.mean as f32),
+                (MomentStat::Std, m.std() as f32),
+                (MomentStat::Variance, m.variance() as f32),
+            ];
+            for (stat, want) in pairs {
+                let got = moment_row(&row, stat);
+                assert_eq!(got.to_bits(), want.to_bits(), "{stat:?} over {cols} cols");
+            }
+        });
+    }
+
+    #[test]
+    fn moment_lane_path_matches_scalar_bitwise() {
+        use crate::simd::{self, SimdMode};
+        use crate::testing::{check_property, SplitMix64};
+        check_property("moment lane vs scalar bits", 25, |rng: &mut SplitMix64| {
+            let rows = 1 + rng.below(20);
+            let cols = 1 + rng.below(15);
+            let block: Vec<f32> = (0..rows * cols).map(|_| rng.normal() * 12.0).collect();
+            for stat in [MomentStat::Mean, MomentStat::Std, MomentStat::Variance] {
+                let k = LocalMomentKernel::new(stat);
+                let mut scalar = vec![0.0f32; rows];
+                simd::enter_job(SimdMode::ForceScalar);
+                k.execute(&block, rows, cols, &mut scalar).unwrap();
+                let mut lanes = vec![0.0f32; rows];
+                simd::enter_job(SimdMode::ForceSimd);
+                k.execute(&block, rows, cols, &mut lanes).unwrap();
+                simd::enter_job(SimdMode::Auto);
+                for r in 0..rows {
+                    assert_eq!(
+                        lanes[r].to_bits(),
+                        scalar[r].to_bits(),
+                        "row {r} of {rows}x{cols} under {stat:?}"
+                    );
+                }
+            }
+        });
     }
 
     #[test]

@@ -86,6 +86,17 @@ pub struct RunMetrics {
     /// daemon's cross-request batching): N when N same-shape requests were
     /// stacked and folded together, 0 for an ordinary unbatched run.
     pub batched_jobs: usize,
+    /// Kernel rows computed on the lane-parallel SIMD path, summed over
+    /// workers. `simd_rows + scalar_rows == gather_rows` on native runs —
+    /// every gathered tile row is computed exactly once, on one of the two
+    /// paths (both bit-for-bit identical).
+    pub simd_rows: usize,
+    /// Kernel rows computed on the scalar path: lane-group remainders,
+    /// runs pinned scalar (`--no-simd` / `simd = "scalar"`), and kernels
+    /// with no lane form (median/quantile quickselect).
+    pub scalar_rows: usize,
+    /// Lane width of the SIMD path when any lane rows ran this run, else 0.
+    pub simd_lanes: usize,
 }
 
 impl RunMetrics {
@@ -169,6 +180,12 @@ impl RunMetrics {
         }
         if self.batched_jobs > 0 {
             s.push_str(&format!(" | batch of {} job(s)", self.batched_jobs));
+        }
+        if self.simd_rows + self.scalar_rows > 0 {
+            s.push_str(&format!(
+                " | simd {} rows / scalar {} rows (lanes {})",
+                self.simd_rows, self.scalar_rows, self.simd_lanes
+            ));
         }
         s
     }
@@ -280,6 +297,22 @@ impl PlanMetrics {
     /// unbatched plans.
     pub fn batched_jobs(&self) -> usize {
         self.groups.iter().map(|g| g.batched_jobs).max().unwrap_or(0)
+    }
+
+    /// Total kernel rows computed on the lane-parallel SIMD path.
+    pub fn simd_rows(&self) -> usize {
+        self.groups.iter().map(|g| g.simd_rows).sum()
+    }
+
+    /// Total kernel rows computed on the scalar path.
+    pub fn scalar_rows(&self) -> usize {
+        self.groups.iter().map(|g| g.scalar_rows).sum()
+    }
+
+    /// Lane width of the SIMD path across groups (max: a scalar-only
+    /// group never erases the width reported by a vectorized one).
+    pub fn simd_lanes(&self) -> usize {
+        self.groups.iter().map(|g| g.simd_lanes).max().unwrap_or(0)
     }
 
     /// One-line human summary.
@@ -443,6 +476,41 @@ mod tests {
             output_moments: Moments::new(),
         };
         assert_eq!(empty.batched_jobs(), 0);
+    }
+
+    #[test]
+    fn simd_counters_surface_in_summary_and_totals() {
+        // silent until a kernel row runs …
+        let m = RunMetrics::default();
+        assert!(!m.summary().contains("simd"));
+        // … then the lane/scalar split and the width are visible
+        let v = RunMetrics {
+            simd_rows: 96,
+            scalar_rows: 4,
+            simd_lanes: 8,
+            ..Default::default()
+        };
+        let s = v.summary();
+        assert!(s.contains("simd 96 rows / scalar 4 rows (lanes 8)"), "{s}");
+        // a pinned-scalar run still reports its rows (lanes 0)
+        let sc = RunMetrics {
+            scalar_rows: 50,
+            ..Default::default()
+        };
+        assert!(sc.summary().contains("simd 0 rows / scalar 50 rows (lanes 0)"));
+        // plan totals: rows sum, lane width is a max across groups
+        let pm = PlanMetrics {
+            groups: vec![v, sc],
+            output_moments: Moments::new(),
+        };
+        assert_eq!(pm.simd_rows(), 96);
+        assert_eq!(pm.scalar_rows(), 54);
+        assert_eq!(pm.simd_lanes(), 8);
+        let empty = PlanMetrics {
+            groups: vec![],
+            output_moments: Moments::new(),
+        };
+        assert_eq!(empty.simd_lanes(), 0);
     }
 
     #[test]

@@ -19,6 +19,7 @@ use crate::coordinator::job::{Backend, Job};
 use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::plan::ChunkPolicy;
 use crate::error::{Error, Result};
+use crate::simd::SimdMode;
 use crate::tensor::dense::Tensor;
 
 /// Execution options for a coordinator run.
@@ -53,6 +54,16 @@ pub struct ExecOptions {
     /// `tile_rows`, CLI `--tile-rows`). PJRT ignores it — fixed-shape
     /// artifacts consume whole materialized row blocks.
     pub tile_rows: usize,
+    /// SIMD lane policy for the native row kernels: `Auto` (runtime CPU
+    /// dispatch, the default), `ForceScalar` (pin every worker to the
+    /// scalar reference loops — config `simd = "scalar"`, CLI `--no-simd`)
+    /// or `ForceSimd` (portable lane path even without AVX2, used by the
+    /// parity tests and benches). Purely a performance knob: every lane
+    /// replays the scalar operation order, so results are bit-for-bit
+    /// identical under all three values. Defaults to the `MELTFRAME_SIMD`
+    /// environment variable when set (`auto` | `scalar` | `simd`), else
+    /// `Auto`.
+    pub simd: SimdMode,
 }
 
 /// Default gather→kernel tile height: a few hundred rows keeps the band
@@ -72,6 +83,7 @@ impl ExecOptions {
             halo_mode: HaloMode::Recompute,
             halo_wait: DEFAULT_WAIT_DEADLINE,
             tile_rows: DEFAULT_TILE_ROWS,
+            simd: SimdMode::env_default(),
         }
     }
 
@@ -85,7 +97,15 @@ impl ExecOptions {
             halo_mode: HaloMode::Recompute,
             halo_wait: DEFAULT_WAIT_DEADLINE,
             tile_rows: DEFAULT_TILE_ROWS,
+            simd: SimdMode::env_default(),
         }
+    }
+
+    /// Builder-style SIMD policy override. Purely a performance knob:
+    /// results are bit-for-bit identical under every mode.
+    pub fn with_simd(mut self, simd: SimdMode) -> Self {
+        self.simd = simd;
+        self
     }
 
     /// Builder-style override of the native gather→kernel tile height,
@@ -288,6 +308,7 @@ mod tests {
             halo_mode: HaloMode::Recompute,
             halo_wait: DEFAULT_WAIT_DEADLINE,
             tile_rows: DEFAULT_TILE_ROWS,
+            simd: SimdMode::Auto,
         };
         assert!(run_job(&x, &Job::gaussian(&[3, 3], 1.0), &opts).is_err());
     }
@@ -300,6 +321,34 @@ mod tests {
         assert_eq!(opts.tile_rows, 64);
         // a zero tile would make the tile loop spin; the builder floors it
         assert_eq!(opts.with_tile_rows(0).tile_rows, 1);
+    }
+
+    #[test]
+    fn simd_mode_never_changes_results_and_counters_partition_rows() {
+        // the tentpole's correctness claim at the run_job surface: forced
+        // scalar and forced lanes agree bit-for-bit, and the two counters
+        // partition the gathered rows exactly
+        check_property("output invariant under simd mode", 6, |rng: &mut SplitMix64| {
+            let dims = [5 + rng.below(8), 5 + rng.below(8)];
+            let x = Tensor::random(&dims, 0.0, 255.0, rng.next_u64()).unwrap();
+            let job = Job::gaussian(&[3, 3], 1.2);
+            let scalar_opts = ExecOptions::native(2).with_simd(SimdMode::ForceScalar);
+            let (base, ms) = run_job(&x, &job, &scalar_opts).unwrap();
+            assert_eq!(ms.simd_rows, 0, "pinned-scalar run took a lane path");
+            assert_eq!(ms.scalar_rows, ms.gather_rows);
+            for mode in [SimdMode::Auto, SimdMode::ForceSimd] {
+                let opts = ExecOptions::native(2).with_simd(mode);
+                let (out, m) = run_job(&x, &job, &opts).unwrap();
+                assert_allclose(out.data(), base.data(), 0.0, 0.0);
+                assert_eq!(m.simd_rows + m.scalar_rows, m.gather_rows, "{mode}");
+            }
+            let forced = run_job(&x, &job, &ExecOptions::native(2).with_simd(SimdMode::ForceSimd))
+                .unwrap()
+                .1;
+            if forced.simd_rows > 0 {
+                assert_eq!(forced.simd_lanes, crate::simd::LANES);
+            }
+        });
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 use crate::error::{Error, Result};
 use crate::melt::matrix::MeltMatrix;
+use crate::simd::LANES;
 use crate::stats::linalg::Mat;
 
 /// Range-regulator policy for eq. (3)'s second exponential item.
@@ -82,6 +83,11 @@ pub fn bilateral_adaptive(m: &MeltMatrix, spatial: &[f32], floor: f32) -> Result
 }
 
 /// Allocation-free core over a raw row-major block (coordinator hot path).
+/// Walks the block in [`LANES`]-row groups when the thread's simd mode
+/// allows it — each lane runs the scalar per-row operation order below, so
+/// the two paths are bit-for-bit identical (the weight `exp` stays a scalar
+/// `f32::exp` per lane; the lane win is eight independent dependency
+/// chains, not a vector exp).
 pub fn bilateral_into(
     data: &[f32],
     rows: usize,
@@ -104,53 +110,176 @@ pub fn bilateral_into(
                 return Err(Error::Operator(format!("sigma_r must be positive: {sigma_r}")));
             }
             let inv2 = 1.0 / (2.0 * sigma_r * sigma_r);
-            for r in 0..rows {
-                let row = &data[r * cols..(r + 1) * cols];
-                let c = row[center];
-                let (mut num, mut den) = (0.0f32, 0.0f32);
-                for (v, s) in row.iter().zip(spatial.iter()) {
-                    let d = v - c;
-                    let w = s * (-d * d * inv2).exp();
-                    num += w * v;
-                    den += w;
-                }
-                out[r] = num / den;
+            let lane_rows = if crate::simd::lanes_enabled() {
+                (rows / LANES) * LANES
+            } else {
+                0
+            };
+            for g in 0..lane_rows / LANES {
+                let base = g * LANES;
+                const_rows_lane(
+                    &data[base * cols..(base + LANES) * cols],
+                    cols,
+                    center,
+                    spatial,
+                    inv2,
+                    &mut out[base..base + LANES],
+                );
             }
+            for r in lane_rows..rows {
+                out[r] = const_row(&data[r * cols..(r + 1) * cols], center, spatial, inv2);
+            }
+            crate::simd::note_lane_rows(lane_rows);
+            crate::simd::note_scalar_rows(rows - lane_rows);
         }
         RangeSigma::Adaptive { floor } => {
             if floor <= 0.0 {
                 return Err(Error::Operator(format!("floor must be positive: {floor}")));
             }
             let inv_n = 1.0 / cols as f32;
-            for r in 0..rows {
-                let row = &data[r * cols..(r + 1) * cols];
-                let c = row[center];
-                // σ_r(x) = population std of the row, floored
-                let mut mean = 0.0f32;
-                for v in row {
-                    mean += v;
-                }
-                mean *= inv_n;
-                let mut var = 0.0f32;
-                for v in row {
-                    let d = v - mean;
-                    var += d * d;
-                }
-                var *= inv_n;
-                let sig = var.sqrt().max(floor);
-                let inv2 = 1.0 / (2.0 * sig * sig);
-                let (mut num, mut den) = (0.0f32, 0.0f32);
-                for (v, s) in row.iter().zip(spatial.iter()) {
-                    let d = v - c;
-                    let w = s * (-d * d * inv2).exp();
-                    num += w * v;
-                    den += w;
-                }
-                out[r] = num / den;
+            let lane_rows = if crate::simd::lanes_enabled() {
+                (rows / LANES) * LANES
+            } else {
+                0
+            };
+            for g in 0..lane_rows / LANES {
+                let base = g * LANES;
+                adaptive_rows_lane(
+                    &data[base * cols..(base + LANES) * cols],
+                    cols,
+                    center,
+                    spatial,
+                    inv_n,
+                    floor,
+                    &mut out[base..base + LANES],
+                );
             }
+            for r in lane_rows..rows {
+                out[r] = adaptive_row(&data[r * cols..(r + 1) * cols], center, spatial, inv_n, floor);
+            }
+            crate::simd::note_lane_rows(lane_rows);
+            crate::simd::note_scalar_rows(rows - lane_rows);
         }
     }
     Ok(())
+}
+
+/// Scalar constant-σ_r body for one row — the reference operation order.
+#[inline(always)]
+fn const_row(row: &[f32], center: usize, spatial: &[f32], inv2: f32) -> f32 {
+    let c = row[center];
+    let (mut num, mut den) = (0.0f32, 0.0f32);
+    for (v, s) in row.iter().zip(spatial.iter()) {
+        let d = v - c;
+        let w = s * (-d * d * inv2).exp();
+        num += w * v;
+        den += w;
+    }
+    num / den
+}
+
+/// Constant-σ_r over exactly `LANES` rows at once: lane `l` performs the
+/// operations of [`const_row`] on row `l` in the identical order.
+#[inline(always)]
+fn const_rows_lane(
+    block: &[f32],
+    cols: usize,
+    center: usize,
+    spatial: &[f32],
+    inv2: f32,
+    out: &mut [f32],
+) {
+    let mut c = [0.0f32; LANES];
+    for l in 0..LANES {
+        c[l] = block[l * cols + center];
+    }
+    let mut num = [0.0f32; LANES];
+    let mut den = [0.0f32; LANES];
+    for (j, s) in spatial.iter().enumerate().take(cols) {
+        for l in 0..LANES {
+            let v = block[l * cols + j];
+            let d = v - c[l];
+            let w = s * (-d * d * inv2).exp();
+            num[l] += w * v;
+            den[l] += w;
+        }
+    }
+    for l in 0..LANES {
+        out[l] = num[l] / den[l];
+    }
+}
+
+/// Scalar adaptive-σ_r body for one row — the reference operation order.
+#[inline(always)]
+fn adaptive_row(row: &[f32], center: usize, spatial: &[f32], inv_n: f32, floor: f32) -> f32 {
+    // σ_r(x) = population std of the row, floored
+    let mut mean = 0.0f32;
+    for v in row {
+        mean += v;
+    }
+    mean *= inv_n;
+    let mut var = 0.0f32;
+    for v in row {
+        let d = v - mean;
+        var += d * d;
+    }
+    var *= inv_n;
+    let sig = var.sqrt().max(floor);
+    let inv2 = 1.0 / (2.0 * sig * sig);
+    const_row(row, center, spatial, inv2)
+}
+
+/// Adaptive-σ_r over exactly `LANES` rows: per-lane mean, variance, σ and
+/// weighted mean, each in [`adaptive_row`]'s exact order.
+#[inline(always)]
+fn adaptive_rows_lane(
+    block: &[f32],
+    cols: usize,
+    center: usize,
+    spatial: &[f32],
+    inv_n: f32,
+    floor: f32,
+    out: &mut [f32],
+) {
+    let mut mean = [0.0f32; LANES];
+    for j in 0..cols {
+        for l in 0..LANES {
+            mean[l] += block[l * cols + j];
+        }
+    }
+    for m in mean.iter_mut() {
+        *m *= inv_n;
+    }
+    let mut var = [0.0f32; LANES];
+    for j in 0..cols {
+        for l in 0..LANES {
+            let d = block[l * cols + j] - mean[l];
+            var[l] += d * d;
+        }
+    }
+    let mut inv2 = [0.0f32; LANES];
+    for l in 0..LANES {
+        let sig = (var[l] * inv_n).sqrt().max(floor);
+        inv2[l] = 1.0 / (2.0 * sig * sig);
+    }
+    let mut c = [0.0f32; LANES];
+    for l in 0..LANES {
+        c[l] = block[l * cols + center];
+    }
+    let mut num = [0.0f32; LANES];
+    let mut den = [0.0f32; LANES];
+    for (j, s) in spatial.iter().enumerate().take(cols) {
+        for l in 0..LANES {
+            let v = block[l * cols + j];
+            let d = v - c[l];
+            let w = s * (-d * d * inv2[l]).exp();
+            num[l] += w * v;
+            den[l] += w;
+        }
+    }
+    for l in 0..LANES {
+        out[l] = num[l] / den[l];
+    }
 }
 
 #[cfg(test)]
@@ -257,6 +386,35 @@ mod tests {
             )
             .unwrap();
             assert_allclose(&part, &full[lo..hi], 1e-6, 1e-5);
+        });
+    }
+
+    #[test]
+    fn lane_path_matches_scalar_bitwise() {
+        use crate::simd::{self, SimdMode};
+        check_property("bilateral lane vs scalar bits", 25, |rng: &mut SplitMix64| {
+            let rows = 1 + rng.below(21); // crosses the LANES=8 group edge
+            let cols = 1 + rng.below(15);
+            let center = rng.below(cols);
+            let data: Vec<f32> = (0..rows * cols).map(|_| rng.normal() * 50.0).collect();
+            let spatial: Vec<f32> = (0..cols).map(|_| 0.01 + rng.below(100) as f32 / 100.0).collect();
+            for range in [RangeSigma::Constant(20.0), RangeSigma::Adaptive { floor: 1.0 }] {
+                let p = BilateralParams { spatial: spatial.clone(), range };
+                let mut scalar = vec![0.0f32; rows];
+                simd::enter_job(SimdMode::ForceScalar);
+                bilateral_into(&data, rows, cols, center, &p, &mut scalar).unwrap();
+                let mut lanes = vec![0.0f32; rows];
+                simd::enter_job(SimdMode::ForceSimd);
+                bilateral_into(&data, rows, cols, center, &p, &mut lanes).unwrap();
+                simd::enter_job(SimdMode::Auto);
+                for r in 0..rows {
+                    assert_eq!(
+                        lanes[r].to_bits(),
+                        scalar[r].to_bits(),
+                        "row {r} of {rows}x{cols} under {range:?}"
+                    );
+                }
+            }
         });
     }
 

@@ -9,6 +9,7 @@
 use crate::error::{Error, Result};
 use crate::kernels::stencil::ncols;
 use crate::melt::matrix::MeltMatrix;
+use crate::simd::LANES;
 use crate::stats::linalg::Mat;
 
 /// Gaussian curvature per melt row for an operator of extents `window`.
@@ -46,7 +47,39 @@ pub fn curvature_into(
         )));
     }
     let mut d = vec![0.0f32; dc];
-    for r in 0..rows {
+    // lane path: LANES rows share one pass over the sparse triples, each
+    // lane accumulating its own packed-differential column strip
+    // (`dl[col * LANES + l]`) in the same triple order the scalar loop
+    // uses; the per-lane finish (det, |∇|², denominator) then runs the
+    // scalar epilogue verbatim, so both paths are bit-for-bit identical.
+    let lane_rows = if crate::simd::lanes_enabled() {
+        (rows / LANES) * LANES
+    } else {
+        0
+    };
+    let mut dl = vec![0.0f32; if lane_rows > 0 { dc * LANES } else { 0 }];
+    for g in 0..lane_rows / LANES {
+        let base = g * LANES;
+        let block = &data[base * cols..(base + LANES) * cols];
+        dl.iter_mut().for_each(|v| *v = 0.0);
+        for &(flat, col, w) in &triples {
+            let fo = flat as usize;
+            let co = col as usize * LANES;
+            for l in 0..LANES {
+                dl[co + l] += block[l * cols + fo] * w;
+            }
+        }
+        for l in 0..LANES {
+            for (c, v) in d.iter_mut().enumerate() {
+                *v = dl[c * LANES + l];
+            }
+            let det = hessian_det(&d[nd..], nd)?;
+            let g2: f32 = d[..nd].iter().map(|v| v * v).sum();
+            let denom = (1.0 + g2) * (1.0 + g2);
+            out[base + l] = det / denom;
+        }
+    }
+    for r in lane_rows..rows {
         let row = &data[r * cols..(r + 1) * cols];
         d.iter_mut().for_each(|v| *v = 0.0);
         for &(flat, col, w) in &triples {
@@ -57,6 +90,8 @@ pub fn curvature_into(
         let denom = (1.0 + g2) * (1.0 + g2);
         out[r] = det / denom;
     }
+    crate::simd::note_lane_rows(lane_rows);
+    crate::simd::note_scalar_rows(rows - lane_rows);
     Ok(())
 }
 
@@ -192,6 +227,32 @@ mod tests {
         // a straight horizontal edge midpoint must respond weakly
         let edge_mag = k[6 * 32 + 12].abs();
         assert!(corner_mag > 5.0 * edge_mag.max(1e-6), "corner {corner_mag} vs edge {edge_mag}");
+    }
+
+    #[test]
+    fn lane_curvature_matches_scalar_bitwise() {
+        use crate::simd::{self, SimdMode};
+        check_property("curvature lane vs scalar bits", 20, |rng: &mut SplitMix64| {
+            let dims = [3 + rng.below(8), 3 + rng.below(8)];
+            let x = Tensor::random(&dims, -20.0, 20.0, rng.next_u64()).unwrap();
+            let op = Operator::cubic(3, 2).unwrap();
+            let m = melt(&x, &op, GridMode::Same, BoundaryMode::Reflect).unwrap();
+            let mut scalar = vec![0.0f32; m.rows()];
+            simd::enter_job(SimdMode::ForceScalar);
+            curvature_into(m.data(), m.rows(), m.cols(), &[3, 3], &mut scalar).unwrap();
+            let mut lanes = vec![0.0f32; m.rows()];
+            simd::enter_job(SimdMode::ForceSimd);
+            curvature_into(m.data(), m.rows(), m.cols(), &[3, 3], &mut lanes).unwrap();
+            simd::enter_job(SimdMode::Auto);
+            for r in 0..m.rows() {
+                assert_eq!(
+                    lanes[r].to_bits(),
+                    scalar[r].to_bits(),
+                    "row {r} of {} rows",
+                    m.rows()
+                );
+            }
+        });
     }
 
     #[test]

@@ -113,7 +113,10 @@ pub fn apply_kernel_broadcast(m: &MeltMatrix, kernel: &[f32]) -> Vec<f32> {
 }
 
 /// Allocation-free broadcast core over a raw row-major block (used by both
-/// [`apply_kernel_broadcast`] and the coordinator's worker loop).
+/// [`apply_kernel_broadcast`] and the coordinator's worker loop). Takes the
+/// lane-parallel path (`simd::dot_rows_into`: two rows per step, AVX2 when
+/// the CPU has it) unless the thread is pinned to scalar; both paths are
+/// bit-for-bit identical — every lane runs the scalar strip order below.
 pub fn apply_kernel_broadcast_into(
     data: &[f32],
     rows: usize,
@@ -124,9 +127,24 @@ pub fn apply_kernel_broadcast_into(
     assert_eq!(data.len(), rows * cols);
     assert_eq!(kernel.len(), cols);
     assert_eq!(out.len(), rows);
+    if rows >= 2 && crate::simd::lanes_enabled() {
+        crate::simd::dot_rows_into(data, cols, kernel, out);
+        crate::simd::note_lane_rows(rows & !1);
+        if rows % 2 == 1 {
+            crate::simd::note_scalar_rows(1); // odd trailing row
+        }
+    } else {
+        broadcast_scalar_into(data, cols, kernel, out);
+        crate::simd::note_scalar_rows(rows);
+    }
+}
+
+/// The scalar reference body of the broadcast: the operation order every
+/// SIMD lane replicates exactly (see `simd` module docs).
+fn broadcast_scalar_into(data: &[f32], cols: usize, kernel: &[f32], out: &mut [f32]) {
     for (row, o) in data.chunks_exact(cols).zip(out.iter_mut()) {
         // 4 independent accumulators over bounds-check-free fixed-width
-        // strips: the compiler turns this into packed FMA lanes.
+        // strips: the compiler turns this into packed vector lanes.
         let mut acc = [0.0f32; 4];
         let rc = row.chunks_exact(4);
         let kc = kernel.chunks_exact(4);
@@ -211,6 +229,31 @@ mod tests {
         let k = vec![1.0f32; 5];
         let got = apply_kernel_broadcast(&m, &k);
         assert_allclose(&got, &[10.0, 35.0, 60.0], 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn broadcast_lane_path_matches_scalar_bitwise() {
+        use crate::simd::{self, SimdMode};
+        check_property("broadcast lane vs scalar bits", 40, |rng: &mut SplitMix64| {
+            let rows = 1 + rng.below(17); // both parities, incl. rows == 1
+            let cols = 1 + rng.below(30); // every strip-remainder class
+            let data: Vec<f32> = (0..rows * cols).map(|_| rng.normal() * 8.0).collect();
+            let k: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+            let mut scalar = vec![0.0f32; rows];
+            simd::enter_job(SimdMode::ForceScalar);
+            apply_kernel_broadcast_into(&data, rows, cols, &k, &mut scalar);
+            let mut lanes = vec![0.0f32; rows];
+            simd::enter_job(SimdMode::ForceSimd);
+            apply_kernel_broadcast_into(&data, rows, cols, &k, &mut lanes);
+            simd::enter_job(SimdMode::Auto);
+            for r in 0..rows {
+                assert_eq!(
+                    lanes[r].to_bits(),
+                    scalar[r].to_bits(),
+                    "row {r} of {rows}x{cols}"
+                );
+            }
+        });
     }
 
     #[test]

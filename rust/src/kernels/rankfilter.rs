@@ -11,6 +11,7 @@
 
 use crate::error::{Error, Result};
 use crate::melt::matrix::MeltMatrix;
+use crate::simd::LANES;
 use crate::stats::rank::{median_exact_with, quantile_with};
 
 /// Which order statistic to extract per melt row.
@@ -51,20 +52,83 @@ pub fn rank_filter_into(
             return Err(Error::Operator(format!("quantile {q} outside [0, 1]")));
         }
     }
-    // one scratch buffer per block: each row costs a single copy into it
-    // and a single quickselect pass (select_adjacent_with yields both
-    // order statistics a median/quantile straddles), where the old
-    // per-pixel `select` calls copied and partitioned the window twice
-    let mut scratch: Vec<f32> = Vec::with_capacity(cols);
-    for (row, o) in data.chunks_exact(cols).zip(out.iter_mut()) {
-        *o = match kind {
-            RankKind::Min => row.iter().copied().fold(f32::INFINITY, f32::min),
-            RankKind::Max => row.iter().copied().fold(f32::NEG_INFINITY, f32::max),
-            RankKind::Median => median_exact_with(&mut scratch, row),
-            RankKind::Quantile(q) => quantile_with(&mut scratch, row, q),
-        };
+    // min/max are pure folds, so they take the lane path: LANES rows at a
+    // time, each lane folding its own row left-to-right through the exact
+    // scalar reduction (`f32::min`/`f32::max` per lane — never a hardware
+    // min/max instruction, whose NaN/±0 semantics differ). The lane win is
+    // eight independent dependency chains instead of one serial fold.
+    // median/quantile run quickselect, a data-dependent permutation with
+    // no lane-parallel form — those rows stay (and are counted) scalar.
+    match kind {
+        RankKind::Min | RankKind::Max => {
+            let lane_rows = if crate::simd::lanes_enabled() {
+                (rows / LANES) * LANES
+            } else {
+                0
+            };
+            for g in 0..lane_rows / LANES {
+                let base = g * LANES;
+                minmax_rows_lane(
+                    &data[base * cols..(base + LANES) * cols],
+                    cols,
+                    kind,
+                    &mut out[base..base + LANES],
+                );
+            }
+            for r in lane_rows..rows {
+                let row = &data[r * cols..(r + 1) * cols];
+                out[r] = match kind {
+                    RankKind::Min => row.iter().copied().fold(f32::INFINITY, f32::min),
+                    _ => row.iter().copied().fold(f32::NEG_INFINITY, f32::max),
+                };
+            }
+            crate::simd::note_lane_rows(lane_rows);
+            crate::simd::note_scalar_rows(rows - lane_rows);
+        }
+        RankKind::Median | RankKind::Quantile(_) => {
+            // one scratch buffer per block: each row costs a single copy
+            // into it and a single quickselect pass (select_adjacent_with
+            // yields both order statistics a median/quantile straddles),
+            // where the old per-pixel `select` calls copied and
+            // partitioned the window twice
+            let mut scratch: Vec<f32> = Vec::with_capacity(cols);
+            for (row, o) in data.chunks_exact(cols).zip(out.iter_mut()) {
+                *o = match kind {
+                    RankKind::Median => median_exact_with(&mut scratch, row),
+                    RankKind::Quantile(q) => quantile_with(&mut scratch, row, q),
+                    _ => unreachable!("outer match covers min/max"),
+                };
+            }
+            crate::simd::note_scalar_rows(rows);
+        }
     }
     Ok(())
+}
+
+/// Min/max fold over exactly `LANES` rows: lane `l` folds row `l` with the
+/// scalar identity and combiner, element order preserved.
+#[inline(always)]
+fn minmax_rows_lane(block: &[f32], cols: usize, kind: RankKind, out: &mut [f32]) {
+    let init = if matches!(kind, RankKind::Min) {
+        f32::INFINITY
+    } else {
+        f32::NEG_INFINITY
+    };
+    let mut acc = [init; LANES];
+    if matches!(kind, RankKind::Min) {
+        for j in 0..cols {
+            for l in 0..LANES {
+                acc[l] = acc[l].min(block[l * cols + j]);
+            }
+        }
+    } else {
+        for j in 0..cols {
+            for l in 0..LANES {
+                acc[l] = acc[l].max(block[l * cols + j]);
+            }
+        }
+    }
+    out[..LANES].copy_from_slice(&acc);
 }
 
 /// Morphological erosion (min filter) of a tensor via the melt pipeline.
@@ -157,6 +221,37 @@ mod tests {
             .unwrap();
         let out = rank_filter(&m, RankKind::Median).unwrap();
         assert!(out.iter().all(|&v| v == 100.0));
+    }
+
+    #[test]
+    fn lane_minmax_matches_scalar_bitwise_including_nan() {
+        use crate::simd::{self, SimdMode};
+        check_property("rank min/max lane vs scalar bits", 25, |rng: &mut SplitMix64| {
+            let rows = 1 + rng.below(20);
+            let cols = 1 + rng.below(12);
+            let mut data: Vec<f32> = (0..rows * cols).map(|_| rng.normal() * 30.0).collect();
+            // sprinkle the exact edge cases hardware min/max gets wrong
+            for _ in 0..3 {
+                let i = rng.below(data.len());
+                data[i] = [f32::NAN, 0.0, -0.0][rng.below(3)];
+            }
+            for kind in [RankKind::Min, RankKind::Max] {
+                let mut scalar = vec![0.0f32; rows];
+                simd::enter_job(SimdMode::ForceScalar);
+                rank_filter_into(&data, rows, cols, kind, &mut scalar).unwrap();
+                let mut lanes = vec![0.0f32; rows];
+                simd::enter_job(SimdMode::ForceSimd);
+                rank_filter_into(&data, rows, cols, kind, &mut lanes).unwrap();
+                simd::enter_job(SimdMode::Auto);
+                for r in 0..rows {
+                    assert_eq!(
+                        lanes[r].to_bits(),
+                        scalar[r].to_bits(),
+                        "row {r} of {rows}x{cols} under {kind:?}"
+                    );
+                }
+            }
+        });
     }
 
     #[test]

@@ -203,6 +203,43 @@
 //! assert!(metrics.halo_published() > 0);    // boundary rows were traded
 //! ```
 //!
+//! ## Per-core performance
+//!
+//! With memory traffic tiled away, the remaining lever is instruction
+//! throughput inside each worker, and the [`simd`] module pulls it
+//! without giving up exactness. The vectorization model is **lane =
+//! output element**: kernels walk `block.chunks_exact(cols)` in groups
+//! of [`simd::LANES`] output rows, and each lane runs the *identical
+//! scalar operation order* over its own window — reductions are never
+//! reassociated within a lane, no fused multiply-add is ever issued
+//! (it rounds once where `a * b + c` rounds twice), and rank min/max
+//! lanes call `f32::min`/`f32::max` rather than the subtly-different
+//! hardware min/max instructions. IEEE-754 arithmetic is deterministic
+//! per lane, so **the lane path is bit-for-bit equal to the scalar
+//! path** for every kernel × boundary × grid — the same invariant the
+//! halo modes and the serving batcher already pin, now extended one
+//! layer down to instruction selection
+//! (`tests/integration_simd.rs` proves it shape-by-shape).
+//!
+//! Dispatch is resolved at **runtime**, not compile time: the portable
+//! `[f32; LANES]` primitives are written so stable rustc autovectorizes
+//! them on every target (NEON on aarch64), and the hottest primitive —
+//! the strip-accumulated row dot behind gaussian/convolve — additionally
+//! carries a hand-scheduled AVX2 body selected once per process via
+//! `is_x86_feature_detected!`. Zero new dependencies; the scalar path is
+//! always compiled and stays the reference.
+//!
+//! The knob is [`ExecOptions::simd`](coordinator::ExecOptions)
+//! (`simd = "auto" | "scalar" | "simd"` in run configs, `--no-simd` on
+//! `meltframe run`/`serve`, `MELTFRAME_SIMD` as the process default —
+//! the CI matrix forces both extremes through the full suite), and
+//! [`RunMetrics`](coordinator::RunMetrics) meters the split per run:
+//! `simd_rows` (output rows computed by a lane path), `scalar_rows`
+//! (rows computed by a scalar path — remainder rows, rank
+//! median/quantile, forced-scalar runs) and `simd_lanes` (the lane
+//! width in use, 0 if no lane path ran), totalled per plan by
+//! [`PlanMetrics`](coordinator::PlanMetrics).
+//!
 //! The footprint model above covers one run. A serving executor adds one
 //! term: cache-resident plan memory. Each cached plan holds its group's
 //! `RowGather` tables — per-axis index tables plus interior masks, about
@@ -334,6 +371,7 @@ pub mod kernels;
 pub mod melt;
 pub mod runtime;
 pub mod serve;
+pub mod simd;
 pub mod stats;
 pub mod sync;
 pub mod tensor;
@@ -359,5 +397,6 @@ pub mod prelude {
     pub use crate::melt::melt::{melt, melt_band_into, melt_rows_into, BoundaryMode, RowGather};
     pub use crate::melt::operator::Operator;
     pub use crate::melt::partition::RowPartition;
+    pub use crate::simd::SimdMode;
     pub use crate::tensor::dense::Tensor;
 }

@@ -67,6 +67,7 @@ fn dispatch(cmd: Command) -> Result<()> {
             halo_mode,
             halo_wait_secs,
             tile_rows,
+            no_simd,
         } => {
             let mut cfg = RunConfig::load(&config)?;
             if let Some(mode) = halo_mode {
@@ -77,6 +78,9 @@ fn dispatch(cmd: Command) -> Result<()> {
             }
             if let Some(tile) = tile_rows {
                 cfg.options.tile_rows = tile;
+            }
+            if no_simd {
+                cfg.options.simd = meltframe::simd::SimdMode::ForceScalar;
             }
             let x = cfg.input.load()?;
             let fused = cfg.fused && !legacy;
@@ -185,6 +189,7 @@ fn dispatch(cmd: Command) -> Result<()> {
             batch_window_ms,
             max_batch,
             executors,
+            no_simd,
         } => {
             let mut exec = ExecOptions::native(workers);
             if let Some(mode) = halo_mode {
@@ -195,6 +200,9 @@ fn dispatch(cmd: Command) -> Result<()> {
             }
             if let Some(tile) = tile_rows {
                 exec.tile_rows = tile;
+            }
+            if no_simd {
+                exec.simd = meltframe::simd::SimdMode::ForceScalar;
             }
             let mut opts = ServeOptions::new(socket, exec);
             opts.queue_depth = queue_depth;

@@ -279,6 +279,12 @@ pub struct RowGather {
     interior: Vec<Vec<bool>>,
     /// Source deltas of every leading-axis window-offset combination.
     prefix_deltas: Vec<isize>,
+    /// Interior-row copy plan: `prefix_deltas` segments merged into maximal
+    /// source-contiguous `(start_delta, len)` runs. When adjacent window
+    /// planes touch adjacent memory (innermost extent == innermost window),
+    /// one long `copy_from_slice` replaces many `wlast`-sized ones — the
+    /// vector units see a straight memcpy instead of short fixed copies.
+    runs: Vec<(isize, usize)>,
     window: Vec<usize>,
     radius: Vec<usize>,
     gshape: Vec<usize>,
@@ -336,6 +342,16 @@ impl RowGather {
             }
             prefix_deltas = next;
         }
+        // merge source-contiguous segments into maximal runs (dst order is
+        // prefix_deltas order, so only order-adjacent segments can merge)
+        let wlast = window[rank - 1];
+        let mut runs: Vec<(isize, usize)> = Vec::with_capacity(prefix_deltas.len());
+        for &pd in &prefix_deltas {
+            match runs.last_mut() {
+                Some((start, len)) if *start + *len as isize == pd => *len += wlast,
+                _ => runs.push((pd, wlast)),
+            }
+        }
         let wrap = matches!(boundary, BoundaryMode::Wrap);
         let unit_grid = grid.out_shape() == input_shape
             && grid.stride().iter().all(|&s| s == 1)
@@ -359,6 +375,7 @@ impl RowGather {
             halo: flat_halo(input_shape, op),
             tables,
             window,
+            runs,
         })
     }
 
@@ -379,7 +396,10 @@ impl RowGather {
     pub fn table_bytes(&self) -> usize {
         let tables: usize = self.tables.iter().map(|t| t.len() * 8).sum();
         let interior: usize = self.interior.iter().map(|m| m.len()).sum();
-        tables + interior + self.prefix_deltas.len() * std::mem::size_of::<isize>()
+        tables
+            + interior
+            + self.prefix_deltas.len() * std::mem::size_of::<isize>()
+            + self.runs.len() * std::mem::size_of::<(isize, usize)>()
     }
 
     /// Gather melt rows `range` from `src` (values of the virtual input
@@ -461,30 +481,46 @@ impl RowGather {
         };
         for (r, dst) in range.clone().zip(out.chunks_exact_mut(cols)) {
             if (0..rank).all(|a| self.interior[a][gidx[a]]) {
-                // fast path: contiguous runs, no boundary mapping. The run
-                // length is the innermost window extent — typically 3 or 5
-                // — so fixed-width copies beat generic memcpy dispatch.
+                // fast path: contiguous runs, no boundary mapping. When
+                // window planes merged into longer runs at construction,
+                // one wide copy per run; otherwise the run length is the
+                // innermost window extent — typically 3 or 5 — so
+                // fixed-width copies beat generic memcpy dispatch.
                 let base = centre_flat - self.radius[rank - 1] as isize - src_offset as isize;
-                match wlast {
-                    3 => {
-                        for (seg, &pd) in dst.chunks_exact_mut(3).zip(self.prefix_deltas.iter()) {
-                            let s = (base + pd) as usize;
-                            let run: [f32; 3] = src[s..s + 3].try_into().unwrap();
-                            seg.copy_from_slice(&run);
-                        }
+                if self.runs.len() < self.prefix_deltas.len() {
+                    let mut doff = 0;
+                    for &(rd, rl) in &self.runs {
+                        let s = (base + rd) as usize;
+                        dst[doff..doff + rl].copy_from_slice(&src[s..s + rl]);
+                        doff += rl;
                     }
-                    5 => {
-                        for (seg, &pd) in dst.chunks_exact_mut(5).zip(self.prefix_deltas.iter()) {
-                            let s = (base + pd) as usize;
-                            let run: [f32; 5] = src[s..s + 5].try_into().unwrap();
-                            seg.copy_from_slice(&run);
+                } else {
+                    match wlast {
+                        3 => {
+                            for (seg, &pd) in
+                                dst.chunks_exact_mut(3).zip(self.prefix_deltas.iter())
+                            {
+                                let s = (base + pd) as usize;
+                                let run: [f32; 3] = src[s..s + 3].try_into().unwrap();
+                                seg.copy_from_slice(&run);
+                            }
                         }
-                    }
-                    _ => {
-                        for (seg, &pd) in dst.chunks_exact_mut(wlast).zip(self.prefix_deltas.iter())
-                        {
-                            let s = (base + pd) as usize;
-                            seg.copy_from_slice(&src[s..s + wlast]);
+                        5 => {
+                            for (seg, &pd) in
+                                dst.chunks_exact_mut(5).zip(self.prefix_deltas.iter())
+                            {
+                                let s = (base + pd) as usize;
+                                let run: [f32; 5] = src[s..s + 5].try_into().unwrap();
+                                seg.copy_from_slice(&run);
+                            }
+                        }
+                        _ => {
+                            for (seg, &pd) in
+                                dst.chunks_exact_mut(wlast).zip(self.prefix_deltas.iter())
+                            {
+                                let s = (base + pd) as usize;
+                                seg.copy_from_slice(&src[s..s + wlast]);
+                            }
                         }
                     }
                 }
@@ -521,12 +557,15 @@ impl RowGather {
     }
 }
 
-/// Slow-path gather for one (boundary-touching) row: odometer over window
-/// offsets accumulating per-axis table contributions. Table entries are
-/// absolute flat indices; `base` shifts them into slab coordinates. The
-/// caller provides the window index vector `widx` (all zeros on entry; the
-/// full `cols`-increment cycle returns it to all zeros on exit) so the
-/// scratch is allocated once per gather call, not once per row.
+/// Slow-path gather for one (boundary-touching) row: odometer over the
+/// *leading* window axes only, with a branch-light direct scan of the
+/// last-axis table per segment — the innermost loop is a straight
+/// table-indexed copy the vector units can chew through, instead of a
+/// per-element odometer step. Table entries are absolute flat indices;
+/// `base` shifts them into slab coordinates. The caller provides the
+/// window index vector `widx` (all zeros on entry; the full cycle of
+/// leading increments returns it to all zeros on exit) so the scratch is
+/// allocated once per gather call, not once per row.
 #[allow(clippy::too_many_arguments)]
 fn gather_row_slow(
     dst: &mut [f32],
@@ -539,17 +578,28 @@ fn gather_row_slow(
     has_sentinel: bool,
     widx: &mut [usize],
 ) {
-    // sentinel entries contribute 0 to acc and 1 to neg
-    let mut acc: i64 = wtab.iter().map(|t| t[0].max(0)).sum();
-    let mut neg = wtab.iter().filter(|t| t[0] < 0).count();
-    for d in dst.iter_mut() {
-        *d = if has_sentinel && neg > 0 {
-            fill
+    let last = wtab[rank - 1];
+    let wlast = window[rank - 1];
+    // sentinel entries contribute 0 to acc and 1 to neg (leading axes only)
+    let lead = &wtab[..rank - 1];
+    let mut acc: i64 = lead.iter().map(|t| t[0].max(0)).sum();
+    let mut neg = lead.iter().filter(|t| t[0] < 0).count();
+    for seg in dst.chunks_exact_mut(wlast) {
+        if has_sentinel {
+            if neg > 0 {
+                seg.iter_mut().for_each(|d| *d = fill);
+            } else {
+                for (d, &t) in seg.iter_mut().zip(last.iter()) {
+                    *d = if t < 0 { fill } else { src[(acc + t) as usize - base] };
+                }
+            }
         } else {
-            src[acc as usize - base]
-        };
-        // increment window odometer
-        for a in (0..rank).rev() {
+            for (d, &t) in seg.iter_mut().zip(last.iter()) {
+                *d = src[(acc + t) as usize - base];
+            }
+        }
+        // increment the leading-axis odometer
+        for a in (0..rank - 1).rev() {
             let t = wtab[a];
             let old = t[widx[a]];
             if old < 0 {
@@ -910,6 +960,25 @@ mod tests {
         assert!(gs.gather_rows(x.data(), 0, 0..3, &mut out3).is_ok());
         // rank mismatch at construction
         assert!(RowGather::new(&[6, 6], &op, &grid, BoundaryMode::Reflect).is_err());
+    }
+
+    #[test]
+    fn merged_runs_cover_contiguous_planes() {
+        // innermost extent == innermost window: the three window planes of
+        // an interior row touch adjacent memory, so they merge into one
+        // 9-wide run; on a wider tensor nothing merges
+        let op = Operator::new(&[3, 3]).unwrap();
+        let narrow = QuasiGrid::resolve(&[7, 3], &op, &GridMode::Same).unwrap();
+        let g = RowGather::new(&[7, 3], &op, &narrow, BoundaryMode::Reflect).unwrap();
+        assert_eq!(g.runs, vec![(-3, 9)]);
+        let wide = QuasiGrid::resolve(&[7, 8], &op, &GridMode::Same).unwrap();
+        let gw = RowGather::new(&[7, 8], &op, &wide, BoundaryMode::Reflect).unwrap();
+        assert_eq!(gw.runs.len(), gw.prefix_deltas.len());
+        // and the merged copy plan reproduces the naive gather exactly
+        let x = Tensor::random(&[7, 3], -4.0, 4.0, 23).unwrap();
+        let m = melt(&x, &op, GridMode::Same, BoundaryMode::Reflect).unwrap();
+        let want = melt_naive(&x, &op, &narrow, BoundaryMode::Reflect);
+        assert_allclose(m.data(), &want, 0.0, 0.0);
     }
 
     #[test]

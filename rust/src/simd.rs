@@ -1,0 +1,529 @@
+//! Lane-parallel (SIMD) micro-kernels with bit-for-bit scalar parity.
+//!
+//! The vectorization model is *across the output axis*: a group of `LANES`
+//! output elements is computed per step, and each lane runs the **identical
+//! scalar operation order** over its own window. Reductions are never
+//! reassociated within a lane — lane `l`'s accumulator sees exactly the
+//! additions, in exactly the order, that the scalar path would perform for
+//! output element `l`. IEEE-754 arithmetic is deterministic per lane, so the
+//! vector path is bit-for-bit equal to the scalar path for every input
+//! (including NaN/±0 edge cases: min/max lanes call `f32::min`/`f32::max`,
+//! not the subtly-different hardware min instructions, and no primitive uses
+//! fused multiply-add, which rounds once where `a * b + c` rounds twice).
+//!
+//! Three pieces live here:
+//!
+//! 1. **Fixed-width `[f32; LANES]` primitives** (`mul_add_lanes`,
+//!    `min_lanes`, `max_lanes`, `select_lanes`, `gather_lanes`, `splat`)
+//!    written as straight-line per-lane loops so stable rustc autovectorizes
+//!    them — no nightly features, no dependencies.
+//! 2. **A runtime-dispatched AVX2 specialization** of the hottest primitive
+//!    (the strip-accumulated row dot that backs the gaussian/convolve
+//!    kernels) behind `is_x86_feature_detected!`. The portable body is
+//!    always compiled and is the only path on non-x86 targets (aarch64
+//!    autovectorizes it to NEON). Dispatch is resolved once and cached.
+//! 3. **Per-thread mode + counters**: executors set a [`SimdMode`] for the
+//!    worker thread at job entry (pool threads are reused across jobs), and
+//!    kernels report how many output rows took the lane path vs the scalar
+//!    path. The tile executor drains the counters into `RunMetrics` after
+//!    every kernel call, so `simd_rows` / `scalar_rows` / `simd_lanes`
+//!    surface per run without any global atomics that would interleave
+//!    across concurrent executors.
+
+use std::cell::Cell;
+use std::fmt;
+
+use crate::error::{Error, Result};
+
+/// Lane width of the portable primitives: 8 × f32 fills one AVX2/NEON-pair
+/// register and is the group size kernels walk output rows in.
+pub const LANES: usize = 8;
+
+/// Per-run vectorization policy. `Auto` uses the lane path wherever a
+/// kernel has one; `ForceScalar` (the `--no-simd` escape hatch) pins every
+/// kernel to the scalar path; `ForceSimd` pins the lane path even for
+/// shapes where the heuristics would not bother (tests use it to prove
+/// bit-for-bit parity). Results are identical in all three modes — the
+/// mode only chooses which instruction sequence computes them.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum SimdMode {
+    #[default]
+    Auto,
+    ForceScalar,
+    ForceSimd,
+}
+
+impl SimdMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(SimdMode::Auto),
+            "scalar" | "off" => Ok(SimdMode::ForceScalar),
+            "simd" | "force" | "on" => Ok(SimdMode::ForceSimd),
+            other => Err(Error::Config(format!(
+                "unknown simd mode '{other}' (auto|scalar|simd)"
+            ))),
+        }
+    }
+
+    /// Process-wide default: `MELTFRAME_SIMD=auto|scalar|simd` when set
+    /// (the CI matrix forces both extremes through the full suite),
+    /// otherwise `Auto`. An unparsable value falls back to `Auto` rather
+    /// than failing late inside a worker thread.
+    pub fn env_default() -> Self {
+        match std::env::var("MELTFRAME_SIMD") {
+            Ok(v) => SimdMode::parse(&v).unwrap_or(SimdMode::Auto),
+            Err(_) => SimdMode::Auto,
+        }
+    }
+}
+
+impl fmt::Display for SimdMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            SimdMode::Auto => "auto",
+            SimdMode::ForceScalar => "scalar",
+            SimdMode::ForceSimd => "simd",
+        })
+    }
+}
+
+thread_local! {
+    static MODE: Cell<SimdMode> = const { Cell::new(SimdMode::Auto) };
+    static LANE_ROWS: Cell<usize> = const { Cell::new(0) };
+    static SCALAR_ROWS: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Install `mode` for the current thread and clear any counter residue a
+/// previous job (or a direct kernel call outside an executor) left behind.
+/// Executors call this at job entry on every worker thread — pool threads
+/// outlive jobs, so the mode must be re-asserted per job, not per thread.
+pub fn enter_job(mode: SimdMode) {
+    MODE.with(|m| m.set(mode));
+    LANE_ROWS.with(|c| c.set(0));
+    SCALAR_ROWS.with(|c| c.set(0));
+}
+
+/// The current thread's vectorization mode.
+pub fn thread_mode() -> SimdMode {
+    MODE.with(|m| m.get())
+}
+
+/// Should kernels take the lane path on this thread?
+pub fn lanes_enabled() -> bool {
+    thread_mode() != SimdMode::ForceScalar
+}
+
+/// Record `n` output rows computed by a lane-parallel path.
+pub fn note_lane_rows(n: usize) {
+    LANE_ROWS.with(|c| c.set(c.get() + n));
+}
+
+/// Record `n` output rows computed by a scalar path.
+pub fn note_scalar_rows(n: usize) {
+    SCALAR_ROWS.with(|c| c.set(c.get() + n));
+}
+
+/// Drain the current thread's `(lane_rows, scalar_rows)` counters. The
+/// tile executor calls this after each kernel invocation and folds the
+/// deltas into its per-worker stats.
+pub fn take_counters() -> (usize, usize) {
+    let lanes = LANE_ROWS.with(|c| c.replace(0));
+    let scalar = SCALAR_ROWS.with(|c| c.replace(0));
+    (lanes, scalar)
+}
+
+// ---------------------------------------------------------------------------
+// Portable fixed-width primitives
+// ---------------------------------------------------------------------------
+
+/// Broadcast one value to every lane.
+#[inline(always)]
+pub fn splat(x: f32) -> [f32; LANES] {
+    [x; LANES]
+}
+
+/// Per-lane `acc[l] = acc[l] + a[l] * b[l]`, written as a separate multiply
+/// and add (never `f32::mul_add`): the scalar kernels round the product
+/// before accumulating, and the lane path must round identically.
+#[inline(always)]
+pub fn mul_add_lanes(acc: &mut [f32; LANES], a: &[f32; LANES], b: &[f32; LANES]) {
+    for l in 0..LANES {
+        acc[l] += a[l] * b[l];
+    }
+}
+
+/// Per-lane `f32::min` — deliberately NOT a hardware min instruction:
+/// `_mm256_min_ps` returns the second operand on NaN and distinguishes
+/// ±0.0 differently from `f32::min`, which would break parity with the
+/// scalar `fold(f32::INFINITY, f32::min)` reduction.
+#[inline(always)]
+pub fn min_lanes(acc: &mut [f32; LANES], v: &[f32; LANES]) {
+    for l in 0..LANES {
+        acc[l] = acc[l].min(v[l]);
+    }
+}
+
+/// Per-lane `f32::max`; see [`min_lanes`] for why this is not an intrinsic.
+#[inline(always)]
+pub fn max_lanes(acc: &mut [f32; LANES], v: &[f32; LANES]) {
+    for l in 0..LANES {
+        acc[l] = acc[l].max(v[l]);
+    }
+}
+
+/// Per-lane blend: `mask[l] ? t[l] : f[l]`.
+#[inline(always)]
+pub fn select_lanes(mask: &[bool; LANES], t: &[f32; LANES], f: &[f32; LANES]) -> [f32; LANES] {
+    let mut out = [0.0f32; LANES];
+    for l in 0..LANES {
+        out[l] = if mask[l] { t[l] } else { f[l] };
+    }
+    out
+}
+
+/// Gather-by-index: `out[l] = src[idx[l]]`. Callers validate indices; the
+/// slice index here keeps the bounds check (this is the boundary-segment
+/// path, not the contiguous-run fast path).
+#[inline(always)]
+pub fn gather_lanes(src: &[f32], idx: &[usize; LANES]) -> [f32; LANES] {
+    let mut out = [0.0f32; LANES];
+    for l in 0..LANES {
+        out[l] = src[idx[l]];
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Strip-accumulated row dot (the gaussian/convolve hot loop)
+// ---------------------------------------------------------------------------
+
+/// The scalar strip dot: four parallel accumulators over 4-element strips,
+/// combined pairwise, then a scalar remainder. This is the exact operation
+/// order of `kernels::paradigm::apply_kernel_broadcast_into` — the lane
+/// paths below replicate it per row and must never diverge from it.
+#[inline(always)]
+fn dot_strips_scalar(row: &[f32], kernel: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let rc = row.chunks_exact(4);
+    let kc = kernel.chunks_exact(4);
+    let (rrem, krem) = (rc.remainder(), kc.remainder());
+    for (rv, kv) in rc.zip(kc) {
+        acc[0] += rv[0] * kv[0];
+        acc[1] += rv[1] * kv[1];
+        acc[2] += rv[2] * kv[2];
+        acc[3] += rv[3] * kv[3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (v, k) in rrem.iter().zip(krem.iter()) {
+        s += v * k;
+    }
+    s
+}
+
+/// Portable two-row strip dot: both rows keep their own `acc[4]` strip
+/// accumulators, advanced in lockstep so the compiler can fuse the pair
+/// into wider vector ops; per row the order is exactly
+/// [`dot_strips_scalar`]'s.
+#[inline(always)]
+fn dot2_portable(a: &[f32], b: &[f32], kernel: &[f32]) -> (f32, f32) {
+    let strips = kernel.len().min(a.len()).min(b.len()) / 4;
+    let mut aa = [0.0f32; 4];
+    let mut ab = [0.0f32; 4];
+    for t in 0..strips {
+        let ra = &a[4 * t..4 * t + 4];
+        let rb = &b[4 * t..4 * t + 4];
+        let kv = &kernel[4 * t..4 * t + 4];
+        for i in 0..4 {
+            aa[i] += ra[i] * kv[i];
+            ab[i] += rb[i] * kv[i];
+        }
+    }
+    let mut sa = (aa[0] + aa[1]) + (aa[2] + aa[3]);
+    let mut sb = (ab[0] + ab[1]) + (ab[2] + ab[3]);
+    let n = kernel.len().min(a.len()).min(b.len());
+    for j in 4 * strips..n {
+        sa += a[j] * kernel[j];
+        sb += b[j] * kernel[j];
+    }
+    (sa, sb)
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2 body of the two-row strip dot. One `__m256` carries both rows'
+    //! four strip accumulators as `[a0 a1 a2 a3 | b0 b1 b2 b3]`; each strip
+    //! issues two 128-bit loads (one per row) combined into one register,
+    //! one 128-bit kernel load broadcast to both halves, and a separate
+    //! multiply and add — the same round-twice sequence as the scalar
+    //! strip loop. The horizontal finish `(acc0+acc1)+(acc2+acc3)` and the
+    //! remainder tail run in scalar f32, so every intermediate rounds
+    //! exactly like `dot_strips_scalar`.
+
+    use std::arch::x86_64::{
+        __m256, _mm256_add_ps, _mm256_castps128_ps256, _mm256_insertf128_ps, _mm256_mul_ps,
+        _mm256_setzero_ps, _mm256_storeu_ps, _mm_loadu_ps,
+    };
+
+    /// Two-row strip dot on AVX2.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2 (checked via
+    /// `is_x86_feature_detected!("avx2")` by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    // SAFETY: (caller contract) this fn is only reachable through
+    // `simd::dot2`, which calls it after `dispatch()` has observed
+    // is_x86_feature_detected!("avx2") succeed on this machine.
+    pub unsafe fn dot2(a: &[f32], b: &[f32], kernel: &[f32]) -> (f32, f32) {
+        let n = kernel.len().min(a.len()).min(b.len());
+        let strips = n / 4;
+        // SAFETY: register-only zeroing; AVX2 is guaranteed by this
+        // function's target_feature contract.
+        let mut acc: __m256 = unsafe { _mm256_setzero_ps() };
+        for t in 0..strips {
+            let off = 4 * t;
+            // SAFETY: off + 4 <= 4*strips <= n <= len of a, b and kernel
+            // (clamped by the min() above), so every unaligned 128-bit
+            // load reads in-bounds; loadu has no alignment requirement.
+            // The cast/insert pair only moves register lanes.
+            unsafe {
+                let ra = _mm_loadu_ps(a.as_ptr().add(off));
+                let rb = _mm_loadu_ps(b.as_ptr().add(off));
+                let kv = _mm_loadu_ps(kernel.as_ptr().add(off));
+                let rows = _mm256_insertf128_ps(_mm256_castps128_ps256(ra), rb, 1);
+                let kk = _mm256_insertf128_ps(_mm256_castps128_ps256(kv), kv, 1);
+                // separate mul + add (NOT fmadd): the scalar path rounds
+                // the product before accumulating
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(rows, kk));
+            }
+        }
+        let mut accs = [0.0f32; 8];
+        // SAFETY: `accs` is 8 contiguous f32s, exactly the 32 bytes an
+        // unaligned 256-bit store writes.
+        unsafe { _mm256_storeu_ps(accs.as_mut_ptr(), acc) };
+        // horizontal finish + remainder in scalar f32, in the exact
+        // scalar-path order
+        let mut sa = (accs[0] + accs[1]) + (accs[2] + accs[3]);
+        let mut sb = (accs[4] + accs[5]) + (accs[6] + accs[7]);
+        for j in 4 * strips..n {
+            sa += a[j] * kernel[j];
+            sb += b[j] * kernel[j];
+        }
+        (sa, sb)
+    }
+}
+
+/// Which instruction set backs the lane paths on this machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dispatch {
+    /// Autovectorized portable Rust (the only path off x86_64; NEON via
+    /// the compiler on aarch64).
+    Portable,
+    /// Hand-scheduled AVX2 for the strip dot.
+    Avx2,
+}
+
+/// Resolve (once) and return the instruction-set dispatch. Runtime
+/// detection, not compile-time: the same binary runs the AVX2 body on
+/// machines that have it and the portable body everywhere else.
+pub fn dispatch() -> Dispatch {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::sync::atomic::{AtomicU8, Ordering};
+        static CACHED: AtomicU8 = AtomicU8::new(0); // 0 unresolved, 1 portable, 2 avx2
+        match CACHED.load(Ordering::Relaxed) {
+            1 => Dispatch::Portable,
+            2 => Dispatch::Avx2,
+            _ => {
+                let d = if std::arch::is_x86_feature_detected!("avx2") {
+                    Dispatch::Avx2
+                } else {
+                    Dispatch::Portable
+                };
+                CACHED.store(if d == Dispatch::Avx2 { 2 } else { 1 }, Ordering::Relaxed);
+                d
+            }
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        Dispatch::Portable
+    }
+}
+
+/// Strip dot of `kernel` against two rows at once, dispatching to the AVX2
+/// body when the CPU has it. Bit-for-bit equal to running
+/// [`dot_strips_scalar`] on each row.
+#[inline]
+pub fn dot2(a: &[f32], b: &[f32], kernel: &[f32]) -> (f32, f32) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if dispatch() == Dispatch::Avx2 {
+            // SAFETY: dispatch() returned Avx2, which means
+            // is_x86_feature_detected!("avx2") succeeded on this machine,
+            // satisfying avx2::dot2's only safety requirement.
+            return unsafe { avx2::dot2(a, b, kernel) };
+        }
+    }
+    dot2_portable(a, b, kernel)
+}
+
+/// Lane-parallel strip dot over all of a block's rows: rows are processed
+/// in pairs through [`dot2`], with an odd trailing row finished by the
+/// scalar strip order (which is the same order every lane uses, so the
+/// whole output is bit-for-bit equal to the scalar row loop). `block` is
+/// `out.len()` rows of `cols` contiguous values.
+pub fn dot_rows_into(block: &[f32], cols: usize, kernel: &[f32], out: &mut [f32]) {
+    let rows = out.len();
+    let pairs = rows / 2;
+    for p in 0..pairs {
+        let (i, j) = (2 * p, 2 * p + 1);
+        let row_a = &block[i * cols..(i + 1) * cols];
+        let row_b = &block[j * cols..(j + 1) * cols];
+        let (sa, sb) = dot2(row_a, row_b, kernel);
+        out[i] = sa;
+        out[j] = sb;
+    }
+    if rows % 2 == 1 {
+        let i = rows - 1;
+        out[i] = dot_strips_scalar(&block[i * cols..(i + 1) * cols], kernel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check_property, SplitMix64};
+
+    fn lanes_from(rng: &mut SplitMix64) -> [f32; LANES] {
+        let mut v = [0.0f32; LANES];
+        for x in v.iter_mut() {
+            *x = rng.normal() * 10.0;
+        }
+        v
+    }
+
+    #[test]
+    fn parse_and_display_round_trip() {
+        for (s, m) in [
+            ("auto", SimdMode::Auto),
+            ("scalar", SimdMode::ForceScalar),
+            ("off", SimdMode::ForceScalar),
+            ("simd", SimdMode::ForceSimd),
+            ("force", SimdMode::ForceSimd),
+            ("on", SimdMode::ForceSimd),
+            (" SIMD ", SimdMode::ForceSimd),
+        ] {
+            assert_eq!(SimdMode::parse(s).unwrap(), m, "{s}");
+        }
+        assert!(SimdMode::parse("fast").is_err());
+        assert_eq!(SimdMode::Auto.to_string(), "auto");
+        assert_eq!(SimdMode::ForceScalar.to_string(), "scalar");
+        assert_eq!(SimdMode::ForceSimd.to_string(), "simd");
+    }
+
+    #[test]
+    fn thread_mode_and_counters() {
+        enter_job(SimdMode::ForceScalar);
+        assert!(!lanes_enabled());
+        note_scalar_rows(3);
+        enter_job(SimdMode::ForceSimd); // entry clears residue
+        assert!(lanes_enabled());
+        note_lane_rows(5);
+        note_lane_rows(2);
+        note_scalar_rows(1);
+        assert_eq!(take_counters(), (7, 1));
+        assert_eq!(take_counters(), (0, 0), "take drains");
+        enter_job(SimdMode::Auto);
+    }
+
+    #[test]
+    fn mul_add_matches_scalar_definition() {
+        check_property("mul_add_lanes per-lane", 50, |rng: &mut SplitMix64| {
+            let (a, b) = (lanes_from(rng), lanes_from(rng));
+            let mut acc = lanes_from(rng);
+            let want: Vec<f32> = (0..LANES).map(|l| acc[l] + a[l] * b[l]).collect();
+            mul_add_lanes(&mut acc, &a, &b);
+            for l in 0..LANES {
+                assert_eq!(acc[l].to_bits(), want[l].to_bits(), "lane {l}");
+            }
+        });
+    }
+
+    #[test]
+    fn min_max_match_f32_semantics() {
+        let mut acc = splat(f32::INFINITY);
+        let v = [1.0, -2.0, f32::NAN, 0.0, -0.0, 3.5, f32::INFINITY, -1e30];
+        min_lanes(&mut acc, &v);
+        for l in 0..LANES {
+            assert_eq!(
+                acc[l].to_bits(),
+                f32::INFINITY.min(v[l]).to_bits(),
+                "min lane {l}"
+            );
+        }
+        let mut acc = splat(f32::NEG_INFINITY);
+        max_lanes(&mut acc, &v);
+        for l in 0..LANES {
+            assert_eq!(
+                acc[l].to_bits(),
+                f32::NEG_INFINITY.max(v[l]).to_bits(),
+                "max lane {l}"
+            );
+        }
+    }
+
+    #[test]
+    fn select_and_gather_primitives() {
+        let t = [1.0f32; LANES];
+        let f = [2.0f32; LANES];
+        let mask = [true, false, true, false, true, false, true, false];
+        let s = select_lanes(&mask, &t, &f);
+        for l in 0..LANES {
+            assert_eq!(s[l], if mask[l] { 1.0 } else { 2.0 });
+        }
+        let src: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let idx = [0usize, 31, 7, 16, 2, 2, 9, 30];
+        let g = gather_lanes(&src, &idx);
+        for l in 0..LANES {
+            assert_eq!(g[l], src[idx[l]]);
+        }
+    }
+
+    #[test]
+    fn dot2_matches_scalar_strip_order_bitwise() {
+        check_property("dot2 vs scalar strips", 100, |rng: &mut SplitMix64| {
+            // cols sweeps through every remainder class of the 4-strip
+            let cols = 1 + rng.below(40);
+            let a: Vec<f32> = (0..cols).map(|_| rng.normal() * 5.0).collect();
+            let b: Vec<f32> = (0..cols).map(|_| rng.normal() * 5.0).collect();
+            let k: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+            let (sa, sb) = dot2(&a, &b, &k);
+            assert_eq!(sa.to_bits(), dot_strips_scalar(&a, &k).to_bits(), "cols={cols}");
+            assert_eq!(sb.to_bits(), dot_strips_scalar(&b, &k).to_bits(), "cols={cols}");
+            let (pa, pb) = dot2_portable(&a, &b, &k);
+            assert_eq!(pa.to_bits(), sa.to_bits(), "portable row a, cols={cols}");
+            assert_eq!(pb.to_bits(), sb.to_bits(), "portable row b, cols={cols}");
+        });
+    }
+
+    #[test]
+    fn dot_rows_handles_odd_row_counts() {
+        check_property("dot_rows_into parity", 40, |rng: &mut SplitMix64| {
+            let rows = 1 + rng.below(9); // exercises 1 (pure scalar tail) .. 9
+            let cols = 1 + rng.below(30);
+            let block: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+            let k: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+            let mut got = vec![0.0f32; rows];
+            dot_rows_into(&block, cols, &k, &mut got);
+            for r in 0..rows {
+                let want = dot_strips_scalar(&block[r * cols..(r + 1) * cols], &k);
+                assert_eq!(got[r].to_bits(), want.to_bits(), "row {r}/{rows} cols {cols}");
+            }
+        });
+    }
+
+    #[test]
+    fn dispatch_is_stable() {
+        assert_eq!(dispatch(), dispatch());
+    }
+}

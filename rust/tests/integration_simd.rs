@@ -1,0 +1,290 @@
+//! Integration: the lane-parallel row kernels against their scalar
+//! originals, bit for bit.
+//!
+//! The SIMD contract is stronger than "numerically close": each lane owns
+//! one output element and replays the *identical* per-element operation
+//! order the scalar loop uses (no reassociation, no FMA contraction, no
+//! hardware min/max with different NaN semantics), so `ForceScalar` and
+//! `ForceSimd` must produce byte-identical tensors for every kernel ×
+//! boundary × grid × shape — including remainder-heavy shapes where most
+//! rows fall off the lane groups, and the fused multi-stage executor in
+//! both halo modes. The metrics side is pinned too: lane rows plus scalar
+//! remainder rows must exactly partition the gathered rows.
+
+use meltframe::coordinator::pipeline::{run_job, ExecOptions};
+use meltframe::coordinator::{ChunkPolicy, HaloMode, Job, Plan};
+use meltframe::melt::grid::GridMode;
+use meltframe::melt::melt::BoundaryMode;
+use meltframe::simd::{self, SimdMode, LANES};
+use meltframe::tensor::dense::Tensor;
+use meltframe::testing::{check_property, SplitMix64};
+
+fn scalar_opts(workers: usize) -> ExecOptions {
+    ExecOptions::native(workers).with_simd(SimdMode::ForceScalar)
+}
+
+fn simd_opts(workers: usize) -> ExecOptions {
+    ExecOptions::native(workers).with_simd(SimdMode::ForceSimd)
+}
+
+/// Every built-in kernel spec (same roster the golden suite pins).
+fn kernels(window: &[usize]) -> Vec<(&'static str, Job)> {
+    vec![
+        ("gaussian", Job::gaussian(window, 1.0)),
+        ("bilateral_const", Job::bilateral_const(window, 1.5, 25.0)),
+        ("bilateral_adaptive", Job::bilateral_adaptive(window, 1.5, 2.0)),
+        ("curvature", Job::curvature(window)),
+        ("median", Job::median(window)),
+        ("quantile_p75", Job::quantile(window, 0.75)),
+        ("minimum", Job::rank_min(window)),
+        ("maximum", Job::rank_max(window)),
+        ("local_mean", Job::local_mean(window)),
+        ("local_std", Job::local_std(window)),
+    ]
+}
+
+fn boundaries() -> Vec<(&'static str, BoundaryMode)> {
+    vec![
+        ("reflect", BoundaryMode::Reflect),
+        ("nearest", BoundaryMode::Nearest),
+        ("constant", BoundaryMode::Constant(-2.5)),
+        ("wrap", BoundaryMode::Wrap),
+    ]
+}
+
+fn grids(rank: usize) -> Vec<(&'static str, GridMode)> {
+    vec![
+        ("same", GridMode::Same),
+        ("valid", GridMode::Valid),
+        ("strided2", GridMode::Strided(vec![2; rank])),
+    ]
+}
+
+/// Run one job both ways and assert byte-identical outputs; returns the
+/// forced-SIMD metrics for counter checks.
+fn assert_bit_identical(
+    x: &Tensor<f32>,
+    job: &Job,
+    workers: usize,
+    key: &str,
+) -> meltframe::coordinator::RunMetrics {
+    let (scalar, sm) = run_job(x, job, &scalar_opts(workers))
+        .unwrap_or_else(|e| panic!("{key} (scalar): {e}"));
+    let (vector, vm) = run_job(x, job, &simd_opts(workers))
+        .unwrap_or_else(|e| panic!("{key} (simd): {e}"));
+    assert_eq!(scalar.shape(), vector.shape(), "{key}: shape diverged");
+    for (i, (a, b)) in scalar.data().iter().zip(vector.data()).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{key}: element {i} diverged ({a} vs {b})"
+        );
+    }
+    assert_eq!(sm.simd_rows, 0, "{key}: pinned-scalar run counted lane rows");
+    assert_eq!(
+        vm.simd_rows + vm.scalar_rows,
+        vm.gather_rows,
+        "{key}: lane + remainder rows must partition the gathered rows"
+    );
+    vm
+}
+
+#[test]
+fn every_kernel_boundary_grid_matches_scalar_bitwise() {
+    let inputs: [(&str, Vec<usize>); 2] = [("2d", vec![9, 10]), ("3d", vec![5, 6, 7])];
+    for (rank_name, dims) in inputs {
+        let rank = dims.len();
+        let x = Tensor::random(&dims, 0.0, 255.0, 0xA11CE).unwrap();
+        let window = vec![3usize; rank];
+        for (kernel_name, base_job) in kernels(&window) {
+            for (boundary_name, boundary) in boundaries() {
+                for (grid_name, grid) in grids(rank) {
+                    let mut job = base_job.clone();
+                    job.boundary = boundary;
+                    job.grid = grid.clone();
+                    let key = format!("{rank_name}/{kernel_name}/{boundary_name}/{grid_name}");
+                    assert_bit_identical(&x, &job, 2, &key);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn remainder_heavy_shapes_match_scalar_bitwise() {
+    // shapes chosen so lane groups barely form (or don't form at all):
+    // a single melt row, a single column, and row counts straddling LANES
+    let cases: Vec<(Vec<usize>, Vec<usize>)> = vec![
+        (vec![1, 40], vec![1, 3]),          // one output row: all remainder
+        (vec![40, 1], vec![3, 1]),          // one column, 40 rows
+        (vec![LANES - 1, 9], vec![3, 3]),   // fewer rows than one group
+        (vec![LANES + 1, 9], vec![3, 3]),   // one group + 1 remainder row
+        (vec![13, 7], vec![3, 3]),          // non-multiple of LANES
+        (vec![3 * LANES, 5], vec![3, 3]),   // exact multiple: no remainder
+    ];
+    for (dims, window) in &cases {
+        let x = Tensor::random(dims, 0.0, 255.0, 77).unwrap();
+        for job in [
+            Job::gaussian(window, 1.0),
+            Job::rank_max(window),
+            Job::local_std(window),
+        ] {
+            let key = format!("{dims:?} {:?}", job.kind);
+            assert_bit_identical(&x, &job, 2, &key);
+        }
+    }
+    // single-row tiles: every lane group is broken up by the tile height,
+    // so the lane path must degrade to pure remainder without drifting
+    let x = Tensor::random(&[20, 9], 0.0, 255.0, 78).unwrap();
+    let job = Job::gaussian(&[3, 3], 1.0);
+    let mut tiny_scalar = scalar_opts(2);
+    tiny_scalar.tile_rows = 1;
+    let mut tiny_simd = simd_opts(2);
+    tiny_simd.tile_rows = 1;
+    let (a, _) = run_job(&x, &job, &tiny_scalar).unwrap();
+    let (b, vm) = run_job(&x, &job, &tiny_simd).unwrap();
+    assert_eq!(
+        a.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        b.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "tile_rows=1 must stay bit-identical"
+    );
+    assert_eq!(
+        vm.simd_rows, 0,
+        "1-row tiles cannot fill a lane group — everything is remainder"
+    );
+    assert_eq!(vm.scalar_rows, vm.gather_rows);
+}
+
+#[test]
+fn fused_multi_stage_matches_scalar_in_both_halo_modes() {
+    check_property("fused simd == fused scalar", 6, |rng: &mut SplitMix64| {
+        let dims = vec![10 + rng.below(8), 10 + rng.below(8), 6 + rng.below(4)];
+        let x = Tensor::random(&dims, 0.0, 255.0, rng.next_u64()).unwrap();
+        let workers = 1 + rng.below(4);
+        let window = [3usize, 3, 3];
+        let build = |opts: &ExecOptions| {
+            Plan::over(&x)
+                .gaussian(&window, 1.0)
+                .curvature(&window)
+                .median(&window)
+                .run(opts)
+                .unwrap()
+        };
+        for halo in [HaloMode::Recompute, HaloMode::Exchange] {
+            let mut s_opts = scalar_opts(workers).with_halo_mode(halo);
+            let mut v_opts = simd_opts(workers).with_halo_mode(halo);
+            if rng.below(2) == 1 {
+                // oversubscribed: more chunks than workers
+                let policy = ChunkPolicy::EvenPerWorker { parts_per_worker: 2 };
+                s_opts.chunk_policy = Some(policy);
+                v_opts.chunk_policy = Some(policy);
+            }
+            let (scalar, _) = build(&s_opts);
+            let (vector, vpm) = build(&v_opts);
+            for (a, b) in scalar.data().iter().zip(vector.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "fused {halo:?} diverged");
+            }
+            assert_eq!(
+                vpm.simd_rows() + vpm.scalar_rows(),
+                vpm.gather_rows(),
+                "fused {halo:?}: counters must partition gathered rows"
+            );
+            if vpm.simd_rows() > 0 {
+                assert_eq!(vpm.simd_lanes(), LANES);
+            }
+        }
+    });
+}
+
+#[test]
+fn auto_mode_matches_both_pinned_modes_bitwise() {
+    // Auto picks the lane path wherever groups form; whatever it picks,
+    // the bits must equal both pinned runs (which already equal each other)
+    let x = Tensor::random(&[19, 11], 0.0, 255.0, 99).unwrap();
+    let job = Job::bilateral_adaptive(&[3, 3], 1.5, 2.0);
+    let (auto_out, _) = run_job(
+        &x,
+        &job,
+        &ExecOptions::native(2).with_simd(SimdMode::Auto),
+    )
+    .unwrap();
+    let (scalar_out, _) = run_job(&x, &job, &scalar_opts(2)).unwrap();
+    assert_eq!(
+        auto_out.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        scalar_out.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+    );
+}
+
+#[test]
+fn lane_primitives_mirror_scalar_semantics() {
+    // the portable lane primitives the kernels are built from: per-lane
+    // results must equal the per-element scalar expression, including the
+    // IEEE edge cases (NaN propagation, signed zero) that hardware
+    // min/max intrinsics get wrong
+    let a: [f32; LANES] = std::array::from_fn(|i| i as f32 - 3.0);
+    let b: [f32; LANES] = std::array::from_fn(|i| 0.5 * i as f32 + 1.0);
+    let mut acc = simd::splat(2.0);
+    simd::mul_add_lanes(&mut acc, &a, &b);
+    for l in 0..LANES {
+        assert_eq!(acc[l].to_bits(), (2.0f32 + a[l] * b[l]).to_bits());
+    }
+    let mut mn = [f32::NAN, 0.0, -0.0, 1.0, -1.0, 5.0, f32::INFINITY, 2.0];
+    let mut mx = mn;
+    let v = [1.0f32, -0.0, 0.0, f32::NAN, -2.0, 5.0, 3.0, f32::NEG_INFINITY];
+    simd::min_lanes(&mut mn, &v);
+    simd::max_lanes(&mut mx, &v);
+    let base = [f32::NAN, 0.0, -0.0, 1.0, -1.0, 5.0, f32::INFINITY, 2.0];
+    for l in 0..LANES {
+        assert_eq!(mn[l].to_bits(), base[l].min(v[l]).to_bits(), "min lane {l}");
+        assert_eq!(mx[l].to_bits(), base[l].max(v[l]).to_bits(), "max lane {l}");
+    }
+    let mask = [true, false, true, false, true, false, true, false];
+    let t = simd::splat(1.0);
+    let f = simd::splat(-1.0);
+    let sel = simd::select_lanes(&mask, &t, &f);
+    for l in 0..LANES {
+        assert_eq!(sel[l], if mask[l] { 1.0 } else { -1.0 });
+    }
+    let src: Vec<f32> = (0..32).map(|i| i as f32 * 1.5).collect();
+    let idx: [usize; LANES] = std::array::from_fn(|i| 31 - 2 * i);
+    let g = simd::gather_lanes(&src, &idx);
+    for l in 0..LANES {
+        assert_eq!(g[l], src[idx[l]]);
+    }
+    // dot2 (AVX2 or portable, whatever this machine dispatches) must equal
+    // the documented scalar strip order bit for bit: four parallel strip
+    // accumulators, pairwise combine, scalar remainder
+    let rng = &mut SplitMix64::new(0xD07);
+    let cols = 37usize;
+    let row_a: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+    let row_b: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+    let kernel: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+    let strip_dot = |row: &[f32]| -> f32 {
+        let mut acc = [0.0f32; 4];
+        let strips = cols / 4;
+        for t in 0..strips {
+            for i in 0..4 {
+                acc[i] += row[4 * t + i] * kernel[4 * t + i];
+            }
+        }
+        let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+        for j in 4 * strips..cols {
+            s += row[j] * kernel[j];
+        }
+        s
+    };
+    let (da, db) = simd::dot2(&row_a, &row_b, &kernel);
+    assert_eq!(da.to_bits(), strip_dot(&row_a).to_bits());
+    assert_eq!(db.to_bits(), strip_dot(&row_b).to_bits());
+    // dot_rows_into: pairs via dot2, odd tail via the same strip order
+    let block: Vec<f32> = (0..3 * cols).map(|_| rng.normal()).collect();
+    let mut out = [0.0f32; 3];
+    simd::dot_rows_into(&block, cols, &kernel, &mut out);
+    for (r, o) in out.iter().enumerate() {
+        assert_eq!(
+            o.to_bits(),
+            strip_dot(&block[r * cols..(r + 1) * cols]).to_bits(),
+            "dot_rows_into row {r}"
+        );
+    }
+}

@@ -5,15 +5,25 @@ run's artifact and warn (fail-soft) on median regressions — or, in
 of archived artifacts.
 
 Usage:
-    bench_trend.py OLD.json NEW.json [--threshold 0.10]
+    bench_trend.py OLD.json NEW.json [--threshold 0.10] [--gate PCT]
     bench_trend.py --history DIR [--out FILE] [--threshold 0.10]
+    bench_trend.py --self-test
 
 Two-file mode compares ``ns_per_op_median`` per series label shared by
 both files.  A series whose median regressed by more than the threshold
-emits a GitHub ``::warning`` annotation; the script always exits 0 — the
-gate informs, it does not block (quick-mode CI benches on shared runners
-are too noisy to hard-fail on).  A missing OLD file (first run, expired
-artifact) is reported and skipped.
+emits a GitHub ``::warning`` annotation; by default the script always
+exits 0 — the gate informs, it does not block (quick-mode CI benches on
+shared runners are too noisy to hard-fail on).  A missing OLD file
+(first run, expired artifact) is reported and skipped.  Series present
+in only one of the two runs are *expected churn* when a PR adds or
+retires a bench section: they are reported as ``new``/``retired`` and
+never treated as an error.  ``--gate PCT`` opts into a hard floor: any
+shared series regressing beyond PCT (a fraction, e.g. ``--gate 0.50``)
+makes the script exit 1 — for workflows that want a blocking check on
+catastrophic slowdowns while keeping the softer threshold informational.
+
+``--self-test`` exercises the comparison logic against synthetic inputs
+and exits nonzero on any contract violation.
 
 History mode scans DIR recursively for ``BENCH_fusion.json`` files (CI
 downloads each archived artifact into its own subdirectory, named by run
@@ -111,15 +121,98 @@ def history_report(history_dir, out_path, threshold):
     return 0
 
 
+def compare(old, new, threshold, gate=None):
+    """Two-run comparison over parsed {label: median} maps.  Returns
+    (lines, warnings, exit_code); pure so the self-test can drive it."""
+    lines, warnings = [], []
+    shared = sorted(set(old) & set(new))
+    regressions = gated = 0
+    for label in shared:
+        before, after = old[label], new[label]
+        if before <= 0:
+            continue
+        delta = (after - before) / before
+        marker = ""
+        if delta > threshold:
+            regressions += 1
+            marker = "  <-- REGRESSION"
+            warnings.append(
+                f"::warning ::bench trend: '{label}' median regressed "
+                f"{delta * 100:.1f}% ({before:.0f} -> {after:.0f} ns/op, "
+                f"threshold {threshold * 100:.0f}%)"
+            )
+        if gate is not None and delta > gate:
+            gated += 1
+            marker = "  <-- GATED"
+        lines.append(
+            f"  {label:<40} {before:>12.0f} -> {after:>12.0f} ns/op  "
+            f"({delta * 100:+6.1f}%){marker}"
+        )
+
+    # one-sided series are churn, not errors: a PR that adds a bench
+    # section makes its series "new", one that retires a section makes
+    # them "retired" — both informational
+    added = sorted(set(new) - set(old))
+    if added:
+        lines.append(f"bench trend: new series (no baseline yet): {', '.join(added)}")
+    dropped = sorted(set(old) - set(new))
+    if dropped:
+        lines.append(f"bench trend: retired series: {', '.join(dropped)}")
+    lines.append(
+        f"bench trend: {len(shared)} series compared, {regressions} regression(s) "
+        f"over {threshold * 100:.0f}%, {len(added)} new, {len(dropped)} retired"
+    )
+    if gated:
+        lines.append(
+            f"bench trend: {gated} series beyond the hard gate "
+            f"({gate * 100:.0f}%) — failing"
+        )
+        return lines, warnings, 1
+    lines.append("(fail-soft: exit 0)" if gate is None else f"(gate {gate * 100:.0f}%: ok)")
+    return lines, warnings, 0
+
+
+def self_test():
+    base = {"a": 100.0, "b": 200.0, "zero": 0.0}
+
+    # a series present in only one run is reported, never an error
+    lines, warnings, code = compare(base, {"a": 101.0, "c": 50.0}, 0.10)
+    text = "\n".join(lines)
+    assert code == 0, "one-sided series must not fail the gate"
+    assert "new series" in text and "c" in text, "added series must be reported as new"
+    assert "retired series" in text and "b" in text, "dropped series must be reported"
+    assert not warnings, "1% drift is under the 10% threshold"
+
+    # threshold warns but stays fail-soft
+    lines, warnings, code = compare(base, {"a": 150.0}, 0.10)
+    assert code == 0 and len(warnings) == 1, "threshold breach must warn, not fail"
+
+    # the hard gate fails the run; under it, the same input passes
+    lines, warnings, code = compare(base, {"a": 200.0}, 0.10, gate=0.50)
+    assert code == 1, "2x slowdown must trip a 50% gate"
+    lines, warnings, code = compare(base, {"a": 120.0}, 0.10, gate=0.50)
+    assert code == 0, "20% slowdown must pass a 50% gate"
+
+    # a zero baseline is skipped, not a division crash
+    lines, warnings, code = compare(base, {"zero": 5.0}, 0.10, gate=0.01)
+    assert code == 0, "zero-baseline series must be skipped"
+
+    print("bench_trend self-test: all checks passed")
+    return 0
+
+
 def main(argv):
     threshold = 0.10
+    gate = None
     history = None
     out = None
     positional = []
+    if "--self-test" in argv:
+        return self_test()
     i = 0
     while i < len(argv):
         arg = argv[i]
-        for name in ("--threshold", "--history", "--out"):
+        for name in ("--threshold", "--gate", "--history", "--out"):
             if arg == name or arg.startswith(name + "="):
                 if "=" in arg:
                     value = arg.split("=", 1)[1]
@@ -128,6 +221,8 @@ def main(argv):
                     value = argv[i]
                 if name == "--threshold":
                     threshold = float(value)
+                elif name == "--gate":
+                    gate = float(value)
                 elif name == "--history":
                     history = value
                 else:
@@ -142,8 +237,9 @@ def main(argv):
 
     if len(positional) < 2:
         print(
-            "usage: bench_trend.py OLD.json NEW.json [--threshold 0.10]\n"
-            "       bench_trend.py --history DIR [--out FILE] [--threshold 0.10]"
+            "usage: bench_trend.py OLD.json NEW.json [--threshold 0.10] [--gate PCT]\n"
+            "       bench_trend.py --history DIR [--out FILE] [--threshold 0.10]\n"
+            "       bench_trend.py --self-test"
         )
         return 0
     old_path, new_path = positional[0], positional[1]
@@ -161,35 +257,19 @@ def main(argv):
         print(f"::warning ::bench trend: unreadable bench JSON ({e}) — skipping")
         return 0
 
-    shared = sorted(set(old) & set(new))
-    if not shared:
+    if not (set(old) & set(new)):
         print("bench trend: no shared series between runs — skipping")
+        added = sorted(set(new) - set(old))
+        if added:
+            print(f"bench trend: new series (no baseline yet): {', '.join(added)}")
         return 0
 
-    regressions = 0
-    for label in shared:
-        before, after = old[label], new[label]
-        if before <= 0:
-            continue
-        delta = (after - before) / before
-        marker = ""
-        if delta > threshold:
-            regressions += 1
-            marker = "  <-- REGRESSION"
-            print(
-                f"::warning ::bench trend: '{label}' median regressed "
-                f"{delta * 100:.1f}% ({before:.0f} -> {after:.0f} ns/op, threshold {threshold * 100:.0f}%)"
-            )
-        print(f"  {label:<40} {before:>12.0f} -> {after:>12.0f} ns/op  ({delta * 100:+6.1f}%){marker}")
-
-    dropped = sorted(set(old) - set(new))
-    if dropped:
-        print(f"bench trend: series no longer present: {', '.join(dropped)}")
-    print(
-        f"bench trend: {len(shared)} series compared, {regressions} regression(s) "
-        f"over {threshold * 100:.0f}% (fail-soft: exit 0)"
-    )
-    return 0
+    lines, warnings, code = compare(old, new, threshold, gate)
+    for w in warnings:
+        print(w)
+    for line in lines:
+        print(line)
+    return code
 
 
 if __name__ == "__main__":

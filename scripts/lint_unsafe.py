@@ -25,6 +25,13 @@ Hard CI gate (exit 1 on any violation). Three rules over `rust/`:
    Allowlisted entries are invariant-backed by construction and each
    records its justification here.
 
+4. **arch-intrinsic-confinement** — `std::arch` / `core::arch` (the raw
+   SIMD intrinsics and their `#[target_feature]` unsafety) may appear
+   only in `rust/src/simd.rs`. Every other module expresses lane
+   parallelism through that module's safe fixed-width primitives, so the
+   unsafe surface (and the runtime-dispatch correctness argument) stays
+   in one auditable file.
+
 Test code (everything at or below the `#[cfg(test)]` line that opens the
 file's `mod tests` block — the repo convention keeps test modules at the
 bottom of the file) is exempt from rules 2 and 3; rule 1 applies
@@ -60,6 +67,9 @@ FACADE_MODULES = [
 
 # Scopes rule 3 audits (path prefixes relative to the repo root).
 UNWRAP_SCOPES = ("rust/src/serve/", "rust/src/coordinator/")
+
+# The only module allowed to touch raw architecture intrinsics (rule 4).
+ARCH_ALLOWED = {"rust/src/simd.rs"}
 
 # (path, line snippet, justification) — rule 3 exemptions. A snippet
 # match is required so the exemption dies with the code it covers.
@@ -119,6 +129,7 @@ MOD_TESTS_RE = re.compile(r"^\s*(?:pub\s+)?mod\s+\w*test")
 UNSAFE_RE = re.compile(r"\bunsafe\b")
 STD_SYNC_RE = re.compile(r"std::sync::(?:\{[^}]*\b(?:Mutex|Condvar)\b|(?:Mutex|Condvar)\b)")
 UNWRAP_RE = re.compile(r"\.unwrap\(\)|\.expect\(")
+ARCH_RE = re.compile(r"\b(?:core|std)::arch\b|\b_mm(?:256|512)?_\w+|#\[target_feature")
 
 
 def strip_strings(line: str) -> str:
@@ -195,6 +206,20 @@ def check_unwrap(rel: str, lines: list[str]) -> list[str]:
     return out
 
 
+def check_arch_confinement(rel: str, lines: list[str]) -> list[str]:
+    out = []
+    for i, line in enumerate(lines):
+        if line.strip().startswith("//"):
+            continue
+        if ARCH_RE.search(strip_strings(line)):
+            out.append(
+                f"{rel}:{i + 1}: [arch-intrinsic-confinement] raw "
+                f"architecture intrinsics outside rust/src/simd.rs; build "
+                f"on the safe lane primitives in crate::simd instead"
+            )
+    return out
+
+
 def scan(root: Path) -> list[str]:
     violations = []
     for path in sorted((root / "rust").rglob("*.rs")):
@@ -207,6 +232,8 @@ def scan(root: Path) -> list[str]:
             violations += check_std_sync_imports(rel, lines)
         if rel.startswith(UNWRAP_SCOPES):
             violations += check_unwrap(rel, lines)
+        if rel not in ARCH_ALLOWED:
+            violations += check_arch_confinement(rel, lines)
     # stale-allowlist check: every exemption must still match a line
     for path, snip, _why in UNWRAP_ALLOWLIST:
         f = root / path
@@ -255,6 +282,21 @@ def self_test(root: Path) -> int:
     )
     if v:
         failures.append(f"gate false-positived on unwrap_or_else: {v}")
+
+    for bad_line in (
+        "use std::arch::x86_64::_mm256_add_ps;",
+        "    let v = core::arch::x86_64::_mm_loadu_ps(p);",
+        '#[target_feature(enable = "avx2")]',
+    ):
+        v = check_arch_confinement("fixture/kernel", [bad_line])
+        if not v:
+            failures.append(f"gate did NOT flag arch intrinsics outside simd.rs: {bad_line!r}")
+
+    v = check_arch_confinement(
+        "fixture/kernel", ["use crate::simd::{dot_rows_into, LANES};"]
+    )
+    if v:
+        failures.append(f"gate false-positived on the safe simd facade: {v}")
 
     # a mid-file #[cfg(test)] helper must NOT end the scanned region
     trailing_unwrap = [
